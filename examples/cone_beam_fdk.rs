@@ -1,0 +1,81 @@
+//! Cone-beam scenario: 3-D Shepp-Logan, circular flat-detector scan,
+//! FDK reconstruction, and an SF-vs-Siddon accuracy comparison against
+//! the analytic sinogram — the paper's second geometry type end-to-end.
+//!
+//! ```bash
+//! cargo run --release --example cone_beam_fdk -- --n 48 --nviews 96
+//! ```
+
+use leap::geometry::{ConeBeam, Geometry, VolumeGeometry};
+use leap::metrics;
+use leap::phantom::shepp;
+use leap::projector::{Model, Projector};
+use leap::recon;
+use leap::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let n = args.usize_or("n", 48);
+    let nviews = args.usize_or("nviews", 96);
+    let nrows = args.usize_or("nrows", n + 16);
+    let ncols = args.usize_or("ncols", n + 32);
+
+    let vg = VolumeGeometry::cube(n, 1.0);
+    let g = ConeBeam::standard(nviews, nrows, ncols, 1.0, 1.0, 2.0 * n as f64, 4.0 * n as f64);
+    println!(
+        "cone-beam scan: {n}³ volume, {nviews} views × {nrows}×{ncols} detector, sod {} sdd {} (half cone angle {:.2}°)",
+        g.sod,
+        g.sdd,
+        g.half_cone_angle().to_degrees()
+    );
+
+    let phantom = shepp::shepp_logan_3d(0.42 * n as f64, 0.02);
+    let truth = phantom.rasterize(&vg, 2);
+
+    // analytic measurement (continuous phantom — no inverse crime)
+    let t0 = std::time::Instant::now();
+    let sino = phantom.project(&Geometry::Cone(g.clone()));
+    println!("analytic projection: {:.2}s", t0.elapsed().as_secs_f64());
+
+    // accuracy of the discrete projectors vs the analytic sinogram (the
+    // §2.1 accuracy ordering: SF ≥ Joseph ≥ Siddon on smooth data)
+    for model in [Model::Siddon, Model::Joseph, Model::SF] {
+        let p = Projector::new(Geometry::Cone(g.clone()), vg.clone(), model);
+        let t0 = std::time::Instant::now();
+        let fp = p.forward(&truth);
+        let rel = leap::util::rel_l2(&fp.data, &sino.data, 1e-12);
+        println!(
+            "  {:<7} forward: {:.3}s  rel-err vs analytic {:.4}",
+            model.name(),
+            t0.elapsed().as_secs_f64(),
+            rel
+        );
+    }
+
+    // FDK reconstruction
+    let t0 = std::time::Instant::now();
+    let rec = recon::fdk(&vg, &g, &sino, recon::Window::Hann, 1);
+    let dt = t0.elapsed().as_secs_f64();
+    let psnr = metrics::psnr(&rec.data, &truth.data, None);
+    let ssim = metrics::ssim_vol(&rec, &truth, None);
+    println!("FDK: {dt:.2}s  PSNR {psnr:.2} dB  SSIM {ssim:.4} (central slice)");
+
+    // iterative refinement of the FDK volume on the matched SF pair
+    let p = Projector::new(Geometry::Cone(g.clone()), vg.clone(), Model::SF);
+    let t0 = std::time::Instant::now();
+    let sirt = recon::sirt(
+        &p,
+        &sino,
+        &rec,
+        &recon::SirtOpts { iterations: 10, ..Default::default() },
+    );
+    let psnr2 = metrics::psnr(&sirt.vol.data, &truth.data, None);
+    println!(
+        "FDK + SIRT×10 (warm start): {:.2}s  PSNR {psnr2:.2} dB",
+        t0.elapsed().as_secs_f64()
+    );
+
+    if psnr2 <= psnr {
+        println!("note: SIRT did not improve FDK here (short run)");
+    }
+}

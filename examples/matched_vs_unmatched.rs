@@ -1,0 +1,101 @@
+//! Matched vs unmatched projector pairs under long iteration — the §2.1
+//! design argument: "our goal here is to implement methods that are stable
+//! after over a thousand or more iterations, [so] we chose to implement
+//! methods where the exact transpose is used."
+//!
+//! Runs SIRT-style iterations twice: once with the matched SF transpose,
+//! once with the classic pixel-driven (unmatched) backprojector standing
+//! in for Aᵀ (what "most reconstruction packages" use). Prints the data
+//! residual over 1500 iterations: the matched pair keeps descending, the
+//! unmatched one stalls/diverges.
+//!
+//! ```bash
+//! cargo run --release --example matched_vs_unmatched
+//! ```
+
+use leap::geometry::{Geometry, ParallelBeam, VolumeGeometry};
+use leap::phantom::shepp;
+use leap::projector::{Model, Projector};
+use leap::recon;
+
+fn residual(p: &Projector, x: &leap::Vol3, y: &leap::Sino) -> f64 {
+    let ax = p.forward(x);
+    ax.data
+        .iter()
+        .zip(y.data.iter())
+        .map(|(&a, &b)| {
+            let d = (a - b) as f64;
+            d * d
+        })
+        .sum::<f64>()
+        .sqrt()
+}
+
+fn main() {
+    let args = leap::util::cli::Args::from_env();
+    let iters = args.usize_or("iters", 1500);
+    let n = args.usize_or("n", 48);
+    let vg = VolumeGeometry::slice2d(n, n, 1.0);
+    let g = ParallelBeam::standard_2d(60, n + 24, 1.0);
+    let geo = Geometry::Parallel(g.clone());
+    let p = Projector::new(geo, vg.clone(), Model::SF);
+    let phantom = shepp::shepp_logan_2d(0.42 * n as f64, 0.02);
+    let truth = phantom.rasterize(&vg, 2);
+    let y = phantom.project(&Geometry::Parallel(g.clone()));
+
+    // normalizations shared by both runs
+    let row_sum = p.forward_ones();
+    let inv_row: Vec<f32> =
+        row_sum.data.iter().map(|&v| if v > 1e-6 { 1.0 / v } else { 0.0 }).collect();
+    let col_sum = p.back_ones();
+    let inv_col_matched: Vec<f32> =
+        col_sum.data.iter().map(|&v| if v > 1e-6 { 1.0 / v } else { 0.0 }).collect();
+    let bp_ones = {
+        let mut s = p.new_sino();
+        s.fill(1.0);
+        recon::fbp::backproject_pixel_parallel(&vg, &g, &s, 1.0, 1)
+    };
+    let inv_col_unmatched: Vec<f32> =
+        bp_ones.data.iter().map(|&v| if v > 1e-6 { 1.0 / v } else { 0.0 }).collect();
+
+    let mut x_m = p.new_vol();
+    let mut x_u = p.new_vol();
+    let checkpoints = [1usize, 10, 50, 100, 250, 500, 1000, iters];
+    println!("iter   matched-residual   unmatched-residual");
+    for it in 1..=iters {
+        // matched: x += Dv·Aᵀ(Dr·(y − Ax))
+        let mut r = p.forward(&x_m);
+        for i in 0..r.len() {
+            r.data[i] = (y.data[i] - r.data[i]) * inv_row[i];
+        }
+        let g_m = p.back(&r);
+        for i in 0..x_m.len() {
+            x_m.data[i] = (x_m.data[i] + g_m.data[i] * inv_col_matched[i]).max(0.0);
+        }
+        // unmatched: same update with pixel-driven B ≠ Aᵀ
+        let mut r = p.forward(&x_u);
+        for i in 0..r.len() {
+            r.data[i] = (y.data[i] - r.data[i]) * inv_row[i];
+        }
+        let g_u = recon::fbp::backproject_pixel_parallel(&vg, &g, &r, 1.0, 1);
+        for i in 0..x_u.len() {
+            x_u.data[i] = (x_u.data[i] + g_u.data[i] * inv_col_unmatched[i]).max(0.0);
+        }
+        if checkpoints.contains(&it) {
+            println!(
+                "{it:>5}  {:>16.6}  {:>18.6}",
+                residual(&p, &x_m, &y),
+                residual(&p, &x_u, &y)
+            );
+        }
+    }
+    let rm = residual(&p, &x_m, &y);
+    let ru = residual(&p, &x_u, &y);
+    let pm = leap::metrics::psnr(&x_m.data, &truth.data, None);
+    let pu = leap::metrics::psnr(&x_u.data, &truth.data, None);
+    println!("final: matched residual {rm:.5} (PSNR {pm:.2} dB), unmatched {ru:.5} (PSNR {pu:.2} dB)");
+    println!(
+        "matched pair {} after {iters} iterations",
+        if rm < ru { "remains stable — reproduces the paper's §2.1 claim" } else { "did NOT beat unmatched (unexpected)" }
+    );
+}

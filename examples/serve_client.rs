@@ -1,0 +1,91 @@
+//! Serving scenario: spin up the coordinator + TCP server in-process,
+//! drive it with concurrent clients, and report throughput/latency —
+//! the "seamless integration with existing pipelines" claim as a service.
+//!
+//! Uses the PJRT artifact backend when `make artifacts` has run, plus the
+//! native backend; requests are routed by op name and dynamically batched.
+//!
+//! ```bash
+//! cargo run --release --example serve_client -- --clients 4 --requests 8
+//! ```
+
+use std::sync::Arc;
+
+use leap::coordinator::server::{Client, Server};
+use leap::coordinator::{BatchPolicy, Coordinator, Executor, NativeExecutor, Router};
+use leap::geometry::{Geometry, ParallelBeam, VolumeGeometry};
+use leap::phantom::shepp;
+use leap::projector::{Model, Projector};
+use leap::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let n = args.usize_or("n", 64);
+    let clients = args.usize_or("clients", 4);
+    let requests = args.usize_or("requests", 8);
+
+    // backends: artifacts (if built) + native
+    let mut backends: Vec<Arc<dyn Executor>> = Vec::new();
+    match leap::runtime::EngineHost::load(args.str_or("artifacts", "artifacts")) {
+        Ok(host) => {
+            println!("artifact backend: {} entries", host.entry_names().len());
+            backends.push(Arc::new(host));
+        }
+        Err(e) => println!("artifact backend skipped: {e:#}"),
+    }
+    let vg = VolumeGeometry::slice2d(n, n, 1.0);
+    let g = ParallelBeam::standard_2d(90, (n * 3) / 2, 1.0);
+    backends.push(Arc::new(NativeExecutor::new(Projector::new(
+        Geometry::Parallel(g.clone()),
+        vg.clone(),
+        Model::SF,
+    ))));
+    let coord = Arc::new(Coordinator::new(
+        Arc::new(Router::new(backends)),
+        BatchPolicy { max_batch: 8, max_wait: std::time::Duration::from_millis(4) },
+        1 << 30,
+        2,
+    ));
+    let server = Server::start("127.0.0.1:0", coord.clone()).unwrap();
+    println!("server on {}", server.addr);
+
+    let phantom = shepp::shepp_logan_2d(0.4 * n as f64, 0.02);
+    let truth = phantom.rasterize(&vg, 2);
+    let payload = Arc::new(truth.data);
+
+    let t0 = std::time::Instant::now();
+    let addr = server.addr;
+    let mut handles = Vec::new();
+    for c in 0..clients {
+        let payload = payload.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut client = Client::connect(&addr).unwrap();
+            let mut latencies = Vec::new();
+            for _ in 0..requests {
+                let t = std::time::Instant::now();
+                let reply = client.call("native_fp", &[&payload]).unwrap();
+                assert!(reply.get("outputs").is_some(), "client {c}: {reply}");
+                latencies.push(t.elapsed().as_secs_f64());
+            }
+            latencies
+        }));
+    }
+    let mut all: Vec<f64> = handles.into_iter().flat_map(|h| h.join().unwrap()).collect();
+    let wall = t0.elapsed().as_secs_f64();
+    all.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let total = all.len();
+    let q = |p: f64| all[((total as f64 - 1.0) * p) as usize];
+    println!(
+        "{total} projection requests over {clients} clients in {wall:.2}s → {:.1} req/s",
+        total as f64 / wall
+    );
+    println!(
+        "latency: p50 {:.1} ms  p90 {:.1} ms  p99 {:.1} ms",
+        q(0.5) * 1e3,
+        q(0.9) * 1e3,
+        q(0.99) * 1e3
+    );
+    let mut stats_client = Client::connect(&addr).unwrap();
+    let stats = stats_client.stats().unwrap();
+    println!("server telemetry: {}", stats.get("stats").unwrap());
+}

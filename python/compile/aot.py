@@ -1,0 +1,130 @@
+"""AOT lowering: JAX/Pallas graphs -> HLO *text* artifacts for the rust
+runtime (`rust/src/runtime`). Run once by `make artifacts`; Python never
+touches the request path.
+
+HLO text (not `.serialize()`): jax >= 0.5 emits HloModuleProto with 64-bit
+instruction ids that the image's xla_extension 0.5.1 rejects
+(`proto.id() <= INT_MAX`); the text parser reassigns ids and round-trips
+cleanly. See /opt/xla-example/README.md.
+
+Usage:
+    python -m compile.aot --out ../artifacts          # default 128^2 set
+    python -m compile.aot --out ../artifacts --small  # 64^2 test set
+"""
+
+import argparse
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import config, model
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants is load-bearing: the default printer elides
+    # dense array constants as "{...}", which the HLO text parser then
+    # reads back as ZEROS (baked view-angle tables, ramp responses and
+    # conv kernels silently vanish). See python/tests/test_aot.py.
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def _spec(shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def entry_points(s: config.ScanSpec):
+    """Name -> (callable, [input ShapeDtypeStructs]). All shapes static."""
+    n, nv, nc = s.n, s.nviews, s.ncols
+    angles = s.angles
+    vol = _spec((n, n))
+    sino = _spec((nv, nc))
+    mask = _spec((nv,))
+
+    return {
+        "fp_sf": (lambda v: (model.xray_project(v, tuple(angles), nc, s.voxel, s.du, "sf"),), [vol]),
+        "bp_sf": (lambda y: (model.xray_backproject(y, tuple(angles), n, s.voxel, s.du, "sf"),), [sino]),
+        "fp_joseph": (
+            lambda v: (model.xray_project(v, tuple(angles), nc, s.voxel, s.du, "joseph"),),
+            [vol],
+        ),
+        "bp_joseph": (
+            lambda y: (model.xray_backproject(y, tuple(angles), n, s.voxel, s.du, "joseph"),),
+            [sino],
+        ),
+        "fbp": (lambda y: (model.fbp(y, tuple(angles), n, s.voxel, s.du),), [sino]),
+        "dc_refine": (
+            lambda xp, y, m: (
+                model.dc_refine(
+                    xp, y, m, tuple(angles), nc, s.voxel, s.du,
+                    iters=config.DC_REFINE_ITERS, lam=config.SIRT_LAMBDA,
+                ),
+            ),
+            [vol, sino, mask],
+        ),
+        "complete_sinogram": (
+            lambda y, m, xp: (model.complete_sinogram(y, m, xp, tuple(angles), nc, s.voxel, s.du),),
+            [sino, mask, vol],
+        ),
+        "prior_denoise": (lambda v: (model.prior_denoise(v),), [vol]),
+        "dc_loss_grad": (
+            # value+grad of the paper's data-consistency training loss —
+            # proves the custom_vjp path lowers into the same artifact set
+            lambda v, y, m: jax.value_and_grad(
+                lambda vv: model.data_consistency_loss(vv, y, m, tuple(angles), nc, s.voxel, s.du)
+            )(v),
+            [vol, sino, mask],
+        ),
+    }
+
+
+def build(out_dir: str, spec: config.ScanSpec, only=None):
+    out = pathlib.Path(out_dir)
+    out.mkdir(parents=True, exist_ok=True)
+    manifest = {
+        "spec": {
+            "n": spec.n,
+            "nviews": spec.nviews,
+            "ncols": spec.ncols,
+            "voxel": spec.voxel,
+            "du": spec.du,
+            "arc_deg": spec.arc_deg,
+        },
+        "entries": {},
+    }
+    for name, (fn, in_specs) in entry_points(spec).items():
+        if only and name not in only:
+            continue
+        lowered = jax.jit(fn).lower(*in_specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        (out / fname).write_text(text)
+        outs = jax.eval_shape(fn, *in_specs)
+        manifest["entries"][name] = {
+            "file": fname,
+            "inputs": [list(t.shape) for t in in_specs],
+            "outputs": [list(t.shape) for t in outs],
+        }
+        print(f"wrote {out / fname} ({len(text)} chars)")
+    (out / "manifest.json").write_text(json.dumps(manifest, indent=2))
+    print(f"wrote {out / 'manifest.json'}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--small", action="store_true", help="64^2 test-sized artifact set")
+    ap.add_argument("--only", nargs="*", help="subset of entry points")
+    args = ap.parse_args()
+    spec = config.SMALL if args.small else config.DEFAULT
+    build(args.out, spec, args.only)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,39 @@
+"""Artifact shape configuration shared by the L1 kernels, the L2 model and
+``aot.py``.
+
+Shapes are static at lowering time (one compiled executable per variant,
+like the paper's per-geometry CUDA kernels). The default variant matches
+the Figure-3 experiment scaled to CPU: 128^2 image, 180 views over 180
+degrees, 192 detector columns at 1 mm pitch with 1 mm voxels.
+
+The rust coordinator reads ``artifacts/manifest.json`` (written by aot.py)
+to learn each executable's shapes.
+"""
+
+from dataclasses import dataclass, field
+import math
+
+
+@dataclass(frozen=True)
+class ScanSpec:
+    """2-D parallel-beam scan description (mm units, like the rust side)."""
+
+    n: int = 128          # image is n x n
+    nviews: int = 180
+    ncols: int = 192
+    voxel: float = 1.0    # mm
+    du: float = 1.0       # mm
+    arc_deg: float = 180.0
+
+    @property
+    def angles(self):
+        return [math.radians(self.arc_deg * i / self.nviews) for i in range(self.nviews)]
+
+
+# the artifact set built by `make artifacts`
+DEFAULT = ScanSpec()
+SMALL = ScanSpec(n=64, nviews=90, ncols=96)   # fast tests / CI
+
+# SIRT steps baked into the dc_refine artifact (static loop bound)
+DC_REFINE_ITERS = 20
+SIRT_LAMBDA = 0.9

@@ -1,0 +1,71 @@
+"""Shared helpers for the L1 Pallas kernels.
+
+The 2-D parallel-beam kernels process one view per grid step. Views are
+split into two groups by major axis (|cos phi| >= |sin phi| marches rows;
+otherwise columns): group-B views are evaluated on the *transposed* volume
+with the complementary angle phi' = pi/2 - phi, which maps them exactly
+onto the group-A code path (see DESIGN.md "Hardware adaptation" - this is
+the TPU-friendly replacement for CUDA's per-thread divergence).
+
+All kernels run with ``interpret=True``: the CPU PJRT plugin cannot execute
+Mosaic custom-calls; real-TPU lowering would use the same BlockSpecs.
+"""
+
+import math
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def split_views(angles):
+    """Partition view indices by major axis.
+
+    Returns (idx_a, idx_b, params_a, params_b) where params rows are
+    (cos, sin, step_scale) of the *effective* angle: group B uses
+    phi' = pi/2 - phi so that |cos'| >= |sin'| always holds in-kernel.
+    """
+    idx_a, idx_b = [], []
+    rows_a, rows_b = [], []
+    for v, phi in enumerate(angles):
+        c, s = math.cos(phi), math.sin(phi)
+        if abs(c) >= abs(s):
+            idx_a.append(v)
+            rows_a.append((c, s))
+        else:
+            idx_b.append(v)
+            rows_b.append((s, c))  # cos' = sin, sin' = cos
+    pa = np.asarray(rows_a, dtype=np.float32).reshape(-1, 2)
+    pb = np.asarray(rows_b, dtype=np.float32).reshape(-1, 2)
+    return idx_a, idx_b, pa, pb
+
+
+def scatter_views(parts_a, parts_b, idx_a, idx_b, nviews):
+    """Reassemble per-group view stacks into acquisition order."""
+    ncols = (parts_a if len(idx_a) else parts_b).shape[1]
+    out = jnp.zeros((nviews, ncols), dtype=jnp.float32)
+    if len(idx_a):
+        out = out.at[jnp.asarray(idx_a)].set(parts_a)
+    if len(idx_b):
+        out = out.at[jnp.asarray(idx_b)].set(parts_b)
+    return out
+
+
+def trap_cdf(t, w_small, w_big):
+    """Branchless CDF of the unit-area trapezoid box(w_small) (*) box(w_big).
+
+    Matches ref._trap_cdf; used by the SF kernel (jnp version). For
+    near-degenerate w_small the finite-difference form
+    (Q(t+w/2)-Q(t-w/2))/w cancels catastrophically in f32, so we blend to
+    the exact box CDF (the w_small -> 0 limit) below a threshold safely
+    above f32 epsilon.
+    """
+    wb = jnp.maximum(w_big, 1e-12)
+
+    def Q(x):
+        xc = jnp.clip(x, -wb / 2.0, wb / 2.0)
+        return (xc + wb / 2.0) ** 2 / (2.0 * wb) + jnp.maximum(x - wb / 2.0, 0.0)
+
+    ws = jnp.maximum(w_small, 1e-3)
+    trap = (Q(t + ws / 2.0) - Q(t - ws / 2.0)) / ws
+    box = jnp.clip(t / wb + 0.5, 0.0, 1.0)
+    return jnp.where(w_small < 1e-3, box, trap)

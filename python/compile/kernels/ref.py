@@ -1,0 +1,128 @@
+"""Pure-jnp oracle for the L1 Pallas kernels — the CORE correctness signal.
+
+Builds the *dense* per-view weight matrix for the 2-D parallel-beam Joseph
+and Separable-Footprint models and applies it with einsum. Slow (O(V*C*N*N)
+work) but transparently correct, and the transpose is the literal matrix
+transpose, so matched-pair tests are exact by construction.
+
+Conventions identical to the rust side (rust/src/geometry):
+  voxel (i, j) center x = (i - (n-1)/2)*voxel (same for y with j)
+  detector col c center u = (c - (ncols-1)/2)*du
+  view angle phi: ray direction (-sin phi, cos phi), u axis (cos phi, sin phi)
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def _joseph_view_weights(phi, n, ncols, voxel, du):
+    """Dense (ncols, n, n) Joseph weights for one view; indices (c, j, i)."""
+    h = (n - 1) / 2.0
+    c_idx = np.arange(ncols)
+    u = (c_idx - (ncols - 1) / 2.0) * du
+    i_idx = np.arange(n)
+    j_idx = np.arange(n)
+    cphi, sphi = np.cos(phi), np.sin(phi)
+    if abs(cphi) >= abs(sphi):
+        # major axis y: march rows j, interpolate along x
+        step = voxel / abs(cphi)
+        # x(u, y) = u/cos - y*tan ; fx = x/voxel + h
+        y = (j_idx - h) * voxel  # (n,)
+        fx = (u[:, None] / cphi - y[None, :] * (sphi / cphi)) / voxel + h  # (c, j)
+        w = np.maximum(0.0, 1.0 - np.abs(fx[:, :, None] - i_idx[None, None, :]))  # (c, j, i)
+        return w * step
+    else:
+        # major axis x: march columns i, interpolate along y
+        step = voxel / abs(sphi)
+        x = (i_idx - h) * voxel
+        fy = (u[:, None] / sphi - x[None, :] * (cphi / sphi)) / voxel + h  # (c, i)
+        w = np.maximum(0.0, 1.0 - np.abs(fy[:, :, None] - j_idx[None, None, :]))  # (c, i, j)
+        return np.swapaxes(w, 1, 2) * step  # -> (c, j, i)
+
+
+def _trap_cdf(t, w_small, w_big):
+    """CDF of the unit-area trapezoid = box(w_small) (*) box(w_big).
+
+    Q(x) = antiderivative of the big box's CDF; F(t) = (Q(t + w_small/2)
+    - Q(t - w_small/2)) / w_small with a stable small-width guard.
+    """
+    wb = max(w_big, 1e-12)
+
+    def Q(x):
+        xc = np.clip(x, -wb / 2.0, wb / 2.0)
+        return (xc + wb / 2.0) ** 2 / (2.0 * wb) + np.maximum(x - wb / 2.0, 0.0)
+
+    # same degenerate-width blend as common.trap_cdf (kernel parity)
+    if w_small < 1e-3:
+        return np.clip(t / wb + 0.5, 0.0, 1.0)
+    return (Q(t + w_small / 2.0) - Q(t - w_small / 2.0)) / w_small
+
+
+def _sf_view_weights(phi, n, ncols, voxel, du):
+    """Dense (ncols, n, n) separable-footprint weights for one view."""
+    h = (n - 1) / 2.0
+    cphi, sphi = np.cos(phi), np.sin(phi)
+    w1 = voxel * abs(cphi)
+    w2 = voxel * abs(sphi)
+    w_small, w_big = min(w1, w2), max(w1, w2)
+    amp = voxel * voxel  # footprint area (2-D); unit-area trapezoid below
+
+    i_idx = np.arange(n)
+    j_idx = np.arange(n)
+    x = (i_idx - h) * voxel
+    y = (j_idx - h) * voxel
+    uc = x[None, :] * cphi + y[:, None] * sphi  # (j, i) voxel centers on detector
+    c_idx = np.arange(ncols)
+    u_lo = (c_idx - (ncols - 1) / 2.0) * du - du / 2.0  # (c,)
+    t_lo = u_lo[:, None, None] - uc[None, :, :]
+    t_hi = t_lo + du
+    w = amp * (_trap_cdf(t_hi, w_small, w_big) - _trap_cdf(t_lo, w_small, w_big)) / du
+    return w  # (c, j, i)
+
+
+def _weights(model, phi, n, ncols, voxel, du):
+    if model == "joseph":
+        return _joseph_view_weights(phi, n, ncols, voxel, du)
+    if model == "sf":
+        return _sf_view_weights(phi, n, ncols, voxel, du)
+    raise ValueError(f"unknown model {model}")
+
+
+def fp_ref(vol, angles, ncols, voxel=1.0, du=1.0, model="joseph"):
+    """Forward projection oracle: vol (n, n) -> sino (nviews, ncols)."""
+    vol = np.asarray(vol, dtype=np.float64)
+    n = vol.shape[0]
+    assert vol.shape == (n, n)
+    out = np.zeros((len(angles), ncols))
+    for v, phi in enumerate(angles):
+        w = _weights(model, phi, n, ncols, voxel, du)
+        out[v] = np.einsum("cji,ji->c", w, vol)
+    return jnp.asarray(out, dtype=jnp.float32)
+
+
+def bp_ref(sino, angles, n, voxel=1.0, du=1.0, model="joseph"):
+    """Matched backprojection oracle: the literal transpose of fp_ref."""
+    sino = np.asarray(sino, dtype=np.float64)
+    ncols = sino.shape[1]
+    out = np.zeros((n, n))
+    for v, phi in enumerate(angles):
+        w = _weights(model, phi, n, ncols, voxel, du)
+        out += np.einsum("cji,c->ji", w, sino[v])
+    return jnp.asarray(out, dtype=jnp.float32)
+
+
+def ramp_filter_ref(sino, du=1.0):
+    """Kak-Slaney band-limited ramp filtering of each detector row."""
+    sino = np.asarray(sino, dtype=np.float64)
+    _nviews, ncols = sino.shape
+    nfft = 1 << int(np.ceil(np.log2(2 * ncols)))
+    k = np.zeros(nfft)
+    k[0] = 1.0 / (4.0 * du * du)
+    odd = np.arange(1, ncols, 2)
+    k[odd] = -1.0 / (np.pi**2 * odd.astype(np.float64) ** 2 * du * du)
+    k[nfft - odd] = k[odd]
+    resp = np.real(np.fft.fft(k))
+    resp = np.maximum(resp, 0.0) * du
+    f = np.fft.fft(sino, n=nfft, axis=1) * resp[None, :]
+    out = np.real(np.fft.ifft(f, axis=1))[:, :ncols]
+    return jnp.asarray(out, dtype=jnp.float32)

@@ -1,0 +1,164 @@
+"""L1 Pallas kernels: Separable-Footprint forward/back projection, 2-D
+parallel beam (Long, Fessler & Balter 2010) — the paper's most accurate
+projector model.
+
+Each voxel's footprint on the detector is the trapezoid
+``box(voxel*|cos|) (*) box(voxel*|sin|)``; a detector bin's coefficient is
+the *exact* bin integral of that trapezoid (finite voxel AND finite
+detector-bin width, unlike Joseph/Siddon point sampling). The bin integral
+is evaluated branchlessly via clipped-quadratic CDFs (common.trap_cdf), so
+the inner loop is pure VPU arithmetic plus the same regular gathers as the
+Joseph kernel — no data-dependent control flow, which is exactly the
+rethink a TPU wants instead of CUDA's divergent footprint loops.
+
+Forward gathers voxels into bins through the inverse map i*(c); the
+backprojector gathers bins into voxels through the forward map c*(i) with
+the identical coefficient formula, so the pair is exactly matched.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import common
+
+# gather window half-width: footprint (<= voxel*sqrt(2)) plus one bin,
+# divided by the index slope (>= 1 for du >= voxel in the major group)
+_K = 3
+
+
+def _coeff(u_bin_center, uc, w1, w2, du):
+    """SF coefficient: unit-area trapezoid at uc integrated over the bin."""
+    w_small = jnp.minimum(w1, w2)
+    w_big = jnp.maximum(w1, w2)
+    t_lo = (u_bin_center - du / 2.0) - uc
+    f = common.trap_cdf(t_lo + du, w_small, w_big) - common.trap_cdf(t_lo, w_small, w_big)
+    return f / du
+
+
+def _fp_kernel(params_ref, vol_ref, out_ref, *, n, ncols, voxel, du):
+    """One view: params (1, 2) = (cos, sin); vol (n, n); out (1, ncols)."""
+    cphi = params_ref[0, 0]
+    sphi = params_ref[0, 1]
+    w1 = voxel * jnp.abs(cphi)
+    w2 = voxel * jnp.abs(sphi)
+    amp = voxel * voxel
+    h = (n - 1) / 2.0
+    c = jnp.arange(ncols, dtype=jnp.float32)
+    u = (c - (ncols - 1) / 2.0) * du  # bin centers
+    vol = vol_ref[...]
+
+    def body(j, acc):
+        y = (j.astype(jnp.float32) - h) * voxel
+        # voxel index whose center projects onto each bin center
+        istar = (u - y * sphi) / (voxel * cphi) + h
+        ibase = jnp.floor(istar).astype(jnp.int32)
+        row = jax.lax.dynamic_slice_in_dim(vol, j, 1, 0)[0]
+        contrib = jnp.zeros((ncols,), jnp.float32)
+        for k in range(-_K, _K + 1):
+            ik = ibase + k
+            xk = (ik.astype(jnp.float32) - h) * voxel
+            uc = xk * cphi + y * sphi
+            wgt = amp * _coeff(u, uc, w1, w2, du)
+            g = jnp.take(row, jnp.clip(ik, 0, n - 1))
+            m = ((ik >= 0) & (ik <= n - 1)).astype(jnp.float32)
+            contrib = contrib + wgt * g * m
+        return acc + contrib
+
+    acc = jax.lax.fori_loop(0, n, body, jnp.zeros((ncols,), jnp.float32))
+    out_ref[0, :] = acc
+
+
+def _bp_kernel(params_ref, sino_ref, out_ref, *, n, ncols, voxel, du):
+    """One view: accumulate the matched SF transpose into out (n, n)."""
+    view = pl.program_id(0)
+
+    @pl.when(view == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    cphi = params_ref[0, 0]
+    sphi = params_ref[0, 1]
+    w1 = voxel * jnp.abs(cphi)
+    w2 = voxel * jnp.abs(sphi)
+    amp = voxel * voxel
+    h = (n - 1) / 2.0
+    i_idx = jnp.arange(n, dtype=jnp.float32)
+    x = (i_idx - h) * voxel
+    srow = sino_ref[0, :]
+
+    def body(j, acc):
+        y = (j.astype(jnp.float32) - h) * voxel
+        uc = x * cphi + y * sphi  # voxel centers on the detector
+        cstar = uc / du + (ncols - 1) / 2.0
+        cbase = jnp.floor(cstar).astype(jnp.int32)
+        contrib = jnp.zeros((n,), jnp.float32)
+        for k in range(-_K, _K + 1):
+            ck = cbase + k
+            u_k = (ck.astype(jnp.float32) - (ncols - 1) / 2.0) * du
+            wgt = amp * _coeff(u_k, uc, w1, w2, du)
+            s = jnp.take(srow, jnp.clip(ck, 0, ncols - 1))
+            m = ((ck >= 0) & (ck <= ncols - 1)).astype(jnp.float32)
+            contrib = contrib + wgt * s * m
+        return acc.at[j, :].add(contrib)
+
+    acc = jax.lax.fori_loop(0, n, body, jnp.zeros((n, n), jnp.float32))
+    out_ref[...] += acc
+
+
+def _fp_group(vol, params, ncols, voxel, du):
+    nv = params.shape[0]
+    n = vol.shape[0]
+    if nv == 0:
+        return jnp.zeros((0, ncols), jnp.float32)
+    kernel = functools.partial(_fp_kernel, n=n, ncols=ncols, voxel=voxel, du=du)
+    return pl.pallas_call(
+        kernel,
+        grid=(nv,),
+        in_specs=[
+            pl.BlockSpec((1, 2), lambda v: (v, 0)),
+            pl.BlockSpec((n, n), lambda v: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, ncols), lambda v: (v, 0)),
+        out_shape=jax.ShapeDtypeStruct((nv, ncols), jnp.float32),
+        interpret=True,
+    )(params, vol)
+
+
+def _bp_group(sino, params, n, voxel, du):
+    nv, ncols = sino.shape
+    if nv == 0:
+        return jnp.zeros((n, n), jnp.float32)
+    kernel = functools.partial(_bp_kernel, n=n, ncols=ncols, voxel=voxel, du=du)
+    return pl.pallas_call(
+        kernel,
+        grid=(nv,),
+        in_specs=[
+            pl.BlockSpec((1, 2), lambda v: (v, 0)),
+            pl.BlockSpec((1, ncols), lambda v: (v, 0)),
+        ],
+        out_specs=pl.BlockSpec((n, n), lambda v: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, n), jnp.float32),
+        interpret=True,
+    )(params, sino)
+
+
+def fp(vol, angles, ncols, voxel=1.0, du=1.0):
+    """SF forward projection: vol (n, n) -> sino (nviews, ncols)."""
+    idx_a, idx_b, pa, pb = common.split_views(angles)
+    sino_a = _fp_group(vol, jnp.asarray(pa), ncols, voxel, du)
+    sino_b = _fp_group(vol.T, jnp.asarray(pb), ncols, voxel, du)
+    return common.scatter_views(sino_a, sino_b, idx_a, idx_b, len(angles))
+
+
+def bp(sino, angles, n, voxel=1.0, du=1.0):
+    """Matched SF backprojection: sino (nviews, ncols) -> vol (n, n)."""
+    idx_a, idx_b, pa, pb = common.split_views(angles)
+    out = jnp.zeros((n, n), jnp.float32)
+    if idx_a:
+        out = out + _bp_group(sino[jnp.asarray(idx_a)], jnp.asarray(pa), n, voxel, du)
+    if idx_b:
+        out = out + _bp_group(sino[jnp.asarray(idx_b)], jnp.asarray(pb), n, voxel, du).T
+    return out

@@ -1,0 +1,189 @@
+"""L2: the differentiable CT compute graphs (JAX), calling the L1 kernels.
+
+This is the paper's core API surface expressed in JAX instead of PyTorch:
+
+* :func:`xray_project` / :func:`xray_backproject` — differentiable forward
+  and back projection. ``custom_vjp`` wires the *matched transpose* as the
+  gradient, exactly the paper's `Projector(torch.nn.Module)` contract:
+  ``grad ||A x - y||^2 = A^T (A x - y)`` flows through the L1 kernels.
+* :func:`fbp` — filtered backprojection graph (ramp filter + matched BP
+  with the mass-conservation scale), the classic ill-posed input generator.
+* :func:`sirt_steps` / :func:`dc_refine` — iterative data-consistency
+  refinement (paper section 3-4) as a single fused ``lax.fori_loop`` graph.
+* :func:`prior_denoise` — a small fixed-weight convolutional prior standing
+  in for the trained CT-Net+U-Net of the Figure-3 experiment (DESIGN.md
+  section 6 documents the substitution).
+
+Every public entry point here is lowered to HLO text by ``aot.py`` and
+executed from the rust coordinator — Python never runs at serving time.
+"""
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import joseph, sf
+
+
+def _kernel(model):
+    if model == "joseph":
+        return joseph
+    if model == "sf":
+        return sf
+    raise ValueError(f"unknown model {model}")
+
+
+# ---------------------------------------------------------------------------
+# differentiable projection (custom_vjp: bwd = matched transpose)
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3, 4, 5))
+def xray_project(vol, angles, ncols, voxel=1.0, du=1.0, model="joseph"):
+    """Differentiable forward projection A x (vol (n,n) -> (nviews,ncols))."""
+    return _kernel(model).fp(vol, angles, ncols, voxel, du)
+
+
+def _fp_fwd(vol, angles, ncols, voxel, du, model):
+    return xray_project(vol, angles, ncols, voxel, du, model), vol.shape[0]
+
+
+def _fp_bwd(angles, ncols, voxel, du, model, n, g):
+    # the matched transpose is the exact VJP of a linear operator
+    return (_kernel(model).bp(g, angles, n, voxel, du),)
+
+
+xray_project.defvjp(_fp_fwd, _fp_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3, 4, 5))
+def xray_backproject(sino, angles, n, voxel=1.0, du=1.0, model="joseph"):
+    """Differentiable matched backprojection A^T y ((nviews,ncols) -> (n,n))."""
+    return _kernel(model).bp(sino, angles, n, voxel, du)
+
+
+def _bp_fwd(sino, angles, n, voxel, du, model):
+    return xray_backproject(sino, angles, n, voxel, du, model), sino.shape[1]
+
+
+def _bp_bwd(angles, n, voxel, du, model, ncols, g):
+    return (_kernel(model).fp(g, angles, ncols, voxel, du),)
+
+
+xray_backproject.defvjp(_bp_fwd, _bp_bwd)
+
+
+# ---------------------------------------------------------------------------
+# FBP graph
+# ---------------------------------------------------------------------------
+
+
+def ramp_filter(sino, du=1.0):
+    """Band-limited (Kak-Slaney) ramp filter along detector rows."""
+    nviews, ncols = sino.shape
+    nfft = 1 << int(math.ceil(math.log2(2 * ncols)))
+    k = np.zeros(nfft, dtype=np.float64)
+    k[0] = 1.0 / (4.0 * du * du)
+    odd = np.arange(1, ncols, 2)
+    k[odd] = -1.0 / (np.pi**2 * odd.astype(np.float64) ** 2 * du * du)
+    k[nfft - odd] = k[odd]
+    resp = np.maximum(np.real(np.fft.fft(k)), 0.0) * du  # baked constant
+    f = jnp.fft.rfft(sino, n=nfft, axis=1) * jnp.asarray(resp[: nfft // 2 + 1])
+    out = jnp.fft.irfft(f, n=nfft, axis=1)[:, :ncols]
+    return out.astype(jnp.float32)
+
+
+def fbp(sino, angles, n, voxel=1.0, du=1.0):
+    """Parallel-beam FBP using the matched SF backprojector.
+
+    The SF adjoint deposits ~voxel^2/du of weight per view per voxel, so
+    the classic continuous FBP scale dphi becomes dphi*du/voxel^2 (see
+    rust/src/recon/fbp.rs for the same calibration).
+    """
+    filtered = ramp_filter(sino, du)
+    dphi = math.pi / len(angles)
+    scale = dphi * du / (voxel * voxel)
+    return xray_backproject(filtered, angles, n, voxel, du, "sf") * scale
+
+
+# ---------------------------------------------------------------------------
+# iterative data consistency (paper section 3-4)
+# ---------------------------------------------------------------------------
+
+
+def sirt_steps(x0, y, view_mask, angles, ncols, voxel=1.0, du=1.0, iters=20, lam=0.9, model="sf"):
+    """`iters` SIRT updates restricted to measured views (mask 1/0).
+
+    x <- x + lam * Dv * A^T(M * Dr * (y - A x)), nonneg-clamped; a single
+    fused graph (lax.fori_loop), the dc-refinement hot loop.
+    """
+    n = x0.shape[0]
+    k = _kernel(model)
+    mask = view_mask[:, None]  # (nviews, 1)
+    ones_vol = jnp.ones((n, n), jnp.float32)
+    row_sum = k.fp(ones_vol, angles, ncols, voxel, du)
+    inv_row = jnp.where(row_sum > 1e-6, 1.0 / row_sum, 0.0) * mask
+    ones_sino = jnp.ones((len(angles), ncols), jnp.float32) * mask
+    col_sum = k.bp(ones_sino, angles, n, voxel, du)
+    inv_col = jnp.where(col_sum > 1e-6, 1.0 / col_sum, 0.0)
+
+    def body(_, x):
+        r = (y - k.fp(x, angles, ncols, voxel, du)) * inv_row
+        x = x + lam * inv_col * k.bp(r, angles, n, voxel, du)
+        return jnp.maximum(x, 0.0)
+
+    return jax.lax.fori_loop(0, iters, body, x0)
+
+
+def dc_refine(x_pred, y, view_mask, angles, ncols, voxel=1.0, du=1.0, iters=20, lam=0.9):
+    """The paper's inference-time refinement: start from the predicted
+    image and enforce consistency with the measured projections."""
+    return sirt_steps(x_pred, y, view_mask, angles, ncols, voxel, du, iters, lam, "sf")
+
+
+def complete_sinogram(y, view_mask, x_pred, angles, ncols, voxel=1.0, du=1.0):
+    """Sinogram completion (Anirudh et al. 2018): measured views from y,
+    missing views from A x_pred."""
+    pred = sf.fp(x_pred, angles, ncols, voxel, du)
+    m = view_mask[:, None]
+    return y * m + pred * (1.0 - m)
+
+
+def data_consistency_loss(vol, y, view_mask, angles, ncols, voxel=1.0, du=1.0, model="sf"):
+    """``argmin_x ||A x - y||^2`` of the paper section 3, masked; this is the
+    differentiable training-loss building block (Figure 2)."""
+    r = (xray_project(vol, angles, ncols, voxel, du, model) - y) * view_mask[:, None]
+    return 0.5 * jnp.sum(r * r)
+
+
+# ---------------------------------------------------------------------------
+# fixed-weight convolutional prior (inference-model stand-in)
+# ---------------------------------------------------------------------------
+
+
+def _gauss_kernel(sigma, radius):
+    ax = np.arange(-radius, radius + 1, dtype=np.float64)
+    g = np.exp(-(ax**2) / (2 * sigma * sigma))
+    g /= g.sum()
+    return g
+
+
+def prior_denoise(img, strength=0.6):
+    """Edge-preserving smoothing prior: a gaussian blur blended with the
+    input plus a mild sharpening residual — a deterministic stand-in for
+    the trained U-Net denoiser of the Figure-3 pipeline (DESIGN.md sec. 6).
+
+    Lowered as its own artifact so the rust coordinator can apply the
+    "inference model" on the request path.
+    """
+    g = _gauss_kernel(1.2, 3)
+    kern = jnp.asarray(np.outer(g, g), dtype=jnp.float32)[None, None]
+    x = img[None, None, :, :]
+    pad = 3
+    xp = jnp.pad(x, ((0, 0), (0, 0), (pad, pad), (pad, pad)), mode="edge")
+    blur = jax.lax.conv_general_dilated(xp, kern, (1, 1), "VALID")[0, 0]
+    out = (1.0 - strength) * img + strength * blur
+    return jnp.maximum(out, 0.0)

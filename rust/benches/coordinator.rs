@@ -1,0 +1,115 @@
+//! Coordinator overhead benchmarks: routing + batching + budget cost per
+//! request, batching policy ablation, and served projection throughput on
+//! the native backend. Target: coordinator overhead ≪ projection time
+//! (DESIGN.md §7 — L3 must not be the bottleneck).
+//!
+//! Run: `cargo bench --bench coordinator`
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use leap::bench_harness::{append_results, Bench};
+use leap::coordinator::{BatchPolicy, Coordinator, Executor, NativeExecutor, Request, Router};
+use leap::geometry::{Geometry, ParallelBeam, VolumeGeometry};
+use leap::projector::{Model, Projector};
+
+/// Zero-work backend: isolates pure coordinator overhead.
+struct NullExecutor;
+
+impl Executor for NullExecutor {
+    fn execute(&self, _op: &str, inputs: &[&[f32]]) -> anyhow::Result<Vec<Vec<f32>>> {
+        Ok(vec![vec![inputs.len() as f32]])
+    }
+    fn ops(&self) -> Vec<String> {
+        vec!["null".into()]
+    }
+}
+
+fn main() {
+    let bench = Bench::default();
+    let mut all = Vec::new();
+
+    // 1. pure dispatch overhead (null executor, no batching wait)
+    let coord = Coordinator::new(
+        Arc::new(NullExecutor),
+        BatchPolicy { max_batch: 1, max_wait: Duration::ZERO },
+        1 << 20,
+        1,
+    );
+    let m = bench.run("dispatch overhead (null op, batch=1)", || {
+        coord.call(Request::new(1, "null", vec![vec![0.0; 16]]))
+    });
+    let per_req_us = m.mean_s * 1e6;
+    m.print();
+    all.push(m);
+    drop(coord);
+    println!("    → {per_req_us:.1} µs per request of pure coordinator overhead\n");
+
+    // 2. batching ablation on the native projector backend
+    let vg = VolumeGeometry::slice2d(64, 64, 1.0);
+    let g = ParallelBeam::standard_2d(90, 96, 1.0);
+    let make_coord = |max_batch: usize, wait_ms: u64| {
+        let exec: Arc<dyn Executor> = Arc::new(Router::new(vec![Arc::new(NativeExecutor::new(
+            Projector::new(Geometry::Parallel(g.clone()), vg.clone(), Model::SF),
+        ))]));
+        Arc::new(Coordinator::new(
+            exec,
+            BatchPolicy { max_batch, max_wait: Duration::from_millis(wait_ms) },
+            1 << 30,
+            2,
+        ))
+    };
+    let vol = vec![0.01f32; vg.num_voxels()];
+    for (max_batch, wait_ms, label) in
+        [(1usize, 0u64, "no batching"), (8, 2, "batch≤8/2ms"), (16, 5, "batch≤16/5ms")]
+    {
+        let coord = make_coord(max_batch, wait_ms);
+        let m = bench.run(&format!("serve 16×native_fp 64² [{label}]"), || {
+            let rxs: Vec<_> = (0..16)
+                .map(|i| coord.submit(Request::new(i, "native_fp", vec![vol.clone()])))
+                .collect();
+            for rx in rxs {
+                rx.recv().unwrap();
+            }
+        });
+        let mean_batch = coord
+            .telemetry()
+            .snapshot()
+            .get("native_fp")
+            .map(|s| s.mean_batch())
+            .unwrap_or(0.0);
+        let mut m = m;
+        m.notes.push(("mean_batch".into(), mean_batch));
+        m.print();
+        all.push(m);
+    }
+
+    // 3. end-to-end projection throughput at several volume sizes
+    println!();
+    for n in [32usize, 64, 128] {
+        let vg = VolumeGeometry::slice2d(n, n, 1.0);
+        let g = ParallelBeam::standard_2d(90, (n * 3) / 2, 1.0);
+        let exec: Arc<dyn Executor> = Arc::new(NativeExecutor::new(Projector::new(
+            Geometry::Parallel(g.clone()),
+            vg.clone(),
+            Model::SF,
+        )));
+        let coord = Arc::new(Coordinator::new(exec, BatchPolicy::default(), 1 << 30, 2));
+        let vol = vec![0.01f32; vg.num_voxels()];
+        let mut m = bench.run(&format!("native_fp {n}² via coordinator"), || {
+            coord.call(Request::new(1, "native_fp", vec![vol.clone()]))
+        });
+        // compare to direct execution (no coordinator)
+        let p = Projector::new(Geometry::Parallel(g.clone()), vg.clone(), Model::SF);
+        let v3 = leap::Vol3::from_vec(n, n, 1, vol.clone());
+        let direct = bench.run(&format!("native_fp {n}² direct"), || p.forward(&v3));
+        let overhead = (m.mean_s - direct.mean_s).max(0.0) / direct.mean_s * 100.0;
+        m.notes.push(("overhead_pct".into(), overhead));
+        m.print();
+        direct.print();
+        println!("    → coordinator overhead {overhead:.1}%");
+        all.push(m);
+        all.push(direct);
+    }
+    append_results(&all);
+}

@@ -1,0 +1,95 @@
+//! Reconstruction benchmarks: FBP/FDK and the iterative solvers on the
+//! matched pairs — the "implementing analytical or iterative
+//! reconstruction algorithms" claim, timed.
+//!
+//! Run: `cargo bench --bench recon`
+
+use leap::bench_harness::{append_results, Bench};
+use leap::geometry::{ConeBeam, Geometry, ParallelBeam, VolumeGeometry};
+use leap::phantom::shepp;
+use leap::projector::{Model, Projector};
+use leap::recon;
+
+fn main() {
+    let bench = Bench::quick();
+    let mut all = Vec::new();
+
+    // 2-D parallel 128²/180
+    let vg = VolumeGeometry::slice2d(128, 128, 1.0);
+    let g = ParallelBeam::standard_2d(180, 192, 1.0);
+    let ph = shepp::shepp_logan_2d(55.0, 0.02);
+    let sino = ph.project(&Geometry::Parallel(g.clone()));
+    let p = Projector::new(Geometry::Parallel(g.clone()), vg.clone(), Model::SF);
+
+    let m = bench.run("fbp parallel 128²/180 (hann)", || {
+        recon::fbp_parallel(&vg, &g, &sino, recon::Window::Hann, 1)
+    });
+    m.print();
+    all.push(m);
+
+    for window in [recon::Window::RamLak, recon::Window::SheppLogan, recon::Window::Cosine] {
+        let m = bench.run(&format!("fbp filter {}", window.name()), || {
+            recon::fbp_parallel(&vg, &g, &sino, window, 1)
+        });
+        m.print();
+        all.push(m);
+    }
+
+    let m = bench.run("sirt×10 sf 128²", || {
+        recon::sirt(&p, &sino, &p.new_vol(), &recon::SirtOpts { iterations: 10, ..Default::default() })
+    });
+    m.print();
+    all.push(m);
+
+    let m = bench.run("os-sart×2(8 subsets) sf 128²", || {
+        leap::recon::os_sart::os_sart(
+            &p,
+            &sino,
+            &p.new_vol(),
+            &leap::recon::os_sart::OsSartOpts { iterations: 2, subsets: 8, ..Default::default() },
+        )
+    });
+    m.print();
+    all.push(m);
+
+    let m = bench.run("cgls×10 sf 128²", || leap::recon::cgls::cgls(&p, &sino, 10));
+    m.print();
+    all.push(m);
+
+    let m = bench.run("mlem×10 sf 128²", || leap::recon::mlem::mlem(&p, &sino, 10));
+    m.print();
+    all.push(m);
+
+    let m = bench.run("fista-tv×10 sf 128²", || {
+        leap::recon::fista_tv::fista_tv(
+            &p,
+            &sino,
+            &p.new_vol(),
+            &leap::recon::fista_tv::FistaOpts { iterations: 10, ..Default::default() },
+        )
+    });
+    m.print();
+    all.push(m);
+
+    // DC refinement (the Fig-3 hot loop)
+    let mask = recon::ViewMask::contiguous(180, 0, 60);
+    let mut masked = sino.clone();
+    mask.apply(&mut masked);
+    let pred = recon::fbp_parallel(&vg, &g, &masked, recon::Window::Hann, 1);
+    let m = bench.run("dc-refine×20 (60°/180°)", || {
+        recon::refine(&p, &masked, &mask, &pred, &recon::DcOpts { iterations: 20, ..Default::default() })
+    });
+    m.print();
+    all.push(m);
+
+    // 3-D FDK 48³/96
+    let vg3 = VolumeGeometry::cube(48, 1.0);
+    let g3 = ConeBeam::standard(96, 64, 80, 1.0, 1.0, 96.0, 192.0);
+    let ph3 = shepp::shepp_logan_3d(20.0, 0.02);
+    let sino3 = ph3.project(&Geometry::Cone(g3.clone()));
+    let m = bench.run("fdk 48³/96 (hann)", || recon::fdk(&vg3, &g3, &sino3, recon::Window::Hann, 1));
+    m.print();
+    all.push(m);
+
+    append_results(&all);
+}

@@ -1,0 +1,143 @@
+//! TABLE 1 reproduction: forward-projection time and memory, on-the-fly
+//! LEAP-style projectors vs the stored-system-matrix baseline (the
+//! approach the paper's intro argues against).
+//!
+//! Paper grid (P100 GPU): parallel & cone, 512³/180 and 1024³/720.
+//! CPU-feasible grid here: parallel & cone at 64³/90 (default) and
+//! 96³/180 (`-- --full`), plus a 2-D 256²/180 row where the CSR baseline
+//! fits RAM. The *shape* to reproduce: on-the-fly time is in the same
+//! class as any other compute-bound implementation while memory stays at
+//! one copy of volume + projections; the stored matrix pays O(nnz) memory
+//! — orders of magnitude more — plus a large build cost.
+//!
+//! Run: `cargo bench --bench table1` (add `-- --full` for the big rows).
+
+use leap::bench_harness::{append_results, Bench};
+use leap::geometry::{ConeBeam, Geometry, ParallelBeam, VolumeGeometry};
+use leap::metrics::one_copy_bytes;
+use leap::phantom::shepp;
+use leap::projector::{Model, Projector};
+use leap::sysmatrix::SystemMatrix;
+
+struct Case {
+    name: &'static str,
+    geom: Geometry,
+    vg: VolumeGeometry,
+    /// build the CSR baseline too (skipped where nnz would blow RAM)
+    with_matrix: bool,
+}
+
+fn cases(full: bool) -> Vec<Case> {
+    let mut out = vec![
+        Case {
+            name: "parallel 64³/90",
+            geom: Geometry::Parallel(ParallelBeam::standard_3d(90, 64, 96, 1.0, 1.0)),
+            vg: VolumeGeometry::cube(64, 1.0),
+            with_matrix: false,
+        },
+        Case {
+            name: "cone 64³/90",
+            geom: Geometry::Cone(ConeBeam::standard(90, 80, 96, 1.0, 1.0, 128.0, 256.0)),
+            vg: VolumeGeometry::cube(64, 1.0),
+            with_matrix: false,
+        },
+        Case {
+            name: "parallel 256²/180 (2-D row)",
+            geom: Geometry::Parallel(ParallelBeam::standard_2d(180, 384, 1.0)),
+            vg: VolumeGeometry::slice2d(256, 256, 1.0),
+            with_matrix: true,
+        },
+    ];
+    if full {
+        out.push(Case {
+            name: "parallel 96³/180",
+            geom: Geometry::Parallel(ParallelBeam::standard_3d(180, 96, 144, 1.0, 1.0)),
+            vg: VolumeGeometry::cube(96, 1.0),
+            with_matrix: false,
+        });
+        out.push(Case {
+            name: "cone 96³/180",
+            geom: Geometry::Cone(ConeBeam::standard(180, 120, 144, 1.0, 1.0, 192.0, 384.0)),
+            vg: VolumeGeometry::cube(96, 1.0),
+            with_matrix: false,
+        });
+    }
+    out
+}
+
+fn main() {
+    let full = std::env::args().any(|a| a == "--full");
+    let bench = Bench::quick();
+    let mut all = Vec::new();
+    println!("── Table 1: forward/back projection time (s) and memory ──");
+    println!("(paper shape: on-the-fly compute at one-copy memory; stored matrix = O(nnz) memory)\n");
+    for case in cases(full) {
+        let phantom = if case.vg.nz > 1 {
+            shepp::shepp_logan_3d(0.42 * case.vg.nx as f64, 0.02)
+        } else {
+            shepp::shepp_logan_2d(0.42 * case.vg.nx as f64, 0.02)
+        };
+        let vol = phantom.rasterize(&case.vg, 1);
+        let one_copy = {
+            let p = Projector::new(case.geom.clone(), case.vg.clone(), Model::SF);
+            one_copy_bytes(vol.len(), p.new_sino().len())
+        };
+        println!("{}  (one-copy memory {:.1} MB)", case.name, one_copy as f64 / 1e6);
+
+        for model in [Model::Siddon, Model::Joseph, Model::SF] {
+            let p = Projector::new(case.geom.clone(), case.vg.clone(), model);
+            let mut m =
+                bench.run(&format!("{} fwd {}", case.name, model.name()), || p.forward(&vol));
+            let rays = p.new_sino().len() as f64;
+            m.notes.push(("mem_bytes".into(), one_copy as f64));
+            m.notes.push(("rays_per_s".into(), rays / m.mean_s));
+            m.print();
+            // matched backprojection (the other half of each Table-1 cell)
+            let sino = p.forward(&vol);
+            let mb =
+                bench.run(&format!("{} back {}", case.name, model.name()), || p.back(&sino));
+            mb.print();
+            all.push(m);
+            all.push(mb);
+        }
+
+        if case.with_matrix {
+            // stored-matrix baseline (Lahiri-style): build cost + memory +
+            // fetch-bound SpMV apply
+            let p = Projector::new(case.geom.clone(), case.vg.clone(), Model::SF).with_threads(1);
+            let t0 = std::time::Instant::now();
+            let mat = SystemMatrix::build(&p);
+            let build_s = t0.elapsed().as_secs_f64();
+            let mut m =
+                bench.run(&format!("{} fwd stored-matrix", case.name), || mat.forward(&vol));
+            m.notes.push(("mem_bytes".into(), mat.nbytes() as f64));
+            m.notes.push(("build_s".into(), build_s));
+            m.notes
+                .push(("mem_ratio_vs_one_copy".into(), mat.nbytes() as f64 / one_copy as f64));
+            m.print();
+            println!(
+                "    → stored matrix: {:.1} MB ({}x one-copy), {:.2}s to build",
+                mat.nbytes() as f64 / 1e6,
+                mat.nbytes() / one_copy.max(1),
+                build_s
+            );
+            all.push(m);
+        }
+        println!();
+    }
+    // paper's 512³/1024³ cells: memory-model extrapolation (the claim is
+    // exactly "enough to hold one copy of projections + volume")
+    println!("memory-model extrapolation to the paper's grid:");
+    for (name, nvox, nproj) in [
+        ("512³/180 parallel", 512usize.pow(3), 180 * 512 * 512),
+        ("1024³/720 parallel", 1024usize.pow(3), 720 * 1024 * 1024),
+        ("512³/180 cone", 512usize.pow(3), 180 * 512 * 512),
+        ("1024³/720 cone", 1024usize.pow(3), 720 * 1024 * 1024),
+    ] {
+        println!(
+            "  {name}: one-copy {:.2} GB (paper reports 1.5–11.1 GB incl. transfer buffers)",
+            one_copy_bytes(nvox, nproj) as f64 / (1u64 << 30) as f64
+        );
+    }
+    append_results(&all);
+}

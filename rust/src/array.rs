@@ -1,0 +1,227 @@
+//! Dense array containers shared by every layer.
+//!
+//! Layouts match the paper (and the PJRT artifacts) exactly:
+//! * volumes `[z][y][x]`, x fastest — `Vol3`
+//! * sinograms `[view][row][col]`, col fastest — `Sino`
+//!
+//! Both are contiguous `f32`, so they can be handed to the runtime (and to
+//! a GPU in the original LEAP) without copies. 2-D problems use `nz = 1` /
+//! `nrows = 1`.
+
+/// A 3-D volume of x-ray linear attenuation coefficients (mm⁻¹).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Vol3 {
+    pub nx: usize,
+    pub ny: usize,
+    pub nz: usize,
+    pub data: Vec<f32>,
+}
+
+impl Vol3 {
+    /// Zero-filled volume.
+    pub fn zeros(nx: usize, ny: usize, nz: usize) -> Vol3 {
+        Vol3 { nx, ny, nz, data: vec![0.0; nx * ny * nz] }
+    }
+
+    /// Wrap an existing buffer (must have length `nx·ny·nz`).
+    pub fn from_vec(nx: usize, ny: usize, nz: usize, data: Vec<f32>) -> Vol3 {
+        assert_eq!(data.len(), nx * ny * nz, "Vol3 buffer size mismatch");
+        Vol3 { nx, ny, nz, data }
+    }
+
+    /// 2-D convenience: a single-slice volume.
+    pub fn zeros2d(nx: usize, ny: usize) -> Vol3 {
+        Vol3::zeros(nx, ny, 1)
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    #[inline]
+    pub fn idx(&self, i: usize, j: usize, k: usize) -> usize {
+        debug_assert!(i < self.nx && j < self.ny && k < self.nz);
+        (k * self.ny + j) * self.nx + i
+    }
+
+    #[inline]
+    pub fn at(&self, i: usize, j: usize, k: usize) -> f32 {
+        self.data[self.idx(i, j, k)]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, i: usize, j: usize, k: usize) -> &mut f32 {
+        let idx = self.idx(i, j, k);
+        &mut self.data[idx]
+    }
+
+    /// Immutable view of slice `k` (`ny·nx` elements).
+    pub fn slice(&self, k: usize) -> &[f32] {
+        let n = self.nx * self.ny;
+        &self.data[k * n..(k + 1) * n]
+    }
+
+    pub fn slice_mut(&mut self, k: usize) -> &mut [f32] {
+        let n = self.nx * self.ny;
+        &mut self.data[k * n..(k + 1) * n]
+    }
+
+    pub fn fill(&mut self, v: f32) {
+        self.data.iter_mut().for_each(|x| *x = v);
+    }
+
+    /// Sum of all voxels (f64 accumulation).
+    pub fn sum(&self) -> f64 {
+        self.data.iter().map(|&x| x as f64).sum()
+    }
+
+    pub fn min_max(&self) -> (f32, f32) {
+        let mut lo = f32::INFINITY;
+        let mut hi = f32::NEG_INFINITY;
+        for &v in &self.data {
+            lo = lo.min(v);
+            hi = hi.max(v);
+        }
+        (lo, hi)
+    }
+
+    /// Memory footprint in bytes (the Table-1 "one copy" number).
+    pub fn nbytes(&self) -> usize {
+        self.data.len() * std::mem::size_of::<f32>()
+    }
+}
+
+/// A stack of projections: `nviews` views of `nrows × ncols` detector
+/// samples (line integrals, dimensionless).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Sino {
+    pub nviews: usize,
+    pub nrows: usize,
+    pub ncols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Sino {
+    pub fn zeros(nviews: usize, nrows: usize, ncols: usize) -> Sino {
+        Sino { nviews, nrows, ncols, data: vec![0.0; nviews * nrows * ncols] }
+    }
+
+    pub fn from_vec(nviews: usize, nrows: usize, ncols: usize, data: Vec<f32>) -> Sino {
+        assert_eq!(data.len(), nviews * nrows * ncols, "Sino buffer size mismatch");
+        Sino { nviews, nrows, ncols, data }
+    }
+
+    /// 2-D convenience: single-row detector.
+    pub fn zeros2d(nviews: usize, ncols: usize) -> Sino {
+        Sino::zeros(nviews, 1, ncols)
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    #[inline]
+    pub fn idx(&self, view: usize, row: usize, col: usize) -> usize {
+        debug_assert!(view < self.nviews && row < self.nrows && col < self.ncols);
+        (view * self.nrows + row) * self.ncols + col
+    }
+
+    #[inline]
+    pub fn at(&self, view: usize, row: usize, col: usize) -> f32 {
+        self.data[self.idx(view, row, col)]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, view: usize, row: usize, col: usize) -> &mut f32 {
+        let idx = self.idx(view, row, col);
+        &mut self.data[idx]
+    }
+
+    /// One view (`nrows·ncols` elements).
+    pub fn view(&self, v: usize) -> &[f32] {
+        let n = self.nrows * self.ncols;
+        &self.data[v * n..(v + 1) * n]
+    }
+
+    pub fn view_mut(&mut self, v: usize) -> &mut [f32] {
+        let n = self.nrows * self.ncols;
+        &mut self.data[v * n..(v + 1) * n]
+    }
+
+    pub fn fill(&mut self, v: f32) {
+        self.data.iter_mut().for_each(|x| *x = v);
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.data.iter().map(|&x| x as f64).sum()
+    }
+
+    pub fn nbytes(&self) -> usize {
+        self.data.len() * std::mem::size_of::<f32>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vol_layout_x_fastest() {
+        let mut v = Vol3::zeros(3, 4, 5);
+        *v.at_mut(1, 0, 0) = 1.0;
+        *v.at_mut(0, 1, 0) = 2.0;
+        *v.at_mut(0, 0, 1) = 3.0;
+        assert_eq!(v.data[1], 1.0);
+        assert_eq!(v.data[3], 2.0);
+        assert_eq!(v.data[12], 3.0);
+    }
+
+    #[test]
+    fn sino_layout_col_fastest() {
+        let mut s = Sino::zeros(2, 3, 4);
+        *s.at_mut(0, 0, 1) = 1.0;
+        *s.at_mut(0, 1, 0) = 2.0;
+        *s.at_mut(1, 0, 0) = 3.0;
+        assert_eq!(s.data[1], 1.0);
+        assert_eq!(s.data[4], 2.0);
+        assert_eq!(s.data[12], 3.0);
+    }
+
+    #[test]
+    fn slices_are_views() {
+        let mut v = Vol3::zeros(2, 2, 3);
+        v.slice_mut(1)[0] = 7.0;
+        assert_eq!(v.at(0, 0, 1), 7.0);
+        assert_eq!(v.slice(1)[0], 7.0);
+    }
+
+    #[test]
+    fn sum_and_minmax() {
+        let v = Vol3::from_vec(2, 1, 1, vec![-1.0, 3.0]);
+        assert_eq!(v.sum(), 2.0);
+        assert_eq!(v.min_max(), (-1.0, 3.0));
+    }
+
+    #[test]
+    #[should_panic]
+    fn from_vec_checks_len() {
+        Vol3::from_vec(2, 2, 2, vec![0.0; 7]);
+    }
+
+    #[test]
+    fn nbytes_one_copy() {
+        // Table 1's memory model: one copy of volume + one of projections.
+        let v = Vol3::zeros(64, 64, 64);
+        assert_eq!(v.nbytes(), 64 * 64 * 64 * 4);
+    }
+}

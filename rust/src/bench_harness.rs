@@ -1,0 +1,173 @@
+//! Minimal benchmarking harness (criterion replacement — the vendored
+//! crate set has no criterion). Used by every `rust/benches/*.rs` target
+//! (`harness = false`).
+//!
+//! Methodology: warmup runs, then timed iterations until both a minimum
+//! iteration count and a minimum wall-clock budget are met; reports
+//! mean / median / p10 / p90 and allows custom throughput annotation.
+//! Results can be appended as JSON lines for EXPERIMENTS.md bookkeeping.
+
+use std::time::{Duration, Instant};
+
+/// One benchmark measurement.
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub median_s: f64,
+    pub p10_s: f64,
+    pub p90_s: f64,
+    /// Optional label → value annotations (e.g. memory bytes, Mvox/s).
+    pub notes: Vec<(String, f64)>,
+}
+
+impl Measurement {
+    pub fn print(&self) {
+        print!(
+            "{:<44} {:>10.4} s  (median {:.4}, p10 {:.4}, p90 {:.4}, n={})",
+            self.name, self.mean_s, self.median_s, self.p10_s, self.p90_s, self.iters
+        );
+        for (k, v) in &self.notes {
+            if *v >= 1e9 {
+                print!("  {k}={:.3}G", v / 1e9);
+            } else if *v >= 1e6 {
+                print!("  {k}={:.3}M", v / 1e6);
+            } else if *v >= 1e3 {
+                print!("  {k}={:.3}k", v / 1e3);
+            } else {
+                print!("  {k}={v:.3}");
+            }
+        }
+        println!();
+    }
+
+    pub fn to_json_line(&self) -> String {
+        use crate::util::json::Json;
+        let mut fields = vec![
+            ("name", Json::Str(self.name.clone())),
+            ("iters", Json::Num(self.iters as f64)),
+            ("mean_s", Json::Num(self.mean_s)),
+            ("median_s", Json::Num(self.median_s)),
+            ("p10_s", Json::Num(self.p10_s)),
+            ("p90_s", Json::Num(self.p90_s)),
+        ];
+        for (k, v) in &self.notes {
+            fields.push((k.as_str(), Json::Num(*v)));
+        }
+        // keys must live long enough: rebuild with owned keys
+        let obj: std::collections::BTreeMap<String, Json> =
+            fields.into_iter().map(|(k, v)| (k.to_string(), v)).collect();
+        Json::Obj(obj).to_string()
+    }
+}
+
+/// Benchmark configuration.
+#[derive(Clone, Debug)]
+pub struct Bench {
+    pub warmup: usize,
+    pub min_iters: usize,
+    pub max_iters: usize,
+    pub min_time: Duration,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench { warmup: 1, min_iters: 3, max_iters: 50, min_time: Duration::from_millis(300) }
+    }
+}
+
+impl Bench {
+    /// Quick preset for expensive end-to-end cases.
+    pub fn quick() -> Bench {
+        Bench { warmup: 1, min_iters: 2, max_iters: 5, min_time: Duration::from_millis(50) }
+    }
+
+    /// Time `f`, which must fully perform the work each call (return value
+    /// is black-boxed).
+    pub fn run<T, F: FnMut() -> T>(&self, name: &str, mut f: F) -> Measurement {
+        for _ in 0..self.warmup {
+            black_box(f());
+        }
+        let mut times = Vec::new();
+        let start = Instant::now();
+        while times.len() < self.min_iters
+            || (start.elapsed() < self.min_time && times.len() < self.max_iters)
+        {
+            let t0 = Instant::now();
+            black_box(f());
+            times.push(t0.elapsed().as_secs_f64());
+        }
+        times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = times.len();
+        let mean = times.iter().sum::<f64>() / n as f64;
+        let q = |p: f64| times[((n as f64 - 1.0) * p).round() as usize];
+        Measurement {
+            name: name.to_string(),
+            iters: n,
+            mean_s: mean,
+            median_s: q(0.5),
+            p10_s: q(0.1),
+            p90_s: q(0.9),
+            notes: vec![],
+        }
+    }
+}
+
+/// Prevent the optimizer from discarding a value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Append measurements to `target/bench_results.jsonl` for later analysis.
+pub fn append_results(measurements: &[Measurement]) {
+    let _ = std::fs::create_dir_all("target");
+    if let Ok(mut f) = std::fs::OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open("target/bench_results.jsonl")
+    {
+        use std::io::Write;
+        for m in measurements {
+            let _ = writeln!(f, "{}", m.to_json_line());
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn run_measures_something() {
+        let b = Bench { warmup: 0, min_iters: 3, max_iters: 3, min_time: Duration::ZERO };
+        let m = b.run("spin", || {
+            let mut acc = 0u64;
+            for i in 0..10_000 {
+                acc = acc.wrapping_add(i);
+            }
+            acc
+        });
+        assert_eq!(m.iters, 3);
+        assert!(m.mean_s > 0.0);
+        assert!(m.p10_s <= m.median_s && m.median_s <= m.p90_s);
+    }
+
+    #[test]
+    fn json_line_parses() {
+        let mut m = Measurement {
+            name: "x".into(),
+            iters: 5,
+            mean_s: 0.5,
+            median_s: 0.4,
+            p10_s: 0.3,
+            p90_s: 0.9,
+            notes: vec![("mem_bytes".into(), 1024.0)],
+        };
+        m.notes.push(("rate".into(), 2.0));
+        let j = crate::util::json::parse(&m.to_json_line()).unwrap();
+        assert_eq!(j.get_f64("mem_bytes"), Some(1024.0));
+        assert_eq!(j.get_str("name"), Some("x"));
+    }
+}

@@ -1,0 +1,213 @@
+//! Dynamic batcher: groups queued requests by operation so workers execute
+//! runs of identical ops back-to-back (one compiled executable stays hot;
+//! weights/plans stay in cache), closing a batch at `max_batch` or when the
+//! oldest member exceeds `max_wait`.
+//!
+//! Invariants (property-tested below):
+//!  * FIFO order is preserved *within* an op,
+//!  * a batch never mixes ops and never exceeds `max_batch`,
+//!  * no request waits past `max_wait` once the batcher is polled,
+//!  * every submitted request is eventually emitted exactly once.
+
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+use super::request::Request;
+
+#[derive(Clone, Debug)]
+pub struct BatchPolicy {
+    pub max_batch: usize,
+    pub max_wait: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(5) }
+    }
+}
+
+/// A closed batch: requests sharing one op.
+#[derive(Debug)]
+pub struct Batch {
+    pub op: String,
+    pub requests: Vec<Request>,
+}
+
+/// Non-thread-safe core (wrapped in a mutex by the coordinator).
+pub struct Batcher {
+    policy: BatchPolicy,
+    queue: VecDeque<Request>,
+}
+
+impl Batcher {
+    pub fn new(policy: BatchPolicy) -> Batcher {
+        Batcher { policy, queue: VecDeque::new() }
+    }
+
+    pub fn push(&mut self, req: Request) {
+        self.queue.push_back(req);
+    }
+
+    pub fn len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    /// Close and return the next batch, if any is ready at `now`.
+    ///
+    /// The head request's op defines the batch op; subsequent requests of
+    /// the same op (anywhere in the queue, preserving their relative
+    /// order) join until `max_batch`. A batch is "ready" when it is full
+    /// or its oldest member has waited `max_wait` — otherwise `None`, so a
+    /// caller can keep accumulating.
+    pub fn pop_ready(&mut self, now: Instant) -> Option<Batch> {
+        let head = self.queue.front()?;
+        let op = head.op.clone();
+        let oldest_wait = now.saturating_duration_since(head.submitted);
+        let same_op = self.queue.iter().filter(|r| r.op == op).count();
+        let full = same_op >= self.policy.max_batch;
+        if !full && oldest_wait < self.policy.max_wait {
+            return None;
+        }
+        let mut requests = Vec::new();
+        let mut rest = VecDeque::with_capacity(self.queue.len());
+        for req in self.queue.drain(..) {
+            if req.op == op && requests.len() < self.policy.max_batch {
+                requests.push(req);
+            } else {
+                rest.push_back(req);
+            }
+        }
+        self.queue = rest;
+        Some(Batch { op, requests })
+    }
+
+    /// Work-conserving pop: return the head batch immediately, regardless
+    /// of the deadline (used by idle workers — holding work while capacity
+    /// is free only adds latency; batches still form naturally from
+    /// backlog under load). See EXPERIMENTS.md §Perf.
+    pub fn pop_now(&mut self) -> Option<Batch> {
+        let far = Instant::now() + Duration::from_secs(3600);
+        self.pop_ready(far)
+    }
+
+    /// Drain everything immediately (shutdown path).
+    pub fn drain_all(&mut self) -> Vec<Batch> {
+        let mut out = Vec::new();
+        let far_future = Instant::now() + Duration::from_secs(3600);
+        while !self.queue.is_empty() {
+            if let Some(b) = self.pop_ready(far_future) {
+                out.push(b);
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn req(id: u64, op: &str) -> Request {
+        Request::new(id, op, vec![])
+    }
+
+    #[test]
+    fn batches_by_op_preserving_order() {
+        let mut b = Batcher::new(BatchPolicy { max_batch: 10, max_wait: Duration::ZERO });
+        for (id, op) in [(1, "a"), (2, "b"), (3, "a"), (4, "a"), (5, "b")] {
+            b.push(req(id, op));
+        }
+        let first = b.pop_ready(Instant::now()).unwrap();
+        assert_eq!(first.op, "a");
+        assert_eq!(first.requests.iter().map(|r| r.id).collect::<Vec<_>>(), vec![1, 3, 4]);
+        let second = b.pop_ready(Instant::now()).unwrap();
+        assert_eq!(second.op, "b");
+        assert_eq!(second.requests.iter().map(|r| r.id).collect::<Vec<_>>(), vec![2, 5]);
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn respects_max_batch() {
+        let mut b = Batcher::new(BatchPolicy { max_batch: 3, max_wait: Duration::ZERO });
+        for id in 0..7 {
+            b.push(req(id, "x"));
+        }
+        let sizes: Vec<usize> = std::iter::from_fn(|| b.pop_ready(Instant::now()))
+            .map(|batch| batch.requests.len())
+            .collect();
+        assert_eq!(sizes, vec![3, 3, 1]);
+    }
+
+    #[test]
+    fn waits_for_deadline_when_not_full() {
+        let mut b = Batcher::new(BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(50) });
+        b.push(req(1, "x"));
+        // immediately: not ready (not full, not old)
+        assert!(b.pop_ready(Instant::now()).is_none());
+        // after the deadline it flushes even at size 1
+        let later = Instant::now() + Duration::from_millis(60);
+        let batch = b.pop_ready(later).unwrap();
+        assert_eq!(batch.requests.len(), 1);
+    }
+
+    #[test]
+    fn full_batch_flushes_immediately() {
+        let mut b = Batcher::new(BatchPolicy { max_batch: 2, max_wait: Duration::from_secs(10) });
+        b.push(req(1, "x"));
+        b.push(req(2, "x"));
+        assert!(b.pop_ready(Instant::now()).is_some());
+    }
+
+    #[test]
+    fn property_every_request_emitted_exactly_once() {
+        // randomized schedule: interleave pushes and pops, then drain;
+        // multiset of emitted ids equals the submitted ids, FIFO per op
+        let mut rng = Rng::new(99);
+        for trial in 0..20 {
+            let mut b = Batcher::new(BatchPolicy {
+                max_batch: 1 + rng.below(5),
+                max_wait: Duration::ZERO,
+            });
+            let ops = ["fp", "bp", "fbp"];
+            let mut submitted = Vec::new();
+            let mut emitted: Vec<(String, u64)> = Vec::new();
+            let mut next_id = 0u64;
+            for _ in 0..50 {
+                if rng.f64() < 0.6 {
+                    let op = ops[rng.below(3)];
+                    b.push(req(next_id, op));
+                    submitted.push((op.to_string(), next_id));
+                    next_id += 1;
+                } else if let Some(batch) = b.pop_ready(Instant::now()) {
+                    for r in batch.requests {
+                        emitted.push((batch.op.clone(), r.id));
+                    }
+                }
+            }
+            for batch in b.drain_all() {
+                for r in batch.requests {
+                    emitted.push((batch.op.clone(), r.id));
+                }
+            }
+            // exactly once
+            let mut a = submitted.clone();
+            let mut e = emitted.clone();
+            a.sort();
+            e.sort();
+            assert_eq!(a, e, "trial {trial}");
+            // FIFO within op
+            for op in ops {
+                let sub: Vec<u64> =
+                    submitted.iter().filter(|(o, _)| o == op).map(|&(_, i)| i).collect();
+                let emi: Vec<u64> =
+                    emitted.iter().filter(|(o, _)| o == op).map(|&(_, i)| i).collect();
+                assert_eq!(sub, emi, "trial {trial} op {op}");
+            }
+        }
+    }
+}

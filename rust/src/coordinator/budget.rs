@@ -1,0 +1,148 @@
+//! Memory-budget admission control.
+//!
+//! The paper's headline systems property is the small, predictable
+//! footprint: one copy of the volume plus one copy of the projections per
+//! job. The coordinator enforces an aggregate cap on in-flight bytes so a
+//! burst of requests cannot blow the GPU/host memory — jobs beyond the cap
+//! wait in the queue instead of failing OOM mid-flight.
+
+use std::sync::{Condvar, Mutex};
+
+/// Tracks in-flight bytes against a cap. `acquire` blocks until the
+/// reservation fits (or returns false for oversized jobs that can never
+/// fit).
+pub struct MemoryBudget {
+    cap: usize,
+    state: Mutex<usize>,
+    cv: Condvar,
+}
+
+impl MemoryBudget {
+    pub fn new(cap_bytes: usize) -> MemoryBudget {
+        MemoryBudget { cap: cap_bytes, state: Mutex::new(0), cv: Condvar::new() }
+    }
+
+    pub fn cap(&self) -> usize {
+        self.cap
+    }
+
+    pub fn in_flight(&self) -> usize {
+        *self.state.lock().unwrap()
+    }
+
+    /// Reserve `bytes`. Blocks while the cap is exceeded. Returns false if
+    /// `bytes > cap` (the job can never be admitted).
+    pub fn acquire(&self, bytes: usize) -> bool {
+        if bytes > self.cap {
+            return false;
+        }
+        let mut used = self.state.lock().unwrap();
+        while *used + bytes > self.cap {
+            used = self.cv.wait(used).unwrap();
+        }
+        *used += bytes;
+        true
+    }
+
+    /// Non-blocking variant: true if reserved.
+    pub fn try_acquire(&self, bytes: usize) -> bool {
+        if bytes > self.cap {
+            return false;
+        }
+        let mut used = self.state.lock().unwrap();
+        if *used + bytes > self.cap {
+            return false;
+        }
+        *used += bytes;
+        true
+    }
+
+    pub fn release(&self, bytes: usize) {
+        let mut used = self.state.lock().unwrap();
+        *used = used.saturating_sub(bytes);
+        drop(used);
+        self.cv.notify_all();
+    }
+}
+
+/// Estimate a job's footprint: inputs + outputs, one copy each (the
+/// paper's memory model), plus a fixed overhead for the runtime.
+pub fn job_bytes(input_bytes: usize, output_bytes: usize) -> usize {
+    input_bytes + output_bytes + 4096
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Arc;
+
+    #[test]
+    fn acquire_release_basic() {
+        let b = MemoryBudget::new(100);
+        assert!(b.acquire(60));
+        assert_eq!(b.in_flight(), 60);
+        assert!(b.try_acquire(40));
+        assert!(!b.try_acquire(1));
+        b.release(60);
+        assert!(b.try_acquire(60));
+        assert_eq!(b.in_flight(), 100);
+    }
+
+    #[test]
+    fn oversized_rejected() {
+        let b = MemoryBudget::new(10);
+        assert!(!b.acquire(11));
+        assert!(!b.try_acquire(11));
+        assert_eq!(b.in_flight(), 0);
+    }
+
+    #[test]
+    fn blocking_acquire_wakes_on_release() {
+        let b = Arc::new(MemoryBudget::new(100));
+        assert!(b.acquire(90));
+        let done = Arc::new(AtomicUsize::new(0));
+        let b2 = b.clone();
+        let d2 = done.clone();
+        let h = std::thread::spawn(move || {
+            assert!(b2.acquire(50)); // must wait for the release
+            d2.store(1, Ordering::SeqCst);
+            b2.release(50);
+        });
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        assert_eq!(done.load(Ordering::SeqCst), 0, "should still be blocked");
+        b.release(90);
+        h.join().unwrap();
+        assert_eq!(done.load(Ordering::SeqCst), 1);
+        assert_eq!(b.in_flight(), 0);
+    }
+
+    #[test]
+    fn budget_never_exceeded_under_contention() {
+        // property test: hammer with random acquire/release from several
+        // threads; the in-flight watermark must never exceed the cap
+        let b = Arc::new(MemoryBudget::new(1000));
+        let peak = Arc::new(AtomicUsize::new(0));
+        let mut handles = Vec::new();
+        for t in 0..4 {
+            let b = b.clone();
+            let peak = peak.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut rng = crate::util::rng::Rng::new(t as u64);
+                for _ in 0..200 {
+                    let bytes = 1 + rng.below(400);
+                    if b.acquire(bytes) {
+                        let now = b.in_flight();
+                        peak.fetch_max(now, Ordering::SeqCst);
+                        assert!(now <= 1000, "cap exceeded: {now}");
+                        b.release(bytes);
+                    }
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert!(peak.load(Ordering::SeqCst) <= 1000);
+    }
+}

@@ -1,0 +1,472 @@
+//! The serving layer: request router, dynamic batcher, worker pool and
+//! memory-budget admission control over the projection backends.
+//!
+//! Two backends implement [`Executor`]:
+//! * [`crate::runtime::Engine`] — the AOT JAX/Pallas artifacts via PJRT
+//!   (fixed shapes, Python never on this path);
+//! * [`NativeExecutor`] — the Rust on-the-fly projectors (any geometry).
+//!
+//! Flow: `submit` → [`batcher::Batcher`] groups by op → a worker claims the
+//! batch, reserves memory from [`budget::MemoryBudget`], executes, records
+//! [`telemetry::Telemetry`], and delivers each [`request::Response`]
+//! through its per-request channel. `examples/serve_client.rs` runs the
+//! whole stack over TCP via [`server`].
+
+pub mod batcher;
+pub mod budget;
+pub mod request;
+pub mod server;
+pub mod telemetry;
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+pub use batcher::{BatchPolicy, Batcher};
+pub use budget::MemoryBudget;
+pub use request::{Request, Response};
+pub use telemetry::Telemetry;
+
+/// A projection backend the coordinator can route to.
+pub trait Executor: Send + Sync {
+    /// Execute `op` on the given inputs, returning the outputs.
+    fn execute(&self, op: &str, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>>;
+    /// Estimated output bytes for admission control.
+    fn output_bytes_hint(&self, op: &str, input_bytes: usize) -> usize {
+        let _ = op;
+        input_bytes
+    }
+    /// Operations this backend accepts (for routing/diagnostics).
+    fn ops(&self) -> Vec<String>;
+}
+
+impl Executor for crate::runtime::EngineHost {
+    fn execute(&self, op: &str, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+        self.run(op, inputs)
+    }
+
+    fn output_bytes_hint(&self, op: &str, _input_bytes: usize) -> usize {
+        self.shapes(op)
+            .map(|(_, outs)| outs.iter().map(|s| s.iter().product::<usize>() * 4).sum())
+            .unwrap_or(0)
+    }
+
+    fn ops(&self) -> Vec<String> {
+        self.entry_names().into_iter().map(|s| s.to_string()).collect()
+    }
+}
+
+/// Native-projector backend: the Rust on-the-fly pairs plus FBP, for the
+/// scan described by a [`crate::geometry::config::ScanConfig`].
+pub struct NativeExecutor {
+    pub projector: crate::projector::Projector,
+}
+
+impl NativeExecutor {
+    pub fn new(projector: crate::projector::Projector) -> NativeExecutor {
+        NativeExecutor { projector }
+    }
+
+    fn vol_from(&self, buf: &[f32]) -> Result<crate::array::Vol3> {
+        let vg = &self.projector.vg;
+        anyhow::ensure!(buf.len() == vg.num_voxels(), "volume size mismatch");
+        Ok(crate::array::Vol3::from_vec(vg.nx, vg.ny, vg.nz, buf.to_vec()))
+    }
+
+    fn sino_from(&self, buf: &[f32]) -> Result<crate::array::Sino> {
+        let g = &self.projector.geom;
+        let want = g.nviews() * g.nrows() * g.ncols();
+        anyhow::ensure!(buf.len() == want, "sinogram size mismatch");
+        Ok(crate::array::Sino::from_vec(g.nviews(), g.nrows(), g.ncols(), buf.to_vec()))
+    }
+}
+
+impl Executor for NativeExecutor {
+    fn execute(&self, op: &str, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+        anyhow::ensure!(!inputs.is_empty(), "{op}: missing input");
+        match op {
+            "native_fp" => {
+                let vol = self.vol_from(inputs[0])?;
+                Ok(vec![self.projector.forward(&vol).data])
+            }
+            "native_bp" => {
+                let sino = self.sino_from(inputs[0])?;
+                Ok(vec![self.projector.back(&sino).data])
+            }
+            "native_fbp" => {
+                let sino = self.sino_from(inputs[0])?;
+                let vol = match &self.projector.geom {
+                    crate::geometry::Geometry::Parallel(g) => crate::recon::fbp_parallel(
+                        &self.projector.vg,
+                        g,
+                        &sino,
+                        crate::recon::Window::Hann,
+                        self.projector.threads,
+                    ),
+                    crate::geometry::Geometry::Fan(g) => crate::recon::fbp_fan(
+                        &self.projector.vg,
+                        g,
+                        &sino,
+                        crate::recon::Window::Hann,
+                        self.projector.threads,
+                    ),
+                    crate::geometry::Geometry::Cone(g) => crate::recon::fdk(
+                        &self.projector.vg,
+                        g,
+                        &sino,
+                        crate::recon::Window::Hann,
+                        self.projector.threads,
+                    ),
+                    crate::geometry::Geometry::Modular(_) => {
+                        anyhow::bail!("native_fbp unsupported for modular beams")
+                    }
+                };
+                Ok(vec![vol.data])
+            }
+            other => anyhow::bail!("unknown native op {other}"),
+        }
+    }
+
+    fn ops(&self) -> Vec<String> {
+        vec!["native_fp".into(), "native_bp".into(), "native_fbp".into()]
+    }
+}
+
+/// Routes each op to the first backend that advertises it — the standard
+/// deployment runs the PJRT artifact engine alongside the native fallback.
+pub struct Router {
+    backends: Vec<Arc<dyn Executor>>,
+}
+
+impl Router {
+    pub fn new(backends: Vec<Arc<dyn Executor>>) -> Router {
+        Router { backends }
+    }
+
+    fn route(&self, op: &str) -> Option<&Arc<dyn Executor>> {
+        self.backends.iter().find(|b| b.ops().iter().any(|o| o == op))
+    }
+}
+
+impl Executor for Router {
+    fn execute(&self, op: &str, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+        match self.route(op) {
+            Some(b) => b.execute(op, inputs),
+            None => anyhow::bail!("no backend provides op {op} (have: {:?})", self.ops()),
+        }
+    }
+
+    fn output_bytes_hint(&self, op: &str, input_bytes: usize) -> usize {
+        self.route(op).map(|b| b.output_bytes_hint(op, input_bytes)).unwrap_or(0)
+    }
+
+    fn ops(&self) -> Vec<String> {
+        let mut out = Vec::new();
+        for b in &self.backends {
+            out.extend(b.ops());
+        }
+        out.sort();
+        out.dedup();
+        out
+    }
+}
+
+struct Job {
+    ticket: u64,
+    client_id: u64,
+    tx: Sender<Response>,
+}
+
+struct Inner {
+    batcher: Mutex<Batcher>,
+    cv: Condvar,
+    exec: Arc<dyn Executor>,
+    budget: MemoryBudget,
+    telemetry: Telemetry,
+    pending: Mutex<HashMap<u64, Job>>,
+    shutdown: AtomicBool,
+    next_ticket: AtomicU64,
+}
+
+/// The coordinator: owns the queue and `workers` executor threads.
+pub struct Coordinator {
+    inner: Arc<Inner>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl Coordinator {
+    pub fn new(exec: Arc<dyn Executor>, policy: BatchPolicy, budget_bytes: usize, workers: usize) -> Coordinator {
+        let inner = Arc::new(Inner {
+            batcher: Mutex::new(Batcher::new(policy)),
+            cv: Condvar::new(),
+            exec,
+            budget: MemoryBudget::new(budget_bytes),
+            telemetry: Telemetry::new(),
+            pending: Mutex::new(HashMap::new()),
+            shutdown: AtomicBool::new(false),
+            next_ticket: AtomicU64::new(1),
+        });
+        let handles = (0..workers.max(1))
+            .map(|_| {
+                let inner = inner.clone();
+                std::thread::spawn(move || worker_loop(inner))
+            })
+            .collect();
+        Coordinator { inner, handles }
+    }
+
+    /// Submit a request; the response arrives on the returned channel.
+    pub fn submit(&self, req: Request) -> Receiver<Response> {
+        let (tx, rx) = channel();
+        let ticket = self.inner.next_ticket.fetch_add(1, Ordering::Relaxed);
+        let job = Job { ticket, client_id: req.id, tx };
+        let mut internal = req;
+        internal.id = ticket;
+        self.inner.pending.lock().unwrap().insert(ticket, job);
+        {
+            let mut b = self.inner.batcher.lock().unwrap();
+            b.push(internal);
+        }
+        self.inner.cv.notify_one();
+        rx
+    }
+
+    /// Submit and block for the response.
+    pub fn call(&self, req: Request) -> Response {
+        self.submit(req).recv().expect("coordinator dropped response")
+    }
+
+    pub fn telemetry(&self) -> &Telemetry {
+        &self.inner.telemetry
+    }
+
+    pub fn budget(&self) -> &MemoryBudget {
+        &self.inner.budget
+    }
+
+    pub fn queue_depth(&self) -> usize {
+        self.inner.batcher.lock().unwrap().len()
+    }
+
+    pub fn executor(&self) -> &Arc<dyn Executor> {
+        &self.inner.exec
+    }
+
+    /// Drain the queue and stop the workers.
+    pub fn shutdown(mut self) {
+        self.inner.shutdown.store(true, Ordering::SeqCst);
+        self.inner.cv.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        self.inner.shutdown.store(true, Ordering::SeqCst);
+        self.inner.cv.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(inner: Arc<Inner>) {
+    loop {
+        let batch = {
+            let mut b = inner.batcher.lock().unwrap();
+            loop {
+                // work-conserving: an idle worker takes the head batch
+                // immediately; batching still forms from backlog (perf
+                // pass — removed a fixed max_wait of idle latency)
+                if let Some(batch) = b.pop_now() {
+                    break Some(batch);
+                }
+                if inner.shutdown.load(Ordering::SeqCst) {
+                    break None;
+                }
+                let timeout = Duration::from_millis(1);
+                let (nb, _timed_out) = inner.cv.wait_timeout(b, timeout).unwrap();
+                b = nb;
+            }
+        };
+        let Some(batch) = batch else {
+            if inner.shutdown.load(Ordering::SeqCst) {
+                return;
+            }
+            continue;
+        };
+        inner.telemetry.record_batch(&batch.op, batch.requests.len());
+        for req in batch.requests {
+            let job = inner.pending.lock().unwrap().remove(&req.id);
+            let Some(job) = job else { continue };
+            debug_assert_eq!(job.ticket, req.id);
+            let in_bytes = req.input_bytes();
+            let out_bytes = inner.exec.output_bytes_hint(&req.op, in_bytes);
+            let bytes = budget::job_bytes(in_bytes, out_bytes);
+            let admitted = inner.budget.acquire(bytes);
+            let exec_start = Instant::now();
+            let result = if admitted {
+                let input_refs: Vec<&[f32]> = req.inputs.iter().map(|v| v.as_slice()).collect();
+                inner.exec.execute(&req.op, &input_refs)
+            } else {
+                Err(anyhow::anyhow!("job exceeds memory budget ({bytes} bytes)"))
+            };
+            let exec_us = exec_start.elapsed().as_micros() as u64;
+            if admitted {
+                inner.budget.release(bytes);
+            }
+            let latency_us = req.submitted.elapsed().as_micros() as u64;
+            let response = match result {
+                Ok(outputs) => Response {
+                    id: job.client_id,
+                    op: req.op.clone(),
+                    outputs,
+                    error: None,
+                    latency_us,
+                    exec_us,
+                },
+                Err(e) => Response {
+                    id: job.client_id,
+                    op: req.op.clone(),
+                    outputs: vec![],
+                    error: Some(format!("{e:#}")),
+                    latency_us,
+                    exec_us,
+                },
+            };
+            inner.telemetry.record(&req.op, latency_us, exec_us, response.ok());
+            let _ = job.tx.send(response);
+        }
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod test_support {
+    use super::*;
+
+    /// Deterministic mock backend: `echo` returns inputs ×2; `fail` errors;
+    /// `slow` sleeps then echoes.
+    pub struct MockExecutor;
+
+    impl Executor for MockExecutor {
+        fn execute(&self, op: &str, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+            match op {
+                "echo" => Ok(inputs.iter().map(|b| b.iter().map(|&x| 2.0 * x).collect()).collect()),
+                "slow" => {
+                    std::thread::sleep(Duration::from_millis(5));
+                    Ok(inputs.iter().map(|b| b.to_vec()).collect())
+                }
+                "fail" => anyhow::bail!("mock failure"),
+                other => anyhow::bail!("unknown op {other}"),
+            }
+        }
+
+        fn ops(&self) -> Vec<String> {
+            vec!["echo".into(), "slow".into(), "fail".into()]
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::test_support::MockExecutor;
+    use super::*;
+
+    fn coord(workers: usize) -> Coordinator {
+        Coordinator::new(Arc::new(MockExecutor), BatchPolicy::default(), 1 << 20, workers)
+    }
+
+    #[test]
+    fn echo_roundtrip() {
+        let c = coord(2);
+        let resp = c.call(Request::new(42, "echo", vec![vec![1.0, 2.0]]));
+        assert_eq!(resp.id, 42);
+        assert!(resp.ok());
+        assert_eq!(resp.outputs, vec![vec![2.0, 4.0]]);
+        assert!(resp.latency_us >= resp.exec_us);
+    }
+
+    #[test]
+    fn errors_are_reported_not_dropped() {
+        let c = coord(1);
+        let resp = c.call(Request::new(1, "fail", vec![vec![1.0]]));
+        assert!(!resp.ok());
+        assert!(resp.error.as_ref().unwrap().contains("mock failure"));
+        let resp = c.call(Request::new(2, "nosuch", vec![]));
+        assert!(!resp.ok());
+    }
+
+    #[test]
+    fn many_concurrent_requests_all_complete() {
+        let c = Arc::new(coord(3));
+        let mut rxs = Vec::new();
+        for i in 0..200u64 {
+            let op = if i % 3 == 0 { "slow" } else { "echo" };
+            rxs.push((i, c.submit(Request::new(i, op, vec![vec![i as f32]]))));
+        }
+        for (i, rx) in rxs {
+            let r = rx.recv_timeout(Duration::from_secs(30)).expect("response");
+            assert_eq!(r.id, i);
+            assert!(r.ok(), "{i}: {:?}", r.error);
+        }
+        let snap = c.telemetry().snapshot();
+        let total: u64 = snap.values().map(|s| s.count).sum();
+        assert_eq!(total, 200);
+    }
+
+    #[test]
+    fn duplicate_client_ids_are_fine() {
+        // tickets are internal; two requests with the same client id both
+        // get their own response
+        let c = coord(2);
+        let rx1 = c.submit(Request::new(7, "echo", vec![vec![1.0]]));
+        let rx2 = c.submit(Request::new(7, "echo", vec![vec![2.0]]));
+        let r1 = rx1.recv().unwrap();
+        let r2 = rx2.recv().unwrap();
+        assert_eq!(r1.id, 7);
+        assert_eq!(r2.id, 7);
+        let mut firsts = vec![r1.outputs[0][0], r2.outputs[0][0]];
+        firsts.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert_eq!(firsts, vec![2.0, 4.0]);
+    }
+
+    #[test]
+    fn oversized_job_rejected_gracefully() {
+        let tiny = Coordinator::new(Arc::new(MockExecutor), BatchPolicy::default(), 64, 1);
+        let resp = tiny.call(Request::new(1, "echo", vec![vec![0.0; 1000]]));
+        assert!(!resp.ok());
+        assert!(resp.error.as_ref().unwrap().contains("memory budget"));
+    }
+
+    #[test]
+    fn batching_recorded_in_telemetry() {
+        let c = Coordinator::new(
+            Arc::new(MockExecutor),
+            BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(20) },
+            1 << 20,
+            1,
+        );
+        let rxs: Vec<_> = (0..8).map(|i| c.submit(Request::new(i, "echo", vec![vec![1.0]]))).collect();
+        for rx in rxs {
+            rx.recv().unwrap();
+        }
+        let snap = c.telemetry().snapshot();
+        assert!(snap["echo"].mean_batch() > 1.0, "batches formed: {:?}", snap["echo"]);
+    }
+
+    #[test]
+    fn shutdown_drains_queue() {
+        let c = coord(1);
+        let rxs: Vec<_> = (0..20).map(|i| c.submit(Request::new(i, "echo", vec![vec![1.0]]))).collect();
+        c.shutdown();
+        for rx in rxs {
+            assert!(rx.try_recv().is_ok() || rx.recv_timeout(Duration::from_secs(1)).is_ok());
+        }
+    }
+}

@@ -1,0 +1,130 @@
+//! Request/response types for the projection service.
+//!
+//! A request names an operation (an artifact entry point like `fp_sf`, or
+//! a native-projector op like `native_fp`) and carries its f32 input
+//! buffers. Requests arrive over the wire as line-delimited JSON (see
+//! [`super::server`]) or are constructed in-process by the examples and
+//! benches.
+
+use crate::util::json::Json;
+
+/// A unit of work submitted to the coordinator.
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub id: u64,
+    /// Operation name: artifact entry (`fp_sf`, `bp_sf`, `fbp`,
+    /// `dc_refine`, `complete_sinogram`, `prior_denoise`) or `native_*`.
+    pub op: String,
+    pub inputs: Vec<Vec<f32>>,
+    /// Submission timestamp (set by the coordinator).
+    pub submitted: std::time::Instant,
+}
+
+impl Request {
+    pub fn new(id: u64, op: impl Into<String>, inputs: Vec<Vec<f32>>) -> Request {
+        Request { id, op: op.into(), inputs, submitted: std::time::Instant::now() }
+    }
+
+    /// Total payload bytes (inputs only).
+    pub fn input_bytes(&self) -> usize {
+        self.inputs.iter().map(|b| b.len() * 4).sum()
+    }
+}
+
+/// The outcome of one request.
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub id: u64,
+    pub op: String,
+    pub outputs: Vec<Vec<f32>>,
+    pub error: Option<String>,
+    /// Total time from submission to completion.
+    pub latency_us: u64,
+    /// Time spent executing (excludes queueing).
+    pub exec_us: u64,
+}
+
+impl Response {
+    pub fn ok(&self) -> bool {
+        self.error.is_none()
+    }
+}
+
+/// Parse a request from its wire JSON (`{"id":1,"op":"fp_sf",
+/// "inputs":[[...]]}`).
+pub fn request_from_json(v: &Json) -> Result<Request, String> {
+    let id = v.get_f64("id").ok_or("missing id")? as u64;
+    let op = v.get_str("op").ok_or("missing op")?.to_string();
+    let inputs_json = v.get("inputs").and_then(|a| a.as_arr()).ok_or("missing inputs")?;
+    let mut inputs = Vec::with_capacity(inputs_json.len());
+    for arr in inputs_json {
+        let vals = arr.as_arr().ok_or("input must be an array")?;
+        let buf: Option<Vec<f32>> = vals.iter().map(|x| x.as_f64().map(|f| f as f32)).collect();
+        inputs.push(buf.ok_or("non-numeric input element")?);
+    }
+    Ok(Request::new(id, op, inputs))
+}
+
+/// Serialize a response to wire JSON.
+pub fn response_to_json(r: &Response) -> Json {
+    let mut fields = vec![
+        ("id", Json::Num(r.id as f64)),
+        ("op", Json::Str(r.op.clone())),
+        ("latency_us", Json::Num(r.latency_us as f64)),
+        ("exec_us", Json::Num(r.exec_us as f64)),
+    ];
+    if let Some(e) = &r.error {
+        fields.push(("error", Json::Str(e.clone())));
+    } else {
+        fields.push((
+            "outputs",
+            Json::Arr(
+                r.outputs
+                    .iter()
+                    .map(|o| Json::Arr(o.iter().map(|&x| Json::Num(x as f64)).collect()))
+                    .collect(),
+            ),
+        ));
+    }
+    Json::obj(fields)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::parse;
+
+    #[test]
+    fn request_roundtrip() {
+        let j = parse(r#"{"id": 7, "op": "fp_sf", "inputs": [[1.0, 2.5], [3.0]]}"#).unwrap();
+        let r = request_from_json(&j).unwrap();
+        assert_eq!(r.id, 7);
+        assert_eq!(r.op, "fp_sf");
+        assert_eq!(r.inputs, vec![vec![1.0, 2.5], vec![3.0]]);
+        assert_eq!(r.input_bytes(), 12);
+    }
+
+    #[test]
+    fn request_rejects_malformed() {
+        for s in [
+            r#"{"op": "x", "inputs": []}"#,
+            r#"{"id": 1, "inputs": []}"#,
+            r#"{"id": 1, "op": "x"}"#,
+            r#"{"id": 1, "op": "x", "inputs": [["a"]]}"#,
+        ] {
+            assert!(request_from_json(&parse(s).unwrap()).is_err(), "{s}");
+        }
+    }
+
+    #[test]
+    fn response_serializes_error_and_ok() {
+        let ok = Response { id: 1, op: "fbp".into(), outputs: vec![vec![1.5]], error: None, latency_us: 10, exec_us: 5 };
+        let s = response_to_json(&ok).to_string();
+        assert!(s.contains("\"outputs\""));
+        assert!(!s.contains("\"error\""));
+        let err = Response { id: 2, op: "fbp".into(), outputs: vec![], error: Some("bad".into()), latency_us: 1, exec_us: 0 };
+        let s = response_to_json(&err).to_string();
+        assert!(s.contains("\"error\""));
+        assert!(!s.contains("\"outputs\""));
+    }
+}

@@ -1,0 +1,236 @@
+//! Line-delimited JSON TCP server over the coordinator.
+//!
+//! Protocol (one JSON document per line):
+//!   → {"id": 1, "op": "fp_sf", "inputs": [[...f32...], ...]}
+//!   ← {"id": 1, "op": "fp_sf", "outputs": [[...]], "latency_us": ..}
+//!   → {"id": 2, "op": "__stats"}          — telemetry snapshot
+//!   → {"id": 3, "op": "__ops"}            — available operations
+//!
+//! Built on std::net + threads (the vendored crate set has no tokio; the
+//! architecture is identical: accept loop → per-connection reader →
+//! shared coordinator → responses written back on the same socket).
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use super::request::{request_from_json, response_to_json};
+use super::Coordinator;
+use crate::util::json::{parse, Json};
+
+/// A running server; dropping stops accepting (existing connections finish).
+pub struct Server {
+    pub addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept_handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Server {
+    /// Bind `addr` (e.g. "127.0.0.1:0") and serve `coordinator` until
+    /// dropped.
+    pub fn start(addr: &str, coordinator: Arc<Coordinator>) -> Result<Server> {
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let handle = std::thread::spawn(move || {
+            loop {
+                if stop2.load(Ordering::SeqCst) {
+                    return;
+                }
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        let coord = coordinator.clone();
+                        std::thread::spawn(move || {
+                            let _ = handle_conn(stream, coord);
+                        });
+                    }
+                    Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(std::time::Duration::from_millis(5));
+                    }
+                    Err(_) => return,
+                }
+            }
+        });
+        Ok(Server { addr: local, stop, accept_handle: Some(handle) })
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.accept_handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn handle_conn(stream: TcpStream, coord: Arc<Coordinator>) -> Result<()> {
+    let mut writer = stream.try_clone()?;
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let reply = match parse(&line) {
+            Err(e) => Json::obj(vec![("error", Json::Str(format!("bad json: {e}")))]),
+            Ok(doc) => {
+                let op = doc.get_str("op").unwrap_or("");
+                match op {
+                    "__stats" => Json::obj(vec![
+                        ("id", Json::Num(doc.get_f64("id").unwrap_or(0.0))),
+                        ("stats", coord.telemetry().to_json()),
+                        ("queue_depth", Json::Num(coord.queue_depth() as f64)),
+                        ("budget_in_flight", Json::Num(coord.budget().in_flight() as f64)),
+                    ]),
+                    "__ops" => Json::obj(vec![
+                        ("id", Json::Num(doc.get_f64("id").unwrap_or(0.0))),
+                        (
+                            "ops",
+                            Json::Arr(
+                                coord.executor().ops().into_iter().map(Json::Str).collect(),
+                            ),
+                        ),
+                    ]),
+                    _ => match request_from_json(&doc) {
+                        Err(e) => Json::obj(vec![("error", Json::Str(e))]),
+                        Ok(req) => response_to_json(&coord.call(req)),
+                    },
+                }
+            }
+        };
+        writeln!(writer, "{reply}")?;
+    }
+    Ok(())
+}
+
+/// Minimal blocking client for examples/tests.
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+    next_id: u64,
+}
+
+impl Client {
+    pub fn connect(addr: &std::net::SocketAddr) -> Result<Client> {
+        let stream = TcpStream::connect(addr)?;
+        let writer = stream.try_clone()?;
+        Ok(Client { reader: BufReader::new(stream), writer, next_id: 1 })
+    }
+
+    /// Send one op and wait for its reply.
+    pub fn call(&mut self, op: &str, inputs: &[&[f32]]) -> Result<Json> {
+        let id = self.next_id;
+        self.next_id += 1;
+        let doc = Json::obj(vec![
+            ("id", Json::Num(id as f64)),
+            ("op", Json::Str(op.to_string())),
+            (
+                "inputs",
+                Json::Arr(
+                    inputs
+                        .iter()
+                        .map(|b| Json::Arr(b.iter().map(|&x| Json::Num(x as f64)).collect()))
+                        .collect(),
+                ),
+            ),
+        ]);
+        writeln!(self.writer, "{doc}")?;
+        let mut line = String::new();
+        self.reader.read_line(&mut line)?;
+        parse(&line).map_err(|e| anyhow::anyhow!("bad reply: {e}"))
+    }
+
+    /// Fetch the telemetry snapshot.
+    pub fn stats(&mut self) -> Result<Json> {
+        writeln!(self.writer, r#"{{"id": 0, "op": "__stats"}}"#)?;
+        let mut line = String::new();
+        self.reader.read_line(&mut line)?;
+        parse(&line).map_err(|e| anyhow::anyhow!("bad reply: {e}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::test_support::MockExecutor;
+    use super::super::{BatchPolicy, Coordinator};
+    use super::*;
+
+    fn start_mock() -> (Server, Arc<Coordinator>) {
+        let coord = Arc::new(Coordinator::new(
+            Arc::new(MockExecutor),
+            BatchPolicy::default(),
+            1 << 20,
+            2,
+        ));
+        let server = Server::start("127.0.0.1:0", coord.clone()).unwrap();
+        (server, coord)
+    }
+
+    #[test]
+    fn tcp_roundtrip() {
+        let (server, _coord) = start_mock();
+        let mut client = Client::connect(&server.addr).unwrap();
+        let reply = client.call("echo", &[&[1.0, 3.0]]).unwrap();
+        let outs = reply.get("outputs").unwrap().as_arr().unwrap();
+        let first = outs[0].as_arr().unwrap();
+        assert_eq!(first[0].as_f64(), Some(2.0));
+        assert_eq!(first[1].as_f64(), Some(6.0));
+    }
+
+    #[test]
+    fn error_propagates() {
+        let (server, _coord) = start_mock();
+        let mut client = Client::connect(&server.addr).unwrap();
+        let reply = client.call("fail", &[&[1.0]]).unwrap();
+        assert!(reply.get_str("error").unwrap().contains("mock failure"));
+    }
+
+    #[test]
+    fn stats_endpoint() {
+        let (server, _coord) = start_mock();
+        let mut client = Client::connect(&server.addr).unwrap();
+        client.call("echo", &[&[1.0]]).unwrap();
+        let stats = client.stats().unwrap();
+        assert_eq!(
+            stats.get("stats").unwrap().get("echo").unwrap().get_f64("count"),
+            Some(1.0)
+        );
+    }
+
+    #[test]
+    fn multiple_clients() {
+        let (server, _coord) = start_mock();
+        let addr = server.addr;
+        let mut handles = Vec::new();
+        for t in 0..4 {
+            handles.push(std::thread::spawn(move || {
+                let mut client = Client::connect(&addr).unwrap();
+                for i in 0..10 {
+                    let r = client.call("echo", &[&[t as f32 + i as f32]]).unwrap();
+                    assert!(r.get("outputs").is_some());
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn malformed_line_gets_error_reply() {
+        let (server, _coord) = start_mock();
+        let stream = TcpStream::connect(server.addr).unwrap();
+        let mut writer = stream.try_clone().unwrap();
+        let mut reader = BufReader::new(stream);
+        writeln!(writer, "this is not json").unwrap();
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.contains("bad json"));
+    }
+}

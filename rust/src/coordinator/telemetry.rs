@@ -1,0 +1,140 @@
+//! Coordinator telemetry: per-op counters and latency aggregates, dumped
+//! as JSON by the `serve` CLI and read by the coordinator bench.
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+use crate::util::json::Json;
+
+#[derive(Clone, Debug, Default)]
+pub struct OpStats {
+    pub count: u64,
+    pub errors: u64,
+    pub total_latency_us: u64,
+    pub total_exec_us: u64,
+    pub max_latency_us: u64,
+    pub batches: u64,
+    pub batched_requests: u64,
+}
+
+impl OpStats {
+    pub fn mean_latency_us(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.total_latency_us as f64 / self.count as f64
+        }
+    }
+
+    pub fn mean_batch(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.batched_requests as f64 / self.batches as f64
+        }
+    }
+}
+
+/// Thread-safe telemetry sink.
+#[derive(Default)]
+pub struct Telemetry {
+    inner: Mutex<BTreeMap<String, OpStats>>,
+}
+
+impl Telemetry {
+    pub fn new() -> Telemetry {
+        Telemetry::default()
+    }
+
+    pub fn record(&self, op: &str, latency_us: u64, exec_us: u64, ok: bool) {
+        let mut map = self.inner.lock().unwrap();
+        let s = map.entry(op.to_string()).or_default();
+        s.count += 1;
+        if !ok {
+            s.errors += 1;
+        }
+        s.total_latency_us += latency_us;
+        s.total_exec_us += exec_us;
+        s.max_latency_us = s.max_latency_us.max(latency_us);
+    }
+
+    pub fn record_batch(&self, op: &str, size: usize) {
+        let mut map = self.inner.lock().unwrap();
+        let s = map.entry(op.to_string()).or_default();
+        s.batches += 1;
+        s.batched_requests += size as u64;
+    }
+
+    pub fn snapshot(&self) -> BTreeMap<String, OpStats> {
+        self.inner.lock().unwrap().clone()
+    }
+
+    pub fn to_json(&self) -> Json {
+        let snap = self.snapshot();
+        Json::Obj(
+            snap.into_iter()
+                .map(|(op, s)| {
+                    (
+                        op,
+                        Json::obj(vec![
+                            ("count", Json::Num(s.count as f64)),
+                            ("errors", Json::Num(s.errors as f64)),
+                            ("mean_latency_us", Json::Num(s.mean_latency_us())),
+                            ("max_latency_us", Json::Num(s.max_latency_us as f64)),
+                            ("mean_exec_us", Json::Num(if s.count > 0 { s.total_exec_us as f64 / s.count as f64 } else { 0.0 })),
+                            ("mean_batch", Json::Num(s.mean_batch())),
+                        ]),
+                    )
+                })
+                .collect(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_aggregates() {
+        let t = Telemetry::new();
+        t.record("fp", 100, 80, true);
+        t.record("fp", 300, 250, true);
+        t.record("fp", 50, 40, false);
+        t.record_batch("fp", 3);
+        let snap = t.snapshot();
+        let s = &snap["fp"];
+        assert_eq!(s.count, 3);
+        assert_eq!(s.errors, 1);
+        assert_eq!(s.max_latency_us, 300);
+        assert!((s.mean_latency_us() - 150.0).abs() < 1e-9);
+        assert!((s.mean_batch() - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn json_snapshot_parses() {
+        let t = Telemetry::new();
+        t.record("bp", 10, 5, true);
+        let j = t.to_json().to_string();
+        let back = crate::util::json::parse(&j).unwrap();
+        assert_eq!(back.get("bp").unwrap().get_f64("count"), Some(1.0));
+    }
+
+    #[test]
+    fn concurrent_records() {
+        let t = std::sync::Arc::new(Telemetry::new());
+        let mut hs = Vec::new();
+        for _ in 0..4 {
+            let t = t.clone();
+            hs.push(std::thread::spawn(move || {
+                for _ in 0..100 {
+                    t.record("x", 1, 1, true);
+                }
+            }));
+        }
+        for h in hs {
+            h.join().unwrap();
+        }
+        assert_eq!(t.snapshot()["x"].count, 400);
+    }
+}

@@ -1,0 +1,213 @@
+//! Axial cone-beam geometry, flat or curved detector (paper §2.1).
+//!
+//! Source on a circle of radius `sod` in the `z = 0` plane; detector
+//! opposite at distance `sdd` from the source. For the **flat** detector,
+//! pixel `(row, col)` sits at `center + u·û + v·v̂` with `û` the in-plane
+//! tangent and `v̂ = ẑ`. For the **curved** detector (third-generation
+//! medical CT), columns are equi-angular: `u` is interpreted as arc length
+//! `sdd·α` along the cylinder of radius `sdd` centered on the source.
+
+use super::{angles_deg, Ray};
+
+/// Flat (planar) or curved (cylindrical, source-centered) detector.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DetectorShape {
+    Flat,
+    Curved,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct ConeBeam {
+    pub nrows: usize,
+    pub ncols: usize,
+    /// Detector pitch (mm): `du` across columns (arc length if curved),
+    /// `dv` across rows.
+    pub du: f64,
+    pub dv: f64,
+    /// Detector center offsets (mm) — the paper's detector shifts.
+    pub cu: f64,
+    pub cv: f64,
+    /// Source-to-object (rotation axis) distance, mm.
+    pub sod: f64,
+    /// Source-to-detector distance, mm.
+    pub sdd: f64,
+    pub angles: Vec<f64>,
+    pub shape: DetectorShape,
+}
+
+impl ConeBeam {
+    /// Standard circular cone-beam scan over 360° with a flat detector.
+    pub fn standard(
+        nviews: usize,
+        nrows: usize,
+        ncols: usize,
+        du: f64,
+        dv: f64,
+        sod: f64,
+        sdd: f64,
+    ) -> ConeBeam {
+        ConeBeam {
+            nrows,
+            ncols,
+            du,
+            dv,
+            cu: 0.0,
+            cv: 0.0,
+            sod,
+            sdd,
+            angles: angles_deg(nviews, 0.0, 360.0),
+            shape: DetectorShape::Flat,
+        }
+    }
+
+    #[inline]
+    pub fn u(&self, col: usize) -> f64 {
+        (col as f64 - (self.ncols as f64 - 1.0) / 2.0) * self.du + self.cu
+    }
+
+    #[inline]
+    pub fn v(&self, row: usize) -> f64 {
+        (row as f64 - (self.nrows as f64 - 1.0) / 2.0) * self.dv + self.cv
+    }
+
+    #[inline]
+    pub fn col_of_u(&self, u: f64) -> f64 {
+        (u - self.cu) / self.du + (self.ncols as f64 - 1.0) / 2.0
+    }
+
+    #[inline]
+    pub fn row_of_v(&self, v: f64) -> f64 {
+        (v - self.cv) / self.dv + (self.nrows as f64 - 1.0) / 2.0
+    }
+
+    /// Source position at view `view`.
+    #[inline]
+    pub fn source(&self, view: usize) -> [f64; 3] {
+        let (s, c) = self.angles[view].sin_cos();
+        [self.sod * c, self.sod * s, 0.0]
+    }
+
+    /// World position of detector pixel `(row, col)` at view `view`.
+    pub fn det_pos(&self, view: usize, row: usize, col: usize) -> [f64; 3] {
+        self.det_pos_f(view, row as f64, col as f64)
+    }
+
+    /// Detector position at *fractional* pixel coordinates.
+    pub fn det_pos_f(&self, view: usize, row_f: f64, col_f: f64) -> [f64; 3] {
+        let (sphi, cphi) = self.angles[view].sin_cos();
+        let u = (col_f - (self.ncols as f64 - 1.0) / 2.0) * self.du + self.cu;
+        let v = (row_f - (self.nrows as f64 - 1.0) / 2.0) * self.dv + self.cv;
+        match self.shape {
+            DetectorShape::Flat => {
+                // center = source − sdd·(cos φ, sin φ, 0); û = (−sin φ, cos φ, 0); v̂ = ẑ
+                [
+                    (self.sod - self.sdd) * cphi - u * sphi,
+                    (self.sod - self.sdd) * sphi + u * cphi,
+                    v,
+                ]
+            }
+            DetectorShape::Curved => {
+                // equi-angular columns on the cylinder of radius sdd around
+                // the source: α = u / sdd, rotated about z at the source
+                let alpha = u / self.sdd;
+                let (sa, ca) = alpha.sin_cos();
+                // central-ray direction from source toward rotation center
+                let dx = -cphi;
+                let dy = -sphi;
+                // rotate (dx, dy) by α in-plane
+                let rx = dx * ca - dy * sa;
+                let ry = dx * sa + dy * ca;
+                [
+                    self.sod * cphi + self.sdd * rx,
+                    self.sod * sphi + self.sdd * ry,
+                    v,
+                ]
+            }
+        }
+    }
+
+    /// Ray from the source through pixel `(row, col)`.
+    pub fn ray(&self, view: usize, row: usize, col: usize) -> Ray {
+        self.ray_at(view, row as f64, col as f64)
+    }
+
+    /// Ray at *fractional* pixel coordinates (bin-integrated projections).
+    pub fn ray_at(&self, view: usize, row_f: f64, col_f: f64) -> Ray {
+        let s = self.source(view);
+        let d = self.det_pos_f(view, row_f, col_f);
+        Ray::new(s, [d[0] - s[0], d[1] - s[1], d[2] - s[2]])
+    }
+
+    /// Magnification at the rotation axis.
+    pub fn magnification(&self) -> f64 {
+        self.sdd / self.sod
+    }
+
+    /// Half cone angle (radians) subtended by the detector rows.
+    pub fn half_cone_angle(&self) -> f64 {
+        let vmax = (self.nrows as f64 / 2.0) * self.dv + self.cv.abs();
+        (vmax / self.sdd).atan()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flat_central_pixel_opposite_source() {
+        let g = ConeBeam::standard(4, 9, 9, 1.0, 1.0, 500.0, 1000.0);
+        let s = g.source(0);
+        let d = g.det_pos(0, 4, 4);
+        assert_eq!(s, [500.0, 0.0, 0.0]);
+        assert!((d[0] + 500.0).abs() < 1e-9);
+        assert!(d[1].abs() < 1e-9 && d[2].abs() < 1e-9);
+    }
+
+    #[test]
+    fn curved_central_column_matches_flat() {
+        let mut g = ConeBeam::standard(8, 5, 11, 1.0, 1.0, 400.0, 900.0);
+        let flat = g.det_pos(3, 2, 5);
+        g.shape = DetectorShape::Curved;
+        let curved = g.det_pos(3, 2, 5);
+        for a in 0..3 {
+            assert!((flat[a] - curved[a]).abs() < 1e-9, "axis {a}");
+        }
+    }
+
+    #[test]
+    fn curved_columns_equidistant_from_source() {
+        let mut g = ConeBeam::standard(2, 3, 21, 2.0, 1.0, 300.0, 700.0);
+        g.shape = DetectorShape::Curved;
+        let s = g.source(1);
+        for col in 0..21 {
+            let d = g.det_pos(1, 1, col);
+            let dist = ((d[0] - s[0]).powi(2) + (d[1] - s[1]).powi(2)).sqrt();
+            assert!((dist - 700.0).abs() < 1e-9, "col {col}");
+        }
+    }
+
+    #[test]
+    fn ray_passes_through_pixel() {
+        let g = ConeBeam::standard(6, 7, 7, 1.5, 1.5, 450.0, 950.0);
+        let r = g.ray(2, 1, 6);
+        let d = g.det_pos(2, 1, 6);
+        // the pixel is at t = |d - source|
+        let t = ((d[0] - r.origin[0]).powi(2)
+            + (d[1] - r.origin[1]).powi(2)
+            + (d[2] - r.origin[2]).powi(2))
+        .sqrt();
+        let p = r.point(t);
+        for a in 0..3 {
+            assert!((p[a] - d[a]).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn cone_angle_sane() {
+        let g = ConeBeam::standard(1, 64, 64, 1.0, 1.0, 500.0, 1000.0);
+        let half = g.half_cone_angle();
+        assert!(half > 0.0 && half < 0.1);
+        assert!((half - (32.0f64 / 1000.0).atan()).abs() < 1e-12);
+    }
+}

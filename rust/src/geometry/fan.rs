@@ -1,0 +1,128 @@
+//! Fan-beam geometry (2-D divergent; the paper's "future release" type,
+//! included here for completeness and as the 2-D section of cone-beam).
+//!
+//! Source on a circle of radius `sod` (source-to-object distance, mm), flat
+//! detector at distance `sdd` (source-to-detector, mm) perpendicular to the
+//! central ray. At view angle `φ` the source is
+//! `s(φ) = sod·(cos φ, sin φ)` and the detector line passes through
+//! `s − sdd·(cos φ, sin φ)` with axis `û = (−sin φ, cos φ)`.
+
+use super::{angles_deg, Ray};
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct FanBeam {
+    pub ncols: usize,
+    /// Detector pixel pitch (mm).
+    pub du: f64,
+    /// Detector center offset (mm).
+    pub cu: f64,
+    /// Source-to-object (rotation center) distance, mm.
+    pub sod: f64,
+    /// Source-to-detector distance, mm.
+    pub sdd: f64,
+    pub angles: Vec<f64>,
+}
+
+impl FanBeam {
+    /// Standard fan geometry over 360°.
+    pub fn standard(nviews: usize, ncols: usize, du: f64, sod: f64, sdd: f64) -> FanBeam {
+        FanBeam { ncols, du, cu: 0.0, sod, sdd, angles: angles_deg(nviews, 0.0, 360.0) }
+    }
+
+    #[inline]
+    pub fn u(&self, col: usize) -> f64 {
+        (col as f64 - (self.ncols as f64 - 1.0) / 2.0) * self.du + self.cu
+    }
+
+    /// Continuous column index for detector coordinate `u` (inverse of
+    /// [`Self::u`]) — used by the fan-beam FBP backprojector.
+    #[inline]
+    pub fn col_of_u(&self, u: f64) -> f64 {
+        (u - self.cu) / self.du + (self.ncols as f64 - 1.0) / 2.0
+    }
+
+    /// Source position at view `view`.
+    #[inline]
+    pub fn source(&self, view: usize) -> [f64; 2] {
+        let (s, c) = self.angles[view].sin_cos();
+        [self.sod * c, self.sod * s]
+    }
+
+    /// World position of detector column `col` at view `view`.
+    pub fn det_pos(&self, view: usize, col: usize) -> [f64; 2] {
+        let (s, c) = self.angles[view].sin_cos();
+        let u = self.u(col);
+        // detector center = source − sdd·(cos φ, sin φ); u axis = (−sin φ, cos φ)
+        [
+            self.sod * c - self.sdd * c - u * s,
+            self.sod * s - self.sdd * s + u * c,
+        ]
+    }
+
+    /// Ray from the source through detector column `col`.
+    pub fn ray(&self, view: usize, col: usize) -> Ray {
+        self.ray_at(view, col as f64)
+    }
+
+    /// Ray at a *fractional* detector column (bin-integrated projections).
+    pub fn ray_at(&self, view: usize, col_f: f64) -> Ray {
+        let (s, c) = self.angles[view].sin_cos();
+        let u = (col_f - (self.ncols as f64 - 1.0) / 2.0) * self.du + self.cu;
+        let sp = [self.sod * c, self.sod * s];
+        let dp = [
+            self.sod * c - self.sdd * c - u * s,
+            self.sod * s - self.sdd * s + u * c,
+        ];
+        Ray::new([sp[0], sp[1], 0.0], [dp[0] - sp[0], dp[1] - sp[1], 0.0])
+    }
+
+    /// Fan magnification at the rotation center (`sdd / sod`).
+    pub fn magnification(&self) -> f64 {
+        self.sdd / self.sod
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn source_on_circle() {
+        let g = FanBeam::standard(8, 16, 1.0, 500.0, 1000.0);
+        for v in 0..8 {
+            let s = g.source(v);
+            let r = (s[0] * s[0] + s[1] * s[1]).sqrt();
+            assert!((r - 500.0).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn central_ray_hits_rotation_center() {
+        // odd ncols + zero shift → center column passes through origin
+        let g = FanBeam { ncols: 17, du: 1.0, cu: 0.0, sod: 400.0, sdd: 800.0, angles: angles_deg(6, 0.0, 360.0) };
+        for v in 0..6 {
+            let r = g.ray(v, 8);
+            // distance from origin to the ray
+            let ox = -r.origin[0];
+            let oy = -r.origin[1];
+            let cross = (ox * r.dir[1] - oy * r.dir[0]).abs();
+            assert!(cross < 1e-9, "view {v}: {cross}");
+        }
+    }
+
+    #[test]
+    fn detector_behind_center() {
+        let g = FanBeam::standard(4, 9, 1.0, 300.0, 700.0);
+        let s = g.source(0); // (300, 0)
+        let d = g.det_pos(0, 4); // central column
+        assert!((d[0] - (300.0 - 700.0)).abs() < 1e-9);
+        assert!(d[1].abs() < 1e-9);
+        assert_eq!(s, [300.0, 0.0]);
+    }
+
+    #[test]
+    fn magnification() {
+        let g = FanBeam::standard(1, 2, 1.0, 250.0, 1000.0);
+        assert_eq!(g.magnification(), 4.0);
+    }
+}

@@ -1,0 +1,267 @@
+//! CT scanner geometry descriptions — quantitative, in mm, like LEAP.
+//!
+//! The paper supports three 3-D geometry types — parallel-beam, axial
+//! cone-beam (flat or curved detector) and "modular" beam (arbitrary
+//! source/detector pose per view) — plus flexible specification: arbitrary
+//! detector shifts and non-equispaced projection angles. Fan-beam (the
+//! paper's "future release") is included as well.
+//!
+//! ## Conventions
+//!
+//! * World coordinates are mm. The rotation axis is `z`.
+//! * Voxel `(i, j, k)` center: `x_i = (i − (nx−1)/2)·vx + cx`, etc.
+//! * Detector column `c` coordinate: `u_c = (c − (ncols−1)/2)·du + cu`
+//!   (so `cu`/`cv` are the paper's "horizontal/vertical detector shift").
+//! * View angle `φ`: the parallel-beam ray direction is
+//!   `d(φ) = (−sin φ, cos φ, 0)` and the detector axis is
+//!   `û(φ) = (cos φ, sin φ, 0)`; for divergent beams the source sits at
+//!   `s(φ) = sod·(cos φ, sin φ, 0)` with the detector opposite.
+//! * Projections are line integrals: for attenuation in mm⁻¹ and lengths
+//!   in mm the sinogram is dimensionless, and values are invariant under
+//!   voxel-size refinement (verified by tests in `projector`).
+
+pub mod parallel;
+pub mod fan;
+pub mod cone;
+pub mod modular;
+pub mod helical;
+pub mod config;
+
+pub use cone::{ConeBeam, DetectorShape};
+pub use fan::FanBeam;
+pub use helical::HelicalCone;
+pub use modular::{ModularBeam, ModularView};
+pub use parallel::ParallelBeam;
+
+/// Description of the reconstruction volume grid (sizes in mm).
+#[derive(Clone, Debug, PartialEq)]
+pub struct VolumeGeometry {
+    pub nx: usize,
+    pub ny: usize,
+    pub nz: usize,
+    /// Voxel pitch in mm along x/y/z.
+    pub vx: f64,
+    pub vy: f64,
+    pub vz: f64,
+    /// Volume center offset in mm (paper: "volume center position").
+    pub cx: f64,
+    pub cy: f64,
+    pub cz: f64,
+}
+
+impl VolumeGeometry {
+    /// Cube of `n³` voxels with isotropic `voxel` mm pitch, centered at the
+    /// origin.
+    pub fn cube(n: usize, voxel: f64) -> VolumeGeometry {
+        VolumeGeometry { nx: n, ny: n, nz: n, vx: voxel, vy: voxel, vz: voxel, cx: 0.0, cy: 0.0, cz: 0.0 }
+    }
+
+    /// Single-slice (2-D) grid of `nx × ny` voxels.
+    pub fn slice2d(nx: usize, ny: usize, voxel: f64) -> VolumeGeometry {
+        VolumeGeometry { nx, ny, nz: 1, vx: voxel, vy: voxel, vz: voxel, cx: 0.0, cy: 0.0, cz: 0.0 }
+    }
+
+    /// World x of voxel column `i`.
+    #[inline]
+    pub fn x(&self, i: usize) -> f64 {
+        (i as f64 - (self.nx as f64 - 1.0) / 2.0) * self.vx + self.cx
+    }
+    #[inline]
+    pub fn y(&self, j: usize) -> f64 {
+        (j as f64 - (self.ny as f64 - 1.0) / 2.0) * self.vy + self.cy
+    }
+    #[inline]
+    pub fn z(&self, k: usize) -> f64 {
+        (k as f64 - (self.nz as f64 - 1.0) / 2.0) * self.vz + self.cz
+    }
+
+    /// Inverse of [`Self::x`]: continuous voxel index for world x.
+    #[inline]
+    pub fn ix(&self, x: f64) -> f64 {
+        (x - self.cx) / self.vx + (self.nx as f64 - 1.0) / 2.0
+    }
+    #[inline]
+    pub fn iy(&self, y: f64) -> f64 {
+        (y - self.cy) / self.vy + (self.ny as f64 - 1.0) / 2.0
+    }
+    #[inline]
+    pub fn iz(&self, z: f64) -> f64 {
+        (z - self.cz) / self.vz + (self.nz as f64 - 1.0) / 2.0
+    }
+
+    /// Axis-aligned bounding box `([x0,y0,z0], [x1,y1,z1])` of the voxel
+    /// grid (outer voxel *edges*, not centers).
+    pub fn bounds(&self) -> ([f64; 3], [f64; 3]) {
+        let hx = self.nx as f64 * self.vx / 2.0;
+        let hy = self.ny as f64 * self.vy / 2.0;
+        let hz = self.nz as f64 * self.vz / 2.0;
+        (
+            [self.cx - hx, self.cy - hy, self.cz - hz],
+            [self.cx + hx, self.cy + hy, self.cz + hz],
+        )
+    }
+
+    pub fn num_voxels(&self) -> usize {
+        self.nx * self.ny * self.nz
+    }
+
+    /// Radius (mm) of the inscribed field-of-view cylinder.
+    pub fn fov_radius(&self) -> f64 {
+        0.5 * (self.nx as f64 * self.vx).min(self.ny as f64 * self.vy)
+    }
+}
+
+/// A ray: `p(t) = origin + t · dir`, `dir` unit-length, t in mm.
+#[derive(Clone, Copy, Debug)]
+pub struct Ray {
+    pub origin: [f64; 3],
+    pub dir: [f64; 3],
+}
+
+impl Ray {
+    pub fn new(origin: [f64; 3], dir: [f64; 3]) -> Ray {
+        let n = (dir[0] * dir[0] + dir[1] * dir[1] + dir[2] * dir[2]).sqrt();
+        Ray { origin, dir: [dir[0] / n, dir[1] / n, dir[2] / n] }
+    }
+
+    #[inline]
+    pub fn point(&self, t: f64) -> [f64; 3] {
+        [
+            self.origin[0] + t * self.dir[0],
+            self.origin[1] + t * self.dir[1],
+            self.origin[2] + t * self.dir[2],
+        ]
+    }
+}
+
+/// Evenly spaced view angles in radians over `[start, start + range)`
+/// degrees — `range = 180` for parallel, `360` for cone, matching Table 1.
+pub fn angles_deg(nviews: usize, start_deg: f64, range_deg: f64) -> Vec<f64> {
+    (0..nviews)
+        .map(|i| (start_deg + range_deg * i as f64 / nviews as f64).to_radians())
+        .collect()
+}
+
+/// The scanner geometry union passed around the library and the CLI.
+#[derive(Clone, Debug)]
+pub enum Geometry {
+    Parallel(ParallelBeam),
+    Fan(FanBeam),
+    Cone(ConeBeam),
+    Modular(ModularBeam),
+}
+
+impl Geometry {
+    pub fn nviews(&self) -> usize {
+        match self {
+            Geometry::Parallel(g) => g.angles.len(),
+            Geometry::Fan(g) => g.angles.len(),
+            Geometry::Cone(g) => g.angles.len(),
+            Geometry::Modular(g) => g.views.len(),
+        }
+    }
+
+    pub fn nrows(&self) -> usize {
+        match self {
+            Geometry::Parallel(g) => g.nrows,
+            Geometry::Fan(_) => 1,
+            Geometry::Cone(g) => g.nrows,
+            Geometry::Modular(g) => g.nrows,
+        }
+    }
+
+    pub fn ncols(&self) -> usize {
+        match self {
+            Geometry::Parallel(g) => g.ncols,
+            Geometry::Fan(g) => g.ncols,
+            Geometry::Cone(g) => g.ncols,
+            Geometry::Modular(g) => g.ncols,
+        }
+    }
+
+    /// The ray through detector sample `(view, row, col)`.
+    pub fn ray(&self, view: usize, row: usize, col: usize) -> Ray {
+        match self {
+            Geometry::Parallel(g) => g.ray(view, row, col),
+            Geometry::Fan(g) => g.ray(view, col),
+            Geometry::Cone(g) => g.ray(view, row, col),
+            Geometry::Modular(g) => g.ray(view, row, col),
+        }
+    }
+
+    /// Ray at *fractional* detector coordinates — the sampling primitive
+    /// for bin-integrated analytic projections.
+    pub fn ray_at(&self, view: usize, row_f: f64, col_f: f64) -> Ray {
+        match self {
+            Geometry::Parallel(g) => g.ray_at(view, row_f, col_f),
+            Geometry::Fan(g) => g.ray_at(view, col_f),
+            Geometry::Cone(g) => g.ray_at(view, row_f, col_f),
+            Geometry::Modular(g) => g.ray_at(view, row_f, col_f),
+        }
+    }
+
+    /// Human-readable name (used by CLI/telemetry).
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Geometry::Parallel(_) => "parallel",
+            Geometry::Fan(_) => "fan",
+            Geometry::Cone(_) => "cone",
+            Geometry::Modular(_) => "modular",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn voxel_centers_symmetric() {
+        let vg = VolumeGeometry::cube(4, 2.0);
+        // centers at -3, -1, 1, 3 mm
+        assert_eq!(vg.x(0), -3.0);
+        assert_eq!(vg.x(3), 3.0);
+        assert_eq!(vg.x(1) + vg.x(2), 0.0);
+    }
+
+    #[test]
+    fn ix_inverts_x() {
+        let vg = VolumeGeometry { cx: 5.0, ..VolumeGeometry::cube(7, 0.5) };
+        for i in 0..7 {
+            let xi = vg.x(i);
+            assert!((vg.ix(xi) - i as f64).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn bounds_are_edges() {
+        let vg = VolumeGeometry::cube(4, 2.0);
+        let (lo, hi) = vg.bounds();
+        assert_eq!(lo, [-4.0, -4.0, -4.0]);
+        assert_eq!(hi, [4.0, 4.0, 4.0]);
+    }
+
+    #[test]
+    fn angles_cover_range() {
+        let a = angles_deg(4, 0.0, 180.0);
+        assert_eq!(a.len(), 4);
+        assert!((a[0] - 0.0).abs() < 1e-12);
+        assert!((a[1] - 45f64.to_radians()).abs() < 1e-12);
+        assert!((a[3] - 135f64.to_radians()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ray_dir_normalized() {
+        let r = Ray::new([0.0, 0.0, 0.0], [3.0, 4.0, 0.0]);
+        assert!((r.dir[0] - 0.6).abs() < 1e-12);
+        assert!((r.dir[1] - 0.8).abs() < 1e-12);
+        let p = r.point(5.0);
+        assert!((p[0] - 3.0).abs() < 1e-12 && (p[1] - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fov_radius() {
+        let vg = VolumeGeometry::slice2d(100, 50, 1.0);
+        assert_eq!(vg.fov_radius(), 25.0);
+    }
+}

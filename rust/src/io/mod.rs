@@ -1,0 +1,164 @@
+//! File I/O: raw little-endian `f32` arrays (the library's native
+//! interchange, matching the paper's "contiguous 32-bit floating point
+//! arrays"), 16-bit PGM image dumps for quick inspection, and JSON run
+//! records used by EXPERIMENTS.md.
+
+use std::fs::File;
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use crate::array::{Sino, Vol3};
+use crate::util::json::Json;
+
+/// Write a raw little-endian f32 buffer.
+pub fn write_f32<P: AsRef<Path>>(path: P, data: &[f32]) -> std::io::Result<()> {
+    let mut w = BufWriter::new(File::create(path)?);
+    for &v in data {
+        w.write_all(&v.to_le_bytes())?;
+    }
+    w.flush()
+}
+
+/// Read a raw little-endian f32 buffer of exactly `len` elements.
+pub fn read_f32<P: AsRef<Path>>(path: P, len: usize) -> std::io::Result<Vec<f32>> {
+    let mut r = BufReader::new(File::open(path)?);
+    let mut bytes = vec![0u8; len * 4];
+    r.read_exact(&mut bytes)?;
+    // reject trailing data — size mismatches are config bugs
+    let mut extra = [0u8; 1];
+    if r.read(&mut extra)? != 0 {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            format!("file longer than expected {len} f32 elements"),
+        ));
+    }
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+/// Save a volume as `path.raw` plus a `path.json` sidecar with dimensions.
+pub fn save_vol<P: AsRef<Path>>(path: P, vol: &Vol3) -> std::io::Result<()> {
+    let p = path.as_ref();
+    write_f32(p, &vol.data)?;
+    let meta = Json::obj(vec![
+        ("kind", Json::Str("volume".into())),
+        ("nx", Json::Num(vol.nx as f64)),
+        ("ny", Json::Num(vol.ny as f64)),
+        ("nz", Json::Num(vol.nz as f64)),
+    ]);
+    std::fs::write(p.with_extension("json"), meta.to_string())
+}
+
+/// Load a volume saved by [`save_vol`].
+pub fn load_vol<P: AsRef<Path>>(path: P) -> std::io::Result<Vol3> {
+    let p = path.as_ref();
+    let meta_text = std::fs::read_to_string(p.with_extension("json"))?;
+    let meta = crate::util::json::parse(&meta_text)
+        .map_err(|e| std::io::Error::new(std::io::ErrorKind::InvalidData, e))?;
+    let nx = meta.get_usize("nx").unwrap_or(0);
+    let ny = meta.get_usize("ny").unwrap_or(0);
+    let nz = meta.get_usize("nz").unwrap_or(1);
+    let data = read_f32(p, nx * ny * nz)?;
+    Ok(Vol3::from_vec(nx, ny, nz, data))
+}
+
+/// Save a sinogram as raw f32 + JSON sidecar.
+pub fn save_sino<P: AsRef<Path>>(path: P, sino: &Sino) -> std::io::Result<()> {
+    let p = path.as_ref();
+    write_f32(p, &sino.data)?;
+    let meta = Json::obj(vec![
+        ("kind", Json::Str("sino".into())),
+        ("nviews", Json::Num(sino.nviews as f64)),
+        ("nrows", Json::Num(sino.nrows as f64)),
+        ("ncols", Json::Num(sino.ncols as f64)),
+    ]);
+    std::fs::write(p.with_extension("json"), meta.to_string())
+}
+
+/// Load a sinogram saved by [`save_sino`].
+pub fn load_sino<P: AsRef<Path>>(path: P) -> std::io::Result<Sino> {
+    let p = path.as_ref();
+    let meta_text = std::fs::read_to_string(p.with_extension("json"))?;
+    let meta = crate::util::json::parse(&meta_text)
+        .map_err(|e| std::io::Error::new(std::io::ErrorKind::InvalidData, e))?;
+    let nviews = meta.get_usize("nviews").unwrap_or(0);
+    let nrows = meta.get_usize("nrows").unwrap_or(1);
+    let ncols = meta.get_usize("ncols").unwrap_or(0);
+    let data = read_f32(p, nviews * nrows * ncols)?;
+    Ok(Sino::from_vec(nviews, nrows, ncols, data))
+}
+
+/// Write a 2-D image (row-major, `ny` rows of `nx`) as a 16-bit PGM with
+/// min/max windowing — handy for eyeballing reconstructions.
+pub fn write_pgm16<P: AsRef<Path>>(path: P, img: &[f32], nx: usize, ny: usize) -> std::io::Result<()> {
+    assert_eq!(img.len(), nx * ny);
+    let lo = img.iter().cloned().fold(f32::INFINITY, f32::min);
+    let hi = img.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let scale = if hi > lo { 65535.0 / (hi - lo) } else { 0.0 };
+    let mut w = BufWriter::new(File::create(path)?);
+    write!(w, "P5\n{nx} {ny}\n65535\n")?;
+    for &v in img {
+        let q = (((v - lo) * scale) as u16).to_be_bytes();
+        w.write_all(&q)?;
+    }
+    w.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir() -> std::path::PathBuf {
+        let d = std::env::temp_dir().join(format!("leap_io_test_{}", std::process::id()));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn raw_f32_roundtrip() {
+        let d = tmpdir();
+        let p = d.join("a.raw");
+        let data = vec![1.5f32, -2.25, 0.0, 1e-10];
+        write_f32(&p, &data).unwrap();
+        let back = read_f32(&p, 4).unwrap();
+        assert_eq!(data, back);
+        // wrong length must error
+        assert!(read_f32(&p, 3).is_err());
+        assert!(read_f32(&p, 5).is_err());
+    }
+
+    #[test]
+    fn vol_roundtrip_with_sidecar() {
+        let d = tmpdir();
+        let p = d.join("vol.raw");
+        let mut v = Vol3::zeros(3, 4, 2);
+        *v.at_mut(1, 2, 1) = 7.5;
+        save_vol(&p, &v).unwrap();
+        let back = load_vol(&p).unwrap();
+        assert_eq!(v, back);
+    }
+
+    #[test]
+    fn sino_roundtrip_with_sidecar() {
+        let d = tmpdir();
+        let p = d.join("sino.raw");
+        let mut s = Sino::zeros(5, 2, 3);
+        *s.at_mut(4, 1, 2) = -3.25;
+        save_sino(&p, &s).unwrap();
+        let back = load_sino(&p).unwrap();
+        assert_eq!(s, back);
+    }
+
+    #[test]
+    fn pgm_has_header_and_size() {
+        let d = tmpdir();
+        let p = d.join("img.pgm");
+        let img = vec![0.0f32, 0.5, 1.0, 0.25];
+        write_pgm16(&p, &img, 2, 2).unwrap();
+        let bytes = std::fs::read(&p).unwrap();
+        assert!(bytes.starts_with(b"P5\n2 2\n65535\n"));
+        assert_eq!(bytes.len(), 13 + 8);
+    }
+}

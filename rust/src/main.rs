@@ -1,0 +1,478 @@
+//! `leap` CLI — the L3 coordinator entrypoint.
+//!
+//! Subcommands:
+//!   phantom      generate a phantom volume (+ analytic sinogram)
+//!   project      forward-project a volume (native projectors)
+//!   backproject  matched backprojection
+//!   fbp          analytic reconstruction (FBP / fan FBP / FDK)
+//!   recon        iterative reconstruction (sirt|os-sart|cgls|mlem|fista-tv)
+//!   dc-refine    limited-angle data-consistency pipeline on a luggage bag
+//!   serve        start the batching projection server (PJRT artifacts +
+//!                native fallback)
+//!   selftest     adjoint identities + artifact engine roundtrip
+//!   info         list compiled artifact entries
+
+use std::sync::Arc;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use leap::coordinator::server::Server;
+use leap::coordinator::{BatchPolicy, Coordinator, Executor, NativeExecutor, Router};
+use leap::geometry::config::{scan_from_file, ScanConfig};
+use leap::geometry::{Geometry, ParallelBeam, VolumeGeometry};
+use leap::phantom::{luggage, shepp};
+use leap::projector::{Model, Projector};
+use leap::recon;
+use leap::util::cli::Args;
+use leap::{io, metrics, Sino, Vol3};
+
+fn main() {
+    let args = Args::from_env();
+    let result = match args.subcommand.as_str() {
+        "phantom" => cmd_phantom(&args),
+        "project" => cmd_project(&args),
+        "backproject" => cmd_backproject(&args),
+        "fbp" => cmd_fbp(&args),
+        "recon" => cmd_recon(&args),
+        "dc-refine" => cmd_dc_refine(&args),
+        "serve" => cmd_serve(&args),
+        "selftest" => cmd_selftest(&args),
+        "info" => cmd_info(&args),
+        "" | "help" => {
+            print_help();
+            Ok(())
+        }
+        other => {
+            print_help();
+            Err(anyhow!("unknown subcommand {other}"))
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn print_help() {
+    println!(
+        "leap — differentiable X-ray CT projectors (LEAP reproduction)\n\
+         usage: leap <phantom|project|backproject|fbp|recon|dc-refine|serve|selftest|info> [--opt value ...]"
+    );
+}
+
+/// Scan setup shared by the CLI commands: either `--config file.json` or
+/// flags (`--geometry parallel|fan|cone`, `--n`, `--nviews`, `--ncols`...).
+fn scan_from_args(args: &Args) -> Result<ScanConfig> {
+    if let Some(path) = args.str_opt("config") {
+        return scan_from_file(path).map_err(|e| anyhow!(e));
+    }
+    let n = args.usize_or("n", 128);
+    let nviews = args.usize_or("nviews", 180);
+    let ncols = args.usize_or("ncols", (n * 3) / 2);
+    let voxel = args.f64_or("voxel", 1.0);
+    let du = args.f64_or("du", voxel);
+    let nz = args.usize_or("nz", 1);
+    let nrows = args.usize_or("nrows", nz);
+    let geometry = match args.str_or("geometry", "parallel").as_str() {
+        "parallel" => Geometry::Parallel(ParallelBeam {
+            nrows,
+            ncols,
+            du,
+            dv: args.f64_or("dv", voxel),
+            cu: args.f64_or("cu", 0.0),
+            cv: args.f64_or("cv", 0.0),
+            angles: leap::geometry::angles_deg(
+                nviews,
+                args.f64_or("start-deg", 0.0),
+                args.f64_or("arc-deg", 180.0),
+            ),
+        }),
+        "fan" => Geometry::Fan(leap::geometry::FanBeam {
+            ncols,
+            du,
+            cu: args.f64_or("cu", 0.0),
+            sod: args.f64_or("sod", n as f64 * voxel * 2.0),
+            sdd: args.f64_or("sdd", n as f64 * voxel * 4.0),
+            angles: leap::geometry::angles_deg(
+                nviews,
+                args.f64_or("start-deg", 0.0),
+                args.f64_or("arc-deg", 360.0),
+            ),
+        }),
+        "cone" => Geometry::Cone(leap::geometry::ConeBeam {
+            nrows: args.usize_or("nrows", nz.max(8)),
+            ncols,
+            du,
+            dv: args.f64_or("dv", voxel),
+            cu: args.f64_or("cu", 0.0),
+            cv: args.f64_or("cv", 0.0),
+            sod: args.f64_or("sod", n as f64 * voxel * 2.0),
+            sdd: args.f64_or("sdd", n as f64 * voxel * 4.0),
+            angles: leap::geometry::angles_deg(
+                nviews,
+                args.f64_or("start-deg", 0.0),
+                args.f64_or("arc-deg", 360.0),
+            ),
+            shape: if args.str_or("detector", "flat") == "curved" {
+                leap::geometry::DetectorShape::Curved
+            } else {
+                leap::geometry::DetectorShape::Flat
+            },
+        }),
+        other => bail!("unknown geometry {other} (parallel|fan|cone; modular via --config)"),
+    };
+    let volume = VolumeGeometry {
+        nx: n,
+        ny: n,
+        nz,
+        vx: voxel,
+        vy: voxel,
+        vz: args.f64_or("vz", voxel),
+        cx: 0.0,
+        cy: 0.0,
+        cz: 0.0,
+    };
+    Ok(ScanConfig { geometry, volume })
+}
+
+fn phantom_from_args(args: &Args, vg: &VolumeGeometry) -> leap::phantom::Phantom {
+    let radius = 0.45 * vg.nx as f64 * vg.vx;
+    match args.str_or("phantom", "shepp").as_str() {
+        "luggage" | "bag" => {
+            luggage::bag(args.u64_or("seed", 0), &luggage::LuggageParams::default())
+        }
+        "forbild" => shepp::forbild_lite_2d(radius, args.f64_or("mu", 0.02)),
+        _ if vg.nz > 1 => shepp::shepp_logan_3d(radius, args.f64_or("mu", 0.02)),
+        _ => shepp::shepp_logan_2d(radius, args.f64_or("mu", 0.02)),
+    }
+}
+
+fn model_from_args(args: &Args) -> Result<Model> {
+    Model::parse(&args.str_or("model", "sf"))
+        .ok_or_else(|| anyhow!("bad --model (siddon|joseph|sf)"))
+}
+
+fn cmd_phantom(args: &Args) -> Result<()> {
+    let cfg = scan_from_args(args)?;
+    let ph = phantom_from_args(args, &cfg.volume);
+    let vol = ph.rasterize(&cfg.volume, args.usize_or("supersample", 2));
+    let out = args.str_or("out", "phantom.raw");
+    io::save_vol(&out, &vol)?;
+    println!("wrote {out} ({}x{}x{})", vol.nx, vol.ny, vol.nz);
+    if args.flag("pgm") {
+        let pgm = format!("{out}.pgm");
+        io::write_pgm16(&pgm, vol.slice(vol.nz / 2), vol.nx, vol.ny)?;
+        println!("wrote {pgm}");
+    }
+    if args.flag("sino") {
+        let sino = ph.project(&cfg.geometry);
+        let sout = args.str_or("sino-out", "sino.raw");
+        io::save_sino(&sout, &sino)?;
+        println!("wrote {sout} (analytic {} views)", sino.nviews);
+    }
+    Ok(())
+}
+
+fn cmd_project(args: &Args) -> Result<()> {
+    let cfg = scan_from_args(args)?;
+    let model = model_from_args(args)?;
+    let p = Projector::new(cfg.geometry, cfg.volume.clone(), model);
+    let vol = match args.str_opt("in") {
+        Some(path) => io::load_vol(path)?,
+        None => phantom_from_args(args, &cfg.volume).rasterize(&cfg.volume, 2),
+    };
+    let t0 = std::time::Instant::now();
+    let sino = p.forward(&vol);
+    let dt = t0.elapsed().as_secs_f64();
+    let out = args.str_or("out", "sino.raw");
+    io::save_sino(&out, &sino)?;
+    let one_copy = metrics::one_copy_bytes(vol.len(), sino.len());
+    println!(
+        "forward[{}/{}] {:.3}s  ({} views, {:.1} MB one-copy memory)",
+        p.model.name(),
+        p.geom.kind(),
+        dt,
+        sino.nviews,
+        one_copy as f64 / 1e6
+    );
+    println!("wrote {out}");
+    Ok(())
+}
+
+fn cmd_backproject(args: &Args) -> Result<()> {
+    let cfg = scan_from_args(args)?;
+    let model = model_from_args(args)?;
+    let p = Projector::new(cfg.geometry, cfg.volume.clone(), model);
+    let sino = io::load_sino(args.str_opt("in").context("--in sino.raw required")?)?;
+    let t0 = std::time::Instant::now();
+    let vol = p.back(&sino);
+    println!("backproject[{}] {:.3}s", p.model.name(), t0.elapsed().as_secs_f64());
+    let out = args.str_or("out", "backprojection.raw");
+    io::save_vol(&out, &vol)?;
+    println!("wrote {out}");
+    Ok(())
+}
+
+fn load_or_simulate_sino(args: &Args, cfg: &ScanConfig) -> Result<(Sino, Option<Vol3>)> {
+    match args.str_opt("in") {
+        Some(path) => Ok((io::load_sino(path)?, None)),
+        None => {
+            // simulate: analytic projection of the chosen phantom (no
+            // inverse crime: continuous phantom, not the rasterized grid)
+            let ph = phantom_from_args(args, &cfg.volume);
+            let truth = ph.rasterize(&cfg.volume, 2);
+            Ok((ph.project(&cfg.geometry), Some(truth)))
+        }
+    }
+}
+
+fn report_quality(vol: &Vol3, truth: &Option<Vol3>) {
+    if let Some(t) = truth {
+        let psnr = metrics::psnr(&vol.data, &t.data, None);
+        let ssim = metrics::ssim_vol(vol, t, None);
+        println!("quality vs truth: PSNR {psnr:.3} dB, SSIM {ssim:.4}");
+    }
+}
+
+fn cmd_fbp(args: &Args) -> Result<()> {
+    let cfg = scan_from_args(args)?;
+    let (sino, truth) = load_or_simulate_sino(args, &cfg)?;
+    let window = recon::Window::parse(&args.str_or("filter", "ramlak"))
+        .ok_or_else(|| anyhow!("bad --filter"))?;
+    let threads = args.usize_or("threads", leap::util::pool::default_threads());
+    let t0 = std::time::Instant::now();
+    let vol = match &cfg.geometry {
+        Geometry::Parallel(g) => recon::fbp_parallel(&cfg.volume, g, &sino, window, threads),
+        Geometry::Fan(g) => recon::fbp_fan(&cfg.volume, g, &sino, window, threads),
+        Geometry::Cone(g) => recon::fdk(&cfg.volume, g, &sino, window, threads),
+        Geometry::Modular(_) => bail!("FBP unsupported for modular beams; use recon"),
+    };
+    println!("fbp[{}] {:.3}s", window.name(), t0.elapsed().as_secs_f64());
+    report_quality(&vol, &truth);
+    let out = args.str_or("out", "fbp.raw");
+    io::save_vol(&out, &vol)?;
+    if args.flag("pgm") {
+        io::write_pgm16(format!("{out}.pgm"), vol.slice(vol.nz / 2), vol.nx, vol.ny)?;
+    }
+    println!("wrote {out}");
+    Ok(())
+}
+
+fn cmd_recon(args: &Args) -> Result<()> {
+    let cfg = scan_from_args(args)?;
+    let model = model_from_args(args)?;
+    let (sino, truth) = load_or_simulate_sino(args, &cfg)?;
+    let p = Projector::new(cfg.geometry, cfg.volume.clone(), model);
+    let iters = args.usize_or("iters", 50);
+    let algo = args.str_or("algo", "sirt");
+    let t0 = std::time::Instant::now();
+    let vol = match algo.as_str() {
+        "sirt" => {
+            recon::sirt(
+                &p,
+                &sino,
+                &p.new_vol(),
+                &recon::SirtOpts { iterations: iters, ..Default::default() },
+            )
+            .vol
+        }
+        "os-sart" | "ossart" => leap::recon::os_sart::os_sart(
+            &p,
+            &sino,
+            &p.new_vol(),
+            &leap::recon::os_sart::OsSartOpts {
+                iterations: iters,
+                subsets: args.usize_or("subsets", 8),
+                ..Default::default()
+            },
+        ),
+        "cgls" => leap::recon::cgls::cgls(&p, &sino, iters).vol,
+        "mlem" => leap::recon::mlem::mlem(&p, &sino, iters),
+        "fista-tv" | "tv" => leap::recon::fista_tv::fista_tv(
+            &p,
+            &sino,
+            &p.new_vol(),
+            &leap::recon::fista_tv::FistaOpts {
+                iterations: iters,
+                tv_weight: args.f64_or("tv-weight", 1e-4) as f32,
+                ..Default::default()
+            },
+        ),
+        other => bail!("unknown --algo {other}"),
+    };
+    println!("{algo}[{}] x{iters} {:.3}s", p.model.name(), t0.elapsed().as_secs_f64());
+    report_quality(&vol, &truth);
+    let out = args.str_or("out", "recon.raw");
+    io::save_vol(&out, &vol)?;
+    println!("wrote {out}");
+    Ok(())
+}
+
+fn cmd_dc_refine(args: &Args) -> Result<()> {
+    // the Figure-3 pipeline on one bag; the full-dataset version is
+    // examples/limited_angle_dc.rs
+    let n = args.usize_or("n", 128);
+    let nviews = args.usize_or("nviews", 180);
+    let keep = args.usize_or("keep", nviews / 3); // 60° of 180°
+    let fov = 512.0; // mm
+    let voxel = fov / n as f64;
+    let vg = VolumeGeometry::slice2d(n, n, voxel);
+    let g = ParallelBeam::standard_2d(nviews, (n * 3) / 2, voxel);
+    let p = Projector::new(Geometry::Parallel(g.clone()), vg.clone(), Model::SF);
+
+    let bag = luggage::bag(args.u64_or("seed", 7), &luggage::LuggageParams::default());
+    let truth = bag.rasterize(&vg, 2);
+    let y = bag.project(&Geometry::Parallel(g.clone()));
+    let mask = recon::ViewMask::contiguous(nviews, 0, keep);
+    let mut y_masked = y.clone();
+    mask.apply(&mut y_masked);
+
+    // prior: limited-angle FBP ("inference model input"), then the
+    // denoising prior (TV) stands in for the trained network
+    let g_lim = ParallelBeam { angles: g.angles[0..keep].to_vec(), ..g.clone() };
+    let sino_lim = Sino::from_vec(keep, 1, g.ncols, y.data[..keep * g.ncols].to_vec());
+    let mut pred = recon::fbp_parallel(&vg, &g_lim, &sino_lim, recon::Window::Hann, p.threads);
+    leap::recon::fista_tv::tv_prox_vol(&mut pred, args.f64_or("prior-tv", 2e-4) as f32, 20);
+    for v in pred.data.iter_mut() {
+        if *v < 0.0 {
+            *v = 0.0;
+        }
+    }
+
+    let psnr_pred = metrics::psnr(&pred.data, &truth.data, None);
+    let ssim_pred = metrics::ssim_vol(&pred, &truth, None);
+    let t0 = std::time::Instant::now();
+    let refined = recon::refine(
+        &p,
+        &y_masked,
+        &mask,
+        &pred,
+        &recon::DcOpts { iterations: args.usize_or("iters", 40), ..Default::default() },
+    );
+    let dt = t0.elapsed().as_secs_f64();
+    let psnr_ref = metrics::psnr(&refined.data, &truth.data, None);
+    let ssim_ref = metrics::ssim_vol(&refined, &truth, None);
+    println!("bag seed {}: {keep}/{nviews} views kept", args.u64_or("seed", 7));
+    println!("  prediction : PSNR {psnr_pred:.3} dB  SSIM {ssim_pred:.4}");
+    println!("  refined    : PSNR {psnr_ref:.3} dB  SSIM {ssim_ref:.4}  ({dt:.2}s)");
+    if args.flag("pgm") {
+        io::write_pgm16("dc_truth.pgm", truth.slice(0), n, n)?;
+        io::write_pgm16("dc_pred.pgm", pred.slice(0), n, n)?;
+        io::write_pgm16("dc_refined.pgm", refined.slice(0), n, n)?;
+        println!("wrote dc_truth.pgm dc_pred.pgm dc_refined.pgm");
+    }
+    Ok(())
+}
+
+fn build_router(args: &Args) -> Result<(Arc<Router>, String)> {
+    let mut backends: Vec<Arc<dyn Executor>> = Vec::new();
+    let mut desc = String::new();
+    let artifacts = args.str_or("artifacts", "artifacts");
+    match leap::runtime::EngineHost::load(&artifacts) {
+        Ok(engine) => {
+            desc.push_str(&format!(
+                "artifacts[{}]: n={} nviews={} ncols={} ({} entries)",
+                artifacts,
+                engine.spec.n,
+                engine.spec.nviews,
+                engine.spec.ncols,
+                engine.entry_names().len()
+            ));
+            backends.push(Arc::new(engine));
+        }
+        Err(e) => {
+            desc.push_str(&format!("artifacts unavailable ({e:#}); native only"));
+        }
+    }
+    let cfg = scan_from_args(args)?;
+    let model = model_from_args(args)?;
+    backends.push(Arc::new(NativeExecutor::new(Projector::new(
+        cfg.geometry,
+        cfg.volume,
+        model,
+    ))));
+    Ok((Arc::new(Router::new(backends)), desc))
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let (router, desc) = build_router(args)?;
+    println!("{desc}");
+    let coord = Arc::new(Coordinator::new(
+        router,
+        BatchPolicy {
+            max_batch: args.usize_or("max-batch", 8),
+            max_wait: std::time::Duration::from_millis(args.u64_or("max-wait-ms", 5)),
+        },
+        args.usize_or("budget-mb", 2048) * (1 << 20),
+        args.usize_or("workers", leap::util::pool::default_threads()),
+    ));
+    let addr = args.str_or("addr", "127.0.0.1:7462");
+    let server = Server::start(&addr, coord.clone())?;
+    println!("leap server listening on {}", server.addr);
+    println!("ops: {:?}", coord.executor().ops());
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(10));
+        let snap = coord.telemetry().to_json();
+        println!("telemetry: {snap}");
+    }
+}
+
+fn cmd_selftest(args: &Args) -> Result<()> {
+    // 1. native adjoint identities
+    let vg = VolumeGeometry::slice2d(24, 24, 1.0);
+    let g = Geometry::Parallel(ParallelBeam::standard_2d(12, 36, 1.0));
+    let mut rng = leap::util::rng::Rng::new(1);
+    for model in [Model::Siddon, Model::Joseph, Model::SF] {
+        let p = Projector::new(g.clone(), vg.clone(), model);
+        let mut x = p.new_vol();
+        let mut y = p.new_sino();
+        rng.fill_uniform(&mut x.data, 0.0, 1.0);
+        rng.fill_uniform(&mut y.data, 0.0, 1.0);
+        let lhs = leap::util::dot_f64(&p.forward(&x).data, &y.data);
+        let rhs = leap::util::dot_f64(&x.data, &p.back(&y).data);
+        let gap = (lhs - rhs).abs() / lhs.abs().max(1e-12);
+        println!("adjoint[{}]: gap {gap:.2e}", model.name());
+        if gap > 1e-4 {
+            bail!("adjoint identity violated for {}", model.name());
+        }
+    }
+    // 2. artifact engine roundtrip (if built)
+    let artifacts = args.str_or("artifacts", "artifacts");
+    match leap::runtime::Engine::load(&artifacts) {
+        Ok(engine) => {
+            let n = engine.spec.n;
+            let vol = vec![0.5f32; n * n];
+            let sino = engine.run1("fp_sf", &[&vol])?;
+            println!(
+                "engine fp_sf OK: {} -> {} samples (max {:.4})",
+                vol.len(),
+                sino.len(),
+                sino.iter().cloned().fold(0.0f32, f32::max)
+            );
+            let back = engine.run1("bp_sf", &[&sino])?;
+            println!("engine bp_sf OK: {} samples", back.len());
+        }
+        Err(e) => println!("artifact engine skipped: {e:#}"),
+    }
+    println!("selftest OK");
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let artifacts = args.str_or("artifacts", "artifacts");
+    let engine = leap::runtime::Engine::load(&artifacts)?;
+    println!(
+        "artifact set: n={} nviews={} ncols={} voxel={} du={} arc={}°",
+        engine.spec.n,
+        engine.spec.nviews,
+        engine.spec.ncols,
+        engine.spec.voxel,
+        engine.spec.du,
+        engine.spec.arc_deg
+    );
+    for name in engine.entry_names() {
+        let e = engine.entry(name).unwrap();
+        println!("  {name}: inputs {:?} -> outputs {:?}", e.input_shapes, e.output_shapes);
+    }
+    Ok(())
+}

@@ -1,0 +1,199 @@
+//! Image-quality metrics used in the paper's evaluation: PSNR and SSIM
+//! (Figure 3), plus RMSE/MAE and a memory-footprint model for Table 1.
+
+use crate::array::Vol3;
+
+/// Root-mean-square error.
+pub fn rmse(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let n = a.len().max(1) as f64;
+    let ss: f64 = a
+        .iter()
+        .zip(b.iter())
+        .map(|(&x, &y)| {
+            let d = (x - y) as f64;
+            d * d
+        })
+        .sum();
+    (ss / n).sqrt()
+}
+
+/// Mean absolute error.
+pub fn mae(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let n = a.len().max(1) as f64;
+    a.iter().zip(b.iter()).map(|(&x, &y)| ((x - y) as f64).abs()).sum::<f64>() / n
+}
+
+/// Peak signal-to-noise ratio in dB against a reference `truth`.
+/// `data_range` is the peak value; pass `None` to use `max(truth)`, the
+/// convention of the paper's luggage experiment.
+pub fn psnr(img: &[f32], truth: &[f32], data_range: Option<f64>) -> f64 {
+    let peak = data_range.unwrap_or_else(|| {
+        truth.iter().cloned().fold(f32::NEG_INFINITY, f32::max) as f64
+    });
+    let e = rmse(img, truth);
+    if e == 0.0 {
+        return f64::INFINITY;
+    }
+    20.0 * (peak / e).log10()
+}
+
+/// Gaussian-windowed SSIM (Wang et al. 2004) over a 2-D image, the metric
+/// of the paper's Figure 3. `11×11` window, `σ = 1.5`, `K1 = 0.01`,
+/// `K2 = 0.03`. Returns the mean SSIM map value.
+pub fn ssim2d(img: &[f32], truth: &[f32], nx: usize, ny: usize, data_range: Option<f64>) -> f64 {
+    assert_eq!(img.len(), nx * ny);
+    assert_eq!(truth.len(), nx * ny);
+    let l = data_range.unwrap_or_else(|| {
+        let hi = truth.iter().cloned().fold(f32::NEG_INFINITY, f32::max) as f64;
+        let lo = truth.iter().cloned().fold(f32::INFINITY, f32::min) as f64;
+        (hi - lo).max(1e-12)
+    });
+    let c1 = (0.01 * l) * (0.01 * l);
+    let c2 = (0.03 * l) * (0.03 * l);
+
+    // separable gaussian window
+    const HALF: i64 = 5;
+    let sigma = 1.5f64;
+    let mut w = [0.0f64; 11];
+    let mut norm = 0.0;
+    for (i, wi) in w.iter_mut().enumerate() {
+        let d = i as f64 - HALF as f64;
+        *wi = (-d * d / (2.0 * sigma * sigma)).exp();
+        norm += *wi;
+    }
+    for wi in w.iter_mut() {
+        *wi /= norm;
+    }
+
+    // horizontal then vertical blur of the five moment maps
+    let blur = |src: &[f64]| -> Vec<f64> {
+        let mut tmp = vec![0.0f64; nx * ny];
+        for y in 0..ny {
+            for x in 0..nx {
+                let mut acc = 0.0;
+                for (i, &wi) in w.iter().enumerate() {
+                    let xx = (x as i64 + i as i64 - HALF).clamp(0, nx as i64 - 1) as usize;
+                    acc += wi * src[y * nx + xx];
+                }
+                tmp[y * nx + x] = acc;
+            }
+        }
+        let mut out = vec![0.0f64; nx * ny];
+        for y in 0..ny {
+            for x in 0..nx {
+                let mut acc = 0.0;
+                for (i, &wi) in w.iter().enumerate() {
+                    let yy = (y as i64 + i as i64 - HALF).clamp(0, ny as i64 - 1) as usize;
+                    acc += wi * tmp[yy * nx + x];
+                }
+                out[y * nx + x] = acc;
+            }
+        }
+        out
+    };
+
+    let xf: Vec<f64> = img.iter().map(|&v| v as f64).collect();
+    let yf: Vec<f64> = truth.iter().map(|&v| v as f64).collect();
+    let xx: Vec<f64> = xf.iter().map(|v| v * v).collect();
+    let yy: Vec<f64> = yf.iter().map(|v| v * v).collect();
+    let xy: Vec<f64> = xf.iter().zip(yf.iter()).map(|(a, b)| a * b).collect();
+
+    let mx = blur(&xf);
+    let my = blur(&yf);
+    let mxx = blur(&xx);
+    let myy = blur(&yy);
+    let mxy = blur(&xy);
+
+    let mut acc = 0.0;
+    for i in 0..nx * ny {
+        let vx = (mxx[i] - mx[i] * mx[i]).max(0.0);
+        let vy = (myy[i] - my[i] * my[i]).max(0.0);
+        let cxy = mxy[i] - mx[i] * my[i];
+        let s = ((2.0 * mx[i] * my[i] + c1) * (2.0 * cxy + c2))
+            / ((mx[i] * mx[i] + my[i] * my[i] + c1) * (vx + vy + c2));
+        acc += s;
+    }
+    acc / (nx * ny) as f64
+}
+
+/// SSIM of the central slice of two volumes (the 2-D experiments use
+/// `nz = 1`, where this is just SSIM of the image).
+pub fn ssim_vol(a: &Vol3, b: &Vol3, data_range: Option<f64>) -> f64 {
+    assert_eq!((a.nx, a.ny, a.nz), (b.nx, b.ny, b.nz));
+    let k = a.nz / 2;
+    ssim2d(a.slice(k), b.slice(k), a.nx, a.ny, data_range)
+}
+
+/// Memory footprint model used for Table 1: "enough to hold one copy of
+/// the projection data and volume data stored as 32-bit floats".
+pub fn one_copy_bytes(num_voxels: usize, num_proj_samples: usize) -> usize {
+    4 * (num_voxels + num_proj_samples)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn rmse_zero_for_identical() {
+        let a = vec![1.0f32; 100];
+        assert_eq!(rmse(&a, &a), 0.0);
+        assert_eq!(mae(&a, &a), 0.0);
+    }
+
+    #[test]
+    fn psnr_of_known_noise() {
+        // constant error e against peak 1.0 → PSNR = -20 log10(e)
+        let truth = vec![1.0f32; 1000];
+        let img: Vec<f32> = truth.iter().map(|&v| v + 0.01).collect();
+        let p = psnr(&img, &truth, Some(1.0));
+        assert!((p - 40.0).abs() < 1e-4, "psnr {p}");
+    }
+
+    #[test]
+    fn psnr_infinite_for_identical() {
+        let a = vec![0.5f32; 10];
+        assert!(psnr(&a, &a, Some(1.0)).is_infinite());
+    }
+
+    #[test]
+    fn ssim_identical_is_one() {
+        let mut rng = Rng::new(5);
+        let mut img = vec![0.0f32; 32 * 32];
+        rng.fill_uniform(&mut img, 0.0, 1.0);
+        let s = ssim2d(&img, &img, 32, 32, Some(1.0));
+        assert!((s - 1.0).abs() < 1e-9, "ssim {s}");
+    }
+
+    #[test]
+    fn ssim_decreases_with_noise() {
+        let mut rng = Rng::new(6);
+        let nx = 48;
+        // smooth structured image
+        let truth: Vec<f32> = (0..nx * nx)
+            .map(|i| {
+                let x = (i % nx) as f32 / nx as f32;
+                let y = (i / nx) as f32 / nx as f32;
+                ((6.28 * x).sin() * (6.28 * y).cos() + 1.0) / 2.0
+            })
+            .collect();
+        let small: Vec<f32> = truth.iter().map(|&v| v + 0.02 * rng.normal() as f32).collect();
+        let large: Vec<f32> = truth.iter().map(|&v| v + 0.2 * rng.normal() as f32).collect();
+        let s_small = ssim2d(&small, &truth, nx, nx, Some(1.0));
+        let s_large = ssim2d(&large, &truth, nx, nx, Some(1.0));
+        assert!(s_small > s_large, "{s_small} vs {s_large}");
+        assert!(s_small > 0.8 && s_large < 0.8);
+    }
+
+    #[test]
+    fn one_copy_model() {
+        // Table 1 example: 512³ volume + 720×512² projections @ f32
+        let v = 512usize * 512 * 512;
+        let p = 720usize * 512 * 512;
+        let gb = one_copy_bytes(v, p) as f64 / (1u64 << 30) as f64;
+        assert!((gb - 1.203125).abs() < 1e-6, "gb {gb}");
+    }
+}

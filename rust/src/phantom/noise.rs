@@ -1,0 +1,102 @@
+//! Transmission noise model: Beer-Lambert photon statistics for realistic
+//! measured sinograms (the data the paper's training pipelines consume).
+//!
+//! `I = Poisson(I0 · exp(−p))` per detector sample, re-logged to a noisy
+//! line integral `p̂ = ln(I0 / max(I, 1))`. Deterministic per seed.
+
+use crate::array::Sino;
+use crate::util::rng::Rng;
+
+/// Sample a Poisson variate (Knuth for small λ, normal approx for large).
+pub fn poisson(rng: &mut Rng, lambda: f64) -> f64 {
+    if lambda <= 0.0 {
+        return 0.0;
+    }
+    if lambda > 50.0 {
+        // normal approximation with continuity correction
+        return (lambda + lambda.sqrt() * rng.normal()).round().max(0.0);
+    }
+    let l = (-lambda).exp();
+    let mut k = 0u64;
+    let mut p = 1.0;
+    loop {
+        p *= rng.f64();
+        if p <= l {
+            return k as f64;
+        }
+        k += 1;
+        if k > 10_000 {
+            return lambda; // numerical guard
+        }
+    }
+}
+
+/// Apply transmission (Poisson) noise to a sinogram of line integrals.
+/// `i0` is the unattenuated photon count per detector sample.
+pub fn transmission_noise(sino: &Sino, i0: f64, seed: u64) -> Sino {
+    let mut rng = Rng::new(seed ^ 0x9e37_79b9_7f4a_7c15);
+    let mut out = sino.clone();
+    for v in out.data.iter_mut() {
+        let counts = poisson(&mut rng, i0 * (-(*v as f64)).exp());
+        *v = (i0 / counts.max(1.0)).ln() as f32;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poisson_moments() {
+        let mut rng = Rng::new(4);
+        for lambda in [0.5f64, 5.0, 200.0] {
+            let n = 4000;
+            let mut mean = 0.0;
+            let mut var = 0.0;
+            for _ in 0..n {
+                let x = poisson(&mut rng, lambda);
+                mean += x;
+                var += x * x;
+            }
+            mean /= n as f64;
+            var = var / n as f64 - mean * mean;
+            assert!((mean - lambda).abs() < 0.1 * lambda.max(1.0), "λ={lambda} mean {mean}");
+            assert!((var - lambda).abs() < 0.25 * lambda.max(1.0), "λ={lambda} var {var}");
+        }
+    }
+
+    #[test]
+    fn noise_shrinks_with_dose() {
+        let mut sino = Sino::zeros2d(10, 50);
+        sino.fill(1.0); // line integral of 1
+        let low = transmission_noise(&sino, 1e3, 7);
+        let high = transmission_noise(&sino, 1e6, 7);
+        let dev = |s: &Sino| {
+            (s.data.iter().map(|&v| ((v - 1.0) as f64).powi(2)).sum::<f64>() / s.len() as f64)
+                .sqrt()
+        };
+        assert!(dev(&high) < 0.5 * dev(&low), "{} vs {}", dev(&high), dev(&low));
+        assert!(dev(&high) > 0.0);
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let mut sino = Sino::zeros2d(4, 16);
+        sino.fill(0.5);
+        let a = transmission_noise(&sino, 1e4, 11);
+        let b = transmission_noise(&sino, 1e4, 11);
+        let c = transmission_noise(&sino, 1e4, 12);
+        assert_eq!(a.data, b.data);
+        assert_ne!(a.data, c.data);
+    }
+
+    #[test]
+    fn zero_attenuation_stays_near_zero() {
+        let sino = Sino::zeros2d(2, 32); // p = 0 → I ≈ I0
+        let noisy = transmission_noise(&sino, 1e5, 3);
+        for &v in &noisy.data {
+            assert!(v.abs() < 0.05, "{v}");
+        }
+    }
+}

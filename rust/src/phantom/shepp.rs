@@ -1,0 +1,138 @@
+//! Shepp-Logan phantoms: the standard 2-D ten-ellipse head phantom
+//! (modified contrast variant of Toft) and the 3-D Kak-Slaney ellipsoid
+//! table, plus a simplified FORBILD-style head.
+//!
+//! Coordinates in the classic tables live in the unit disk; we scale by a
+//! caller-supplied radius in mm so phantoms stay quantitative.
+
+use super::{Phantom, Shape};
+
+/// Modified (high-contrast) 2-D Shepp-Logan. `radius` is the half-width of
+/// the head in mm; densities are scaled by `mu_scale` (mm⁻¹) so the
+/// brightest tissue is `mu_scale`.
+pub fn shepp_logan_2d(radius: f64, mu_scale: f64) -> Phantom {
+    // (cx, cy, a, b, phi_deg, density) — Toft's modified table.
+    const T: [(f64, f64, f64, f64, f64, f64); 10] = [
+        (0.0, 0.0, 0.69, 0.92, 0.0, 1.0),
+        (0.0, -0.0184, 0.6624, 0.874, 0.0, -0.8),
+        (0.22, 0.0, 0.11, 0.31, -18.0, -0.2),
+        (-0.22, 0.0, 0.16, 0.41, 18.0, -0.2),
+        (0.0, 0.35, 0.21, 0.25, 0.0, 0.1),
+        (0.0, 0.1, 0.046, 0.046, 0.0, 0.1),
+        (0.0, -0.1, 0.046, 0.046, 0.0, 0.1),
+        (-0.08, -0.605, 0.046, 0.023, 0.0, 0.1),
+        (0.0, -0.606, 0.023, 0.023, 0.0, 0.1),
+        (0.06, -0.605, 0.023, 0.046, 0.0, 0.1),
+    ];
+    let shapes = T
+        .iter()
+        .map(|&(cx, cy, a, b, deg, d)| {
+            Shape::ellipse2d(
+                cx * radius,
+                cy * radius,
+                a * radius,
+                b * radius,
+                deg.to_radians(),
+                d * mu_scale,
+            )
+        })
+        .collect();
+    Phantom::new(shapes)
+}
+
+/// 3-D Shepp-Logan (Kak & Slaney table, high-contrast densities).
+/// `radius` scales the unit sphere to mm; densities scaled by `mu_scale`.
+pub fn shepp_logan_3d(radius: f64, mu_scale: f64) -> Phantom {
+    // (cx, cy, cz, a, b, c, phi_deg, density)
+    const T: [(f64, f64, f64, f64, f64, f64, f64, f64); 10] = [
+        (0.0, 0.0, 0.0, 0.69, 0.92, 0.81, 0.0, 1.0),
+        (0.0, -0.0184, 0.0, 0.6624, 0.874, 0.78, 0.0, -0.8),
+        (0.22, 0.0, 0.0, 0.11, 0.31, 0.22, -18.0, -0.2),
+        (-0.22, 0.0, 0.0, 0.16, 0.41, 0.28, 18.0, -0.2),
+        (0.0, 0.35, -0.15, 0.21, 0.25, 0.41, 0.0, 0.1),
+        (0.0, 0.1, 0.25, 0.046, 0.046, 0.05, 0.0, 0.1),
+        (0.0, -0.1, 0.25, 0.046, 0.046, 0.05, 0.0, 0.1),
+        (-0.08, -0.605, 0.0, 0.046, 0.023, 0.05, 0.0, 0.1),
+        (0.0, -0.606, 0.0, 0.023, 0.023, 0.02, 0.0, 0.1),
+        (0.06, -0.605, 0.0, 0.023, 0.046, 0.02, 0.0, 0.1),
+    ];
+    let shapes = T
+        .iter()
+        .map(|&(cx, cy, cz, a, b, c, deg, d)| Shape::Ellipsoid {
+            center: [cx * radius, cy * radius, cz * radius],
+            axes: [a * radius, b * radius, c * radius],
+            phi: deg.to_radians(),
+            density: d * mu_scale,
+        })
+        .collect();
+    Phantom::new(shapes)
+}
+
+/// A simplified FORBILD-style head slice: skull shell, brain, ventricle
+/// pair and small lesions — sharper contrast structure than Shepp-Logan,
+/// useful as a second accuracy phantom.
+pub fn forbild_lite_2d(radius: f64, mu_scale: f64) -> Phantom {
+    let r = radius;
+    let m = mu_scale;
+    Phantom::new(vec![
+        // skull (high density shell: outer minus inner)
+        Shape::ellipse2d(0.0, 0.0, 0.95 * r, 0.95 * r, 0.0, 2.0 * m),
+        Shape::ellipse2d(0.0, 0.0, 0.85 * r, 0.85 * r, 0.0, -1.0 * m),
+        // ventricles
+        Shape::ellipse2d(-0.18 * r, 0.08 * r, 0.12 * r, 0.25 * r, 0.3, -0.25 * m),
+        Shape::ellipse2d(0.18 * r, 0.08 * r, 0.12 * r, 0.25 * r, -0.3, -0.25 * m),
+        // lesions
+        Shape::ellipse2d(0.0, -0.4 * r, 0.05 * r, 0.05 * r, 0.0, 0.3 * m),
+        Shape::ellipse2d(0.3 * r, 0.45 * r, 0.03 * r, 0.06 * r, 0.5, 0.4 * m),
+        Shape::rect2d(-0.35 * r, -0.35 * r, 0.06 * r, 0.04 * r, 0.4, 0.35 * m),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::geometry::VolumeGeometry;
+
+    #[test]
+    fn shepp_2d_center_density() {
+        // center of head: 1.0 − 0.8 = 0.2 (no small inserts at origin)
+        let ph = shepp_logan_2d(100.0, 0.02);
+        let mu = ph.mu([0.0, 0.0, 0.0]);
+        assert!((mu - 0.2 * 0.02).abs() < 1e-12, "mu {mu}");
+    }
+
+    #[test]
+    fn shepp_2d_outside_zero() {
+        let ph = shepp_logan_2d(100.0, 0.02);
+        assert_eq!(ph.mu([99.0, 0.0, 0.0]), 0.0);
+    }
+
+    #[test]
+    fn shepp_2d_rasterizes_nonneg_mostly() {
+        let ph = shepp_logan_2d(30.0, 1.0);
+        let vg = VolumeGeometry::slice2d(64, 64, 1.0);
+        let vol = ph.rasterize(&vg, 2);
+        let (lo, hi) = vol.min_max();
+        assert!(lo >= -1e-6, "min {lo}");
+        assert!(hi <= 1.01, "max {hi}");
+        assert!(vol.sum() > 0.0);
+    }
+
+    #[test]
+    fn shepp_3d_midplane_close_to_2d_structure() {
+        let ph3 = shepp_logan_3d(50.0, 1.0);
+        // at z=0 the big ellipsoids dominate; just sanity-check center value
+        let mu = ph3.mu([0.0, 0.0, 0.0]);
+        assert!((mu - 0.2).abs() < 1e-12);
+        // off the top of the head
+        assert_eq!(ph3.mu([0.0, 0.0, 49.0]), 0.0);
+    }
+
+    #[test]
+    fn forbild_skull_brighter_than_brain() {
+        let ph = forbild_lite_2d(80.0, 0.02);
+        let skull = ph.mu([0.0, 0.9 * 80.0, 0.0]);
+        let brain = ph.mu([0.0, 0.0, 0.0]);
+        assert!(skull > brain, "skull {skull} brain {brain}");
+    }
+}

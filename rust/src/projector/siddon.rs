@@ -1,0 +1,211 @@
+//! Siddon's method (Siddon 1985): the exact radiological path of a ray
+//! through a voxel grid.
+//!
+//! The ray is clipped to the grid, then marched from plane crossing to
+//! plane crossing; each segment lies inside exactly one voxel and its
+//! length (mm) is the system-matrix coefficient. The walk is expressed as
+//! a visitor — forward projection accumulates `w·x[idx]`, backprojection
+//! scatters `w·y` — so the forward/back pair shares the *identical*
+//! coefficients and is exactly matched (paper §2.1).
+
+use crate::geometry::{Ray, VolumeGeometry};
+
+/// March `ray` through `vg`, invoking `visit(flat_index, length_mm)` for
+/// every voxel the ray crosses. The flat index uses the `Vol3` layout
+/// (`(k·ny + j)·nx + i`). Direction must be unit length, so `t` is mm.
+pub fn walk_ray<F: FnMut(usize, f32)>(vg: &VolumeGeometry, ray: &Ray, mut visit: F) {
+    let (lo, hi) = vg.bounds();
+    let o = ray.origin;
+    let d = ray.dir;
+
+    // clip to the volume slab-by-slab
+    let mut tmin = f64::NEG_INFINITY;
+    let mut tmax = f64::INFINITY;
+    for ax in 0..3 {
+        if d[ax].abs() < 1e-12 {
+            if o[ax] <= lo[ax] || o[ax] >= hi[ax] {
+                return;
+            }
+        } else {
+            let ta = (lo[ax] - o[ax]) / d[ax];
+            let tb = (hi[ax] - o[ax]) / d[ax];
+            tmin = tmin.max(ta.min(tb));
+            tmax = tmax.min(ta.max(tb));
+        }
+    }
+    if tmin >= tmax {
+        return;
+    }
+
+    let pitch = [vg.vx, vg.vy, vg.vz];
+    let n = [vg.nx, vg.ny, vg.nz];
+
+    // entry voxel
+    let eps = 1e-9;
+    let p_entry = ray.point(tmin + eps);
+    let mut idx = [0i64; 3];
+    let fidx = [vg.ix(p_entry[0]), vg.iy(p_entry[1]), vg.iz(p_entry[2])];
+    for ax in 0..3 {
+        // voxel i spans continuous index [i-0.5, i+0.5)
+        idx[ax] = (fidx[ax] + 0.5).floor() as i64;
+        if idx[ax] < 0 {
+            idx[ax] = 0;
+        }
+        if idx[ax] >= n[ax] as i64 {
+            idx[ax] = n[ax] as i64 - 1;
+        }
+    }
+
+    // per-axis: t of next plane crossing, and t-increment per voxel
+    let mut t_next = [f64::INFINITY; 3];
+    let mut dt = [f64::INFINITY; 3];
+    let mut step = [0i64; 3];
+    let lows = [lo[0], lo[1], lo[2]];
+    for ax in 0..3 {
+        if d[ax] > 1e-12 {
+            step[ax] = 1;
+            // next plane at the voxel's upper edge: lo + (idx+1)·pitch
+            let plane = lows[ax] + (idx[ax] + 1) as f64 * pitch[ax];
+            t_next[ax] = (plane - o[ax]) / d[ax];
+            dt[ax] = pitch[ax] / d[ax];
+        } else if d[ax] < -1e-12 {
+            step[ax] = -1;
+            let plane = lows[ax] + idx[ax] as f64 * pitch[ax];
+            t_next[ax] = (plane - o[ax]) / d[ax];
+            dt[ax] = -pitch[ax] / d[ax];
+        }
+    }
+
+    let nx = vg.nx;
+    let nxy = vg.nx * vg.ny;
+    let mut t = tmin;
+    loop {
+        // the axis whose plane is crossed first
+        let mut ax = 0;
+        if t_next[1] < t_next[ax] {
+            ax = 1;
+        }
+        if t_next[2] < t_next[ax] {
+            ax = 2;
+        }
+        let t_end = t_next[ax].min(tmax);
+        let seg = t_end - t;
+        if seg > 0.0 {
+            let flat = idx[2] as usize * nxy + idx[1] as usize * nx + idx[0] as usize;
+            visit(flat, seg as f32);
+        }
+        if t_next[ax] >= tmax {
+            break;
+        }
+        t = t_next[ax];
+        idx[ax] += step[ax];
+        if idx[ax] < 0 || idx[ax] >= n[ax] as i64 {
+            break;
+        }
+        t_next[ax] += dt[ax];
+    }
+}
+
+/// Total radiological path (mm) of a ray through the grid — the sum of all
+/// visited segment lengths; used by tests and the accuracy bench.
+pub fn path_length(vg: &VolumeGeometry, ray: &Ray) -> f64 {
+    let mut total = 0.0f64;
+    walk_ray(vg, ray, |_, w| total += w as f64);
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::geometry::Ray;
+
+    fn vg(n: usize, voxel: f64) -> VolumeGeometry {
+        VolumeGeometry::cube(n, voxel)
+    }
+
+    #[test]
+    fn axis_aligned_ray_full_path() {
+        let g = vg(8, 2.0); // extent [-8, 8]
+        let ray = Ray::new([-100.0, 0.1, 0.1], [1.0, 0.0, 0.0]);
+        let mut count = 0;
+        let mut total = 0.0;
+        walk_ray(&g, &ray, |_, w| {
+            count += 1;
+            total += w as f64;
+        });
+        assert_eq!(count, 8);
+        assert!((total - 16.0).abs() < 1e-9, "total {total}");
+    }
+
+    #[test]
+    fn diagonal_ray_path() {
+        let g = vg(4, 1.0); // extent [-2,2]³
+        let ray = Ray::new([-10.0, -10.0, 0.1], [1.0, 1.0, 0.0]);
+        let total = path_length(&g, &ray);
+        // in-plane diagonal of a 4×4 square of 1mm voxels = 4√2
+        // (tolerance: segments are accumulated as f32)
+        assert!((total - 4.0 * 2f64.sqrt()).abs() < 1e-5, "total {total}");
+    }
+
+    #[test]
+    fn miss_visits_nothing() {
+        let g = vg(4, 1.0);
+        let ray = Ray::new([-10.0, 5.0, 0.0], [1.0, 0.0, 0.0]);
+        let mut visited = false;
+        walk_ray(&g, &ray, |_, _| visited = true);
+        assert!(!visited);
+    }
+
+    #[test]
+    fn segments_within_voxel_pitch() {
+        let g = vg(16, 0.5);
+        let ray = Ray::new([-20.0, 1.3, -0.7], [0.9, 0.3, 0.1]);
+        walk_ray(&g, &ray, |idx, w| {
+            assert!(idx < 16 * 16 * 16);
+            // a segment can never exceed the voxel diagonal
+            assert!(w as f64 <= (0.25f64 + 0.25 + 0.25).sqrt() + 1e-9);
+            assert!(w > 0.0);
+        });
+    }
+
+    #[test]
+    fn path_equals_chord_for_oblique_ray() {
+        // grid extent [-8,8]²; ray at 30° through center must have chord 16/cos30 within the x-slab clip... compute via clip: the path equals the exact chord through the cube
+        let g = vg(16, 1.0);
+        let dir = [30f64.to_radians().cos(), 30f64.to_radians().sin(), 0.0];
+        let ray = Ray::new([-50.0 * dir[0], -50.0 * dir[1], 0.2], dir);
+        let total = path_length(&g, &ray);
+        // chord through square [-8,8]²: limited by y extent? dir_y=0.5, y span 16 → t_y = 32; x span 16 → t_x=16/cos30≈18.47 → chord = 18.475
+        let expect = 16.0 / 30f64.to_radians().cos();
+        assert!((total - expect).abs() < 1e-5, "total {total} vs {expect}");
+    }
+
+    #[test]
+    fn visits_each_voxel_once() {
+        let g = vg(8, 1.0);
+        // a ray guaranteed to pass through the interior point (0.3, 0.4, 0.2)
+        let dir = [0.8, 0.55, 0.23];
+        let r0 = Ray::new([0.3, 0.4, 0.2], dir);
+        let ray = Ray::new(r0.point(-30.0), dir);
+        let mut seen = std::collections::HashSet::new();
+        walk_ray(&g, &ray, |idx, _| {
+            assert!(seen.insert(idx), "voxel {idx} visited twice");
+        });
+        assert!(!seen.is_empty());
+    }
+
+    #[test]
+    fn invariant_to_origin_along_ray() {
+        // total path must not depend on where along the line the origin
+        // sits (segment lists can differ by zero-length boundary slivers)
+        let g = vg(12, 0.7);
+        let dir = [0.3, -0.8, 0.5];
+        let r0 = Ray::new([0.1, -0.2, 0.3], dir);
+        let r1 = Ray::new(r0.point(-25.0), dir);
+        let r2 = Ray::new(r0.point(13.0), dir);
+        let p1 = path_length(&g, &r1);
+        let p2 = path_length(&g, &r2);
+        assert!(p1 > 1.0, "ray should cross the grid: {p1}");
+        assert!((p1 - p2).abs() < 1e-5, "{p1} vs {p2}");
+    }
+}

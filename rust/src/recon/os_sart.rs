@@ -1,0 +1,109 @@
+//! OS-SART: ordered-subsets SART — SIRT-style updates over interleaved
+//! view subsets for much faster early convergence.
+//!
+//! With `subsets = 1` this degenerates to (masked) SIRT. Subsets are
+//! chosen by the interleaving `view % subsets == s`, the standard
+//! maximal-angular-separation ordering for equiangular scans.
+
+use crate::array::{Sino, Vol3};
+use crate::projector::Projector;
+
+/// Options for [`os_sart`].
+#[derive(Clone, Debug)]
+pub struct OsSartOpts {
+    pub iterations: usize,
+    pub subsets: usize,
+    pub lambda: f32,
+    pub nonneg: bool,
+}
+
+impl Default for OsSartOpts {
+    fn default() -> Self {
+        OsSartOpts { iterations: 10, subsets: 8, lambda: 1.0, nonneg: true }
+    }
+}
+
+/// Run OS-SART from `x0`.
+pub fn os_sart(p: &Projector, y: &Sino, x0: &Vol3, opts: &OsSartOpts) -> Vol3 {
+    let nviews = y.nviews;
+    let subsets = opts.subsets.clamp(1, nviews);
+    let mut x = x0.clone();
+
+    // per-subset normalizations
+    let row_sum_full = p.forward_ones();
+    let mut subset_masks: Vec<Vec<f32>> = Vec::with_capacity(subsets);
+    let mut inv_cols: Vec<Vec<f32>> = Vec::with_capacity(subsets);
+    for s in 0..subsets {
+        let mask: Vec<f32> =
+            (0..nviews).map(|v| if v % subsets == s { 1.0 } else { 0.0 }).collect();
+        let mut ones = p.new_sino();
+        ones.fill(1.0);
+        super::sirt::apply_view_mask(&mut ones, &mask);
+        let col = p.back(&ones);
+        inv_cols.push(col.data.iter().map(|&v| if v > 1e-6 { 1.0 / v } else { 0.0 }).collect());
+        subset_masks.push(mask);
+    }
+    let inv_row: Vec<f32> =
+        row_sum_full.data.iter().map(|&v| if v > 1e-6 { 1.0 / v } else { 0.0 }).collect();
+
+    let mut ax = p.new_sino();
+    for _ in 0..opts.iterations {
+        for s in 0..subsets {
+            p.forward_into(&x, &mut ax);
+            for i in 0..ax.len() {
+                ax.data[i] = (y.data[i] - ax.data[i]) * inv_row[i];
+            }
+            super::sirt::apply_view_mask(&mut ax, &subset_masks[s]);
+            let grad = p.back(&ax);
+            let inv_col = &inv_cols[s];
+            for i in 0..x.len() {
+                let mut v = x.data[i] + opts.lambda * inv_col[i] * grad.data[i];
+                if opts.nonneg && v < 0.0 {
+                    v = 0.0;
+                }
+                x.data[i] = v;
+            }
+        }
+    }
+    x
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::geometry::{Geometry, ParallelBeam, VolumeGeometry};
+    use crate::phantom::shepp::shepp_logan_2d;
+    use crate::projector::Model;
+    use crate::recon::sirt::{sirt, SirtOpts};
+
+    #[test]
+    fn faster_than_sirt_per_full_pass() {
+        let vg = VolumeGeometry::slice2d(24, 24, 1.0);
+        let g = Geometry::Parallel(ParallelBeam::standard_2d(32, 36, 1.0));
+        let p = Projector::new(g, vg.clone(), Model::SF);
+        let truth = shepp_logan_2d(10.0, 0.02).rasterize(&vg, 2);
+        let y = p.forward(&truth);
+        let x0 = p.new_vol();
+        // 3 OS-SART iterations with 8 subsets vs 3 SIRT iterations
+        let os = os_sart(&p, &y, &x0, &OsSartOpts { iterations: 3, subsets: 8, ..Default::default() });
+        let si = sirt(&p, &y, &x0, &SirtOpts { iterations: 3, ..Default::default() });
+        let e_os = crate::metrics::rmse(&os.data, &truth.data);
+        let e_si = crate::metrics::rmse(&si.vol.data, &truth.data);
+        assert!(e_os < e_si, "os-sart {e_os} vs sirt {e_si}");
+    }
+
+    #[test]
+    fn one_subset_equals_sirt() {
+        let vg = VolumeGeometry::slice2d(16, 16, 1.0);
+        let g = Geometry::Parallel(ParallelBeam::standard_2d(12, 24, 1.0));
+        let p = Projector::new(g, vg.clone(), Model::Joseph);
+        let truth = shepp_logan_2d(7.0, 0.02).rasterize(&vg, 2);
+        let y = p.forward(&truth);
+        let x0 = p.new_vol();
+        let os = os_sart(&p, &y, &x0, &OsSartOpts { iterations: 4, subsets: 1, lambda: 0.9, nonneg: true });
+        let si = sirt(&p, &y, &x0, &SirtOpts { iterations: 4, lambda: 0.9, nonneg: true, ..Default::default() });
+        for i in 0..os.len() {
+            assert!((os.data[i] - si.vol.data[i]).abs() < 1e-5, "idx {i}");
+        }
+    }
+}

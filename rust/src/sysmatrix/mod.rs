@@ -1,0 +1,271 @@
+//! Precomputed sparse system-matrix baseline (CSR).
+//!
+//! The paper's introduction argues against this approach (Lahiri et al.
+//! 2023): "this method utilizes an enormous amount of memory (even though
+//! it is a sparse matrix) and is significantly inefficient because
+//! fetching the system matrix values from memory is much slower than
+//! computing these coefficients on the fly". We implement it faithfully —
+//! CSR storage built from the *same* projector coefficients — so Table 1
+//! can quantify both claims on identical numerics: the stored matrix
+//! reproduces the on-the-fly results bit-for-bit while its memory grows as
+//! O(nnz) instead of O(volume + projections).
+
+use crate::array::{Sino, Vol3};
+use crate::geometry::Geometry;
+use crate::projector::{Model, Projector};
+
+/// A CSR sparse matrix mapping volume (columns) to projections (rows).
+#[derive(Clone, Debug)]
+pub struct SystemMatrix {
+    pub nrows: usize,
+    pub ncols_mat: usize,
+    pub row_ptr: Vec<u64>,
+    pub col_idx: Vec<u32>,
+    pub values: Vec<f32>,
+    /// Shape bookkeeping for the sinogram side.
+    pub sino_shape: (usize, usize, usize),
+    pub vol_shape: (usize, usize, usize),
+}
+
+impl SystemMatrix {
+    /// Build the full matrix by enumerating the projector's coefficients:
+    /// ray-by-ray for Siddon/Joseph, voxel-footprint scatter for SF.
+    pub fn build(p: &Projector) -> SystemMatrix {
+        match p.model {
+            Model::Siddon | Model::Joseph => Self::build_ray_driven(p),
+            Model::SF => Self::build_voxel_driven(p),
+        }
+    }
+
+    fn build_ray_driven(p: &Projector) -> SystemMatrix {
+        let nviews = p.geom.nviews();
+        let nrows_det = p.geom.nrows();
+        let ncols_det = p.geom.ncols();
+        let nrays = nviews * nrows_det * ncols_det;
+        let nvox = p.vg.num_voxels();
+        let use_siddon = p.model == Model::Siddon;
+
+        let mut row_ptr = Vec::with_capacity(nrays + 1);
+        let mut col_idx = Vec::new();
+        let mut values = Vec::new();
+        row_ptr.push(0u64);
+        for view in 0..nviews {
+            for row in 0..nrows_det {
+                for col in 0..ncols_det {
+                    let ray = p.geom.ray(view, row, col);
+                    if use_siddon {
+                        crate::projector::siddon::walk_ray(&p.vg, &ray, |idx, w| {
+                            col_idx.push(idx as u32);
+                            values.push(w);
+                        });
+                    } else {
+                        crate::projector::joseph::walk_ray(&p.vg, &ray, |idx, w| {
+                            col_idx.push(idx as u32);
+                            values.push(w);
+                        });
+                    }
+                    row_ptr.push(col_idx.len() as u64);
+                }
+            }
+        }
+        SystemMatrix {
+            nrows: nrays,
+            ncols_mat: nvox,
+            row_ptr,
+            col_idx,
+            values,
+            sino_shape: (nviews, nrows_det, ncols_det),
+            vol_shape: (p.vg.nx, p.vg.ny, p.vg.nz),
+        }
+    }
+
+    fn build_voxel_driven(p: &Projector) -> SystemMatrix {
+        // SF coefficients are enumerated voxel→bins per view; bucket them
+        // per ray, then pack to CSR.
+        let nviews = p.geom.nviews();
+        let nrows_det = p.geom.nrows();
+        let ncols_det = p.geom.ncols();
+        let nrays = nviews * nrows_det * ncols_det;
+        let nvox = p.vg.num_voxels();
+        let mut buckets: Vec<Vec<(u32, f32)>> = vec![Vec::new(); nrays];
+        for view in 0..nviews {
+            let mut emit = |flat: usize, row: usize, col: usize, coeff: f64| {
+                let ray_idx = (view * nrows_det + row) * ncols_det + col;
+                buckets[ray_idx].push((flat as u32, coeff as f32));
+            };
+            match &p.geom {
+                Geometry::Parallel(g) => {
+                    crate::projector::sf::parallel_view_coeffs_pub(&p.vg, g, view, &mut emit)
+                }
+                Geometry::Fan(g) => crate::projector::sf::fan_view_coeffs_pub(
+                    &p.vg,
+                    g,
+                    view,
+                    &mut |flat, col, c| emit(flat, 0, col, c),
+                ),
+                Geometry::Cone(g) => {
+                    crate::projector::sf::cone_view_coeffs_pub(&p.vg, g, view, &mut emit)
+                }
+                Geometry::Modular(_) => {
+                    panic!("SF system matrix undefined for modular beams (DESIGN.md §3)")
+                }
+            }
+        }
+        let mut row_ptr = Vec::with_capacity(nrays + 1);
+        let mut col_idx = Vec::new();
+        let mut values = Vec::new();
+        row_ptr.push(0u64);
+        for b in buckets {
+            for (c, v) in b {
+                col_idx.push(c);
+                values.push(v);
+            }
+            row_ptr.push(col_idx.len() as u64);
+        }
+        SystemMatrix {
+            nrows: nrays,
+            ncols_mat: nvox,
+            row_ptr,
+            col_idx,
+            values,
+            sino_shape: (nviews, nrows_det, ncols_det),
+            vol_shape: (p.vg.nx, p.vg.ny, p.vg.nz),
+        }
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    /// Bytes held by the matrix itself — the Table-1 memory number for the
+    /// baseline (row_ptr + col_idx + values).
+    pub fn nbytes(&self) -> usize {
+        self.row_ptr.len() * 8 + self.col_idx.len() * 4 + self.values.len() * 4
+    }
+
+    /// SpMV forward projection `y = A·x`.
+    pub fn forward(&self, vol: &Vol3) -> Sino {
+        assert_eq!(vol.len(), self.ncols_mat);
+        let (nv, nr, nc) = self.sino_shape;
+        let mut sino = Sino::zeros(nv, nr, nc);
+        for r in 0..self.nrows {
+            let lo = self.row_ptr[r] as usize;
+            let hi = self.row_ptr[r + 1] as usize;
+            let mut acc = 0.0f32;
+            for k in lo..hi {
+                acc += self.values[k] * vol.data[self.col_idx[k] as usize];
+            }
+            sino.data[r] = acc;
+        }
+        sino
+    }
+
+    /// Transpose SpMV backprojection `x = Aᵀ·y` — matched by construction.
+    pub fn back(&self, sino: &Sino) -> Vol3 {
+        assert_eq!(sino.len(), self.nrows);
+        let (nx, ny, nz) = self.vol_shape;
+        let mut vol = Vol3::zeros(nx, ny, nz);
+        for r in 0..self.nrows {
+            let y = sino.data[r];
+            if y == 0.0 {
+                continue;
+            }
+            let lo = self.row_ptr[r] as usize;
+            let hi = self.row_ptr[r + 1] as usize;
+            for k in lo..hi {
+                vol.data[self.col_idx[k] as usize] += self.values[k] * y;
+            }
+        }
+        vol
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::geometry::{ConeBeam, Geometry, ParallelBeam, VolumeGeometry};
+    use crate::util::rng::Rng;
+
+    fn random_vol(p: &Projector, seed: u64) -> Vol3 {
+        let mut rng = Rng::new(seed);
+        let mut v = p.new_vol();
+        rng.fill_uniform(&mut v.data, 0.0, 1.0);
+        v
+    }
+
+    #[test]
+    fn matches_on_the_fly_exactly_ray_driven() {
+        let vg = VolumeGeometry::slice2d(16, 16, 1.0);
+        let g = Geometry::Parallel(ParallelBeam::standard_2d(8, 24, 1.0));
+        for model in [Model::Siddon, Model::Joseph] {
+            let p = Projector::new(g.clone(), vg.clone(), model).with_threads(1);
+            let mat = SystemMatrix::build(&p);
+            let x = random_vol(&p, 3);
+            let direct = p.forward(&x);
+            let via_mat = mat.forward(&x);
+            for i in 0..direct.len() {
+                assert!(
+                    (direct.data[i] - via_mat.data[i]).abs() < 1e-5,
+                    "{}: idx {i}",
+                    model.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn matches_on_the_fly_sf() {
+        let vg = VolumeGeometry::slice2d(12, 12, 1.0);
+        let g = Geometry::Parallel(ParallelBeam::standard_2d(6, 18, 1.0));
+        let p = Projector::new(g, vg, Model::SF).with_threads(1);
+        let mat = SystemMatrix::build(&p);
+        let x = random_vol(&p, 5);
+        let direct = p.forward(&x);
+        let via_mat = mat.forward(&x);
+        for i in 0..direct.len() {
+            assert!((direct.data[i] - via_mat.data[i]).abs() < 1e-4, "idx {i}");
+        }
+    }
+
+    #[test]
+    fn transpose_is_matched() {
+        let vg = VolumeGeometry::cube(8, 1.0);
+        let g = Geometry::Cone(ConeBeam::standard(5, 8, 10, 1.5, 1.5, 50.0, 100.0));
+        let p = Projector::new(g, vg, Model::Joseph).with_threads(1);
+        let mat = SystemMatrix::build(&p);
+        let mut rng = Rng::new(7);
+        let mut x = p.new_vol();
+        let mut y = p.new_sino();
+        rng.fill_uniform(&mut x.data, -1.0, 1.0);
+        rng.fill_uniform(&mut y.data, -1.0, 1.0);
+        let lhs = crate::util::dot_f64(&mat.forward(&x).data, &y.data);
+        let rhs = crate::util::dot_f64(&x.data, &mat.back(&y).data);
+        assert!((lhs - rhs).abs() / lhs.abs().max(1e-12) < 1e-5);
+    }
+
+    #[test]
+    fn memory_exceeds_one_copy() {
+        // the paper's motivation: matrix memory >> one volume + one sino
+        let vg = VolumeGeometry::slice2d(32, 32, 1.0);
+        let g = Geometry::Parallel(ParallelBeam::standard_2d(32, 48, 1.0));
+        let p = Projector::new(g, vg, Model::Siddon).with_threads(1);
+        let mat = SystemMatrix::build(&p);
+        let one_copy = crate::metrics::one_copy_bytes(p.vg.num_voxels(), p.new_sino().len());
+        assert!(
+            mat.nbytes() > 3 * one_copy,
+            "matrix {} vs one-copy {}",
+            mat.nbytes(),
+            one_copy
+        );
+    }
+
+    #[test]
+    fn nnz_matches_row_ptr() {
+        let vg = VolumeGeometry::slice2d(8, 8, 1.0);
+        let g = Geometry::Parallel(ParallelBeam::standard_2d(4, 12, 1.0));
+        let p = Projector::new(g, vg, Model::Joseph).with_threads(1);
+        let mat = SystemMatrix::build(&p);
+        assert_eq!(mat.nnz() as u64, *mat.row_ptr.last().unwrap());
+        assert_eq!(mat.row_ptr.len(), mat.nrows + 1);
+    }
+}

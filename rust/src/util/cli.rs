@@ -1,0 +1,119 @@
+//! Tiny command-line parser (clap replacement).
+//!
+//! Supports `leap <subcommand> --key value --flag` style invocations. Typed
+//! getters with defaults keep the CLI code in `main.rs` compact.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: a subcommand, positional args and `--key value`
+/// options (a `--key` followed by another `--` or end-of-args is a flag).
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub subcommand: String,
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Args {
+        let mut out = Args::default();
+        let mut it = args.into_iter().peekable();
+        if let Some(first) = it.peek() {
+            if !first.starts_with("--") {
+                out.subcommand = it.next().unwrap();
+            }
+        }
+        while let Some(a) = it.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                match it.peek() {
+                    Some(v) if !v.starts_with("--") => {
+                        out.options.insert(key.to_string(), it.next().unwrap());
+                    }
+                    _ => out.flags.push(key.to_string()),
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    /// Parse from the process arguments.
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn str_opt(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, name: &str, default: &str) -> String {
+        self.str_opt(name).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> usize {
+        self.str_opt(name).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> f64 {
+        self.str_opt(name).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> u64 {
+        self.str_opt(name).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|x| x.to_string()))
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse("project out.raw --nx 256 --geometry parallel --verbose");
+        assert_eq!(a.subcommand, "project");
+        assert_eq!(a.usize_or("nx", 0), 256);
+        assert_eq!(a.str_or("geometry", ""), "parallel");
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional, vec!["out.raw"]);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse("fbp");
+        assert_eq!(a.usize_or("nx", 128), 128);
+        assert_eq!(a.f64_or("pitch", 1.5), 1.5);
+        assert!(!a.flag("verbose"));
+    }
+
+    #[test]
+    fn flag_before_flag() {
+        let a = parse("x --a --b 3");
+        assert!(a.flag("a"));
+        assert_eq!(a.usize_or("b", 0), 3);
+    }
+
+    #[test]
+    fn no_subcommand() {
+        let a = parse("--help");
+        assert_eq!(a.subcommand, "");
+        assert!(a.flag("help"));
+    }
+
+    #[test]
+    fn negative_number_value() {
+        // a value starting with '-' but not '--' is still a value
+        let a = parse("x --offset -1.5");
+        assert_eq!(a.f64_or("offset", 0.0), -1.5);
+    }
+}

@@ -1,0 +1,149 @@
+//! Radix-2 complex FFT (iterative Cooley-Tukey) + real-signal helpers.
+//!
+//! Built for the FBP/FDK ramp filtering in [`crate::recon::filters`]:
+//! sinogram rows are zero-padded to the next power of two, filtered in the
+//! frequency domain and inverse-transformed. Accuracy is f64 throughout —
+//! filtering error must sit well below projector discretization error.
+
+use std::f64::consts::PI;
+
+/// In-place complex FFT of `(re, im)`. `inverse=true` applies the 1/n
+/// normalization. Length must be a power of two.
+pub fn fft_inplace(re: &mut [f64], im: &mut [f64], inverse: bool) {
+    let n = re.len();
+    assert_eq!(n, im.len());
+    assert!(n.is_power_of_two(), "fft length {n} must be a power of two");
+    if n <= 1 {
+        return;
+    }
+    // bit-reversal permutation
+    let bits = n.trailing_zeros();
+    for i in 0..n {
+        let j = i.reverse_bits() >> (usize::BITS - bits);
+        if j > i {
+            re.swap(i, j);
+            im.swap(i, j);
+        }
+    }
+    let sign = if inverse { 1.0 } else { -1.0 };
+    let mut len = 2;
+    while len <= n {
+        let ang = sign * 2.0 * PI / len as f64;
+        let (wr, wi) = (ang.cos(), ang.sin());
+        let mut i = 0;
+        while i < n {
+            let (mut cr, mut ci) = (1.0f64, 0.0f64);
+            for j in 0..len / 2 {
+                let a = i + j;
+                let b = i + j + len / 2;
+                let tr = re[b] * cr - im[b] * ci;
+                let ti = re[b] * ci + im[b] * cr;
+                re[b] = re[a] - tr;
+                im[b] = im[a] - ti;
+                re[a] += tr;
+                im[a] += ti;
+                let ncr = cr * wr - ci * wi;
+                ci = cr * wi + ci * wr;
+                cr = ncr;
+            }
+            i += len;
+        }
+        len <<= 1;
+    }
+    if inverse {
+        let inv = 1.0 / n as f64;
+        for i in 0..n {
+            re[i] *= inv;
+            im[i] *= inv;
+        }
+    }
+}
+
+/// Next power of two ≥ `n`.
+pub fn next_pow2(n: usize) -> usize {
+    n.next_power_of_two()
+}
+
+/// Filter a real signal with a real, even frequency response.
+///
+/// `signal` is zero-padded to `nfft ≥ 2·len` (caller chooses), transformed,
+/// multiplied by `freq_response[k]` (length `nfft`), inverse-transformed and
+/// truncated back to `len`.
+pub fn filter_real(signal: &[f32], freq_response: &[f64], out: &mut [f32]) {
+    let nfft = freq_response.len();
+    assert!(nfft.is_power_of_two());
+    assert!(signal.len() <= nfft);
+    assert_eq!(signal.len(), out.len());
+    let mut re = vec![0.0f64; nfft];
+    let mut im = vec![0.0f64; nfft];
+    for (i, &s) in signal.iter().enumerate() {
+        re[i] = s as f64;
+    }
+    fft_inplace(&mut re, &mut im, false);
+    for k in 0..nfft {
+        re[k] *= freq_response[k];
+        im[k] *= freq_response[k];
+    }
+    fft_inplace(&mut re, &mut im, true);
+    for i in 0..out.len() {
+        out[i] = re[i] as f32;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fft_roundtrip() {
+        let n = 64;
+        let mut re: Vec<f64> = (0..n).map(|i| (i as f64 * 0.37).sin()).collect();
+        let mut im = vec![0.0; n];
+        let orig = re.clone();
+        fft_inplace(&mut re, &mut im, false);
+        fft_inplace(&mut re, &mut im, true);
+        for i in 0..n {
+            assert!((re[i] - orig[i]).abs() < 1e-12, "i={i}");
+            assert!(im[i].abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn fft_of_impulse_is_flat() {
+        let n = 16;
+        let mut re = vec![0.0; n];
+        let mut im = vec![0.0; n];
+        re[0] = 1.0;
+        fft_inplace(&mut re, &mut im, false);
+        for k in 0..n {
+            assert!((re[k] - 1.0).abs() < 1e-12);
+            assert!(im[k].abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn fft_single_tone_peaks_at_bin() {
+        let n = 128;
+        let f = 5;
+        let mut re: Vec<f64> =
+            (0..n).map(|i| (2.0 * PI * f as f64 * i as f64 / n as f64).cos()).collect();
+        let mut im = vec![0.0; n];
+        fft_inplace(&mut re, &mut im, false);
+        let mag: Vec<f64> = (0..n).map(|k| (re[k] * re[k] + im[k] * im[k]).sqrt()).collect();
+        let peak = mag.iter().cloned().fold(0.0, f64::max);
+        assert!((mag[f] - n as f64 / 2.0).abs() < 1e-9);
+        assert!((peak - mag[f]).abs() < 1e-9);
+    }
+
+    #[test]
+    fn identity_filter_is_identity() {
+        let sig: Vec<f32> = (0..50).map(|i| (i as f32 * 0.1).cos()).collect();
+        let nfft = next_pow2(2 * sig.len());
+        let resp = vec![1.0f64; nfft];
+        let mut out = vec![0.0f32; sig.len()];
+        filter_real(&sig, &resp, &mut out);
+        for i in 0..sig.len() {
+            assert!((out[i] - sig[i]).abs() < 1e-5);
+        }
+    }
+}

@@ -1,0 +1,69 @@
+//! Self-contained substrates: PRNG, JSON, thread-pool, CLI parsing.
+//!
+//! The build environment vendors only the `xla` crate's dependency closure,
+//! so every other substrate this repo needs is implemented here from
+//! scratch. Each submodule is small, tested and dependency-free.
+
+pub mod rng;
+pub mod json;
+pub mod pool;
+pub mod cli;
+pub mod fft;
+
+/// Clamp a float into `[lo, hi]`.
+#[inline]
+pub fn clampf(x: f64, lo: f64, hi: f64) -> f64 {
+    if x < lo {
+        lo
+    } else if x > hi {
+        hi
+    } else {
+        x
+    }
+}
+
+/// Relative L2 error `‖a − b‖ / max(‖b‖, eps)` between two slices.
+pub fn rel_l2(a: &[f32], b: &[f32], eps: f64) -> f64 {
+    assert_eq!(a.len(), b.len(), "rel_l2: length mismatch");
+    let mut num = 0.0f64;
+    let mut den = 0.0f64;
+    for (&x, &y) in a.iter().zip(b.iter()) {
+        let d = (x - y) as f64;
+        num += d * d;
+        den += (y as f64) * (y as f64);
+    }
+    (num.sqrt()) / den.sqrt().max(eps)
+}
+
+/// Dot product of two `f32` slices accumulated in `f64` — used by the
+/// adjoint `⟨Ax, y⟩ = ⟨x, Aᵀy⟩` tests where f32 accumulation would swamp
+/// the signal.
+pub fn dot_f64(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len(), "dot_f64: length mismatch");
+    a.iter().zip(b.iter()).map(|(&x, &y)| x as f64 * y as f64).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clampf_bounds() {
+        assert_eq!(clampf(-1.0, 0.0, 2.0), 0.0);
+        assert_eq!(clampf(3.0, 0.0, 2.0), 2.0);
+        assert_eq!(clampf(1.5, 0.0, 2.0), 1.5);
+    }
+
+    #[test]
+    fn rel_l2_zero_for_identical() {
+        let a = [1.0f32, 2.0, 3.0];
+        assert!(rel_l2(&a, &a, 1e-12) < 1e-12);
+    }
+
+    #[test]
+    fn dot_matches_manual() {
+        let a = [1.0f32, 2.0, 3.0];
+        let b = [4.0f32, 5.0, 6.0];
+        assert_eq!(dot_f64(&a, &b), 32.0);
+    }
+}

@@ -1,0 +1,163 @@
+//! Scoped data-parallel helpers over `std::thread` (rayon replacement).
+//!
+//! The projector drivers parallelize over views (forward) or voxel slabs
+//! (backprojection). `parallel_chunks` splits an index range into
+//! contiguous chunks, one per worker, and runs the closure in scoped
+//! threads; `parallel_map_reduce` additionally collects per-worker partial
+//! results (used for per-thread accumulation volumes in scatter-style
+//! backprojection, which keeps the pair *exactly* matched without atomics).
+
+/// Number of workers to use: `LEAP_THREADS` env var, else available
+/// parallelism, else 1.
+pub fn default_threads() -> usize {
+    if let Ok(v) = std::env::var("LEAP_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Split `n` items into at most `workers` contiguous `(start, end)` chunks.
+pub fn chunk_ranges(n: usize, workers: usize) -> Vec<(usize, usize)> {
+    if n == 0 {
+        return vec![];
+    }
+    let workers = workers.max(1).min(n);
+    let base = n / workers;
+    let rem = n % workers;
+    let mut out = Vec::with_capacity(workers);
+    let mut start = 0;
+    for w in 0..workers {
+        let len = base + usize::from(w < rem);
+        out.push((start, start + len));
+        start += len;
+    }
+    out
+}
+
+/// Run `f(start, end)` over contiguous chunks of `0..n` in parallel.
+pub fn parallel_chunks<F>(n: usize, workers: usize, f: F)
+where
+    F: Fn(usize, usize) + Sync,
+{
+    let ranges = chunk_ranges(n, workers);
+    if ranges.len() <= 1 {
+        if let Some(&(s, e)) = ranges.first() {
+            f(s, e);
+        }
+        return;
+    }
+    std::thread::scope(|scope| {
+        for &(s, e) in &ranges {
+            let f = &f;
+            scope.spawn(move || f(s, e));
+        }
+    });
+}
+
+/// Run `f(start, end) -> T` over chunks of `0..n` and reduce the partial
+/// results with `reduce`. Chunks are reduced in index order, so the result
+/// is deterministic for associative-but-not-commutative reducers too.
+pub fn parallel_map_reduce<T, F, R>(n: usize, workers: usize, f: F, reduce: R) -> Option<T>
+where
+    T: Send,
+    F: Fn(usize, usize) -> T + Sync,
+    R: Fn(T, T) -> T,
+{
+    let ranges = chunk_ranges(n, workers);
+    if ranges.is_empty() {
+        return None;
+    }
+    if ranges.len() == 1 {
+        let (s, e) = ranges[0];
+        return Some(f(s, e));
+    }
+    let mut parts: Vec<Option<T>> = Vec::new();
+    parts.resize_with(ranges.len(), || None);
+    std::thread::scope(|scope| {
+        for (slot, &(s, e)) in parts.iter_mut().zip(ranges.iter()) {
+            let f = &f;
+            scope.spawn(move || {
+                *slot = Some(f(s, e));
+            });
+        }
+    });
+    let mut it = parts.into_iter().map(|p| p.expect("worker panicked"));
+    let first = it.next()?;
+    Some(it.fold(first, reduce))
+}
+
+/// Element-wise `dst += src` (the reduction step for per-thread volumes).
+pub fn add_assign(dst: &mut [f32], src: &[f32]) {
+    assert_eq!(dst.len(), src.len());
+    for (d, &s) in dst.iter_mut().zip(src.iter()) {
+        *d += s;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn chunks_cover_exactly() {
+        for n in [0usize, 1, 2, 7, 100, 101] {
+            for w in [1usize, 2, 3, 8, 200] {
+                let r = chunk_ranges(n, w);
+                let total: usize = r.iter().map(|&(s, e)| e - s).sum();
+                assert_eq!(total, n, "n={n} w={w}");
+                // contiguous, ordered, non-empty
+                let mut prev = 0;
+                for &(s, e) in &r {
+                    assert_eq!(s, prev);
+                    assert!(e > s);
+                    prev = e;
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_chunks_visits_all() {
+        let count = AtomicUsize::new(0);
+        parallel_chunks(1000, 4, |s, e| {
+            count.fetch_add(e - s, Ordering::Relaxed);
+        });
+        assert_eq!(count.load(Ordering::Relaxed), 1000);
+    }
+
+    #[test]
+    fn map_reduce_sums() {
+        let total =
+            parallel_map_reduce(100, 7, |s, e| (s..e).sum::<usize>(), |a, b| a + b).unwrap();
+        assert_eq!(total, (0..100).sum::<usize>());
+    }
+
+    #[test]
+    fn map_reduce_empty() {
+        assert_eq!(parallel_map_reduce(0, 4, |_, _| 1usize, |a, b| a + b), None);
+    }
+
+    #[test]
+    fn map_reduce_order_deterministic() {
+        // Concatenation is associative but not commutative: chunk order must
+        // be preserved regardless of which worker finishes first.
+        let s = parallel_map_reduce(
+            26,
+            5,
+            |s, e| (s..e).map(|i| (b'a' + i as u8) as char).collect::<String>(),
+            |a, b| a + &b,
+        )
+        .unwrap();
+        assert_eq!(s, "abcdefghijklmnopqrstuvwxyz");
+    }
+
+    #[test]
+    fn add_assign_works() {
+        let mut a = vec![1.0f32; 4];
+        add_assign(&mut a, &[2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(a, vec![3.0, 4.0, 5.0, 6.0]);
+    }
+}

@@ -1,0 +1,94 @@
+//! Coordinator integration: the full serving stack (TCP server → batcher →
+//! worker pool → native executor) on a real projection workload.
+
+use std::sync::Arc;
+
+use leap::coordinator::server::{Client, Server};
+use leap::coordinator::{BatchPolicy, Coordinator, Executor, NativeExecutor, Router};
+use leap::geometry::{Geometry, ParallelBeam, VolumeGeometry};
+use leap::phantom::shepp;
+use leap::projector::{Model, Projector};
+
+fn native_stack() -> (Arc<Coordinator>, VolumeGeometry, ParallelBeam) {
+    let vg = VolumeGeometry::slice2d(32, 32, 1.0);
+    let g = ParallelBeam::standard_2d(24, 48, 1.0);
+    let p = Projector::new(Geometry::Parallel(g.clone()), vg.clone(), Model::SF);
+    let router: Arc<dyn Executor> = Arc::new(Router::new(vec![Arc::new(NativeExecutor::new(p))]));
+    let coord = Arc::new(Coordinator::new(router, BatchPolicy::default(), 1 << 28, 2));
+    (coord, vg, g)
+}
+
+#[test]
+fn native_fp_bp_roundtrip_over_tcp() {
+    let (coord, vg, _g) = native_stack();
+    let server = Server::start("127.0.0.1:0", coord).unwrap();
+    let mut client = Client::connect(&server.addr).unwrap();
+
+    let phantom = shepp::shepp_logan_2d(14.0, 0.02);
+    let truth = phantom.rasterize(&vg, 2);
+
+    let reply = client.call("native_fp", &[&truth.data]).unwrap();
+    let outputs = reply.get("outputs").unwrap().as_arr().unwrap();
+    let sino: Vec<f32> =
+        outputs[0].as_arr().unwrap().iter().map(|v| v.as_f64().unwrap() as f32).collect();
+    assert_eq!(sino.len(), 24 * 48);
+    assert!(sino.iter().cloned().fold(0.0f32, f32::max) > 0.1);
+
+    let reply = client.call("native_fbp", &[&sino]).unwrap();
+    let rec: Vec<f32> = reply.get("outputs").unwrap().as_arr().unwrap()[0]
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|v| v.as_f64().unwrap() as f32)
+        .collect();
+    let psnr = leap::metrics::psnr(&rec, &truth.data, None);
+    assert!(psnr > 18.0, "served FBP psnr {psnr}");
+}
+
+#[test]
+fn unknown_op_is_an_error_response() {
+    let (coord, _, _) = native_stack();
+    let server = Server::start("127.0.0.1:0", coord).unwrap();
+    let mut client = Client::connect(&server.addr).unwrap();
+    let reply = client.call("native_warp", &[&[1.0]]).unwrap();
+    assert!(reply.get_str("error").unwrap().contains("no backend"));
+}
+
+#[test]
+fn stats_reflect_served_load() {
+    let (coord, vg, _) = native_stack();
+    let server = Server::start("127.0.0.1:0", coord).unwrap();
+    let mut client = Client::connect(&server.addr).unwrap();
+    let vol = vec![0.01f32; vg.num_voxels()];
+    for _ in 0..5 {
+        client.call("native_fp", &[&vol]).unwrap();
+    }
+    let stats = client.stats().unwrap();
+    let fp = stats.get("stats").unwrap().get("native_fp").unwrap();
+    assert_eq!(fp.get_f64("count"), Some(5.0));
+    assert_eq!(fp.get_f64("errors"), Some(0.0));
+}
+
+#[test]
+fn concurrent_clients_throughput() {
+    let (coord, vg, _) = native_stack();
+    let server = Server::start("127.0.0.1:0", coord.clone()).unwrap();
+    let addr = server.addr;
+    let nvox = vg.num_voxels();
+    let mut handles = Vec::new();
+    for t in 0..3 {
+        handles.push(std::thread::spawn(move || {
+            let mut client = Client::connect(&addr).unwrap();
+            let vol = vec![0.005f32 * (t + 1) as f32; nvox];
+            for _ in 0..8 {
+                let r = client.call("native_fp", &[&vol]).unwrap();
+                assert!(r.get("outputs").is_some(), "{r}");
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    let snap = coord.telemetry().snapshot();
+    assert_eq!(snap["native_fp"].count, 24);
+}

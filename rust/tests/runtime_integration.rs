@@ -1,0 +1,175 @@
+//! Runtime integration: the AOT artifacts (JAX/Pallas → HLO → PJRT)
+//! agree numerically with the native Rust projectors — the cross-language
+//! correctness proof that the three layers implement one model.
+//!
+//! Requires `make artifacts` (skips with a message otherwise).
+
+use leap::geometry::{angles_deg, Geometry, ParallelBeam, VolumeGeometry};
+use leap::metrics;
+use leap::phantom::shepp;
+use leap::projector::{Model, Projector};
+use leap::runtime::Engine;
+use leap::util::rel_l2;
+
+fn engine() -> Option<Engine> {
+    match Engine::load("artifacts") {
+        Ok(e) => Some(e),
+        Err(err) => {
+            eprintln!("skipping runtime integration: {err:#}");
+            None
+        }
+    }
+}
+
+/// Build the native projector matching the artifact spec.
+fn native_for(engine: &Engine, model: Model) -> (Projector, VolumeGeometry) {
+    let spec = &engine.spec;
+    let vg = VolumeGeometry::slice2d(spec.n, spec.n, spec.voxel);
+    let g = ParallelBeam {
+        nrows: 1,
+        ncols: spec.ncols,
+        du: spec.du,
+        dv: spec.du,
+        cu: 0.0,
+        cv: 0.0,
+        angles: angles_deg(spec.nviews, 0.0, spec.arc_deg),
+    };
+    (Projector::new(Geometry::Parallel(g), vg.clone(), model), vg)
+}
+
+#[test]
+fn artifact_fp_matches_native_sf() {
+    let Some(engine) = engine() else { return };
+    let (p, vg) = native_for(&engine, Model::SF);
+    let ph = shepp::shepp_logan_2d(0.4 * vg.nx as f64 * vg.vx, 0.02);
+    let vol = ph.rasterize(&vg, 2);
+    let native = p.forward(&vol);
+    let artifact = engine.run1("fp_sf", &[&vol.data]).unwrap();
+    let err = rel_l2(&artifact, &native.data, 1e-12);
+    assert!(err < 1e-4, "artifact vs native SF forward: rel {err}");
+}
+
+#[test]
+fn artifact_fp_matches_native_joseph() {
+    let Some(engine) = engine() else { return };
+    let (p, vg) = native_for(&engine, Model::Joseph);
+    let ph = shepp::shepp_logan_2d(0.4 * vg.nx as f64 * vg.vx, 0.02);
+    let vol = ph.rasterize(&vg, 2);
+    let native = p.forward(&vol);
+    let artifact = engine.run1("fp_joseph", &[&vol.data]).unwrap();
+    let err = rel_l2(&artifact, &native.data, 1e-12);
+    assert!(err < 1e-4, "artifact vs native joseph forward: rel {err}");
+}
+
+#[test]
+fn artifact_bp_matches_native() {
+    let Some(engine) = engine() else { return };
+    let (p, _vg) = native_for(&engine, Model::SF);
+    let mut rng = leap::util::rng::Rng::new(5);
+    let mut sino = p.new_sino();
+    rng.fill_uniform(&mut sino.data, 0.0, 1.0);
+    let native = p.back(&sino);
+    let artifact = engine.run1("bp_sf", &[&sino.data]).unwrap();
+    let err = rel_l2(&artifact, &native.data, 1e-12);
+    assert!(err < 1e-4, "artifact vs native SF back: rel {err}");
+}
+
+#[test]
+fn artifact_adjoint_identity() {
+    let Some(engine) = engine() else { return };
+    let spec = engine.spec.clone();
+    let mut rng = leap::util::rng::Rng::new(9);
+    let mut x = vec![0.0f32; spec.n * spec.n];
+    let mut y = vec![0.0f32; spec.nviews * spec.ncols];
+    rng.fill_uniform(&mut x, -1.0, 1.0);
+    rng.fill_uniform(&mut y, -1.0, 1.0);
+    let ax = engine.run1("fp_sf", &[&x]).unwrap();
+    let aty = engine.run1("bp_sf", &[&y]).unwrap();
+    let lhs = leap::util::dot_f64(&ax, &y);
+    let rhs = leap::util::dot_f64(&x, &aty);
+    let gap = (lhs - rhs).abs() / lhs.abs().max(1e-12);
+    assert!(gap < 1e-4, "artifact adjoint gap {gap}");
+}
+
+#[test]
+fn artifact_fbp_reconstructs() {
+    let Some(engine) = engine() else { return };
+    let (_, vg) = native_for(&engine, Model::SF);
+    let ph = shepp::shepp_logan_2d(0.35 * vg.nx as f64 * vg.vx, 0.02);
+    let truth = ph.rasterize(&vg, 2);
+    let sino = engine.run1("fp_sf", &[&truth.data]).unwrap();
+    let rec = engine.run1("fbp", &[&sino]).unwrap();
+    let psnr = metrics::psnr(&rec, &truth.data, None);
+    assert!(psnr > 24.0, "artifact FBP psnr {psnr}");
+}
+
+#[test]
+fn artifact_dc_refine_improves_prior() {
+    let Some(engine) = engine() else { return };
+    let spec = engine.spec.clone();
+    let (_, vg) = native_for(&engine, Model::SF);
+    let ph = shepp::shepp_logan_2d(0.35 * vg.nx as f64 * vg.vx, 0.02);
+    let truth = ph.rasterize(&vg, 2);
+    let y = engine.run1("fp_sf", &[&truth.data]).unwrap();
+    let keep = spec.nviews / 3;
+    let mask: Vec<f32> = (0..spec.nviews).map(|v| if v < keep { 1.0 } else { 0.0 }).collect();
+    // imperfect prior
+    let pred: Vec<f32> = truth.data.iter().map(|&v| v * 0.85).collect();
+    let refined = engine.run1("dc_refine", &[&pred, &y, &mask]).unwrap();
+    let psnr_pred = metrics::psnr(&pred, &truth.data, None);
+    let psnr_ref = metrics::psnr(&refined, &truth.data, None);
+    assert!(psnr_ref > psnr_pred + 0.5, "dc_refine: {psnr_pred} → {psnr_ref}");
+}
+
+#[test]
+fn artifact_dc_loss_grad_matches_native_residual() {
+    let Some(engine) = engine() else { return };
+    let spec = engine.spec.clone();
+    let (p, vg) = native_for(&engine, Model::SF);
+    let mut rng = leap::util::rng::Rng::new(3);
+    let mut x = vec![0.0f32; vg.nx * vg.ny];
+    let mut y = vec![0.0f32; spec.nviews * spec.ncols];
+    rng.fill_uniform(&mut x, 0.0, 0.05);
+    rng.fill_uniform(&mut y, 0.0, 1.0);
+    let mask = vec![1.0f32; spec.nviews];
+    let out = engine.run("dc_loss_grad", &[&x, &y, &mask]).unwrap();
+    assert_eq!(out.len(), 2, "value + grad");
+    let loss = out[0][0] as f64;
+    // native: ½‖Ax−y‖²
+    let vol = leap::Vol3::from_vec(vg.nx, vg.ny, 1, x.clone());
+    let ax = p.forward(&vol);
+    let native_loss: f64 = ax
+        .data
+        .iter()
+        .zip(y.iter())
+        .map(|(&a, &b)| {
+            let d = (a - b) as f64;
+            0.5 * d * d
+        })
+        .sum();
+    let rel = (loss - native_loss).abs() / native_loss.max(1e-12);
+    assert!(rel < 1e-3, "loss {loss} vs native {native_loss}");
+    // grad = Aᵀ(Ax−y)
+    let mut resid = ax.clone();
+    for i in 0..resid.len() {
+        resid.data[i] -= y[i];
+    }
+    let native_grad = p.back(&resid);
+    let err = rel_l2(&out[1], &native_grad.data, 1e-12);
+    assert!(err < 1e-3, "grad rel err {err}");
+}
+
+#[test]
+fn coordinator_serves_artifacts_end_to_end() {
+    let Some(_) = engine() else { return };
+    use leap::coordinator::{BatchPolicy, Coordinator, Executor, Request, Router};
+    use std::sync::Arc;
+    let host = leap::runtime::EngineHost::load("artifacts").unwrap();
+    let n = host.spec.n;
+    let router: Arc<dyn Executor> = Arc::new(Router::new(vec![Arc::new(host)]));
+    let coord = Coordinator::new(router, BatchPolicy::default(), 1 << 30, 2);
+    let vol = vec![0.01f32; n * n];
+    let resp = coord.call(Request::new(1, "fp_sf", vec![vol]));
+    assert!(resp.ok(), "{:?}", resp.error);
+    assert!(resp.outputs[0].iter().any(|&v| v > 0.0));
+}
