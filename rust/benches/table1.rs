@@ -101,6 +101,30 @@ fn main() {
             all.push(mb);
         }
 
+        // plan/execute: amortized A / Aᵀ cost with per-view invariants
+        // cached once (what iterative solvers and the coordinator pay)
+        {
+            let p = Projector::new(case.geom.clone(), case.vg.clone(), Model::SF);
+            let plan = p.plan();
+            let mut m = bench.run(&format!("{} fwd sf (plan reuse)", case.name), || {
+                let mut s = p.new_sino();
+                p.forward_with_plan(&plan, &vol, &mut s);
+                s
+            });
+            let rays = p.new_sino().len() as f64;
+            m.notes.push(("rays_per_s".into(), rays / m.mean_s));
+            m.print();
+            let sino = plan.forward(&vol);
+            let mb = bench.run(&format!("{} back sf (plan reuse)", case.name), || {
+                let mut v = p.new_vol();
+                p.back_with_plan(&plan, &sino, &mut v);
+                v
+            });
+            mb.print();
+            all.push(m);
+            all.push(mb);
+        }
+
         if case.with_matrix {
             // stored-matrix baseline (Lahiri-style): build cost + memory +
             // fetch-bound SpMV apply

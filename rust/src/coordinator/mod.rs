@@ -14,6 +14,7 @@
 
 pub mod batcher;
 pub mod budget;
+pub mod plan_cache;
 pub mod request;
 pub mod server;
 pub mod telemetry;
@@ -28,6 +29,7 @@ use anyhow::Result;
 
 pub use batcher::{BatchPolicy, Batcher};
 pub use budget::MemoryBudget;
+pub use plan_cache::PlanCache;
 pub use request::{Request, Response};
 pub use telemetry::Telemetry;
 
@@ -61,14 +63,38 @@ impl Executor for crate::runtime::EngineHost {
 }
 
 /// Native-projector backend: the Rust on-the-fly pairs plus FBP, for the
-/// scan described by a [`crate::geometry::config::ScanConfig`].
+/// scan described by a [`crate::geometry::config::ScanConfig`]. Holds a
+/// [`crate::projector::ProjectionPlan`] so every served projection skips
+/// per-view re-planning; plans are shared across executors for the same
+/// scan config through the [`plan_cache::global`] cache, and built
+/// lazily on the first `native_fp`/`native_bp` request so FBP-only
+/// workloads never pay for (or pin) a plan.
 pub struct NativeExecutor {
     pub projector: crate::projector::Projector,
+    plan: std::sync::OnceLock<Arc<crate::projector::ProjectionPlan>>,
 }
 
 impl NativeExecutor {
+    /// Build an executor; its plan is fetched from (or planned into) the
+    /// process-wide cache on first projection use.
     pub fn new(projector: crate::projector::Projector) -> NativeExecutor {
-        NativeExecutor { projector }
+        NativeExecutor { projector, plan: std::sync::OnceLock::new() }
+    }
+
+    /// Build an executor around an explicit plan (e.g. from a scoped
+    /// [`PlanCache`]). Panics if the plan describes a different scan.
+    pub fn with_plan(
+        projector: crate::projector::Projector,
+        plan: Arc<crate::projector::ProjectionPlan>,
+    ) -> NativeExecutor {
+        assert!(plan.matches(&projector), "plan was built for a different scan");
+        let cell = std::sync::OnceLock::new();
+        let _ = cell.set(plan);
+        NativeExecutor { projector, plan: cell }
+    }
+
+    fn plan(&self) -> &Arc<crate::projector::ProjectionPlan> {
+        self.plan.get_or_init(|| plan_cache::global().get_or_plan(&self.projector))
     }
 
     fn vol_from(&self, buf: &[f32]) -> Result<crate::array::Vol3> {
@@ -91,11 +117,15 @@ impl Executor for NativeExecutor {
         match op {
             "native_fp" => {
                 let vol = self.vol_from(inputs[0])?;
-                Ok(vec![self.projector.forward(&vol).data])
+                let mut sino = self.projector.new_sino();
+                self.projector.forward_with_plan(self.plan(), &vol, &mut sino);
+                Ok(vec![sino.data])
             }
             "native_bp" => {
                 let sino = self.sino_from(inputs[0])?;
-                Ok(vec![self.projector.back(&sino).data])
+                let mut vol = self.projector.new_vol();
+                self.projector.back_with_plan(self.plan(), &sino, &mut vol);
+                Ok(vec![vol.data])
             }
             "native_fbp" => {
                 let sino = self.sino_from(inputs[0])?;

@@ -1,0 +1,268 @@
+//! Projection-plan cache keyed by scan configuration.
+//!
+//! Serving traffic repeats scan configs: every request against the same
+//! geometry/volume/model triple can share one [`ProjectionPlan`]. The
+//! cache key is the canonical JSON serialization of the scan config
+//! ([`crate::geometry::config::scan_to_string`]) plus model and thread
+//! count, so anything that round-trips to the same config shares a plan.
+//! [`super::NativeExecutor::new`] consults the process-wide [`global`]
+//! cache — repeated executors (one per `serve` request router, per
+//! connection, per test) skip planning entirely.
+//!
+//! Bounded FIFO eviction keeps the cache from pinning cone-beam plans
+//! (`O(nviews·nx·ny)` each) for scans that stopped arriving.
+
+use std::collections::{HashMap, HashSet};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+
+use crate::geometry::config::{scan_to_string, ScanConfig};
+use crate::projector::{ProjectionPlan, Projector};
+
+/// A bounded, thread-safe plan cache — bounded both by entry count and by
+/// approximate resident bytes ([`ProjectionPlan::approx_heap_bytes`]), so
+/// a handful of large cone-beam plans cannot silently pin gigabytes the
+/// coordinator's [`super::MemoryBudget`] never sees. Clone the returned
+/// `Arc`s freely; eviction only drops the cache's own reference.
+pub struct PlanCache {
+    cap: usize,
+    max_bytes: usize,
+    inner: Mutex<CacheInner>,
+    /// Signals completion of an in-flight planning job.
+    cv: Condvar,
+}
+
+struct CacheInner {
+    /// Insertion order (with per-entry byte estimate) for FIFO eviction.
+    order: Vec<(String, usize)>,
+    map: HashMap<String, Arc<ProjectionPlan>>,
+    bytes: usize,
+    /// Keys currently being planned (outside the lock) by some thread;
+    /// other threads for the same key wait on `cv` instead of planning
+    /// the same config redundantly (thundering-herd protection).
+    inflight: HashSet<String>,
+    /// Keys whose *actual* plan turned out to exceed `max_bytes` even
+    /// though the pre-planning estimate passed; later requesters bypass
+    /// the in-flight gate for them (plan in parallel, never serialize
+    /// behind a result that will not be cached).
+    oversized: HashSet<String>,
+}
+
+/// Default resident-byte bound for the process-wide cache (2 GiB).
+const DEFAULT_CACHE_MAX_BYTES: usize = 2 << 30;
+
+impl PlanCache {
+    /// Cache holding at most `cap` plans (≥ 1), bounded at 2 GiB resident.
+    pub fn new(cap: usize) -> PlanCache {
+        PlanCache::with_max_bytes(cap, DEFAULT_CACHE_MAX_BYTES)
+    }
+
+    /// Cache bounded by both entry count and approximate resident bytes.
+    /// A single plan larger than `max_bytes` is returned but not cached.
+    pub fn with_max_bytes(cap: usize, max_bytes: usize) -> PlanCache {
+        PlanCache {
+            cap: cap.max(1),
+            max_bytes,
+            inner: Mutex::new(CacheInner {
+                order: Vec::new(),
+                map: HashMap::new(),
+                bytes: 0,
+                inflight: HashSet::new(),
+                oversized: HashSet::new(),
+            }),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Canonical cache key for a projector's scan config.
+    pub fn key_for(p: &Projector) -> String {
+        let cfg = ScanConfig { geometry: p.geom.clone(), volume: p.vg.clone() };
+        format!("{}|t{}|{}", p.model.name(), p.threads, scan_to_string(&cfg))
+    }
+
+    /// Fetch the plan for `p`'s scan config, planning it on a miss.
+    /// Concurrent misses for the same key plan exactly once: the first
+    /// thread plans, the rest wait on the result instead of redundantly
+    /// burning CPU and transient memory on identical plans.
+    pub fn get_or_plan(&self, p: &Projector) -> Arc<ProjectionPlan> {
+        // Predictably uncacheable (estimate exceeds the byte budget):
+        // skip the in-flight gate entirely so N concurrent requesters
+        // plan in parallel instead of serializing N× behind a result
+        // that would never be cached anyway.
+        if ProjectionPlan::estimate_heap_bytes(p) > self.max_bytes {
+            return Arc::new(p.plan());
+        }
+        let key = Self::key_for(p);
+        {
+            let mut inner = self.inner.lock().unwrap();
+            loop {
+                if let Some(hit) = inner.map.get(&key) {
+                    return hit.clone();
+                }
+                if inner.oversized.contains(&key) {
+                    // known-uncacheable from a previous attempt
+                    drop(inner);
+                    return Arc::new(p.plan());
+                }
+                if !inner.inflight.contains(&key) {
+                    inner.inflight.insert(key.clone());
+                    break; // this thread plans
+                }
+                // someone else is planning this key; wait for them
+                inner = self.cv.wait(inner).unwrap();
+            }
+        }
+        // plan outside the lock — planning a large cone scan is the slow
+        // part, and misses for *different* configs shouldn't serialize.
+        // The guard clears the inflight marker (and wakes waiters) even
+        // if planning panics, so waiters never deadlock.
+        let guard = InflightGuard { cache: self, key: key.clone() };
+        let plan = Arc::new(p.plan());
+        let plan_bytes = plan.approx_heap_bytes();
+        {
+            let mut inner = self.inner.lock().unwrap();
+            if plan_bytes <= self.max_bytes {
+                while !inner.order.is_empty()
+                    && (inner.map.len() >= self.cap || inner.bytes + plan_bytes > self.max_bytes)
+                {
+                    let (evict, evict_bytes) = inner.order.remove(0);
+                    inner.map.remove(&evict);
+                    inner.bytes -= evict_bytes;
+                }
+                inner.order.push((key.clone(), plan_bytes));
+                inner.bytes += plan_bytes;
+                inner.map.insert(key.clone(), plan.clone());
+            } else {
+                // the estimate was optimistic: remember the key so later
+                // requesters skip the in-flight gate instead of repeating
+                // this serialize-plan-discard cycle forever
+                if inner.oversized.len() >= 64 {
+                    inner.oversized.clear(); // crude bound; worst case re-probes
+                }
+                inner.oversized.insert(key.clone());
+            }
+        }
+        drop(guard);
+        plan
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Approximate resident bytes currently held by cached plans.
+    pub fn resident_bytes(&self) -> usize {
+        self.inner.lock().unwrap().bytes
+    }
+}
+
+/// Clears the in-flight marker for a key and wakes waiters — on the
+/// normal path and on unwind, so a panicking plan never strands waiters.
+struct InflightGuard<'a> {
+    cache: &'a PlanCache,
+    key: String,
+}
+
+impl Drop for InflightGuard<'_> {
+    fn drop(&mut self) {
+        self.cache.inner.lock().unwrap().inflight.remove(&self.key);
+        self.cache.cv.notify_all();
+    }
+}
+
+/// The process-wide plan cache used by [`super::NativeExecutor::new`].
+pub fn global() -> &'static PlanCache {
+    static CACHE: OnceLock<PlanCache> = OnceLock::new();
+    CACHE.get_or_init(|| PlanCache::new(16))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::geometry::{Geometry, ParallelBeam, VolumeGeometry};
+    use crate::projector::Model;
+
+    fn projector(nviews: usize) -> Projector {
+        let vg = VolumeGeometry::slice2d(8, 8, 1.0);
+        let g = Geometry::Parallel(ParallelBeam::standard_2d(nviews, 12, 1.0));
+        Projector::new(g, vg, Model::SF).with_threads(2)
+    }
+
+    #[test]
+    fn same_config_shares_one_plan() {
+        let cache = PlanCache::new(4);
+        let a = cache.get_or_plan(&projector(6));
+        let b = cache.get_or_plan(&projector(6));
+        assert!(Arc::ptr_eq(&a, &b));
+        assert_eq!(cache.len(), 1);
+    }
+
+    #[test]
+    fn different_configs_get_distinct_plans() {
+        let cache = PlanCache::new(4);
+        let a = cache.get_or_plan(&projector(6));
+        let b = cache.get_or_plan(&projector(7));
+        assert!(!Arc::ptr_eq(&a, &b));
+        assert_eq!(cache.len(), 2);
+    }
+
+    #[test]
+    fn fifo_eviction_bounds_the_cache() {
+        let cache = PlanCache::new(2);
+        let first = cache.get_or_plan(&projector(4));
+        cache.get_or_plan(&projector(5));
+        cache.get_or_plan(&projector(6)); // evicts the nviews=4 plan
+        assert_eq!(cache.len(), 2);
+        let again = cache.get_or_plan(&projector(4)); // re-planned
+        assert!(!Arc::ptr_eq(&first, &again));
+    }
+
+    #[test]
+    fn concurrent_same_key_requests_share_one_plan() {
+        let cache = Arc::new(PlanCache::new(4));
+        let mut handles = Vec::new();
+        for _ in 0..8 {
+            let c = cache.clone();
+            handles.push(std::thread::spawn(move || c.get_or_plan(&projector(6))));
+        }
+        let plans: Vec<_> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        for p in &plans[1..] {
+            assert!(Arc::ptr_eq(&plans[0], p));
+        }
+        assert_eq!(cache.len(), 1);
+    }
+
+    #[test]
+    fn byte_bound_evicts_and_oversized_plans_bypass_the_cache() {
+        // every SF-parallel plan here is a few hundred bytes; a 1-byte
+        // budget means nothing is ever cached
+        let tiny = PlanCache::with_max_bytes(8, 1);
+        let a = tiny.get_or_plan(&projector(6));
+        assert!(tiny.is_empty(), "oversized plan must not be cached");
+        assert_eq!(tiny.resident_bytes(), 0);
+        let b = tiny.get_or_plan(&projector(6));
+        assert!(!Arc::ptr_eq(&a, &b), "bypassed plans are re-planned");
+
+        // a budget that fits roughly one plan keeps evicting the oldest;
+        // both configs individually pass the pre-planning estimate (the
+        // smaller second config especially), but don't fit together
+        let six_bytes = projector(6).plan().approx_heap_bytes();
+        let budget = ProjectionPlan::estimate_heap_bytes(&projector(6)) + 1;
+        let snug = PlanCache::with_max_bytes(8, budget);
+        snug.get_or_plan(&projector(6));
+        snug.get_or_plan(&projector(5));
+        assert_eq!(snug.len(), 1, "byte bound should have evicted the first plan");
+        assert!(snug.resident_bytes() < six_bytes + snug.get_or_plan(&projector(5)).approx_heap_bytes());
+    }
+
+    #[test]
+    fn cached_plan_matches_its_projector() {
+        let cache = PlanCache::new(2);
+        let p = projector(5);
+        let plan = cache.get_or_plan(&p);
+        assert!(plan.matches(&p));
+    }
+}

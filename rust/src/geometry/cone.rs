@@ -95,6 +95,12 @@ impl ConeBeam {
     /// Detector position at *fractional* pixel coordinates.
     pub fn det_pos_f(&self, view: usize, row_f: f64, col_f: f64) -> [f64; 3] {
         let (sphi, cphi) = self.angles[view].sin_cos();
+        self.det_pos_with_trig(sphi, cphi, row_f, col_f)
+    }
+
+    /// Detector position from precomputed view trig `(sin φ, cos φ)`;
+    /// `det_pos_f` delegates here, so cached-trig callers are bit-identical.
+    pub fn det_pos_with_trig(&self, sphi: f64, cphi: f64, row_f: f64, col_f: f64) -> [f64; 3] {
         let u = (col_f - (self.ncols as f64 - 1.0) / 2.0) * self.du + self.cu;
         let v = (row_f - (self.nrows as f64 - 1.0) / 2.0) * self.dv + self.cv;
         match self.shape {
@@ -133,8 +139,16 @@ impl ConeBeam {
 
     /// Ray at *fractional* pixel coordinates (bin-integrated projections).
     pub fn ray_at(&self, view: usize, row_f: f64, col_f: f64) -> Ray {
-        let s = self.source(view);
-        let d = self.det_pos_f(view, row_f, col_f);
+        let (sphi, cphi) = self.angles[view].sin_cos();
+        self.ray_with_trig(sphi, cphi, row_f, col_f)
+    }
+
+    /// Ray from precomputed view trig `(sin φ, cos φ)` — the plan/execute
+    /// split's execution primitive; `ray_at` delegates here.
+    #[inline]
+    pub fn ray_with_trig(&self, sphi: f64, cphi: f64, row_f: f64, col_f: f64) -> Ray {
+        let s = [self.sod * cphi, self.sod * sphi, 0.0];
+        let d = self.det_pos_with_trig(sphi, cphi, row_f, col_f);
         Ray::new(s, [d[0] - s[0], d[1] - s[1], d[2] - s[2]])
     }
 

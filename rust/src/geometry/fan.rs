@@ -67,6 +67,13 @@ impl FanBeam {
     /// Ray at a *fractional* detector column (bin-integrated projections).
     pub fn ray_at(&self, view: usize, col_f: f64) -> Ray {
         let (s, c) = self.angles[view].sin_cos();
+        self.ray_with_trig(s, c, col_f)
+    }
+
+    /// Ray from precomputed view trig `(sin φ, cos φ)` — the plan/execute
+    /// split's execution primitive; `ray_at` delegates here.
+    #[inline]
+    pub fn ray_with_trig(&self, s: f64, c: f64, col_f: f64) -> Ray {
         let u = (col_f - (self.ncols as f64 - 1.0) / 2.0) * self.du + self.cu;
         let sp = [self.sod * c, self.sod * s];
         let dp = [

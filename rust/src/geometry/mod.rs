@@ -143,7 +143,7 @@ pub fn angles_deg(nviews: usize, start_deg: f64, range_deg: f64) -> Vec<f64> {
 }
 
 /// The scanner geometry union passed around the library and the CLI.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub enum Geometry {
     Parallel(ParallelBeam),
     Fan(FanBeam),

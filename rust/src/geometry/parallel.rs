@@ -77,6 +77,14 @@ impl ParallelBeam {
     pub fn ray_at(&self, view: usize, row_f: f64, col_f: f64) -> Ray {
         let phi = self.angles[view];
         let (s, c) = phi.sin_cos();
+        self.ray_with_trig(s, c, row_f, col_f)
+    }
+
+    /// Ray from precomputed view trig `(sin φ, cos φ)` — the plan/execute
+    /// split's execution primitive. `ray_at` delegates here, so a plan
+    /// that caches `angles[view].sin_cos()` produces bit-identical rays.
+    #[inline]
+    pub fn ray_with_trig(&self, s: f64, c: f64, row_f: f64, col_f: f64) -> Ray {
         let u = (col_f - (self.ncols as f64 - 1.0) / 2.0) * self.du + self.cu;
         let v = (row_f - (self.nrows as f64 - 1.0) / 2.0) * self.dv + self.cv;
         Ray { origin: [u * c, u * s, v], dir: [-s, c, 0.0] }

@@ -13,7 +13,12 @@
 //!   projectors using the Siddon, Joseph and Separable-Footprint (SF)
 //!   models. No system matrix is ever materialized; the memory footprint is
 //!   one copy of the volume plus one copy of the projections, exactly the
-//!   paper's claim.
+//!   paper's claim. Per-view geometry invariants (trig, detector bases,
+//!   SF footprint bounds, Joseph marching axes) live in a reusable
+//!   [`projector::ProjectionPlan`]: iterative solvers plan once per solve
+//!   and the serving layer caches plans per scan config, while the direct
+//!   path plans per view on the fly through the *same* execute code — the
+//!   two paths are bit-identical.
 //! * [`sysmatrix`] — the precomputed sparse system-matrix baseline the paper
 //!   argues against (Lahiri et al. 2023 style), used by the Table-1 bench.
 //! * [`recon`] — analytic (FBP/FDK) and iterative (SIRT, OS-SART, CGLS,
@@ -26,6 +31,9 @@
 //! * [`metrics`] — PSNR / SSIM / RMSE, matching the paper's evaluation.
 //! * [`runtime`] — PJRT execution of the AOT-compiled JAX/Pallas artifacts
 //!   (`artifacts/*.hlo.txt`); Python never runs on the request path.
+//!   Gated behind the **`pjrt`** cargo feature (off by default): without
+//!   it a clear-error stub with the same API keeps every native path
+//!   building and testing without the vendored XLA closure.
 //! * [`coordinator`] — the serving layer: request router, dynamic batcher,
 //!   worker pool and memory-budget admission control.
 //! * [`util`] — self-contained substrates built for this repo: JSON,
@@ -44,6 +52,24 @@
 //! * Sinograms are stored `[view][row][col]`, volumes `[z][y][x]`,
 //!   contiguous `f32` — the same layout the paper uses so buffers can be
 //!   handed to the PJRT runtime without copies.
+//!
+//! ## Building and testing
+//!
+//! ```bash
+//! cargo build --release && cargo test -q
+//! ```
+//!
+//! No external dependencies beyond `anyhow` (and, only with
+//! `--features pjrt`, the vendored `xla` crate).
+
+// The numeric kernels index flat buffers by explicit arithmetic on
+// purpose (the index math *is* the algorithm — Siddon/Joseph/SF walk
+// strided layouts); suppress the style lints that object to that idiom.
+#![allow(clippy::needless_range_loop)]
+#![allow(clippy::too_many_arguments)]
+#![allow(clippy::new_without_default)]
+#![allow(clippy::type_complexity)]
+#![allow(clippy::manual_range_contains)]
 
 pub mod util;
 pub mod geometry;

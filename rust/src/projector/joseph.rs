@@ -9,21 +9,39 @@
 
 use crate::geometry::{Ray, VolumeGeometry};
 
-/// March `ray` through `vg` along its major axis, invoking
-/// `visit(flat_index, weight_mm)` with bilinear interpolation weights
-/// scaled by the per-plane step length.
-pub fn walk_ray<F: FnMut(usize, f32)>(vg: &VolumeGeometry, ray: &Ray, mut visit: F) {
-    let d = ray.dir;
-    let ad = [d[0].abs(), d[1].abs(), d[2].abs()];
-    // major axis
-    let a = if ad[0] >= ad[1] && ad[0] >= ad[2] {
+/// Index (0 = x, 1 = y, 2 = z) of the direction's dominant component —
+/// the Joseph marching axis. Constant across a view for parallel beams,
+/// so [`crate::projector::ProjectionPlan`] caches it per view.
+#[inline]
+pub fn major_axis(dir: &[f64; 3]) -> usize {
+    let ad = [dir[0].abs(), dir[1].abs(), dir[2].abs()];
+    if ad[0] >= ad[1] && ad[0] >= ad[2] {
         0
     } else if ad[1] >= ad[2] {
         1
     } else {
         2
-    };
-    if ad[a] < 1e-12 {
+    }
+}
+
+/// March `ray` through `vg` along its major axis, invoking
+/// `visit(flat_index, weight_mm)` with bilinear interpolation weights
+/// scaled by the per-plane step length.
+pub fn walk_ray<F: FnMut(usize, f32)>(vg: &VolumeGeometry, ray: &Ray, visit: F) {
+    walk_ray_with_axis(vg, ray, major_axis(&ray.dir), visit)
+}
+
+/// [`walk_ray`] with the major axis `a` supplied by the caller (a plan
+/// that cached it). `a` must equal `major_axis(&ray.dir)` for the weights
+/// to be the Joseph weights.
+pub fn walk_ray_with_axis<F: FnMut(usize, f32)>(
+    vg: &VolumeGeometry,
+    ray: &Ray,
+    a: usize,
+    mut visit: F,
+) {
+    let d = ray.dir;
+    if d[a].abs() < 1e-12 {
         return; // degenerate direction
     }
     // minor axes
@@ -39,7 +57,7 @@ pub fn walk_ray<F: FnMut(usize, f32)>(vg: &VolumeGeometry, ray: &Ray, mut visit:
     let o = ray.origin;
 
     // step length per major plane (mm of ray per plane)
-    let step = (pitch[a] / ad[a]) as f32;
+    let step = (pitch[a] / d[a].abs()) as f32;
 
     // clip the major-axis plane range to where the ray is inside the
     // volume bounds of the minor axes (cheap conservative clip: solve the
@@ -140,6 +158,24 @@ pub fn path_length(vg: &VolumeGeometry, ray: &Ray) -> f64 {
 mod tests {
     use super::*;
     use crate::geometry::Ray;
+
+    #[test]
+    fn major_axis_picks_dominant_component() {
+        assert_eq!(major_axis(&[1.0, 0.2, -0.3]), 0);
+        assert_eq!(major_axis(&[0.1, -0.9, 0.3]), 1);
+        assert_eq!(major_axis(&[0.1, 0.2, 0.95]), 2);
+    }
+
+    #[test]
+    fn precomputed_axis_matches_walk_ray() {
+        let vg = VolumeGeometry::cube(12, 1.0);
+        let ray = Ray::new([-30.0, 1.7, -0.4], [0.9, 0.4, 0.2]);
+        let mut a = Vec::new();
+        let mut b = Vec::new();
+        walk_ray(&vg, &ray, |idx, w| a.push((idx, w)));
+        walk_ray_with_axis(&vg, &ray, major_axis(&ray.dir), |idx, w| b.push((idx, w)));
+        assert_eq!(a, b);
+    }
 
     #[test]
     fn axis_aligned_matches_siddon() {

@@ -18,19 +18,37 @@
 //! the paper requires for stable gradient-based reconstruction over
 //! thousands of iterations.
 //!
+//! **Plan/execute.** Per-view geometry invariants (trig, detector bases,
+//! SF footprint bounds, the Joseph marching axis) are factored into a
+//! reusable [`ProjectionPlan`]: `let plan = p.plan();` then
+//! [`Projector::forward_with_plan`] / [`Projector::back_with_plan`] (or
+//! the plan's own `forward_into`/`back_into`) skip re-planning on every
+//! operator application. The direct [`Projector::forward_into`] /
+//! [`Projector::back_into`] run the same execute code with per-view
+//! invariants built on the fly, so the two paths are bit-identical; the
+//! iterative solvers in [`crate::recon`] plan once per solve and the
+//! serving coordinator caches plans per scan config
+//! ([`crate::coordinator::PlanCache`]).
+//!
 //! **Memory.** No system matrix is ever formed: peak memory is one copy
 //! of the volume plus one copy of the projections (plus a per-thread
-//! partial volume during parallel backprojection). Compare
-//! [`crate::sysmatrix`] for the stored-matrix baseline.
+//! partial volume during parallel backprojection, and — only when a plan
+//! is held — the cone-beam plan's `O(nviews·nx·ny)` transaxial footprint
+//! cache, capped at `LEAP_PLAN_MAX_BYTES` with a transparent on-the-fly
+//! fallback). Compare [`crate::sysmatrix`] for the stored-matrix
+//! baseline.
 
 pub mod siddon;
 pub mod joseph;
 pub mod sf;
 pub mod abel;
+pub mod plan;
+
+pub use plan::ProjectionPlan;
 
 use crate::array::{Sino, Vol3};
 use crate::geometry::{Geometry, VolumeGeometry};
-use crate::util::pool::{self, parallel_chunks};
+use crate::util::pool;
 
 /// Projection coefficient model.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -88,14 +106,16 @@ impl Projector {
         Vol3::zeros(self.vg.nx, self.vg.ny, self.vg.nz)
     }
 
-    /// Forward projection `sino = A·vol` (overwrites `sino`).
+    /// Precompute this scan's per-view invariants for reuse across many
+    /// operator applications (the plan step — see [`ProjectionPlan`]).
+    pub fn plan(&self) -> ProjectionPlan {
+        ProjectionPlan::new(self)
+    }
+
+    /// Forward projection `sino = A·vol` (overwrites `sino`). Plans each
+    /// view on the fly; use [`Self::forward_with_plan`] in loops.
     pub fn forward_into(&self, vol: &Vol3, sino: &mut Sino) {
-        assert_eq!(vol.len(), self.vg.num_voxels(), "volume shape mismatch");
-        assert_eq!(
-            (sino.nviews, sino.nrows, sino.ncols),
-            (self.geom.nviews(), self.geom.nrows(), self.geom.ncols()),
-            "sinogram shape mismatch"
-        );
+        plan::check_shapes(&self.geom, &self.vg, vol, sino);
         match (self.model, &self.geom) {
             (Model::SF, Geometry::Parallel(g)) => {
                 sf::forward_parallel(&self.vg, g, vol, sino, self.threads)
@@ -107,9 +127,11 @@ impl Projector {
             // SF is not defined for arbitrary modular poses; Joseph is the
             // documented fallback (DESIGN.md §3).
             (Model::SF, Geometry::Modular(_)) | (Model::Joseph, _) => {
-                self.ray_forward(vol, sino, false)
+                plan::ray_forward_exec(&self.vg, &self.geom, None, false, vol, sino, self.threads)
             }
-            (Model::Siddon, _) => self.ray_forward(vol, sino, true),
+            (Model::Siddon, _) => {
+                plan::ray_forward_exec(&self.vg, &self.geom, None, true, vol, sino, self.threads)
+            }
         }
     }
 
@@ -120,9 +142,12 @@ impl Projector {
         sino
     }
 
-    /// Matched backprojection `vol = Aᵀ·sino` (overwrites `vol`).
+    /// Matched backprojection `vol = Aᵀ·sino` (overwrites `vol`). Plans
+    /// each view on the fly; use [`Self::back_with_plan`] in loops.
     pub fn back_into(&self, sino: &Sino, vol: &mut Vol3) {
-        assert_eq!(vol.len(), self.vg.num_voxels(), "volume shape mismatch");
+        // symmetric to forward_into: a mismatched sinogram would index out
+        // of bounds (or silently truncate) inside the per-view kernels
+        plan::check_shapes(&self.geom, &self.vg, vol, sino);
         match (self.model, &self.geom) {
             (Model::SF, Geometry::Parallel(g)) => {
                 sf::back_parallel(&self.vg, g, sino, vol, self.threads)
@@ -130,9 +155,11 @@ impl Projector {
             (Model::SF, Geometry::Fan(g)) => sf::back_fan(&self.vg, g, sino, vol, self.threads),
             (Model::SF, Geometry::Cone(g)) => sf::back_cone(&self.vg, g, sino, vol, self.threads),
             (Model::SF, Geometry::Modular(_)) | (Model::Joseph, _) => {
-                self.ray_back(sino, vol, false)
+                plan::ray_back_exec(&self.vg, &self.geom, None, false, sino, vol, self.threads)
             }
-            (Model::Siddon, _) => self.ray_back(sino, vol, true),
+            (Model::Siddon, _) => {
+                plan::ray_back_exec(&self.vg, &self.geom, None, true, sino, vol, self.threads)
+            }
         }
     }
 
@@ -143,89 +170,18 @@ impl Projector {
         vol
     }
 
-    /// Ray-driven forward: parallel over views; each view's output slab is
-    /// written by exactly one worker.
-    fn ray_forward(&self, vol: &Vol3, sino: &mut Sino, use_siddon: bool) {
-        let nviews = sino.nviews;
-        let nrows = sino.nrows;
-        let ncols = sino.ncols;
-        sino.fill(0.0);
-        struct SinoPtr(*mut Sino);
-        unsafe impl Send for SinoPtr {}
-        unsafe impl Sync for SinoPtr {}
-        impl SinoPtr {
-            /// Accessed via a method so closures capture the Sync wrapper,
-            /// not the raw-pointer field (edition-2021 disjoint capture).
-            #[allow(clippy::mut_from_ref)]
-            fn get(&self) -> &mut Sino {
-                unsafe { &mut *self.0 }
-            }
-        }
-        let sino_ptr = SinoPtr(sino as *mut Sino);
-        let vg = &self.vg;
-        let geom = &self.geom;
-        parallel_chunks(nviews, self.threads, |v0, v1| {
-            // SAFETY: disjoint view ranges per worker
-            let sino = sino_ptr.get();
-            for view in v0..v1 {
-                for row in 0..nrows {
-                    for col in 0..ncols {
-                        let ray = geom.ray(view, row, col);
-                        let mut acc = 0.0f32;
-                        if use_siddon {
-                            siddon::walk_ray(vg, &ray, |idx, w| acc += w * vol.data[idx]);
-                        } else {
-                            joseph::walk_ray(vg, &ray, |idx, w| acc += w * vol.data[idx]);
-                        }
-                        sino.data[(view * nrows + row) * ncols + col] = acc;
-                    }
-                }
-            }
-        });
+    /// Forward projection through a prebuilt plan (the execute step).
+    /// Panics if `plan` was built for a different scan/model.
+    pub fn forward_with_plan(&self, plan: &ProjectionPlan, vol: &Vol3, sino: &mut Sino) {
+        assert!(plan.matches(self), "plan was built for a different scan");
+        plan.forward_into(vol, sino);
     }
 
-    /// Ray-driven matched backprojection: scatter per view into per-thread
-    /// partial volumes, reduced in view order (deterministic).
-    fn ray_back(&self, sino: &Sino, vol: &mut Vol3, use_siddon: bool) {
-        let nviews = sino.nviews;
-        let nrows = sino.nrows;
-        let ncols = sino.ncols;
-        let nvox = self.vg.num_voxels();
-        let vg = &self.vg;
-        let geom = &self.geom;
-        let result = pool::parallel_map_reduce(
-            nviews,
-            self.threads,
-            |v0, v1| {
-                let mut part = vec![0.0f32; nvox];
-                for view in v0..v1 {
-                    for row in 0..nrows {
-                        for col in 0..ncols {
-                            let y = sino.data[(view * nrows + row) * ncols + col];
-                            if y == 0.0 {
-                                continue;
-                            }
-                            let ray = geom.ray(view, row, col);
-                            if use_siddon {
-                                siddon::walk_ray(vg, &ray, |idx, w| part[idx] += w * y);
-                            } else {
-                                joseph::walk_ray(vg, &ray, |idx, w| part[idx] += w * y);
-                            }
-                        }
-                    }
-                }
-                part
-            },
-            |mut a, b| {
-                pool::add_assign(&mut a, &b);
-                a
-            },
-        );
-        if let Some(acc) = result {
-            vol.data.copy_from_slice(&acc);
-        } else {
-            vol.fill(0.0);
-        }
+    /// Matched backprojection through a prebuilt plan (the execute step).
+    /// Panics if `plan` was built for a different scan/model.
+    pub fn back_with_plan(&self, plan: &ProjectionPlan, sino: &Sino, vol: &mut Vol3) {
+        assert!(plan.matches(self), "plan was built for a different scan");
+        plan.back_into(sino, vol);
     }
 
     /// `Aᵀ·1`: per-voxel total weight, used by SIRT/SART normalization.
@@ -408,6 +364,30 @@ mod tests {
             // center voxel sees every view
             assert!(w.at(8, 8, 0) > 0.0, "{}", model.name());
         }
+    }
+
+    #[test]
+    #[should_panic(expected = "sinogram shape mismatch")]
+    fn back_into_rejects_mismatched_sinogram() {
+        // the historical bug: back_into validated the volume but not the
+        // sinogram, so a wrong-shaped sinogram read out of bounds
+        let vg = VolumeGeometry::slice2d(8, 8, 1.0);
+        let g = Geometry::Parallel(ParallelBeam::standard_2d(6, 12, 1.0));
+        let p = Projector::new(g, vg, Model::SF);
+        let bad = Sino::zeros(5, 1, 12); // 5 views instead of 6
+        let mut vol = p.new_vol();
+        p.back_into(&bad, &mut vol);
+    }
+
+    #[test]
+    #[should_panic(expected = "sinogram shape mismatch")]
+    fn forward_into_rejects_mismatched_sinogram() {
+        let vg = VolumeGeometry::slice2d(8, 8, 1.0);
+        let g = Geometry::Parallel(ParallelBeam::standard_2d(6, 12, 1.0));
+        let p = Projector::new(g, vg, Model::Joseph);
+        let mut bad = Sino::zeros(6, 1, 10); // 10 cols instead of 12
+        let vol = p.new_vol();
+        p.forward_into(&vol, &mut bad);
     }
 
     #[test]

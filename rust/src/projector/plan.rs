@@ -1,0 +1,597 @@
+//! `ProjectionPlan` — the plan/execute split for the matched projector
+//! pairs.
+//!
+//! Iterative solvers apply `A` and `Aᵀ` hundreds of times with the scan
+//! geometry frozen, yet the one-shot entry points recompute every
+//! per-view invariant (view trig, source/detector basis vectors, SF
+//! footprint bounds, the Joseph marching axis) on each application. A
+//! [`ProjectionPlan`] computes them once:
+//!
+//! * **plan** — [`Projector::plan`] walks the views and caches, per view:
+//!   * ray-driven models (Siddon/Joseph, and Joseph as the modular-beam
+//!     SF fallback): `(sin φ, cos φ)` so ray construction is pure
+//!     arithmetic, plus the Joseph major axis where it is view-constant
+//!     (parallel beams);
+//!   * SF parallel: the shared transaxial trapezoid + evaluator and the
+//!     per-slice detector-row weights ([`sf::ParallelViewPlan`]);
+//!   * SF cone: the per-voxel-column transaxial footprint (detector
+//!     column weights + magnification/amplitude scalars,
+//!     [`sf::ConeViewPlan`]) — `O(nx·ny)` per view, a factor `nz·nrows`
+//!     below a stored system matrix;
+//!   * SF fan: the view trig ([`sf::FanViewPlan`]).
+//! * **execute** — [`ProjectionPlan::forward_into`] /
+//!   [`ProjectionPlan::back_into`] replay the cached invariants. The
+//!   direct `Projector::forward_into`/`back_into` run the *same* execute
+//!   code with per-view invariants built on the fly inside the workers,
+//!   so planned and direct outputs are **bit-identical by construction**
+//!   (verified by `tests/plan_property.rs`).
+//!
+//! Ray-driven execution parallelizes over `(view, row)` units rather than
+//! whole views: a few-view scan with many detector rows now load-balances
+//! across all workers instead of leaving `threads − nviews` of them idle.
+//!
+//! The plan snapshots the projector's thread count; reductions in the
+//! backprojection depend on the chunk layout, so using the same plan
+//! guarantees reproducible floats.
+//!
+//! The cone footprint cache is the only plan component that scales past
+//! `O(nviews)`; when its estimate exceeds `LEAP_PLAN_MAX_BYTES` (default
+//! 1 GiB) the plan transparently keeps per-view on-the-fly planning so
+//! paper-scale scans never trade the one-copy memory claim for speed.
+
+use crate::array::{Sino, Vol3};
+use crate::geometry::{ConeBeam, Geometry, Ray, VolumeGeometry};
+use crate::util::pool::{self, parallel_chunks};
+
+use super::sf::SinoPtr;
+use super::{joseph, sf, siddon, Model, Projector};
+
+/// Precomputed per-view invariants for one `(geometry, volume, model)`
+/// triple. Build once with [`Projector::plan`], apply many times.
+pub struct ProjectionPlan {
+    geom: Geometry,
+    vg: VolumeGeometry,
+    model: Model,
+    threads: usize,
+    kind: PlanKind,
+}
+
+enum PlanKind {
+    Ray { use_siddon: bool, views: RayViews },
+    SfParallel(Vec<sf::ParallelViewPlan>),
+    SfFan(Vec<sf::FanViewPlan>),
+    SfCone(Vec<sf::ConeViewPlan>),
+    /// The cone footprint cache would exceed [`plan_max_bytes`]; execute
+    /// plans each view on the fly instead — identical output (same code
+    /// path as the direct projector), `O(nx·ny)` transient memory per
+    /// worker instead of `O(nviews·nx·ny)` resident.
+    SfConeUncached,
+}
+
+/// Default cap on a single plan's SF cone footprint cache (1 GiB). A
+/// paper-scale 720-view 512² scan estimates tens of GiB — far past what
+/// "plan reuse" should silently pin — so such plans degrade to on-the-fly
+/// per-view planning. Override with the `LEAP_PLAN_MAX_BYTES` env var.
+const DEFAULT_PLAN_MAX_BYTES: usize = 1 << 30;
+
+fn plan_max_bytes() -> usize {
+    std::env::var("LEAP_PLAN_MAX_BYTES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(DEFAULT_PLAN_MAX_BYTES)
+}
+
+/// Pre-build estimate of a cone plan's cache: per voxel column one
+/// `ConeVoxelFoot` (~40 B, rounded up) plus one column-weight entry
+/// (16 B) per detector column the magnified in-plane voxel extent spans —
+/// geometry-aware so fine-pitch detectors (wide footprints) don't slip
+/// past the memory cap with a constant-bins guess.
+fn cone_plan_estimate_bytes(g: &ConeBeam, vg: &VolumeGeometry) -> usize {
+    let mag = if g.sod > 0.0 { g.sdd / g.sod } else { 1.0 };
+    let cols_per_foot = if g.du > 0.0 {
+        ((((vg.vx + vg.vy) * mag / g.du).ceil() + 1.0).max(2.0) as usize).min(g.ncols.max(1))
+    } else {
+        g.ncols.max(1)
+    };
+    g.angles
+        .len()
+        .saturating_mul(vg.nx.saturating_mul(vg.ny))
+        .saturating_mul(48 + cols_per_foot * 16)
+}
+
+/// Shared shape validation for the direct and planned entry points — one
+/// definition so the two paths can never diverge.
+pub(crate) fn check_shapes(geom: &Geometry, vg: &VolumeGeometry, vol: &Vol3, sino: &Sino) {
+    assert_eq!(vol.len(), vg.num_voxels(), "volume shape mismatch");
+    assert_eq!(
+        (sino.nviews, sino.nrows, sino.ncols),
+        (geom.nviews(), geom.nrows(), geom.ncols()),
+        "sinogram shape mismatch"
+    );
+}
+
+/// Cached per-view ray-construction invariants.
+pub(crate) struct RayViews {
+    /// `(sin φ, cos φ)` per view; empty for modular beams (their poses
+    /// are already explicit per view).
+    trig: Vec<(f64, f64)>,
+    /// Joseph marching axis per view; non-empty only for parallel beams
+    /// under the Joseph model (the one case where rays of a view share a
+    /// direction).
+    axis: Vec<usize>,
+}
+
+impl RayViews {
+    fn build(geom: &Geometry, model: Model) -> RayViews {
+        let trig: Vec<(f64, f64)> = match geom {
+            Geometry::Parallel(g) => g.angles.iter().map(|a| a.sin_cos()).collect(),
+            Geometry::Fan(g) => g.angles.iter().map(|a| a.sin_cos()).collect(),
+            Geometry::Cone(g) => g.angles.iter().map(|a| a.sin_cos()).collect(),
+            Geometry::Modular(_) => Vec::new(),
+        };
+        let axis = match (geom, model) {
+            (Geometry::Parallel(g), Model::Joseph) => trig
+                .iter()
+                .map(|&(s, c)| joseph::major_axis(&g.ray_with_trig(s, c, 0.0, 0.0).dir))
+                .collect(),
+            _ => Vec::new(),
+        };
+        RayViews { trig, axis }
+    }
+}
+
+/// Build `f(view)` for every view, in view order, using the worker pool.
+fn build_views<T, F>(nviews: usize, threads: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    pool::parallel_map_reduce(
+        nviews,
+        threads,
+        |v0, v1| (v0..v1).map(&f).collect::<Vec<T>>(),
+        |mut a, mut b| {
+            a.append(&mut b);
+            a
+        },
+    )
+    .unwrap_or_default()
+}
+
+impl ProjectionPlan {
+    /// Precompute the per-view invariants for `p`'s scan (the plan step).
+    pub fn new(p: &Projector) -> ProjectionPlan {
+        Self::new_with_cap(p, plan_max_bytes())
+    }
+
+    /// [`Self::new`] with an explicit cone-footprint-cache cap in bytes.
+    fn new_with_cap(p: &Projector, cap_bytes: usize) -> ProjectionPlan {
+        let threads = p.threads;
+        let kind = match (p.model, &p.geom) {
+            (Model::SF, Geometry::Parallel(g)) => PlanKind::SfParallel(build_views(
+                g.angles.len(),
+                threads,
+                |v| sf::plan_parallel_view(&p.vg, g, v),
+            )),
+            (Model::SF, Geometry::Fan(g)) => {
+                PlanKind::SfFan((0..g.angles.len()).map(|v| sf::plan_fan_view(g, v)).collect())
+            }
+            (Model::SF, Geometry::Cone(g)) => {
+                if cone_plan_estimate_bytes(g, &p.vg) > cap_bytes {
+                    PlanKind::SfConeUncached
+                } else {
+                    PlanKind::SfCone(build_views(g.angles.len(), threads, |v| {
+                        sf::plan_cone_view(&p.vg, g, v)
+                    }))
+                }
+            }
+            (model, geom) => PlanKind::Ray {
+                use_siddon: model == Model::Siddon,
+                views: RayViews::build(geom, model),
+            },
+        };
+        ProjectionPlan { geom: p.geom.clone(), vg: p.vg.clone(), model: p.model, threads, kind }
+    }
+
+    /// Does this plan describe the same scan as `p` — geometry, volume
+    /// grid, model **and** thread count? Threads are part of the
+    /// identity because the backprojection reduction order follows the
+    /// chunk layout: executing a plan with a different worker count
+    /// would silently break the documented direct-vs-planned
+    /// bit-identity.
+    pub fn matches(&self, p: &Projector) -> bool {
+        self.model == p.model
+            && self.threads == p.threads
+            && self.vg == p.vg
+            && self.geom == p.geom
+    }
+
+    pub fn geom(&self) -> &Geometry {
+        &self.geom
+    }
+
+    pub fn vg(&self) -> &VolumeGeometry {
+        &self.vg
+    }
+
+    pub fn model(&self) -> Model {
+        self.model
+    }
+
+    /// Pre-build estimate (bytes) of what [`Self::new`] would cache for
+    /// `p` — lets callers like the coordinator's
+    /// [`crate::coordinator::PlanCache`] decide *before* planning whether
+    /// the result is worth building under a memory budget.
+    pub fn estimate_heap_bytes(p: &Projector) -> usize {
+        match (p.model, &p.geom) {
+            (Model::SF, Geometry::Cone(g)) => cone_plan_estimate_bytes(g, &p.vg),
+            // per view: the plan struct (~160 B) + per-slice row weights
+            (Model::SF, Geometry::Parallel(g)) => g.angles.len() * (160 + p.vg.nz * 56),
+            (Model::SF, Geometry::Fan(g)) => g.angles.len() * std::mem::size_of::<sf::FanViewPlan>(),
+            _ => p.geom.nviews() * 24,
+        }
+    }
+
+    /// Approximate heap bytes held by the cached per-view invariants —
+    /// used by [`crate::coordinator::PlanCache`] for byte-bounded
+    /// eviction, and useful for capacity planning.
+    pub fn approx_heap_bytes(&self) -> usize {
+        match &self.kind {
+            PlanKind::Ray { views, .. } => {
+                views.trig.len() * std::mem::size_of::<(f64, f64)>()
+                    + views.axis.len() * std::mem::size_of::<usize>()
+            }
+            PlanKind::SfParallel(vs) => vs.iter().map(|v| v.approx_bytes()).sum(),
+            PlanKind::SfFan(vs) => vs.len() * std::mem::size_of::<sf::FanViewPlan>(),
+            PlanKind::SfCone(vs) => vs.iter().map(|v| v.approx_bytes()).sum(),
+            PlanKind::SfConeUncached => 0,
+        }
+    }
+
+    /// Allocate a correctly-shaped sinogram for this scan.
+    pub fn new_sino(&self) -> Sino {
+        Sino::zeros(self.geom.nviews(), self.geom.nrows(), self.geom.ncols())
+    }
+
+    /// Allocate a correctly-shaped volume.
+    pub fn new_vol(&self) -> Vol3 {
+        Vol3::zeros(self.vg.nx, self.vg.ny, self.vg.nz)
+    }
+
+    /// Forward projection `sino = A·vol` through the cached plan
+    /// (overwrites `sino`).
+    pub fn forward_into(&self, vol: &Vol3, sino: &mut Sino) {
+        check_shapes(&self.geom, &self.vg, vol, sino);
+        match &self.kind {
+            PlanKind::SfParallel(vs) => {
+                let Geometry::Parallel(g) = &self.geom else { unreachable!() };
+                sf::forward_parallel_opt(&self.vg, g, Some(vs.as_slice()), vol, sino, self.threads)
+            }
+            PlanKind::SfFan(vs) => {
+                let Geometry::Fan(g) = &self.geom else { unreachable!() };
+                sf::forward_fan_opt(&self.vg, g, Some(vs.as_slice()), vol, sino, self.threads)
+            }
+            PlanKind::SfCone(vs) => {
+                let Geometry::Cone(g) = &self.geom else { unreachable!() };
+                sf::forward_cone_opt(&self.vg, g, Some(vs.as_slice()), vol, sino, self.threads)
+            }
+            PlanKind::SfConeUncached => {
+                let Geometry::Cone(g) = &self.geom else { unreachable!() };
+                sf::forward_cone_opt(&self.vg, g, None, vol, sino, self.threads)
+            }
+            PlanKind::Ray { use_siddon, views } => ray_forward_exec(
+                &self.vg,
+                &self.geom,
+                Some(views),
+                *use_siddon,
+                vol,
+                sino,
+                self.threads,
+            ),
+        }
+    }
+
+    /// Matched backprojection `vol = Aᵀ·sino` through the cached plan
+    /// (overwrites `vol`).
+    pub fn back_into(&self, sino: &Sino, vol: &mut Vol3) {
+        check_shapes(&self.geom, &self.vg, vol, sino);
+        match &self.kind {
+            PlanKind::SfParallel(vs) => {
+                let Geometry::Parallel(g) = &self.geom else { unreachable!() };
+                sf::back_parallel_opt(&self.vg, g, Some(vs.as_slice()), sino, vol, self.threads)
+            }
+            PlanKind::SfFan(vs) => {
+                let Geometry::Fan(g) = &self.geom else { unreachable!() };
+                sf::back_fan_opt(&self.vg, g, Some(vs.as_slice()), sino, vol, self.threads)
+            }
+            PlanKind::SfCone(vs) => {
+                let Geometry::Cone(g) = &self.geom else { unreachable!() };
+                sf::back_cone_opt(&self.vg, g, Some(vs.as_slice()), sino, vol, self.threads)
+            }
+            PlanKind::SfConeUncached => {
+                let Geometry::Cone(g) = &self.geom else { unreachable!() };
+                sf::back_cone_opt(&self.vg, g, None, sino, vol, self.threads)
+            }
+            PlanKind::Ray { use_siddon, views } => ray_back_exec(
+                &self.vg,
+                &self.geom,
+                Some(views),
+                *use_siddon,
+                sino,
+                vol,
+                self.threads,
+            ),
+        }
+    }
+
+    /// `A·vol`, allocating the output.
+    pub fn forward(&self, vol: &Vol3) -> Sino {
+        let mut sino = self.new_sino();
+        self.forward_into(vol, &mut sino);
+        sino
+    }
+
+    /// `Aᵀ·sino`, allocating the output.
+    pub fn back(&self, sino: &Sino) -> Vol3 {
+        let mut vol = self.new_vol();
+        self.back_into(sino, &mut vol);
+        vol
+    }
+
+    /// `A·1`: per-ray total intersection, used by SIRT/SART normalization.
+    pub fn forward_ones(&self) -> Sino {
+        let mut ones = self.new_vol();
+        ones.fill(1.0);
+        self.forward(&ones)
+    }
+
+    /// `Aᵀ·1`: per-voxel total weight, used by SIRT/SART normalization.
+    pub fn back_ones(&self) -> Vol3 {
+        let mut ones = self.new_sino();
+        ones.fill(1.0);
+        self.back(&ones)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// shared ray-driven executors (Siddon / Joseph / modular-SF fallback)
+// ---------------------------------------------------------------------------
+
+/// View trig for ray construction: cached from the plan when available,
+/// else computed once per `(view, row)` unit (still hoisted out of the
+/// per-ray loop). `None` for modular beams, whose rays come straight from
+/// the stored poses.
+#[inline]
+fn view_trig(geom: &Geometry, views: Option<&RayViews>, view: usize) -> Option<(f64, f64)> {
+    if let Some(v) = views {
+        if !v.trig.is_empty() {
+            return Some(v.trig[view]);
+        }
+        return None;
+    }
+    match geom {
+        Geometry::Parallel(g) => Some(g.angles[view].sin_cos()),
+        Geometry::Fan(g) => Some(g.angles[view].sin_cos()),
+        Geometry::Cone(g) => Some(g.angles[view].sin_cos()),
+        Geometry::Modular(_) => None,
+    }
+}
+
+/// Joseph marching axis, where it is view-constant (parallel beams).
+#[inline]
+fn view_axis(
+    geom: &Geometry,
+    views: Option<&RayViews>,
+    use_siddon: bool,
+    trig: Option<(f64, f64)>,
+    view: usize,
+) -> Option<usize> {
+    if use_siddon {
+        return None;
+    }
+    let Geometry::Parallel(g) = geom else { return None };
+    if let Some(v) = views {
+        if !v.axis.is_empty() {
+            return Some(v.axis[view]);
+        }
+    }
+    let (s, c) = trig?;
+    Some(joseph::major_axis(&g.ray_with_trig(s, c, 0.0, 0.0).dir))
+}
+
+/// The ray through `(view, row, col)`, from cached trig when available.
+/// Delegates to the geometry's `ray_with_trig`, which `Geometry::ray`
+/// itself uses, so both paths produce bit-identical rays.
+#[inline]
+fn ray_for(geom: &Geometry, trig: Option<(f64, f64)>, view: usize, row: usize, col: usize) -> Ray {
+    match (geom, trig) {
+        (Geometry::Parallel(g), Some((s, c))) => g.ray_with_trig(s, c, row as f64, col as f64),
+        (Geometry::Fan(g), Some((s, c))) => g.ray_with_trig(s, c, col as f64),
+        (Geometry::Cone(g), Some((s, c))) => g.ray_with_trig(s, c, row as f64, col as f64),
+        _ => geom.ray(view, row, col),
+    }
+}
+
+/// Ray-driven forward projection, parallel over `(view, row)` units —
+/// each unit's detector row is written by exactly one worker. Shared by
+/// the direct path (`views = None`) and the planned path.
+pub(crate) fn ray_forward_exec(
+    vg: &VolumeGeometry,
+    geom: &Geometry,
+    views: Option<&RayViews>,
+    use_siddon: bool,
+    vol: &Vol3,
+    sino: &mut Sino,
+    threads: usize,
+) {
+    let nrows = sino.nrows;
+    let ncols = sino.ncols;
+    let units = sino.nviews * nrows;
+    sino.fill(0.0);
+    let sino_ptr = SinoPtr(sino as *mut Sino);
+    parallel_chunks(units, threads, |u0, u1| {
+        // SAFETY: disjoint (view, row) slabs per worker
+        let sino = sino_ptr.get();
+        for u in u0..u1 {
+            let view = u / nrows;
+            let row = u % nrows;
+            let trig = view_trig(geom, views, view);
+            let axis = view_axis(geom, views, use_siddon, trig, view);
+            let base = u * ncols;
+            for col in 0..ncols {
+                let ray = ray_for(geom, trig, view, row, col);
+                let mut acc = 0.0f32;
+                if use_siddon {
+                    siddon::walk_ray(vg, &ray, |idx, w| acc += w * vol.data[idx]);
+                } else if let Some(a) = axis {
+                    joseph::walk_ray_with_axis(vg, &ray, a, |idx, w| acc += w * vol.data[idx]);
+                } else {
+                    joseph::walk_ray(vg, &ray, |idx, w| acc += w * vol.data[idx]);
+                }
+                sino.data[base + col] = acc;
+            }
+        }
+    });
+}
+
+/// Ray-driven matched backprojection over `(view, row)` units: scatter
+/// into per-thread partial volumes, reduced in unit order (deterministic
+/// for a fixed thread count). Shared by the direct and planned paths.
+pub(crate) fn ray_back_exec(
+    vg: &VolumeGeometry,
+    geom: &Geometry,
+    views: Option<&RayViews>,
+    use_siddon: bool,
+    sino: &Sino,
+    vol: &mut Vol3,
+    threads: usize,
+) {
+    let nrows = sino.nrows;
+    let ncols = sino.ncols;
+    let units = sino.nviews * nrows;
+    let nvox = vg.num_voxels();
+    let result = pool::parallel_map_reduce(
+        units,
+        threads,
+        |u0, u1| {
+            let mut part = vec![0.0f32; nvox];
+            for u in u0..u1 {
+                let view = u / nrows;
+                let row = u % nrows;
+                let trig = view_trig(geom, views, view);
+                let axis = view_axis(geom, views, use_siddon, trig, view);
+                let base = u * ncols;
+                for col in 0..ncols {
+                    let y = sino.data[base + col];
+                    if y == 0.0 {
+                        continue;
+                    }
+                    let ray = ray_for(geom, trig, view, row, col);
+                    if use_siddon {
+                        siddon::walk_ray(vg, &ray, |idx, w| part[idx] += w * y);
+                    } else if let Some(a) = axis {
+                        joseph::walk_ray_with_axis(vg, &ray, a, |idx, w| part[idx] += w * y);
+                    } else {
+                        joseph::walk_ray(vg, &ray, |idx, w| part[idx] += w * y);
+                    }
+                }
+            }
+            part
+        },
+        |mut a, b| {
+            pool::add_assign(&mut a, &b);
+            a
+        },
+    );
+    if let Some(acc) = result {
+        vol.data.copy_from_slice(&acc);
+    } else {
+        vol.fill(0.0);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::geometry::{ConeBeam, FanBeam, ModularBeam, ParallelBeam};
+    use crate::util::rng::Rng;
+
+    fn geometries() -> Vec<Geometry> {
+        let cone = ConeBeam::standard(5, 6, 10, 1.5, 1.5, 50.0, 100.0);
+        let mut curved = cone.clone();
+        curved.shape = crate::geometry::DetectorShape::Curved;
+        vec![
+            Geometry::Parallel(ParallelBeam::standard_3d(6, 6, 10, 1.2, 1.2)),
+            Geometry::Fan(FanBeam::standard(5, 14, 1.3, 50.0, 100.0)),
+            Geometry::Cone(cone.clone()),
+            Geometry::Cone(curved),
+            Geometry::Modular(ModularBeam::from_cone(&cone)),
+        ]
+    }
+
+    #[test]
+    fn plan_path_is_bit_identical_to_direct_path() {
+        let mut rng = Rng::new(7);
+        for geom in geometries() {
+            let vg = if matches!(geom, Geometry::Fan(_)) {
+                VolumeGeometry::slice2d(9, 9, 1.0)
+            } else {
+                VolumeGeometry::cube(8, 1.0)
+            };
+            for model in [Model::Siddon, Model::Joseph, Model::SF] {
+                let p = Projector::new(geom.clone(), vg.clone(), model).with_threads(3);
+                let plan = p.plan();
+                let mut x = p.new_vol();
+                let mut y = p.new_sino();
+                rng.fill_uniform(&mut x.data, 0.0, 1.0);
+                rng.fill_uniform(&mut y.data, 0.0, 1.0);
+                let fwd_direct = p.forward(&x);
+                let fwd_planned = plan.forward(&x);
+                assert_eq!(
+                    fwd_direct.data,
+                    fwd_planned.data,
+                    "{}/{} forward",
+                    model.name(),
+                    p.geom.kind()
+                );
+                let back_direct = p.back(&y);
+                let back_planned = plan.back(&y);
+                assert_eq!(
+                    back_direct.data,
+                    back_planned.data,
+                    "{}/{} back",
+                    model.name(),
+                    p.geom.kind()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn oversized_cone_plan_degrades_to_on_the_fly_and_stays_identical() {
+        // cap 0 forces the uncached path: output must still match the
+        // direct path exactly, with no resident footprint cache
+        let vg = VolumeGeometry::cube(8, 1.0);
+        let g = Geometry::Cone(ConeBeam::standard(5, 6, 10, 1.5, 1.5, 50.0, 100.0));
+        let p = Projector::new(g, vg, Model::SF).with_threads(2);
+        let capped = ProjectionPlan::new_with_cap(&p, 0);
+        assert_eq!(capped.approx_heap_bytes(), 0);
+        let mut rng = Rng::new(9);
+        let mut x = p.new_vol();
+        rng.fill_uniform(&mut x.data, 0.0, 1.0);
+        assert_eq!(p.forward(&x).data, capped.forward(&x).data);
+        let y = p.forward(&x);
+        assert_eq!(p.back(&y).data, capped.back(&y).data);
+    }
+
+    #[test]
+    fn plan_matches_its_projector_only() {
+        let vg = VolumeGeometry::slice2d(8, 8, 1.0);
+        let g = Geometry::Parallel(ParallelBeam::standard_2d(4, 12, 1.0));
+        let p = Projector::new(g.clone(), vg.clone(), Model::SF);
+        let plan = p.plan();
+        assert!(plan.matches(&p));
+        let other = Projector::new(g, vg, Model::Joseph);
+        assert!(!plan.matches(&other));
+    }
+}

@@ -24,6 +24,18 @@
 //!
 //! Both forward (scatter) and back (gather) projection enumerate the same
 //! voxel→bin coefficients, so the pair is exactly matched.
+//!
+//! ## Plan/execute split
+//!
+//! Every geometry's coefficient enumeration is factored into a **plan**
+//! step (`plan_*_view`: per-view trig, the shared transaxial trapezoid,
+//! axial/row weights, and — for cone beams — the per-voxel-column
+//! footprint bounds) and an **execute** step (`*_view_coeffs_planned`)
+//! that replays the cached invariants. The classic one-shot entry points
+//! plan each view on the fly inside the worker, so the direct and planned
+//! paths share a single code path and are bit-identical by construction.
+//! [`crate::projector::ProjectionPlan`] caches the per-view plans across
+//! operator applications (iterative solvers, the serving coordinator).
 
 use crate::array::{Sino, Vol3};
 use crate::geometry::{ConeBeam, DetectorShape, FanBeam, ParallelBeam, VolumeGeometry};
@@ -121,6 +133,7 @@ fn for_bins<F: FnMut(usize, f64)>(
 /// at a moving position — the SF parallel hot loop. Precomputes the ramp
 /// reciprocals so the CDF is division-free, and bin integrals share the
 /// CDF value at adjacent bin edges (perf pass: EXPERIMENTS.md §Perf).
+#[derive(Clone, Debug)]
 struct TrapEval {
     b: [f64; 4],
     h: f64,
@@ -162,14 +175,39 @@ impl TrapEval {
     }
 }
 
-/// Enumerate SF coefficients of every voxel for view `view` of a
-/// parallel-beam geometry, invoking `emit(voxel_flat, row, col, coeff)`.
-fn parallel_view_coeffs<F: FnMut(usize, usize, usize, f64)>(
-    vg: &VolumeGeometry,
-    g: &ParallelBeam,
-    view: usize,
-    mut emit: F,
-) {
+/// Per-view invariants of the parallel-beam SF footprint — the plan step.
+/// Holds the view trig, the voxel-shape trapezoid (identical for every
+/// voxel at a view) with its division-free evaluator, and the per-z-slice
+/// detector-row weights (the axial footprint bounds).
+#[derive(Clone, Debug)]
+pub struct ParallelViewPlan {
+    sin: f64,
+    cos: f64,
+    shape: Trap,
+    eval: TrapEval,
+    degenerate: bool,
+    pure_2d: bool,
+    /// `row_weights[k]` = (row, weight) overlaps of slice `k`'s z-extent.
+    row_weights: Vec<Vec<(usize, f64)>>,
+}
+
+impl ParallelViewPlan {
+    /// Approximate heap footprint of this view's cache in bytes.
+    pub(crate) fn approx_bytes(&self) -> usize {
+        std::mem::size_of::<ParallelViewPlan>()
+            + self
+                .row_weights
+                .iter()
+                .map(|r| {
+                    std::mem::size_of::<Vec<(usize, f64)>>()
+                        + r.len() * std::mem::size_of::<(usize, f64)>()
+                })
+                .sum::<usize>()
+    }
+}
+
+/// Build the per-view SF invariants for one parallel-beam view.
+pub fn plan_parallel_view(vg: &VolumeGeometry, g: &ParallelBeam, view: usize) -> ParallelViewPlan {
     let phi = g.angles[view];
     let (s, c) = phi.sin_cos();
     let hx = vg.vx / 2.0;
@@ -180,13 +218,6 @@ fn parallel_view_coeffs<F: FnMut(usize, usize, usize, f64)>(
     let shape = Trap::new([-dx - dy, -dx + dy, dx - dy, dx + dy]);
     let eval = TrapEval::new(&shape);
     let degenerate = shape.is_degenerate();
-    let amp_t = vg.vx * vg.vy; // 2-D area; z handled separately
-
-    // detector bin grid
-    let ncols = g.ncols;
-    let half_det = (ncols as f64 - 1.0) / 2.0;
-    let u_lo_0 = -half_det * g.du - g.du / 2.0 + g.cu;
-    let inv_du = 1.0 / g.du;
 
     // axial footprint: rays are horizontal, so the voxel z-extent maps to
     // v directly (rect of width vz). Its per-row weights depend only on k
@@ -204,6 +235,30 @@ fn parallel_view_coeffs<F: FnMut(usize, usize, usize, f64)>(
             row_weights.push(rows);
         }
     }
+    ParallelViewPlan { sin: s, cos: c, shape, eval, degenerate, pure_2d, row_weights }
+}
+
+/// Enumerate SF coefficients of every voxel for one parallel-beam view
+/// from its precomputed plan (the execute step), invoking
+/// `emit(voxel_flat, row, col, coeff)`.
+fn parallel_view_coeffs_planned<F: FnMut(usize, usize, usize, f64)>(
+    vg: &VolumeGeometry,
+    g: &ParallelBeam,
+    vp: &ParallelViewPlan,
+    mut emit: F,
+) {
+    let (s, c) = (vp.sin, vp.cos);
+    let shape = &vp.shape;
+    let eval = &vp.eval;
+    let degenerate = vp.degenerate;
+    let pure_2d = vp.pure_2d;
+    let amp_t = vg.vx * vg.vy; // 2-D area; z handled separately
+
+    // detector bin grid
+    let ncols = g.ncols;
+    let half_det = (ncols as f64 - 1.0) / 2.0;
+    let u_lo_0 = -half_det * g.du - g.du / 2.0 + g.cu;
+    let inv_du = 1.0 / g.du;
 
     // fold scales so the innermost math is one multiply per coefficient
     let amp_u = amp_t * vg.vz * inv_du;
@@ -211,7 +266,7 @@ fn parallel_view_coeffs<F: FnMut(usize, usize, usize, f64)>(
 
     let duc = vg.vx * c; // uc increment per i (can be negative)
     for k in 0..vg.nz {
-        let rows: &[(usize, f64)] = if pure_2d { &[] } else { &row_weights[k] };
+        let rows: &[(usize, f64)] = if pure_2d { &[] } else { &vp.row_weights[k] };
         for j in 0..vg.ny {
             let y = vg.y(j);
             let mut uc = vg.x(0) * c + y * s;
@@ -269,6 +324,19 @@ fn parallel_view_coeffs<F: FnMut(usize, usize, usize, f64)>(
     }
 }
 
+/// Enumerate SF coefficients of every voxel for view `view` of a
+/// parallel-beam geometry (plans the view on the fly), invoking
+/// `emit(voxel_flat, row, col, coeff)`.
+fn parallel_view_coeffs<F: FnMut(usize, usize, usize, f64)>(
+    vg: &VolumeGeometry,
+    g: &ParallelBeam,
+    view: usize,
+    emit: F,
+) {
+    let vp = plan_parallel_view(vg, g, view);
+    parallel_view_coeffs_planned(vg, g, &vp, emit)
+}
+
 /// Public coefficient enumeration for one parallel-beam view — used by
 /// [`crate::sysmatrix`] to assemble the stored-matrix baseline from the
 /// *identical* coefficients the on-the-fly path computes.
@@ -305,7 +373,28 @@ pub fn cone_view_coeffs_pub(
 
 /// SF forward projection, parallel beam. Parallelized over views (each
 /// view owns its output slab — scatter-safe).
-pub fn forward_parallel(vg: &VolumeGeometry, g: &ParallelBeam, vol: &Vol3, sino: &mut Sino, threads: usize) {
+pub fn forward_parallel(
+    vg: &VolumeGeometry,
+    g: &ParallelBeam,
+    vol: &Vol3,
+    sino: &mut Sino,
+    threads: usize,
+) {
+    forward_parallel_opt(vg, g, None, vol, sino, threads)
+}
+
+/// [`forward_parallel`] with optional precomputed per-view plans (one per
+/// view, in view order). `None` plans each view on the fly inside the
+/// worker; both paths share this code, so planned output is bit-identical
+/// to the direct path.
+pub(crate) fn forward_parallel_opt(
+    vg: &VolumeGeometry,
+    g: &ParallelBeam,
+    plans: Option<&[ParallelViewPlan]>,
+    vol: &Vol3,
+    sino: &mut Sino,
+    threads: usize,
+) {
     assert_eq!(sino.nviews, g.angles.len());
     let nrows = sino.nrows;
     let ncols = sino.ncols;
@@ -317,7 +406,15 @@ pub fn forward_parallel(vg: &VolumeGeometry, g: &ParallelBeam, vol: &Vol3, sino:
         let sino = sino_ptr.get();
         for view in v0..v1 {
             let base = view * nrows * ncols;
-            parallel_view_coeffs(vg, g, view, |flat, row, col, coeff| {
+            let local;
+            let vp = match plans {
+                Some(ps) => &ps[view],
+                None => {
+                    local = plan_parallel_view(vg, g, view);
+                    &local
+                }
+            };
+            parallel_view_coeffs_planned(vg, g, vp, |flat, row, col, coeff| {
                 sino.data[base + row * ncols + col] += (coeff as f32) * vol.data[flat];
             });
         }
@@ -327,7 +424,25 @@ pub fn forward_parallel(vg: &VolumeGeometry, g: &ParallelBeam, vol: &Vol3, sino:
 /// Matched SF backprojection, parallel beam. Gathers per view into
 /// per-thread partial volumes, then reduces (exact transpose of
 /// [`forward_parallel`]).
-pub fn back_parallel(vg: &VolumeGeometry, g: &ParallelBeam, sino: &Sino, vol: &mut Vol3, threads: usize) {
+pub fn back_parallel(
+    vg: &VolumeGeometry,
+    g: &ParallelBeam,
+    sino: &Sino,
+    vol: &mut Vol3,
+    threads: usize,
+) {
+    back_parallel_opt(vg, g, None, sino, vol, threads)
+}
+
+/// [`back_parallel`] with optional precomputed per-view plans.
+pub(crate) fn back_parallel_opt(
+    vg: &VolumeGeometry,
+    g: &ParallelBeam,
+    plans: Option<&[ParallelViewPlan]>,
+    sino: &Sino,
+    vol: &mut Vol3,
+    threads: usize,
+) {
     let nviews = g.angles.len();
     let nvox = vg.num_voxels();
     let ncols = sino.ncols;
@@ -338,7 +453,15 @@ pub fn back_parallel(vg: &VolumeGeometry, g: &ParallelBeam, sino: &Sino, vol: &m
             let mut part = vec![0.0f32; nvox];
             for view in v0..v1 {
                 let vdata = sino.view(view);
-                parallel_view_coeffs(vg, g, view, |flat, row, col, coeff| {
+                let local;
+                let vp = match plans {
+                    Some(ps) => &ps[view],
+                    None => {
+                        local = plan_parallel_view(vg, g, view);
+                        &local
+                    }
+                };
+                parallel_view_coeffs_planned(vg, g, vp, |flat, row, col, coeff| {
                     part[flat] += (coeff as f32) * vdata[row * ncols + col];
                 });
             }
@@ -360,14 +483,31 @@ pub fn back_parallel(vg: &VolumeGeometry, g: &ParallelBeam, sino: &Sino, vol: &m
 // fan beam (2-D divergent)
 // ---------------------------------------------------------------------------
 
-fn fan_view_coeffs<F: FnMut(usize, usize, f64)>(
+/// Per-view invariants of the fan-beam SF footprint: the view trig, from
+/// which the source position and detector frame derive. (The per-voxel
+/// footprint of a divergent 2-D beam depends on the voxel, so it stays in
+/// the execute step; caching it for every view would approach the stored
+/// system matrix the paper argues against.)
+#[derive(Clone, Copy, Debug)]
+pub struct FanViewPlan {
+    sin: f64,
+    cos: f64,
+}
+
+/// Build the per-view SF invariants for one fan-beam view.
+pub fn plan_fan_view(g: &FanBeam, view: usize) -> FanViewPlan {
+    let (s, c) = g.angles[view].sin_cos();
+    FanViewPlan { sin: s, cos: c }
+}
+
+/// Enumerate SF coefficients for one fan-beam view from its plan.
+fn fan_view_coeffs_planned<F: FnMut(usize, usize, f64)>(
     vg: &VolumeGeometry,
     g: &FanBeam,
-    view: usize,
+    vp: &FanViewPlan,
     mut emit: F,
 ) {
-    let phi = g.angles[view];
-    let (sphi, cphi) = phi.sin_cos();
+    let (sphi, cphi) = (vp.sin, vp.cos);
     let src = [g.sod * cphi, g.sod * sphi];
     // detector frame: normal n̂ points source→detector, û along columns
     let nhat = [-cphi, -sphi];
@@ -406,8 +546,31 @@ fn fan_view_coeffs<F: FnMut(usize, usize, f64)>(
     }
 }
 
+/// Enumerate SF coefficients for one fan-beam view (plans on the fly).
+fn fan_view_coeffs<F: FnMut(usize, usize, f64)>(
+    vg: &VolumeGeometry,
+    g: &FanBeam,
+    view: usize,
+    emit: F,
+) {
+    let vp = plan_fan_view(g, view);
+    fan_view_coeffs_planned(vg, g, &vp, emit)
+}
+
 /// SF forward projection, fan beam (2-D volume required).
 pub fn forward_fan(vg: &VolumeGeometry, g: &FanBeam, vol: &Vol3, sino: &mut Sino, threads: usize) {
+    forward_fan_opt(vg, g, None, vol, sino, threads)
+}
+
+/// [`forward_fan`] with optional precomputed per-view plans.
+pub(crate) fn forward_fan_opt(
+    vg: &VolumeGeometry,
+    g: &FanBeam,
+    plans: Option<&[FanViewPlan]>,
+    vol: &Vol3,
+    sino: &mut Sino,
+    threads: usize,
+) {
     assert_eq!(vg.nz, 1, "fan-beam SF requires a 2-D volume");
     let ncols = sino.ncols;
     sino.fill(0.0);
@@ -417,31 +580,46 @@ pub fn forward_fan(vg: &VolumeGeometry, g: &FanBeam, vol: &Vol3, sino: &mut Sino
         let sino = sino_ptr.get();
         for view in v0..v1 {
             let base = view * ncols;
-            for_each_fan_coeff(vg, g, view, |flat, col, coeff| {
+            let vp = match plans {
+                Some(ps) => ps[view],
+                None => plan_fan_view(g, view),
+            };
+            fan_view_coeffs_planned(vg, g, &vp, |flat, col, coeff| {
                 sino.data[base + col] += (coeff as f32) * vol.data[flat];
             });
         }
     });
 }
 
-struct SinoPtr(*mut Sino);
+/// Shared-by-workers sinogram pointer for scatter-safe parallel writes
+/// (each worker owns disjoint view / (view, row) slabs). Shared with the
+/// ray-driven executors in [`super::plan`] — keep the one definition.
+pub(crate) struct SinoPtr(pub(crate) *mut Sino);
 unsafe impl Send for SinoPtr {}
 unsafe impl Sync for SinoPtr {}
 impl SinoPtr {
     /// Access through a method so closures capture the Sync wrapper, not
     /// the raw pointer field (edition-2021 disjoint capture).
     #[allow(clippy::mut_from_ref)]
-    fn get(&self) -> &mut Sino {
+    pub(crate) fn get(&self) -> &mut Sino {
         unsafe { &mut *self.0 }
     }
 }
 
-fn for_each_fan_coeff<F: FnMut(usize, usize, f64)>(vg: &VolumeGeometry, g: &FanBeam, view: usize, emit: F) {
-    fan_view_coeffs(vg, g, view, emit);
-}
-
 /// Matched SF backprojection, fan beam.
 pub fn back_fan(vg: &VolumeGeometry, g: &FanBeam, sino: &Sino, vol: &mut Vol3, threads: usize) {
+    back_fan_opt(vg, g, None, sino, vol, threads)
+}
+
+/// [`back_fan`] with optional precomputed per-view plans.
+pub(crate) fn back_fan_opt(
+    vg: &VolumeGeometry,
+    g: &FanBeam,
+    plans: Option<&[FanViewPlan]>,
+    sino: &Sino,
+    vol: &mut Vol3,
+    threads: usize,
+) {
     assert_eq!(vg.nz, 1);
     let nviews = g.angles.len();
     let nvox = vg.num_voxels();
@@ -453,7 +631,11 @@ pub fn back_fan(vg: &VolumeGeometry, g: &FanBeam, sino: &Sino, vol: &mut Vol3, t
             let mut part = vec![0.0f32; nvox];
             for view in v0..v1 {
                 let vdata = sino.view(view);
-                fan_view_coeffs(vg, g, view, |flat, col, coeff| {
+                let vp = match plans {
+                    Some(ps) => ps[view],
+                    None => plan_fan_view(g, view),
+                };
+                fan_view_coeffs_planned(vg, g, &vp, |flat, col, coeff| {
                     part[flat] += (coeff as f32) * vdata[col];
                 });
             }
@@ -475,11 +657,69 @@ pub fn back_fan(vg: &VolumeGeometry, g: &FanBeam, sino: &Sino, vol: &mut Vol3, t
 // cone beam (flat or curved detector), SF-TR style
 // ---------------------------------------------------------------------------
 
-fn cone_view_coeffs<F: FnMut(usize, usize, usize, f64)>(
+/// Per-voxel-column entry of a [`ConeViewPlan`]: the center-of-voxel
+/// scalars the axial (z) loop needs, plus the index range of the
+/// transaxial detector-column weights in the plan's `bins` arena.
+#[derive(Clone, Copy, Debug)]
+struct ConeVoxelFoot {
+    /// Source→voxel-center distance along the detector normal; `≤ 0`
+    /// marks a column behind the source (no coefficients).
+    t_c: f64,
+    /// In-plane source→voxel-center distance.
+    d_inplane: f64,
+    /// Axial magnification at the voxel center.
+    m_v: f64,
+    /// `V · m_u · m_v` — the amplitude numerator (`cos ψ` varies per z).
+    amp_uv: f64,
+    bin0: u32,
+    bin1: u32,
+}
+
+/// Per-view invariants of the cone-beam SF footprint — the plan step.
+/// Caches, for every transaxial voxel column `(i, j)`, the projected
+/// footprint's detector-column weights and the magnification/amplitude
+/// scalars; the execute step only runs the axial overlap loop. Memory is
+/// `O(nx·ny)` per view — the transaxial footprint only, a factor of
+/// `nz × nrows` smaller than the stored system matrix the paper's Table 1
+/// argues against.
+#[derive(Clone, Debug)]
+pub struct ConeViewPlan {
+    foot: Vec<ConeVoxelFoot>,
+    /// Arena of (detector column, transaxial weight) runs indexed by
+    /// `foot[·].bin0..bin1`.
+    bins: Vec<(u32, f64)>,
+}
+
+impl ConeViewPlan {
+    /// Approximate heap footprint of this view's cache in bytes.
+    pub(crate) fn approx_bytes(&self) -> usize {
+        self.foot.len() * std::mem::size_of::<ConeVoxelFoot>()
+            + self.bins.len() * std::mem::size_of::<(u32, f64)>()
+    }
+}
+
+/// Build the per-view SF invariants for one cone-beam view. Allocates a
+/// fresh, size-trimmed plan — the form [`crate::projector::ProjectionPlan`]
+/// caches. The direct path reuses a per-worker scratch plan through
+/// [`plan_cone_view_into`] instead.
+pub fn plan_cone_view(vg: &VolumeGeometry, g: &ConeBeam, view: usize) -> ConeViewPlan {
+    let mut out = ConeViewPlan { foot: Vec::new(), bins: Vec::new() };
+    plan_cone_view_into(vg, g, view, &mut out);
+    // cached plans live long: trim growth slack so resident bytes match
+    // what approx_bytes() reports
+    out.foot.shrink_to_fit();
+    out.bins.shrink_to_fit();
+    out
+}
+
+/// [`plan_cone_view`] into a reusable buffer: clears and refills `out`,
+/// keeping its capacity — the direct (unplanned) executors call this once
+/// per view per worker without churning O(nx·ny) allocations.
+pub(crate) fn plan_cone_view_into(
     vg: &VolumeGeometry,
     g: &ConeBeam,
     view: usize,
-    mut emit: F,
+    out: &mut ConeViewPlan,
 ) {
     let phi = g.angles[view];
     let (sphi, cphi) = phi.sin_cos();
@@ -488,11 +728,13 @@ fn cone_view_coeffs<F: FnMut(usize, usize, usize, f64)>(
     let uhat = [-sphi, cphi];
     let hx = vg.vx / 2.0;
     let hy = vg.vy / 2.0;
-    let hz = vg.vz / 2.0;
     let vol_v = vg.vx * vg.vy * vg.vz;
     let curved = g.shape == DetectorShape::Curved;
-    // reusable transaxial-weight buffer (see perf note below)
-    let mut u_bins: Vec<(usize, f64)> = Vec::with_capacity(8);
+    out.foot.clear();
+    out.foot.reserve(vg.nx * vg.ny);
+    out.bins.clear();
+    let foot = &mut out.foot;
+    let bins = &mut out.bins;
 
     for j in 0..vg.ny {
         let y = vg.y(j);
@@ -520,39 +762,68 @@ fn cone_view_coeffs<F: FnMut(usize, usize, usize, f64)>(
             let py = y - src[1];
             let t_c = px * nhat[0] + py * nhat[1];
             let d_inplane = (px * px + py * py).sqrt();
+            let b0 = bins.len() as u32;
             if t_c <= 0.0 {
-                continue; // behind the source
+                // behind the source: no coefficients for this column
+                foot.push(ConeVoxelFoot { t_c, d_inplane, m_v: 0.0, amp_uv: 0.0, bin0: b0, bin1: b0 });
+                continue;
             }
             // axial magnification: flat uses distance along the normal,
             // curved uses the in-plane distance to the cylinder
             let m_v = if curved { g.sdd / d_inplane } else { g.sdd / t_c };
             let m_u = if curved { g.sdd / d_inplane } else { g.sdd / t_c };
+            for_bins(&utrap, g.ncols, g.du, g.cu, 1.0, |col, a_u| bins.push((col as u32, a_u)));
+            let b1 = bins.len() as u32;
+            foot.push(ConeVoxelFoot {
+                t_c,
+                d_inplane,
+                m_v,
+                amp_uv: vol_v * m_u * m_v,
+                bin0: b0,
+                bin1: b1,
+            });
+        }
+    }
+}
 
-            // the transaxial bin weights are independent of k — enumerate
-            // them once per (i, j) into a small buffer (perf pass)
-            u_bins.clear();
-            for_bins(&utrap, g.ncols, g.du, g.cu, 1.0, |col, a_u| u_bins.push((col, a_u)));
+/// Enumerate SF coefficients for one cone-beam view from its plan — the
+/// execute step: the axial rect-footprint overlap loop over z-slices and
+/// detector rows, replaying the cached transaxial column weights.
+fn cone_view_coeffs_planned<F: FnMut(usize, usize, usize, f64)>(
+    vg: &VolumeGeometry,
+    g: &ConeBeam,
+    vp: &ConeViewPlan,
+    mut emit: F,
+) {
+    let hz = vg.vz / 2.0;
+    let curved = g.shape == DetectorShape::Curved;
+    // detector-row grid for the rect axial footprint
+    let v_lo_0 = -(g.nrows as f64 - 1.0) / 2.0 * g.dv + g.cv - g.dv / 2.0;
+    let inv_dv = 1.0 / g.dv;
+
+    for j in 0..vg.ny {
+        for i in 0..vg.nx {
+            let flat_idx_base = j * vg.nx + i;
+            let f = vp.foot[flat_idx_base];
+            if f.t_c <= 0.0 {
+                continue; // behind the source
+            }
+            let u_bins = &vp.bins[f.bin0 as usize..f.bin1 as usize];
             if u_bins.is_empty() {
                 continue;
             }
-
-            // detector-row grid for the rect axial footprint
-            let v_lo_0 = -(g.nrows as f64 - 1.0) / 2.0 * g.dv + g.cv - g.dv / 2.0;
-            let inv_dv = 1.0 / g.dv;
-
-            let flat_idx_base = j * vg.nx + i;
             for k in 0..vg.nz {
                 let z = vg.z(k);
                 // rect footprint [v0, v1]: closed-form bin overlaps
-                let v0 = (z - hz) * m_v;
-                let v1 = (z + hz) * m_v;
+                let v0 = (z - hz) * f.m_v;
+                let v1 = (z + hz) * f.m_v;
                 let width = v1 - v0;
                 if width <= 0.0 {
                     continue;
                 }
-                let dist = (d_inplane * d_inplane + z * z).sqrt();
-                let cos_psi = if curved { d_inplane / dist } else { t_c / dist };
-                let amp = vol_v * m_u * m_v / cos_psi;
+                let dist = (f.d_inplane * f.d_inplane + z * z).sqrt();
+                let cos_psi = if curved { f.d_inplane / dist } else { f.t_c / dist };
+                let amp = f.amp_uv / cos_psi;
                 let flat = k * vg.ny * vg.nx + flat_idx_base;
 
                 let r_first_f = ((v0 - v_lo_0) * inv_dv).floor();
@@ -571,8 +842,8 @@ fn cone_view_coeffs<F: FnMut(usize, usize, usize, f64)>(
                     }
                     // a_v = (1/dv)·∫ rect = overlap / (width·dv)
                     let a_v = overlap * inv_width_dv * amp;
-                    for &(col, a_u) in &u_bins {
-                        emit(flat, row, col, a_u * a_v);
+                    for &(col, a_u) in u_bins {
+                        emit(flat, row, col as usize, a_u * a_v);
                     }
                 }
             }
@@ -580,8 +851,33 @@ fn cone_view_coeffs<F: FnMut(usize, usize, usize, f64)>(
     }
 }
 
+/// Enumerate SF coefficients for one cone-beam view (plans on the fly).
+fn cone_view_coeffs<F: FnMut(usize, usize, usize, f64)>(
+    vg: &VolumeGeometry,
+    g: &ConeBeam,
+    view: usize,
+    emit: F,
+) {
+    let vp = plan_cone_view(vg, g, view);
+    cone_view_coeffs_planned(vg, g, &vp, emit)
+}
+
 /// SF forward projection, cone beam (flat or curved detector).
 pub fn forward_cone(vg: &VolumeGeometry, g: &ConeBeam, vol: &Vol3, sino: &mut Sino, threads: usize) {
+    forward_cone_opt(vg, g, None, vol, sino, threads)
+}
+
+/// [`forward_cone`] with optional precomputed per-view plans. `None`
+/// plans each view transiently inside the worker (peak extra memory is
+/// one view's transaxial footprint per thread).
+pub(crate) fn forward_cone_opt(
+    vg: &VolumeGeometry,
+    g: &ConeBeam,
+    plans: Option<&[ConeViewPlan]>,
+    vol: &Vol3,
+    sino: &mut Sino,
+    threads: usize,
+) {
     let nrows = sino.nrows;
     let ncols = sino.ncols;
     sino.fill(0.0);
@@ -589,9 +885,19 @@ pub fn forward_cone(vg: &VolumeGeometry, g: &ConeBeam, vol: &Vol3, sino: &mut Si
     let sino_ptr = SinoPtr(sino as *mut Sino);
     parallel_chunks(nviews, threads, |v0, v1| {
         let sino = sino_ptr.get();
+        // per-worker scratch: the direct path refills it per view instead
+        // of churning an O(nx·ny) allocation per view
+        let mut scratch = ConeViewPlan { foot: Vec::new(), bins: Vec::new() };
         for view in v0..v1 {
             let base = view * nrows * ncols;
-            cone_view_coeffs(vg, g, view, |flat, row, col, coeff| {
+            let vp: &ConeViewPlan = match plans {
+                Some(ps) => &ps[view],
+                None => {
+                    plan_cone_view_into(vg, g, view, &mut scratch);
+                    &scratch
+                }
+            };
+            cone_view_coeffs_planned(vg, g, vp, |flat, row, col, coeff| {
                 sino.data[base + row * ncols + col] += (coeff as f32) * vol.data[flat];
             });
         }
@@ -600,6 +906,18 @@ pub fn forward_cone(vg: &VolumeGeometry, g: &ConeBeam, vol: &Vol3, sino: &mut Si
 
 /// Matched SF backprojection, cone beam.
 pub fn back_cone(vg: &VolumeGeometry, g: &ConeBeam, sino: &Sino, vol: &mut Vol3, threads: usize) {
+    back_cone_opt(vg, g, None, sino, vol, threads)
+}
+
+/// [`back_cone`] with optional precomputed per-view plans.
+pub(crate) fn back_cone_opt(
+    vg: &VolumeGeometry,
+    g: &ConeBeam,
+    plans: Option<&[ConeViewPlan]>,
+    sino: &Sino,
+    vol: &mut Vol3,
+    threads: usize,
+) {
     let nviews = g.angles.len();
     let nvox = vg.num_voxels();
     let ncols = sino.ncols;
@@ -608,9 +926,17 @@ pub fn back_cone(vg: &VolumeGeometry, g: &ConeBeam, sino: &Sino, vol: &mut Vol3,
         threads,
         |v0, v1| {
             let mut part = vec![0.0f32; nvox];
+            let mut scratch = ConeViewPlan { foot: Vec::new(), bins: Vec::new() };
             for view in v0..v1 {
                 let vdata = sino.view(view);
-                cone_view_coeffs(vg, g, view, |flat, row, col, coeff| {
+                let vp: &ConeViewPlan = match plans {
+                    Some(ps) => &ps[view],
+                    None => {
+                        plan_cone_view_into(vg, g, view, &mut scratch);
+                        &scratch
+                    }
+                };
+                cone_view_coeffs_planned(vg, g, vp, |flat, row, col, coeff| {
                     part[flat] += (coeff as f32) * vdata[row * ncols + col];
                 });
             }
@@ -764,6 +1090,43 @@ mod tests {
                     "view {view} col {col}: cone {c} fan {f}"
                 );
             }
+        }
+    }
+
+    #[test]
+    fn planned_views_match_on_the_fly_enumeration() {
+        // the plan step must cache exactly what the direct path computes:
+        // identical (flat, row, col, coeff) streams for every geometry
+        let vg3 = VolumeGeometry::cube(10, 1.1);
+        let cone = ConeBeam::standard(5, 8, 12, 1.3, 1.2, 40.0, 90.0);
+        for view in 0..5 {
+            let vp = plan_cone_view(&vg3, &cone, view);
+            let mut direct = Vec::new();
+            let mut planned = Vec::new();
+            cone_view_coeffs(&vg3, &cone, view, |a, b, c, d| direct.push((a, b, c, d)));
+            cone_view_coeffs_planned(&vg3, &cone, &vp, |a, b, c, d| planned.push((a, b, c, d)));
+            assert_eq!(direct, planned, "cone view {view}");
+        }
+
+        let vg = VolumeGeometry::slice2d(12, 12, 0.9);
+        let par = ParallelBeam::standard_2d(6, 20, 1.0);
+        for view in 0..6 {
+            let vp = plan_parallel_view(&vg, &par, view);
+            let mut direct = Vec::new();
+            let mut planned = Vec::new();
+            parallel_view_coeffs(&vg, &par, view, |a, b, c, d| direct.push((a, b, c, d)));
+            parallel_view_coeffs_planned(&vg, &par, &vp, |a, b, c, d| planned.push((a, b, c, d)));
+            assert_eq!(direct, planned, "parallel view {view}");
+        }
+
+        let fan = FanBeam::standard(6, 18, 1.4, 60.0, 120.0);
+        for view in 0..6 {
+            let vp = plan_fan_view(&fan, view);
+            let mut direct = Vec::new();
+            let mut planned = Vec::new();
+            fan_view_coeffs(&vg, &fan, view, |a, b, c| direct.push((a, b, c)));
+            fan_view_coeffs_planned(&vg, &fan, &vp, |a, b, c| planned.push((a, b, c)));
+            assert_eq!(direct, planned, "fan view {view}");
         }
     }
 }

@@ -22,16 +22,18 @@ pub fn cgls(p: &Projector, y: &Sino, iterations: usize) -> CglsResult {
     cgls_from(p, y, &p.new_vol(), iterations)
 }
 
-/// Run CGLS from an arbitrary starting volume.
+/// Run CGLS from an arbitrary starting volume. Plans the projector once;
+/// the CG loop reuses the cached per-view geometry for every `A`/`Aᵀ`.
 pub fn cgls_from(p: &Projector, y: &Sino, x0: &Vol3, iterations: usize) -> CglsResult {
+    let plan = p.plan();
     let mut x = x0.clone();
     // r = y − A x;  s = Aᵀ r;  d = s
     let mut r = y.clone();
-    let ax = p.forward(&x);
+    let ax = plan.forward(&x);
     for i in 0..r.len() {
         r.data[i] -= ax.data[i];
     }
-    let mut s = p.back(&r);
+    let mut s = plan.back(&r);
     let mut d = s.clone();
     let mut norm_s = dot_f64(&s.data, &s.data);
     let mut residuals = vec![norm_s.sqrt()];
@@ -41,7 +43,7 @@ pub fn cgls_from(p: &Projector, y: &Sino, x0: &Vol3, iterations: usize) -> CglsR
         if norm_s <= 1e-30 {
             break;
         }
-        p.forward_into(&d, &mut ad);
+        p.forward_with_plan(&plan, &d, &mut ad);
         let denom = dot_f64(&ad.data, &ad.data);
         if denom <= 1e-30 {
             break;
@@ -53,7 +55,7 @@ pub fn cgls_from(p: &Projector, y: &Sino, x0: &Vol3, iterations: usize) -> CglsR
         for i in 0..r.len() {
             r.data[i] -= alpha * ad.data[i];
         }
-        p.back_into(&r, &mut s);
+        p.back_with_plan(&plan, &r, &mut s);
         let norm_s_new = dot_f64(&s.data, &s.data);
         let beta = (norm_s_new / norm_s) as f32;
         for i in 0..d.len() {

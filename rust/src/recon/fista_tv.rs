@@ -103,13 +103,23 @@ pub fn tv_prox_vol(vol: &mut Vol3, w: f32, iters: usize) {
 
 /// Estimate `‖AᵀA‖₂` by power iteration (matched pair required).
 pub fn power_iter_lipschitz(p: &Projector, iters: usize, seed: u64) -> f64 {
+    power_iter_lipschitz_planned(&p.plan(), iters, seed)
+}
+
+/// [`power_iter_lipschitz`] on a prebuilt plan — lets FISTA share one
+/// plan between the Lipschitz estimate and the main loop.
+pub fn power_iter_lipschitz_planned(
+    plan: &crate::projector::ProjectionPlan,
+    iters: usize,
+    seed: u64,
+) -> f64 {
     let mut rng = crate::util::rng::Rng::new(seed);
-    let mut x = p.new_vol();
+    let mut x = plan.new_vol();
     rng.fill_uniform(&mut x.data, 0.0, 1.0);
     let mut norm = 1.0f64;
     for _ in 0..iters {
-        let ax = p.forward(&x);
-        let atax = p.back(&ax);
+        let ax = plan.forward(&x);
+        let atax = plan.back(&ax);
         norm = atax.data.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>().sqrt();
         if norm <= 1e-30 {
             return 1.0;
@@ -141,9 +151,12 @@ impl Default for FistaOpts {
     }
 }
 
-/// FISTA on `½‖M(Ax − y)‖² + w·TV(x)` from initial `x0`.
+/// FISTA on `½‖M(Ax − y)‖² + w·TV(x)` from initial `x0`. Plans the
+/// projector once; the Lipschitz power iteration and the main loop share
+/// the cached per-view geometry.
 pub fn fista_tv(p: &Projector, y: &Sino, x0: &Vol3, opts: &FistaOpts) -> Vol3 {
-    let lip = power_iter_lipschitz(p, 12, 1234).max(1e-12);
+    let plan = p.plan();
+    let lip = power_iter_lipschitz_planned(&plan, 12, 1234).max(1e-12);
     let step = (1.0 / lip) as f32;
     let mut x = x0.clone();
     let mut z = x.clone();
@@ -151,14 +164,14 @@ pub fn fista_tv(p: &Projector, y: &Sino, x0: &Vol3, opts: &FistaOpts) -> Vol3 {
     let mut ax = p.new_sino();
     for _ in 0..opts.iterations {
         // gradient at z
-        p.forward_into(&z, &mut ax);
+        p.forward_with_plan(&plan, &z, &mut ax);
         for i in 0..ax.len() {
             ax.data[i] -= y.data[i];
         }
         if let Some(mask) = &opts.view_mask {
             super::sirt::apply_view_mask(&mut ax, mask);
         }
-        let grad = p.back(&ax);
+        let grad = plan.back(&ax);
         let mut x_new = z.clone();
         for i in 0..x_new.len() {
             x_new.data[i] -= step * grad.data[i];

@@ -9,21 +9,22 @@ use crate::array::Vol3;
 use crate::projector::Projector;
 
 /// Run `iterations` of MLEM. `y` must be non-negative. Starts from a
-/// uniform positive volume.
+/// uniform positive volume. Plans the projector once for the whole solve.
 pub fn mlem(p: &Projector, y: &Sino, iterations: usize) -> Vol3 {
+    let plan = p.plan();
     let mut x = p.new_vol();
     x.fill(1e-3);
-    let sens = p.back_ones(); // Aᵀ1
+    let sens = plan.back_ones(); // Aᵀ1
     let inv_sens: Vec<f32> =
         sens.data.iter().map(|&v| if v > 1e-6 { 1.0 / v } else { 0.0 }).collect();
     let mut ax = p.new_sino();
     for _ in 0..iterations {
-        p.forward_into(&x, &mut ax);
+        p.forward_with_plan(&plan, &x, &mut ax);
         for i in 0..ax.len() {
             let denom = ax.data[i].max(1e-9);
             ax.data[i] = y.data[i] / denom;
         }
-        let ratio = p.back(&ax);
+        let ratio = plan.back(&ax);
         for i in 0..x.len() {
             x.data[i] *= ratio.data[i] * inv_sens[i];
         }

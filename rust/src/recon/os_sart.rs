@@ -23,14 +23,16 @@ impl Default for OsSartOpts {
     }
 }
 
-/// Run OS-SART from `x0`.
+/// Run OS-SART from `x0`. Plans the projector once for the whole solve;
+/// every subset sweep reuses the cached per-view geometry.
 pub fn os_sart(p: &Projector, y: &Sino, x0: &Vol3, opts: &OsSartOpts) -> Vol3 {
+    let plan = p.plan();
     let nviews = y.nviews;
     let subsets = opts.subsets.clamp(1, nviews);
     let mut x = x0.clone();
 
     // per-subset normalizations
-    let row_sum_full = p.forward_ones();
+    let row_sum_full = plan.forward_ones();
     let mut subset_masks: Vec<Vec<f32>> = Vec::with_capacity(subsets);
     let mut inv_cols: Vec<Vec<f32>> = Vec::with_capacity(subsets);
     for s in 0..subsets {
@@ -39,7 +41,7 @@ pub fn os_sart(p: &Projector, y: &Sino, x0: &Vol3, opts: &OsSartOpts) -> Vol3 {
         let mut ones = p.new_sino();
         ones.fill(1.0);
         super::sirt::apply_view_mask(&mut ones, &mask);
-        let col = p.back(&ones);
+        let col = plan.back(&ones);
         inv_cols.push(col.data.iter().map(|&v| if v > 1e-6 { 1.0 / v } else { 0.0 }).collect());
         subset_masks.push(mask);
     }
@@ -49,12 +51,12 @@ pub fn os_sart(p: &Projector, y: &Sino, x0: &Vol3, opts: &OsSartOpts) -> Vol3 {
     let mut ax = p.new_sino();
     for _ in 0..opts.iterations {
         for s in 0..subsets {
-            p.forward_into(&x, &mut ax);
+            p.forward_with_plan(&plan, &x, &mut ax);
             for i in 0..ax.len() {
                 ax.data[i] = (y.data[i] - ax.data[i]) * inv_row[i];
             }
             super::sirt::apply_view_mask(&mut ax, &subset_masks[s]);
-            let grad = p.back(&ax);
+            let grad = plan.back(&ax);
             let inv_col = &inv_cols[s];
             for i in 0..x.len() {
                 let mut v = x.data[i] + opts.lambda * inv_col[i] * grad.data[i];

@@ -40,10 +40,13 @@ pub struct SirtResult {
 }
 
 /// Run SIRT from initial volume `x0` (pass zeros for a cold start).
+/// Plans the projector once; every `A`/`Aᵀ` application in the hot loop
+/// reuses the cached per-view geometry.
 pub fn sirt(p: &Projector, y: &Sino, x0: &Vol3, opts: &SirtOpts) -> SirtResult {
+    let plan = p.plan();
     let mut x = x0.clone();
     // normalizations (mask-aware: missing views contribute nothing)
-    let mut row_sum = p.forward_ones();
+    let mut row_sum = plan.forward_ones();
     let mut col_ones = Sino::zeros(y.nviews, y.nrows, y.ncols);
     col_ones.fill(1.0);
     if let Some(mask) = &opts.view_mask {
@@ -51,7 +54,7 @@ pub fn sirt(p: &Projector, y: &Sino, x0: &Vol3, opts: &SirtOpts) -> SirtResult {
         apply_view_mask(&mut col_ones, mask);
         apply_view_mask(&mut row_sum, mask);
     }
-    let col_sum = p.back(&col_ones);
+    let col_sum = plan.back(&col_ones);
     let inv_row: Vec<f32> =
         row_sum.data.iter().map(|&v| if v > 1e-6 { 1.0 / v } else { 0.0 }).collect();
     let inv_col: Vec<f32> =
@@ -62,7 +65,7 @@ pub fn sirt(p: &Projector, y: &Sino, x0: &Vol3, opts: &SirtOpts) -> SirtResult {
     let mut ax = p.new_sino();
     let mut grad = p.new_vol();
     for _ in 0..opts.iterations {
-        p.forward_into(&x, &mut ax);
+        p.forward_with_plan(&plan, &x, &mut ax);
         // r = Dr·(y − Ax), masked
         for i in 0..ax.len() {
             ax.data[i] = (y.data[i] - ax.data[i]) * inv_row[i];
@@ -74,7 +77,7 @@ pub fn sirt(p: &Projector, y: &Sino, x0: &Vol3, opts: &SirtOpts) -> SirtResult {
             let n: f64 = ax.data.iter().map(|&v| (v as f64) * (v as f64)).sum();
             residuals.push(n.sqrt());
         }
-        p.back_into(&ax, &mut grad);
+        p.back_with_plan(&plan, &ax, &mut grad);
         for i in 0..x.len() {
             let mut v = x.data[i] + opts.lambda * inv_col[i] * grad.data[i];
             if opts.nonneg && v < 0.0 {

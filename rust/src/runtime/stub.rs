@@ -1,0 +1,111 @@
+//! Clear-error stand-in for the PJRT engine, used when the `pjrt` cargo
+//! feature is off (the default). Same API surface as `runtime::engine`;
+//! every constructor fails with a message explaining how to enable the
+//! real runtime, so callers fall back to their documented native paths.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Result};
+
+use super::ArtifactSpec;
+
+fn unavailable(what: &str) -> anyhow::Error {
+    anyhow!(
+        "{what}: this build has no PJRT runtime (the `pjrt` cargo feature is off). \
+         Rebuild with `cargo build --features pjrt` and the vendored `xla` crate \
+         to execute AOT artifacts; the native Rust projectors cover every op \
+         without it."
+    )
+}
+
+/// One compiled entry point (metadata only in the stub).
+pub struct Entry {
+    pub name: String,
+    pub input_shapes: Vec<Vec<usize>>,
+    pub output_shapes: Vec<Vec<usize>>,
+}
+
+/// Stub artifact engine; [`Engine::load`] always fails.
+pub struct Engine {
+    pub spec: ArtifactSpec,
+    entries: HashMap<String, Entry>,
+    dir: PathBuf,
+}
+
+impl Engine {
+    /// Always fails: the `pjrt` feature is off in this build.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Engine> {
+        let _ = dir.as_ref();
+        Err(unavailable("runtime::Engine::load"))
+    }
+
+    /// Artifact directory this engine was loaded from.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn entry_names(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self.entries.keys().map(|s| s.as_str()).collect();
+        v.sort();
+        v
+    }
+
+    pub fn entry(&self, name: &str) -> Option<&Entry> {
+        self.entries.get(name)
+    }
+
+    pub fn run(&self, name: &str, _inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+        Err(unavailable(name))
+    }
+
+    pub fn run1(&self, name: &str, _inputs: &[&[f32]]) -> Result<Vec<f32>> {
+        Err(unavailable(name))
+    }
+}
+
+/// Stub thread-hosted engine; [`EngineHost::load`] always fails.
+pub struct EngineHost {
+    pub spec: ArtifactSpec,
+    entry_meta: HashMap<String, (Vec<Vec<usize>>, Vec<Vec<usize>>)>,
+}
+
+impl EngineHost {
+    /// Always fails: the `pjrt` feature is off in this build.
+    pub fn load(dir: impl AsRef<Path>) -> Result<EngineHost> {
+        let _ = dir.as_ref();
+        Err(unavailable("runtime::EngineHost::load"))
+    }
+
+    pub fn run(&self, op: &str, _inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+        Err(unavailable(op))
+    }
+
+    pub fn run1(&self, op: &str, _inputs: &[&[f32]]) -> Result<Vec<f32>> {
+        Err(unavailable(op))
+    }
+
+    pub fn entry_names(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self.entry_meta.keys().map(|s| s.as_str()).collect();
+        v.sort();
+        v
+    }
+
+    pub fn shapes(&self, op: &str) -> Option<&(Vec<Vec<usize>>, Vec<Vec<usize>>)> {
+        self.entry_meta.get(op)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn load_error_names_the_feature() {
+        let err = Engine::load("artifacts").unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("pjrt"), "{msg}");
+        let err = EngineHost::load("artifacts").unwrap_err();
+        assert!(format!("{err:#}").contains("pjrt"));
+    }
+}
