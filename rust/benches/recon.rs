@@ -3,13 +3,25 @@
 //! reconstruction algorithms" claim, timed.
 //!
 //! Run: `cargo bench --bench recon`
+//!
+//! Every measurement is appended as a JSON line to `BENCH_PR2.json` at
+//! the repo root (the perf trajectory file) in addition to
+//! `target/bench_results.jsonl`. Set `LEAP_BENCH_SMOKE=1` to run one
+//! iteration of everything (the CI smoke step).
 
-use leap::bench_harness::{append_results, Bench};
-use leap::geometry::{ConeBeam, Geometry, ParallelBeam, VolumeGeometry};
+use leap::bench_harness::{append_results, append_results_to, smoke_mode, Bench};
+use leap::geometry::{
+    ConeBeam, DetectorShape, FanBeam, Geometry, ModularBeam, ParallelBeam, VolumeGeometry,
+};
 use leap::phantom::shepp;
 use leap::projector::{Model, Projector};
 use leap::recon;
+use leap::util::pool::chunk_ranges;
 use leap::{Sino, Vol3};
+
+/// Where the perf trajectory lives: the repo root, independent of the
+/// working directory cargo gives the bench binary.
+const TRAJECTORY: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_PR2.json");
 
 /// The pre-`ProjectionPlan` SIRT loop: every `A`/`Aᵀ` application goes
 /// through the direct path, re-deriving per-view geometry (trig, SF
@@ -45,9 +57,133 @@ fn sirt_unplanned(p: &Projector, y: &Sino, opts: &recon::SirtOpts) -> Vol3 {
     x
 }
 
+/// The PR-1 backprojection *execution strategy*, preserved here as a
+/// measurable baseline: one scoped OS-thread wave per application,
+/// per-thread partial volumes (`threads × volume` scratch), serial
+/// chunk-order fold — with per-view SF planning on the fly, like the
+/// PR-1 direct path. Comparing this against today's direct path (which
+/// also plans per view) isolates exactly what this PR changed: the
+/// persistent pool plus slab-owned accumulation.
+fn scatter_back_pr1_style(p: &Projector, sino: &Sino, vol: &mut Vol3) {
+    let Geometry::Cone(g) = &p.geom else { panic!("cone-beam baseline only") };
+    let nvox = p.vg.num_voxels();
+    let nviews = g.angles.len();
+    let ncols = g.ncols;
+    let ranges = chunk_ranges(nviews, p.threads);
+    let mut parts: Vec<Option<Vec<f32>>> = Vec::new();
+    parts.resize_with(ranges.len(), || None);
+    std::thread::scope(|scope| {
+        for (slot, &(v0, v1)) in parts.iter_mut().zip(ranges.iter()) {
+            let vg = &p.vg;
+            scope.spawn(move || {
+                let mut part = vec![0.0f32; nvox];
+                for view in v0..v1 {
+                    let vdata = sino.view(view);
+                    leap::projector::sf::cone_view_coeffs_pub(
+                        vg,
+                        g,
+                        view,
+                        &mut |flat, row, col, coeff| {
+                            part[flat] += (coeff as f32) * vdata[row * ncols + col];
+                        },
+                    );
+                }
+                *slot = Some(part);
+            });
+        }
+    });
+    vol.fill(0.0);
+    for part in parts.into_iter().flatten() {
+        for (d, s) in vol.data.iter_mut().zip(part.iter()) {
+            *d += s;
+        }
+    }
+}
+
+/// SIRT with the PR-1-style scatter backprojection (see above).
+fn sirt_pr1_scatter(p: &Projector, y: &Sino, opts: &recon::SirtOpts) -> Vol3 {
+    let row_sum = p.forward_ones();
+    let mut col_ones = p.new_sino();
+    col_ones.fill(1.0);
+    let mut col_sum = p.new_vol();
+    scatter_back_pr1_style(p, &col_ones, &mut col_sum);
+    let inv_row: Vec<f32> =
+        row_sum.data.iter().map(|&v| if v > 1e-6 { 1.0 / v } else { 0.0 }).collect();
+    let inv_col: Vec<f32> =
+        col_sum.data.iter().map(|&v| if v > 1e-6 { 1.0 / v } else { 0.0 }).collect();
+    let mut x = p.new_vol();
+    let mut ax = p.new_sino();
+    let mut grad = p.new_vol();
+    for _ in 0..opts.iterations {
+        p.forward_into(&x, &mut ax);
+        for i in 0..ax.len() {
+            ax.data[i] = (y.data[i] - ax.data[i]) * inv_row[i];
+        }
+        scatter_back_pr1_style(p, &ax, &mut grad);
+        for i in 0..x.len() {
+            let mut v = x.data[i] + opts.lambda * inv_col[i] * grad.data[i];
+            if opts.nonneg && v < 0.0 {
+                v = 0.0;
+            }
+            x.data[i] = v;
+        }
+    }
+    x
+}
+
+/// 1-thread vs N-thread outputs must be bit-identical for every model ×
+/// geometry — forward *and* slab-owned back (part of the PR acceptance,
+/// asserted on every bench run).
+fn assert_thread_count_invariance() {
+    let cone = ConeBeam::standard(6, 10, 14, 1.6, 1.6, 60.0, 120.0);
+    let mut curved = cone.clone();
+    curved.shape = DetectorShape::Curved;
+    let geometries = vec![
+        Geometry::Parallel(ParallelBeam::standard_3d(7, 10, 14, 1.3, 1.3)),
+        Geometry::Fan(FanBeam::standard(6, 18, 1.4, 60.0, 120.0)),
+        Geometry::Cone(cone.clone()),
+        Geometry::Cone(curved),
+        Geometry::Modular(ModularBeam::from_cone(&cone)),
+    ];
+    let mut rng = leap::util::rng::Rng::new(77);
+    for geom in geometries {
+        let vg = if matches!(geom, Geometry::Fan(_)) {
+            VolumeGeometry::slice2d(12, 12, 1.0)
+        } else {
+            VolumeGeometry::cube(10, 1.0)
+        };
+        for model in [Model::Siddon, Model::Joseph, Model::SF] {
+            let p1 = Projector::new(geom.clone(), vg.clone(), model).with_threads(1);
+            let pn = Projector::new(geom.clone(), vg.clone(), model).with_threads(4);
+            let mut x = p1.new_vol();
+            let mut y = p1.new_sino();
+            rng.fill_uniform(&mut x.data, 0.0, 1.0);
+            rng.fill_uniform(&mut y.data, 0.0, 1.0);
+            assert_eq!(
+                p1.forward(&x).data,
+                pn.forward(&x).data,
+                "{}/{} forward threads",
+                model.name(),
+                p1.geom.kind()
+            );
+            assert_eq!(
+                p1.back(&y).data,
+                pn.back(&y).data,
+                "{}/{} back threads",
+                model.name(),
+                p1.geom.kind()
+            );
+        }
+    }
+    println!("thread-count invariance: 3 models × 5 geometries bit-identical (1 vs 4 threads)");
+}
+
 fn main() {
-    let bench = Bench::quick();
+    let smoke = smoke_mode();
+    let bench = if smoke { Bench::smoke() } else { Bench::quick() };
     let mut all = Vec::new();
+
+    assert_thread_count_invariance();
 
     // 2-D parallel 128²/180
     let vg = VolumeGeometry::slice2d(128, 128, 1.0);
@@ -126,39 +262,88 @@ fn main() {
     m.print();
     all.push(m);
 
-    // ── plan/execute acceptance: SIRT×50, cone beam, SF model ──
-    // A few-row cone scan spends a large share of every operator
-    // application on per-view footprint planning (corner projections,
-    // trapezoid sort, column-bin integrals); ProjectionPlan computes them
-    // once per solve. The two paths share one execute code path, so the
-    // outputs are bit-identical — asserted below.
+    // ── plan/execute + pool/slab acceptance: SIRT×50, cone beam, SF ──
+    // Three variants of the same solve isolate the two optimizations:
+    //   pr1-scatter : PR-1 execution — scoped thread spawns per op,
+    //                 threads×volume partial copies, serial reduce
+    //   direct      : today's executors, per-view planning on the fly
+    //                 (vs pr1-scatter: isolates pool + slab-owned back)
+    //   plan        : today's executors through a prebuilt plan
+    //                 (vs direct: isolates plan reuse)
+    // All three produce identical volumes (asserted below).
     let vgc = VolumeGeometry { nx: 64, ny: 64, nz: 6, vx: 1.0, vy: 1.0, vz: 1.0, cx: 0.0, cy: 0.0, cz: 0.0 };
     let gc = ConeBeam::standard(36, 8, 96, 1.0, 1.0, 128.0, 256.0);
     let pc = Projector::new(Geometry::Cone(gc), vgc.clone(), Model::SF);
     let phc = shepp::shepp_logan_3d(27.0, 0.02);
     let yc = pc.forward(&phc.rasterize(&vgc, 1));
-    let sirt_opts = recon::SirtOpts { iterations: 50, ..Default::default() };
+    let iters = if smoke { 2 } else { 50 };
+    let sirt_opts = recon::SirtOpts { iterations: iters, ..Default::default() };
+    let nvox = vgc.nx * vgc.ny * vgc.nz;
+    // voxels touched per solve: A and Aᵀ each sweep the volume once per
+    // iteration (plus the two normalization applications)
+    let sweeps = (2 * iters + 2) as f64;
+    let mvox = |mean_s: f64| nvox as f64 * sweeps / mean_s / 1e6;
 
-    let m_direct = bench.run("sirt×50 cone sf 64²×6 (direct, re-plans per application)", || {
+    let name = format!("sirt×{iters} cone sf 64²×6");
+    let mut m_pr1 = bench.run(&format!("{name} (pr1-style: spawn + scatter partials)"), || {
+        sirt_pr1_scatter(&pc, &yc, &sirt_opts)
+    });
+    m_pr1.notes.push(("mvox_per_s".into(), mvox(m_pr1.mean_s)));
+    m_pr1.notes.push(("back_scratch_bytes".into(), (pc.threads * nvox * 4) as f64));
+    m_pr1.print();
+
+    let mut m_direct = bench.run(&format!("{name} (direct, re-plans per application)"), || {
         sirt_unplanned(&pc, &yc, &sirt_opts)
     });
+    m_direct.notes.push(("mvox_per_s".into(), mvox(m_direct.mean_s)));
+    m_direct.notes.push(("back_scratch_bytes".into(), 0.0));
     m_direct.print();
-    let mut m_plan = bench.run("sirt×50 cone sf 64²×6 (plan built once per solve)", || {
+
+    let mut m_plan = bench.run(&format!("{name} (plan built once per solve)"), || {
         recon::sirt(&pc, &yc, &pc.new_vol(), &sirt_opts)
     });
-    let speedup = m_direct.mean_s / m_plan.mean_s;
-    m_plan.notes.push(("speedup_vs_direct".into(), speedup));
+    let speedup_pool_slab = m_pr1.mean_s / m_direct.mean_s;
+    let speedup_plan = m_direct.mean_s / m_plan.mean_s;
+    let speedup_total = m_pr1.mean_s / m_plan.mean_s;
+    m_plan.notes.push(("mvox_per_s".into(), mvox(m_plan.mean_s)));
+    m_plan.notes.push(("back_scratch_bytes".into(), 0.0));
+    m_plan.notes.push(("speedup_pool_slab_vs_pr1".into(), speedup_pool_slab));
+    m_plan.notes.push(("speedup_vs_direct".into(), speedup_plan));
+    m_plan.notes.push(("speedup_total_vs_pr1".into(), speedup_total));
+    m_plan.notes.push(("threads".into(), pc.threads as f64));
     m_plan.print();
 
+    let pr1_vol = sirt_pr1_scatter(&pc, &yc, &sirt_opts);
     let direct_vol = sirt_unplanned(&pc, &yc, &sirt_opts);
     let plan_vol = recon::sirt(&pc, &yc, &pc.new_vol(), &sirt_opts).vol;
     assert_eq!(
         direct_vol.data, plan_vol.data,
         "plan-path SIRT must be bit-identical to the direct path"
     );
-    println!("    → plan reuse: {speedup:.2}× on SIRT×50 (outputs bit-identical)");
+    // the pr1-style scatter folds partials in the same (view-major, then
+    // chunk-order) accumulation order per voxel only at 1 thread; at N
+    // threads its per-voxel order differs, so compare within float noise
+    let max_dev = pr1_vol
+        .data
+        .iter()
+        .zip(plan_vol.data.iter())
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    assert!(max_dev < 1e-3, "pr1-style baseline deviates: {max_dev}");
+    println!(
+        "    → pool+slab vs pr1 scatter: {speedup_pool_slab:.2}× | plan reuse: {speedup_plan:.2}× | \
+         total: {speedup_total:.2}× on SIRT×{iters} at {} threads",
+        pc.threads
+    );
+    println!(
+        "    → back scratch: {} B (pr1: threads×volume partials) → 0 B (slab-owned)",
+        pc.threads * nvox * 4
+    );
+    all.push(m_pr1);
     all.push(m_direct);
     all.push(m_plan);
 
     append_results(&all);
+    append_results_to(TRAJECTORY, &all);
+    println!("appended {} measurements to {TRAJECTORY}", all.len());
 }

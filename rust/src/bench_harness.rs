@@ -83,6 +83,12 @@ impl Bench {
         Bench { warmup: 1, min_iters: 2, max_iters: 5, min_time: Duration::from_millis(50) }
     }
 
+    /// Single-iteration preset: CI smoke runs (see [`smoke_mode`]) only
+    /// check that bench targets still execute, not their timings.
+    pub fn smoke() -> Bench {
+        Bench { warmup: 0, min_iters: 1, max_iters: 1, min_time: Duration::ZERO }
+    }
+
     /// Time `f`, which must fully perform the work each call (return value
     /// is black-boxed).
     pub fn run<T, F: FnMut() -> T>(&self, name: &str, mut f: F) -> Measurement {
@@ -120,19 +126,33 @@ pub fn black_box<T>(x: T) -> T {
     std::hint::black_box(x)
 }
 
-/// Append measurements to `target/bench_results.jsonl` for later analysis.
-pub fn append_results(measurements: &[Measurement]) {
-    let _ = std::fs::create_dir_all("target");
-    if let Ok(mut f) = std::fs::OpenOptions::new()
-        .create(true)
-        .append(true)
-        .open("target/bench_results.jsonl")
-    {
+/// `LEAP_BENCH_SMOKE` is set (to anything but `0`): bench mains should
+/// run one iteration of each case so CI can keep the targets honest
+/// without paying for real measurements.
+pub fn smoke_mode() -> bool {
+    std::env::var("LEAP_BENCH_SMOKE").map(|v| !v.is_empty() && v != "0").unwrap_or(false)
+}
+
+/// Append measurements as JSON lines to an arbitrary file — the perf
+/// trajectory files checked into the repo root (e.g. `BENCH_PR2.json`)
+/// use this so every bench run extends the history.
+pub fn append_results_to(path: &str, measurements: &[Measurement]) {
+    if let Some(dir) = std::path::Path::new(path).parent() {
+        if !dir.as_os_str().is_empty() {
+            let _ = std::fs::create_dir_all(dir);
+        }
+    }
+    if let Ok(mut f) = std::fs::OpenOptions::new().create(true).append(true).open(path) {
         use std::io::Write;
         for m in measurements {
             let _ = writeln!(f, "{}", m.to_json_line());
         }
     }
+}
+
+/// Append measurements to `target/bench_results.jsonl` for later analysis.
+pub fn append_results(measurements: &[Measurement]) {
+    append_results_to("target/bench_results.jsonl", measurements);
 }
 
 #[cfg(test)]

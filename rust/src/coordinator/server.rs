@@ -82,12 +82,21 @@ fn handle_conn(stream: TcpStream, coord: Arc<Coordinator>) -> Result<()> {
             Ok(doc) => {
                 let op = doc.get_str("op").unwrap_or("");
                 match op {
-                    "__stats" => Json::obj(vec![
-                        ("id", Json::Num(doc.get_f64("id").unwrap_or(0.0))),
-                        ("stats", coord.telemetry().to_json()),
-                        ("queue_depth", Json::Num(coord.queue_depth() as f64)),
-                        ("budget_in_flight", Json::Num(coord.budget().in_flight() as f64)),
-                    ]),
+                    "__stats" => {
+                        // the projector worker pool is process-wide and thus
+                        // shared by every connection and request: expose its
+                        // size and dispatch count next to the queue depth so
+                        // operators can see compute saturation per snapshot
+                        let (pool_workers, pool_regions) = crate::util::pool::pool_stats();
+                        Json::obj(vec![
+                            ("id", Json::Num(doc.get_f64("id").unwrap_or(0.0))),
+                            ("stats", coord.telemetry().to_json()),
+                            ("queue_depth", Json::Num(coord.queue_depth() as f64)),
+                            ("budget_in_flight", Json::Num(coord.budget().in_flight() as f64)),
+                            ("pool_workers", Json::Num(pool_workers as f64)),
+                            ("pool_regions", Json::Num(pool_regions as f64)),
+                        ])
+                    }
                     "__ops" => Json::obj(vec![
                         ("id", Json::Num(doc.get_f64("id").unwrap_or(0.0))),
                         (
@@ -201,6 +210,9 @@ mod tests {
             stats.get("stats").unwrap().get("echo").unwrap().get_f64("count"),
             Some(1.0)
         );
+        // the shared projector pool is reported alongside request stats
+        assert!(stats.get_f64("pool_workers").is_some());
+        assert!(stats.get_f64("pool_regions").is_some());
     }
 
     #[test]

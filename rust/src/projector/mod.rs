@@ -31,12 +31,23 @@
 //! ([`crate::coordinator::PlanCache`]).
 //!
 //! **Memory.** No system matrix is ever formed: peak memory is one copy
-//! of the volume plus one copy of the projections (plus a per-thread
-//! partial volume during parallel backprojection, and — only when a plan
-//! is held — the cone-beam plan's `O(nviews·nx·ny)` transaxial footprint
-//! cache, capped at `LEAP_PLAN_MAX_BYTES` with a transparent on-the-fly
-//! fallback). Compare [`crate::sysmatrix`] for the stored-matrix
-//! baseline.
+//! of the volume plus one copy of the projections, **independent of the
+//! thread count**. Parallel backprojection is slab-owned — every worker
+//! accumulates directly into the disjoint voxel rows it owns — so the
+//! former `threads × volume` partial-volume scatter copies (and their
+//! serial reduction) no longer exist on any path; the only transient
+//! per-worker scratch is one cone view's `O(nx·ny)` footprint on the
+//! unplanned path. Only when a plan is held does the cone-beam plan's
+//! `O(nviews·nx·ny)` transaxial footprint cache persist, capped at
+//! `LEAP_PLAN_MAX_BYTES` with a transparent on-the-fly fallback. Compare
+//! [`crate::sysmatrix`] for the stored-matrix baseline.
+//!
+//! **Execution.** All parallel loops run on the process-wide persistent
+//! worker pool ([`crate::util::pool`], sized by `LEAP_THREADS`): operator
+//! applications dispatch parked workers instead of spawning OS threads,
+//! and irregular work (cone-SF views) is dynamically scheduled. Results
+//! are bit-identical across thread counts for both forward and back
+//! projection.
 
 pub mod siddon;
 pub mod joseph;
@@ -329,27 +340,44 @@ mod tests {
 
     #[test]
     fn threads_do_not_change_results() {
-        let vg = VolumeGeometry::cube(12, 1.0);
-        let g = Geometry::Cone(ConeBeam::standard(8, 10, 12, 1.5, 1.5, 80.0, 160.0));
+        // slab-owned backprojection accumulates every voxel in the same
+        // order for any worker count, so forward AND back must now be
+        // bit-identical across thread counts — for every model × geometry
         let mut rng = Rng::new(11);
-        for model in [Model::Siddon, Model::Joseph, Model::SF] {
-            let p1 = Projector::new(g.clone(), vg.clone(), model).with_threads(1);
-            let p4 = Projector::new(g.clone(), vg.clone(), model).with_threads(4);
-            let mut x = p1.new_vol();
-            rng.fill_uniform(&mut x.data, 0.0, 1.0);
-            let a = p1.forward(&x);
-            let b = p4.forward(&x);
-            assert_eq!(a.data, b.data, "{} forward", model.name());
-            let mut y = p1.new_sino();
-            rng.fill_uniform(&mut y.data, 0.0, 1.0);
-            let va = p1.back(&y);
-            let vb = p4.back(&y);
-            for i in 0..va.len() {
-                assert!(
-                    (va.data[i] - vb.data[i]).abs() < 1e-4,
-                    "{} back idx {i}",
-                    model.name()
-                );
+        for geom in all_geometries() {
+            let vg = if matches!(geom, Geometry::Fan(_)) {
+                VolumeGeometry::slice2d(12, 12, 1.0)
+            } else {
+                VolumeGeometry::cube(10, 1.0)
+            };
+            for model in [Model::Siddon, Model::Joseph, Model::SF] {
+                let p1 = Projector::new(geom.clone(), vg.clone(), model).with_threads(1);
+                let mut x = p1.new_vol();
+                rng.fill_uniform(&mut x.data, 0.0, 1.0);
+                let mut y = p1.new_sino();
+                rng.fill_uniform(&mut y.data, 0.0, 1.0);
+                let a = p1.forward(&x);
+                let va = p1.back(&y);
+                for threads in [2usize, 4, 7] {
+                    let pn =
+                        Projector::new(geom.clone(), vg.clone(), model).with_threads(threads);
+                    let b = pn.forward(&x);
+                    assert_eq!(
+                        a.data,
+                        b.data,
+                        "{}/{} forward, {threads} threads",
+                        model.name(),
+                        pn.geom.kind()
+                    );
+                    let vb = pn.back(&y);
+                    assert_eq!(
+                        va.data,
+                        vb.data,
+                        "{}/{} back, {threads} threads",
+                        model.name(),
+                        pn.geom.kind()
+                    );
+                }
             }
         }
     }

@@ -12,8 +12,10 @@
 //!     SF fallback): `(sin φ, cos φ)` so ray construction is pure
 //!     arithmetic, plus the Joseph major axis where it is view-constant
 //!     (parallel beams);
-//!   * SF parallel: the shared transaxial trapezoid + evaluator and the
-//!     per-slice detector-row weights ([`sf::ParallelViewPlan`]);
+//!   * SF parallel: the shared transaxial trapezoid + evaluator per view
+//!     ([`sf::ParallelViewPlan`]) plus **one** copy of the view-invariant
+//!     per-slice detector-row weights ([`sf::ParallelRowWeights`] — rays
+//!     are horizontal, so they are identical at every view);
 //!   * SF cone: the per-voxel-column transaxial footprint (detector
 //!     column weights + magnification/amplitude scalars,
 //!     [`sf::ConeViewPlan`]) — `O(nx·ny)` per view, a factor `nz·nrows`
@@ -30,9 +32,18 @@
 //! whole views: a few-view scan with many detector rows now load-balances
 //! across all workers instead of leaving `threads − nviews` of them idle.
 //!
-//! The plan snapshots the projector's thread count; reductions in the
-//! backprojection depend on the chunk layout, so using the same plan
-//! guarantees reproducible floats.
+//! Backprojection is **slab-owned**: every worker owns a disjoint slab of
+//! the output volume (z-slabs, or y-slabs for single-slice scans) and
+//! replays the sinogram units in global order, keeping only the
+//! coefficients that land in its slab (cheap conservative ray/slab
+//! interval rejection skips non-contributing rays before walking them).
+//! There are no per-thread partial volumes and no reduction, and each
+//! voxel accumulates its contributions in the same global unit order for
+//! every thread count — backprojection floats are thread-count-invariant.
+//!
+//! The plan snapshots the projector's thread count (it is part of the
+//! plan-cache identity and fixes the execution schedule), though results
+//! no longer depend on it.
 //!
 //! The cone footprint cache is the only plan component that scales past
 //! `O(nviews)`; when its estimate exceeds `LEAP_PLAN_MAX_BYTES` (default
@@ -41,9 +52,8 @@
 
 use crate::array::{Sino, Vol3};
 use crate::geometry::{ConeBeam, Geometry, Ray, VolumeGeometry};
-use crate::util::pool::{self, parallel_chunks};
+use crate::util::pool::{self, chunk_ranges, parallel_items, run_region, ParWriter};
 
-use super::sf::SinoPtr;
 use super::{joseph, sf, siddon, Model, Projector};
 
 /// Precomputed per-view invariants for one `(geometry, volume, model)`
@@ -58,7 +68,7 @@ pub struct ProjectionPlan {
 
 enum PlanKind {
     Ray { use_siddon: bool, views: RayViews },
-    SfParallel(Vec<sf::ParallelViewPlan>),
+    SfParallel(sf::ParallelPlanSet),
     SfFan(Vec<sf::FanViewPlan>),
     SfCone(Vec<sf::ConeViewPlan>),
     /// The cone footprint cache would exceed [`plan_max_bytes`]; execute
@@ -168,11 +178,13 @@ impl ProjectionPlan {
     fn new_with_cap(p: &Projector, cap_bytes: usize) -> ProjectionPlan {
         let threads = p.threads;
         let kind = match (p.model, &p.geom) {
-            (Model::SF, Geometry::Parallel(g)) => PlanKind::SfParallel(build_views(
-                g.angles.len(),
-                threads,
-                |v| sf::plan_parallel_view(&p.vg, g, v),
-            )),
+            (Model::SF, Geometry::Parallel(g)) => PlanKind::SfParallel(sf::ParallelPlanSet {
+                views: build_views(g.angles.len(), threads, |v| {
+                    sf::plan_parallel_view(&p.vg, g, v)
+                }),
+                // view-invariant: one copy per plan, not one per view
+                rows: sf::plan_parallel_rows(&p.vg, g),
+            }),
             (Model::SF, Geometry::Fan(g)) => {
                 PlanKind::SfFan((0..g.angles.len()).map(|v| sf::plan_fan_view(g, v)).collect())
             }
@@ -194,11 +206,10 @@ impl ProjectionPlan {
     }
 
     /// Does this plan describe the same scan as `p` — geometry, volume
-    /// grid, model **and** thread count? Threads are part of the
-    /// identity because the backprojection reduction order follows the
-    /// chunk layout: executing a plan with a different worker count
-    /// would silently break the documented direct-vs-planned
-    /// bit-identity.
+    /// grid, model **and** thread count? Slab-owned backprojection made
+    /// the floats thread-count-invariant, but the thread count still
+    /// fixes the execution schedule and keys the coordinator's plan
+    /// cache, so it stays part of the plan identity.
     pub fn matches(&self, p: &Projector) -> bool {
         self.model == p.model
             && self.threads == p.threads
@@ -225,8 +236,14 @@ impl ProjectionPlan {
     pub fn estimate_heap_bytes(p: &Projector) -> usize {
         match (p.model, &p.geom) {
             (Model::SF, Geometry::Cone(g)) => cone_plan_estimate_bytes(g, &p.vg),
-            // per view: the plan struct (~160 B) + per-slice row weights
-            (Model::SF, Geometry::Parallel(g)) => g.angles.len() * (160 + p.vg.nz * 56),
+            // per view: one slim plan; the per-slice row weights are
+            // view-invariant and stored once per plan (~56 B per slice:
+            // Vec header + a couple of (row, weight) overlap entries)
+            (Model::SF, Geometry::Parallel(g)) => {
+                g.angles.len() * std::mem::size_of::<sf::ParallelViewPlan>()
+                    + std::mem::size_of::<sf::ParallelRowWeights>()
+                    + p.vg.nz * 56
+            }
             (Model::SF, Geometry::Fan(g)) => g.angles.len() * std::mem::size_of::<sf::FanViewPlan>(),
             _ => p.geom.nviews() * 24,
         }
@@ -241,7 +258,7 @@ impl ProjectionPlan {
                 views.trig.len() * std::mem::size_of::<(f64, f64)>()
                     + views.axis.len() * std::mem::size_of::<usize>()
             }
-            PlanKind::SfParallel(vs) => vs.iter().map(|v| v.approx_bytes()).sum(),
+            PlanKind::SfParallel(set) => set.approx_bytes(),
             PlanKind::SfFan(vs) => vs.len() * std::mem::size_of::<sf::FanViewPlan>(),
             PlanKind::SfCone(vs) => vs.iter().map(|v| v.approx_bytes()).sum(),
             PlanKind::SfConeUncached => 0,
@@ -263,9 +280,9 @@ impl ProjectionPlan {
     pub fn forward_into(&self, vol: &Vol3, sino: &mut Sino) {
         check_shapes(&self.geom, &self.vg, vol, sino);
         match &self.kind {
-            PlanKind::SfParallel(vs) => {
+            PlanKind::SfParallel(set) => {
                 let Geometry::Parallel(g) = &self.geom else { unreachable!() };
-                sf::forward_parallel_opt(&self.vg, g, Some(vs.as_slice()), vol, sino, self.threads)
+                sf::forward_parallel_opt(&self.vg, g, Some(set), vol, sino, self.threads)
             }
             PlanKind::SfFan(vs) => {
                 let Geometry::Fan(g) = &self.geom else { unreachable!() };
@@ -296,9 +313,9 @@ impl ProjectionPlan {
     pub fn back_into(&self, sino: &Sino, vol: &mut Vol3) {
         check_shapes(&self.geom, &self.vg, vol, sino);
         match &self.kind {
-            PlanKind::SfParallel(vs) => {
+            PlanKind::SfParallel(set) => {
                 let Geometry::Parallel(g) = &self.geom else { unreachable!() };
-                sf::back_parallel_opt(&self.vg, g, Some(vs.as_slice()), sino, vol, self.threads)
+                sf::back_parallel_opt(&self.vg, g, Some(set), sino, vol, self.threads)
             }
             PlanKind::SfFan(vs) => {
                 let Geometry::Fan(g) = &self.geom else { unreachable!() };
@@ -412,8 +429,9 @@ fn ray_for(geom: &Geometry, trig: Option<(f64, f64)>, view: usize, row: usize, c
     }
 }
 
-/// Ray-driven forward projection, parallel over `(view, row)` units —
-/// each unit's detector row is written by exactly one worker. Shared by
+/// Ray-driven forward projection over `(view, row)` units — each unit's
+/// detector row is written by exactly one worker, so any schedule is
+/// safe; units are handed out dynamically for load balance. Shared by
 /// the direct path (`views = None`) and the planned path.
 pub(crate) fn ray_forward_exec(
     vg: &VolumeGeometry,
@@ -428,35 +446,97 @@ pub(crate) fn ray_forward_exec(
     let ncols = sino.ncols;
     let units = sino.nviews * nrows;
     sino.fill(0.0);
-    let sino_ptr = SinoPtr(sino as *mut Sino);
-    parallel_chunks(units, threads, |u0, u1| {
-        // SAFETY: disjoint (view, row) slabs per worker
-        let sino = sino_ptr.get();
-        for u in u0..u1 {
-            let view = u / nrows;
-            let row = u % nrows;
-            let trig = view_trig(geom, views, view);
-            let axis = view_axis(geom, views, use_siddon, trig, view);
-            let base = u * ncols;
-            for col in 0..ncols {
-                let ray = ray_for(geom, trig, view, row, col);
-                let mut acc = 0.0f32;
-                if use_siddon {
-                    siddon::walk_ray(vg, &ray, |idx, w| acc += w * vol.data[idx]);
-                } else if let Some(a) = axis {
-                    joseph::walk_ray_with_axis(vg, &ray, a, |idx, w| acc += w * vol.data[idx]);
-                } else {
-                    joseph::walk_ray(vg, &ray, |idx, w| acc += w * vol.data[idx]);
-                }
-                sino.data[base + col] = acc;
+    let out = ParWriter::new(&mut sino.data);
+    parallel_items(units, threads, |u| {
+        // each (view, row) unit owns its detector row of the sinogram
+        let view = u / nrows;
+        let row = u % nrows;
+        let trig = view_trig(geom, views, view);
+        let axis = view_axis(geom, views, use_siddon, trig, view);
+        let base = u * ncols;
+        for col in 0..ncols {
+            let ray = ray_for(geom, trig, view, row, col);
+            let mut acc = 0.0f32;
+            if use_siddon {
+                siddon::walk_ray(vg, &ray, |idx, w| acc += w * vol.data[idx]);
+            } else if let Some(a) = axis {
+                joseph::walk_ray_with_axis(vg, &ray, a, |idx, w| acc += w * vol.data[idx]);
+            } else {
+                joseph::walk_ray(vg, &ray, |idx, w| acc += w * vol.data[idx]);
             }
+            out.set(base + col, acc);
         }
     });
 }
 
-/// Ray-driven matched backprojection over `(view, row)` units: scatter
-/// into per-thread partial volumes, reduced in unit order (deterministic
-/// for a fixed thread count). Shared by the direct and planned paths.
+/// Conservative ray/slab overlap test for the slab-owned ray-driven
+/// backprojection. Clips the ray to the volume's axis-aligned bounding
+/// box padded by one voxel on every side, then checks whether the ray's
+/// coordinate extent along `slab_ax` over that interval can reach the
+/// (already voxel-padded) slab extent `[ax_lo, ax_hi]`. Must never
+/// reject a contributing ray: the walkers (Siddon exact traversal,
+/// Joseph ±1-cell bilinear) only deposit weight within one voxel of the
+/// ray inside the *unpadded* box, which the double padding strictly
+/// contains. A ray that misses the padded box misses the unpadded box,
+/// where both walkers emit nothing.
+#[inline]
+fn ray_touches_slab(
+    ray: &Ray,
+    lo: &[f64; 3],
+    hi: &[f64; 3],
+    pitch: &[f64; 3],
+    slab_ax: usize,
+    ax_lo: f64,
+    ax_hi: f64,
+) -> bool {
+    let o = ray.origin;
+    let d = ray.dir;
+    let mut tmin = f64::NEG_INFINITY;
+    let mut tmax = f64::INFINITY;
+    for ax in 0..3 {
+        let la = lo[ax] - pitch[ax];
+        let ha = hi[ax] + pitch[ax];
+        if d[ax].abs() < 1e-12 {
+            if o[ax] <= la || o[ax] >= ha {
+                return false;
+            }
+        } else {
+            let ta = (la - o[ax]) / d[ax];
+            let tb = (ha - o[ax]) / d[ax];
+            tmin = tmin.max(ta.min(tb));
+            tmax = tmax.min(ta.max(tb));
+        }
+    }
+    if tmin >= tmax {
+        return false;
+    }
+    let (w_lo, w_hi) = if d[slab_ax].abs() < 1e-12 {
+        (o[slab_ax], o[slab_ax])
+    } else {
+        let a = o[slab_ax] + tmin * d[slab_ax];
+        let b = o[slab_ax] + tmax * d[slab_ax];
+        if a <= b {
+            (a, b)
+        } else {
+            (b, a)
+        }
+    };
+    w_hi >= ax_lo && w_lo <= ax_hi
+}
+
+/// Ray-driven matched backprojection, slab-owned: each worker owns a
+/// contiguous slab of the volume (z-slabs; y-slabs when `nz == 1`) and
+/// replays every `(view, row, col)` ray in global order, accumulating
+/// only the coefficients that land in its slab. A conservative ray/slab
+/// interval test skips rays that cannot touch the slab before walking
+/// them, so near-axial geometries (parallel 3-D, small-cone scans) keep
+/// close to `1/threads` of the walk work per worker. There are no
+/// per-thread partial volumes and no reduction, and every voxel sums its
+/// contributions in the same global order for any thread count —
+/// backprojection floats are thread-count-invariant. (In-plane divergent
+/// rays cross most y-slabs, so 2-D fan/modular scans trade some replay
+/// overlap for the flat memory profile — the documented fallback cost.)
+/// Shared by the direct and planned paths.
 pub(crate) fn ray_back_exec(
     vg: &VolumeGeometry,
     geom: &Geometry,
@@ -469,45 +549,65 @@ pub(crate) fn ray_back_exec(
     let nrows = sino.nrows;
     let ncols = sino.ncols;
     let units = sino.nviews * nrows;
-    let nvox = vg.num_voxels();
-    let result = pool::parallel_map_reduce(
-        units,
-        threads,
-        |u0, u1| {
-            let mut part = vec![0.0f32; nvox];
-            for u in u0..u1 {
-                let view = u / nrows;
-                let row = u % nrows;
-                let trig = view_trig(geom, views, view);
-                let axis = view_axis(geom, views, use_siddon, trig, view);
-                let base = u * ncols;
-                for col in 0..ncols {
-                    let y = sino.data[base + col];
-                    if y == 0.0 {
-                        continue;
+    vol.fill(0.0);
+    if units == 0 {
+        return;
+    }
+    // slab axis: z when the volume has depth, else y (single-slice scans)
+    let slab_ax = if vg.nz > 1 { 2usize } else { 1 };
+    let (n_ax, plane) = if slab_ax == 2 { (vg.nz, vg.nx * vg.ny) } else { (vg.ny, vg.nx) };
+    let slabs = chunk_ranges(n_ax, threads);
+    let (lo, hi) = vg.bounds();
+    let pitch = [vg.vx, vg.vy, vg.vz];
+    let out = ParWriter::new(&mut vol.data);
+    run_region(slabs.len(), |slot| {
+        let (s0, s1) = slabs[slot];
+        let flat_lo = s0 * plane;
+        let flat_hi = s1 * plane;
+        // world extent of this slab along the slab axis, padded one voxel
+        // (walkers deposit within a voxel of the ray; see ray_touches_slab)
+        let ax_lo = lo[slab_ax] + s0 as f64 * pitch[slab_ax] - pitch[slab_ax];
+        let ax_hi = lo[slab_ax] + s1 as f64 * pitch[slab_ax] + pitch[slab_ax];
+        // flat indices [flat_lo, flat_hi) are owned by this slot
+        // units advance view-major, so the per-view invariants are cached
+        // across the nrows × ncols rays of a view instead of re-derived
+        // per unit
+        let mut cur_view = usize::MAX;
+        let mut trig = None;
+        let mut axis = None;
+        for u in 0..units {
+            let view = u / nrows;
+            if view != cur_view {
+                cur_view = view;
+                trig = view_trig(geom, views, view);
+                axis = view_axis(geom, views, use_siddon, trig, view);
+            }
+            let row = u % nrows;
+            let base = u * ncols;
+            for col in 0..ncols {
+                let y = sino.data[base + col];
+                if y == 0.0 {
+                    continue;
+                }
+                let ray = ray_for(geom, trig, view, row, col);
+                if !ray_touches_slab(&ray, &lo, &hi, &pitch, slab_ax, ax_lo, ax_hi) {
+                    continue;
+                }
+                let deposit = |idx: usize, w: f32| {
+                    if idx >= flat_lo && idx < flat_hi {
+                        out.add(idx, w * y);
                     }
-                    let ray = ray_for(geom, trig, view, row, col);
-                    if use_siddon {
-                        siddon::walk_ray(vg, &ray, |idx, w| part[idx] += w * y);
-                    } else if let Some(a) = axis {
-                        joseph::walk_ray_with_axis(vg, &ray, a, |idx, w| part[idx] += w * y);
-                    } else {
-                        joseph::walk_ray(vg, &ray, |idx, w| part[idx] += w * y);
-                    }
+                };
+                if use_siddon {
+                    siddon::walk_ray(vg, &ray, deposit);
+                } else if let Some(a) = axis {
+                    joseph::walk_ray_with_axis(vg, &ray, a, deposit);
+                } else {
+                    joseph::walk_ray(vg, &ray, deposit);
                 }
             }
-            part
-        },
-        |mut a, b| {
-            pool::add_assign(&mut a, &b);
-            a
-        },
-    );
-    if let Some(acc) = result {
-        vol.data.copy_from_slice(&acc);
-    } else {
-        vol.fill(0.0);
-    }
+        }
+    });
 }
 
 #[cfg(test)]

@@ -30,16 +30,31 @@
 //! Every geometry's coefficient enumeration is factored into a **plan**
 //! step (`plan_*_view`: per-view trig, the shared transaxial trapezoid,
 //! axial/row weights, and — for cone beams — the per-voxel-column
-//! footprint bounds) and an **execute** step (`*_view_coeffs_planned`)
-//! that replays the cached invariants. The classic one-shot entry points
-//! plan each view on the fly inside the worker, so the direct and planned
-//! paths share a single code path and are bit-identical by construction.
+//! footprint bounds) and an **execute** step that replays the cached
+//! invariants. The classic one-shot entry points plan each view on the
+//! fly, so the direct and planned paths share a single code path and are
+//! bit-identical by construction.
 //! [`crate::projector::ProjectionPlan`] caches the per-view plans across
 //! operator applications (iterative solvers, the serving coordinator).
+//!
+//! ## Slab-owned backprojection
+//!
+//! SF is voxel-driven, so the matched backprojection is a **gather**:
+//! each worker owns a disjoint range of voxel rows (parallel beam:
+//! `(z-slice, y-row)` units; fan/cone: `y`-rows, which own their full
+//! voxel columns) and accumulates `Σ_views Σ_bins coeff·sino` straight
+//! into the output volume. No worker ever writes another worker's voxels,
+//! so there are **no per-thread partial volumes and no reduction** — peak
+//! scratch memory is independent of the thread count, and each voxel's
+//! contributions always arrive in (view, enumeration) order, making the
+//! output bit-identical for every thread count. The per-view coefficient
+//! enumeration restricted to a row range computes exactly the same
+//! floating-point values as the full enumeration, so forward and back
+//! remain an exactly matched pair.
 
 use crate::array::{Sino, Vol3};
 use crate::geometry::{ConeBeam, DetectorShape, FanBeam, ParallelBeam, VolumeGeometry};
-use crate::util::pool::{self, parallel_chunks};
+use crate::util::pool::{parallel_chunks, parallel_items, parallel_items_with, ParWriter};
 
 /// A trapezoid bump with unit area, described by four sorted breakpoints:
 /// linear rise `b0→b1`, flat `b1→b2`, linear fall `b2→b3`.
@@ -176,9 +191,10 @@ impl TrapEval {
 }
 
 /// Per-view invariants of the parallel-beam SF footprint — the plan step.
-/// Holds the view trig, the voxel-shape trapezoid (identical for every
-/// voxel at a view) with its division-free evaluator, and the per-z-slice
-/// detector-row weights (the axial footprint bounds).
+/// Holds only what actually varies with the view: the trig and the
+/// voxel-shape trapezoid (identical for every voxel at a view) with its
+/// division-free evaluator. The axial (detector-row) weights are
+/// view-invariant and live once per plan in [`ParallelRowWeights`].
 #[derive(Clone, Debug)]
 pub struct ParallelViewPlan {
     sin: f64,
@@ -186,23 +202,46 @@ pub struct ParallelViewPlan {
     shape: Trap,
     eval: TrapEval,
     degenerate: bool,
-    pure_2d: bool,
-    /// `row_weights[k]` = (row, weight) overlaps of slice `k`'s z-extent.
-    row_weights: Vec<Vec<(usize, f64)>>,
 }
 
-impl ParallelViewPlan {
-    /// Approximate heap footprint of this view's cache in bytes.
+/// View-invariant axial footprint of a parallel-beam scan: rays are
+/// horizontal, so slice `k`'s z-extent maps to the same detector rows at
+/// every view. Shared across all views of a plan — the former per-view
+/// copy multiplied plan memory by `nviews` for no information.
+#[derive(Clone, Debug)]
+pub struct ParallelRowWeights {
+    pure_2d: bool,
+    /// `per_k[k]` = (row, weight) overlaps of slice `k`'s z-extent.
+    per_k: Vec<Vec<(usize, f64)>>,
+}
+
+impl ParallelRowWeights {
     pub(crate) fn approx_bytes(&self) -> usize {
-        std::mem::size_of::<ParallelViewPlan>()
+        std::mem::size_of::<ParallelRowWeights>()
             + self
-                .row_weights
+                .per_k
                 .iter()
                 .map(|r| {
                     std::mem::size_of::<Vec<(usize, f64)>>()
                         + r.len() * std::mem::size_of::<(usize, f64)>()
                 })
                 .sum::<usize>()
+    }
+}
+
+/// Everything [`crate::projector::ProjectionPlan`] caches for a
+/// parallel-beam SF scan: one slim plan per view plus the shared
+/// view-invariant row weights.
+#[derive(Clone, Debug)]
+pub struct ParallelPlanSet {
+    pub(crate) views: Vec<ParallelViewPlan>,
+    pub(crate) rows: ParallelRowWeights,
+}
+
+impl ParallelPlanSet {
+    /// Approximate heap footprint of the cached invariants in bytes.
+    pub(crate) fn approx_bytes(&self) -> usize {
+        self.views.len() * std::mem::size_of::<ParallelViewPlan>() + self.rows.approx_bytes()
     }
 }
 
@@ -218,40 +257,62 @@ pub fn plan_parallel_view(vg: &VolumeGeometry, g: &ParallelBeam, view: usize) ->
     let shape = Trap::new([-dx - dy, -dx + dy, dx - dy, dx + dy]);
     let eval = TrapEval::new(&shape);
     let degenerate = shape.is_degenerate();
+    ParallelViewPlan { sin: s, cos: c, shape, eval, degenerate }
+}
 
-    // axial footprint: rays are horizontal, so the voxel z-extent maps to
-    // v directly (rect of width vz). Its per-row weights depend only on k
-    // — hoisted out of the (j, i) loops (perf pass).
+/// Build the shared (view-invariant) axial row weights of a parallel-beam
+/// scan: rays are horizontal, so the voxel z-extent maps to v directly
+/// (rect of width vz). Per-row weights depend only on the slice index.
+pub fn plan_parallel_rows(vg: &VolumeGeometry, g: &ParallelBeam) -> ParallelRowWeights {
     let pure_2d = vg.nz == 1 && g.nrows == 1;
     let hz = vg.vz / 2.0;
-    let mut row_weights: Vec<Vec<(usize, f64)>> = Vec::new();
+    let mut per_k: Vec<Vec<(usize, f64)>> = Vec::new();
     if !pure_2d {
-        row_weights.reserve(vg.nz);
+        per_k.reserve(vg.nz);
         for k in 0..vg.nz {
             let zc = vg.z(k);
             let vtrap = Trap::new([zc - hz, zc - hz, zc + hz, zc + hz]);
             let mut rows = Vec::new();
             for_bins(&vtrap, g.nrows, g.dv, g.cv, 1.0, |row, a_v| rows.push((row, a_v)));
-            row_weights.push(rows);
+            per_k.push(rows);
         }
     }
-    ParallelViewPlan { sin: s, cos: c, shape, eval, degenerate, pure_2d, row_weights }
+    ParallelRowWeights { pure_2d, per_k }
 }
 
-/// Enumerate SF coefficients of every voxel for one parallel-beam view
-/// from its precomputed plan (the execute step), invoking
+/// Build the full parallel-beam plan set (views serially; the plan step
+/// in [`crate::projector::ProjectionPlan`] builds views in parallel and
+/// assembles the set itself).
+pub(crate) fn plan_parallel_set(vg: &VolumeGeometry, g: &ParallelBeam) -> ParallelPlanSet {
+    ParallelPlanSet {
+        views: (0..g.angles.len()).map(|v| plan_parallel_view(vg, g, v)).collect(),
+        rows: plan_parallel_rows(vg, g),
+    }
+}
+
+/// Enumerate SF coefficients for one parallel-beam view restricted to the
+/// voxel-row range `m0..m1`, where row `m = k·ny + j` is one contiguous
+/// x-run of the volume (the execute step), invoking
 /// `emit(voxel_flat, row, col, coeff)`.
-fn parallel_view_coeffs_planned<F: FnMut(usize, usize, usize, f64)>(
+///
+/// The rows decouple — no state crosses a row boundary — so restricting
+/// the range yields exactly the floats of the full enumeration: the basis
+/// of both the forward path (full range per view) and the slab-owned
+/// backprojection (each worker gathers its own row range over all views).
+fn parallel_rows_coeffs<F: FnMut(usize, usize, usize, f64)>(
     vg: &VolumeGeometry,
     g: &ParallelBeam,
     vp: &ParallelViewPlan,
+    rows: &ParallelRowWeights,
+    m0: usize,
+    m1: usize,
     mut emit: F,
 ) {
     let (s, c) = (vp.sin, vp.cos);
     let shape = &vp.shape;
     let eval = &vp.eval;
     let degenerate = vp.degenerate;
-    let pure_2d = vp.pure_2d;
+    let pure_2d = rows.pure_2d;
     let amp_t = vg.vx * vg.vy; // 2-D area; z handled separately
 
     // detector bin grid
@@ -265,63 +326,75 @@ fn parallel_view_coeffs_planned<F: FnMut(usize, usize, usize, f64)>(
     let amp_2d = amp_t * inv_du;
 
     let duc = vg.vx * c; // uc increment per i (can be negative)
-    for k in 0..vg.nz {
-        let rows: &[(usize, f64)] = if pure_2d { &[] } else { &vp.row_weights[k] };
-        for j in 0..vg.ny {
-            let y = vg.y(j);
-            let mut uc = vg.x(0) * c + y * s;
-            let mut flat = (k * vg.ny + j) * vg.nx;
-            for _i in 0..vg.nx {
-                if degenerate {
-                    // zero-width footprint: all mass into the containing bin
-                    let cbin = ((uc - u_lo_0) * inv_du).floor();
-                    if cbin >= 0.0 && (cbin as usize) < ncols {
-                        let col = cbin as usize;
-                        if pure_2d {
-                            emit(flat, 0, col, amp_2d);
-                        } else {
-                            for &(row, a_v) in rows {
-                                emit(flat, row, col, amp_u * a_v);
-                            }
-                        }
-                    }
-                    uc += duc;
-                    flat += 1;
-                    continue;
-                }
-                // overlapped bin range
-                let c_first_f = ((uc + shape.b[0] - u_lo_0) * inv_du).floor();
-                let c_first = if c_first_f < 0.0 { 0usize } else { c_first_f as usize };
-                let c_last_f = ((uc + shape.b[3] - u_lo_0) * inv_du).ceil();
-                if c_last_f < 0.0 || c_first >= ncols {
-                    uc += duc;
-                    flat += 1;
-                    continue;
-                }
-                let c_last = (c_last_f as usize).min(ncols - 1);
-                // shared-edge CDF walk across the bins
-                let mut f_prev = eval.cdf(u_lo_0 + c_first as f64 * g.du - uc);
-                for col in c_first..=c_last {
-                    let f_next = eval.cdf(u_lo_0 + (col + 1) as f64 * g.du - uc);
-                    let w = f_next - f_prev;
-                    f_prev = f_next;
-                    if w <= 0.0 {
-                        continue;
-                    }
+    for m in m0..m1 {
+        let k = m / vg.ny;
+        let j = m % vg.ny;
+        let rw: &[(usize, f64)] = if pure_2d { &[] } else { &rows.per_k[k] };
+        let y = vg.y(j);
+        let mut uc = vg.x(0) * c + y * s;
+        let mut flat = m * vg.nx;
+        for _i in 0..vg.nx {
+            if degenerate {
+                // zero-width footprint: all mass into the containing bin
+                let cbin = ((uc - u_lo_0) * inv_du).floor();
+                if cbin >= 0.0 && (cbin as usize) < ncols {
+                    let col = cbin as usize;
                     if pure_2d {
-                        emit(flat, 0, col, amp_2d * w);
+                        emit(flat, 0, col, amp_2d);
                     } else {
-                        let a_u = amp_u * w;
-                        for &(row, a_v) in rows {
-                            emit(flat, row, col, a_u * a_v);
+                        for &(row, a_v) in rw {
+                            emit(flat, row, col, amp_u * a_v);
                         }
                     }
                 }
                 uc += duc;
                 flat += 1;
+                continue;
             }
+            // overlapped bin range
+            let c_first_f = ((uc + shape.b[0] - u_lo_0) * inv_du).floor();
+            let c_first = if c_first_f < 0.0 { 0usize } else { c_first_f as usize };
+            let c_last_f = ((uc + shape.b[3] - u_lo_0) * inv_du).ceil();
+            if c_last_f < 0.0 || c_first >= ncols {
+                uc += duc;
+                flat += 1;
+                continue;
+            }
+            let c_last = (c_last_f as usize).min(ncols - 1);
+            // shared-edge CDF walk across the bins
+            let mut f_prev = eval.cdf(u_lo_0 + c_first as f64 * g.du - uc);
+            for col in c_first..=c_last {
+                let f_next = eval.cdf(u_lo_0 + (col + 1) as f64 * g.du - uc);
+                let w = f_next - f_prev;
+                f_prev = f_next;
+                if w <= 0.0 {
+                    continue;
+                }
+                if pure_2d {
+                    emit(flat, 0, col, amp_2d * w);
+                } else {
+                    let a_u = amp_u * w;
+                    for &(row, a_v) in rw {
+                        emit(flat, row, col, a_u * a_v);
+                    }
+                }
+            }
+            uc += duc;
+            flat += 1;
         }
     }
+}
+
+/// Enumerate SF coefficients of every voxel for one parallel-beam view
+/// from its plan (full row range).
+fn parallel_view_coeffs_planned<F: FnMut(usize, usize, usize, f64)>(
+    vg: &VolumeGeometry,
+    g: &ParallelBeam,
+    vp: &ParallelViewPlan,
+    rows: &ParallelRowWeights,
+    emit: F,
+) {
+    parallel_rows_coeffs(vg, g, vp, rows, 0, vg.nz * vg.ny, emit)
 }
 
 /// Enumerate SF coefficients of every voxel for view `view` of a
@@ -333,8 +406,9 @@ fn parallel_view_coeffs<F: FnMut(usize, usize, usize, f64)>(
     view: usize,
     emit: F,
 ) {
+    let rows = plan_parallel_rows(vg, g);
     let vp = plan_parallel_view(vg, g, view);
-    parallel_view_coeffs_planned(vg, g, &vp, emit)
+    parallel_view_coeffs_planned(vg, g, &vp, &rows, emit)
 }
 
 /// Public coefficient enumeration for one parallel-beam view — used by
@@ -383,14 +457,15 @@ pub fn forward_parallel(
     forward_parallel_opt(vg, g, None, vol, sino, threads)
 }
 
-/// [`forward_parallel`] with optional precomputed per-view plans (one per
-/// view, in view order). `None` plans each view on the fly inside the
-/// worker; both paths share this code, so planned output is bit-identical
-/// to the direct path.
+/// [`forward_parallel`] with an optional precomputed plan set. `None`
+/// plans each view on the fly inside the worker; both paths share this
+/// code, so planned output is bit-identical to the direct path. Views are
+/// dynamically scheduled (each view's sinogram slab is written by exactly
+/// the worker that claimed it).
 pub(crate) fn forward_parallel_opt(
     vg: &VolumeGeometry,
     g: &ParallelBeam,
-    plans: Option<&[ParallelViewPlan]>,
+    plans: Option<&ParallelPlanSet>,
     vol: &Vol3,
     sino: &mut Sino,
     threads: usize,
@@ -400,30 +475,38 @@ pub(crate) fn forward_parallel_opt(
     let ncols = sino.ncols;
     sino.fill(0.0);
     let nviews = g.angles.len();
-    let sino_ptr = SinoPtr(sino as *mut Sino);
-    parallel_chunks(nviews, threads, |v0, v1| {
-        // SAFETY: each view's slab is written by exactly one worker
-        let sino = sino_ptr.get();
-        for view in v0..v1 {
-            let base = view * nrows * ncols;
-            let local;
-            let vp = match plans {
-                Some(ps) => &ps[view],
-                None => {
-                    local = plan_parallel_view(vg, g, view);
-                    &local
-                }
-            };
-            parallel_view_coeffs_planned(vg, g, vp, |flat, row, col, coeff| {
-                sino.data[base + row * ncols + col] += (coeff as f32) * vol.data[flat];
-            });
+    // the row weights are view-invariant: compute once per call when no
+    // plan is supplied instead of once per view
+    let local_rows;
+    let rows: &ParallelRowWeights = match plans {
+        Some(set) => &set.rows,
+        None => {
+            local_rows = plan_parallel_rows(vg, g);
+            &local_rows
         }
+    };
+    let out = ParWriter::new(&mut sino.data);
+    parallel_items(nviews, threads, |view| {
+        // each view's sinogram slab is written by exactly one worker
+        let base = view * nrows * ncols;
+        let local;
+        let vp = match plans {
+            Some(set) => &set.views[view],
+            None => {
+                local = plan_parallel_view(vg, g, view);
+                &local
+            }
+        };
+        parallel_view_coeffs_planned(vg, g, vp, rows, |flat, row, col, coeff| {
+            out.add(base + row * ncols + col, (coeff as f32) * vol.data[flat]);
+        });
     });
 }
 
-/// Matched SF backprojection, parallel beam. Gathers per view into
-/// per-thread partial volumes, then reduces (exact transpose of
-/// [`forward_parallel`]).
+/// Matched SF backprojection, parallel beam. Slab-owned gather: each
+/// worker accumulates its own voxel rows over all views directly into the
+/// output volume (exact transpose of [`forward_parallel`]; no partial
+/// volumes, no reduction, thread-count-independent floats).
 pub fn back_parallel(
     vg: &VolumeGeometry,
     g: &ParallelBeam,
@@ -434,49 +517,39 @@ pub fn back_parallel(
     back_parallel_opt(vg, g, None, sino, vol, threads)
 }
 
-/// [`back_parallel`] with optional precomputed per-view plans.
+/// [`back_parallel`] with an optional precomputed plan set.
 pub(crate) fn back_parallel_opt(
     vg: &VolumeGeometry,
     g: &ParallelBeam,
-    plans: Option<&[ParallelViewPlan]>,
+    plans: Option<&ParallelPlanSet>,
     sino: &Sino,
     vol: &mut Vol3,
     threads: usize,
 ) {
-    let nviews = g.angles.len();
-    let nvox = vg.num_voxels();
+    let nunits = vg.nz * vg.ny;
     let ncols = sino.ncols;
-    let result = pool::parallel_map_reduce(
-        nviews,
-        threads,
-        |v0, v1| {
-            let mut part = vec![0.0f32; nvox];
-            for view in v0..v1 {
-                let vdata = sino.view(view);
-                let local;
-                let vp = match plans {
-                    Some(ps) => &ps[view],
-                    None => {
-                        local = plan_parallel_view(vg, g, view);
-                        &local
-                    }
-                };
-                parallel_view_coeffs_planned(vg, g, vp, |flat, row, col, coeff| {
-                    part[flat] += (coeff as f32) * vdata[row * ncols + col];
-                });
-            }
-            part
-        },
-        |mut a, b| {
-            pool::add_assign(&mut a, &b);
-            a
-        },
-    );
-    if let Some(acc) = result {
-        vol.data.copy_from_slice(&acc);
-    } else {
-        vol.fill(0.0);
-    }
+    vol.fill(0.0);
+    // the slim per-view invariants are O(nviews) scalars: the direct path
+    // builds them per call (the plan step caches them across calls)
+    let local_set;
+    let set: &ParallelPlanSet = match plans {
+        Some(s) => s,
+        None => {
+            local_set = plan_parallel_set(vg, g);
+            &local_set
+        }
+    };
+    let out = ParWriter::new(&mut vol.data);
+    parallel_chunks(nunits, threads, |m0, m1| {
+        // this worker owns voxel rows m0..m1 (flat range m0·nx..m1·nx)
+        // exclusively
+        for (view, vp) in set.views.iter().enumerate() {
+            let vdata = sino.view(view);
+            parallel_rows_coeffs(vg, g, vp, &set.rows, m0, m1, |flat, row, col, coeff| {
+                out.add(flat, (coeff as f32) * vdata[row * ncols + col]);
+            });
+        }
+    });
 }
 
 // ---------------------------------------------------------------------------
@@ -500,11 +573,16 @@ pub fn plan_fan_view(g: &FanBeam, view: usize) -> FanViewPlan {
     FanViewPlan { sin: s, cos: c }
 }
 
-/// Enumerate SF coefficients for one fan-beam view from its plan.
-fn fan_view_coeffs_planned<F: FnMut(usize, usize, f64)>(
+/// Enumerate SF coefficients for one fan-beam view from its plan,
+/// restricted to the voxel-row range `j0..j1` (rows decouple — every
+/// voxel's footprint derives from its own corners — so the restriction is
+/// float-identical to the full enumeration).
+fn fan_rows_coeffs<F: FnMut(usize, usize, f64)>(
     vg: &VolumeGeometry,
     g: &FanBeam,
     vp: &FanViewPlan,
+    j0: usize,
+    j1: usize,
     mut emit: F,
 ) {
     let (sphi, cphi) = (vp.sin, vp.cos);
@@ -516,7 +594,7 @@ fn fan_view_coeffs_planned<F: FnMut(usize, usize, f64)>(
     let hy = vg.vy / 2.0;
     let area = vg.vx * vg.vy;
 
-    for j in 0..vg.ny {
+    for j in j0..j1 {
         let y = vg.y(j);
         for i in 0..vg.nx {
             let x = vg.x(i);
@@ -554,7 +632,7 @@ fn fan_view_coeffs<F: FnMut(usize, usize, f64)>(
     emit: F,
 ) {
     let vp = plan_fan_view(g, view);
-    fan_view_coeffs_planned(vg, g, &vp, emit)
+    fan_rows_coeffs(vg, g, &vp, 0, vg.ny, emit)
 }
 
 /// SF forward projection, fan beam (2-D volume required).
@@ -575,38 +653,22 @@ pub(crate) fn forward_fan_opt(
     let ncols = sino.ncols;
     sino.fill(0.0);
     let nviews = g.angles.len();
-    let sino_ptr = SinoPtr(sino as *mut Sino);
-    parallel_chunks(nviews, threads, |v0, v1| {
-        let sino = sino_ptr.get();
-        for view in v0..v1 {
-            let base = view * ncols;
-            let vp = match plans {
-                Some(ps) => ps[view],
-                None => plan_fan_view(g, view),
-            };
-            fan_view_coeffs_planned(vg, g, &vp, |flat, col, coeff| {
-                sino.data[base + col] += (coeff as f32) * vol.data[flat];
-            });
-        }
+    let out = ParWriter::new(&mut sino.data);
+    parallel_items(nviews, threads, |view| {
+        // each view's sinogram slab is written by exactly one worker
+        let base = view * ncols;
+        let vp = match plans {
+            Some(ps) => ps[view],
+            None => plan_fan_view(g, view),
+        };
+        fan_rows_coeffs(vg, g, &vp, 0, vg.ny, |flat, col, coeff| {
+            out.add(base + col, (coeff as f32) * vol.data[flat]);
+        });
     });
 }
 
-/// Shared-by-workers sinogram pointer for scatter-safe parallel writes
-/// (each worker owns disjoint view / (view, row) slabs). Shared with the
-/// ray-driven executors in [`super::plan`] — keep the one definition.
-pub(crate) struct SinoPtr(pub(crate) *mut Sino);
-unsafe impl Send for SinoPtr {}
-unsafe impl Sync for SinoPtr {}
-impl SinoPtr {
-    /// Access through a method so closures capture the Sync wrapper, not
-    /// the raw pointer field (edition-2021 disjoint capture).
-    #[allow(clippy::mut_from_ref)]
-    pub(crate) fn get(&self) -> &mut Sino {
-        unsafe { &mut *self.0 }
-    }
-}
-
-/// Matched SF backprojection, fan beam.
+/// Matched SF backprojection, fan beam. Slab-owned gather over voxel rows
+/// (see [`back_parallel`]).
 pub fn back_fan(vg: &VolumeGeometry, g: &FanBeam, sino: &Sino, vol: &mut Vol3, threads: usize) {
     back_fan_opt(vg, g, None, sino, vol, threads)
 }
@@ -622,35 +684,25 @@ pub(crate) fn back_fan_opt(
 ) {
     assert_eq!(vg.nz, 1);
     let nviews = g.angles.len();
-    let nvox = vg.num_voxels();
-
-    let result = pool::parallel_map_reduce(
-        nviews,
-        threads,
-        |v0, v1| {
-            let mut part = vec![0.0f32; nvox];
-            for view in v0..v1 {
-                let vdata = sino.view(view);
-                let vp = match plans {
-                    Some(ps) => ps[view],
-                    None => plan_fan_view(g, view),
-                };
-                fan_view_coeffs_planned(vg, g, &vp, |flat, col, coeff| {
-                    part[flat] += (coeff as f32) * vdata[col];
-                });
-            }
-            part
-        },
-        |mut a, b| {
-            pool::add_assign(&mut a, &b);
-            a
-        },
-    );
-    if let Some(acc) = result {
-        vol.data.copy_from_slice(&acc);
-    } else {
-        vol.fill(0.0);
-    }
+    vol.fill(0.0);
+    let local;
+    let views: &[FanViewPlan] = match plans {
+        Some(ps) => ps,
+        None => {
+            local = (0..nviews).map(|v| plan_fan_view(g, v)).collect::<Vec<_>>();
+            &local
+        }
+    };
+    let out = ParWriter::new(&mut vol.data);
+    parallel_chunks(vg.ny, threads, |j0, j1| {
+        // this worker owns voxel rows j0..j1 exclusively
+        for (view, vp) in views.iter().enumerate() {
+            let vdata = sino.view(view);
+            fan_rows_coeffs(vg, g, vp, j0, j1, |flat, col, coeff| {
+                out.add(flat, (coeff as f32) * vdata[col]);
+            });
+        }
+    });
 }
 
 // ---------------------------------------------------------------------------
@@ -691,6 +743,10 @@ pub struct ConeViewPlan {
 }
 
 impl ConeViewPlan {
+    pub(crate) fn empty() -> ConeViewPlan {
+        ConeViewPlan { foot: Vec::new(), bins: Vec::new() }
+    }
+
     /// Approximate heap footprint of this view's cache in bytes.
     pub(crate) fn approx_bytes(&self) -> usize {
         self.foot.len() * std::mem::size_of::<ConeVoxelFoot>()
@@ -701,10 +757,10 @@ impl ConeViewPlan {
 /// Build the per-view SF invariants for one cone-beam view. Allocates a
 /// fresh, size-trimmed plan — the form [`crate::projector::ProjectionPlan`]
 /// caches. The direct path reuses a per-worker scratch plan through
-/// [`plan_cone_view_into`] instead.
+/// [`plan_cone_rows_into`] instead.
 pub fn plan_cone_view(vg: &VolumeGeometry, g: &ConeBeam, view: usize) -> ConeViewPlan {
-    let mut out = ConeViewPlan { foot: Vec::new(), bins: Vec::new() };
-    plan_cone_view_into(vg, g, view, &mut out);
+    let mut out = ConeViewPlan::empty();
+    plan_cone_rows_into(vg, g, view, 0, vg.ny, &mut out);
     // cached plans live long: trim growth slack so resident bytes match
     // what approx_bytes() reports
     out.foot.shrink_to_fit();
@@ -712,13 +768,19 @@ pub fn plan_cone_view(vg: &VolumeGeometry, g: &ConeBeam, view: usize) -> ConeVie
     out
 }
 
-/// [`plan_cone_view`] into a reusable buffer: clears and refills `out`,
-/// keeping its capacity — the direct (unplanned) executors call this once
-/// per view per worker without churning O(nx·ny) allocations.
-pub(crate) fn plan_cone_view_into(
+/// Plan the voxel-column footprints of rows `j0..j1` for one cone-beam
+/// view into a reusable buffer: clears and refills `out` (foot indexed
+/// `(j − j0)·nx + i`), keeping its capacity. The full-view form
+/// (`j0 = 0, j1 = ny`) is what [`plan_cone_view`] caches; the slab-owned
+/// backprojection replans single rows per worker, which costs exactly one
+/// full planning pass per operator application in total — the same work
+/// the per-view direct path always did, with no `O(nx·ny)` churn.
+pub(crate) fn plan_cone_rows_into(
     vg: &VolumeGeometry,
     g: &ConeBeam,
     view: usize,
+    j0: usize,
+    j1: usize,
     out: &mut ConeViewPlan,
 ) {
     let phi = g.angles[view];
@@ -731,12 +793,12 @@ pub(crate) fn plan_cone_view_into(
     let vol_v = vg.vx * vg.vy * vg.vz;
     let curved = g.shape == DetectorShape::Curved;
     out.foot.clear();
-    out.foot.reserve(vg.nx * vg.ny);
+    out.foot.reserve((j1 - j0) * vg.nx);
     out.bins.clear();
     let foot = &mut out.foot;
     let bins = &mut out.bins;
 
-    for j in 0..vg.ny {
+    for j in j0..j1 {
         let y = vg.y(j);
         for i in 0..vg.nx {
             let x = vg.x(i);
@@ -786,67 +848,82 @@ pub(crate) fn plan_cone_view_into(
     }
 }
 
-/// Enumerate SF coefficients for one cone-beam view from its plan — the
-/// execute step: the axial rect-footprint overlap loop over z-slices and
-/// detector rows, replaying the cached transaxial column weights.
+/// The axial execute loop for one planned voxel column: z-slices ×
+/// detector-row rect overlaps, replaying the cached transaxial column
+/// weights. One definition shared by the forward scatter, the back
+/// gather and the public enumeration, so every path emits the identical
+/// coefficient stream for a column.
+#[inline]
+fn cone_column_coeffs<F: FnMut(usize, usize, usize, f64)>(
+    vg: &VolumeGeometry,
+    g: &ConeBeam,
+    f: &ConeVoxelFoot,
+    u_bins: &[(u32, f64)],
+    flat_idx_base: usize,
+    mut emit: F,
+) {
+    if f.t_c <= 0.0 {
+        return; // behind the source
+    }
+    if u_bins.is_empty() {
+        return;
+    }
+    let hz = vg.vz / 2.0;
+    let curved = g.shape == DetectorShape::Curved;
+    // detector-row grid for the rect axial footprint
+    let v_lo_0 = -(g.nrows as f64 - 1.0) / 2.0 * g.dv + g.cv - g.dv / 2.0;
+    let inv_dv = 1.0 / g.dv;
+    for k in 0..vg.nz {
+        let z = vg.z(k);
+        // rect footprint [v0, v1]: closed-form bin overlaps
+        let v0 = (z - hz) * f.m_v;
+        let v1 = (z + hz) * f.m_v;
+        let width = v1 - v0;
+        if width <= 0.0 {
+            continue;
+        }
+        let dist = (f.d_inplane * f.d_inplane + z * z).sqrt();
+        let cos_psi = if curved { f.d_inplane / dist } else { f.t_c / dist };
+        let amp = f.amp_uv / cos_psi;
+        let flat = k * vg.ny * vg.nx + flat_idx_base;
+
+        let r_first_f = ((v0 - v_lo_0) * inv_dv).floor();
+        let r_last_f = ((v1 - v_lo_0) * inv_dv).floor();
+        if r_last_f < 0.0 || r_first_f >= g.nrows as f64 {
+            continue;
+        }
+        let r_first = if r_first_f < 0.0 { 0 } else { r_first_f as usize };
+        let r_last = (r_last_f.max(0.0) as usize).min(g.nrows - 1);
+        let inv_width_dv = 1.0 / (width * g.dv);
+        for row in r_first..=r_last {
+            let bin_lo = v_lo_0 + row as f64 * g.dv;
+            let overlap = (v1.min(bin_lo + g.dv) - v0.max(bin_lo)).max(0.0);
+            if overlap <= 0.0 {
+                continue;
+            }
+            // a_v = (1/dv)·∫ rect = overlap / (width·dv)
+            let a_v = overlap * inv_width_dv * amp;
+            for &(col, a_u) in u_bins {
+                emit(flat, row, col as usize, a_u * a_v);
+            }
+        }
+    }
+}
+
+/// Enumerate SF coefficients for one cone-beam view from its (full-view)
+/// plan — the execute step.
 fn cone_view_coeffs_planned<F: FnMut(usize, usize, usize, f64)>(
     vg: &VolumeGeometry,
     g: &ConeBeam,
     vp: &ConeViewPlan,
     mut emit: F,
 ) {
-    let hz = vg.vz / 2.0;
-    let curved = g.shape == DetectorShape::Curved;
-    // detector-row grid for the rect axial footprint
-    let v_lo_0 = -(g.nrows as f64 - 1.0) / 2.0 * g.dv + g.cv - g.dv / 2.0;
-    let inv_dv = 1.0 / g.dv;
-
     for j in 0..vg.ny {
         for i in 0..vg.nx {
             let flat_idx_base = j * vg.nx + i;
             let f = vp.foot[flat_idx_base];
-            if f.t_c <= 0.0 {
-                continue; // behind the source
-            }
             let u_bins = &vp.bins[f.bin0 as usize..f.bin1 as usize];
-            if u_bins.is_empty() {
-                continue;
-            }
-            for k in 0..vg.nz {
-                let z = vg.z(k);
-                // rect footprint [v0, v1]: closed-form bin overlaps
-                let v0 = (z - hz) * f.m_v;
-                let v1 = (z + hz) * f.m_v;
-                let width = v1 - v0;
-                if width <= 0.0 {
-                    continue;
-                }
-                let dist = (f.d_inplane * f.d_inplane + z * z).sqrt();
-                let cos_psi = if curved { f.d_inplane / dist } else { f.t_c / dist };
-                let amp = f.amp_uv / cos_psi;
-                let flat = k * vg.ny * vg.nx + flat_idx_base;
-
-                let r_first_f = ((v0 - v_lo_0) * inv_dv).floor();
-                let r_last_f = ((v1 - v_lo_0) * inv_dv).floor();
-                if r_last_f < 0.0 || r_first_f >= g.nrows as f64 {
-                    continue;
-                }
-                let r_first = if r_first_f < 0.0 { 0 } else { r_first_f as usize };
-                let r_last = (r_last_f.max(0.0) as usize).min(g.nrows - 1);
-                let inv_width_dv = 1.0 / (width * g.dv);
-                for row in r_first..=r_last {
-                    let bin_lo = v_lo_0 + row as f64 * g.dv;
-                    let overlap = (v1.min(bin_lo + g.dv) - v0.max(bin_lo)).max(0.0);
-                    if overlap <= 0.0 {
-                        continue;
-                    }
-                    // a_v = (1/dv)·∫ rect = overlap / (width·dv)
-                    let a_v = overlap * inv_width_dv * amp;
-                    for &(col, a_u) in u_bins {
-                        emit(flat, row, col as usize, a_u * a_v);
-                    }
-                }
-            }
+            cone_column_coeffs(vg, g, &f, u_bins, flat_idx_base, &mut emit);
         }
     }
 }
@@ -869,7 +946,9 @@ pub fn forward_cone(vg: &VolumeGeometry, g: &ConeBeam, vol: &Vol3, sino: &mut Si
 
 /// [`forward_cone`] with optional precomputed per-view plans. `None`
 /// plans each view transiently inside the worker (peak extra memory is
-/// one view's transaxial footprint per thread).
+/// one view's transaxial footprint per thread). Views are dynamically
+/// scheduled: cone footprint sizes vary strongly with the view angle, so
+/// an atomic cursor replaces static chunks to keep all workers busy.
 pub(crate) fn forward_cone_opt(
     vg: &VolumeGeometry,
     g: &ConeBeam,
@@ -882,34 +961,37 @@ pub(crate) fn forward_cone_opt(
     let ncols = sino.ncols;
     sino.fill(0.0);
     let nviews = g.angles.len();
-    let sino_ptr = SinoPtr(sino as *mut Sino);
-    parallel_chunks(nviews, threads, |v0, v1| {
-        let sino = sino_ptr.get();
-        // per-worker scratch: the direct path refills it per view instead
-        // of churning an O(nx·ny) allocation per view
-        let mut scratch = ConeViewPlan { foot: Vec::new(), bins: Vec::new() };
-        for view in v0..v1 {
-            let base = view * nrows * ncols;
-            let vp: &ConeViewPlan = match plans {
-                Some(ps) => &ps[view],
-                None => {
-                    plan_cone_view_into(vg, g, view, &mut scratch);
-                    &scratch
-                }
-            };
-            cone_view_coeffs_planned(vg, g, vp, |flat, row, col, coeff| {
-                sino.data[base + row * ncols + col] += (coeff as f32) * vol.data[flat];
-            });
-        }
+    let out = ParWriter::new(&mut sino.data);
+    // per-worker scratch: the direct path refills it per view instead of
+    // churning an O(nx·ny) allocation per view
+    parallel_items_with(nviews, threads, ConeViewPlan::empty, |scratch, view| {
+        // each view's sinogram slab is written by exactly one worker
+        let base = view * nrows * ncols;
+        let vp: &ConeViewPlan = match plans {
+            Some(ps) => &ps[view],
+            None => {
+                plan_cone_rows_into(vg, g, view, 0, vg.ny, scratch);
+                scratch
+            }
+        };
+        cone_view_coeffs_planned(vg, g, vp, |flat, row, col, coeff| {
+            out.add(base + row * ncols + col, (coeff as f32) * vol.data[flat]);
+        });
     });
 }
 
-/// Matched SF backprojection, cone beam.
+/// Matched SF backprojection, cone beam. Slab-owned gather: each worker
+/// owns whole voxel rows (a `y`-row owns its full `x × z` column block),
+/// accumulating over all views directly into the volume — no per-thread
+/// partial volumes, no reduction, bit-identical for every thread count.
 pub fn back_cone(vg: &VolumeGeometry, g: &ConeBeam, sino: &Sino, vol: &mut Vol3, threads: usize) {
     back_cone_opt(vg, g, None, sino, vol, threads)
 }
 
-/// [`back_cone`] with optional precomputed per-view plans.
+/// [`back_cone`] with optional precomputed per-view plans. Voxel rows are
+/// dynamically scheduled; the direct path replans one row per (row, view)
+/// into per-worker scratch, which sums to exactly one full planning pass
+/// per application — the same total planning work as the forward path.
 pub(crate) fn back_cone_opt(
     vg: &VolumeGeometry,
     g: &ConeBeam,
@@ -919,39 +1001,34 @@ pub(crate) fn back_cone_opt(
     threads: usize,
 ) {
     let nviews = g.angles.len();
-    let nvox = vg.num_voxels();
     let ncols = sino.ncols;
-    let result = pool::parallel_map_reduce(
-        nviews,
-        threads,
-        |v0, v1| {
-            let mut part = vec![0.0f32; nvox];
-            let mut scratch = ConeViewPlan { foot: Vec::new(), bins: Vec::new() };
-            for view in v0..v1 {
-                let vdata = sino.view(view);
-                let vp: &ConeViewPlan = match plans {
-                    Some(ps) => &ps[view],
-                    None => {
-                        plan_cone_view_into(vg, g, view, &mut scratch);
-                        &scratch
-                    }
-                };
-                cone_view_coeffs_planned(vg, g, vp, |flat, row, col, coeff| {
-                    part[flat] += (coeff as f32) * vdata[row * ncols + col];
+    let ny = vg.ny;
+    vol.fill(0.0);
+    if nviews == 0 {
+        return;
+    }
+    let out = ParWriter::new(&mut vol.data);
+    // each voxel row j (flat indices k·ny·nx + j·nx + i over all k, i) is
+    // claimed and written by exactly one worker
+    parallel_items_with(ny, threads, ConeViewPlan::empty, |scratch, j| {
+        for view in 0..nviews {
+            let (vp, j_off): (&ConeViewPlan, usize) = match plans {
+                Some(ps) => (&ps[view], 0),
+                None => {
+                    plan_cone_rows_into(vg, g, view, j, j + 1, scratch);
+                    (scratch, j)
+                }
+            };
+            let vdata = sino.view(view);
+            for i in 0..vg.nx {
+                let f = vp.foot[(j - j_off) * vg.nx + i];
+                let u_bins = &vp.bins[f.bin0 as usize..f.bin1 as usize];
+                cone_column_coeffs(vg, g, &f, u_bins, j * vg.nx + i, |flat, row, col, coeff| {
+                    out.add(flat, (coeff as f32) * vdata[row * ncols + col]);
                 });
             }
-            part
-        },
-        |mut a, b| {
-            pool::add_assign(&mut a, &b);
-            a
-        },
-    );
-    if let Some(acc) = result {
-        vol.data.copy_from_slice(&acc);
-    } else {
-        vol.fill(0.0);
-    }
+        }
+    });
 }
 
 #[cfg(test)]
@@ -1110,12 +1187,15 @@ mod tests {
 
         let vg = VolumeGeometry::slice2d(12, 12, 0.9);
         let par = ParallelBeam::standard_2d(6, 20, 1.0);
+        let rows = plan_parallel_rows(&vg, &par);
         for view in 0..6 {
             let vp = plan_parallel_view(&vg, &par, view);
             let mut direct = Vec::new();
             let mut planned = Vec::new();
             parallel_view_coeffs(&vg, &par, view, |a, b, c, d| direct.push((a, b, c, d)));
-            parallel_view_coeffs_planned(&vg, &par, &vp, |a, b, c, d| planned.push((a, b, c, d)));
+            parallel_view_coeffs_planned(&vg, &par, &vp, &rows, |a, b, c, d| {
+                planned.push((a, b, c, d))
+            });
             assert_eq!(direct, planned, "parallel view {view}");
         }
 
@@ -1125,8 +1205,139 @@ mod tests {
             let mut direct = Vec::new();
             let mut planned = Vec::new();
             fan_view_coeffs(&vg, &fan, view, |a, b, c| direct.push((a, b, c)));
-            fan_view_coeffs_planned(&vg, &fan, &vp, |a, b, c| planned.push((a, b, c)));
+            fan_rows_coeffs(&vg, &fan, &vp, 0, vg.ny, |a, b, c| planned.push((a, b, c)));
             assert_eq!(direct, planned, "fan view {view}");
+        }
+    }
+
+    #[test]
+    fn row_restricted_enumeration_is_float_identical() {
+        // the slab-owned gather relies on this: enumerating a row range
+        // must emit exactly the full enumeration's coefficients for those
+        // rows, bit for bit
+        let vg = VolumeGeometry { nx: 9, ny: 7, nz: 4, vx: 1.1, vy: 0.9, vz: 1.3, cx: 0.4, cy: -0.2, cz: 0.1 };
+        let par = ParallelBeam::standard_3d(5, 6, 14, 1.2, 1.1);
+        let rows = plan_parallel_rows(&vg, &par);
+        for view in 0..5 {
+            let vp = plan_parallel_view(&vg, &par, view);
+            let mut full: Vec<(usize, usize, usize, u64)> = Vec::new();
+            parallel_view_coeffs_planned(&vg, &par, &vp, &rows, |a, b, c, d| {
+                full.push((a, b, c, d.to_bits()))
+            });
+            let mut stitched = Vec::new();
+            let nunits = vg.nz * vg.ny;
+            for m in 0..nunits {
+                parallel_rows_coeffs(&vg, &par, &vp, &rows, m, m + 1, |a, b, c, d| {
+                    stitched.push((a, b, c, d.to_bits()))
+                });
+            }
+            assert_eq!(full, stitched, "parallel view {view}");
+        }
+
+        let vg2 = VolumeGeometry::slice2d(11, 8, 0.8);
+        let fan = FanBeam::standard(4, 16, 1.1, 45.0, 95.0);
+        for view in 0..4 {
+            let vp = plan_fan_view(&fan, view);
+            let mut full: Vec<(usize, usize, u64)> = Vec::new();
+            fan_rows_coeffs(&vg2, &fan, &vp, 0, vg2.ny, |a, b, c| full.push((a, b, c.to_bits())));
+            let mut stitched = Vec::new();
+            for j in 0..vg2.ny {
+                fan_rows_coeffs(&vg2, &fan, &vp, j, j + 1, |a, b, c| {
+                    stitched.push((a, b, c.to_bits()))
+                });
+            }
+            assert_eq!(full, stitched, "fan view {view}");
+        }
+
+        // cone: single-row scratch planning must reproduce the full plan's
+        // column footprints exactly
+        let vg3 = VolumeGeometry::cube(8, 1.2);
+        let cone = ConeBeam::standard(4, 6, 10, 1.4, 1.3, 42.0, 88.0);
+        let mut scratch = ConeViewPlan::empty();
+        for view in 0..4 {
+            let full = plan_cone_view(&vg3, &cone, view);
+            for j in 0..vg3.ny {
+                plan_cone_rows_into(&vg3, &cone, view, j, j + 1, &mut scratch);
+                for i in 0..vg3.nx {
+                    let a = full.foot[j * vg3.nx + i];
+                    let b = scratch.foot[i];
+                    assert_eq!(a.t_c.to_bits(), b.t_c.to_bits());
+                    assert_eq!(a.m_v.to_bits(), b.m_v.to_bits());
+                    assert_eq!(a.amp_uv.to_bits(), b.amp_uv.to_bits());
+                    let ab = &full.bins[a.bin0 as usize..a.bin1 as usize];
+                    let bb = &scratch.bins[b.bin0 as usize..b.bin1 as usize];
+                    assert_eq!(ab.len(), bb.len());
+                    for (x, y) in ab.iter().zip(bb.iter()) {
+                        assert_eq!(x.0, y.0);
+                        assert_eq!(x.1.to_bits(), y.1.to_bits());
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn back_gather_matches_serial_scatter_reference() {
+        // the slab-owned gather must equal a serial view-by-view scatter
+        // of the same coefficients bit for bit (per voxel both accumulate
+        // in (view, enumeration) order)
+        let mut rng = crate::util::rng::Rng::new(21);
+
+        let vg = VolumeGeometry { nx: 10, ny: 9, nz: 3, vx: 1.0, vy: 1.1, vz: 0.9, cx: 0.0, cy: 0.0, cz: 0.0 };
+        let par = ParallelBeam::standard_3d(6, 4, 15, 1.2, 1.2);
+        let mut sino = Sino::zeros(6, 4, 15);
+        rng.fill_uniform(&mut sino.data, -1.0, 1.0);
+        let mut reference = Vol3::zeros(vg.nx, vg.ny, vg.nz);
+        for view in 0..6 {
+            let vdata: Vec<f32> = sino.view(view).to_vec();
+            parallel_view_coeffs(&vg, &par, view, |flat, row, col, coeff| {
+                reference.data[flat] += (coeff as f32) * vdata[row * 15 + col];
+            });
+        }
+        for threads in [1usize, 2, 5] {
+            let mut vol = Vol3::zeros(vg.nx, vg.ny, vg.nz);
+            back_parallel(&vg, &par, &sino, &mut vol, threads);
+            assert_eq!(reference.data, vol.data, "parallel threads {threads}");
+        }
+
+        let vg2 = VolumeGeometry::slice2d(12, 10, 1.0);
+        let fan = FanBeam::standard(5, 16, 1.2, 55.0, 110.0);
+        let mut sino2 = Sino::zeros2d(5, 16);
+        rng.fill_uniform(&mut sino2.data, -1.0, 1.0);
+        let mut ref2 = Vol3::zeros2d(12, 10);
+        for view in 0..5 {
+            let vdata: Vec<f32> = sino2.view(view).to_vec();
+            fan_view_coeffs(&vg2, &fan, view, |flat, col, coeff| {
+                ref2.data[flat] += (coeff as f32) * vdata[col];
+            });
+        }
+        for threads in [1usize, 3, 4] {
+            let mut vol = Vol3::zeros2d(12, 10);
+            back_fan(&vg2, &fan, &sino2, &mut vol, threads);
+            assert_eq!(ref2.data, vol.data, "fan threads {threads}");
+        }
+
+        let vg3 = VolumeGeometry::cube(8, 1.0);
+        let cone = ConeBeam::standard(5, 6, 10, 1.5, 1.5, 50.0, 100.0);
+        let mut sino3 = Sino::zeros(5, 6, 10);
+        rng.fill_uniform(&mut sino3.data, -1.0, 1.0);
+        let mut ref3 = Vol3::zeros(8, 8, 8);
+        for view in 0..5 {
+            let vdata: Vec<f32> = sino3.view(view).to_vec();
+            cone_view_coeffs(&vg3, &cone, view, |flat, row, col, coeff| {
+                ref3.data[flat] += (coeff as f32) * vdata[row * 10 + col];
+            });
+        }
+        for threads in [1usize, 2, 4] {
+            let mut vol = Vol3::zeros(8, 8, 8);
+            back_cone(&vg3, &cone, &sino3, &mut vol, threads);
+            for idx in 0..ref3.len() {
+                assert_eq!(
+                    ref3.data[idx].to_bits(),
+                    vol.data[idx].to_bits(),
+                    "cone threads {threads} idx {idx}"
+                );
+            }
         }
     }
 }

@@ -24,6 +24,9 @@ pub fn cgls(p: &Projector, y: &Sino, iterations: usize) -> CglsResult {
 
 /// Run CGLS from an arbitrary starting volume. Plans the projector once;
 /// the CG loop reuses the cached per-view geometry for every `A`/`Aᵀ`.
+/// Each application dispatches to the persistent worker pool (no
+/// per-iteration thread spawns) and backprojects slab-owned, so solver
+/// memory stays at one volume + one sinogram regardless of thread count.
 pub fn cgls_from(p: &Projector, y: &Sino, x0: &Vol3, iterations: usize) -> CglsResult {
     let plan = p.plan();
     let mut x = x0.clone();

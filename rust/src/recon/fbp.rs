@@ -9,7 +9,7 @@
 
 use crate::array::{Sino, Vol3};
 use crate::geometry::{ConeBeam, DetectorShape, FanBeam, ParallelBeam, VolumeGeometry};
-use crate::util::pool::parallel_chunks;
+use crate::util::pool::{parallel_chunks, ParWriter};
 
 use super::filters::{filter_rows, ramp_response, Window};
 
@@ -26,19 +26,9 @@ pub fn backproject_pixel_parallel(
     let mut vol = Vol3::zeros(vg.nx, vg.ny, vg.nz);
     let nviews = g.angles.len();
     let ncols = g.ncols;
-    struct VolPtr(*mut Vol3);
-    unsafe impl Send for VolPtr {}
-    unsafe impl Sync for VolPtr {}
-    impl VolPtr {
-        #[allow(clippy::mut_from_ref)]
-        fn get(&self) -> &mut Vol3 {
-            unsafe { &mut *self.0 }
-        }
-    }
-    let vol_ptr = VolPtr(&mut vol as *mut Vol3);
+    let out = ParWriter::new(&mut vol.data);
     // parallel over z-slices (each worker owns whole slices)
     parallel_chunks(vg.nz, threads, |k0, k1| {
-        let vol = vol_ptr.get();
         for k in k0..k1 {
             let z = vg.z(k);
             // nearest detector row for this slice (linear interp over rows)
@@ -87,7 +77,7 @@ pub fn backproject_pixel_parallel(
                         let u = x * c + y * s;
                         let fu = g.col_of_u(u);
                         let q = sample(row0, wr0, fu) + sample(row1, wr1, fu);
-                        *vol.at_mut(i, j, k) += q * scale as f32;
+                        out.add((k * vg.ny + j) * vg.nx + i, q * scale as f32);
                     }
                 }
             }
@@ -156,18 +146,9 @@ pub fn fbp_fan(
 
     let mut vol = Vol3::zeros(vg.nx, vg.ny, 1);
     let nviews = g.angles.len();
-    struct VolPtr(*mut Vol3);
-    unsafe impl Send for VolPtr {}
-    unsafe impl Sync for VolPtr {}
-    impl VolPtr {
-        #[allow(clippy::mut_from_ref)]
-        fn get(&self) -> &mut Vol3 {
-            unsafe { &mut *self.0 }
-        }
-    }
-    let vol_ptr = VolPtr(&mut vol as *mut Vol3);
+    let out = ParWriter::new(&mut vol.data);
     parallel_chunks(vg.ny, threads, |j0, j1| {
-        let vol = vol_ptr.get();
+        // each worker owns voxel rows j0..j1
         for j in j0..j1 {
             let y = vg.y(j);
             for i in 0..vg.nx {
@@ -196,7 +177,7 @@ pub fn fbp_fan(
                     }
                     acc += q * (g.sod * g.sod) / (t * t);
                 }
-                *vol.at_mut(i, j, 0) = (acc * dphi / dup * g.sdd / g.sod) as f32;
+                out.set(j * vg.nx + i, (acc * dphi / dup * g.sdd / g.sod) as f32);
             }
         }
     });
@@ -235,18 +216,9 @@ pub fn fdk(
     let mut vol = Vol3::zeros(vg.nx, vg.ny, vg.nz);
     let nviews = g.angles.len();
     let ncols = g.ncols;
-    struct VolPtr(*mut Vol3);
-    unsafe impl Send for VolPtr {}
-    unsafe impl Sync for VolPtr {}
-    impl VolPtr {
-        #[allow(clippy::mut_from_ref)]
-        fn get(&self) -> &mut Vol3 {
-            unsafe { &mut *self.0 }
-        }
-    }
-    let vol_ptr = VolPtr(&mut vol as *mut Vol3);
+    let out = ParWriter::new(&mut vol.data);
     parallel_chunks(vg.nz, threads, |k0, k1| {
-        let vol = vol_ptr.get();
+        // each worker owns whole z-slices k0..k1
         for k in k0..k1 {
             let z = vg.z(k);
             for j in 0..vg.ny {
@@ -285,7 +257,7 @@ pub fn fdk(
                         }
                         acc += q * (g.sod * g.sod) / (t * t);
                     }
-                    *vol.at_mut(i, j, k) = (acc * dphi / dup * g.sdd / g.sod) as f32;
+                    out.set((k * vg.ny + j) * vg.nx + i, (acc * dphi / dup * g.sdd / g.sod) as f32);
                 }
             }
         }

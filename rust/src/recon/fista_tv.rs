@@ -5,6 +5,11 @@
 //! * Lipschitz constant of `∇½‖Ax−y‖² = Aᵀ(Ax−y)` estimated by power
 //!   iteration on `AᵀA` (only possible because the pair is matched!).
 //! * TV prox solved with FGP (Beck & Teboulle 2009) on each z-slice.
+//!
+//! The power iteration plus the main loop apply `A`/`Aᵀ` hundreds of
+//! times; all of them run on the persistent worker pool with slab-owned
+//! backprojection, so neither spawns threads nor allocates per-thread
+//! volume copies.
 
 use crate::array::{Sino, Vol3};
 use crate::projector::Projector;

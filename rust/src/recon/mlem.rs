@@ -9,7 +9,9 @@ use crate::array::Vol3;
 use crate::projector::Projector;
 
 /// Run `iterations` of MLEM. `y` must be non-negative. Starts from a
-/// uniform positive volume. Plans the projector once for the whole solve.
+/// uniform positive volume. Plans the projector once for the whole solve;
+/// every `A`/`Aᵀ` runs on the persistent worker pool with slab-owned
+/// backprojection (no spawn waves, no per-thread volume copies).
 pub fn mlem(p: &Projector, y: &Sino, iterations: usize) -> Vol3 {
     let plan = p.plan();
     let mut x = p.new_vol();

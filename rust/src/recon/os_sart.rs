@@ -24,7 +24,9 @@ impl Default for OsSartOpts {
 }
 
 /// Run OS-SART from `x0`. Plans the projector once for the whole solve;
-/// every subset sweep reuses the cached per-view geometry.
+/// every subset sweep reuses the cached per-view geometry. The many small
+/// masked applications per iteration are exactly the workload the
+/// persistent worker pool removes the spawn wave from.
 pub fn os_sart(p: &Projector, y: &Sino, x0: &Vol3, opts: &OsSartOpts) -> Vol3 {
     let plan = p.plan();
     let nviews = y.nviews;

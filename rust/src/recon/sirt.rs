@@ -41,7 +41,9 @@ pub struct SirtResult {
 
 /// Run SIRT from initial volume `x0` (pass zeros for a cold start).
 /// Plans the projector once; every `A`/`Aᵀ` application in the hot loop
-/// reuses the cached per-view geometry.
+/// reuses the cached per-view geometry, dispatches to the persistent
+/// worker pool (no per-iteration spawn wave) and backprojects slab-owned
+/// (no `threads × volume` scatter copies, no serial reduction).
 pub fn sirt(p: &Projector, y: &Sino, x0: &Vol3, opts: &SirtOpts) -> SirtResult {
     let plan = p.plan();
     let mut x = x0.clone();
