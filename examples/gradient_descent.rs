@@ -1,0 +1,71 @@
+//! Gradient descent on [`leap::ops::ProjectionLoss`] — the operator
+//! layer's "hello world": reconstruct Shepp-Logan from a fan-beam scan
+//! using nothing but the loss value and its exact matched-adjoint
+//! gradient, the way a training loop would consume the projector.
+//!
+//! ```bash
+//! cargo run --release --example gradient_descent
+//! ```
+//!
+//! This is deliberately the dumbest possible solver — a fixed `1.9/L`
+//! step with a non-negativity clamp (projected gradient descent) — to
+//! show that the *gradients* carry the reconstruction, not solver
+//! tricks. With enough iterations it lands within 5% of SIRT's RMSE on
+//! the same data (asserted below); SIRT's preconditioning only buys
+//! speed.
+
+use leap::geometry::{FanBeam, Geometry, VolumeGeometry};
+use leap::metrics;
+use leap::ops::{LinearOp, Objective, PlanOp, ProjectionLoss};
+use leap::phantom::shepp;
+use leap::projector::{Model, Projector};
+use leap::recon::{self, fista_tv::power_iter_lipschitz_op, SirtOpts};
+
+fn main() {
+    // 1. a fan-beam Shepp-Logan scan (48² volume, 48 views, 64 columns)
+    let vg = VolumeGeometry::slice2d(48, 48, 1.0);
+    let g = FanBeam::standard(48, 64, 1.0, 120.0, 240.0);
+    let p = Projector::new(Geometry::Fan(g), vg.clone(), Model::SF);
+    let truth = shepp::shepp_logan_2d(20.0, 0.02).rasterize(&vg, 2);
+    let y = p.forward(&truth);
+
+    // 2. the scan as a LinearOp + a least-squares loss with exact grads
+    let a = PlanOp::new(&p);
+    let loss = ProjectionLoss::new(&a, &y.data, Objective::LeastSquares);
+
+    // 3. plain projected gradient descent at a fixed step 1.9/L
+    //    (stable for any step < 2/L on a convex least-squares objective)
+    let lip = power_iter_lipschitz_op(&a, 20, 7).max(1e-12);
+    let step = (1.9 / lip) as f32;
+    let n = a.domain_shape().numel();
+    let mut x = vec![0.0f32; n];
+    let mut grad = vec![0.0f32; n];
+    let iters = 2000;
+    let t0 = std::time::Instant::now();
+    for it in 0..iters {
+        let l = loss.value_and_grad(&x, &mut grad);
+        for i in 0..n {
+            x[i] = (x[i] - step * grad[i]).max(0.0);
+        }
+        if it % 250 == 0 {
+            println!("iter {it:4}  ½‖Ax−y‖² = {l:.5e}");
+        }
+    }
+    let gd_time = t0.elapsed().as_secs_f64();
+
+    // 4. SIRT on the same data as the reference solver
+    let t0 = std::time::Instant::now();
+    let sirt = recon::sirt(&p, &y, &p.new_vol(), &SirtOpts { iterations: 50, ..Default::default() });
+    let sirt_time = t0.elapsed().as_secs_f64();
+
+    let rmse_gd = metrics::rmse(&x, &truth.data);
+    let rmse_sirt = metrics::rmse(&sirt.vol.data, &truth.data);
+    println!("GD×{iters} (step 1.9/L): {gd_time:6.3}s  RMSE {rmse_gd:.6}");
+    println!("SIRT×50               : {sirt_time:6.3}s  RMSE {rmse_sirt:.6}");
+    assert!(
+        rmse_gd <= 1.05 * rmse_sirt,
+        "plain GD should land within 5% of SIRT's RMSE: {rmse_gd} vs {rmse_sirt}"
+    );
+    println!("plain gradient descent reaches SIRT-level RMSE (within 5%) — the matched");
+    println!("adjoint, not the solver, carries the reconstruction.");
+}

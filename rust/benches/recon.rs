@@ -4,12 +4,17 @@
 //!
 //! Run: `cargo bench --bench recon`
 //!
-//! Every measurement is appended as a JSON line to `BENCH_PR2.json` at
-//! the repo root (the perf trajectory file) in addition to
-//! `target/bench_results.jsonl`. Set `LEAP_BENCH_SMOKE=1` to run one
-//! iteration of everything (the CI smoke step).
+//! Every measurement is appended as a JSON line to `BENCH_PR3.json` at
+//! the repo root (the perf trajectory file; earlier PRs' history lives
+//! in `BENCH_PR2.json`) in addition to `target/bench_results.jsonl`.
+//! Set `LEAP_BENCH_SMOKE=1` to run one iteration of everything (the CI
+//! smoke step — including the batched-coordinator case).
+
+use std::sync::Arc;
+use std::time::Duration;
 
 use leap::bench_harness::{append_results, append_results_to, smoke_mode, Bench};
+use leap::coordinator::{BatchPolicy, Coordinator, NativeExecutor, Request};
 use leap::geometry::{
     ConeBeam, DetectorShape, FanBeam, Geometry, ModularBeam, ParallelBeam, VolumeGeometry,
 };
@@ -21,7 +26,7 @@ use leap::{Sino, Vol3};
 
 /// Where the perf trajectory lives: the repo root, independent of the
 /// working directory cargo gives the bench binary.
-const TRAJECTORY: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_PR2.json");
+const TRAJECTORY: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_PR3.json");
 
 /// The pre-`ProjectionPlan` SIRT loop: every `A`/`Aᵀ` application goes
 /// through the direct path, re-deriving per-view geometry (trig, SF
@@ -342,6 +347,73 @@ fn main() {
     all.push(m_pr1);
     all.push(m_direct);
     all.push(m_plan);
+
+    // ── batched serving: one apply_batch_into per closed batch ──
+    // The same B in-flight native_fp requests through two coordinators:
+    //   sequential : max_batch = 1 — every request is its own backend
+    //                call (its own pool dispatch)
+    //   batched    : max_batch = B — the backlog closes into
+    //                multi-request batches, each executed as ONE stacked
+    //                batched operator application (one plan fetch, one
+    //                pool dispatch; workers split across the items)
+    // Outputs are bit-identical either way (asserted), so the row
+    // isolates pure serving throughput.
+    let vgs = VolumeGeometry::slice2d(96, 96, 1.0);
+    let gs = ParallelBeam::standard_2d(120, 128, 1.0);
+    let ps = Projector::new(Geometry::Parallel(gs.clone()), vgs.clone(), Model::SF);
+    let reference = {
+        let plan = ps.plan();
+        let mut vol = ps.new_vol();
+        vol.fill(0.01);
+        plan.forward(&vol).data
+    };
+    let nreq = 8usize;
+    let vol_in = vec![0.01f32; vgs.num_voxels()];
+    let serve = |max_batch: usize| {
+        let coord = Coordinator::new(
+            Arc::new(NativeExecutor::new(ps.clone())),
+            BatchPolicy { max_batch, max_wait: Duration::from_millis(2) },
+            1 << 30,
+            1,
+        );
+        // warm the lazy plan fetch out of the timed region
+        let warm = coord.call(Request::new(0, "native_fp", vec![vol_in.clone()]));
+        assert_eq!(warm.outputs[0], reference, "served output must match the plan path");
+        coord
+    };
+    let coord_seq = serve(1);
+    let coord_bat = serve(nreq);
+    let run_requests = |coord: &Coordinator| {
+        let rxs: Vec<_> = (0..nreq as u64)
+            .map(|i| coord.submit(Request::new(i, "native_fp", vec![vol_in.clone()])))
+            .collect();
+        for rx in rxs {
+            let r = rx.recv().expect("response");
+            assert!(r.ok(), "{:?}", r.error);
+            assert_eq!(r.outputs[0], reference, "batched must stay bit-identical");
+        }
+    };
+    let mut m_seq = bench.run(&format!("coordinator {nreq}×native_fp sequential (max_batch=1)"), || {
+        run_requests(&coord_seq)
+    });
+    m_seq.notes.push(("req_per_s".into(), nreq as f64 / m_seq.mean_s));
+    m_seq.print();
+    let mut m_bat = bench.run(&format!("coordinator {nreq}×native_fp batched (max_batch={nreq})"), || {
+        run_requests(&coord_bat)
+    });
+    let speedup_batched = m_seq.mean_s / m_bat.mean_s;
+    m_bat.notes.push(("req_per_s".into(), nreq as f64 / m_bat.mean_s));
+    m_bat.notes.push(("speedup_batched_vs_sequential".into(), speedup_batched));
+    let snap = coord_bat.telemetry().snapshot();
+    m_bat.notes.push(("mean_batch".into(), snap["native_fp"].mean_batch()));
+    m_bat.print();
+    println!(
+        "    → batched coordinator vs sequential: {speedup_batched:.2}× on {nreq} in-flight \
+         native_fp (mean batch {:.2})",
+        snap["native_fp"].mean_batch()
+    );
+    all.push(m_seq);
+    all.push(m_bat);
 
     append_results(&all);
     append_results_to(TRAJECTORY, &all);

@@ -26,11 +26,25 @@ impl Default for BatchPolicy {
     }
 }
 
-/// A closed batch: requests sharing one op.
+/// A closed batch: requests sharing one op. A multi-request batch is the
+/// unit the coordinator hands to [`super::Executor::execute_batch`] —
+/// on the native backend that is one stacked
+/// [`crate::ops::LinearOp::apply_batch_into`] application.
 #[derive(Debug)]
 pub struct Batch {
     pub op: String,
     pub requests: Vec<Request>,
+}
+
+impl Batch {
+    /// Number of requests in the batch.
+    pub fn len(&self) -> usize {
+        self.requests.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.requests.is_empty()
+    }
 }
 
 /// Non-thread-safe core (wrapped in a mutex by the coordinator).

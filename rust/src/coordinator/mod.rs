@@ -37,6 +37,16 @@ pub use telemetry::Telemetry;
 pub trait Executor: Send + Sync {
     /// Execute `op` on the given inputs, returning the outputs.
     fn execute(&self, op: &str, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>>;
+    /// Execute a closed batch of same-op requests' input sets in one
+    /// backend call, returning exactly one result per item (order
+    /// preserved; a bad item fails alone, never the batch). The default
+    /// executes the items sequentially; backends with a batched fast
+    /// path — [`NativeExecutor`] runs projector batches as **one**
+    /// [`crate::ops::LinearOp::apply_batch_into`] (one plan fetch, one
+    /// pool dispatch over the stacked inputs) — override it.
+    fn execute_batch(&self, op: &str, items: &[Vec<&[f32]>]) -> Vec<Result<Vec<Vec<f32>>>> {
+        items.iter().map(|inputs| self.execute(op, inputs)).collect()
+    }
     /// Estimated output bytes for admission control.
     fn output_bytes_hint(&self, op: &str, input_bytes: usize) -> usize {
         let _ = op;
@@ -161,6 +171,65 @@ impl Executor for NativeExecutor {
         }
     }
 
+    /// Projector batches execute as **one** batched operator
+    /// application: the stacked inputs share one plan fetch and one
+    /// worker-pool dispatch ([`crate::ops::LinearOp::apply_batch_into`]
+    /// on the cached [`crate::projector::ProjectionPlan`]), instead of
+    /// N sequential applies each paying its own dispatch. Outputs are
+    /// bit-identical to the sequential path (thread-split invariance),
+    /// so batching is purely a throughput decision. Wrong-sized items
+    /// fail individually; the rest still run batched.
+    fn execute_batch(&self, op: &str, items: &[Vec<&[f32]>]) -> Vec<Result<Vec<Vec<f32>>>> {
+        use crate::ops::LinearOp;
+        let forward = match op {
+            "native_fp" => true,
+            "native_bp" => false,
+            // no batched fast path (FBP, unknown ops): per-item execute
+            _ => return items.iter().map(|inputs| self.execute(op, inputs)).collect(),
+        };
+        if items.len() < 2 {
+            return items.iter().map(|inputs| self.execute(op, inputs)).collect();
+        }
+        let plan = self.plan(); // one plan fetch for the whole batch
+        let dn = plan.vg().num_voxels();
+        let g = plan.geom();
+        let rn = g.nviews() * g.nrows() * g.ncols();
+        let (in_len, out_len) = if forward { (dn, rn) } else { (rn, dn) };
+        let mut results: Vec<Option<Result<Vec<Vec<f32>>>>> = Vec::with_capacity(items.len());
+        let mut stacked: Vec<f32> = Vec::new();
+        let mut valid: Vec<usize> = Vec::new();
+        for (i, inputs) in items.iter().enumerate() {
+            if inputs.is_empty() {
+                results.push(Some(Err(anyhow::anyhow!("{op}: missing input"))));
+            } else if inputs[0].len() != in_len {
+                let what = if forward { "volume" } else { "sinogram" };
+                results.push(Some(Err(anyhow::anyhow!("{what} size mismatch"))));
+            } else {
+                results.push(None);
+                stacked.extend_from_slice(inputs[0]);
+                valid.push(i);
+            }
+        }
+        if !valid.is_empty() {
+            let mut out = vec![0.0f32; valid.len() * out_len];
+            if forward {
+                plan.apply_batch_into(valid.len(), &stacked, &mut out);
+            } else {
+                plan.adjoint_batch_into(valid.len(), &stacked, &mut out);
+            }
+            drop(stacked); // staging copy released before outputs are carved up
+            // carve per-item buffers off the stacked output back to front:
+            // each split_off moves one item out and truncates the stack,
+            // so peak transient memory is one stacked output + a single
+            // item — not a second full copy of every output at once
+            for (slot, &i) in valid.iter().enumerate().rev() {
+                let buf = out.split_off(slot * out_len);
+                results[i] = Some(Ok(vec![buf]));
+            }
+        }
+        results.into_iter().map(|r| r.expect("every batch item resolved")).collect()
+    }
+
     fn ops(&self) -> Vec<String> {
         vec!["native_fp".into(), "native_bp".into(), "native_fbp".into()]
     }
@@ -187,6 +256,19 @@ impl Executor for Router {
         match self.route(op) {
             Some(b) => b.execute(op, inputs),
             None => anyhow::bail!("no backend provides op {op} (have: {:?})", self.ops()),
+        }
+    }
+
+    /// Routed batches stay batched: one route lookup, then the chosen
+    /// backend's own `execute_batch` (so the native batched fast path is
+    /// reachable behind a router, the standard deployment).
+    fn execute_batch(&self, op: &str, items: &[Vec<&[f32]>]) -> Vec<Result<Vec<Vec<f32>>>> {
+        match self.route(op) {
+            Some(b) => b.execute_batch(op, items),
+            None => items
+                .iter()
+                .map(|_| Err(anyhow::anyhow!("no backend provides op {op} (have: {:?})", self.ops())))
+                .collect(),
         }
     }
 
@@ -331,49 +413,103 @@ fn worker_loop(inner: Arc<Inner>) {
             }
             continue;
         };
-        inner.telemetry.record_batch(&batch.op, batch.requests.len());
-        for req in batch.requests {
-            let job = inner.pending.lock().unwrap().remove(&req.id);
-            let Some(job) = job else { continue };
-            debug_assert_eq!(job.ticket, req.id);
-            let in_bytes = req.input_bytes();
-            let out_bytes = inner.exec.output_bytes_hint(&req.op, in_bytes);
-            let bytes = budget::job_bytes(in_bytes, out_bytes);
-            let admitted = inner.budget.acquire(bytes);
-            let exec_start = Instant::now();
-            let result = if admitted {
-                let input_refs: Vec<&[f32]> = req.inputs.iter().map(|v| v.as_slice()).collect();
-                inner.exec.execute(&req.op, &input_refs)
-            } else {
-                Err(anyhow::anyhow!("job exceeds memory budget ({bytes} bytes)"))
-            };
-            let exec_us = exec_start.elapsed().as_micros() as u64;
-            if admitted {
-                inner.budget.release(bytes);
+        inner.telemetry.record_batch(&batch.op, batch.len());
+        let op = batch.op.clone();
+        // pair each live request with its job and budget reservation size
+        let mut queue: std::collections::VecDeque<(Job, Request, usize)> = batch
+            .requests
+            .into_iter()
+            .filter_map(|req| {
+                let job = inner.pending.lock().unwrap().remove(&req.id)?;
+                debug_assert_eq!(job.ticket, req.id);
+                let in_bytes = req.input_bytes();
+                let out_bytes = inner.exec.output_bytes_hint(&req.op, in_bytes);
+                Some((job, req, budget::job_bytes(in_bytes, out_bytes)))
+            })
+            .collect();
+        // Execute the closed batch in admission groups: the head of each
+        // group reserves memory with the blocking acquire (preserving
+        // backpressure against other workers), followers join with
+        // try_acquire only — a follower that doesn't fit starts the next
+        // group instead of blocking on memory this same thread holds
+        // (which would self-deadlock). Each admitted group runs as ONE
+        // execute_batch call: one plan fetch and one pool dispatch over
+        // the stacked inputs on the native backend.
+        while let Some((job, req, bytes)) = queue.pop_front() {
+            if !inner.budget.acquire(bytes) {
+                // larger than the whole budget: can never run
+                respond(
+                    &inner,
+                    job,
+                    &req,
+                    Err(anyhow::anyhow!("job exceeds memory budget ({bytes} bytes)")),
+                    0,
+                    1,
+                );
+                continue;
             }
-            let latency_us = req.submitted.elapsed().as_micros() as u64;
-            let response = match result {
-                Ok(outputs) => Response {
-                    id: job.client_id,
-                    op: req.op.clone(),
-                    outputs,
-                    error: None,
-                    latency_us,
-                    exec_us,
-                },
-                Err(e) => Response {
-                    id: job.client_id,
-                    op: req.op.clone(),
-                    outputs: vec![],
-                    error: Some(format!("{e:#}")),
-                    latency_us,
-                    exec_us,
-                },
-            };
-            inner.telemetry.record(&req.op, latency_us, exec_us, response.ok());
-            let _ = job.tx.send(response);
+            let mut group = vec![(job, req, bytes)];
+            while let Some((_, _, next_bytes)) = queue.front() {
+                if inner.budget.try_acquire(*next_bytes) {
+                    group.push(queue.pop_front().unwrap());
+                } else {
+                    break;
+                }
+            }
+            let items: Vec<Vec<&[f32]>> = group
+                .iter()
+                .map(|(_, req, _)| req.inputs.iter().map(|v| v.as_slice()).collect())
+                .collect();
+            let exec_start = Instant::now();
+            let results = inner.exec.execute_batch(&op, &items);
+            let exec_us = exec_start.elapsed().as_micros() as u64;
+            drop(items); // releases the borrows into `group` before the move below
+            debug_assert_eq!(results.len(), group.len(), "one result per batch item");
+            let batch_size = group.len();
+            let mut results = results.into_iter();
+            for (job, req, bytes) in group {
+                inner.budget.release(bytes);
+                let result = results
+                    .next()
+                    .unwrap_or_else(|| Err(anyhow::anyhow!("backend returned short batch")));
+                respond(&inner, job, &req, result, exec_us, batch_size);
+            }
         }
     }
+}
+
+/// Build, record and deliver one request's response.
+fn respond(
+    inner: &Inner,
+    job: Job,
+    req: &Request,
+    result: Result<Vec<Vec<f32>>>,
+    exec_us: u64,
+    batch_size: usize,
+) {
+    let latency_us = req.submitted.elapsed().as_micros() as u64;
+    let response = match result {
+        Ok(outputs) => Response {
+            id: job.client_id,
+            op: req.op.clone(),
+            outputs,
+            error: None,
+            latency_us,
+            exec_us,
+            batch_size,
+        },
+        Err(e) => Response {
+            id: job.client_id,
+            op: req.op.clone(),
+            outputs: vec![],
+            error: Some(format!("{e:#}")),
+            latency_us,
+            exec_us,
+            batch_size,
+        },
+    };
+    inner.telemetry.record(&req.op, latency_us, exec_us, response.ok());
+    let _ = job.tx.send(response);
 }
 
 #[cfg(test)]
@@ -488,6 +624,92 @@ mod tests {
         }
         let snap = c.telemetry().snapshot();
         assert!(snap["echo"].mean_batch() > 1.0, "batches formed: {:?}", snap["echo"]);
+    }
+
+    #[test]
+    fn native_execute_batch_is_bit_identical_to_sequential() {
+        use crate::geometry::{Geometry, ParallelBeam, VolumeGeometry};
+        use crate::projector::{Model, Projector};
+        let vg = VolumeGeometry::slice2d(12, 12, 1.0);
+        let g = Geometry::Parallel(ParallelBeam::standard_2d(8, 18, 1.0));
+        let p = Projector::new(g, vg.clone(), Model::SF).with_threads(2);
+        let exec = NativeExecutor::new(p);
+        let mut rng = crate::util::rng::Rng::new(31);
+        let vols: Vec<Vec<f32>> = (0..3)
+            .map(|_| {
+                let mut v = vec![0.0f32; vg.num_voxels()];
+                rng.fill_uniform(&mut v, 0.0, 1.0);
+                v
+            })
+            .collect();
+        let mut items: Vec<Vec<&[f32]>> = vols.iter().map(|v| vec![v.as_slice()]).collect();
+        // one bad item must fail alone without sinking the batch
+        let bad = vec![1.0f32; 3];
+        items.insert(1, vec![bad.as_slice()]);
+        let results = exec.execute_batch("native_fp", &items);
+        assert_eq!(results.len(), 4);
+        assert!(results[1].is_err(), "wrong-sized item must fail alone");
+        for (slot, i) in [(0usize, 0usize), (2, 1), (3, 2)] {
+            let batched = results[slot].as_ref().unwrap();
+            let single = exec.execute("native_fp", &[&vols[i]]).unwrap();
+            assert_eq!(batched[0], single[0], "item {i}");
+        }
+        // and the matched adjoint batches identically
+        let sino_len = 8 * 18;
+        let sinos: Vec<Vec<f32>> = (0..2)
+            .map(|_| {
+                let mut s = vec![0.0f32; sino_len];
+                rng.fill_uniform(&mut s, 0.0, 1.0);
+                s
+            })
+            .collect();
+        let bp_items: Vec<Vec<&[f32]>> = sinos.iter().map(|s| vec![s.as_slice()]).collect();
+        let bp = exec.execute_batch("native_bp", &bp_items);
+        for (i, r) in bp.iter().enumerate() {
+            let single = exec.execute("native_bp", &[&sinos[i]]).unwrap();
+            assert_eq!(r.as_ref().unwrap()[0], single[0], "bp item {i}");
+        }
+    }
+
+    #[test]
+    fn coordinator_batches_native_requests() {
+        use crate::geometry::{Geometry, ParallelBeam, VolumeGeometry};
+        use crate::projector::{Model, Projector};
+        let vg = VolumeGeometry::slice2d(24, 24, 1.0);
+        let g = Geometry::Parallel(ParallelBeam::standard_2d(16, 32, 1.0));
+        let p = Projector::new(g, vg.clone(), Model::SF).with_threads(2);
+        let reference = {
+            let plan = p.plan();
+            let mut vol = p.new_vol();
+            vol.fill(0.01);
+            plan.forward(&vol).data
+        };
+        let exec = Arc::new(NativeExecutor::new(p));
+        // one worker + queued backlog: after the first pop the remaining
+        // requests close into multi-request batches
+        let c = Coordinator::new(
+            exec,
+            BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(20) },
+            1 << 28,
+            1,
+        );
+        let vol = vec![0.01f32; vg.num_voxels()];
+        let rxs: Vec<_> =
+            (0..8).map(|i| c.submit(Request::new(i, "native_fp", vec![vol.clone()]))).collect();
+        let mut max_batch_seen = 0usize;
+        for rx in rxs {
+            let r = rx.recv().unwrap();
+            assert!(r.ok(), "{:?}", r.error);
+            assert_eq!(r.outputs[0], reference, "batched output must match the plan path");
+            max_batch_seen = max_batch_seen.max(r.batch_size);
+        }
+        let snap = c.telemetry().snapshot();
+        assert!(
+            snap["native_fp"].mean_batch() > 1.0,
+            "batches formed: {:?}",
+            snap["native_fp"]
+        );
+        assert!(max_batch_seen > 1, "at least one multi-request batched execution");
     }
 
     #[test]

@@ -40,8 +40,13 @@ pub struct Response {
     pub error: Option<String>,
     /// Total time from submission to completion.
     pub latency_us: u64,
-    /// Time spent executing (excludes queueing).
+    /// Time spent executing (excludes queueing). For batched execution
+    /// this is the whole group's wall time — the requests ran together.
     pub exec_us: u64,
+    /// How many requests executed together in the same backend call
+    /// (1 = alone). Observability for the dynamic batcher: a batched
+    /// coordinator under load reports values > 1.
+    pub batch_size: usize,
 }
 
 impl Response {
@@ -72,6 +77,7 @@ pub fn response_to_json(r: &Response) -> Json {
         ("op", Json::Str(r.op.clone())),
         ("latency_us", Json::Num(r.latency_us as f64)),
         ("exec_us", Json::Num(r.exec_us as f64)),
+        ("batch_size", Json::Num(r.batch_size as f64)),
     ];
     if let Some(e) = &r.error {
         fields.push(("error", Json::Str(e.clone())));
@@ -118,11 +124,12 @@ mod tests {
 
     #[test]
     fn response_serializes_error_and_ok() {
-        let ok = Response { id: 1, op: "fbp".into(), outputs: vec![vec![1.5]], error: None, latency_us: 10, exec_us: 5 };
+        let ok = Response { id: 1, op: "fbp".into(), outputs: vec![vec![1.5]], error: None, latency_us: 10, exec_us: 5, batch_size: 1 };
         let s = response_to_json(&ok).to_string();
         assert!(s.contains("\"outputs\""));
+        assert!(s.contains("\"batch_size\""));
         assert!(!s.contains("\"error\""));
-        let err = Response { id: 2, op: "fbp".into(), outputs: vec![], error: Some("bad".into()), latency_us: 1, exec_us: 0 };
+        let err = Response { id: 2, op: "fbp".into(), outputs: vec![], error: Some("bad".into()), latency_us: 1, exec_us: 0, batch_size: 1 };
         let s = response_to_json(&err).to_string();
         assert!(s.contains("\"error\""));
         assert!(!s.contains("\"outputs\""));

@@ -2,9 +2,14 @@
 //!
 //! Protocol (one JSON document per line):
 //!   → {"id": 1, "op": "fp_sf", "inputs": [[...f32...], ...]}
-//!   ← {"id": 1, "op": "fp_sf", "outputs": [[...]], "latency_us": ..}
+//!   ← {"id": 1, "op": "fp_sf", "outputs": [[...]], "latency_us": ..,
+//!      "exec_us": .., "batch_size": ..}
 //!   → {"id": 2, "op": "__stats"}          — telemetry snapshot
 //!   → {"id": 3, "op": "__ops"}            — available operations
+//!
+//! `batch_size` reports how many requests the dynamic batcher executed
+//! together with this one (1 = alone): on the native backend a
+//! multi-request batch ran as one stacked batched projection.
 //!
 //! Built on std::net + threads (the vendored crate set has no tokio; the
 //! architecture is identical: accept loop → per-connection reader →
@@ -190,6 +195,8 @@ mod tests {
         let first = outs[0].as_arr().unwrap();
         assert_eq!(first[0].as_f64(), Some(2.0));
         assert_eq!(first[1].as_f64(), Some(6.0));
+        // the batching observability field rides on every reply
+        assert!(reply.get_f64("batch_size").unwrap_or(0.0) >= 1.0);
     }
 
     #[test]

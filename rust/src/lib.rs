@@ -19,6 +19,13 @@
 //!   and the serving layer caches plans per scan config, while the direct
 //!   path plans per view on the fly through the *same* execute code — the
 //!   two paths are bit-identical.
+//! * [`ops`] — the differentiable operator layer: [`ops::LinearOp`]
+//!   exposes `A`/`Aᵀ` as composable, batched, gradient-ready objects
+//!   (scale, compose, mask views, form `AᵀA`), implemented by the
+//!   planned projector, the stored system matrix and the FBP ramp
+//!   filter; [`ops::ProjectionLoss`] returns data-fit losses with exact
+//!   gradients through the matched adjoint. Every iterative solver is
+//!   generic over `&dyn LinearOp`.
 //! * [`sysmatrix`] — the precomputed sparse system-matrix baseline the paper
 //!   argues against (Lahiri et al. 2023 style), used by the Table-1 bench.
 //! * [`recon`] — analytic (FBP/FDK) and iterative (SIRT, OS-SART, CGLS,
@@ -75,6 +82,7 @@ pub mod util;
 pub mod geometry;
 pub mod array;
 pub mod projector;
+pub mod ops;
 pub mod sysmatrix;
 pub mod recon;
 pub mod phantom;

@@ -37,10 +37,14 @@
 //! former `threads × volume` partial-volume scatter copies (and their
 //! serial reduction) no longer exist on any path; the only transient
 //! per-worker scratch is one cone view's `O(nx·ny)` footprint on the
-//! unplanned path. Only when a plan is held does the cone-beam plan's
-//! `O(nviews·nx·ny)` transaxial footprint cache persist, capped at
-//! `LEAP_PLAN_MAX_BYTES` with a transparent on-the-fly fallback. Compare
-//! [`crate::sysmatrix`] for the stored-matrix baseline.
+//! unplanned path. Only held plans carry extra state: the cone-beam
+//! plan's `O(nviews·nx·ny)` transaxial footprint cache (capped at
+//! `LEAP_PLAN_MAX_BYTES` with a transparent on-the-fly fallback), and
+//! ray-driven plans' 4 B/ray slab-span table (one sinogram-sized copy)
+//! that lets slab-owned backprojection reject non-touching rays with two
+//! integer compares. Compare [`crate::sysmatrix`] for the stored-matrix
+//! baseline, and [`crate::ops`] for the operator/gradient layer built on
+//! these pairs.
 //!
 //! **Execution.** All parallel loops run on the process-wide persistent
 //! worker pool ([`crate::util::pool`], sized by `LEAP_THREADS`): operator

@@ -51,7 +51,7 @@
 //! paper-scale scans never trade the one-copy memory claim for speed.
 
 use crate::array::{Sino, Vol3};
-use crate::geometry::{ConeBeam, Geometry, Ray, VolumeGeometry};
+use crate::geometry::{Geometry, Ray, VolumeGeometry};
 use crate::util::pool::{self, chunk_ranges, parallel_items, run_region, ParWriter};
 
 use super::{joseph, sf, siddon, Model, Projector};
@@ -91,24 +91,6 @@ fn plan_max_bytes() -> usize {
         .unwrap_or(DEFAULT_PLAN_MAX_BYTES)
 }
 
-/// Pre-build estimate of a cone plan's cache: per voxel column one
-/// `ConeVoxelFoot` (~40 B, rounded up) plus one column-weight entry
-/// (16 B) per detector column the magnified in-plane voxel extent spans —
-/// geometry-aware so fine-pitch detectors (wide footprints) don't slip
-/// past the memory cap with a constant-bins guess.
-fn cone_plan_estimate_bytes(g: &ConeBeam, vg: &VolumeGeometry) -> usize {
-    let mag = if g.sod > 0.0 { g.sdd / g.sod } else { 1.0 };
-    let cols_per_foot = if g.du > 0.0 {
-        ((((vg.vx + vg.vy) * mag / g.du).ceil() + 1.0).max(2.0) as usize).min(g.ncols.max(1))
-    } else {
-        g.ncols.max(1)
-    };
-    g.angles
-        .len()
-        .saturating_mul(vg.nx.saturating_mul(vg.ny))
-        .saturating_mul(48 + cols_per_foot * 16)
-}
-
 /// Shared shape validation for the direct and planned entry points — one
 /// definition so the two paths can never diverge.
 pub(crate) fn check_shapes(geom: &Geometry, vg: &VolumeGeometry, vol: &Vol3, sino: &Sino) {
@@ -129,10 +111,24 @@ pub(crate) struct RayViews {
     /// under the Joseph model (the one case where rays of a view share a
     /// direction).
     axis: Vec<usize>,
+    /// Per-ray slab-axis voxel span `[(view, row, col)] → [s_lo, s_hi]`
+    /// (inclusive, one voxel of padding folded in): the quantized form
+    /// of the ray's coordinate extent along the backprojection slab
+    /// axis over the voxel-padded volume clip ([`ray_slab_interval`]),
+    /// computed once at plan time. Slab rejection then costs two
+    /// integer compares — no ray construction, no 3-axis clip — per
+    /// `(ray, slab)` pair, which is what lets the y-slab replay of 2-D
+    /// fan/modular backprojection scale with threads instead of paying
+    /// a full per-ray clip pass on every slab. 4 B per ray — one extra
+    /// sinogram-sized table per held ray plan. `(u16::MAX, 0)` marks
+    /// rays that miss the padded box (rejects against every slab);
+    /// empty when the slab axis has too many voxels for `u16`
+    /// (execute falls back to the on-the-fly clip).
+    slab_span: Vec<(u16, u16)>,
 }
 
 impl RayViews {
-    fn build(geom: &Geometry, model: Model) -> RayViews {
+    fn build(geom: &Geometry, model: Model, vg: &VolumeGeometry, threads: usize) -> RayViews {
         let trig: Vec<(f64, f64)> = match geom {
             Geometry::Parallel(g) => g.angles.iter().map(|a| a.sin_cos()).collect(),
             Geometry::Fan(g) => g.angles.iter().map(|a| a.sin_cos()).collect(),
@@ -146,8 +142,61 @@ impl RayViews {
                 .collect(),
             _ => Vec::new(),
         };
-        RayViews { trig, axis }
+        // slab axis mirrors ray_back_exec: z-slabs, y-slabs for nz == 1.
+        // Rays come from ray_for with the cached trig — bit-identical to
+        // the rays the execute step walks.
+        let slab_ax = if vg.nz > 1 { 2usize } else { 1 };
+        let n_ax = if slab_ax == 2 { vg.nz } else { vg.ny };
+        if n_ax >= u16::MAX as usize {
+            return RayViews { trig, axis, slab_span: Vec::new() };
+        }
+        let (lo, hi) = vg.bounds();
+        let pitch = [vg.vx, vg.vy, vg.vz];
+        let nrows = geom.nrows();
+        let ncols = geom.ncols();
+        let per_view = build_views(geom.nviews(), threads, |view| {
+            let vt = if trig.is_empty() { None } else { Some(trig[view]) };
+            let mut spans = Vec::with_capacity(nrows * ncols);
+            for row in 0..nrows {
+                for col in 0..ncols {
+                    let ray = ray_for(geom, vt, view, row, col);
+                    let iv = ray_slab_interval(&ray, &lo, &hi, &pitch, slab_ax);
+                    spans.push(span_of_interval(iv, lo[slab_ax], pitch[slab_ax], n_ax));
+                }
+            }
+            spans
+        });
+        RayViews { trig, axis, slab_span: per_view.concat() }
     }
+}
+
+/// A span that rejects against every slab (ray misses the padded box).
+const MISS_SPAN: (u16, u16) = (u16::MAX, 0);
+
+/// Quantize a ray's slab-axis interval to an inclusive voxel-index span
+/// `[s_lo, s_hi]` with the one-voxel padding of the slab test folded in.
+/// A chunk of voxel indices `[c0, c1)` can receive deposits from the ray
+/// only if `s_hi >= c0 && s_lo <= c1` — two integer compares replacing
+/// the float interval-vs-padded-extent test. Quantization only ever
+/// widens (floor/ceil plus clamping), so the span test accepts a
+/// superset of the rays [`ray_touches_slab`] accepts; the extra rays are
+/// provably non-contributing inside the chunk, so walking them deposits
+/// nothing and outputs are unchanged.
+fn span_of_interval(iv: (f64, f64), ax_origin: f64, pitch: f64, n_ax: usize) -> (u16, u16) {
+    let (w_lo, w_hi) = iv;
+    if w_lo > w_hi {
+        return MISS_SPAN; // the (∞, −∞) miss marker
+    }
+    // fractional voxel coordinates, padded one voxel outward — matches
+    // the ±pitch padding ray_touches_slab applies to the slab extent
+    let s_lo_f = ((w_lo - ax_origin) / pitch - 1.0).floor();
+    let s_hi_f = ((w_hi - ax_origin) / pitch + 1.0).ceil();
+    if s_hi_f < 0.0 || s_lo_f > n_ax as f64 {
+        return MISS_SPAN; // strictly outside even the padded test
+    }
+    let s_lo = s_lo_f.max(0.0) as usize;
+    let s_hi = s_hi_f.max(0.0).min(n_ax as f64) as usize;
+    (s_lo as u16, s_hi as u16)
 }
 
 /// Build `f(view)` for every view, in view order, using the worker pool.
@@ -189,7 +238,7 @@ impl ProjectionPlan {
                 PlanKind::SfFan((0..g.angles.len()).map(|v| sf::plan_fan_view(g, v)).collect())
             }
             (Model::SF, Geometry::Cone(g)) => {
-                if cone_plan_estimate_bytes(g, &p.vg) > cap_bytes {
+                if sf::cone_plan_estimate_bytes(g, &p.vg) > cap_bytes {
                     PlanKind::SfConeUncached
                 } else {
                     PlanKind::SfCone(build_views(g.angles.len(), threads, |v| {
@@ -199,7 +248,7 @@ impl ProjectionPlan {
             }
             (model, geom) => PlanKind::Ray {
                 use_siddon: model == Model::Siddon,
-                views: RayViews::build(geom, model),
+                views: RayViews::build(geom, model, &p.vg, threads),
             },
         };
         ProjectionPlan { geom: p.geom.clone(), vg: p.vg.clone(), model: p.model, threads, kind }
@@ -229,23 +278,35 @@ impl ProjectionPlan {
         self.model
     }
 
+    /// Thread count the plan's execution schedule was built for (part of
+    /// the plan identity; see [`Self::matches`]).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
     /// Pre-build estimate (bytes) of what [`Self::new`] would cache for
     /// `p` — lets callers like the coordinator's
     /// [`crate::coordinator::PlanCache`] decide *before* planning whether
-    /// the result is worth building under a memory budget.
+    /// the result is worth building under a memory budget. The SF
+    /// estimates are derived from the real plan layouts via `size_of` in
+    /// [`sf::parallel_plan_estimate_bytes`] /
+    /// [`sf::cone_plan_estimate_bytes`] — one definition shared with the
+    /// byte-budget tests, so the estimate and the actual
+    /// [`Self::approx_heap_bytes`] cannot silently drift apart.
     pub fn estimate_heap_bytes(p: &Projector) -> usize {
         match (p.model, &p.geom) {
-            (Model::SF, Geometry::Cone(g)) => cone_plan_estimate_bytes(g, &p.vg),
-            // per view: one slim plan; the per-slice row weights are
-            // view-invariant and stored once per plan (~56 B per slice:
-            // Vec header + a couple of (row, weight) overlap entries)
-            (Model::SF, Geometry::Parallel(g)) => {
-                g.angles.len() * std::mem::size_of::<sf::ParallelViewPlan>()
-                    + std::mem::size_of::<sf::ParallelRowWeights>()
-                    + p.vg.nz * 56
-            }
+            (Model::SF, Geometry::Cone(g)) => sf::cone_plan_estimate_bytes(g, &p.vg),
+            (Model::SF, Geometry::Parallel(g)) => sf::parallel_plan_estimate_bytes(&p.vg, g),
             (Model::SF, Geometry::Fan(g)) => g.angles.len() * std::mem::size_of::<sf::FanViewPlan>(),
-            _ => p.geom.nviews() * 24,
+            // ray plans: per-view trig (+ marching axis for parallel
+            // Joseph) plus the 4 B/ray slab-span table
+            _ => {
+                p.geom.nviews() * 24
+                    + p.geom.nviews()
+                        * p.geom.nrows()
+                        * p.geom.ncols()
+                        * std::mem::size_of::<(u16, u16)>()
+            }
         }
     }
 
@@ -257,6 +318,7 @@ impl ProjectionPlan {
             PlanKind::Ray { views, .. } => {
                 views.trig.len() * std::mem::size_of::<(f64, f64)>()
                     + views.axis.len() * std::mem::size_of::<usize>()
+                    + views.slab_span.len() * std::mem::size_of::<(u16, u16)>()
             }
             PlanKind::SfParallel(set) => set.approx_bytes(),
             PlanKind::SfFan(vs) => vs.len() * std::mem::size_of::<sf::FanViewPlan>(),
@@ -278,66 +340,71 @@ impl ProjectionPlan {
     /// Forward projection `sino = A·vol` through the cached plan
     /// (overwrites `sino`).
     pub fn forward_into(&self, vol: &Vol3, sino: &mut Sino) {
+        self.forward_into_with_threads(vol, sino, self.threads)
+    }
+
+    /// [`Self::forward_into`] with an explicit worker count for this one
+    /// application. Outputs are bit-identical for every `threads` value
+    /// (the slab/unit ownership keeps accumulation order fixed); the
+    /// batched operator layer ([`crate::ops`]) uses this to split the
+    /// pool between the items of one stacked batch.
+    pub fn forward_into_with_threads(&self, vol: &Vol3, sino: &mut Sino, threads: usize) {
         check_shapes(&self.geom, &self.vg, vol, sino);
+        let threads = threads.max(1);
         match &self.kind {
             PlanKind::SfParallel(set) => {
                 let Geometry::Parallel(g) = &self.geom else { unreachable!() };
-                sf::forward_parallel_opt(&self.vg, g, Some(set), vol, sino, self.threads)
+                sf::forward_parallel_opt(&self.vg, g, Some(set), vol, sino, threads)
             }
             PlanKind::SfFan(vs) => {
                 let Geometry::Fan(g) = &self.geom else { unreachable!() };
-                sf::forward_fan_opt(&self.vg, g, Some(vs.as_slice()), vol, sino, self.threads)
+                sf::forward_fan_opt(&self.vg, g, Some(vs.as_slice()), vol, sino, threads)
             }
             PlanKind::SfCone(vs) => {
                 let Geometry::Cone(g) = &self.geom else { unreachable!() };
-                sf::forward_cone_opt(&self.vg, g, Some(vs.as_slice()), vol, sino, self.threads)
+                sf::forward_cone_opt(&self.vg, g, Some(vs.as_slice()), vol, sino, threads)
             }
             PlanKind::SfConeUncached => {
                 let Geometry::Cone(g) = &self.geom else { unreachable!() };
-                sf::forward_cone_opt(&self.vg, g, None, vol, sino, self.threads)
+                sf::forward_cone_opt(&self.vg, g, None, vol, sino, threads)
             }
-            PlanKind::Ray { use_siddon, views } => ray_forward_exec(
-                &self.vg,
-                &self.geom,
-                Some(views),
-                *use_siddon,
-                vol,
-                sino,
-                self.threads,
-            ),
+            PlanKind::Ray { use_siddon, views } => {
+                ray_forward_exec(&self.vg, &self.geom, Some(views), *use_siddon, vol, sino, threads)
+            }
         }
     }
 
     /// Matched backprojection `vol = Aᵀ·sino` through the cached plan
     /// (overwrites `vol`).
     pub fn back_into(&self, sino: &Sino, vol: &mut Vol3) {
+        self.back_into_with_threads(sino, vol, self.threads)
+    }
+
+    /// [`Self::back_into`] with an explicit worker count for this one
+    /// application (see [`Self::forward_into_with_threads`]).
+    pub fn back_into_with_threads(&self, sino: &Sino, vol: &mut Vol3, threads: usize) {
         check_shapes(&self.geom, &self.vg, vol, sino);
+        let threads = threads.max(1);
         match &self.kind {
             PlanKind::SfParallel(set) => {
                 let Geometry::Parallel(g) = &self.geom else { unreachable!() };
-                sf::back_parallel_opt(&self.vg, g, Some(set), sino, vol, self.threads)
+                sf::back_parallel_opt(&self.vg, g, Some(set), sino, vol, threads)
             }
             PlanKind::SfFan(vs) => {
                 let Geometry::Fan(g) = &self.geom else { unreachable!() };
-                sf::back_fan_opt(&self.vg, g, Some(vs.as_slice()), sino, vol, self.threads)
+                sf::back_fan_opt(&self.vg, g, Some(vs.as_slice()), sino, vol, threads)
             }
             PlanKind::SfCone(vs) => {
                 let Geometry::Cone(g) = &self.geom else { unreachable!() };
-                sf::back_cone_opt(&self.vg, g, Some(vs.as_slice()), sino, vol, self.threads)
+                sf::back_cone_opt(&self.vg, g, Some(vs.as_slice()), sino, vol, threads)
             }
             PlanKind::SfConeUncached => {
                 let Geometry::Cone(g) = &self.geom else { unreachable!() };
-                sf::back_cone_opt(&self.vg, g, None, sino, vol, self.threads)
+                sf::back_cone_opt(&self.vg, g, None, sino, vol, threads)
             }
-            PlanKind::Ray { use_siddon, views } => ray_back_exec(
-                &self.vg,
-                &self.geom,
-                Some(views),
-                *use_siddon,
-                sino,
-                vol,
-                self.threads,
-            ),
+            PlanKind::Ray { use_siddon, views } => {
+                ray_back_exec(&self.vg, &self.geom, Some(views), *use_siddon, sino, vol, threads)
+            }
         }
     }
 
@@ -469,14 +536,69 @@ pub(crate) fn ray_forward_exec(
     });
 }
 
+/// The ray's coordinate interval along `slab_ax` over its traversal of
+/// the volume's axis-aligned bounding box padded by one voxel on every
+/// side, as `(w_lo, w_hi)` — or `(∞, −∞)` when the ray misses the padded
+/// box entirely (so any overlap test fails). This is the plan-time half
+/// of the conservative slab rejection: [`RayViews::build`] evaluates it
+/// once per ray (then quantizes it via [`span_of_interval`], which only
+/// widens), while the direct (unplanned) path evaluates it on the fly
+/// through [`ray_touches_slab`]. The planned path may therefore walk a
+/// few *extra* boundary rays the float test would reject — harmless,
+/// because rejection is an optimization only: the per-deposit
+/// `flat_lo..flat_hi` ownership guard in [`ray_back_exec`] is what
+/// actually confines writes to the slab, and provably-non-touching rays
+/// deposit nothing there. Outputs are identical either way.
+#[inline]
+fn ray_slab_interval(
+    ray: &Ray,
+    lo: &[f64; 3],
+    hi: &[f64; 3],
+    pitch: &[f64; 3],
+    slab_ax: usize,
+) -> (f64, f64) {
+    const MISS: (f64, f64) = (f64::INFINITY, f64::NEG_INFINITY);
+    let o = ray.origin;
+    let d = ray.dir;
+    let mut tmin = f64::NEG_INFINITY;
+    let mut tmax = f64::INFINITY;
+    for ax in 0..3 {
+        let la = lo[ax] - pitch[ax];
+        let ha = hi[ax] + pitch[ax];
+        if d[ax].abs() < 1e-12 {
+            if o[ax] <= la || o[ax] >= ha {
+                return MISS;
+            }
+        } else {
+            let ta = (la - o[ax]) / d[ax];
+            let tb = (ha - o[ax]) / d[ax];
+            tmin = tmin.max(ta.min(tb));
+            tmax = tmax.min(ta.max(tb));
+        }
+    }
+    if tmin >= tmax {
+        return MISS;
+    }
+    if d[slab_ax].abs() < 1e-12 {
+        (o[slab_ax], o[slab_ax])
+    } else {
+        let a = o[slab_ax] + tmin * d[slab_ax];
+        let b = o[slab_ax] + tmax * d[slab_ax];
+        if a <= b {
+            (a, b)
+        } else {
+            (b, a)
+        }
+    }
+}
+
 /// Conservative ray/slab overlap test for the slab-owned ray-driven
-/// backprojection. Clips the ray to the volume's axis-aligned bounding
-/// box padded by one voxel on every side, then checks whether the ray's
-/// coordinate extent along `slab_ax` over that interval can reach the
-/// (already voxel-padded) slab extent `[ax_lo, ax_hi]`. Must never
-/// reject a contributing ray: the walkers (Siddon exact traversal,
-/// Joseph ±1-cell bilinear) only deposit weight within one voxel of the
-/// ray inside the *unpadded* box, which the double padding strictly
+/// backprojection: the ray's slab-axis extent over the voxel-padded
+/// volume clip ([`ray_slab_interval`]) against the (already
+/// voxel-padded) slab extent `[ax_lo, ax_hi]`. Must never reject a
+/// contributing ray: the walkers (Siddon exact traversal, Joseph
+/// ±1-cell bilinear) only deposit weight within one voxel of the ray
+/// inside the *unpadded* box, which the double padding strictly
 /// contains. A ray that misses the padded box misses the unpadded box,
 /// where both walkers emit nothing.
 #[inline]
@@ -489,38 +611,7 @@ fn ray_touches_slab(
     ax_lo: f64,
     ax_hi: f64,
 ) -> bool {
-    let o = ray.origin;
-    let d = ray.dir;
-    let mut tmin = f64::NEG_INFINITY;
-    let mut tmax = f64::INFINITY;
-    for ax in 0..3 {
-        let la = lo[ax] - pitch[ax];
-        let ha = hi[ax] + pitch[ax];
-        if d[ax].abs() < 1e-12 {
-            if o[ax] <= la || o[ax] >= ha {
-                return false;
-            }
-        } else {
-            let ta = (la - o[ax]) / d[ax];
-            let tb = (ha - o[ax]) / d[ax];
-            tmin = tmin.max(ta.min(tb));
-            tmax = tmax.min(ta.max(tb));
-        }
-    }
-    if tmin >= tmax {
-        return false;
-    }
-    let (w_lo, w_hi) = if d[slab_ax].abs() < 1e-12 {
-        (o[slab_ax], o[slab_ax])
-    } else {
-        let a = o[slab_ax] + tmin * d[slab_ax];
-        let b = o[slab_ax] + tmax * d[slab_ax];
-        if a <= b {
-            (a, b)
-        } else {
-            (b, a)
-        }
-    };
+    let (w_lo, w_hi) = ray_slab_interval(ray, lo, hi, pitch, slab_ax);
     w_hi >= ax_lo && w_lo <= ax_hi
 }
 
@@ -533,10 +624,15 @@ fn ray_touches_slab(
 /// close to `1/threads` of the walk work per worker. There are no
 /// per-thread partial volumes and no reduction, and every voxel sums its
 /// contributions in the same global order for any thread count —
-/// backprojection floats are thread-count-invariant. (In-plane divergent
-/// rays cross most y-slabs, so 2-D fan/modular scans trade some replay
-/// overlap for the flat memory profile — the documented fallback cost.)
-/// Shared by the direct and planned paths.
+/// backprojection floats are thread-count-invariant. On the planned path
+/// the per-ray slab spans come precomputed from [`RayViews::build`], so
+/// replaying a slab skips non-touching rays with two integer compares
+/// and no ray construction — this is what restored thread scaling for
+/// the 2-D fan/modular y-slab replay (previously each worker re-ran the
+/// full 3-axis clip for every ray, which on small in-plane problems cost
+/// about as much as the surviving walks). Shared by the direct and
+/// planned paths; both reject exactly the same rays (identical interval
+/// math), so outputs stay bit-identical.
 pub(crate) fn ray_back_exec(
     vg: &VolumeGeometry,
     geom: &Geometry,
@@ -559,6 +655,12 @@ pub(crate) fn ray_back_exec(
     let slabs = chunk_ranges(n_ax, threads);
     let (lo, hi) = vg.bounds();
     let pitch = [vg.vx, vg.vy, vg.vz];
+    // planned path: the per-ray slab spans were precomputed at plan time
+    // (ray_slab_interval quantized to voxel indices), so per (ray, slab)
+    // rejection is two integer compares before any ray is constructed
+    let cached_span = views
+        .map(|v| v.slab_span.as_slice())
+        .filter(|s| s.len() == units * ncols);
     let out = ParWriter::new(&mut vol.data);
     run_region(slabs.len(), |slot| {
         let (s0, s1) = slabs[slot];
@@ -589,8 +691,16 @@ pub(crate) fn ray_back_exec(
                 if y == 0.0 {
                     continue;
                 }
+                if let Some(spans) = cached_span {
+                    let (sp_lo, sp_hi) = spans[base + col];
+                    if (sp_hi as usize) < s0 || (sp_lo as usize) > s1 {
+                        continue;
+                    }
+                }
                 let ray = ray_for(geom, trig, view, row, col);
-                if !ray_touches_slab(&ray, &lo, &hi, &pitch, slab_ax, ax_lo, ax_hi) {
+                if cached_span.is_none()
+                    && !ray_touches_slab(&ray, &lo, &hi, &pitch, slab_ax, ax_lo, ax_hi)
+                {
                     continue;
                 }
                 let deposit = |idx: usize, w: f32| {
@@ -682,6 +792,81 @@ mod tests {
         assert_eq!(p.forward(&x).data, capped.forward(&x).data);
         let y = p.forward(&x);
         assert_eq!(p.back(&y).data, capped.back(&y).data);
+    }
+
+    #[test]
+    fn precomputed_slab_spans_are_conservative() {
+        // every voxel a walker deposits into must have its slab-axis
+        // index inside the ray's precomputed span — the property the
+        // slab-owned replay's two-compare rejection relies on
+        for geom in geometries() {
+            let vg = if matches!(geom, Geometry::Fan(_)) {
+                VolumeGeometry::slice2d(9, 9, 1.0)
+            } else {
+                VolumeGeometry::cube(8, 1.0)
+            };
+            let slab_ax = if vg.nz > 1 { 2usize } else { 1 };
+            let nrows = geom.nrows();
+            let ncols = geom.ncols();
+            for model in [Model::Siddon, Model::Joseph] {
+                let p = Projector::new(geom.clone(), vg.clone(), model).with_threads(2);
+                let plan = p.plan();
+                let PlanKind::Ray { use_siddon, views } = &plan.kind else {
+                    panic!("ray model must build a ray plan")
+                };
+                assert_eq!(views.slab_span.len(), geom.nviews() * nrows * ncols);
+                for view in 0..geom.nviews() {
+                    let trig = view_trig(&p.geom, Some(views), view);
+                    let axis = view_axis(&p.geom, Some(views), *use_siddon, trig, view);
+                    for row in 0..nrows {
+                        for col in 0..ncols {
+                            let ray = ray_for(&p.geom, trig, view, row, col);
+                            let (sp_lo, sp_hi) =
+                                views.slab_span[(view * nrows + row) * ncols + col];
+                            let check = |idx: usize, _w: f32| {
+                                let rest = idx / vg.nx;
+                                let a = if slab_ax == 2 { rest / vg.ny } else { rest % vg.ny };
+                                assert!(
+                                    (sp_lo as usize) <= a && a <= (sp_hi as usize),
+                                    "{}/{} view {view} row {row} col {col}: \
+                                     deposit at axis index {a} outside span \
+                                     [{sp_lo}, {sp_hi}]",
+                                    model.name(),
+                                    p.geom.kind()
+                                );
+                            };
+                            if *use_siddon {
+                                siddon::walk_ray(&vg, &ray, check);
+                            } else if let Some(a) = axis {
+                                joseph::walk_ray_with_axis(&vg, &ray, a, check);
+                            } else {
+                                joseph::walk_ray(&vg, &ray, check);
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sf_parallel_estimate_matches_actual_layout() {
+        // pure 2-D: the size_of-derived shared estimate is exact
+        let vg = VolumeGeometry::slice2d(12, 12, 1.0);
+        let g = Geometry::Parallel(ParallelBeam::standard_2d(7, 16, 1.0));
+        let p = Projector::new(g, vg, Model::SF).with_threads(2);
+        assert_eq!(ProjectionPlan::estimate_heap_bytes(&p), p.plan().approx_heap_bytes());
+
+        // 3-D: an upper bound, tight to within the estimated overlap
+        // entries per slice
+        let vg3 = VolumeGeometry::cube(10, 1.0);
+        let g3 = Geometry::Parallel(ParallelBeam::standard_3d(5, 6, 10, 1.3, 1.3));
+        let p3 = Projector::new(g3, vg3.clone(), Model::SF).with_threads(2);
+        let est = ProjectionPlan::estimate_heap_bytes(&p3);
+        let act = p3.plan().approx_heap_bytes();
+        assert!(est >= act, "estimate {est} must bound actual {act}");
+        let slack = vg3.nz * 2 * std::mem::size_of::<(usize, f64)>();
+        assert!(est - act <= slack, "estimate {est} vs actual {act}: slack over {slack}");
     }
 
     #[test]

@@ -245,6 +245,55 @@ impl ParallelPlanSet {
     }
 }
 
+/// Pre-build byte estimate of a parallel-beam SF plan, derived from the
+/// real plan layouts via `size_of` — the single definition shared by
+/// [`crate::projector::ProjectionPlan::estimate_heap_bytes`] and the
+/// byte-budget tests, so the estimate and the actual resident bytes
+/// cannot silently drift apart when `ParallelViewPlan` changes shape.
+/// Exact for pure 2-D scans (whose shared row-weight table is empty);
+/// for 3-D scans each slice's `(row, weight)` overlap list is
+/// upper-bounded by the `ceil(vz/dv) + 1` detector rows a `vz`-wide
+/// rect footprint can span.
+pub fn parallel_plan_estimate_bytes(vg: &VolumeGeometry, g: &ParallelBeam) -> usize {
+    let views = g.angles.len() * std::mem::size_of::<ParallelViewPlan>();
+    let pure_2d = vg.nz == 1 && g.nrows == 1;
+    let rows = std::mem::size_of::<ParallelRowWeights>()
+        + if pure_2d {
+            0
+        } else {
+            let per_slice = if g.dv > 0.0 {
+                (((vg.vz / g.dv).ceil() as usize) + 1).min(g.nrows.max(1))
+            } else {
+                g.nrows.max(1)
+            };
+            vg.nz
+                * (std::mem::size_of::<Vec<(usize, f64)>>()
+                    + per_slice * std::mem::size_of::<(usize, f64)>())
+        };
+    views + rows
+}
+
+/// Pre-build estimate of a cone plan's cache: per voxel column one
+/// `ConeVoxelFoot` plus one column-weight entry per detector column the
+/// magnified in-plane voxel extent spans — geometry-aware so fine-pitch
+/// detectors (wide footprints) don't slip past the memory cap with a
+/// constant-bins guess. Entry sizes come from `size_of` on the real plan
+/// types, like [`parallel_plan_estimate_bytes`].
+pub fn cone_plan_estimate_bytes(g: &ConeBeam, vg: &VolumeGeometry) -> usize {
+    let mag = if g.sod > 0.0 { g.sdd / g.sod } else { 1.0 };
+    let cols_per_foot = if g.du > 0.0 {
+        ((((vg.vx + vg.vy) * mag / g.du).ceil() + 1.0).max(2.0) as usize).min(g.ncols.max(1))
+    } else {
+        g.ncols.max(1)
+    };
+    g.angles
+        .len()
+        .saturating_mul(vg.nx.saturating_mul(vg.ny))
+        .saturating_mul(
+            std::mem::size_of::<ConeVoxelFoot>() + cols_per_foot * std::mem::size_of::<(u32, f64)>(),
+        )
+}
+
 /// Build the per-view SF invariants for one parallel-beam view.
 pub fn plan_parallel_view(vg: &VolumeGeometry, g: &ParallelBeam, view: usize) -> ParallelViewPlan {
     let phi = g.angles[view];

@@ -5,8 +5,14 @@
 //! a thousand or more iterations"): CG's convergence theory assumes the
 //! operator in the normal equations is exactly `AᵀA`; an unmatched
 //! backprojector silently substitutes `BA` with `B ≠ Aᵀ` and diverges.
+//!
+//! The solver core [`cgls_op`] is generic over any
+//! [`crate::ops::LinearOp`] (planned projector, stored matrix, masked or
+//! composed operators); [`cgls`]/[`cgls_from`] are the concrete-projector
+//! entry points and run the identical core through a plan built once.
 
 use crate::array::{Sino, Vol3};
+use crate::ops::{LinearOp, PlanOp};
 use crate::projector::Projector;
 use crate::util::dot_f64;
 
@@ -28,46 +34,59 @@ pub fn cgls(p: &Projector, y: &Sino, iterations: usize) -> CglsResult {
 /// per-iteration thread spawns) and backprojects slab-owned, so solver
 /// memory stays at one volume + one sinogram regardless of thread count.
 pub fn cgls_from(p: &Projector, y: &Sino, x0: &Vol3, iterations: usize) -> CglsResult {
-    let plan = p.plan();
-    let mut x = x0.clone();
+    let op = PlanOp::new(p);
+    let (x, residuals) = cgls_op(&op, &y.data, &x0.data, iterations);
+    CglsResult { vol: Vol3::from_vec(p.vg.nx, p.vg.ny, p.vg.nz, x), residuals }
+}
+
+/// The CGLS core on any matched [`LinearOp`]: returns the solution
+/// (domain layout) and the normal-equation residual norm per iteration.
+pub fn cgls_op(op: &dyn LinearOp, y: &[f32], x0: &[f32], iterations: usize) -> (Vec<f32>, Vec<f64>) {
+    let dn = op.domain_shape().numel();
+    let rn = op.range_shape().numel();
+    assert_eq!(y.len(), rn, "measurement length");
+    assert_eq!(x0.len(), dn, "initial volume length");
+    let mut x = x0.to_vec();
     // r = y − A x;  s = Aᵀ r;  d = s
-    let mut r = y.clone();
-    let ax = plan.forward(&x);
+    let mut r = y.to_vec();
+    let mut ax = vec![0.0f32; rn];
+    op.apply_into(&x, &mut ax);
     for i in 0..r.len() {
-        r.data[i] -= ax.data[i];
+        r[i] -= ax[i];
     }
-    let mut s = plan.back(&r);
+    let mut s = vec![0.0f32; dn];
+    op.adjoint_into(&r, &mut s);
     let mut d = s.clone();
-    let mut norm_s = dot_f64(&s.data, &s.data);
+    let mut norm_s = dot_f64(&s, &s);
     let mut residuals = vec![norm_s.sqrt()];
 
-    let mut ad = p.new_sino();
+    let mut ad = vec![0.0f32; rn];
     for _ in 0..iterations {
         if norm_s <= 1e-30 {
             break;
         }
-        p.forward_with_plan(&plan, &d, &mut ad);
-        let denom = dot_f64(&ad.data, &ad.data);
+        op.apply_into(&d, &mut ad);
+        let denom = dot_f64(&ad, &ad);
         if denom <= 1e-30 {
             break;
         }
         let alpha = (norm_s / denom) as f32;
         for i in 0..x.len() {
-            x.data[i] += alpha * d.data[i];
+            x[i] += alpha * d[i];
         }
         for i in 0..r.len() {
-            r.data[i] -= alpha * ad.data[i];
+            r[i] -= alpha * ad[i];
         }
-        p.back_with_plan(&plan, &r, &mut s);
-        let norm_s_new = dot_f64(&s.data, &s.data);
+        op.adjoint_into(&r, &mut s);
+        let norm_s_new = dot_f64(&s, &s);
         let beta = (norm_s_new / norm_s) as f32;
         for i in 0..d.len() {
-            d.data[i] = s.data[i] + beta * d.data[i];
+            d[i] = s[i] + beta * d[i];
         }
         norm_s = norm_s_new;
         residuals.push(norm_s.sqrt());
     }
-    CglsResult { vol: x, residuals }
+    (x, residuals)
 }
 
 #[cfg(test)]

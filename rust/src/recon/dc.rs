@@ -16,9 +16,10 @@
 //! refinement *improves* PSNR/SSIM over the raw prediction.
 
 use crate::array::{Sino, Vol3};
+use crate::ops::{LinearOp, PlanOp};
 use crate::projector::Projector;
 
-use super::sirt::{sirt, SirtOpts};
+use super::sirt::{sirt_op, SirtOpts};
 
 /// A limited-angle acquisition mask: 1 = measured view, 0 = missing.
 #[derive(Clone, Debug)]
@@ -62,13 +63,35 @@ impl ViewMask {
 pub fn complete_sinogram(p: &Projector, y: &Sino, mask: &ViewMask, x_pred: &Vol3) -> Sino {
     let pred = p.forward(x_pred);
     let mut out = y.clone();
-    let n = out.nrows * out.ncols;
+    splice_missing_views(&mut out.data, &pred.data, mask, out.nrows * out.ncols);
+    out
+}
+
+/// [`complete_sinogram`] on any matched [`LinearOp`]: measured views
+/// from `y` (range layout), missing views from `A·x_pred`.
+pub fn complete_sinogram_op(
+    op: &dyn LinearOp,
+    y: &[f32],
+    mask: &ViewMask,
+    x_pred: &[f32],
+) -> Vec<f32> {
+    let rn = op.range_shape().numel();
+    assert_eq!(y.len(), rn, "measurement length");
+    let per_view = rn / op.range_shape().0[0].max(1);
+    let pred = op.apply(x_pred);
+    let mut out = y.to_vec();
+    splice_missing_views(&mut out, &pred, mask, per_view);
+    out
+}
+
+/// Overwrite the masked-out view blocks of `out` with `pred`'s.
+fn splice_missing_views(out: &mut [f32], pred: &[f32], mask: &ViewMask, per_view: usize) {
     for (view, &w) in mask.weights.iter().enumerate() {
         if w == 0.0 {
-            out.data[view * n..(view + 1) * n].copy_from_slice(&pred.data[view * n..(view + 1) * n]);
+            out[view * per_view..(view + 1) * per_view]
+                .copy_from_slice(&pred[view * per_view..(view + 1) * per_view]);
         }
     }
-    out
 }
 
 /// Options for [`refine`].
@@ -90,10 +113,25 @@ impl Default for DcOpts {
 }
 
 /// Iterative data-consistency refinement: start from the prediction and
-/// pull it toward agreement with the measured views.
+/// pull it toward agreement with the measured views. Plans once and runs
+/// [`refine_op`] — identical floats to the historical concrete path.
 pub fn refine(p: &Projector, y: &Sino, mask: &ViewMask, x_pred: &Vol3, opts: &DcOpts) -> Vol3 {
-    let res = sirt(
-        p,
+    let op = PlanOp::new(p);
+    let out = refine_op(&op, &y.data, mask, &x_pred.data, opts);
+    Vol3::from_vec(p.vg.nx, p.vg.ny, p.vg.nz, out)
+}
+
+/// [`refine`] on any matched [`LinearOp`]: masked SIRT from the
+/// prediction, plus an optional small TV smoothing.
+pub fn refine_op(
+    op: &dyn LinearOp,
+    y: &[f32],
+    mask: &ViewMask,
+    x_pred: &[f32],
+    opts: &DcOpts,
+) -> Vec<f32> {
+    let (mut out, _) = sirt_op(
+        op,
         y,
         x_pred,
         &SirtOpts {
@@ -104,9 +142,9 @@ pub fn refine(p: &Projector, y: &Sino, mask: &ViewMask, x_pred: &Vol3, opts: &Dc
             track_residual: false,
         },
     );
-    let mut out = res.vol;
     if opts.tv_weight > 0.0 {
-        super::fista_tv::tv_prox_vol(&mut out, opts.tv_weight, opts.tv_iters);
+        let d = op.domain_shape().0;
+        super::fista_tv::tv_prox_slices(&mut out, d[0], d[1], d[2], opts.tv_weight, opts.tv_iters);
     }
     out
 }
@@ -115,17 +153,27 @@ pub fn refine(p: &Projector, y: &Sino, mask: &ViewMask, x_pred: &Vol3, opts: &Dc
 /// data-consistency metric the paper's pipeline monitors.
 pub fn data_consistency_error(p: &Projector, y: &Sino, mask: &ViewMask, x: &Vol3) -> f64 {
     let ax = p.forward(x);
-    let n = y.nrows * y.ncols;
+    masked_relative_residual(&ax.data, &y.data, mask, y.nrows * y.ncols)
+}
+
+/// [`data_consistency_error`] on any matched [`LinearOp`].
+pub fn data_consistency_error_op(op: &dyn LinearOp, y: &[f32], mask: &ViewMask, x: &[f32]) -> f64 {
+    let ax = op.apply(x);
+    let per_view = op.range_shape().numel() / op.range_shape().0[0].max(1);
+    masked_relative_residual(&ax, y, mask, per_view)
+}
+
+fn masked_relative_residual(ax: &[f32], y: &[f32], mask: &ViewMask, per_view: usize) -> f64 {
     let mut num = 0.0f64;
     let mut den = 0.0f64;
     for (view, &w) in mask.weights.iter().enumerate() {
         if w == 0.0 {
             continue;
         }
-        for i in view * n..(view + 1) * n {
-            let d = (ax.data[i] - y.data[i]) as f64;
+        for i in view * per_view..(view + 1) * per_view {
+            let d = (ax[i] - y[i]) as f64;
             num += d * d;
-            den += (y.data[i] as f64) * (y.data[i] as f64);
+            den += (y[i] as f64) * (y[i] as f64);
         }
     }
     (num / den.max(1e-30)).sqrt()

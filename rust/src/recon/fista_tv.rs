@@ -6,13 +6,24 @@
 //!   iteration on `AᵀA` (only possible because the pair is matched!).
 //! * TV prox solved with FGP (Beck & Teboulle 2009) on each z-slice.
 //!
+//! The solver core [`fista_tv_op`] and the power iteration
+//! [`power_iter_lipschitz_op`] are generic over any
+//! [`crate::ops::LinearOp`] — the gradient step is literally
+//! [`crate::ops::ProjectionLoss`]'s least-squares gradient, and the
+//! power iteration is the normal operator [`crate::ops::Normal`] driven
+//! to its top eigenvalue. The concrete-projector entry points plan once
+//! and run the identical cores.
+//!
 //! The power iteration plus the main loop apply `A`/`Aᵀ` hundreds of
 //! times; all of them run on the persistent worker pool with slab-owned
 //! backprojection, so neither spawns threads nor allocates per-thread
 //! volume copies.
 
 use crate::array::{Sino, Vol3};
+use crate::ops::{LinearOp, PlanOp};
 use crate::projector::Projector;
+
+use super::sirt::apply_view_mask_flat;
 
 /// Isotropic TV of a 2-D slice (for tests/diagnostics).
 pub fn tv2d(img: &[f32], nx: usize, ny: usize) -> f64 {
@@ -98,12 +109,18 @@ pub fn tv_prox2d(img: &mut [f32], nx: usize, ny: usize, w: f32, iters: usize) {
     }
 }
 
+/// Apply the TV prox slice-by-slice to a flat `[z][y][x]` volume buffer.
+pub fn tv_prox_slices(data: &mut [f32], nx: usize, ny: usize, nz: usize, w: f32, iters: usize) {
+    let plane = nx * ny;
+    for k in 0..nz {
+        tv_prox2d(&mut data[k * plane..(k + 1) * plane], nx, ny, w, iters);
+    }
+}
+
 /// Apply the TV prox slice-by-slice to a volume.
 pub fn tv_prox_vol(vol: &mut Vol3, w: f32, iters: usize) {
     let (nx, ny, nz) = (vol.nx, vol.ny, vol.nz);
-    for k in 0..nz {
-        tv_prox2d(vol.slice_mut(k), nx, ny, w, iters);
-    }
+    tv_prox_slices(&mut vol.data, nx, ny, nz, w, iters);
 }
 
 /// Estimate `‖AᵀA‖₂` by power iteration (matched pair required).
@@ -118,20 +135,31 @@ pub fn power_iter_lipschitz_planned(
     iters: usize,
     seed: u64,
 ) -> f64 {
+    power_iter_lipschitz_op(plan, iters, seed)
+}
+
+/// Power iteration on `AᵀA` for any matched [`LinearOp`] — the largest
+/// singular value squared, i.e. the Lipschitz constant of the
+/// least-squares gradient.
+pub fn power_iter_lipschitz_op(op: &dyn LinearOp, iters: usize, seed: u64) -> f64 {
+    let dn = op.domain_shape().numel();
+    let rn = op.range_shape().numel();
     let mut rng = crate::util::rng::Rng::new(seed);
-    let mut x = plan.new_vol();
-    rng.fill_uniform(&mut x.data, 0.0, 1.0);
+    let mut x = vec![0.0f32; dn];
+    rng.fill_uniform(&mut x, 0.0, 1.0);
+    let mut ax = vec![0.0f32; rn];
+    let mut atax = vec![0.0f32; dn];
     let mut norm = 1.0f64;
     for _ in 0..iters {
-        let ax = plan.forward(&x);
-        let atax = plan.back(&ax);
-        norm = atax.data.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>().sqrt();
+        op.apply_into(&x, &mut ax);
+        op.adjoint_into(&ax, &mut atax);
+        norm = atax.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>().sqrt();
         if norm <= 1e-30 {
             return 1.0;
         }
         let inv = (1.0 / norm) as f32;
         for i in 0..x.len() {
-            x.data[i] = atax.data[i] * inv;
+            x[i] = atax[i] * inv;
         }
     }
     norm
@@ -160,30 +188,46 @@ impl Default for FistaOpts {
 /// projector once; the Lipschitz power iteration and the main loop share
 /// the cached per-view geometry.
 pub fn fista_tv(p: &Projector, y: &Sino, x0: &Vol3, opts: &FistaOpts) -> Vol3 {
-    let plan = p.plan();
-    let lip = power_iter_lipschitz_planned(&plan, 12, 1234).max(1e-12);
+    let op = PlanOp::new(p);
+    let x = fista_tv_op(&op, &y.data, &x0.data, opts);
+    Vol3::from_vec(p.vg.nx, p.vg.ny, p.vg.nz, x)
+}
+
+/// The FISTA-TV core on any matched [`LinearOp`]. The TV prox runs on
+/// the domain's `[nx, ny, nz]` slices, taken from
+/// [`LinearOp::domain_shape`].
+pub fn fista_tv_op(op: &dyn LinearOp, y: &[f32], x0: &[f32], opts: &FistaOpts) -> Vec<f32> {
+    let d = op.domain_shape().0;
+    let dn = op.domain_shape().numel();
+    let rn = op.range_shape().numel();
+    let nviews = op.range_shape().0[0];
+    let per_view = if nviews > 0 { rn / nviews } else { 0 };
+    assert_eq!(y.len(), rn, "measurement length");
+    assert_eq!(x0.len(), dn, "initial volume length");
+    let lip = power_iter_lipschitz_op(op, 12, 1234).max(1e-12);
     let step = (1.0 / lip) as f32;
-    let mut x = x0.clone();
+    let mut x = x0.to_vec();
     let mut z = x.clone();
     let mut t = 1.0f32;
-    let mut ax = p.new_sino();
+    let mut ax = vec![0.0f32; rn];
+    let mut grad = vec![0.0f32; dn];
     for _ in 0..opts.iterations {
         // gradient at z
-        p.forward_with_plan(&plan, &z, &mut ax);
+        op.apply_into(&z, &mut ax);
         for i in 0..ax.len() {
-            ax.data[i] -= y.data[i];
+            ax[i] -= y[i];
         }
         if let Some(mask) = &opts.view_mask {
-            super::sirt::apply_view_mask(&mut ax, mask);
+            apply_view_mask_flat(&mut ax, mask, per_view);
         }
-        let grad = plan.back(&ax);
+        op.adjoint_into(&ax, &mut grad);
         let mut x_new = z.clone();
         for i in 0..x_new.len() {
-            x_new.data[i] -= step * grad.data[i];
+            x_new[i] -= step * grad[i];
         }
-        tv_prox_vol(&mut x_new, opts.tv_weight * step, opts.prox_iters);
+        tv_prox_slices(&mut x_new, d[0], d[1], d[2], opts.tv_weight * step, opts.prox_iters);
         if opts.nonneg {
-            for v in x_new.data.iter_mut() {
+            for v in x_new.iter_mut() {
                 if *v < 0.0 {
                     *v = 0.0;
                 }
@@ -192,7 +236,7 @@ pub fn fista_tv(p: &Projector, y: &Sino, x0: &Vol3, opts: &FistaOpts) -> Vol3 {
         let t_new = (1.0 + (1.0 + 4.0 * t * t).sqrt()) / 2.0;
         let mom = (t - 1.0) / t_new;
         for i in 0..z.len() {
-            z.data[i] = x_new.data[i] + mom * (x_new.data[i] - x.data[i]);
+            z[i] = x_new[i] + mom * (x_new[i] - x[i]);
         }
         x = x_new;
         t = t_new;

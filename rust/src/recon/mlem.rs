@@ -2,10 +2,17 @@
 //!
 //! `x ← x · Aᵀ(y / A x) / Aᵀ1`. Multiplicative, hence automatically
 //! non-negative; included because LEAP advertises supporting "analytical
-//! or iterative reconstruction algorithms" generally.
+//! or iterative reconstruction algorithms" generally. Its fixed point
+//! minimizes the same Poisson negative log-likelihood that
+//! [`crate::ops::ProjectionLoss`] differentiates.
+//!
+//! The solver core [`mlem_op`] is generic over any
+//! [`crate::ops::LinearOp`]; [`mlem`] is the concrete-projector entry
+//! point (plans once, identical floats).
 
 use crate::array::Sino;
 use crate::array::Vol3;
+use crate::ops::{LinearOp, PlanOp};
 use crate::projector::Projector;
 
 /// Run `iterations` of MLEM. `y` must be non-negative. Starts from a
@@ -13,22 +20,33 @@ use crate::projector::Projector;
 /// every `A`/`Aᵀ` runs on the persistent worker pool with slab-owned
 /// backprojection (no spawn waves, no per-thread volume copies).
 pub fn mlem(p: &Projector, y: &Sino, iterations: usize) -> Vol3 {
-    let plan = p.plan();
-    let mut x = p.new_vol();
-    x.fill(1e-3);
-    let sens = plan.back_ones(); // Aᵀ1
-    let inv_sens: Vec<f32> =
-        sens.data.iter().map(|&v| if v > 1e-6 { 1.0 / v } else { 0.0 }).collect();
-    let mut ax = p.new_sino();
+    let op = PlanOp::new(p);
+    let x = mlem_op(&op, &y.data, iterations);
+    Vol3::from_vec(p.vg.nx, p.vg.ny, p.vg.nz, x)
+}
+
+/// The MLEM core on any matched [`LinearOp`] (domain layout returned).
+pub fn mlem_op(op: &dyn LinearOp, y: &[f32], iterations: usize) -> Vec<f32> {
+    let dn = op.domain_shape().numel();
+    let rn = op.range_shape().numel();
+    assert_eq!(y.len(), rn, "measurement length");
+    let mut x = vec![1e-3f32; dn];
+    // sensitivity Aᵀ1
+    let ones = vec![1.0f32; rn];
+    let mut sens = vec![0.0f32; dn];
+    op.adjoint_into(&ones, &mut sens);
+    let inv_sens: Vec<f32> = sens.iter().map(|&v| if v > 1e-6 { 1.0 / v } else { 0.0 }).collect();
+    let mut ax = vec![0.0f32; rn];
+    let mut ratio = vec![0.0f32; dn];
     for _ in 0..iterations {
-        p.forward_with_plan(&plan, &x, &mut ax);
+        op.apply_into(&x, &mut ax);
         for i in 0..ax.len() {
-            let denom = ax.data[i].max(1e-9);
-            ax.data[i] = y.data[i] / denom;
+            let denom = ax[i].max(1e-9);
+            ax[i] = y[i] / denom;
         }
-        let ratio = plan.back(&ax);
+        op.adjoint_into(&ax, &mut ratio);
         for i in 0..x.len() {
-            x.data[i] *= ratio.data[i] * inv_sens[i];
+            x[i] *= ratio[i] * inv_sens[i];
         }
     }
     x

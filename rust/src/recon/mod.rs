@@ -10,6 +10,14 @@
 //! * [`fista_tv`] — model-based TV-regularized reconstruction.
 //! * [`dc`] — sinogram completion + data-consistency refinement, the §3–4
 //!   inference pipeline reproduced by `examples/limited_angle_dc.rs`.
+//!
+//! Every iterative solver is split into a core generic over
+//! [`crate::ops::LinearOp`] (`sirt_op`, `os_sart_op`, `cgls_op`,
+//! `mlem_op`, `fista_tv_op`, `refine_op`) and a thin concrete-projector
+//! entry point that plans once and runs the identical core — so the same
+//! solvers drive the on-the-fly projectors, the stored
+//! [`crate::sysmatrix::SystemMatrix`] baseline, and any masked/scaled/
+//! composed operator, with unchanged floats on the concrete path.
 
 pub mod filters;
 pub mod fbp;
@@ -20,7 +28,10 @@ pub mod mlem;
 pub mod fista_tv;
 pub mod dc;
 
-pub use dc::{complete_sinogram, data_consistency_error, refine, DcOpts, ViewMask};
+pub use dc::{
+    complete_sinogram, complete_sinogram_op, data_consistency_error, data_consistency_error_op,
+    refine, refine_op, DcOpts, ViewMask,
+};
 pub use fbp::{fbp_fan, fbp_parallel, fdk};
 pub use filters::Window;
-pub use sirt::{sirt, SirtOpts};
+pub use sirt::{sirt, sirt_op, SirtOpts};

@@ -3,10 +3,20 @@
 //!
 //! With `subsets = 1` this degenerates to (masked) SIRT. Subsets are
 //! chosen by the interleaving `view % subsets == s`, the standard
-//! maximal-angular-separation ordering for equiangular scans.
+//! maximal-angular-separation ordering for equiangular scans. Each
+//! subset sweep is exactly a [`crate::ops::RowMasked`] application of
+//! the operator — the core below keeps the masks as flat weights so one
+//! operator serves every subset.
+//!
+//! The solver core [`os_sart_op`] is generic over any
+//! [`crate::ops::LinearOp`]; [`os_sart`] is the concrete-projector
+//! entry point (plans once, identical floats).
 
 use crate::array::{Sino, Vol3};
+use crate::ops::{LinearOp, PlanOp};
 use crate::projector::Projector;
+
+use super::sirt::apply_view_mask_flat;
 
 /// Options for [`os_sart`].
 #[derive(Clone, Debug)]
@@ -28,44 +38,59 @@ impl Default for OsSartOpts {
 /// masked applications per iteration are exactly the workload the
 /// persistent worker pool removes the spawn wave from.
 pub fn os_sart(p: &Projector, y: &Sino, x0: &Vol3, opts: &OsSartOpts) -> Vol3 {
-    let plan = p.plan();
-    let nviews = y.nviews;
-    let subsets = opts.subsets.clamp(1, nviews);
-    let mut x = x0.clone();
+    let op = PlanOp::new(p);
+    let x = os_sart_op(&op, &y.data, &x0.data, opts);
+    Vol3::from_vec(p.vg.nx, p.vg.ny, p.vg.nz, x)
+}
+
+/// The OS-SART core on any matched [`LinearOp`] (domain layout
+/// returned).
+pub fn os_sart_op(op: &dyn LinearOp, y: &[f32], x0: &[f32], opts: &OsSartOpts) -> Vec<f32> {
+    let dn = op.domain_shape().numel();
+    let rn = op.range_shape().numel();
+    let nviews = op.range_shape().0[0];
+    let per_view = if nviews > 0 { rn / nviews } else { 0 };
+    assert_eq!(y.len(), rn, "measurement length");
+    assert_eq!(x0.len(), dn, "initial volume length");
+    let subsets = opts.subsets.clamp(1, nviews.max(1));
+    let mut x = x0.to_vec();
 
     // per-subset normalizations
-    let row_sum_full = plan.forward_ones();
+    let ones_vol = vec![1.0f32; dn];
+    let mut row_sum_full = vec![0.0f32; rn];
+    op.apply_into(&ones_vol, &mut row_sum_full);
     let mut subset_masks: Vec<Vec<f32>> = Vec::with_capacity(subsets);
     let mut inv_cols: Vec<Vec<f32>> = Vec::with_capacity(subsets);
+    let mut col = vec![0.0f32; dn];
     for s in 0..subsets {
         let mask: Vec<f32> =
             (0..nviews).map(|v| if v % subsets == s { 1.0 } else { 0.0 }).collect();
-        let mut ones = p.new_sino();
-        ones.fill(1.0);
-        super::sirt::apply_view_mask(&mut ones, &mask);
-        let col = plan.back(&ones);
-        inv_cols.push(col.data.iter().map(|&v| if v > 1e-6 { 1.0 / v } else { 0.0 }).collect());
+        let mut ones = vec![1.0f32; rn];
+        apply_view_mask_flat(&mut ones, &mask, per_view);
+        op.adjoint_into(&ones, &mut col);
+        inv_cols.push(col.iter().map(|&v| if v > 1e-6 { 1.0 / v } else { 0.0 }).collect());
         subset_masks.push(mask);
     }
     let inv_row: Vec<f32> =
-        row_sum_full.data.iter().map(|&v| if v > 1e-6 { 1.0 / v } else { 0.0 }).collect();
+        row_sum_full.iter().map(|&v| if v > 1e-6 { 1.0 / v } else { 0.0 }).collect();
 
-    let mut ax = p.new_sino();
+    let mut ax = vec![0.0f32; rn];
+    let mut grad = vec![0.0f32; dn];
     for _ in 0..opts.iterations {
         for s in 0..subsets {
-            p.forward_with_plan(&plan, &x, &mut ax);
+            op.apply_into(&x, &mut ax);
             for i in 0..ax.len() {
-                ax.data[i] = (y.data[i] - ax.data[i]) * inv_row[i];
+                ax[i] = (y[i] - ax[i]) * inv_row[i];
             }
-            super::sirt::apply_view_mask(&mut ax, &subset_masks[s]);
-            let grad = plan.back(&ax);
+            apply_view_mask_flat(&mut ax, &subset_masks[s], per_view);
+            op.adjoint_into(&ax, &mut grad);
             let inv_col = &inv_cols[s];
             for i in 0..x.len() {
-                let mut v = x.data[i] + opts.lambda * inv_col[i] * grad.data[i];
+                let mut v = x[i] + opts.lambda * inv_col[i] * grad[i];
                 if opts.nonneg && v < 0.0 {
                     v = 0.0;
                 }
-                x.data[i] = v;
+                x[i] = v;
             }
         }
     }

@@ -143,40 +143,79 @@ impl SystemMatrix {
         self.row_ptr.len() * 8 + self.col_idx.len() * 4 + self.values.len() * 4
     }
 
-    /// SpMV forward projection `y = A·x`.
-    pub fn forward(&self, vol: &Vol3) -> Sino {
-        assert_eq!(vol.len(), self.ncols_mat);
-        let (nv, nr, nc) = self.sino_shape;
-        let mut sino = Sino::zeros(nv, nr, nc);
+    /// SpMV forward projection into a flat buffer: `y = A·x`
+    /// (overwrites `y`).
+    pub fn forward_into_slice(&self, x: &[f32], y: &mut [f32]) {
+        assert_eq!(x.len(), self.ncols_mat, "volume size mismatch");
+        assert_eq!(y.len(), self.nrows, "sinogram size mismatch");
         for r in 0..self.nrows {
             let lo = self.row_ptr[r] as usize;
             let hi = self.row_ptr[r + 1] as usize;
             let mut acc = 0.0f32;
             for k in lo..hi {
-                acc += self.values[k] * vol.data[self.col_idx[k] as usize];
+                acc += self.values[k] * x[self.col_idx[k] as usize];
             }
-            sino.data[r] = acc;
+            y[r] = acc;
         }
-        sino
     }
 
-    /// Transpose SpMV backprojection `x = Aᵀ·y` — matched by construction.
-    pub fn back(&self, sino: &Sino) -> Vol3 {
-        assert_eq!(sino.len(), self.nrows);
-        let (nx, ny, nz) = self.vol_shape;
-        let mut vol = Vol3::zeros(nx, ny, nz);
+    /// Transpose SpMV backprojection into a flat buffer: `x = Aᵀ·y`
+    /// (overwrites `x`) — matched by construction.
+    pub fn back_into_slice(&self, y: &[f32], x: &mut [f32]) {
+        assert_eq!(y.len(), self.nrows, "sinogram size mismatch");
+        assert_eq!(x.len(), self.ncols_mat, "volume size mismatch");
+        x.fill(0.0);
         for r in 0..self.nrows {
-            let y = sino.data[r];
-            if y == 0.0 {
+            let yv = y[r];
+            if yv == 0.0 {
                 continue;
             }
             let lo = self.row_ptr[r] as usize;
             let hi = self.row_ptr[r + 1] as usize;
             for k in lo..hi {
-                vol.data[self.col_idx[k] as usize] += self.values[k] * y;
+                x[self.col_idx[k] as usize] += self.values[k] * yv;
             }
         }
+    }
+
+    /// SpMV forward projection `y = A·x`.
+    pub fn forward(&self, vol: &Vol3) -> Sino {
+        let (nv, nr, nc) = self.sino_shape;
+        let mut sino = Sino::zeros(nv, nr, nc);
+        self.forward_into_slice(&vol.data, &mut sino.data);
+        sino
+    }
+
+    /// Transpose SpMV backprojection `x = Aᵀ·y` — matched by construction.
+    pub fn back(&self, sino: &Sino) -> Vol3 {
+        let (nx, ny, nz) = self.vol_shape;
+        let mut vol = Vol3::zeros(nx, ny, nz);
+        self.back_into_slice(&sino.data, &mut vol.data);
         vol
+    }
+}
+
+/// The stored-matrix baseline speaks the same operator language as the
+/// on-the-fly projectors: every solver and combinator in [`crate::ops`]
+/// runs against it unchanged, which is what lets the Table-1 comparison
+/// hold the numerics fixed while swapping the execution strategy.
+impl crate::ops::LinearOp for SystemMatrix {
+    fn domain_shape(&self) -> crate::ops::Shape {
+        let (nx, ny, nz) = self.vol_shape;
+        crate::ops::Shape([nx, ny, nz])
+    }
+
+    fn range_shape(&self) -> crate::ops::Shape {
+        let (nv, nr, nc) = self.sino_shape;
+        crate::ops::Shape([nv, nr, nc])
+    }
+
+    fn apply_into(&self, x: &[f32], y: &mut [f32]) {
+        self.forward_into_slice(x, y)
+    }
+
+    fn adjoint_into(&self, y: &[f32], x: &mut [f32]) {
+        self.back_into_slice(y, x)
     }
 }
 
