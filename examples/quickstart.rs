@@ -1,76 +1,99 @@
 //! Quickstart: simulate a scan, reconstruct it, check the numbers —
-//! the 60-second tour of the library (paper Fig. 2's workflow, native).
+//! the 60-second tour of the library (paper Fig. 2's workflow), through
+//! the typed `leap::api` front door: a builder-validated `Scan` whose
+//! every operation returns `Result<_, LeapError>` instead of panicking.
 //!
 //! ```bash
 //! cargo run --release --example quickstart
 //! ```
 
+use leap::api::{LeapError, ScanBuilder, Solver};
 use leap::geometry::{Geometry, ParallelBeam, VolumeGeometry};
 use leap::metrics;
+use leap::ops::Objective;
 use leap::phantom::shepp;
-use leap::projector::{Model, Projector};
-use leap::recon;
+use leap::projector::Model;
+use leap::recon::Window;
 
-fn main() {
+fn main() -> Result<(), LeapError> {
     // 1. describe the scan: 128² @ 1 mm voxels, 180 views over 180°,
-    //    192-column detector at 1 mm pitch — everything quantitative (mm)
+    //    192-column detector at 1 mm pitch — everything quantitative (mm).
+    //    build() validates the whole description and plans it once.
     let vg = VolumeGeometry::slice2d(128, 128, 1.0);
     let g = ParallelBeam::standard_2d(180, 192, 1.0);
+    let scan = ScanBuilder::new()
+        .geometry(Geometry::Parallel(g.clone()))
+        .volume(vg.clone())
+        .model(Model::SF)
+        .build()?;
 
     // 2. a ground-truth phantom and its *analytic* sinogram (no inverse
     //    crime: line integrals of the continuous phantom)
     let phantom = shepp::shepp_logan_2d(55.0, 0.02);
     let truth = phantom.rasterize(&vg, 2);
-    let sino = phantom.project(&Geometry::Parallel(g.clone()));
+    let sino = phantom.project(scan.geometry());
     println!("simulated {} views × {} bins", sino.nviews, sino.ncols);
 
     // 3. analytic reconstruction: FBP with a Hann-apodized ramp
     let t0 = std::time::Instant::now();
-    let fbp = recon::fbp_parallel(&vg, &g, &sino, recon::Window::Hann, 1);
+    let fbp = scan.solve(Solver::Fbp { window: Window::Hann }, &sino.data)?;
     println!(
-        "FBP        : {:6.3}s  PSNR {:6.2} dB  SSIM {:.4}",
+        "FBP        : {:6.3}s  PSNR {:6.2} dB",
         t0.elapsed().as_secs_f64(),
-        metrics::psnr(&fbp.data, &truth.data, None),
-        metrics::ssim_vol(&fbp, &truth, None)
+        metrics::psnr(&fbp, &truth.data, None),
     );
 
     // 4. iterative reconstruction on the *matched* SF projector pair
-    let p = Projector::new(Geometry::Parallel(g.clone()), vg.clone(), Model::SF);
     let t0 = std::time::Instant::now();
-    let sirt = recon::sirt(
-        &p,
-        &sino,
-        &p.new_vol(),
-        &recon::SirtOpts { iterations: 50, ..Default::default() },
-    );
+    let sirt =
+        scan.solve(Solver::Sirt { iterations: 50, lambda: 1.0, nonneg: true }, &sino.data)?;
     println!(
-        "SIRT×50    : {:6.3}s  PSNR {:6.2} dB  SSIM {:.4}",
+        "SIRT×50    : {:6.3}s  PSNR {:6.2} dB",
         t0.elapsed().as_secs_f64(),
-        metrics::psnr(&sirt.vol.data, &truth.data, None),
-        metrics::ssim_vol(&sirt.vol, &truth, None)
+        metrics::psnr(&sirt, &truth.data, None),
     );
 
     // 5. the matched-pair property that makes gradients correct:
-    //    ⟨Ax, y⟩ = ⟨x, Aᵀy⟩
+    //    ⟨Ax, y⟩ = ⟨x, Aᵀy⟩ — through the fallible forward/back pair
     let mut rng = leap::util::rng::Rng::new(1);
-    let mut x = p.new_vol();
-    let mut y = p.new_sino();
-    rng.fill_uniform(&mut x.data, 0.0, 1.0);
-    rng.fill_uniform(&mut y.data, 0.0, 1.0);
-    let lhs = leap::util::dot_f64(&p.forward(&x).data, &y.data);
-    let rhs = leap::util::dot_f64(&x.data, &p.back(&y).data);
+    let mut x = vec![0.0f32; scan.volume_len()];
+    let mut y = vec![0.0f32; scan.sino_len()];
+    rng.fill_uniform(&mut x, 0.0, 1.0);
+    rng.fill_uniform(&mut y, 0.0, 1.0);
+    let lhs = leap::util::dot_f64(&scan.forward(&x)?, &y);
+    let rhs = leap::util::dot_f64(&x, &scan.back(&y)?);
     println!(
         "adjoint    : ⟨Ax,y⟩={lhs:.4}  ⟨x,Aᵀy⟩={rhs:.4}  gap {:.2e}",
         (lhs - rhs).abs() / lhs.abs()
     );
 
-    // 6. if `make artifacts` has run, the same ops execute through the
+    // 6. one exact gradient of ½‖Ax − b‖² through the matched adjoint —
+    //    the hook a training loop calls thousands of times
+    let mut grad = vec![0.0f32; scan.volume_len()];
+    let loss = scan.loss_grad(Objective::LeastSquares, &sino.data, &x, &mut grad)?;
+    let gnorm = grad.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>().sqrt();
+    println!("loss/grad  : L = {loss:.4}, ‖∇L‖ = {gnorm:.4}");
+
+    // 7. misuse is a typed error, not a panic: wrong buffer length …
+    let err = scan.forward(&[1.0, 2.0]).unwrap_err();
+    println!("typed error: {err} (wire code {})", err.code());
+    // … and a degenerate scan description never builds
+    let err = ScanBuilder::new()
+        .geometry(Geometry::Parallel(g))
+        .volume(VolumeGeometry::slice2d(128, 128, -1.0))
+        .build()
+        .unwrap_err();
+    println!("typed error: {err} (wire code {})", err.code());
+
+    // 8. if `make artifacts` has run, the same ops execute through the
     //    AOT-compiled JAX/Pallas path (Python is *not* running here)
     match leap::runtime::Engine::load("artifacts") {
         Ok(engine) if engine.spec.n == vg.nx => {
-            let sino_art = engine.run1("fp_sf", &[&truth.data]).unwrap();
-            let native = p.forward(&truth);
-            let rel = leap::util::rel_l2(&sino_art, &native.data, 1e-12);
+            let sino_art = engine.run1("fp_sf", &[&truth.data]).map_err(|e| {
+                LeapError::Backend(format!("{e:#}"))
+            })?;
+            let native = scan.forward(&truth.data)?;
+            let rel = leap::util::rel_l2(&sino_art, &native, 1e-12);
             println!("artifact   : fp_sf matches native SF (rel {rel:.2e})");
         }
         Ok(engine) => println!(
@@ -79,4 +102,5 @@ fn main() {
         ),
         Err(_) => println!("artifact   : skipped (run `make artifacts`)"),
     }
+    Ok(())
 }

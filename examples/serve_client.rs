@@ -1,9 +1,11 @@
-//! Serving scenario: spin up the coordinator + TCP server in-process,
-//! drive it with concurrent clients, and report throughput/latency —
-//! the "seamless integration with existing pipelines" claim as a service.
+//! Serving scenario: spin up the coordinator + dual-protocol TCP server
+//! in-process, register a scan over the protocol-v2 session handshake,
+//! stream binary tensor frames at it from concurrent clients, drive the
+//! same workload over legacy v1 JSON — and assert both protocols return
+//! exactly the bits of the in-process `leap::api::Scan` path.
 //!
-//! Uses the PJRT artifact backend when `make artifacts` has run, plus the
-//! native backend; requests are routed by op name and dynamically batched.
+//! This doubles as the CI client/server integration smoke (see
+//! `.github/workflows/ci.yml`).
 //!
 //! ```bash
 //! cargo run --release --example serve_client -- --clients 4 --requests 8
@@ -11,8 +13,11 @@
 
 use std::sync::Arc;
 
-use leap::coordinator::server::{Client, Server};
-use leap::coordinator::{BatchPolicy, Coordinator, Executor, NativeExecutor, Router};
+use leap::api::ScanBuilder;
+use leap::coordinator::server::{BinaryClient, Client, Server};
+use leap::coordinator::{
+    BatchPolicy, Coordinator, Executor, NativeExecutor, Router, SessionExecutor,
+};
 use leap::geometry::{Geometry, ParallelBeam, VolumeGeometry};
 use leap::phantom::shepp;
 use leap::projector::{Model, Projector};
@@ -24,7 +29,7 @@ fn main() {
     let clients = args.usize_or("clients", 4);
     let requests = args.usize_or("requests", 8);
 
-    // backends: artifacts (if built) + native
+    // backends: artifacts (if built) + native (v1 ops) + sessions (v2)
     let mut backends: Vec<Arc<dyn Executor>> = Vec::new();
     match leap::runtime::EngineHost::load(args.str_or("artifacts", "artifacts")) {
         Ok(host) => {
@@ -40,6 +45,7 @@ fn main() {
         vg.clone(),
         Model::SF,
     ))));
+    backends.push(Arc::new(SessionExecutor::new()));
     let coord = Arc::new(Coordinator::new(
         Arc::new(Router::new(backends)),
         BatchPolicy { max_batch: 8, max_wait: std::time::Duration::from_millis(4) },
@@ -47,44 +53,91 @@ fn main() {
         2,
     ));
     let server = Server::start("127.0.0.1:0", coord.clone()).unwrap();
-    println!("server on {}", server.addr);
+    println!("server on {} (protocol v2 binary + legacy v1 json)", server.addr);
 
+    // the in-process reference every served byte must match exactly
+    let scan = ScanBuilder::new()
+        .geometry(Geometry::Parallel(g.clone()))
+        .volume(vg.clone())
+        .model(Model::SF)
+        .build()
+        .unwrap();
     let phantom = shepp::shepp_logan_2d(0.4 * n as f64, 0.02);
     let truth = phantom.rasterize(&vg, 2);
-    let payload = Arc::new(truth.data);
+    let payload = Arc::new(truth.data.clone());
+    let reference = Arc::new(scan.forward(&payload).unwrap());
 
+    // ── protocol v2: one session handshake, then raw tensor frames ──
     let t0 = std::time::Instant::now();
     let addr = server.addr;
+    let cfg = scan.config();
     let mut handles = Vec::new();
     for c in 0..clients {
         let payload = payload.clone();
+        let reference = reference.clone();
+        let cfg = cfg.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut client = BinaryClient::connect(&addr).unwrap();
+            let session = client.open_session(&cfg, Model::SF, None).unwrap();
+            let mut latencies = Vec::new();
+            for _ in 0..requests {
+                let t = std::time::Instant::now();
+                let sino = client.forward(session, &payload).unwrap();
+                assert_eq!(
+                    sino, *reference,
+                    "client {c}: served v2 bits must match the in-process scan"
+                );
+                latencies.push(t.elapsed().as_secs_f64());
+            }
+            client.close_session(session).unwrap();
+            latencies
+        }));
+    }
+    let mut v2: Vec<f64> = handles.into_iter().flat_map(|h| h.join().unwrap()).collect();
+    let v2_wall = t0.elapsed().as_secs_f64();
+
+    // ── legacy protocol v1: JSON text floats, per-request envelope ──
+    let t0 = std::time::Instant::now();
+    let mut handles = Vec::new();
+    for c in 0..clients {
+        let payload = payload.clone();
+        let reference = reference.clone();
         handles.push(std::thread::spawn(move || {
             let mut client = Client::connect(&addr).unwrap();
             let mut latencies = Vec::new();
             for _ in 0..requests {
                 let t = std::time::Instant::now();
-                let reply = client.call("native_fp", &[&payload]).unwrap();
-                assert!(reply.get("outputs").is_some(), "client {c}: {reply}");
+                let sino = client.call_tensor("native_fp", &payload).unwrap();
+                assert_eq!(
+                    sino, *reference,
+                    "client {c}: served v1 bits must match the in-process scan"
+                );
                 latencies.push(t.elapsed().as_secs_f64());
             }
             latencies
         }));
     }
-    let mut all: Vec<f64> = handles.into_iter().flat_map(|h| h.join().unwrap()).collect();
-    let wall = t0.elapsed().as_secs_f64();
-    all.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let total = all.len();
-    let q = |p: f64| all[((total as f64 - 1.0) * p) as usize];
-    println!(
-        "{total} projection requests over {clients} clients in {wall:.2}s → {:.1} req/s",
-        total as f64 / wall
-    );
-    println!(
-        "latency: p50 {:.1} ms  p90 {:.1} ms  p99 {:.1} ms",
-        q(0.5) * 1e3,
-        q(0.9) * 1e3,
-        q(0.99) * 1e3
-    );
+    let mut v1: Vec<f64> = handles.into_iter().flat_map(|h| h.join().unwrap()).collect();
+    let v1_wall = t0.elapsed().as_secs_f64();
+
+    let report = |name: &str, all: &mut Vec<f64>, wall: f64| {
+        all.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let total = all.len();
+        let q = |p: f64| all[((total as f64 - 1.0) * p) as usize];
+        println!(
+            "{name}: {total} requests over {clients} clients in {wall:.2}s → {:.1} req/s \
+             (p50 {:.1} ms  p90 {:.1} ms  p99 {:.1} ms)",
+            total as f64 / wall,
+            q(0.5) * 1e3,
+            q(0.9) * 1e3,
+            q(0.99) * 1e3
+        );
+    };
+    report("v2 binary sessions ", &mut v2, v2_wall);
+    report("v1 json per-request", &mut v1, v1_wall);
+    println!("both protocols bit-identical to the in-process plan path ✓");
+    println!("v2 speedup over v1: {:.2}×", v1_wall / v2_wall);
+
     let mut stats_client = Client::connect(&addr).unwrap();
     let stats = stats_client.stats().unwrap();
     println!("server telemetry: {}", stats.get("stats").unwrap());

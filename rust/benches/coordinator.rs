@@ -8,8 +8,9 @@
 use std::sync::Arc;
 use std::time::Duration;
 
+use leap::api::LeapError;
 use leap::bench_harness::{append_results, Bench};
-use leap::coordinator::{BatchPolicy, Coordinator, Executor, NativeExecutor, Request, Router};
+use leap::coordinator::{BatchPolicy, Coordinator, Executor, NativeExecutor, Op, Request, Router};
 use leap::geometry::{Geometry, ParallelBeam, VolumeGeometry};
 use leap::projector::{Model, Projector};
 
@@ -17,11 +18,11 @@ use leap::projector::{Model, Projector};
 struct NullExecutor;
 
 impl Executor for NullExecutor {
-    fn execute(&self, _op: &str, inputs: &[&[f32]]) -> anyhow::Result<Vec<Vec<f32>>> {
+    fn execute(&self, _op: &Op, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>, LeapError> {
         Ok(vec![vec![inputs.len() as f32]])
     }
-    fn ops(&self) -> Vec<String> {
-        vec!["null".into()]
+    fn ops(&self) -> Vec<Op> {
+        vec![Op::Artifact("null".into())]
     }
 }
 

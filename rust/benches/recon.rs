@@ -4,17 +4,22 @@
 //!
 //! Run: `cargo bench --bench recon`
 //!
-//! Every measurement is appended as a JSON line to `BENCH_PR3.json` at
+//! Every measurement is appended as a JSON line to `BENCH_PR4.json` at
 //! the repo root (the perf trajectory file; earlier PRs' history lives
-//! in `BENCH_PR2.json`) in addition to `target/bench_results.jsonl`.
-//! Set `LEAP_BENCH_SMOKE=1` to run one iteration of everything (the CI
-//! smoke step — including the batched-coordinator case).
+//! in `BENCH_PR2.json`/`BENCH_PR3.json`) in addition to
+//! `target/bench_results.jsonl`. Set `LEAP_BENCH_SMOKE=1` to run one
+//! iteration of everything (the CI smoke step — including the
+//! batched-coordinator and wire-protocol cases).
 
 use std::sync::Arc;
 use std::time::Duration;
 
 use leap::bench_harness::{append_results, append_results_to, smoke_mode, Bench};
-use leap::coordinator::{BatchPolicy, Coordinator, NativeExecutor, Request};
+use leap::coordinator::server::{BinaryClient, Client, Server};
+use leap::coordinator::{
+    BatchPolicy, Coordinator, Executor, NativeExecutor, Request, Router, SessionExecutor,
+};
+use leap::geometry::config::ScanConfig;
 use leap::geometry::{
     ConeBeam, DetectorShape, FanBeam, Geometry, ModularBeam, ParallelBeam, VolumeGeometry,
 };
@@ -26,7 +31,7 @@ use leap::{Sino, Vol3};
 
 /// Where the perf trajectory lives: the repo root, independent of the
 /// working directory cargo gives the bench binary.
-const TRAJECTORY: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_PR3.json");
+const TRAJECTORY: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_PR4.json");
 
 /// The pre-`ProjectionPlan` SIRT loop: every `A`/`Aᵀ` application goes
 /// through the direct path, re-deriving per-view geometry (trig, SF
@@ -414,6 +419,95 @@ fn main() {
     );
     all.push(m_seq);
     all.push(m_bat);
+
+    // ── wire protocols: v2 binary sessions vs v1 JSON per-request ──
+    // The same 8×native_fp workload through the real TCP stack on both
+    // protocols. v1 re-sends every f32 as decimal JSON text against a
+    // statically-configured backend; v2 registers the scan once over the
+    // session handshake, then streams 24-byte headers + raw LE f32
+    // tensors. Outputs are asserted bit-identical to the in-process plan
+    // path on every request, so the row isolates pure wire overhead.
+    let wire_backends: Vec<Arc<dyn Executor>> = vec![
+        Arc::new(NativeExecutor::new(ps.clone())),
+        Arc::new(SessionExecutor::new()),
+    ];
+    let wire_coord = Arc::new(Coordinator::new(
+        Arc::new(Router::new(wire_backends)),
+        BatchPolicy { max_batch: nreq, max_wait: Duration::from_millis(2) },
+        1 << 30,
+        1,
+    ));
+    let server = Server::start("127.0.0.1:0", wire_coord.clone()).expect("bench server");
+    let cfg = ScanConfig { geometry: Geometry::Parallel(gs.clone()), volume: vgs.clone() };
+
+    let mut v1_client = Client::connect(&server.addr).expect("v1 client");
+    let run_v1 = |client: &mut Client| {
+        for _ in 0..nreq {
+            let sino = client.call_tensor("native_fp", &vol_in).expect("v1 reply");
+            assert_eq!(sino, reference, "v1 JSON must stay bit-identical");
+        }
+    };
+    run_v1(&mut v1_client); // warm (plan fetch + connection)
+    let mut m_v1 = bench.run(&format!("wire {nreq}×native_fp v1 json per-request"), || {
+        run_v1(&mut v1_client)
+    });
+    m_v1.notes.push(("req_per_s".into(), nreq as f64 / m_v1.mean_s));
+    m_v1.print();
+
+    let mut v2_client = BinaryClient::connect(&server.addr).expect("v2 client");
+    let session = v2_client
+        .open_session(&cfg, Model::SF, None)
+        .expect("v2 session handshake");
+    let run_v2 = |client: &mut BinaryClient| {
+        for _ in 0..nreq {
+            let sino = client.forward(session, &vol_in).expect("v2 reply");
+            assert_eq!(sino, reference, "v2 binary must stay bit-identical");
+        }
+    };
+    run_v2(&mut v2_client); // warm
+    let mut m_v2 = bench.run(&format!("wire {nreq}×native_fp v2 binary session"), || {
+        run_v2(&mut v2_client)
+    });
+    let speedup_v2 = m_v1.mean_s / m_v2.mean_s;
+    m_v2.notes.push(("req_per_s".into(), nreq as f64 / m_v2.mean_s));
+    m_v2.notes.push(("speedup_v2_binary_vs_v1_json".into(), speedup_v2));
+    // wire cost per request (request direction): v2 = fixed header +
+    // tiny meta + 4 B/sample; v1 = the JSON text it actually sends
+    let v2_request_bytes = leap::coordinator::wire::encode_frame(
+        &leap::coordinator::request::request_to_frame(
+            1,
+            &leap::coordinator::Op::SessionFp(session),
+            vol_in.clone(),
+        ),
+    )
+    .expect("frame within wire caps")
+    .len();
+    let v1_request_bytes = {
+        use leap::util::json::Json;
+        Json::obj(vec![
+            ("id", Json::Num(1.0)),
+            ("op", Json::Str("native_fp".into())),
+            (
+                "inputs",
+                Json::Arr(vec![Json::Arr(
+                    vol_in.iter().map(|&x| Json::Num(x as f64)).collect(),
+                )]),
+            ),
+        ])
+        .to_string()
+        .len()
+    };
+    m_v2.notes.push(("v2_request_bytes".into(), v2_request_bytes as f64));
+    m_v2.notes.push(("v1_request_bytes".into(), v1_request_bytes as f64));
+    m_v2.print();
+    v2_client.close_session(session).expect("close session");
+    println!(
+        "    → v2 binary sessions vs v1 json: {speedup_v2:.2}× on {nreq}×native_fp \
+         ({v2_request_bytes} B vs {v1_request_bytes} B per request)"
+    );
+    all.push(m_v1);
+    all.push(m_v2);
+    drop(server);
 
     append_results(&all);
     append_results_to(TRAJECTORY, &all);

@@ -1,0 +1,191 @@
+//! The typed error surface of the front-door API and the wire protocol.
+//!
+//! Every condition a caller can trigger with user-supplied data — wrong
+//! buffer lengths, degenerate geometry, malformed frames, over-budget
+//! jobs — surfaces as a [`LeapError`] variant instead of a panic, both
+//! from [`crate::api`] entry points and across the coordinator's wire
+//! path. Each variant carries a stable numeric wire code
+//! ([`LeapError::code`], specified in `docs/PROTOCOL.md`) so protocol-v2
+//! error frames stay typed end to end: a server-side `ShapeMismatch`
+//! arrives at the client as a [`LeapError`] with
+//! [`codes::SHAPE_MISMATCH`], not as an opaque string.
+
+use std::fmt;
+
+/// Stable wire codes for [`LeapError`] variants (protocol v2 error
+/// frames carry these in their `code` meta field — see
+/// `docs/PROTOCOL.md`). Codes are append-only: never renumber.
+pub mod codes {
+    pub const BACKEND: u16 = 0;
+    pub const PROTOCOL: u16 = 1;
+    pub const VERSION_MISMATCH: u16 = 2;
+    pub const UNKNOWN_OP: u16 = 3;
+    pub const SHAPE_MISMATCH: u16 = 4;
+    pub const INVALID_GEOMETRY: u16 = 5;
+    pub const BUDGET_EXCEEDED: u16 = 6;
+    pub const UNKNOWN_SESSION: u16 = 7;
+    pub const INVALID_ARGUMENT: u16 = 8;
+    pub const UNSUPPORTED: u16 = 9;
+    pub const IO: u16 = 10;
+}
+
+/// The typed error of the `leap::api` surface and the serving wire path.
+#[derive(Clone, Debug, PartialEq)]
+pub enum LeapError {
+    /// A user-supplied buffer does not have the element count the scan
+    /// requires (`what` names the buffer: "volume", "sinogram", …).
+    ShapeMismatch { what: &'static str, expected: usize, got: usize },
+    /// A scan description is degenerate (zero-sized grids, non-positive
+    /// pitches, non-finite values, inconsistent distances, …).
+    InvalidGeometry(String),
+    /// A solver/loss option is out of its valid range.
+    InvalidArgument(String),
+    /// The operation is well-formed but not available for this scan
+    /// (e.g. FBP on a modular geometry).
+    Unsupported(String),
+    /// The job can never fit the coordinator's memory budget.
+    BudgetExceeded { needed: usize, cap: usize },
+    /// A malformed or truncated wire frame / request document.
+    Protocol(String),
+    /// The peer speaks an unsupported protocol version.
+    VersionMismatch { got: u8, want: u8 },
+    /// No backend provides the requested operation.
+    UnknownOp(String),
+    /// A request referenced a session id that is not open.
+    UnknownSession(u64),
+    /// The executing backend failed for a reason of its own.
+    Backend(String),
+    /// An I/O error on the wire.
+    Io(String),
+    /// An error reported by a remote server whose wire code has no
+    /// lossless local reconstruction; `code` preserves the typed wire
+    /// code (see [`codes`]).
+    Remote { code: u16, message: String },
+}
+
+impl LeapError {
+    /// The stable wire code of this error (see [`codes`]).
+    pub fn code(&self) -> u16 {
+        match self {
+            LeapError::Backend(_) => codes::BACKEND,
+            LeapError::Protocol(_) => codes::PROTOCOL,
+            LeapError::VersionMismatch { .. } => codes::VERSION_MISMATCH,
+            LeapError::UnknownOp(_) => codes::UNKNOWN_OP,
+            LeapError::ShapeMismatch { .. } => codes::SHAPE_MISMATCH,
+            LeapError::InvalidGeometry(_) => codes::INVALID_GEOMETRY,
+            LeapError::BudgetExceeded { .. } => codes::BUDGET_EXCEEDED,
+            LeapError::UnknownSession(_) => codes::UNKNOWN_SESSION,
+            LeapError::InvalidArgument(_) => codes::INVALID_ARGUMENT,
+            LeapError::Unsupported(_) => codes::UNSUPPORTED,
+            LeapError::Io(_) => codes::IO,
+            LeapError::Remote { code, .. } => *code,
+        }
+    }
+
+    /// Reconstruct a typed error from a wire `(code, message)` pair.
+    /// Variants whose state is exactly their message round-trip
+    /// losslessly; the rest keep their typed code in
+    /// [`LeapError::Remote`].
+    pub fn from_wire(code: u16, message: String) -> LeapError {
+        match code {
+            codes::BACKEND => LeapError::Backend(message),
+            codes::PROTOCOL => LeapError::Protocol(message),
+            codes::UNKNOWN_OP => LeapError::UnknownOp(message),
+            codes::INVALID_GEOMETRY => LeapError::InvalidGeometry(message),
+            codes::INVALID_ARGUMENT => LeapError::InvalidArgument(message),
+            codes::UNSUPPORTED => LeapError::Unsupported(message),
+            codes::IO => LeapError::Io(message),
+            _ => LeapError::Remote { code, message },
+        }
+    }
+}
+
+impl fmt::Display for LeapError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            LeapError::ShapeMismatch { what, expected, got } => {
+                write!(f, "shape mismatch: {what} needs {expected} elements, got {got}")
+            }
+            LeapError::InvalidGeometry(m) => write!(f, "invalid geometry: {m}"),
+            LeapError::InvalidArgument(m) => write!(f, "invalid argument: {m}"),
+            LeapError::Unsupported(m) => write!(f, "unsupported: {m}"),
+            LeapError::BudgetExceeded { needed, cap } => {
+                write!(f, "job exceeds memory budget ({needed} bytes > cap {cap})")
+            }
+            LeapError::Protocol(m) => write!(f, "protocol error: {m}"),
+            LeapError::VersionMismatch { got, want } => {
+                write!(f, "protocol version mismatch: peer speaks v{got}, this end v{want}")
+            }
+            LeapError::UnknownOp(op) => write!(f, "no backend provides op {op}"),
+            LeapError::UnknownSession(id) => write!(f, "unknown session {id}"),
+            LeapError::Backend(m) => write!(f, "backend error: {m}"),
+            LeapError::Io(m) => write!(f, "io error: {m}"),
+            LeapError::Remote { code, message } => {
+                write!(f, "remote error (code {code}): {message}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for LeapError {}
+
+impl From<std::io::Error> for LeapError {
+    fn from(e: std::io::Error) -> LeapError {
+        LeapError::Io(e.to_string())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn all_variants() -> Vec<LeapError> {
+        vec![
+            LeapError::ShapeMismatch { what: "volume", expected: 10, got: 3 },
+            LeapError::InvalidGeometry("ncols = 0".into()),
+            LeapError::InvalidArgument("lambda must be positive".into()),
+            LeapError::Unsupported("fbp on modular".into()),
+            LeapError::BudgetExceeded { needed: 100, cap: 10 },
+            LeapError::Protocol("truncated frame".into()),
+            LeapError::VersionMismatch { got: 3, want: 2 },
+            LeapError::UnknownOp("warp".into()),
+            LeapError::UnknownSession(9),
+            LeapError::Backend("pjrt exploded".into()),
+            LeapError::Io("connection reset".into()),
+        ]
+    }
+
+    #[test]
+    fn codes_are_distinct_and_stable() {
+        let mut seen = std::collections::HashSet::new();
+        for e in all_variants() {
+            assert!(seen.insert(e.code()), "duplicate code for {e:?}");
+        }
+        // stable anchors (never renumber)
+        assert_eq!(LeapError::Protocol("x".into()).code(), 1);
+        assert_eq!(
+            LeapError::ShapeMismatch { what: "volume", expected: 1, got: 2 }.code(),
+            4
+        );
+        assert_eq!(LeapError::BudgetExceeded { needed: 1, cap: 0 }.code(), 6);
+    }
+
+    #[test]
+    fn wire_roundtrip_preserves_the_code() {
+        for e in all_variants() {
+            let back = LeapError::from_wire(e.code(), e.to_string());
+            assert_eq!(back.code(), e.code(), "{e:?} → {back:?}");
+        }
+    }
+
+    #[test]
+    fn display_is_descriptive() {
+        let e = LeapError::ShapeMismatch { what: "sinogram", expected: 432, got: 7 };
+        let s = e.to_string();
+        assert!(s.contains("sinogram") && s.contains("432") && s.contains("7"), "{s}");
+        assert!(LeapError::BudgetExceeded { needed: 9, cap: 4 }
+            .to_string()
+            .contains("memory budget"));
+        assert!(LeapError::UnknownOp("warp".into()).to_string().contains("no backend"));
+    }
+}

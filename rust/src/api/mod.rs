@@ -1,0 +1,669 @@
+//! The typed front-door API: validated scans, fallible operations.
+//!
+//! The projector/recon modules are the *kernel layer*: fast, concrete,
+//! and panicking on misuse — the right contract for internal hot loops
+//! whose shapes are proven by construction. Integrating with a training
+//! or serving pipeline needs the opposite contract: every user-supplied
+//! buffer and every scan description is validated up front, and every
+//! failure is a typed, matchable [`LeapError`] — never a panic. This
+//! module is that front door, the shape TorchRadon/CTorch expose to
+//! PyTorch and the one the wire protocol (see
+//! [`crate::coordinator::wire`]) speaks natively:
+//!
+//! * [`ScanBuilder`] — collect geometry + volume + model (+ threads),
+//!   then [`ScanBuilder::build`] validates the whole description
+//!   (non-zero grids, positive pitches, finite values, consistent
+//!   distances) and plans it once, returning a [`Scan`].
+//! * [`Scan`] — a validated scan owning an `Arc<`[`ProjectionPlan`]`>`
+//!   (shared through the process-wide plan cache, so repeated builds of
+//!   the same scan never re-plan). `forward`/`back` run the matched
+//!   pair, [`Scan::solve`] runs any reconstruction [`Solver`], and
+//!   [`Scan::loss_grad`] evaluates a data-fit objective with its exact
+//!   gradient — all returning `Result<_, LeapError>` after checking
+//!   every buffer length. A `Scan` is itself a
+//!   [`crate::ops::LinearOp`], so it drops into the operator layer and
+//!   the generic solver cores directly.
+//!
+//! The panicking entry points ([`crate::projector::Projector::forward`],
+//! the concrete solver functions, …) remain as the kernel layer beneath
+//! this one and are what [`Scan`] dispatches to after validation;
+//! new user-facing code should come through here.
+//!
+//! ```no_run
+//! use leap::api::{ScanBuilder, Solver};
+//! use leap::geometry::{Geometry, ParallelBeam, VolumeGeometry};
+//! use leap::projector::Model;
+//! use leap::recon::Window;
+//!
+//! let scan = ScanBuilder::new()
+//!     .geometry(Geometry::Parallel(ParallelBeam::standard_2d(180, 192, 1.0)))
+//!     .volume(VolumeGeometry::slice2d(128, 128, 1.0))
+//!     .model(Model::SF)
+//!     .build()?;
+//! let sino = scan.forward(&vec![0.01; 128 * 128])?;
+//! let fbp = scan.solve(Solver::Fbp { window: Window::Hann }, &sino)?;
+//! let sirt = scan.solve(Solver::Sirt { iterations: 50, lambda: 1.0, nonneg: true }, &sino)?;
+//! # Ok::<(), leap::api::LeapError>(())
+//! ```
+
+pub mod error;
+
+pub use error::{codes, LeapError};
+
+use std::sync::{Arc, Mutex};
+
+use crate::array::{Sino, Vol3};
+use crate::coordinator::plan_cache;
+use crate::geometry::config::{scan_from_str, ScanConfig};
+use crate::geometry::{Geometry, VolumeGeometry};
+use crate::ops::{LinearOp, Objective, PlanOp, ProjectionLoss, Shape};
+use crate::projector::{Model, ProjectionPlan, Projector};
+use crate::recon;
+use crate::recon::Window;
+
+/// Grids beyond this element count are rejected as degenerate rather
+/// than risking overflow/OOM from wire-supplied configs (2⁴⁰ ≈ 1 T
+/// elements — far above any real scan).
+const MAX_ELEMENTS: u128 = 1 << 40;
+
+/// Validate a volume grid description.
+pub fn validate_volume(vg: &VolumeGeometry) -> Result<(), LeapError> {
+    let bad = |m: String| Err(LeapError::InvalidGeometry(m));
+    if vg.nx == 0 || vg.ny == 0 || vg.nz == 0 {
+        return bad(format!("volume grid must be non-empty (got {}×{}×{})", vg.nx, vg.ny, vg.nz));
+    }
+    if (vg.nx as u128) * (vg.ny as u128) * (vg.nz as u128) > MAX_ELEMENTS {
+        return bad(format!("volume grid too large ({}×{}×{})", vg.nx, vg.ny, vg.nz));
+    }
+    for (name, v) in [("vx", vg.vx), ("vy", vg.vy), ("vz", vg.vz)] {
+        if !(v.is_finite() && v > 0.0) {
+            return bad(format!("voxel pitch {name} must be positive and finite (got {v})"));
+        }
+    }
+    for (name, c) in [("cx", vg.cx), ("cy", vg.cy), ("cz", vg.cz)] {
+        if !c.is_finite() {
+            return bad(format!("volume center {name} must be finite (got {c})"));
+        }
+    }
+    Ok(())
+}
+
+/// Validate a scanner geometry description.
+pub fn validate_geometry(g: &Geometry) -> Result<(), LeapError> {
+    let bad = |m: String| Err(LeapError::InvalidGeometry(m));
+    if g.nviews() == 0 || g.nrows() == 0 || g.ncols() == 0 {
+        return bad(format!(
+            "detector must be non-empty ({} views × {} rows × {} cols)",
+            g.nviews(),
+            g.nrows(),
+            g.ncols()
+        ));
+    }
+    if (g.nviews() as u128) * (g.nrows() as u128) * (g.ncols() as u128) > MAX_ELEMENTS {
+        return bad(format!(
+            "sinogram too large ({}×{}×{})",
+            g.nviews(),
+            g.nrows(),
+            g.ncols()
+        ));
+    }
+    let check_pitch = |name: &str, v: f64| -> Result<(), LeapError> {
+        if v.is_finite() && v > 0.0 {
+            Ok(())
+        } else {
+            Err(LeapError::InvalidGeometry(format!(
+                "detector pitch {name} must be positive and finite (got {v})"
+            )))
+        }
+    };
+    let check_angles = |angles: &[f64]| -> Result<(), LeapError> {
+        match angles.iter().find(|a| !a.is_finite()) {
+            Some(a) => Err(LeapError::InvalidGeometry(format!("non-finite view angle {a}"))),
+            None => Ok(()),
+        }
+    };
+    let check_sod_sdd = |sod: f64, sdd: f64| -> Result<(), LeapError> {
+        if !(sod.is_finite() && sdd.is_finite() && sod > 0.0 && sdd > sod) {
+            Err(LeapError::InvalidGeometry(format!(
+                "need 0 < sod < sdd (got sod {sod}, sdd {sdd})"
+            )))
+        } else {
+            Ok(())
+        }
+    };
+    match g {
+        Geometry::Parallel(p) => {
+            check_pitch("du", p.du)?;
+            check_pitch("dv", p.dv)?;
+            check_angles(&p.angles)?;
+        }
+        Geometry::Fan(f) => {
+            check_pitch("du", f.du)?;
+            check_angles(&f.angles)?;
+            check_sod_sdd(f.sod, f.sdd)?;
+        }
+        Geometry::Cone(c) => {
+            check_pitch("du", c.du)?;
+            check_pitch("dv", c.dv)?;
+            check_angles(&c.angles)?;
+            check_sod_sdd(c.sod, c.sdd)?;
+        }
+        Geometry::Modular(m) => {
+            check_pitch("du", m.du)?;
+            check_pitch("dv", m.dv)?;
+            m.validate().map_err(LeapError::InvalidGeometry)?;
+        }
+    }
+    Ok(())
+}
+
+/// Builder for a validated [`Scan`].
+#[derive(Clone, Debug, Default)]
+pub struct ScanBuilder {
+    geometry: Option<Geometry>,
+    volume: Option<VolumeGeometry>,
+    model: Option<Model>,
+    threads: Option<usize>,
+}
+
+impl ScanBuilder {
+    pub fn new() -> ScanBuilder {
+        ScanBuilder::default()
+    }
+
+    /// Start from a parsed scan config (geometry + volume).
+    pub fn from_config(cfg: &ScanConfig) -> ScanBuilder {
+        ScanBuilder::new().geometry(cfg.geometry.clone()).volume(cfg.volume.clone())
+    }
+
+    /// Start from a JSON scan config document (the same format
+    /// [`crate::geometry::config`] reads from files).
+    pub fn from_config_str(text: &str) -> Result<ScanBuilder, LeapError> {
+        let cfg = scan_from_str(text).map_err(LeapError::InvalidGeometry)?;
+        Ok(ScanBuilder::from_config(&cfg))
+    }
+
+    pub fn geometry(mut self, g: Geometry) -> ScanBuilder {
+        self.geometry = Some(g);
+        self
+    }
+
+    pub fn volume(mut self, vg: VolumeGeometry) -> ScanBuilder {
+        self.volume = Some(vg);
+        self
+    }
+
+    /// Projection model (defaults to [`Model::SF`], the paper's most
+    /// accurate).
+    pub fn model(mut self, m: Model) -> ScanBuilder {
+        self.model = Some(m);
+        self
+    }
+
+    /// Worker threads (defaults to the pool size; `0` clamps to 1).
+    pub fn threads(mut self, n: usize) -> ScanBuilder {
+        self.threads = Some(n);
+        self
+    }
+
+    /// Validate the description and plan the scan. The plan is fetched
+    /// from (or inserted into) the process-wide plan cache, so repeated
+    /// builds of the same scan share one [`ProjectionPlan`].
+    pub fn build(self) -> Result<Scan, LeapError> {
+        let geometry = self
+            .geometry
+            .ok_or_else(|| LeapError::InvalidGeometry("missing geometry".into()))?;
+        let volume =
+            self.volume.ok_or_else(|| LeapError::InvalidGeometry("missing volume".into()))?;
+        validate_geometry(&geometry)?;
+        validate_volume(&volume)?;
+        let mut projector = Projector::new(geometry, volume, self.model.unwrap_or(Model::SF));
+        if let Some(t) = self.threads {
+            projector = projector.with_threads(t);
+        }
+        let plan = plan_cache::global().get_or_plan(&projector);
+        let scratch = Mutex::new((plan.new_vol(), plan.new_sino()));
+        Ok(Scan { projector, plan, scratch })
+    }
+}
+
+/// Reconstruction algorithm selector for [`Scan::solve`].
+#[derive(Clone, Debug)]
+pub enum Solver {
+    /// Analytic: FBP (parallel/fan) or FDK (cone) with an apodized ramp.
+    Fbp { window: Window },
+    /// SIRT with relaxation `lambda` ∈ (0, 2).
+    Sirt { iterations: usize, lambda: f32, nonneg: bool },
+    /// Ordered-subsets SART (`subsets` interleaved view subsets).
+    OsSart { iterations: usize, subsets: usize, lambda: f32, nonneg: bool },
+    /// Conjugate gradients on the normal equations.
+    Cgls { iterations: usize },
+    /// Maximum-likelihood EM (Poisson noise model; `y ≥ 0`).
+    Mlem { iterations: usize },
+    /// FISTA with a total-variation prox (`tv_weight` ≥ 0).
+    FistaTv { iterations: usize, tv_weight: f32 },
+}
+
+/// A validated, planned scan: the typed front door to the matched
+/// projector pair, the solvers and the gradient layer. Owns an
+/// `Arc<ProjectionPlan>` shared with the plan cache, plus one reusable
+/// volume + sinogram scratch pair (under a lock, like
+/// [`PlanOp`]) — so `forward_into`/`back_into` are allocation-free and
+/// `forward`/`back` allocate only their returned buffer. Concurrent
+/// applications on one `Scan` serialize on that scratch; for parallel
+/// callers, build one [`PlanOp`] per thread from [`Scan::plan`] (the
+/// plan itself is shared and immutable).
+pub struct Scan {
+    projector: Projector,
+    plan: Arc<ProjectionPlan>,
+    scratch: Mutex<(Vol3, Sino)>,
+}
+
+impl Scan {
+    /// The underlying (kernel-layer) projector.
+    pub fn projector(&self) -> &Projector {
+        &self.projector
+    }
+
+    /// The shared plan (e.g. to build [`PlanOp`]s or other operators).
+    pub fn plan(&self) -> &Arc<ProjectionPlan> {
+        &self.plan
+    }
+
+    pub fn geometry(&self) -> &Geometry {
+        &self.projector.geom
+    }
+
+    pub fn volume(&self) -> &VolumeGeometry {
+        &self.projector.vg
+    }
+
+    pub fn model(&self) -> Model {
+        self.projector.model
+    }
+
+    /// The scan config this scan was built from (round-trips through
+    /// the JSON config format and the protocol-v2 session handshake).
+    pub fn config(&self) -> ScanConfig {
+        ScanConfig { geometry: self.projector.geom.clone(), volume: self.projector.vg.clone() }
+    }
+
+    /// Element count of a volume buffer for this scan.
+    pub fn volume_len(&self) -> usize {
+        self.projector.vg.num_voxels()
+    }
+
+    /// Element count of a sinogram buffer for this scan.
+    pub fn sino_len(&self) -> usize {
+        let g = &self.projector.geom;
+        g.nviews() * g.nrows() * g.ncols()
+    }
+
+    fn check(&self, what: &'static str, expected: usize, got: usize) -> Result<(), LeapError> {
+        if expected == got {
+            Ok(())
+        } else {
+            Err(LeapError::ShapeMismatch { what, expected, got })
+        }
+    }
+
+    fn sino_from(&self, data: &[f32]) -> Result<Sino, LeapError> {
+        self.check("sinogram", self.sino_len(), data.len())?;
+        let g = &self.projector.geom;
+        Ok(Sino::from_vec(g.nviews(), g.nrows(), g.ncols(), data.to_vec()))
+    }
+
+    /// Forward projection `A·vol` through the shared plan (allocates
+    /// only the returned sinogram).
+    pub fn forward(&self, vol: &[f32]) -> Result<Vec<f32>, LeapError> {
+        self.check("volume", self.volume_len(), vol.len())?;
+        let mut guard = self.scratch.lock().unwrap();
+        let (v, s) = &mut *guard;
+        v.data.copy_from_slice(vol);
+        self.plan.forward_into(v, s);
+        Ok(s.data.clone())
+    }
+
+    /// Forward projection into a caller-owned buffer —
+    /// **allocation-free** (stages through the scan's reusable scratch).
+    pub fn forward_into(&self, vol: &[f32], sino_out: &mut [f32]) -> Result<(), LeapError> {
+        self.check("volume", self.volume_len(), vol.len())?;
+        self.check("sinogram", self.sino_len(), sino_out.len())?;
+        let mut guard = self.scratch.lock().unwrap();
+        let (v, s) = &mut *guard;
+        v.data.copy_from_slice(vol);
+        self.plan.forward_into(v, s);
+        sino_out.copy_from_slice(&s.data);
+        Ok(())
+    }
+
+    /// Matched backprojection `Aᵀ·sino` through the shared plan
+    /// (allocates only the returned volume).
+    pub fn back(&self, sino: &[f32]) -> Result<Vec<f32>, LeapError> {
+        self.check("sinogram", self.sino_len(), sino.len())?;
+        let mut guard = self.scratch.lock().unwrap();
+        let (v, s) = &mut *guard;
+        s.data.copy_from_slice(sino);
+        self.plan.back_into(s, v);
+        Ok(v.data.clone())
+    }
+
+    /// Matched backprojection into a caller-owned buffer —
+    /// **allocation-free** (stages through the scan's reusable scratch).
+    pub fn back_into(&self, sino: &[f32], vol_out: &mut [f32]) -> Result<(), LeapError> {
+        self.check("sinogram", self.sino_len(), sino.len())?;
+        self.check("volume", self.volume_len(), vol_out.len())?;
+        let mut guard = self.scratch.lock().unwrap();
+        let (v, s) = &mut *guard;
+        s.data.copy_from_slice(sino);
+        self.plan.back_into(s, v);
+        vol_out.copy_from_slice(&v.data);
+        Ok(())
+    }
+
+    /// Reconstruct `sino` with `solver`, returning the volume (flat,
+    /// `[z][y][x]` layout). Iterative solvers start from zeros and run
+    /// their generic cores on this scan's shared plan.
+    pub fn solve(&self, solver: Solver, sino: &[f32]) -> Result<Vec<f32>, LeapError> {
+        self.check("sinogram", self.sino_len(), sino.len())?;
+        let check_lambda = |lambda: f32| -> Result<(), LeapError> {
+            if lambda.is_finite() && lambda > 0.0 {
+                Ok(())
+            } else {
+                Err(LeapError::InvalidArgument(format!(
+                    "relaxation lambda must be positive and finite (got {lambda})"
+                )))
+            }
+        };
+        if let Solver::Fbp { window } = solver {
+            return self.fbp(sino, window);
+        }
+        let op = PlanOp::from_plan(self.plan.clone());
+        let x0 = vec![0.0f32; self.volume_len()];
+        match solver {
+            Solver::Fbp { .. } => unreachable!("handled above"),
+            Solver::Sirt { iterations, lambda, nonneg } => {
+                check_lambda(lambda)?;
+                let opts = recon::SirtOpts {
+                    iterations,
+                    lambda,
+                    nonneg,
+                    view_mask: None,
+                    track_residual: false,
+                };
+                Ok(recon::sirt_op(&op, sino, &x0, &opts).0)
+            }
+            Solver::OsSart { iterations, subsets, lambda, nonneg } => {
+                check_lambda(lambda)?;
+                if subsets == 0 {
+                    return Err(LeapError::InvalidArgument(
+                        "os-sart needs at least one subset".into(),
+                    ));
+                }
+                let opts = recon::os_sart::OsSartOpts { iterations, subsets, lambda, nonneg };
+                Ok(recon::os_sart::os_sart_op(&op, sino, &x0, &opts))
+            }
+            Solver::Cgls { iterations } => Ok(recon::cgls::cgls_op(&op, sino, &x0, iterations).0),
+            Solver::Mlem { iterations } => {
+                if let Some(v) = sino.iter().find(|v| !(v.is_finite() && **v >= 0.0)) {
+                    return Err(LeapError::InvalidArgument(format!(
+                        "mlem needs non-negative finite measurements (got {v})"
+                    )));
+                }
+                Ok(recon::mlem::mlem_op(&op, sino, iterations))
+            }
+            Solver::FistaTv { iterations, tv_weight } => {
+                if !(tv_weight.is_finite() && tv_weight >= 0.0) {
+                    return Err(LeapError::InvalidArgument(format!(
+                        "tv weight must be non-negative and finite (got {tv_weight})"
+                    )));
+                }
+                let opts = recon::fista_tv::FistaOpts {
+                    iterations,
+                    tv_weight,
+                    ..Default::default()
+                };
+                Ok(recon::fista_tv::fista_tv_op(&op, sino, &x0, &opts))
+            }
+        }
+    }
+
+    fn fbp(&self, sino: &[f32], window: Window) -> Result<Vec<f32>, LeapError> {
+        let s = self.sino_from(sino)?;
+        let vg = &self.projector.vg;
+        let threads = self.projector.threads;
+        let vol = match &self.projector.geom {
+            Geometry::Parallel(g) => recon::fbp_parallel(vg, g, &s, window, threads),
+            Geometry::Fan(g) => recon::fbp_fan(vg, g, &s, window, threads),
+            Geometry::Cone(g) => recon::fdk(vg, g, &s, window, threads),
+            Geometry::Modular(_) => {
+                return Err(LeapError::Unsupported(
+                    "fbp is not defined for modular geometries (use an iterative solver)".into(),
+                ))
+            }
+        };
+        Ok(vol.data)
+    }
+
+    /// Evaluate a data-fit objective `L(x)` against measurements `data`
+    /// and write its exact gradient (through the matched adjoint) into
+    /// `grad`. Returns the loss value.
+    pub fn loss_grad(
+        &self,
+        objective: Objective,
+        data: &[f32],
+        x: &[f32],
+        grad: &mut [f32],
+    ) -> Result<f64, LeapError> {
+        self.check("measurements", self.sino_len(), data.len())?;
+        self.check("volume", self.volume_len(), x.len())?;
+        self.check("gradient", self.volume_len(), grad.len())?;
+        if objective == Objective::PoissonNll {
+            if let Some(v) = data.iter().find(|v| !(v.is_finite() && **v >= 0.0)) {
+                return Err(LeapError::InvalidArgument(format!(
+                    "poisson nll needs non-negative finite measurements (got {v})"
+                )));
+            }
+        }
+        let op: &dyn LinearOp = &*self.plan;
+        Ok(ProjectionLoss::new(op, data, objective).value_and_grad(x, grad))
+    }
+}
+
+/// A validated scan is directly a [`LinearOp`] (delegating to its shared
+/// plan), so it composes with the operator layer and the generic solver
+/// cores. Note the `LinearOp` contract is the kernel layer's: lengths
+/// are the caller's responsibility there — use the `Scan` methods for
+/// the checked surface.
+impl LinearOp for Scan {
+    fn domain_shape(&self) -> Shape {
+        self.plan.domain_shape()
+    }
+
+    fn range_shape(&self) -> Shape {
+        self.plan.range_shape()
+    }
+
+    fn apply_into(&self, x: &[f32], y: &mut [f32]) {
+        self.plan.apply_into(x, y)
+    }
+
+    fn adjoint_into(&self, y: &[f32], x: &mut [f32]) {
+        self.plan.adjoint_into(y, x)
+    }
+
+    fn apply_batch_into(&self, batch: usize, xs: &[f32], ys: &mut [f32]) {
+        self.plan.apply_batch_into(batch, xs, ys)
+    }
+
+    fn adjoint_batch_into(&self, batch: usize, ys: &[f32], xs: &mut [f32]) {
+        self.plan.adjoint_batch_into(batch, ys, xs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::geometry::ParallelBeam;
+
+    fn builder() -> ScanBuilder {
+        ScanBuilder::new()
+            .geometry(Geometry::Parallel(ParallelBeam::standard_2d(12, 18, 1.0)))
+            .volume(VolumeGeometry::slice2d(12, 12, 1.0))
+            .model(Model::SF)
+            .threads(2)
+    }
+
+    #[test]
+    fn build_validates_and_plans() {
+        let scan = builder().build().unwrap();
+        assert_eq!(scan.volume_len(), 144);
+        assert_eq!(scan.sino_len(), 12 * 18);
+        assert!(scan.plan().matches(scan.projector()));
+    }
+
+    #[test]
+    fn degenerate_descriptions_are_typed_errors() {
+        let zero_cols = ScanBuilder::new()
+            .geometry(Geometry::Parallel(ParallelBeam {
+                nrows: 1,
+                ncols: 0,
+                du: 1.0,
+                dv: 1.0,
+                cu: 0.0,
+                cv: 0.0,
+                angles: vec![0.0],
+            }))
+            .volume(VolumeGeometry::slice2d(4, 4, 1.0))
+            .build();
+        assert!(matches!(zero_cols, Err(LeapError::InvalidGeometry(_))), "{zero_cols:?}");
+
+        let bad_pitch = builder().volume(VolumeGeometry::slice2d(4, 4, -1.0)).build();
+        assert!(matches!(bad_pitch, Err(LeapError::InvalidGeometry(_))));
+
+        let missing = ScanBuilder::new().volume(VolumeGeometry::slice2d(4, 4, 1.0)).build();
+        assert!(matches!(missing, Err(LeapError::InvalidGeometry(_))));
+
+        let bad_sod = ScanBuilder::new()
+            .geometry(Geometry::Fan(crate::geometry::FanBeam::standard(
+                4, 8, 1.0, 100.0, 50.0, // sdd < sod
+            )))
+            .volume(VolumeGeometry::slice2d(4, 4, 1.0))
+            .build();
+        assert!(matches!(bad_sod, Err(LeapError::InvalidGeometry(_))), "{bad_sod:?}");
+    }
+
+    #[test]
+    fn forward_back_match_the_kernel_layer_bit_for_bit() {
+        let scan = builder().build().unwrap();
+        let mut rng = crate::util::rng::Rng::new(3);
+        let mut x = vec![0.0f32; scan.volume_len()];
+        rng.fill_uniform(&mut x, 0.0, 1.0);
+        let via_api = scan.forward(&x).unwrap();
+        let vol = Vol3::from_vec(12, 12, 1, x.clone());
+        assert_eq!(via_api, scan.projector().forward(&vol).data);
+        let mut y = vec![0.0f32; scan.sino_len()];
+        rng.fill_uniform(&mut y, 0.0, 1.0);
+        let back_api = scan.back(&y).unwrap();
+        let sino = Sino::from_vec(12, 1, 18, y.clone());
+        assert_eq!(back_api, scan.projector().back(&sino).data);
+    }
+
+    #[test]
+    fn wrong_lengths_are_shape_mismatches_not_panics() {
+        let scan = builder().build().unwrap();
+        let e = scan.forward(&[1.0, 2.0]).unwrap_err();
+        assert_eq!(e, LeapError::ShapeMismatch { what: "volume", expected: 144, got: 2 });
+        let e = scan.back(&[0.0; 7]).unwrap_err();
+        assert!(matches!(e, LeapError::ShapeMismatch { what: "sinogram", .. }));
+        let e = scan.solve(Solver::Cgls { iterations: 1 }, &[0.0; 3]).unwrap_err();
+        assert!(matches!(e, LeapError::ShapeMismatch { .. }));
+        let mut grad = vec![0.0; 10]; // wrong length
+        let data = vec![0.0; scan.sino_len()];
+        let x = vec![0.0; scan.volume_len()];
+        let e = scan.loss_grad(Objective::LeastSquares, &data, &x, &mut grad).unwrap_err();
+        assert!(matches!(e, LeapError::ShapeMismatch { what: "gradient", .. }));
+    }
+
+    #[test]
+    fn solve_matches_the_concrete_solvers() {
+        let scan = builder().build().unwrap();
+        let truth = crate::phantom::shepp::shepp_logan_2d(5.0, 0.02)
+            .rasterize(scan.volume(), 2);
+        let y = scan.forward(&truth.data).unwrap();
+        let via_api = scan
+            .solve(Solver::Sirt { iterations: 5, lambda: 1.0, nonneg: true }, &y)
+            .unwrap();
+        let sino = Sino::from_vec(12, 1, 18, y.clone());
+        let concrete = recon::sirt(
+            scan.projector(),
+            &sino,
+            &scan.projector().new_vol(),
+            &recon::SirtOpts { iterations: 5, ..Default::default() },
+        );
+        assert_eq!(via_api, concrete.vol.data, "api sirt must be bit-identical");
+
+        let via_fbp = scan.solve(Solver::Fbp { window: Window::Hann }, &y).unwrap();
+        assert_eq!(via_fbp.len(), scan.volume_len());
+
+        let e = scan
+            .solve(Solver::Sirt { iterations: 1, lambda: -1.0, nonneg: true }, &y)
+            .unwrap_err();
+        assert!(matches!(e, LeapError::InvalidArgument(_)));
+        let e = scan
+            .solve(Solver::OsSart { iterations: 1, subsets: 0, lambda: 1.0, nonneg: true }, &y)
+            .unwrap_err();
+        assert!(matches!(e, LeapError::InvalidArgument(_)));
+    }
+
+    #[test]
+    fn loss_grad_matches_the_ops_layer() {
+        let scan = builder().build().unwrap();
+        let mut rng = crate::util::rng::Rng::new(7);
+        let mut x = vec![0.0f32; scan.volume_len()];
+        rng.fill_uniform(&mut x, 0.2, 1.0);
+        let mut truth = vec![0.0f32; scan.volume_len()];
+        rng.fill_uniform(&mut truth, 0.2, 1.0);
+        let b = scan.forward(&truth).unwrap();
+        let mut grad_api = vec![0.0f32; scan.volume_len()];
+        let l_api =
+            scan.loss_grad(Objective::LeastSquares, &b, &x, &mut grad_api).unwrap();
+        let op = PlanOp::from_plan(scan.plan().clone());
+        let mut grad_ops = vec![0.0f32; scan.volume_len()];
+        let l_ops = ProjectionLoss::new(&op, &b, Objective::LeastSquares)
+            .value_and_grad(&x, &mut grad_ops);
+        assert_eq!(l_api, l_ops);
+        assert_eq!(grad_api, grad_ops);
+    }
+
+    #[test]
+    fn scan_is_a_linear_op() {
+        let scan = builder().build().unwrap();
+        let op: &dyn LinearOp = &scan;
+        assert_eq!(op.domain_shape().numel(), scan.volume_len());
+        let x = vec![0.5f32; scan.volume_len()];
+        assert_eq!(op.apply(&x), scan.forward(&x).unwrap());
+    }
+
+    #[test]
+    fn same_scan_shares_one_cached_plan() {
+        let a = builder().build().unwrap();
+        let b = builder().build().unwrap();
+        assert!(Arc::ptr_eq(a.plan(), b.plan()));
+    }
+
+    #[test]
+    fn config_str_roundtrip() {
+        let scan = ScanBuilder::from_config_str(
+            r#"{"geometry": {"type": "parallel", "ncols": 8, "nviews": 6},
+                "volume": {"nx": 8}}"#,
+        )
+        .unwrap()
+        .build()
+        .unwrap();
+        assert_eq!(scan.sino_len(), 48);
+        let again = ScanBuilder::from_config(&scan.config()).build().unwrap();
+        assert_eq!(again.sino_len(), 48);
+        assert!(ScanBuilder::from_config_str("not json").is_err());
+    }
+}

@@ -12,6 +12,7 @@
 use std::collections::VecDeque;
 use std::time::{Duration, Instant};
 
+use super::op::Op;
 use super::request::Request;
 
 #[derive(Clone, Debug)]
@@ -32,7 +33,9 @@ impl Default for BatchPolicy {
 /// [`crate::ops::LinearOp::apply_batch_into`] application.
 #[derive(Debug)]
 pub struct Batch {
-    pub op: String,
+    /// The typed op every member shares (batch identity is `Op`
+    /// equality, so two protocol-v2 sessions never mix in one batch).
+    pub op: Op,
     pub requests: Vec<Request>,
 }
 
@@ -137,10 +140,10 @@ mod tests {
             b.push(req(id, op));
         }
         let first = b.pop_ready(Instant::now()).unwrap();
-        assert_eq!(first.op, "a");
+        assert_eq!(first.op, Op::Artifact("a".into()));
         assert_eq!(first.requests.iter().map(|r| r.id).collect::<Vec<_>>(), vec![1, 3, 4]);
         let second = b.pop_ready(Instant::now()).unwrap();
-        assert_eq!(second.op, "b");
+        assert_eq!(second.op, Op::Artifact("b".into()));
         assert_eq!(second.requests.iter().map(|r| r.id).collect::<Vec<_>>(), vec![2, 5]);
         assert!(b.is_empty());
     }
@@ -199,13 +202,13 @@ mod tests {
                     next_id += 1;
                 } else if let Some(batch) = b.pop_ready(Instant::now()) {
                     for r in batch.requests {
-                        emitted.push((batch.op.clone(), r.id));
+                        emitted.push((batch.op.label(), r.id));
                     }
                 }
             }
             for batch in b.drain_all() {
                 for r in batch.requests {
-                    emitted.push((batch.op.clone(), r.id));
+                    emitted.push((batch.op.label(), r.id));
                 }
             }
             // exactly once

@@ -1,23 +1,40 @@
 //! The serving layer: request router, dynamic batcher, worker pool and
 //! memory-budget admission control over the projection backends.
 //!
-//! Two backends implement [`Executor`]:
-//! * [`crate::runtime::Engine`] — the AOT JAX/Pallas artifacts via PJRT
-//!   (fixed shapes, Python never on this path);
-//! * [`NativeExecutor`] — the Rust on-the-fly projectors (any geometry).
+//! Operations are typed end to end: a [`Request`] carries an [`Op`]
+//! (never a free string), the [`batcher::Batcher`] groups by `Op`
+//! equality, the [`Router`] asks each backend [`Executor::accepts`], and
+//! executors match on the enum. Failures are typed too — every backend
+//! returns `Result<_, `[`crate::api::LeapError`]`>`, and the error's
+//! stable wire code survives both protocol versions.
 //!
-//! Flow: `submit` → [`batcher::Batcher`] groups by op → a worker claims the
-//! batch, reserves memory from [`budget::MemoryBudget`], executes, records
-//! [`telemetry::Telemetry`], and delivers each [`request::Response`]
-//! through its per-request channel. `examples/serve_client.rs` runs the
-//! whole stack over TCP via [`server`].
+//! Three backends implement [`Executor`]:
+//! * [`crate::runtime::EngineHost`] — the AOT JAX/Pallas artifacts via
+//!   PJRT ([`Op::Artifact`] entry points; fixed shapes, Python never on
+//!   this path);
+//! * [`NativeExecutor`] — the Rust on-the-fly projectors for one
+//!   configured scan ([`Op::NativeFp`]/[`Op::NativeBp`]/[`Op::NativeFbp`]);
+//! * [`session::SessionExecutor`] — protocol-v2 sessions: any scan
+//!   config registered at runtime ([`Op::SessionFp`]`(id)`, …), each
+//!   pinned to its cached plan.
+//!
+//! Flow: `submit` → [`batcher::Batcher`] groups by op → a worker claims
+//! the batch, reserves memory from [`budget::MemoryBudget`], executes,
+//! records [`telemetry::Telemetry`], and delivers each
+//! [`request::Response`] through its per-request channel.
+//! `examples/serve_client.rs` runs the whole stack over TCP via
+//! [`server`], speaking both wire protocols (see [`wire`] and
+//! `docs/PROTOCOL.md`).
 
 pub mod batcher;
 pub mod budget;
+pub mod op;
 pub mod plan_cache;
 pub mod request;
 pub mod server;
+pub mod session;
 pub mod telemetry;
+pub mod wire;
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -25,18 +42,22 @@ use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
-use anyhow::Result;
+use crate::api::LeapError;
 
 pub use batcher::{BatchPolicy, Batcher};
 pub use budget::MemoryBudget;
+pub use op::Op;
 pub use plan_cache::PlanCache;
 pub use request::{Request, Response};
+pub use session::{SessionExecutor, SessionRegistry};
 pub use telemetry::Telemetry;
 
 /// A projection backend the coordinator can route to.
 pub trait Executor: Send + Sync {
-    /// Execute `op` on the given inputs, returning the outputs.
-    fn execute(&self, op: &str, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>>;
+    /// Execute `op` on the given inputs, returning the outputs. Every
+    /// failure — wrong shapes, unknown ops, backend faults — is a typed
+    /// [`LeapError`], never a panic.
+    fn execute(&self, op: &Op, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>, LeapError>;
     /// Execute a closed batch of same-op requests' input sets in one
     /// backend call, returning exactly one result per item (order
     /// preserved; a bad item fails alone, never the batch). The default
@@ -44,31 +65,51 @@ pub trait Executor: Send + Sync {
     /// path — [`NativeExecutor`] runs projector batches as **one**
     /// [`crate::ops::LinearOp::apply_batch_into`] (one plan fetch, one
     /// pool dispatch over the stacked inputs) — override it.
-    fn execute_batch(&self, op: &str, items: &[Vec<&[f32]>]) -> Vec<Result<Vec<Vec<f32>>>> {
+    fn execute_batch(
+        &self,
+        op: &Op,
+        items: &[Vec<&[f32]>],
+    ) -> Vec<Result<Vec<Vec<f32>>, LeapError>> {
         items.iter().map(|inputs| self.execute(op, inputs)).collect()
     }
     /// Estimated output bytes for admission control.
-    fn output_bytes_hint(&self, op: &str, input_bytes: usize) -> usize {
+    fn output_bytes_hint(&self, op: &Op, input_bytes: usize) -> usize {
         let _ = op;
         input_bytes
     }
-    /// Operations this backend accepts (for routing/diagnostics).
-    fn ops(&self) -> Vec<String>;
+    /// Whether this backend can execute `op`. The default consults the
+    /// static [`Executor::ops`] list; backends with dynamic op spaces
+    /// (sessions) override it.
+    fn accepts(&self, op: &Op) -> bool {
+        self.ops().iter().any(|o| o == op)
+    }
+    /// Statically-known operations (for `__ops` diagnostics; routing
+    /// goes through [`Executor::accepts`]).
+    fn ops(&self) -> Vec<Op>;
 }
 
 impl Executor for crate::runtime::EngineHost {
-    fn execute(&self, op: &str, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
-        self.run(op, inputs)
+    fn execute(&self, op: &Op, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>, LeapError> {
+        match op {
+            Op::Artifact(name) => {
+                self.run(name, inputs).map_err(|e| LeapError::Backend(format!("{e:#}")))
+            }
+            other => Err(LeapError::UnknownOp(other.label())),
+        }
     }
 
-    fn output_bytes_hint(&self, op: &str, _input_bytes: usize) -> usize {
-        self.shapes(op)
-            .map(|(_, outs)| outs.iter().map(|s| s.iter().product::<usize>() * 4).sum())
-            .unwrap_or(0)
+    fn output_bytes_hint(&self, op: &Op, _input_bytes: usize) -> usize {
+        match op {
+            Op::Artifact(name) => self
+                .shapes(name)
+                .map(|(_, outs)| outs.iter().map(|s| s.iter().product::<usize>() * 4).sum())
+                .unwrap_or(0),
+            _ => 0,
+        }
     }
 
-    fn ops(&self) -> Vec<String> {
-        self.entry_names().into_iter().map(|s| s.to_string()).collect()
+    fn ops(&self) -> Vec<Op> {
+        self.entry_names().into_iter().map(|s| Op::Artifact(s.to_string())).collect()
     }
 }
 
@@ -77,8 +118,8 @@ impl Executor for crate::runtime::EngineHost {
 /// [`crate::projector::ProjectionPlan`] so every served projection skips
 /// per-view re-planning; plans are shared across executors for the same
 /// scan config through the [`plan_cache::global`] cache, and built
-/// lazily on the first `native_fp`/`native_bp` request so FBP-only
-/// workloads never pay for (or pin) a plan.
+/// lazily on the first [`Op::NativeFp`]/[`Op::NativeBp`] request so
+/// FBP-only workloads never pay for (or pin) a plan.
 pub struct NativeExecutor {
     pub projector: crate::projector::Projector,
     plan: std::sync::OnceLock<Arc<crate::projector::ProjectionPlan>>,
@@ -91,8 +132,10 @@ impl NativeExecutor {
         NativeExecutor { projector, plan: std::sync::OnceLock::new() }
     }
 
-    /// Build an executor around an explicit plan (e.g. from a scoped
-    /// [`PlanCache`]). Panics if the plan describes a different scan.
+    /// Build an executor around an explicit plan (e.g. a validated
+    /// [`crate::api::Scan`]'s — the session path). Panics if the plan
+    /// describes a different scan; callers construct both from one
+    /// config, so a mismatch is a programming error, not user input.
     pub fn with_plan(
         projector: crate::projector::Projector,
         plan: Arc<crate::projector::ProjectionPlan>,
@@ -107,38 +150,56 @@ impl NativeExecutor {
         self.plan.get_or_init(|| plan_cache::global().get_or_plan(&self.projector))
     }
 
-    fn vol_from(&self, buf: &[f32]) -> Result<crate::array::Vol3> {
+    fn vol_from(&self, buf: &[f32]) -> Result<crate::array::Vol3, LeapError> {
         let vg = &self.projector.vg;
-        anyhow::ensure!(buf.len() == vg.num_voxels(), "volume size mismatch");
+        if buf.len() != vg.num_voxels() {
+            return Err(LeapError::ShapeMismatch {
+                what: "volume",
+                expected: vg.num_voxels(),
+                got: buf.len(),
+            });
+        }
         Ok(crate::array::Vol3::from_vec(vg.nx, vg.ny, vg.nz, buf.to_vec()))
     }
 
-    fn sino_from(&self, buf: &[f32]) -> Result<crate::array::Sino> {
+    fn sino_from(&self, buf: &[f32]) -> Result<crate::array::Sino, LeapError> {
         let g = &self.projector.geom;
         let want = g.nviews() * g.nrows() * g.ncols();
-        anyhow::ensure!(buf.len() == want, "sinogram size mismatch");
+        if buf.len() != want {
+            return Err(LeapError::ShapeMismatch {
+                what: "sinogram",
+                expected: want,
+                got: buf.len(),
+            });
+        }
         Ok(crate::array::Sino::from_vec(g.nviews(), g.nrows(), g.ncols(), buf.to_vec()))
+    }
+
+    fn first_input<'a>(&self, op: &Op, inputs: &[&'a [f32]]) -> Result<&'a [f32], LeapError> {
+        inputs
+            .first()
+            .copied()
+            .ok_or_else(|| LeapError::Protocol(format!("{}: missing input tensor", op.label())))
     }
 }
 
 impl Executor for NativeExecutor {
-    fn execute(&self, op: &str, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
-        anyhow::ensure!(!inputs.is_empty(), "{op}: missing input");
+    fn execute(&self, op: &Op, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>, LeapError> {
         match op {
-            "native_fp" => {
-                let vol = self.vol_from(inputs[0])?;
+            Op::NativeFp => {
+                let vol = self.vol_from(self.first_input(op, inputs)?)?;
                 let mut sino = self.projector.new_sino();
                 self.projector.forward_with_plan(self.plan(), &vol, &mut sino);
                 Ok(vec![sino.data])
             }
-            "native_bp" => {
-                let sino = self.sino_from(inputs[0])?;
+            Op::NativeBp => {
+                let sino = self.sino_from(self.first_input(op, inputs)?)?;
                 let mut vol = self.projector.new_vol();
                 self.projector.back_with_plan(self.plan(), &sino, &mut vol);
                 Ok(vec![vol.data])
             }
-            "native_fbp" => {
-                let sino = self.sino_from(inputs[0])?;
+            Op::NativeFbp => {
+                let sino = self.sino_from(self.first_input(op, inputs)?)?;
                 let vol = match &self.projector.geom {
                     crate::geometry::Geometry::Parallel(g) => crate::recon::fbp_parallel(
                         &self.projector.vg,
@@ -162,12 +223,14 @@ impl Executor for NativeExecutor {
                         self.projector.threads,
                     ),
                     crate::geometry::Geometry::Modular(_) => {
-                        anyhow::bail!("native_fbp unsupported for modular beams")
+                        return Err(LeapError::Unsupported(
+                            "fbp is not defined for modular beams".into(),
+                        ))
                     }
                 };
                 Ok(vec![vol.data])
             }
-            other => anyhow::bail!("unknown native op {other}"),
+            other => Err(LeapError::UnknownOp(other.label())),
         }
     }
 
@@ -179,11 +242,15 @@ impl Executor for NativeExecutor {
     /// bit-identical to the sequential path (thread-split invariance),
     /// so batching is purely a throughput decision. Wrong-sized items
     /// fail individually; the rest still run batched.
-    fn execute_batch(&self, op: &str, items: &[Vec<&[f32]>]) -> Vec<Result<Vec<Vec<f32>>>> {
+    fn execute_batch(
+        &self,
+        op: &Op,
+        items: &[Vec<&[f32]>],
+    ) -> Vec<Result<Vec<Vec<f32>>, LeapError>> {
         use crate::ops::LinearOp;
         let forward = match op {
-            "native_fp" => true,
-            "native_bp" => false,
+            Op::NativeFp => true,
+            Op::NativeBp => false,
             // no batched fast path (FBP, unknown ops): per-item execute
             _ => return items.iter().map(|inputs| self.execute(op, inputs)).collect(),
         };
@@ -195,15 +262,23 @@ impl Executor for NativeExecutor {
         let g = plan.geom();
         let rn = g.nviews() * g.nrows() * g.ncols();
         let (in_len, out_len) = if forward { (dn, rn) } else { (rn, dn) };
-        let mut results: Vec<Option<Result<Vec<Vec<f32>>>>> = Vec::with_capacity(items.len());
+        let mut results: Vec<Option<Result<Vec<Vec<f32>>, LeapError>>> =
+            Vec::with_capacity(items.len());
         let mut stacked: Vec<f32> = Vec::new();
         let mut valid: Vec<usize> = Vec::new();
         for (i, inputs) in items.iter().enumerate() {
             if inputs.is_empty() {
-                results.push(Some(Err(anyhow::anyhow!("{op}: missing input"))));
+                results.push(Some(Err(LeapError::Protocol(format!(
+                    "{}: missing input tensor",
+                    op.label()
+                )))));
             } else if inputs[0].len() != in_len {
                 let what = if forward { "volume" } else { "sinogram" };
-                results.push(Some(Err(anyhow::anyhow!("{what} size mismatch"))));
+                results.push(Some(Err(LeapError::ShapeMismatch {
+                    what,
+                    expected: in_len,
+                    got: inputs[0].len(),
+                })));
             } else {
                 results.push(None);
                 stacked.extend_from_slice(inputs[0]);
@@ -230,13 +305,25 @@ impl Executor for NativeExecutor {
         results.into_iter().map(|r| r.expect("every batch item resolved")).collect()
     }
 
-    fn ops(&self) -> Vec<String> {
-        vec!["native_fp".into(), "native_bp".into(), "native_fbp".into()]
+    fn output_bytes_hint(&self, op: &Op, input_bytes: usize) -> usize {
+        let vol_bytes = self.projector.vg.num_voxels() * 4;
+        let g = &self.projector.geom;
+        let sino_bytes = g.nviews() * g.nrows() * g.ncols() * 4;
+        match op {
+            Op::NativeFp => sino_bytes,
+            Op::NativeBp | Op::NativeFbp => vol_bytes,
+            _ => input_bytes,
+        }
+    }
+
+    fn ops(&self) -> Vec<Op> {
+        vec![Op::NativeFp, Op::NativeBp, Op::NativeFbp]
     }
 }
 
-/// Routes each op to the first backend that advertises it — the standard
-/// deployment runs the PJRT artifact engine alongside the native fallback.
+/// Routes each op to the first backend that accepts it — the standard
+/// deployment runs the PJRT artifact engine alongside the native
+/// executor and the session backend.
 pub struct Router {
     backends: Vec<Arc<dyn Executor>>,
 }
@@ -246,42 +333,47 @@ impl Router {
         Router { backends }
     }
 
-    fn route(&self, op: &str) -> Option<&Arc<dyn Executor>> {
-        self.backends.iter().find(|b| b.ops().iter().any(|o| o == op))
+    fn route(&self, op: &Op) -> Option<&Arc<dyn Executor>> {
+        self.backends.iter().find(|b| b.accepts(op))
     }
 }
 
 impl Executor for Router {
-    fn execute(&self, op: &str, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+    fn execute(&self, op: &Op, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>, LeapError> {
         match self.route(op) {
             Some(b) => b.execute(op, inputs),
-            None => anyhow::bail!("no backend provides op {op} (have: {:?})", self.ops()),
+            None => Err(LeapError::UnknownOp(op.label())),
         }
     }
 
     /// Routed batches stay batched: one route lookup, then the chosen
     /// backend's own `execute_batch` (so the native batched fast path is
     /// reachable behind a router, the standard deployment).
-    fn execute_batch(&self, op: &str, items: &[Vec<&[f32]>]) -> Vec<Result<Vec<Vec<f32>>>> {
+    fn execute_batch(
+        &self,
+        op: &Op,
+        items: &[Vec<&[f32]>],
+    ) -> Vec<Result<Vec<Vec<f32>>, LeapError>> {
         match self.route(op) {
             Some(b) => b.execute_batch(op, items),
-            None => items
-                .iter()
-                .map(|_| Err(anyhow::anyhow!("no backend provides op {op} (have: {:?})", self.ops())))
-                .collect(),
+            None => items.iter().map(|_| Err(LeapError::UnknownOp(op.label()))).collect(),
         }
     }
 
-    fn output_bytes_hint(&self, op: &str, input_bytes: usize) -> usize {
+    fn output_bytes_hint(&self, op: &Op, input_bytes: usize) -> usize {
         self.route(op).map(|b| b.output_bytes_hint(op, input_bytes)).unwrap_or(0)
     }
 
-    fn ops(&self) -> Vec<String> {
+    fn accepts(&self, op: &Op) -> bool {
+        self.route(op).is_some()
+    }
+
+    fn ops(&self) -> Vec<Op> {
         let mut out = Vec::new();
         for b in &self.backends {
             out.extend(b.ops());
         }
-        out.sort();
+        out.sort_by_key(|o| o.label());
         out.dedup();
         out
     }
@@ -413,7 +505,7 @@ fn worker_loop(inner: Arc<Inner>) {
             }
             continue;
         };
-        inner.telemetry.record_batch(&batch.op, batch.len());
+        inner.telemetry.record_batch(&batch.op.label(), batch.len());
         let op = batch.op.clone();
         // pair each live request with its job and budget reservation size
         let mut queue: std::collections::VecDeque<(Job, Request, usize)> = batch
@@ -442,7 +534,7 @@ fn worker_loop(inner: Arc<Inner>) {
                     &inner,
                     job,
                     &req,
-                    Err(anyhow::anyhow!("job exceeds memory budget ({bytes} bytes)")),
+                    Err(LeapError::BudgetExceeded { needed: bytes, cap: inner.budget.cap() }),
                     0,
                     1,
                 );
@@ -469,9 +561,9 @@ fn worker_loop(inner: Arc<Inner>) {
             let mut results = results.into_iter();
             for (job, req, bytes) in group {
                 inner.budget.release(bytes);
-                let result = results
-                    .next()
-                    .unwrap_or_else(|| Err(anyhow::anyhow!("backend returned short batch")));
+                let result = results.next().unwrap_or_else(|| {
+                    Err(LeapError::Backend("backend returned short batch".into()))
+                });
                 respond(&inner, job, &req, result, exec_us, batch_size);
             }
         }
@@ -483,7 +575,7 @@ fn respond(
     inner: &Inner,
     job: Job,
     req: &Request,
-    result: Result<Vec<Vec<f32>>>,
+    result: Result<Vec<Vec<f32>>, LeapError>,
     exec_us: u64,
     batch_size: usize,
 ) {
@@ -502,13 +594,13 @@ fn respond(
             id: job.client_id,
             op: req.op.clone(),
             outputs: vec![],
-            error: Some(format!("{e:#}")),
+            error: Some(e),
             latency_us,
             exec_us,
             batch_size,
         },
     };
-    inner.telemetry.record(&req.op, latency_us, exec_us, response.ok());
+    inner.telemetry.record(&req.op.label(), latency_us, exec_us, response.ok());
     let _ = job.tx.send(response);
 }
 
@@ -521,20 +613,27 @@ pub(crate) mod test_support {
     pub struct MockExecutor;
 
     impl Executor for MockExecutor {
-        fn execute(&self, op: &str, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
-            match op {
+        fn execute(&self, op: &Op, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>, LeapError> {
+            let Op::Artifact(name) = op else {
+                return Err(LeapError::UnknownOp(op.label()));
+            };
+            match name.as_str() {
                 "echo" => Ok(inputs.iter().map(|b| b.iter().map(|&x| 2.0 * x).collect()).collect()),
                 "slow" => {
                     std::thread::sleep(Duration::from_millis(5));
                     Ok(inputs.iter().map(|b| b.to_vec()).collect())
                 }
-                "fail" => anyhow::bail!("mock failure"),
-                other => anyhow::bail!("unknown op {other}"),
+                "fail" => Err(LeapError::Backend("mock failure".into())),
+                other => Err(LeapError::UnknownOp(other.to_string())),
             }
         }
 
-        fn ops(&self) -> Vec<String> {
-            vec!["echo".into(), "slow".into(), "fail".into()]
+        fn ops(&self) -> Vec<Op> {
+            vec![
+                Op::Artifact("echo".into()),
+                Op::Artifact("slow".into()),
+                Op::Artifact("fail".into()),
+            ]
         }
     }
 }
@@ -563,9 +662,12 @@ mod tests {
         let c = coord(1);
         let resp = c.call(Request::new(1, "fail", vec![vec![1.0]]));
         assert!(!resp.ok());
-        assert!(resp.error.as_ref().unwrap().contains("mock failure"));
+        let err = resp.error.as_ref().unwrap();
+        assert!(err.to_string().contains("mock failure"));
+        assert_eq!(err.code(), crate::api::codes::BACKEND);
         let resp = c.call(Request::new(2, "nosuch", vec![]));
         assert!(!resp.ok());
+        assert!(matches!(resp.error, Some(LeapError::UnknownOp(_))));
     }
 
     #[test]
@@ -607,7 +709,9 @@ mod tests {
         let tiny = Coordinator::new(Arc::new(MockExecutor), BatchPolicy::default(), 64, 1);
         let resp = tiny.call(Request::new(1, "echo", vec![vec![0.0; 1000]]));
         assert!(!resp.ok());
-        assert!(resp.error.as_ref().unwrap().contains("memory budget"));
+        let err = resp.error.as_ref().unwrap();
+        assert!(matches!(err, LeapError::BudgetExceeded { .. }), "{err:?}");
+        assert!(err.to_string().contains("memory budget"));
     }
 
     #[test]
@@ -646,12 +750,16 @@ mod tests {
         // one bad item must fail alone without sinking the batch
         let bad = vec![1.0f32; 3];
         items.insert(1, vec![bad.as_slice()]);
-        let results = exec.execute_batch("native_fp", &items);
+        let results = exec.execute_batch(&Op::NativeFp, &items);
         assert_eq!(results.len(), 4);
-        assert!(results[1].is_err(), "wrong-sized item must fail alone");
+        let err = results[1].as_ref().unwrap_err();
+        assert!(
+            matches!(err, LeapError::ShapeMismatch { what: "volume", .. }),
+            "wrong-sized item must fail alone with a typed error: {err:?}"
+        );
         for (slot, i) in [(0usize, 0usize), (2, 1), (3, 2)] {
             let batched = results[slot].as_ref().unwrap();
-            let single = exec.execute("native_fp", &[&vols[i]]).unwrap();
+            let single = exec.execute(&Op::NativeFp, &[&vols[i]]).unwrap();
             assert_eq!(batched[0], single[0], "item {i}");
         }
         // and the matched adjoint batches identically
@@ -664,9 +772,9 @@ mod tests {
             })
             .collect();
         let bp_items: Vec<Vec<&[f32]>> = sinos.iter().map(|s| vec![s.as_slice()]).collect();
-        let bp = exec.execute_batch("native_bp", &bp_items);
+        let bp = exec.execute_batch(&Op::NativeBp, &bp_items);
         for (i, r) in bp.iter().enumerate() {
-            let single = exec.execute("native_bp", &[&sinos[i]]).unwrap();
+            let single = exec.execute(&Op::NativeBp, &[&sinos[i]]).unwrap();
             assert_eq!(r.as_ref().unwrap()[0], single[0], "bp item {i}");
         }
     }
@@ -710,6 +818,30 @@ mod tests {
             snap["native_fp"]
         );
         assert!(max_batch_seen > 1, "at least one multi-request batched execution");
+    }
+
+    #[test]
+    fn router_routes_session_ops_dynamically() {
+        use crate::geometry::{Geometry, ParallelBeam, VolumeGeometry};
+        use crate::geometry::config::ScanConfig;
+        let session_exec = Arc::new(SessionExecutor::new());
+        let registry = session_exec.registry();
+        let router = Router::new(vec![Arc::new(MockExecutor) as Arc<dyn Executor>, session_exec]);
+        let cfg = ScanConfig {
+            geometry: Geometry::Parallel(ParallelBeam::standard_2d(6, 10, 1.0)),
+            volume: VolumeGeometry::slice2d(8, 8, 1.0),
+        };
+        let id = registry.open(&cfg, crate::projector::Model::SF, Some(1)).unwrap();
+        assert!(router.accepts(&Op::SessionFp(id)));
+        let vol = vec![0.5f32; 64];
+        let out = router.execute(&Op::SessionFp(id), &[&vol]).unwrap();
+        assert_eq!(out[0].len(), 60);
+        // still routes the mock's artifact ops
+        assert!(router.accepts(&Op::Artifact("echo".into())));
+        // and unknown ops stay typed
+        let e = router.execute(&Op::Artifact("warp".into()), &[&vol]).unwrap_err();
+        assert!(matches!(e, LeapError::UnknownOp(_)));
+        registry.close(id);
     }
 
     #[test]

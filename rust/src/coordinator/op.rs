@@ -1,0 +1,163 @@
+//! The typed operation enum routed end-to-end through the coordinator.
+//!
+//! Requests used to name their operation with a free string matched at
+//! the executor (`"native_fp"`, …); a typo was a runtime routing error
+//! and every backend re-parsed the string. [`Op`] replaces that:
+//! requests, the batcher, the router and the executors all speak this
+//! enum, and the string form exists only at the wire boundary
+//! ([`Op::parse_wire`] / [`Op::label`]).
+//!
+//! Session variants carry the protocol-v2 session id (see
+//! [`super::session`]): two sessions never batch together (enum equality
+//! is batch identity), while repeated requests on one session do — and
+//! execute against that session's pinned plan.
+
+use crate::api::LeapError;
+
+/// A coordinator operation.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub enum Op {
+    /// Forward projection on the native backend's configured scan.
+    NativeFp,
+    /// Matched backprojection on the native backend's configured scan.
+    NativeBp,
+    /// FBP/FDK reconstruction on the native backend's configured scan.
+    NativeFbp,
+    /// Forward projection on an open protocol-v2 session.
+    SessionFp(u64),
+    /// Matched backprojection on an open protocol-v2 session.
+    SessionBp(u64),
+    /// FBP/FDK reconstruction on an open protocol-v2 session.
+    SessionFbp(u64),
+    /// A named artifact entry point (PJRT backend) or any other
+    /// backend-defined operation.
+    Artifact(String),
+}
+
+impl Op {
+    /// Parse a v1 wire name. Total: unknown names become
+    /// [`Op::Artifact`] and fail at routing time with a typed
+    /// [`LeapError::UnknownOp`] (session ops are v2-only and cannot be
+    /// named in v1).
+    pub fn parse_wire(s: &str) -> Op {
+        match s {
+            "native_fp" => Op::NativeFp,
+            "native_bp" => Op::NativeBp,
+            "native_fbp" => Op::NativeFbp,
+            other => Op::Artifact(other.to_string()),
+        }
+    }
+
+    /// Build an op from protocol-v2 request meta: the short op name plus
+    /// an optional session id.
+    pub fn from_wire(op: &str, session: Option<u64>) -> Result<Op, LeapError> {
+        match session {
+            Some(id) => match op {
+                "fp" | "native_fp" => Ok(Op::SessionFp(id)),
+                "bp" | "native_bp" => Ok(Op::SessionBp(id)),
+                "fbp" | "native_fbp" => Ok(Op::SessionFbp(id)),
+                other => Err(LeapError::UnknownOp(format!("{other} (on session {id})"))),
+            },
+            None => Ok(Op::parse_wire(op)),
+        }
+    }
+
+    /// The telemetry/wire label. Session ops share one label per kind
+    /// (ids are request metadata, not a telemetry dimension).
+    pub fn label(&self) -> String {
+        match self {
+            Op::NativeFp => "native_fp".into(),
+            Op::NativeBp => "native_bp".into(),
+            Op::NativeFbp => "native_fbp".into(),
+            Op::SessionFp(_) => "session_fp".into(),
+            Op::SessionBp(_) => "session_bp".into(),
+            Op::SessionFbp(_) => "session_fbp".into(),
+            Op::Artifact(name) => name.clone(),
+        }
+    }
+
+    /// The protocol-v2 wire fields: short op name + session id.
+    /// Round-trips through [`Op::from_wire`] for every variant.
+    pub fn wire_fields(&self) -> (&str, Option<u64>) {
+        match self {
+            Op::NativeFp => ("native_fp", None),
+            Op::NativeBp => ("native_bp", None),
+            Op::NativeFbp => ("native_fbp", None),
+            Op::SessionFp(id) => ("fp", Some(*id)),
+            Op::SessionBp(id) => ("bp", Some(*id)),
+            Op::SessionFbp(id) => ("fbp", Some(*id)),
+            Op::Artifact(name) => (name, None),
+        }
+    }
+
+    /// For a session op: the session id and the equivalent native op it
+    /// executes as on the session's scan.
+    pub fn session_parts(&self) -> Option<(u64, Op)> {
+        match self {
+            Op::SessionFp(id) => Some((*id, Op::NativeFp)),
+            Op::SessionBp(id) => Some((*id, Op::NativeBp)),
+            Op::SessionFbp(id) => Some((*id, Op::NativeFbp)),
+            _ => None,
+        }
+    }
+}
+
+/// The v1 wire strings convert directly, so existing call sites
+/// (`Request::new(1, "native_fp", …)`) keep working unchanged.
+impl From<&str> for Op {
+    fn from(s: &str) -> Op {
+        Op::parse_wire(s)
+    }
+}
+
+impl From<String> for Op {
+    fn from(s: String) -> Op {
+        Op::parse_wire(&s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    pub fn every_variant() -> Vec<Op> {
+        vec![
+            Op::NativeFp,
+            Op::NativeBp,
+            Op::NativeFbp,
+            Op::SessionFp(1),
+            Op::SessionBp(u64::MAX),
+            Op::SessionFbp(42),
+            Op::Artifact("fp_sf".into()),
+        ]
+    }
+
+    #[test]
+    fn wire_fields_roundtrip_every_variant() {
+        for op in every_variant() {
+            let (name, session) = op.wire_fields();
+            assert_eq!(Op::from_wire(name, session).unwrap(), op);
+        }
+    }
+
+    #[test]
+    fn v1_names_parse_totally() {
+        assert_eq!(Op::parse_wire("native_fp"), Op::NativeFp);
+        assert_eq!(Op::parse_wire("native_bp"), Op::NativeBp);
+        assert_eq!(Op::parse_wire("native_fbp"), Op::NativeFbp);
+        assert_eq!(Op::parse_wire("fp_sf"), Op::Artifact("fp_sf".into()));
+        assert_eq!(Op::from("echo"), Op::Artifact("echo".into()));
+    }
+
+    #[test]
+    fn unknown_session_op_is_typed() {
+        let e = Op::from_wire("warp", Some(3)).unwrap_err();
+        assert!(matches!(e, LeapError::UnknownOp(_)));
+    }
+
+    #[test]
+    fn sessions_do_not_share_batch_identity() {
+        assert_ne!(Op::SessionFp(1), Op::SessionFp(2));
+        assert_eq!(Op::SessionFp(1), Op::SessionFp(1));
+    }
+}

@@ -246,16 +246,37 @@ mod tests {
         let b = tiny.get_or_plan(&projector(6));
         assert!(!Arc::ptr_eq(&a, &b), "bypassed plans are re-planned");
 
-        // a budget that fits roughly one plan keeps evicting the oldest;
-        // both configs individually pass the pre-planning estimate (the
-        // smaller second config especially), but don't fit together
-        let six_bytes = projector(6).plan().approx_heap_bytes();
-        let budget = ProjectionPlan::estimate_heap_bytes(&projector(6)) + 1;
+        // Budget arithmetic derived from the size-of-based estimator the
+        // cache itself consults — sf::parallel_plan_estimate_bytes — not
+        // from a hard-coded bytes-per-view constant, so a plan-layout
+        // change can never silently invalidate this test. The estimate
+        // is exact for pure-2D SF-parallel plans (asserted), so
+        // `estimate + 1` is a budget that fits exactly one six-view plan.
+        let p6 = projector(6);
+        let crate::geometry::Geometry::Parallel(g6) = &p6.geom else {
+            unreachable!("projector() builds parallel beams")
+        };
+        let six_estimate = crate::projector::sf::parallel_plan_estimate_bytes(&p6.vg, g6);
+        assert_eq!(
+            six_estimate,
+            ProjectionPlan::estimate_heap_bytes(&p6),
+            "cache and test must share one estimator definition"
+        );
+        assert_eq!(
+            six_estimate,
+            p6.plan().approx_heap_bytes(),
+            "SF-parallel estimate is exact"
+        );
+        let budget = six_estimate + 1;
         let snug = PlanCache::with_max_bytes(8, budget);
-        snug.get_or_plan(&projector(6));
+        snug.get_or_plan(&p6);
         snug.get_or_plan(&projector(5));
         assert_eq!(snug.len(), 1, "byte bound should have evicted the first plan");
-        assert!(snug.resident_bytes() < six_bytes + snug.get_or_plan(&projector(5)).approx_heap_bytes());
+        assert!(
+            snug.resident_bytes() <= budget,
+            "resident bytes {} must respect the derived budget {budget}",
+            snug.resident_bytes()
+        );
     }
 
     #[test]

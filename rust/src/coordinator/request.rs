@@ -1,27 +1,32 @@
 //! Request/response types for the projection service.
 //!
-//! A request names an operation (an artifact entry point like `fp_sf`, or
-//! a native-projector op like `native_fp`) and carries its f32 input
-//! buffers. Requests arrive over the wire as line-delimited JSON (see
-//! [`super::server`]) or are constructed in-process by the examples and
-//! benches.
+//! A request names a typed operation ([`Op`]) and carries its f32 input
+//! buffers. Requests arrive over the wire as protocol-v2 binary frames
+//! ([`request_from_frame`]), as legacy v1 line-delimited JSON
+//! ([`request_from_json`]), or are constructed in-process by the
+//! examples and benches (`Request::new` accepts the v1 wire strings for
+//! convenience — `"native_fp"` parses to [`Op::NativeFp`]).
 
+use crate::api::LeapError;
 use crate::util::json::Json;
+
+use super::op::Op;
+use super::wire::{Frame, FrameKind};
 
 /// A unit of work submitted to the coordinator.
 #[derive(Clone, Debug)]
 pub struct Request {
     pub id: u64,
-    /// Operation name: artifact entry (`fp_sf`, `bp_sf`, `fbp`,
-    /// `dc_refine`, `complete_sinogram`, `prior_denoise`) or `native_*`.
-    pub op: String,
+    /// The typed operation (native projector op, protocol-v2 session op,
+    /// or a named artifact entry point).
+    pub op: Op,
     pub inputs: Vec<Vec<f32>>,
     /// Submission timestamp (set by the coordinator).
     pub submitted: std::time::Instant,
 }
 
 impl Request {
-    pub fn new(id: u64, op: impl Into<String>, inputs: Vec<Vec<f32>>) -> Request {
+    pub fn new(id: u64, op: impl Into<Op>, inputs: Vec<Vec<f32>>) -> Request {
         Request { id, op: op.into(), inputs, submitted: std::time::Instant::now() }
     }
 
@@ -35,9 +40,11 @@ impl Request {
 #[derive(Clone, Debug)]
 pub struct Response {
     pub id: u64,
-    pub op: String,
+    pub op: Op,
     pub outputs: Vec<Vec<f32>>,
-    pub error: Option<String>,
+    /// The typed failure, if any (its [`LeapError::code`] travels on the
+    /// wire in both protocol versions).
+    pub error: Option<LeapError>,
     /// Total time from submission to completion.
     pub latency_us: u64,
     /// Time spent executing (excludes queueing). For batched execution
@@ -55,32 +62,47 @@ impl Response {
     }
 }
 
-/// Parse a request from its wire JSON (`{"id":1,"op":"fp_sf",
+// ---------------------------------------------------------------------------
+// protocol v1 (line-delimited JSON)
+// ---------------------------------------------------------------------------
+
+/// Parse a request from its v1 wire JSON (`{"id":1,"op":"fp_sf",
 /// "inputs":[[...]]}`).
-pub fn request_from_json(v: &Json) -> Result<Request, String> {
-    let id = v.get_f64("id").ok_or("missing id")? as u64;
-    let op = v.get_str("op").ok_or("missing op")?.to_string();
-    let inputs_json = v.get("inputs").and_then(|a| a.as_arr()).ok_or("missing inputs")?;
+pub fn request_from_json(v: &Json) -> Result<Request, LeapError> {
+    let id = v
+        .get_f64("id")
+        .ok_or_else(|| LeapError::Protocol("missing id".into()))? as u64;
+    let op = v
+        .get_str("op")
+        .ok_or_else(|| LeapError::Protocol("missing op".into()))?;
+    let inputs_json = v
+        .get("inputs")
+        .and_then(|a| a.as_arr())
+        .ok_or_else(|| LeapError::Protocol("missing inputs".into()))?;
     let mut inputs = Vec::with_capacity(inputs_json.len());
     for arr in inputs_json {
-        let vals = arr.as_arr().ok_or("input must be an array")?;
+        let vals = arr
+            .as_arr()
+            .ok_or_else(|| LeapError::Protocol("input must be an array".into()))?;
         let buf: Option<Vec<f32>> = vals.iter().map(|x| x.as_f64().map(|f| f as f32)).collect();
-        inputs.push(buf.ok_or("non-numeric input element")?);
+        inputs.push(buf.ok_or_else(|| LeapError::Protocol("non-numeric input element".into()))?);
     }
-    Ok(Request::new(id, op, inputs))
+    Ok(Request::new(id, Op::parse_wire(op), inputs))
 }
 
-/// Serialize a response to wire JSON.
+/// Serialize a response to v1 wire JSON. Errors carry both the human
+/// message and the stable typed `code`.
 pub fn response_to_json(r: &Response) -> Json {
     let mut fields = vec![
         ("id", Json::Num(r.id as f64)),
-        ("op", Json::Str(r.op.clone())),
+        ("op", Json::Str(r.op.label())),
         ("latency_us", Json::Num(r.latency_us as f64)),
         ("exec_us", Json::Num(r.exec_us as f64)),
         ("batch_size", Json::Num(r.batch_size as f64)),
     ];
     if let Some(e) = &r.error {
-        fields.push(("error", Json::Str(e.clone())));
+        fields.push(("error", Json::Str(e.to_string())));
+        fields.push(("code", Json::Num(e.code() as f64)));
     } else {
         fields.push((
             "outputs",
@@ -95,6 +117,112 @@ pub fn response_to_json(r: &Response) -> Json {
     Json::obj(fields)
 }
 
+// ---------------------------------------------------------------------------
+// protocol v2 (binary frames)
+// ---------------------------------------------------------------------------
+
+/// The v2 Request meta for `op`. Session ids are encoded as decimal
+/// strings — JSON numbers are f64 on this wire and would silently lose
+/// precision above 2^53.
+pub fn request_meta(op: &Op) -> Json {
+    let (name, session) = op.wire_fields();
+    let mut meta = vec![("op", Json::Str(name.to_string()))];
+    if let Some(s) = session {
+        meta.push(("session", Json::Str(s.to_string())));
+    }
+    Json::obj(meta)
+}
+
+/// Build the v2 Request frame for `op` with one input tensor (senders
+/// that already borrow the tensor should prefer
+/// [`crate::coordinator::wire::write_frame_parts`] with
+/// [`request_meta`] — no owned copy).
+pub fn request_to_frame(id: u64, op: &Op, input: Vec<f32>) -> Frame {
+    Frame::new(FrameKind::Request, id, request_meta(op), input)
+}
+
+/// Parse a session id from frame meta: canonically a decimal string
+/// (lossless u64); a JSON number is tolerated for hand-rolled clients
+/// but only exact below 2^53.
+fn session_from_meta(meta: &Json) -> Result<Option<u64>, LeapError> {
+    match meta.get("session") {
+        None => Ok(None),
+        Some(Json::Str(s)) => s
+            .parse::<u64>()
+            .map(Some)
+            .map_err(|_| LeapError::Protocol(format!("bad session id {s:?}"))),
+        Some(Json::Num(n)) => Ok(Some(*n as u64)),
+        Some(other) => Err(LeapError::Protocol(format!(
+            "session must be a decimal string or number, got {other}"
+        ))),
+    }
+}
+
+/// Parse a v2 Request frame into a [`Request`]. The payload is the
+/// single input tensor (native and session ops all take exactly one),
+/// **moved** out of the frame — no copy on the serving hot path.
+pub fn request_from_frame(f: Frame) -> Result<Request, LeapError> {
+    if f.kind != FrameKind::Request {
+        return Err(LeapError::Protocol(format!("expected a Request frame, got {:?}", f.kind)));
+    }
+    let name = f
+        .meta
+        .get_str("op")
+        .ok_or_else(|| LeapError::Protocol("request meta missing op".into()))?;
+    let session = session_from_meta(&f.meta)?;
+    let op = Op::from_wire(name, session)?;
+    Ok(Request::new(f.id, op, vec![f.payload]))
+}
+
+/// Build the v2 reply frame for a completed response: a Response frame
+/// whose payload is the output tensor (**moved**, not copied — the
+/// caller is done with the response), or an Error frame carrying the
+/// typed code. A v2 frame carries exactly one tensor; a multi-output
+/// result (possible for artifact backends) is refused with a typed
+/// error rather than silently truncated — v1 JSON carries them all.
+pub fn response_to_frame(mut r: Response) -> Frame {
+    if r.error.is_none() && r.outputs.len() > 1 {
+        return Frame::error(
+            r.id,
+            &LeapError::Unsupported(format!(
+                "op {} returned {} output tensors; protocol v2 frames carry exactly one \
+                 (use protocol v1 for multi-output ops)",
+                r.op.label(),
+                r.outputs.len()
+            )),
+        );
+    }
+    match &r.error {
+        Some(e) => {
+            let mut f = Frame::error(r.id, e);
+            f.meta = match f.meta {
+                Json::Obj(mut m) => {
+                    m.insert("latency_us".into(), Json::Num(r.latency_us as f64));
+                    Json::Obj(m)
+                }
+                other => other,
+            };
+            f
+        }
+        None => {
+            let (name, session) = r.op.wire_fields();
+            let mut meta = vec![
+                ("op", Json::Str(name.to_string())),
+                ("latency_us", Json::Num(r.latency_us as f64)),
+                ("exec_us", Json::Num(r.exec_us as f64)),
+                ("batch_size", Json::Num(r.batch_size as f64)),
+            ];
+            if let Some(s) = session {
+                meta.push(("session", Json::Str(s.to_string())));
+            }
+            let meta = Json::obj(meta);
+            let payload =
+                if r.outputs.is_empty() { Vec::new() } else { r.outputs.swap_remove(0) };
+            Frame::new(FrameKind::Response, r.id, meta, payload)
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -105,7 +233,7 @@ mod tests {
         let j = parse(r#"{"id": 7, "op": "fp_sf", "inputs": [[1.0, 2.5], [3.0]]}"#).unwrap();
         let r = request_from_json(&j).unwrap();
         assert_eq!(r.id, 7);
-        assert_eq!(r.op, "fp_sf");
+        assert_eq!(r.op, Op::Artifact("fp_sf".into()));
         assert_eq!(r.inputs, vec![vec![1.0, 2.5], vec![3.0]]);
         assert_eq!(r.input_bytes(), 12);
     }
@@ -118,20 +246,150 @@ mod tests {
             r#"{"id": 1, "op": "x"}"#,
             r#"{"id": 1, "op": "x", "inputs": [["a"]]}"#,
         ] {
-            assert!(request_from_json(&parse(s).unwrap()).is_err(), "{s}");
+            let e = request_from_json(&parse(s).unwrap()).unwrap_err();
+            assert!(matches!(e, LeapError::Protocol(_)), "{s}: {e:?}");
         }
     }
 
     #[test]
     fn response_serializes_error_and_ok() {
-        let ok = Response { id: 1, op: "fbp".into(), outputs: vec![vec![1.5]], error: None, latency_us: 10, exec_us: 5, batch_size: 1 };
+        let ok = Response {
+            id: 1,
+            op: Op::NativeFbp,
+            outputs: vec![vec![1.5]],
+            error: None,
+            latency_us: 10,
+            exec_us: 5,
+            batch_size: 1,
+        };
         let s = response_to_json(&ok).to_string();
         assert!(s.contains("\"outputs\""));
         assert!(s.contains("\"batch_size\""));
+        assert!(s.contains("native_fbp"));
         assert!(!s.contains("\"error\""));
-        let err = Response { id: 2, op: "fbp".into(), outputs: vec![], error: Some("bad".into()), latency_us: 1, exec_us: 0, batch_size: 1 };
+        let err = Response {
+            id: 2,
+            op: Op::NativeFbp,
+            outputs: vec![],
+            error: Some(LeapError::Backend("bad".into())),
+            latency_us: 1,
+            exec_us: 0,
+            batch_size: 1,
+        };
         let s = response_to_json(&err).to_string();
         assert!(s.contains("\"error\""));
+        assert!(s.contains("\"code\""));
         assert!(!s.contains("\"outputs\""));
+    }
+
+    #[test]
+    fn v2_request_frame_roundtrips_every_op_variant() {
+        let variants = vec![
+            Op::NativeFp,
+            Op::NativeBp,
+            Op::NativeFbp,
+            Op::SessionFp(3),
+            Op::SessionBp(u64::MAX),
+            Op::SessionFbp(0),
+            Op::Artifact("fp_sf".into()),
+        ];
+        for (i, op) in variants.into_iter().enumerate() {
+            let payload = vec![0.25f32 * i as f32; i + 1];
+            let frame = request_to_frame(77 + i as u64, &op, payload.clone());
+            let decoded = crate::coordinator::wire::decode_frame(
+                &crate::coordinator::wire::encode_frame(&frame).unwrap(),
+            )
+            .unwrap();
+            let req = request_from_frame(decoded).unwrap();
+            assert_eq!(req.op, op, "variant {i}");
+            assert_eq!(req.id, 77 + i as u64);
+            assert_eq!(req.inputs, vec![payload]);
+        }
+    }
+
+    #[test]
+    fn v2_response_frame_carries_tensor_and_error_codes() {
+        let ok = Response {
+            id: 5,
+            op: Op::SessionFp(2),
+            outputs: vec![vec![1.0, -2.0]],
+            error: None,
+            latency_us: 9,
+            exec_us: 4,
+            batch_size: 3,
+        };
+        let f = response_to_frame(ok);
+        assert_eq!(f.kind, FrameKind::Response);
+        assert_eq!(f.payload, vec![1.0, -2.0]);
+        assert_eq!(f.meta.get_f64("batch_size"), Some(3.0));
+        assert_eq!(f.meta.get_str("session"), Some("2"));
+
+        let err = Response {
+            id: 6,
+            op: Op::SessionFp(2),
+            outputs: vec![],
+            error: Some(LeapError::ShapeMismatch { what: "volume", expected: 4, got: 1 }),
+            latency_us: 2,
+            exec_us: 0,
+            batch_size: 1,
+        };
+        let f = response_to_frame(err);
+        assert_eq!(f.kind, FrameKind::Error);
+        assert_eq!(f.to_error().code(), crate::api::codes::SHAPE_MISMATCH);
+    }
+
+    #[test]
+    fn session_ids_above_2_pow_53_survive_the_wire_exactly() {
+        // f64 meta numbers would round 2^53+1 to 2^53; the decimal-string
+        // encoding must carry every u64 exactly
+        for id in [(1u64 << 53) + 1, u64::MAX - 1, u64::MAX] {
+            let op = Op::SessionFp(id);
+            let frame = request_to_frame(9, &op, vec![]);
+            let decoded = crate::coordinator::wire::decode_frame(
+                &crate::coordinator::wire::encode_frame(&frame).unwrap(),
+            )
+            .unwrap();
+            let req = request_from_frame(decoded).unwrap();
+            assert_eq!(req.op, Op::SessionFp(id), "id {id} must survive exactly");
+        }
+        // malformed session ids are typed protocol errors
+        let f = Frame::new(
+            FrameKind::Request,
+            1,
+            Json::obj(vec![
+                ("op", Json::Str("fp".into())),
+                ("session", Json::Str("not-a-number".into())),
+            ]),
+            vec![],
+        );
+        assert!(matches!(request_from_frame(f), Err(LeapError::Protocol(_))));
+    }
+
+    #[test]
+    fn bad_frame_requests_are_typed() {
+        let f = Frame::new(FrameKind::Request, 1, Json::obj(vec![]), vec![1.0]);
+        assert!(matches!(request_from_frame(f), Err(LeapError::Protocol(_))));
+        let f = Frame::new(FrameKind::Hello, 1, Json::Null, vec![]);
+        assert!(matches!(request_from_frame(f), Err(LeapError::Protocol(_))));
+    }
+
+    #[test]
+    fn multi_output_responses_are_refused_on_v2_not_truncated() {
+        let r = Response {
+            id: 8,
+            op: Op::Artifact("loss_grad".into()),
+            outputs: vec![vec![1.0], vec![2.0, 3.0]],
+            error: None,
+            latency_us: 1,
+            exec_us: 1,
+            batch_size: 1,
+        };
+        // v1 JSON carries every output …
+        let j = response_to_json(&r).to_string();
+        assert!(j.contains("outputs"));
+        // … v2 refuses with a typed error instead of truncating
+        let f = response_to_frame(r);
+        assert_eq!(f.kind, FrameKind::Error);
+        assert_eq!(f.to_error().code(), crate::api::codes::UNSUPPORTED);
     }
 }

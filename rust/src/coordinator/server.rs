@@ -1,15 +1,26 @@
-//! Line-delimited JSON TCP server over the coordinator.
+//! TCP server speaking both wire protocols on one port.
 //!
-//! Protocol (one JSON document per line):
+//! **v2 (preferred)** — length-prefixed binary frames with raw
+//! little-endian f32 payloads ([`super::wire`], spec in
+//! `docs/PROTOCOL.md`): Hello version negotiation, an OpenSession
+//! handshake that registers a scan config once (validated, planned,
+//! pinned — [`super::session`]), then per-request 24-byte headers +
+//! tensors. Drive it with [`BinaryClient`].
+//!
+//! **v1 (legacy)** — one JSON document per line:
 //!   → {"id": 1, "op": "fp_sf", "inputs": [[...f32...], ...]}
 //!   ← {"id": 1, "op": "fp_sf", "outputs": [[...]], "latency_us": ..,
 //!      "exec_us": .., "batch_size": ..}
 //!   → {"id": 2, "op": "__stats"}          — telemetry snapshot
 //!   → {"id": 3, "op": "__ops"}            — available operations
+//! Error replies carry the human message plus the stable typed `code`
+//! ([`crate::api::codes`]). Drive it with [`Client`], kept for
+//! compatibility — new clients should speak v2.
 //!
-//! `batch_size` reports how many requests the dynamic batcher executed
-//! together with this one (1 = alone): on the native backend a
-//! multi-request batch ran as one stacked batched projection.
+//! The protocol is sniffed from the first byte of each connection: `{`
+//! (or whitespace) opens a v1 JSON line session, `L` (the frame magic)
+//! opens a v2 binary session. Sessions opened over a v2 connection are
+//! closed when that connection drops.
 //!
 //! Built on std::net + threads (the vendored crate set has no tokio; the
 //! architecture is identical: accept loop → per-connection reader →
@@ -20,11 +31,16 @@ use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 
-use anyhow::Result;
-
-use super::request::{request_from_json, response_to_json};
-use super::Coordinator;
+use crate::api::LeapError;
+use crate::geometry::config::{geometry_to_json, volume_to_json, ScanConfig};
+use crate::projector::Model;
 use crate::util::json::{parse, Json};
+
+use super::op::Op;
+use super::request::{request_from_frame, request_from_json, response_to_frame};
+use super::session::SessionRegistry;
+use super::wire::{self, Frame, FrameKind};
+use super::Coordinator;
 
 /// A running server; dropping stops accepting (existing connections finish).
 pub struct Server {
@@ -36,7 +52,7 @@ pub struct Server {
 impl Server {
     /// Bind `addr` (e.g. "127.0.0.1:0") and serve `coordinator` until
     /// dropped.
-    pub fn start(addr: &str, coordinator: Arc<Coordinator>) -> Result<Server> {
+    pub fn start(addr: &str, coordinator: Arc<Coordinator>) -> Result<Server, LeapError> {
         let listener = TcpListener::bind(addr)?;
         let local = listener.local_addr()?;
         listener.set_nonblocking(true)?;
@@ -74,16 +90,44 @@ impl Drop for Server {
     }
 }
 
-fn handle_conn(stream: TcpStream, coord: Arc<Coordinator>) -> Result<()> {
-    let mut writer = stream.try_clone()?;
-    let reader = BufReader::new(stream);
+fn handle_conn(stream: TcpStream, coord: Arc<Coordinator>) -> Result<(), LeapError> {
+    let writer = stream.try_clone()?;
+    let mut reader = BufReader::new(stream);
+    // sniff the protocol from the first byte without consuming it:
+    // JSON documents open with '{', v2 frames with the "LEAP" magic
+    let first = {
+        let buf = reader.fill_buf()?;
+        match buf.first() {
+            None => return Ok(()), // closed before sending anything
+            Some(&b) => b,
+        }
+    };
+    if first == wire::MAGIC[0] {
+        serve_v2(reader, writer, coord)
+    } else {
+        serve_v1(reader, writer, coord)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// protocol v1: line-delimited JSON
+// ---------------------------------------------------------------------------
+
+fn serve_v1(
+    reader: BufReader<TcpStream>,
+    mut writer: TcpStream,
+    coord: Arc<Coordinator>,
+) -> Result<(), LeapError> {
     for line in reader.lines() {
         let line = line?;
         if line.trim().is_empty() {
             continue;
         }
         let reply = match parse(&line) {
-            Err(e) => Json::obj(vec![("error", Json::Str(format!("bad json: {e}")))]),
+            Err(e) => Json::obj(vec![
+                ("error", Json::Str(format!("bad json: {e}"))),
+                ("code", Json::Num(crate::api::codes::PROTOCOL as f64)),
+            ]),
             Ok(doc) => {
                 let op = doc.get_str("op").unwrap_or("");
                 match op {
@@ -98,6 +142,7 @@ fn handle_conn(stream: TcpStream, coord: Arc<Coordinator>) -> Result<()> {
                             ("stats", coord.telemetry().to_json()),
                             ("queue_depth", Json::Num(coord.queue_depth() as f64)),
                             ("budget_in_flight", Json::Num(coord.budget().in_flight() as f64)),
+                            ("open_sessions", Json::Num(SessionRegistry::global().len() as f64)),
                             ("pool_workers", Json::Num(pool_workers as f64)),
                             ("pool_regions", Json::Num(pool_regions as f64)),
                         ])
@@ -107,13 +152,21 @@ fn handle_conn(stream: TcpStream, coord: Arc<Coordinator>) -> Result<()> {
                         (
                             "ops",
                             Json::Arr(
-                                coord.executor().ops().into_iter().map(Json::Str).collect(),
+                                coord
+                                    .executor()
+                                    .ops()
+                                    .into_iter()
+                                    .map(|o| Json::Str(o.label()))
+                                    .collect(),
                             ),
                         ),
                     ]),
                     _ => match request_from_json(&doc) {
-                        Err(e) => Json::obj(vec![("error", Json::Str(e))]),
-                        Ok(req) => response_to_json(&coord.call(req)),
+                        Err(e) => Json::obj(vec![
+                            ("error", Json::Str(e.to_string())),
+                            ("code", Json::Num(e.code() as f64)),
+                        ]),
+                        Ok(req) => super::request::response_to_json(&coord.call(req)),
                     },
                 }
             }
@@ -123,7 +176,139 @@ fn handle_conn(stream: TcpStream, coord: Arc<Coordinator>) -> Result<()> {
     Ok(())
 }
 
-/// Minimal blocking client for examples/tests.
+// ---------------------------------------------------------------------------
+// protocol v2: binary frames + sessions
+// ---------------------------------------------------------------------------
+
+fn serve_v2(
+    mut reader: BufReader<TcpStream>,
+    mut writer: TcpStream,
+    coord: Arc<Coordinator>,
+) -> Result<(), LeapError> {
+    let registry = SessionRegistry::global();
+    // sessions opened over this connection close with it (plans unpin)
+    let mut opened: Vec<u64> = Vec::new();
+    let result = serve_v2_loop(&mut reader, &mut writer, &coord, registry, &mut opened);
+    for id in opened {
+        registry.close(id);
+    }
+    result
+}
+
+fn serve_v2_loop(
+    reader: &mut BufReader<TcpStream>,
+    writer: &mut TcpStream,
+    coord: &Arc<Coordinator>,
+    registry: &'static SessionRegistry,
+    opened: &mut Vec<u64>,
+) -> Result<(), LeapError> {
+    loop {
+        let frame = match wire::read_frame(reader) {
+            Ok(Some(f)) => f,
+            Ok(None) => return Ok(()), // clean disconnect
+            Err(e) => {
+                // typed reject (version mismatch, malformed frame), then
+                // close: framing cannot be trusted after a bad header
+                let _ = wire::write_frame(writer, &Frame::error(0, &e));
+                return Err(e);
+            }
+        };
+        match frame.kind {
+            FrameKind::Hello => {
+                let reply = Frame::new(
+                    FrameKind::Hello,
+                    frame.id,
+                    Json::obj(vec![
+                        ("version", Json::Num(wire::VERSION as f64)),
+                        ("server", Json::Str("leap".into())),
+                    ]),
+                    Vec::new(),
+                );
+                wire::write_frame(writer, &reply)?;
+            }
+            FrameKind::OpenSession => match registry.open_from_meta(&frame.meta) {
+                Ok(id) => {
+                    opened.push(id);
+                    // the authoritative id is the frame's native u64 id
+                    // field; the meta copy is a decimal string (f64 JSON
+                    // numbers round above 2^53)
+                    let reply = Frame::new(
+                        FrameKind::OpenSession,
+                        id,
+                        Json::obj(vec![("session", Json::Str(id.to_string()))]),
+                        Vec::new(),
+                    );
+                    wire::write_frame(writer, &reply)?;
+                }
+                Err(e) => wire::write_frame(writer, &Frame::error(frame.id, &e))?,
+            },
+            FrameKind::CloseSession => {
+                // only the connection that opened a session may close it:
+                // ids are sequential, so without this check any client
+                // could tear down another connection's session by
+                // guessing (the same UnknownSession reply for
+                // not-yours and never-existed avoids leaking liveness)
+                if opened.contains(&frame.id) && registry.close(frame.id) {
+                    opened.retain(|&i| i != frame.id);
+                    let reply =
+                        Frame::new(FrameKind::CloseSession, frame.id, Json::Null, Vec::new());
+                    wire::write_frame(writer, &reply)?;
+                } else {
+                    let e = LeapError::UnknownSession(frame.id);
+                    wire::write_frame(writer, &Frame::error(frame.id, &e))?;
+                }
+            }
+            FrameKind::Request => {
+                let id = frame.id;
+                match request_from_frame(frame) {
+                    Err(e) => wire::write_frame(writer, &Frame::error(id, &e))?,
+                    Ok(req) => {
+                        // session ops are scoped to the connection that
+                        // opened the session (ids are sequential and
+                        // guessable; answering not-yours identically to
+                        // never-existed leaks neither liveness nor the
+                        // victim scan's shape)
+                        if let Some((sid, _)) = req.op.session_parts() {
+                            if !opened.contains(&sid) {
+                                let e = LeapError::UnknownSession(sid);
+                                wire::write_frame(writer, &Frame::error(id, &e))?;
+                                continue;
+                            }
+                        }
+                        let resp = coord.call(req);
+                        let reply = response_to_frame(resp);
+                        match wire::write_frame(writer, &reply) {
+                            Ok(()) => {}
+                            // an unframeable reply (tensor over the wire
+                            // cap) fails in encode_frame BEFORE any byte
+                            // is written, so the stream is still in sync
+                            // and a typed error reply is safe
+                            Err(e @ LeapError::Protocol(_)) => {
+                                wire::write_frame(writer, &Frame::error(id, &e))?;
+                            }
+                            Err(e) => return Err(e),
+                        }
+                    }
+                }
+            }
+            FrameKind::Response | FrameKind::Error => {
+                let e = LeapError::Protocol(format!(
+                    "unexpected {:?} frame from a client",
+                    frame.kind
+                ));
+                wire::write_frame(writer, &Frame::error(frame.id, &e))?;
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// clients
+// ---------------------------------------------------------------------------
+
+/// Minimal blocking **protocol-v1** client (line-delimited JSON). Kept
+/// for compatibility with existing tooling; new clients should use
+/// [`BinaryClient`] — v1 ships every f32 as decimal text.
 pub struct Client {
     reader: BufReader<TcpStream>,
     writer: TcpStream,
@@ -131,14 +316,14 @@ pub struct Client {
 }
 
 impl Client {
-    pub fn connect(addr: &std::net::SocketAddr) -> Result<Client> {
+    pub fn connect(addr: &std::net::SocketAddr) -> Result<Client, LeapError> {
         let stream = TcpStream::connect(addr)?;
         let writer = stream.try_clone()?;
         Ok(Client { reader: BufReader::new(stream), writer, next_id: 1 })
     }
 
     /// Send one op and wait for its reply.
-    pub fn call(&mut self, op: &str, inputs: &[&[f32]]) -> Result<Json> {
+    pub fn call(&mut self, op: &str, inputs: &[&[f32]]) -> Result<Json, LeapError> {
         let id = self.next_id;
         self.next_id += 1;
         let doc = Json::obj(vec![
@@ -157,23 +342,174 @@ impl Client {
         writeln!(self.writer, "{doc}")?;
         let mut line = String::new();
         self.reader.read_line(&mut line)?;
-        parse(&line).map_err(|e| anyhow::anyhow!("bad reply: {e}"))
+        parse(&line).map_err(|e| LeapError::Protocol(format!("bad reply: {e}")))
+    }
+
+    /// Call a single-tensor op and parse the reply: the first output as
+    /// a `Vec<f32>`, or the typed error reconstructed from the reply's
+    /// `code`/`error` fields.
+    pub fn call_tensor(&mut self, op: &str, input: &[f32]) -> Result<Vec<f32>, LeapError> {
+        let reply = self.call(op, &[input])?;
+        if let Some(msg) = reply.get_str("error") {
+            let code = reply.get_f64("code").unwrap_or(0.0) as u16;
+            return Err(LeapError::from_wire(code, msg.to_string()));
+        }
+        let outputs = reply
+            .get("outputs")
+            .and_then(|o| o.as_arr())
+            .ok_or_else(|| LeapError::Protocol("reply missing outputs".into()))?;
+        let first = outputs
+            .first()
+            .and_then(|o| o.as_arr())
+            .ok_or_else(|| LeapError::Protocol("reply outputs empty".into()))?;
+        first
+            .iter()
+            .map(|v| {
+                v.as_f64()
+                    .map(|f| f as f32)
+                    .ok_or_else(|| LeapError::Protocol("non-numeric output element".into()))
+            })
+            .collect()
     }
 
     /// Fetch the telemetry snapshot.
-    pub fn stats(&mut self) -> Result<Json> {
+    pub fn stats(&mut self) -> Result<Json, LeapError> {
         writeln!(self.writer, r#"{{"id": 0, "op": "__stats"}}"#)?;
         let mut line = String::new();
         self.reader.read_line(&mut line)?;
-        parse(&line).map_err(|e| anyhow::anyhow!("bad reply: {e}"))
+        parse(&line).map_err(|e| LeapError::Protocol(format!("bad reply: {e}")))
+    }
+}
+
+/// Blocking **protocol-v2** client: binary frames, sessions, typed
+/// errors. See `docs/PROTOCOL.md`.
+pub struct BinaryClient {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+    next_id: u64,
+}
+
+impl BinaryClient {
+    /// Connect and negotiate the protocol version (Hello exchange). A
+    /// server speaking a different version is a typed
+    /// [`LeapError::VersionMismatch`]/[`LeapError::Remote`] — never a
+    /// silent misparse.
+    pub fn connect(addr: &std::net::SocketAddr) -> Result<BinaryClient, LeapError> {
+        let stream = TcpStream::connect(addr)?;
+        let writer = stream.try_clone()?;
+        let mut client = BinaryClient { reader: BufReader::new(stream), writer, next_id: 1 };
+        let hello = Frame::new(
+            FrameKind::Hello,
+            0,
+            Json::obj(vec![("version", Json::Num(wire::VERSION as f64))]),
+            Vec::new(),
+        );
+        let reply = client.roundtrip(&hello)?;
+        match reply.kind {
+            FrameKind::Hello => Ok(client),
+            FrameKind::Error => Err(reply.to_error()),
+            k => Err(LeapError::Protocol(format!("unexpected {k:?} hello reply"))),
+        }
+    }
+
+    fn roundtrip(&mut self, f: &Frame) -> Result<Frame, LeapError> {
+        wire::write_frame(&mut self.writer, f)?;
+        wire::read_frame(&mut self.reader)?
+            .ok_or_else(|| LeapError::Io("server closed the connection".into()))
+    }
+
+    /// Register a scan config; returns the session id to project
+    /// against. The config travels exactly once — every subsequent
+    /// request is a 24-byte header plus the tensor.
+    pub fn open_session(
+        &mut self,
+        cfg: &ScanConfig,
+        model: Model,
+        threads: Option<usize>,
+    ) -> Result<u64, LeapError> {
+        let mut meta = vec![
+            (
+                "config",
+                Json::obj(vec![
+                    ("geometry", geometry_to_json(&cfg.geometry)),
+                    ("volume", volume_to_json(&cfg.volume)),
+                ]),
+            ),
+            ("model", Json::Str(model.name().to_string())),
+        ];
+        if let Some(t) = threads {
+            meta.push(("threads", Json::Num(t as f64)));
+        }
+        let reply =
+            self.roundtrip(&Frame::new(FrameKind::OpenSession, 0, Json::obj(meta), Vec::new()))?;
+        match reply.kind {
+            FrameKind::OpenSession => Ok(reply.id),
+            FrameKind::Error => Err(reply.to_error()),
+            k => Err(LeapError::Protocol(format!("unexpected {k:?} open-session reply"))),
+        }
+    }
+
+    /// Release a session.
+    pub fn close_session(&mut self, session: u64) -> Result<(), LeapError> {
+        let reply =
+            self.roundtrip(&Frame::new(FrameKind::CloseSession, session, Json::Null, Vec::new()))?;
+        match reply.kind {
+            FrameKind::CloseSession => Ok(()),
+            FrameKind::Error => Err(reply.to_error()),
+            k => Err(LeapError::Protocol(format!("unexpected {k:?} close-session reply"))),
+        }
+    }
+
+    /// Execute one typed op; returns the full Response frame (payload =
+    /// output tensor; meta carries latency/exec/batch observability).
+    /// The input tensor is serialized straight from the borrowed slice
+    /// ([`wire::write_frame_parts`]) — no owned copy on the client side.
+    pub fn call(&mut self, op: &Op, input: &[f32]) -> Result<Frame, LeapError> {
+        let id = self.next_id;
+        self.next_id += 1;
+        wire::write_frame_parts(
+            &mut self.writer,
+            FrameKind::Request,
+            id,
+            &super::request::request_meta(op),
+            input,
+        )?;
+        let reply = wire::read_frame(&mut self.reader)?
+            .ok_or_else(|| LeapError::Io("server closed the connection".into()))?;
+        match reply.kind {
+            FrameKind::Response if reply.id == id => Ok(reply),
+            FrameKind::Response => Err(LeapError::Protocol(format!(
+                "response id {} does not match request id {id}",
+                reply.id
+            ))),
+            FrameKind::Error => Err(reply.to_error()),
+            k => Err(LeapError::Protocol(format!("unexpected {k:?} reply"))),
+        }
+    }
+
+    /// Forward projection on an open session.
+    pub fn forward(&mut self, session: u64, vol: &[f32]) -> Result<Vec<f32>, LeapError> {
+        Ok(self.call(&Op::SessionFp(session), vol)?.payload)
+    }
+
+    /// Matched backprojection on an open session.
+    pub fn back(&mut self, session: u64, sino: &[f32]) -> Result<Vec<f32>, LeapError> {
+        Ok(self.call(&Op::SessionBp(session), sino)?.payload)
+    }
+
+    /// FBP/FDK reconstruction on an open session.
+    pub fn fbp(&mut self, session: u64, sino: &[f32]) -> Result<Vec<f32>, LeapError> {
+        Ok(self.call(&Op::SessionFbp(session), sino)?.payload)
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::super::test_support::MockExecutor;
-    use super::super::{BatchPolicy, Coordinator};
+    use super::super::{BatchPolicy, Coordinator, Executor, NativeExecutor, Router, SessionExecutor};
     use super::*;
+    use crate::geometry::{Geometry, ParallelBeam, VolumeGeometry};
+    use crate::projector::Projector;
 
     fn start_mock() -> (Server, Arc<Coordinator>) {
         let coord = Arc::new(Coordinator::new(
@@ -182,6 +518,27 @@ mod tests {
             1 << 20,
             2,
         ));
+        let server = Server::start("127.0.0.1:0", coord.clone()).unwrap();
+        (server, coord)
+    }
+
+    fn scan_config() -> ScanConfig {
+        ScanConfig {
+            geometry: Geometry::Parallel(ParallelBeam::standard_2d(10, 24, 1.0)),
+            volume: VolumeGeometry::slice2d(16, 16, 1.0),
+        }
+    }
+
+    fn start_native() -> (Server, Arc<Coordinator>) {
+        let cfg = scan_config();
+        let native = NativeExecutor::new(
+            Projector::new(cfg.geometry.clone(), cfg.volume.clone(), Model::SF).with_threads(2),
+        );
+        let router: Arc<dyn Executor> = Arc::new(Router::new(vec![
+            Arc::new(native),
+            Arc::new(SessionExecutor::new()),
+        ]));
+        let coord = Arc::new(Coordinator::new(router, BatchPolicy::default(), 1 << 28, 2));
         let server = Server::start("127.0.0.1:0", coord.clone()).unwrap();
         (server, coord)
     }
@@ -200,11 +557,12 @@ mod tests {
     }
 
     #[test]
-    fn error_propagates() {
+    fn error_propagates_with_typed_code() {
         let (server, _coord) = start_mock();
         let mut client = Client::connect(&server.addr).unwrap();
         let reply = client.call("fail", &[&[1.0]]).unwrap();
         assert!(reply.get_str("error").unwrap().contains("mock failure"));
+        assert_eq!(reply.get_f64("code"), Some(crate::api::codes::BACKEND as f64));
     }
 
     #[test]
@@ -220,6 +578,7 @@ mod tests {
         // the shared projector pool is reported alongside request stats
         assert!(stats.get_f64("pool_workers").is_some());
         assert!(stats.get_f64("pool_regions").is_some());
+        assert!(stats.get_f64("open_sessions").is_some());
     }
 
     #[test]
@@ -251,5 +610,127 @@ mod tests {
         let mut line = String::new();
         reader.read_line(&mut line).unwrap();
         assert!(line.contains("bad json"));
+    }
+
+    #[test]
+    fn v2_session_roundtrip_matches_in_process_bits() {
+        let (server, _coord) = start_native();
+        let cfg = scan_config();
+        let scan = crate::api::ScanBuilder::from_config(&cfg)
+            .model(Model::SF)
+            .threads(2)
+            .build()
+            .unwrap();
+        let mut client = BinaryClient::connect(&server.addr).unwrap();
+        let session = client.open_session(&cfg, Model::SF, Some(2)).unwrap();
+        let mut vol = vec![0.0f32; scan.volume_len()];
+        crate::util::rng::Rng::new(9).fill_uniform(&mut vol, 0.0, 1.0);
+        let served = client.forward(session, &vol).unwrap();
+        let local = scan.forward(&vol).unwrap();
+        assert_eq!(served, local, "v2 session forward must be bit-identical");
+        let back_served = client.back(session, &served).unwrap();
+        assert_eq!(back_served, scan.back(&served).unwrap());
+        client.close_session(session).unwrap();
+        // using the closed session is a typed error
+        let e = client.forward(session, &vol).unwrap_err();
+        assert_eq!(e.code(), crate::api::codes::UNKNOWN_SESSION, "{e:?}");
+    }
+
+    #[test]
+    fn v2_shape_and_geometry_errors_are_typed_on_the_wire() {
+        let (server, _coord) = start_native();
+        let mut client = BinaryClient::connect(&server.addr).unwrap();
+        let session = client.open_session(&scan_config(), Model::SF, Some(2)).unwrap();
+        // wrong tensor length → SHAPE_MISMATCH code, connection survives
+        let e = client.forward(session, &[1.0, 2.0, 3.0]).unwrap_err();
+        assert_eq!(e.code(), crate::api::codes::SHAPE_MISMATCH, "{e:?}");
+        // degenerate config → INVALID_GEOMETRY
+        let mut bad = scan_config();
+        bad.volume.nx = 0;
+        let e = client.open_session(&bad, Model::SF, None).unwrap_err();
+        assert_eq!(e.code(), crate::api::codes::INVALID_GEOMETRY, "{e:?}");
+        // the connection still works after both errors
+        let vol = vec![0.1f32; 256];
+        assert!(client.forward(session, &vol).is_ok());
+    }
+
+    #[test]
+    fn v1_and_v2_clients_share_one_port_and_agree() {
+        let (server, _coord) = start_native();
+        let cfg = scan_config();
+        let vol = vec![0.02f32; 256];
+        // v2 session path
+        let mut v2 = BinaryClient::connect(&server.addr).unwrap();
+        let session = v2.open_session(&cfg, Model::SF, Some(2)).unwrap();
+        let from_v2 = v2.forward(session, &vol).unwrap();
+        // v1 JSON path against the statically-configured native backend
+        let mut v1 = Client::connect(&server.addr).unwrap();
+        let from_v1 = v1.call_tensor("native_fp", &vol).unwrap();
+        assert_eq!(from_v1, from_v2, "both protocols must return identical bits");
+    }
+
+    #[test]
+    fn v2_version_mismatch_is_rejected() {
+        let (server, _coord) = start_native();
+        let stream = TcpStream::connect(server.addr).unwrap();
+        let mut writer = stream.try_clone().unwrap();
+        let mut reader = BufReader::new(stream);
+        // a well-formed frame with a bad version byte
+        let mut bytes =
+            wire::encode_frame(&Frame::new(FrameKind::Hello, 0, Json::Null, vec![])).unwrap();
+        bytes[4] = 9;
+        writer.write_all(&bytes).unwrap();
+        writer.flush().unwrap();
+        let reply = wire::read_frame(&mut reader).unwrap().expect("error frame");
+        assert_eq!(reply.kind, FrameKind::Error);
+        assert_eq!(
+            reply.to_error().code(),
+            crate::api::codes::VERSION_MISMATCH,
+            "{:?}",
+            reply.to_error()
+        );
+        // and the server closes the connection afterwards
+        assert!(matches!(wire::read_frame(&mut reader), Ok(None) | Err(_)));
+    }
+
+    #[test]
+    fn v2_malformed_frame_is_rejected_with_protocol_code() {
+        let (server, _coord) = start_native();
+        let stream = TcpStream::connect(server.addr).unwrap();
+        let mut writer = stream.try_clone().unwrap();
+        let mut reader = BufReader::new(stream);
+        // correct magic so the connection sniffs as v2, then garbage
+        let mut bytes =
+            wire::encode_frame(&Frame::new(FrameKind::Hello, 0, Json::Null, vec![])).unwrap();
+        bytes[5] = 200; // unknown frame kind
+        writer.write_all(&bytes).unwrap();
+        writer.flush().unwrap();
+        let reply = wire::read_frame(&mut reader).unwrap().expect("error frame");
+        assert_eq!(reply.kind, FrameKind::Error);
+        assert_eq!(reply.to_error().code(), crate::api::codes::PROTOCOL);
+    }
+
+    #[test]
+    fn sessions_close_when_their_connection_drops() {
+        let (server, _coord) = start_native();
+        let session = {
+            let mut client = BinaryClient::connect(&server.addr).unwrap();
+            let id = client.open_session(&scan_config(), Model::SF, Some(2)).unwrap();
+            // open sessions are visible process-wide (exact counts would
+            // race with concurrently-running tests on the global registry)
+            assert!(SessionRegistry::global().executor(id).is_some());
+            id
+        }; // client dropped: connection closes
+        // give the server thread a moment to observe the disconnect
+        for _ in 0..100 {
+            if SessionRegistry::global().executor(session).is_none() {
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(10));
+        }
+        assert!(
+            SessionRegistry::global().executor(session).is_none(),
+            "disconnect must release the session"
+        );
     }
 }

@@ -1,0 +1,392 @@
+//! Protocol-v2 sessions: register a scan config once, then stream
+//! tensors against it.
+//!
+//! v1 clients re-send nothing *about* the scan because the server is
+//! pinned to one scan config at startup — which is exactly why it cannot
+//! serve heterogeneous traffic. The session handshake fixes both ends:
+//! an OpenSession frame carries the scan config (geometry + volume +
+//! model) exactly once, the server validates it through
+//! [`crate::api::ScanBuilder`] (degenerate configs are typed
+//! [`LeapError::InvalidGeometry`] errors, never panics), plans it
+//! through the process-wide [`super::plan_cache`] (the session's
+//! `Arc<ProjectionPlan>` keeps the plan alive for the session's
+//! lifetime), and returns a session id. Every subsequent request is a
+//! 24-byte header + raw tensor.
+//!
+//! [`SessionExecutor`] is the backend that serves the session ops: it
+//! maps [`Op::SessionFp`]`(id)` → the session's own
+//! [`super::NativeExecutor`] running [`Op::NativeFp`], preserving the
+//! batched fast path (the batcher groups by `Op` equality, so one
+//! session's backlog still closes into a single stacked
+//! `apply_batch_into`; two sessions never mix in one batch).
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+use crate::api::{LeapError, ScanBuilder};
+use crate::geometry::config::{geometry_from_json, volume_from_json, ScanConfig};
+use crate::projector::Model;
+use crate::util::json::Json;
+
+use super::op::Op;
+use super::{Executor, NativeExecutor};
+
+/// Upper bound on the resident footprint one wire-registered session may
+/// demand (volume + sinogram + estimated plan bytes). The library API's
+/// element cap alone is not enough here: a remote client could otherwise
+/// register a validly-shaped terabyte-scale scan and drive the *server*
+/// into an allocation abort during planning — the memory budget only
+/// admission-controls per-request buffers, not session registration.
+/// Oversized configs get a typed [`LeapError::BudgetExceeded`] instead.
+pub const SESSION_MAX_BYTES: usize = 8 << 30;
+
+/// Upper bound on concurrently open sessions per registry. Each open
+/// session pins its plan (and survives plan-cache eviction), so without
+/// a count cap the per-session byte gate would still allow unbounded
+/// cumulative pinning from a client that keeps opening fresh configs.
+/// Refusals are typed [`LeapError::BudgetExceeded`] (resource code 6).
+pub const MAX_OPEN_SESSIONS: usize = 64;
+
+/// The open sessions of a process: id → the executor serving that scan.
+pub struct SessionRegistry {
+    next: AtomicU64,
+    sessions: Mutex<HashMap<u64, Arc<NativeExecutor>>>,
+}
+
+impl Default for SessionRegistry {
+    fn default() -> Self {
+        SessionRegistry::new()
+    }
+}
+
+impl SessionRegistry {
+    pub fn new() -> SessionRegistry {
+        SessionRegistry { next: AtomicU64::new(1), sessions: Mutex::new(HashMap::new()) }
+    }
+
+    /// The process-wide registry (shared by the TCP server and the
+    /// [`SessionExecutor`] backend).
+    pub fn global() -> &'static SessionRegistry {
+        static REGISTRY: OnceLock<SessionRegistry> = OnceLock::new();
+        REGISTRY.get_or_init(SessionRegistry::new)
+    }
+
+    /// Validate `cfg` and open a session for it. The scan is planned
+    /// through the process-wide plan cache; the session pins the
+    /// resulting plan until [`SessionRegistry::close`].
+    pub fn open(
+        &self,
+        cfg: &ScanConfig,
+        model: Model,
+        threads: Option<usize>,
+    ) -> Result<u64, LeapError> {
+        // Count gate BEFORE the expensive planning below (approximate —
+        // concurrent opens may overshoot by the number in flight; the
+        // insert-time check is authoritative).
+        if self.sessions.lock().unwrap().len() >= MAX_OPEN_SESSIONS {
+            return Err(LeapError::BudgetExceeded {
+                needed: MAX_OPEN_SESSIONS + 1,
+                cap: MAX_OPEN_SESSIONS,
+            });
+        }
+        // Size gates BEFORE any planning allocation (see
+        // SESSION_MAX_BYTES). Overflow-safe in two steps: first bound
+        // each buffer in u128 arithmetic (so the per-dimension counts
+        // are small enough that the plan-size estimator's usize
+        // products cannot wrap), only then consult the estimator.
+        let reject = |needed: u128| {
+            Err(LeapError::BudgetExceeded {
+                needed: needed.min(usize::MAX as u128) as usize,
+                cap: SESSION_MAX_BYTES,
+            })
+        };
+        // per-buffer bound = the wire payload cap: a session whose
+        // volume or sinogram could never travel in one v2 frame must be
+        // refused at open time, not fail on its first response
+        let per_buffer_cap = super::wire::MAX_PAYLOAD_BYTES as u128;
+        let vol_bytes = (cfg.volume.nx as u128)
+            * (cfg.volume.ny as u128)
+            * (cfg.volume.nz as u128)
+            * 4;
+        let g = &cfg.geometry;
+        let sino_bytes = (g.nviews() as u128) * (g.nrows() as u128) * (g.ncols() as u128) * 4;
+        if vol_bytes > per_buffer_cap || sino_bytes > per_buffer_cap {
+            return reject(vol_bytes.max(sino_bytes));
+        }
+        let probe = crate::projector::Projector::new(g.clone(), cfg.volume.clone(), model);
+        let plan_bytes = crate::projector::ProjectionPlan::estimate_heap_bytes(&probe) as u128;
+        let needed = vol_bytes + sino_bytes + plan_bytes;
+        if needed > SESSION_MAX_BYTES as u128 {
+            return reject(needed);
+        }
+        let mut builder = ScanBuilder::from_config(cfg).model(model);
+        if let Some(t) = threads {
+            builder = builder.threads(t);
+        }
+        let scan = builder.build()?;
+        let exec = NativeExecutor::with_plan(scan.projector().clone(), scan.plan().clone());
+        let id = self.next.fetch_add(1, Ordering::Relaxed);
+        {
+            let mut sessions = self.sessions.lock().unwrap();
+            if sessions.len() >= MAX_OPEN_SESSIONS {
+                // authoritative check: racing opens past the early gate
+                // drop their freshly-built plan instead of pinning it
+                return Err(LeapError::BudgetExceeded {
+                    needed: MAX_OPEN_SESSIONS + 1,
+                    cap: MAX_OPEN_SESSIONS,
+                });
+            }
+            sessions.insert(id, Arc::new(exec));
+        }
+        Ok(id)
+    }
+
+    /// Open a session from OpenSession frame meta:
+    /// `{"config": {"geometry": …, "volume": …}, "model": "sf",
+    ///   "threads": n}` (model and threads optional).
+    pub fn open_from_meta(&self, meta: &Json) -> Result<u64, LeapError> {
+        let cfg_json = meta
+            .get("config")
+            .ok_or_else(|| LeapError::Protocol("open-session meta missing config".into()))?;
+        let geometry = geometry_from_json(
+            cfg_json
+                .get("geometry")
+                .ok_or_else(|| LeapError::Protocol("config missing geometry".into()))?,
+        )
+        .map_err(LeapError::InvalidGeometry)?;
+        let volume = volume_from_json(
+            cfg_json
+                .get("volume")
+                .ok_or_else(|| LeapError::Protocol("config missing volume".into()))?,
+        )
+        .map_err(LeapError::InvalidGeometry)?;
+        let model = match meta.get_str("model") {
+            None => Model::SF,
+            Some(name) => Model::parse(name)
+                .ok_or_else(|| LeapError::InvalidArgument(format!("unknown model {name}")))?,
+        };
+        let threads = meta.get_usize("threads");
+        self.open(&ScanConfig { geometry, volume }, model, threads)
+    }
+
+    /// Drop a session (its plan stays cached only if the plan cache
+    /// still holds it). Returns whether the id was open.
+    pub fn close(&self, id: u64) -> bool {
+        self.sessions.lock().unwrap().remove(&id).is_some()
+    }
+
+    /// The executor serving session `id`.
+    pub fn executor(&self, id: u64) -> Option<Arc<NativeExecutor>> {
+        self.sessions.lock().unwrap().get(&id).cloned()
+    }
+
+    /// Number of open sessions.
+    pub fn len(&self) -> usize {
+        self.sessions.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// The coordinator backend for session ops: resolves the session id and
+/// delegates to that session's [`NativeExecutor`] — whole batches at a
+/// time, so the stacked batched projection path survives the
+/// indirection.
+pub struct SessionExecutor {
+    registry: &'static SessionRegistry,
+}
+
+impl Default for SessionExecutor {
+    fn default() -> Self {
+        SessionExecutor::new()
+    }
+}
+
+impl SessionExecutor {
+    /// Backend over the process-wide registry.
+    pub fn new() -> SessionExecutor {
+        SessionExecutor { registry: SessionRegistry::global() }
+    }
+
+    pub fn registry(&self) -> &'static SessionRegistry {
+        self.registry
+    }
+
+    fn resolve(&self, op: &Op) -> Result<(Arc<NativeExecutor>, Op), LeapError> {
+        let (id, native_op) = op
+            .session_parts()
+            .ok_or_else(|| LeapError::UnknownOp(op.label()))?;
+        let exec = self.registry.executor(id).ok_or(LeapError::UnknownSession(id))?;
+        Ok((exec, native_op))
+    }
+}
+
+impl Executor for SessionExecutor {
+    fn execute(&self, op: &Op, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>, LeapError> {
+        let (exec, native_op) = self.resolve(op)?;
+        exec.execute(&native_op, inputs)
+    }
+
+    fn execute_batch(
+        &self,
+        op: &Op,
+        items: &[Vec<&[f32]>],
+    ) -> Vec<Result<Vec<Vec<f32>>, LeapError>> {
+        match self.resolve(op) {
+            // one resolve for the whole batch; the session's native
+            // executor runs it as one stacked batched projection
+            Ok((exec, native_op)) => exec.execute_batch(&native_op, items),
+            Err(e) => items.iter().map(|_| Err(e.clone())).collect(),
+        }
+    }
+
+    fn output_bytes_hint(&self, op: &Op, input_bytes: usize) -> usize {
+        match self.resolve(op) {
+            Ok((exec, native_op)) => exec.output_bytes_hint(&native_op, input_bytes),
+            Err(_) => 0,
+        }
+    }
+
+    fn accepts(&self, op: &Op) -> bool {
+        op.session_parts().is_some()
+    }
+
+    /// Sessions are dynamic; the static op list is empty (routing goes
+    /// through [`Executor::accepts`]).
+    fn ops(&self) -> Vec<Op> {
+        Vec::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::geometry::{Geometry, ParallelBeam, VolumeGeometry};
+    use crate::util::json::parse;
+
+    fn config(nviews: usize) -> ScanConfig {
+        ScanConfig {
+            geometry: Geometry::Parallel(ParallelBeam::standard_2d(nviews, 18, 1.0)),
+            volume: VolumeGeometry::slice2d(12, 12, 1.0),
+        }
+    }
+
+    #[test]
+    fn open_execute_close() {
+        let exec = SessionExecutor { registry: Box::leak(Box::new(SessionRegistry::new())) };
+        let id = exec.registry().open(&config(8), Model::SF, Some(2)).unwrap();
+        let vol = vec![0.01f32; 144];
+        let out = exec.execute(&Op::SessionFp(id), &[&vol]).unwrap();
+        assert_eq!(out[0].len(), 8 * 18);
+        // matches the in-process plan path bit for bit
+        let scan = ScanBuilder::from_config(&config(8))
+            .model(Model::SF)
+            .threads(2)
+            .build()
+            .unwrap();
+        assert_eq!(out[0], scan.forward(&vol).unwrap());
+        assert!(exec.registry().close(id));
+        let e = exec.execute(&Op::SessionFp(id), &[&vol]).unwrap_err();
+        assert_eq!(e, LeapError::UnknownSession(id));
+    }
+
+    #[test]
+    fn session_count_is_capped() {
+        let reg = SessionRegistry::new();
+        let mut ids = Vec::new();
+        for i in 0..MAX_OPEN_SESSIONS {
+            ids.push(reg.open(&config(4 + (i % 3)), Model::SF, Some(1)).unwrap());
+        }
+        let e = reg.open(&config(4), Model::SF, Some(1)).unwrap_err();
+        assert!(matches!(e, LeapError::BudgetExceeded { .. }), "{e:?}");
+        assert!(reg.close(ids[0]));
+        reg.open(&config(4), Model::SF, Some(1)).expect("slot freed by close");
+    }
+
+    #[test]
+    fn oversized_session_config_is_refused_before_planning() {
+        // 2^32 voxels = 16 GiB of volume: over the per-buffer gate, so
+        // the registry must refuse with a typed BudgetExceeded without
+        // ever attempting to plan (which would abort on allocation)
+        let reg = SessionRegistry::new();
+        let cfg = ScanConfig {
+            geometry: Geometry::Parallel(ParallelBeam::standard_2d(4, 8, 1.0)),
+            volume: VolumeGeometry {
+                nx: 1 << 14,
+                ny: 1 << 14,
+                nz: 1 << 4,
+                vx: 1.0,
+                vy: 1.0,
+                vz: 1.0,
+                cx: 0.0,
+                cy: 0.0,
+                cz: 0.0,
+            },
+        };
+        let e = reg.open(&cfg, Model::SF, None).unwrap_err();
+        assert!(matches!(e, LeapError::BudgetExceeded { .. }), "{e:?}");
+        assert!(reg.is_empty());
+    }
+
+    #[test]
+    fn degenerate_config_is_a_typed_error() {
+        let reg = SessionRegistry::new();
+        let mut cfg = config(4);
+        cfg.volume.vx = 0.0;
+        let e = reg.open(&cfg, Model::SF, None).unwrap_err();
+        assert!(matches!(e, LeapError::InvalidGeometry(_)));
+        assert!(reg.is_empty());
+    }
+
+    #[test]
+    fn open_from_meta_parses_and_validates() {
+        let reg = SessionRegistry::new();
+        let meta = parse(
+            r#"{"config": {"geometry": {"type": "parallel", "ncols": 18, "nviews": 6},
+                           "volume": {"nx": 12}},
+                "model": "sf", "threads": 2}"#,
+        )
+        .unwrap();
+        let id = reg.open_from_meta(&meta).unwrap();
+        assert!(reg.executor(id).is_some());
+
+        let bad = parse(r#"{"model": "sf"}"#).unwrap();
+        assert!(matches!(reg.open_from_meta(&bad), Err(LeapError::Protocol(_))));
+        let bad_model = parse(
+            r#"{"config": {"geometry": {"type": "parallel", "ncols": 8, "nviews": 4},
+                           "volume": {"nx": 8}}, "model": "warp"}"#,
+        )
+        .unwrap();
+        assert!(matches!(reg.open_from_meta(&bad_model), Err(LeapError::InvalidArgument(_))));
+    }
+
+    #[test]
+    fn non_session_ops_are_rejected() {
+        let exec = SessionExecutor::new();
+        assert!(!exec.accepts(&Op::NativeFp));
+        assert!(exec.accepts(&Op::SessionBp(1)));
+        let e = exec.execute(&Op::NativeFp, &[&[1.0]]).unwrap_err();
+        assert!(matches!(e, LeapError::UnknownOp(_)));
+    }
+
+    #[test]
+    fn batch_against_one_session_stays_whole() {
+        let exec = SessionExecutor { registry: Box::leak(Box::new(SessionRegistry::new())) };
+        let id = exec.registry().open(&config(6), Model::SF, Some(2)).unwrap();
+        let vols: Vec<Vec<f32>> = (0..3).map(|i| vec![0.01f32 * (i + 1) as f32; 144]).collect();
+        let items: Vec<Vec<&[f32]>> = vols.iter().map(|v| vec![v.as_slice()]).collect();
+        let batched = exec.execute_batch(&Op::SessionFp(id), &items);
+        for (i, r) in batched.iter().enumerate() {
+            let single = exec.execute(&Op::SessionFp(id), &[&vols[i]]).unwrap();
+            assert_eq!(r.as_ref().unwrap()[0], single[0], "item {i}");
+        }
+        // unknown session: every item fails with the typed error
+        let gone = exec.execute_batch(&Op::SessionFp(9999), &items);
+        for r in gone {
+            assert_eq!(r.unwrap_err(), LeapError::UnknownSession(9999));
+        }
+    }
+}

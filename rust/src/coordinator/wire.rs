@@ -1,0 +1,419 @@
+//! Protocol v2: length-prefixed binary frames with raw f32 payloads.
+//!
+//! Protocol v1 serializes every f32 as decimal JSON text (~8 bytes +
+//! parse cost per sample) and re-states the full request envelope each
+//! time. v2 frames carry tensors as raw little-endian f32 — zero text
+//! overhead, `memcpy`-decodable — next to a small JSON meta header for
+//! the fields that are genuinely structural (op name, session id,
+//! telemetry). The layout (full spec: `docs/PROTOCOL.md`):
+//!
+//! ```text
+//! offset  size  field
+//! 0       4     magic "LEAP" (0x4C 0x45 0x41 0x50)
+//! 4       1     protocol version (= 2)
+//! 5       1     frame kind (FrameKind)
+//! 6       2     reserved, must be 0
+//! 8       8     id (u64 LE): request id / session id, kind-dependent
+//! 16      4     meta_len (u32 LE): JSON meta bytes
+//! 20      4     payload_len (u32 LE): tensor bytes, must be % 4 == 0
+//! 24      meta_len     UTF-8 JSON meta object ({} allowed)
+//! 24+m    payload_len  raw little-endian f32 tensor data
+//! ```
+//!
+//! Both ends validate every field before trusting any length: bad magic,
+//! unsupported version, unknown kind, misaligned or oversized lengths
+//! and truncated streams all surface as typed [`LeapError`]s
+//! ([`LeapError::Protocol`] / [`LeapError::VersionMismatch`]) — never a
+//! panic, never an over-allocation. A v1 (line-delimited JSON) client on
+//! the same port keeps working: the server sniffs the first byte of a
+//! connection (`{` starts JSON, `L` starts a frame) — see
+//! [`super::server`].
+
+use std::io::{Read, Write};
+
+use crate::api::LeapError;
+use crate::util::json::{parse, Json};
+
+/// Frame magic: "LEAP".
+pub const MAGIC: [u8; 4] = *b"LEAP";
+/// The protocol version this build speaks.
+pub const VERSION: u8 = 2;
+/// Fixed header bytes before meta/payload.
+pub const HEADER_BYTES: usize = 24;
+/// Upper bound on the JSON meta section (scan configs are small; a
+/// modular geometry with thousands of per-view poses still fits).
+pub const MAX_META_BYTES: usize = 16 << 20;
+/// Upper bound on a tensor payload (1 GiB ≈ a 16k² f32 slice stack).
+pub const MAX_PAYLOAD_BYTES: usize = 1 << 30;
+
+/// What a frame means. The numeric value is the wire byte.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FrameKind {
+    /// Version negotiation; first frame in each direction.
+    Hello = 0,
+    /// Register a scan config; reply carries the session id.
+    OpenSession = 1,
+    /// Execute an op (`id` = client request id, echoed on the reply).
+    Request = 2,
+    /// Successful result (payload = output tensor).
+    Response = 3,
+    /// Typed failure (meta: `code`, `error`).
+    Error = 4,
+    /// Release a session (`id` = session id).
+    CloseSession = 5,
+}
+
+impl FrameKind {
+    fn from_byte(b: u8) -> Option<FrameKind> {
+        match b {
+            0 => Some(FrameKind::Hello),
+            1 => Some(FrameKind::OpenSession),
+            2 => Some(FrameKind::Request),
+            3 => Some(FrameKind::Response),
+            4 => Some(FrameKind::Error),
+            5 => Some(FrameKind::CloseSession),
+            _ => None,
+        }
+    }
+}
+
+/// One protocol-v2 frame.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Frame {
+    pub kind: FrameKind,
+    /// Request id (Request/Response/Error) or session id
+    /// (OpenSession reply / CloseSession).
+    pub id: u64,
+    /// Structural fields (op name, session id, config, telemetry).
+    pub meta: Json,
+    /// The tensor, bit-exact.
+    pub payload: Vec<f32>,
+}
+
+impl Frame {
+    pub fn new(kind: FrameKind, id: u64, meta: Json, payload: Vec<f32>) -> Frame {
+        Frame { kind, id, meta, payload }
+    }
+
+    /// A typed error reply for `id`.
+    pub fn error(id: u64, err: &LeapError) -> Frame {
+        Frame::new(
+            FrameKind::Error,
+            id,
+            Json::obj(vec![
+                ("code", Json::Num(err.code() as f64)),
+                ("error", Json::Str(err.to_string())),
+            ]),
+            Vec::new(),
+        )
+    }
+
+    /// Reconstruct the typed error carried by an Error frame.
+    pub fn to_error(&self) -> LeapError {
+        let code = self.meta.get_f64("code").unwrap_or(0.0) as u16;
+        let msg = self.meta.get_str("error").unwrap_or("unspecified remote error").to_string();
+        LeapError::from_wire(code, msg)
+    }
+}
+
+/// Serialize a frame from borrowed parts — the payload is read straight
+/// from the caller's slice, so senders (notably [`super::server::BinaryClient`])
+/// never copy a tensor into an owned [`Frame`] just to put it on the
+/// wire. Rejects parts whose meta or payload exceed the wire caps
+/// *before* writing anything — a payload at or beyond 4 GiB would
+/// otherwise silently truncate in the u32 length field and
+/// desynchronize the stream.
+pub fn encode_frame_parts(
+    kind: FrameKind,
+    id: u64,
+    meta: &Json,
+    payload: &[f32],
+) -> Result<Vec<u8>, LeapError> {
+    let payload_bytes = payload
+        .len()
+        .checked_mul(4)
+        .filter(|&b| b <= MAX_PAYLOAD_BYTES)
+        .ok_or_else(|| {
+            LeapError::Protocol(format!(
+                "payload too large to frame ({} samples > {} byte cap)",
+                payload.len(),
+                MAX_PAYLOAD_BYTES
+            ))
+        })?;
+    let meta = match meta {
+        Json::Null => String::new(),
+        other => other.to_string(),
+    };
+    if meta.len() > MAX_META_BYTES {
+        return Err(LeapError::Protocol(format!(
+            "meta too large to frame ({} > {MAX_META_BYTES} bytes)",
+            meta.len()
+        )));
+    }
+    let mut out = Vec::with_capacity(HEADER_BYTES + meta.len() + payload_bytes);
+    out.extend_from_slice(&MAGIC);
+    out.push(VERSION);
+    out.push(kind as u8);
+    out.extend_from_slice(&[0u8; 2]); // reserved
+    out.extend_from_slice(&id.to_le_bytes());
+    out.extend_from_slice(&(meta.len() as u32).to_le_bytes());
+    out.extend_from_slice(&(payload_bytes as u32).to_le_bytes());
+    out.extend_from_slice(meta.as_bytes());
+    for v in payload {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    Ok(out)
+}
+
+/// Serialize an owned frame to bytes (see [`encode_frame_parts`]).
+pub fn encode_frame(f: &Frame) -> Result<Vec<u8>, LeapError> {
+    encode_frame_parts(f.kind, f.id, &f.meta, &f.payload)
+}
+
+/// Parse one frame from a byte buffer that contains exactly one frame.
+pub fn decode_frame(bytes: &[u8]) -> Result<Frame, LeapError> {
+    let mut cursor = bytes;
+    let frame = read_frame(&mut cursor)?
+        .ok_or_else(|| LeapError::Protocol("empty frame buffer".into()))?;
+    if !cursor.is_empty() {
+        return Err(LeapError::Protocol(format!(
+            "{} trailing bytes after frame",
+            cursor.len()
+        )));
+    }
+    Ok(frame)
+}
+
+fn read_exact_or(
+    r: &mut impl Read,
+    buf: &mut [u8],
+    what: &str,
+) -> Result<(), LeapError> {
+    r.read_exact(buf)
+        .map_err(|e| LeapError::Protocol(format!("truncated frame ({what}): {e}")))
+}
+
+/// Read one frame from a stream. Returns `Ok(None)` on a clean
+/// end-of-stream (no bytes at all); a stream that ends mid-frame is a
+/// typed [`LeapError::Protocol`]; a frame with the wrong version byte is
+/// [`LeapError::VersionMismatch`].
+pub fn read_frame(r: &mut impl Read) -> Result<Option<Frame>, LeapError> {
+    let mut header = [0u8; HEADER_BYTES];
+    // distinguish clean EOF (no frame) from truncation (partial header)
+    let mut got = 0usize;
+    while got < HEADER_BYTES {
+        match r.read(&mut header[got..]) {
+            Ok(0) if got == 0 => return Ok(None),
+            Ok(0) => {
+                return Err(LeapError::Protocol(format!(
+                    "truncated frame (header: {got}/{HEADER_BYTES} bytes)"
+                )))
+            }
+            Ok(n) => got += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(LeapError::Io(e.to_string())),
+        }
+    }
+    if header[0..4] != MAGIC {
+        return Err(LeapError::Protocol(format!(
+            "bad frame magic {:02x}{:02x}{:02x}{:02x} (expected \"LEAP\")",
+            header[0], header[1], header[2], header[3]
+        )));
+    }
+    if header[4] != VERSION {
+        return Err(LeapError::VersionMismatch { got: header[4], want: VERSION });
+    }
+    let kind = FrameKind::from_byte(header[5])
+        .ok_or_else(|| LeapError::Protocol(format!("unknown frame kind {}", header[5])))?;
+    if header[6] != 0 || header[7] != 0 {
+        return Err(LeapError::Protocol("reserved header bytes must be zero".into()));
+    }
+    let id = u64::from_le_bytes(header[8..16].try_into().expect("8 header bytes"));
+    let meta_len = u32::from_le_bytes(header[16..20].try_into().expect("4 header bytes")) as usize;
+    let payload_len =
+        u32::from_le_bytes(header[20..24].try_into().expect("4 header bytes")) as usize;
+    if meta_len > MAX_META_BYTES {
+        return Err(LeapError::Protocol(format!(
+            "meta section too large ({meta_len} > {MAX_META_BYTES} bytes)"
+        )));
+    }
+    if payload_len > MAX_PAYLOAD_BYTES {
+        return Err(LeapError::Protocol(format!(
+            "payload too large ({payload_len} > {MAX_PAYLOAD_BYTES} bytes)"
+        )));
+    }
+    if payload_len % 4 != 0 {
+        return Err(LeapError::Protocol(format!(
+            "payload length {payload_len} is not a multiple of 4 (f32 tensor)"
+        )));
+    }
+    let mut meta_bytes = vec![0u8; meta_len];
+    read_exact_or(r, &mut meta_bytes, "meta")?;
+    let meta = if meta_bytes.is_empty() {
+        Json::Null
+    } else {
+        let text = std::str::from_utf8(&meta_bytes)
+            .map_err(|e| LeapError::Protocol(format!("meta is not utf-8: {e}")))?;
+        parse(text).map_err(|e| LeapError::Protocol(format!("bad meta json: {e}")))?
+    };
+    let mut payload_bytes = vec![0u8; payload_len];
+    read_exact_or(r, &mut payload_bytes, "payload")?;
+    let payload = payload_bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes(c.try_into().expect("4-byte chunk")))
+        .collect();
+    Ok(Some(Frame { kind, id, meta, payload }))
+}
+
+/// Write one frame to a stream.
+pub fn write_frame(w: &mut impl Write, f: &Frame) -> Result<(), LeapError> {
+    w.write_all(&encode_frame(f)?)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Write a frame assembled from borrowed parts — the copy-free send
+/// path (see [`encode_frame_parts`]).
+pub fn write_frame_parts(
+    w: &mut impl Write,
+    kind: FrameKind,
+    id: u64,
+    meta: &Json,
+    payload: &[f32],
+) -> Result<(), LeapError> {
+    w.write_all(&encode_frame_parts(kind, id, meta, payload)?)?;
+    w.flush()?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+
+    fn encode_frame_ok(f: &Frame) -> Vec<u8> {
+        encode_frame(f).unwrap()
+    }
+    fn sample_frame(n: usize, seed: u64) -> Frame {
+        let mut rng = Rng::new(seed);
+        let mut payload = vec![0.0f32; n];
+        rng.fill_uniform(&mut payload, -10.0, 10.0);
+        Frame::new(
+            FrameKind::Request,
+            0xDEAD_BEEF_0000_0001,
+            Json::obj(vec![("op", Json::Str("fp".into())), ("session", Json::Num(7.0))]),
+            payload,
+        )
+    }
+
+    #[test]
+    fn roundtrip_is_bit_identical_for_odd_sizes() {
+        for (i, n) in [0usize, 1, 3, 5, 17, 31, 1023].into_iter().enumerate() {
+            let f = sample_frame(n, 100 + i as u64);
+            let back = decode_frame(&encode_frame(&f).unwrap()).unwrap();
+            assert_eq!(back.kind, f.kind);
+            assert_eq!(back.id, f.id);
+            assert_eq!(back.meta, f.meta);
+            let a: Vec<u32> = f.payload.iter().map(|v| v.to_bits()).collect();
+            let b: Vec<u32> = back.payload.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(a, b, "payload bits must survive, n={n}");
+        }
+    }
+
+    #[test]
+    fn arbitrary_bit_patterns_survive() {
+        // NaNs, infinities, denormals: the payload is bits, not numbers
+        let payload: Vec<f32> = [0x7fc00001u32, 0x7f800000, 0xff800000, 0x00000001, 0x80000000]
+            .iter()
+            .map(|&b| f32::from_bits(b))
+            .collect();
+        let f = Frame::new(FrameKind::Response, 3, Json::Null, payload.clone());
+        let back = decode_frame(&encode_frame(&f).unwrap()).unwrap();
+        for (a, b) in payload.iter().zip(back.payload.iter()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn truncation_anywhere_is_a_protocol_error_not_a_panic() {
+        let bytes = encode_frame_ok(&sample_frame(9, 5));
+        for cut in [0usize, 1, 7, HEADER_BYTES - 1, HEADER_BYTES + 3, bytes.len() - 1] {
+            let r = decode_frame(&bytes[..cut]);
+            assert!(matches!(r, Err(LeapError::Protocol(_))), "cut {cut}: {r:?}");
+        }
+    }
+
+    #[test]
+    fn bad_magic_and_kind_and_reserved_are_rejected() {
+        let mut bytes = encode_frame_ok(&sample_frame(2, 6));
+        bytes[0] = b'X';
+        assert!(matches!(decode_frame(&bytes), Err(LeapError::Protocol(_))));
+
+        let mut bytes = encode_frame_ok(&sample_frame(2, 6));
+        bytes[5] = 250; // unknown kind
+        assert!(matches!(decode_frame(&bytes), Err(LeapError::Protocol(_))));
+
+        let mut bytes = encode_frame_ok(&sample_frame(2, 6));
+        bytes[6] = 1; // reserved must be zero
+        assert!(matches!(decode_frame(&bytes), Err(LeapError::Protocol(_))));
+    }
+
+    #[test]
+    fn version_mismatch_is_its_own_typed_error() {
+        let mut bytes = encode_frame_ok(&sample_frame(2, 7));
+        bytes[4] = 3;
+        let e = decode_frame(&bytes).unwrap_err();
+        assert_eq!(e, LeapError::VersionMismatch { got: 3, want: VERSION });
+        assert_eq!(e.code(), crate::api::codes::VERSION_MISMATCH);
+    }
+
+    #[test]
+    fn misaligned_and_oversized_lengths_are_rejected_before_allocation() {
+        // payload_len = 6 (not % 4)
+        let mut bytes = encode_frame_ok(&sample_frame(2, 8));
+        bytes[20..24].copy_from_slice(&6u32.to_le_bytes());
+        assert!(matches!(decode_frame(&bytes), Err(LeapError::Protocol(_))));
+
+        // payload_len beyond the cap: rejected from the header alone
+        let mut bytes = encode_frame_ok(&sample_frame(0, 9));
+        bytes[20..24].copy_from_slice(&(u32::MAX / 4 * 4).to_le_bytes());
+        assert!(matches!(decode_frame(&bytes), Err(LeapError::Protocol(_))));
+
+        // meta_len beyond the cap
+        let mut bytes = encode_frame_ok(&sample_frame(0, 10));
+        bytes[16..20].copy_from_slice(&(MAX_META_BYTES as u32 + 1).to_le_bytes());
+        assert!(matches!(decode_frame(&bytes), Err(LeapError::Protocol(_))));
+    }
+
+    #[test]
+    fn bad_meta_json_is_a_protocol_error() {
+        let f = Frame::new(FrameKind::Request, 1, Json::Str("x".into()), vec![]);
+        let mut bytes = encode_frame(&f).unwrap();
+        // corrupt the meta text ("x" → \x01x)
+        let meta_at = HEADER_BYTES;
+        bytes[meta_at] = 1;
+        assert!(matches!(decode_frame(&bytes), Err(LeapError::Protocol(_))));
+    }
+
+    #[test]
+    fn error_frames_carry_typed_codes() {
+        let e = LeapError::ShapeMismatch { what: "volume", expected: 100, got: 3 };
+        let f = Frame::error(9, &e);
+        let back = decode_frame(&encode_frame(&f).unwrap()).unwrap();
+        assert_eq!(back.kind, FrameKind::Error);
+        let typed = back.to_error();
+        assert_eq!(typed.code(), crate::api::codes::SHAPE_MISMATCH);
+        assert!(typed.to_string().contains("volume"));
+    }
+
+    #[test]
+    fn stream_reads_multiple_frames_then_clean_eof() {
+        let mut bytes = encode_frame_ok(&sample_frame(4, 11));
+        bytes.extend_from_slice(&encode_frame(&sample_frame(7, 12)).unwrap());
+        let mut cursor: &[u8] = &bytes;
+        assert_eq!(read_frame(&mut cursor).unwrap().unwrap().payload.len(), 4);
+        assert_eq!(read_frame(&mut cursor).unwrap().unwrap().payload.len(), 7);
+        assert!(read_frame(&mut cursor).unwrap().is_none(), "clean EOF");
+    }
+}

@@ -19,6 +19,11 @@
 //!   and the serving layer caches plans per scan config, while the direct
 //!   path plans per view on the fly through the *same* execute code — the
 //!   two paths are bit-identical.
+//! * [`api`] — the **typed front door**: [`api::ScanBuilder`] validates
+//!   a scan description (typed [`api::LeapError`]s, never panics) into a
+//!   planned [`api::Scan`] with fallible `forward`/`back`/`solve`/
+//!   `loss_grad`; the layers below are the panicking kernel layer that
+//!   `Scan` dispatches to after validation.
 //! * [`ops`] — the differentiable operator layer: [`ops::LinearOp`]
 //!   exposes `A`/`Aᵀ` as composable, batched, gradient-ready objects
 //!   (scale, compose, mask views, form `AᵀA`), implemented by the
@@ -41,8 +46,10 @@
 //!   Gated behind the **`pjrt`** cargo feature (off by default): without
 //!   it a clear-error stub with the same API keeps every native path
 //!   building and testing without the vendored XLA closure.
-//! * [`coordinator`] — the serving layer: request router, dynamic batcher,
-//!   worker pool and memory-budget admission control.
+//! * [`coordinator`] — the serving layer: typed-[`coordinator::Op`]
+//!   request router, dynamic batcher, worker pool, memory-budget
+//!   admission control, protocol-v2 sessions and the dual-protocol TCP
+//!   server (binary frames + legacy JSON; see `docs/PROTOCOL.md`).
 //! * [`util`] — self-contained substrates built for this repo: JSON,
 //!   deterministic PRNG, scoped thread-pool parallel-for, a bench harness
 //!   and a tiny CLI parser (no external deps beyond `xla`/`anyhow`).
@@ -81,6 +88,7 @@
 pub mod util;
 pub mod geometry;
 pub mod array;
+pub mod api;
 pub mod projector;
 pub mod ops;
 pub mod sysmatrix;
@@ -92,5 +100,6 @@ pub mod runtime;
 pub mod coordinator;
 pub mod bench_harness;
 
+pub use api::{LeapError, Scan, ScanBuilder, Solver};
 pub use array::{Sino, Vol3};
 pub use geometry::{ConeBeam, FanBeam, Geometry, ModularBeam, ParallelBeam, VolumeGeometry};

@@ -17,7 +17,9 @@ use std::sync::Arc;
 use anyhow::{anyhow, bail, Context, Result};
 
 use leap::coordinator::server::Server;
-use leap::coordinator::{BatchPolicy, Coordinator, Executor, NativeExecutor, Router};
+use leap::coordinator::{
+    BatchPolicy, Coordinator, Executor, NativeExecutor, Router, SessionExecutor,
+};
 use leap::geometry::config::{scan_from_file, ScanConfig};
 use leap::geometry::{Geometry, ParallelBeam, VolumeGeometry};
 use leap::phantom::{luggage, shepp};
@@ -391,6 +393,8 @@ fn build_router(args: &Args) -> Result<(Arc<Router>, String)> {
         cfg.volume,
         model,
     ))));
+    // protocol-v2 sessions: any scan config registered at runtime
+    backends.push(Arc::new(SessionExecutor::new()));
     Ok((Arc::new(Router::new(backends)), desc))
 }
 
@@ -408,7 +412,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     ));
     let addr = args.str_or("addr", "127.0.0.1:7462");
     let server = Server::start(&addr, coord.clone())?;
-    println!("leap server listening on {}", server.addr);
+    println!("leap server listening on {} (protocol v2 binary + legacy v1 json)", server.addr);
     println!("ops: {:?}", coord.executor().ops());
     loop {
         std::thread::sleep(std::time::Duration::from_secs(10));

@@ -46,6 +46,16 @@
 //! baseline, and [`crate::ops`] for the operator/gradient layer built on
 //! these pairs.
 //!
+//! **Layering.** This module is the *kernel layer*: concrete, fast, and
+//! panicking on contract violations (wrong shapes are programming
+//! errors here). User-facing code should come through the typed front
+//! door instead — [`crate::api::ScanBuilder`] validates a scan
+//! description into a [`crate::api::Scan`] whose `forward`/`back`/
+//! `solve`/`loss_grad` return `Result<_, `[`crate::api::LeapError`]`>`
+//! and dispatch to exactly this code after validation. The panicking
+//! entry points below remain supported as the layer `Scan` (and the
+//! solvers, and the serving executors) are shims over.
+//!
 //! **Execution.** All parallel loops run on the process-wide persistent
 //! worker pool ([`crate::util::pool`], sized by `LEAP_THREADS`): operator
 //! applications dispatch parked workers instead of spawning OS threads,

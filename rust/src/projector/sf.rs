@@ -255,22 +255,25 @@ impl ParallelPlanSet {
 /// upper-bounded by the `ceil(vz/dv) + 1` detector rows a `vz`-wide
 /// rect footprint can span.
 pub fn parallel_plan_estimate_bytes(vg: &VolumeGeometry, g: &ParallelBeam) -> usize {
-    let views = g.angles.len() * std::mem::size_of::<ParallelViewPlan>();
+    // saturating like cone_plan_estimate_bytes: the estimator runs
+    // BEFORE validation-by-allocation, so absurd (but representable)
+    // grids must saturate to "too big" rather than wrap around
+    let views = g.angles.len().saturating_mul(std::mem::size_of::<ParallelViewPlan>());
     let pure_2d = vg.nz == 1 && g.nrows == 1;
-    let rows = std::mem::size_of::<ParallelRowWeights>()
-        + if pure_2d {
-            0
+    let rows = std::mem::size_of::<ParallelRowWeights>().saturating_add(if pure_2d {
+        0
+    } else {
+        let per_slice = if g.dv > 0.0 {
+            (((vg.vz / g.dv).ceil() as usize) + 1).min(g.nrows.max(1))
         } else {
-            let per_slice = if g.dv > 0.0 {
-                (((vg.vz / g.dv).ceil() as usize) + 1).min(g.nrows.max(1))
-            } else {
-                g.nrows.max(1)
-            };
-            vg.nz
-                * (std::mem::size_of::<Vec<(usize, f64)>>()
-                    + per_slice * std::mem::size_of::<(usize, f64)>())
+            g.nrows.max(1)
         };
-    views + rows
+        vg.nz.saturating_mul(
+            std::mem::size_of::<Vec<(usize, f64)>>()
+                .saturating_add(per_slice.saturating_mul(std::mem::size_of::<(usize, f64)>())),
+        )
+    });
+    views.saturating_add(rows)
 }
 
 /// Pre-build estimate of a cone plan's cache: per voxel column one

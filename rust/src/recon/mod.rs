@@ -11,6 +11,11 @@
 //! * [`dc`] — sinogram completion + data-consistency refinement, the §3–4
 //!   inference pipeline reproduced by `examples/limited_angle_dc.rs`.
 //!
+//! These concrete entry points are the kernel layer (they panic on
+//! shape misuse); the typed, fallible way to run them is
+//! [`crate::api::Scan::solve`] with a [`crate::api::Solver`] selector,
+//! which validates every buffer and then runs the identical cores.
+//!
 //! Every iterative solver is split into a core generic over
 //! [`crate::ops::LinearOp`] (`sirt_op`, `os_sart_op`, `cgls_op`,
 //! `mlem_op`, `fista_tv_op`, `refine_op`) and a thin concrete-projector

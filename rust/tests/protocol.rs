@@ -1,0 +1,209 @@
+//! Protocol-level integration tests: v2 frame round-trips for every op
+//! variant and odd tensor sizes, malformed/truncated-frame and
+//! version-mismatch rejection, typed error codes end to end, and
+//! v1-JSON-client-against-v2-server compatibility — all against the real
+//! TCP stack.
+
+use std::io::Write;
+use std::net::TcpStream;
+use std::sync::Arc;
+
+use leap::api::{codes, LeapError, ScanBuilder};
+use leap::coordinator::request::{request_from_frame, request_to_frame};
+use leap::coordinator::server::{BinaryClient, Client, Server};
+use leap::coordinator::wire::{self, Frame, FrameKind};
+use leap::coordinator::{
+    BatchPolicy, Coordinator, Executor, NativeExecutor, Op, Router, SessionExecutor,
+};
+use leap::geometry::config::ScanConfig;
+use leap::geometry::{Geometry, ParallelBeam, VolumeGeometry};
+use leap::projector::{Model, Projector};
+use leap::util::json::Json;
+use leap::util::rng::Rng;
+
+fn scan_config() -> ScanConfig {
+    ScanConfig {
+        geometry: Geometry::Parallel(ParallelBeam::standard_2d(12, 30, 1.0)),
+        volume: VolumeGeometry::slice2d(20, 20, 1.0),
+    }
+}
+
+fn start_server() -> (Server, Arc<Coordinator>) {
+    let cfg = scan_config();
+    let native = NativeExecutor::new(
+        Projector::new(cfg.geometry.clone(), cfg.volume.clone(), Model::SF).with_threads(2),
+    );
+    let router: Arc<dyn Executor> = Arc::new(Router::new(vec![
+        Arc::new(native),
+        Arc::new(SessionExecutor::new()),
+    ]));
+    let coord = Arc::new(Coordinator::new(router, BatchPolicy::default(), 1 << 28, 2));
+    let server = Server::start("127.0.0.1:0", coord.clone()).unwrap();
+    (server, coord)
+}
+
+#[test]
+fn frame_roundtrip_every_op_variant_and_odd_sizes() {
+    // encode→decode bit-identity for every Op variant × odd tensor sizes
+    let variants = vec![
+        Op::NativeFp,
+        Op::NativeBp,
+        Op::NativeFbp,
+        Op::SessionFp(1),
+        Op::SessionBp(u64::MAX),
+        Op::SessionFbp(7),
+        Op::Artifact("fp_sf".into()),
+    ];
+    let mut rng = Rng::new(42);
+    for (vi, op) in variants.iter().enumerate() {
+        for n in [0usize, 1, 3, 17, 255, 1001] {
+            let mut payload = vec![0.0f32; n];
+            rng.fill_uniform(&mut payload, -1e6, 1e6);
+            let id = (vi * 10_000 + n) as u64;
+            let frame = request_to_frame(id, op, payload.clone());
+            let decoded = wire::decode_frame(&wire::encode_frame(&frame).unwrap()).unwrap();
+            let req = request_from_frame(decoded).unwrap();
+            assert_eq!(&req.op, op, "op variant {vi} must survive the wire");
+            assert_eq!(req.id, id);
+            let sent: Vec<u32> = payload.iter().map(|v| v.to_bits()).collect();
+            let got: Vec<u32> = req.inputs[0].iter().map(|v| v.to_bits()).collect();
+            assert_eq!(sent, got, "payload bits, variant {vi}, n={n}");
+        }
+    }
+}
+
+#[test]
+fn truncated_frames_are_typed_protocol_errors() {
+    let frame = request_to_frame(5, &Op::SessionFp(3), vec![1.0, 2.0, 3.0]);
+    let bytes = wire::encode_frame(&frame).unwrap();
+    for cut in 0..bytes.len() {
+        match wire::decode_frame(&bytes[..cut]) {
+            Err(LeapError::Protocol(_)) => {}
+            other => panic!("cut at {cut}: expected Protocol error, got {other:?}"),
+        }
+    }
+    // and the full frame still decodes
+    assert!(wire::decode_frame(&bytes).is_ok());
+}
+
+#[test]
+fn version_mismatch_rejected_locally_and_over_tcp() {
+    let mut bytes =
+        wire::encode_frame(&Frame::new(FrameKind::Hello, 0, Json::Null, vec![])).unwrap();
+    bytes[4] = 7;
+    assert_eq!(
+        wire::decode_frame(&bytes).unwrap_err(),
+        LeapError::VersionMismatch { got: 7, want: wire::VERSION }
+    );
+
+    let (server, _coord) = start_server();
+    let stream = TcpStream::connect(server.addr).unwrap();
+    let mut writer = stream.try_clone().unwrap();
+    let mut reader = std::io::BufReader::new(stream);
+    writer.write_all(&bytes).unwrap();
+    writer.flush().unwrap();
+    let reply = wire::read_frame(&mut reader).unwrap().expect("typed error frame");
+    assert_eq!(reply.kind, FrameKind::Error);
+    assert_eq!(reply.to_error().code(), codes::VERSION_MISMATCH);
+}
+
+#[test]
+fn malformed_frame_rejected_over_tcp() {
+    let (server, _coord) = start_server();
+    let stream = TcpStream::connect(server.addr).unwrap();
+    let mut writer = stream.try_clone().unwrap();
+    let mut reader = std::io::BufReader::new(stream);
+    // valid magic/version, payload length not a multiple of 4
+    let mut bytes =
+        wire::encode_frame(&Frame::new(FrameKind::Request, 1, Json::Null, vec![])).unwrap();
+    bytes[20..24].copy_from_slice(&5u32.to_le_bytes());
+    writer.write_all(&bytes).unwrap();
+    writer.flush().unwrap();
+    let reply = wire::read_frame(&mut reader).unwrap().expect("typed error frame");
+    assert_eq!(reply.kind, FrameKind::Error);
+    assert_eq!(reply.to_error().code(), codes::PROTOCOL);
+}
+
+#[test]
+fn v1_json_client_against_v2_server_stays_compatible() {
+    // one server; a legacy v1 JSON client and a v2 binary session client
+    // drive the same projection and must agree bit for bit with the
+    // in-process api path
+    let (server, _coord) = start_server();
+    let cfg = scan_config();
+    let scan = ScanBuilder::from_config(&cfg).model(Model::SF).threads(2).build().unwrap();
+    let mut vol = vec![0.0f32; scan.volume_len()];
+    Rng::new(11).fill_uniform(&mut vol, 0.0, 1.0);
+    let reference = scan.forward(&vol).unwrap();
+
+    let mut v2 = BinaryClient::connect(&server.addr).unwrap();
+    let session = v2.open_session(&cfg, Model::SF, Some(2)).unwrap();
+    let from_v2 = v2.forward(session, &vol).unwrap();
+    assert_eq!(from_v2, reference, "v2 must be bit-identical to in-process");
+
+    let mut v1 = Client::connect(&server.addr).unwrap();
+    let from_v1 = v1.call_tensor("native_fp", &vol).unwrap();
+    assert_eq!(from_v1, reference, "v1 JSON must be bit-identical to in-process");
+
+    // v1 error replies now carry the typed code alongside the message,
+    // and call_tensor reconstructs the typed error from it
+    let bad = v1.call("native_fp", &[&[1.0, 2.0]]).unwrap();
+    assert_eq!(bad.get_f64("code"), Some(codes::SHAPE_MISMATCH as f64));
+    assert!(bad.get_str("error").unwrap().contains("shape mismatch"));
+    let typed = v1.call_tensor("native_fp", &[1.0, 2.0]).unwrap_err();
+    assert_eq!(typed.code(), codes::SHAPE_MISMATCH, "{typed:?}");
+}
+
+#[test]
+fn session_fbp_and_batched_sessions_agree_with_local() {
+    let (server, _coord) = start_server();
+    let cfg = scan_config();
+    let scan = ScanBuilder::from_config(&cfg).model(Model::SF).threads(2).build().unwrap();
+    let truth = leap::phantom::shepp::shepp_logan_2d(8.0, 0.02).rasterize(scan.volume(), 2);
+    let sino = scan.forward(&truth.data).unwrap();
+
+    let mut client = BinaryClient::connect(&server.addr).unwrap();
+    let session = client.open_session(&cfg, Model::SF, Some(2)).unwrap();
+    let served_fbp = client.fbp(session, &sino).unwrap();
+    let local_fbp = scan
+        .solve(leap::api::Solver::Fbp { window: leap::recon::Window::Hann }, &sino)
+        .unwrap();
+    assert_eq!(served_fbp, local_fbp, "session fbp must match the api path");
+
+    // several in-flight session requests (dynamic batching may group
+    // them) all return the same bits
+    let reference = scan.forward(&truth.data).unwrap();
+    let mut handles = Vec::new();
+    let addr = server.addr;
+    for c in 0..3 {
+        let cfg = cfg.clone();
+        let vol = truth.data.clone();
+        let reference = reference.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut cl = BinaryClient::connect(&addr).unwrap();
+            let s = cl.open_session(&cfg, Model::SF, Some(2)).unwrap();
+            for _ in 0..4 {
+                let out = cl.forward(s, &vol).unwrap();
+                assert_eq!(out, reference, "client {c}");
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+}
+
+#[test]
+fn open_session_validates_geometry_with_typed_codes() {
+    let (server, _coord) = start_server();
+    let mut client = BinaryClient::connect(&server.addr).unwrap();
+    let mut bad = scan_config();
+    bad.volume.vx = -1.0; // finite (survives JSON) but degenerate
+    let e = client.open_session(&bad, Model::SF, None).unwrap_err();
+    assert_eq!(e.code(), codes::INVALID_GEOMETRY, "{e:?}");
+    // the same connection still opens a valid session afterwards
+    let id = client.open_session(&scan_config(), Model::SF, None).unwrap();
+    assert!(client.close_session(id).is_ok());
+    let e = client.close_session(id).unwrap_err();
+    assert_eq!(e.code(), codes::UNKNOWN_SESSION, "{e:?}");
+}
