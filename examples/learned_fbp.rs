@@ -1,0 +1,97 @@
+//! Learned FBP — train the tape's trainable-filter pipeline on a
+//! fan-beam Shepp-Logan scan and beat the hand-designed ramp FBP.
+//!
+//! ```bash
+//! cargo run --release --example learned_fbp            # full budget
+//! LEAP_TRAIN_SMOKE=1 cargo run --release --example learned_fbp  # CI smoke
+//! ```
+//!
+//! The pipeline is `x̂ = g · Aᵀ( m ⊙ filter_w(b) )`
+//! ([`leap::tape::learned_fbp`]): a learnable half-spectrum filter `w`
+//! initialized to the analytic apodized ramp, learnable per-sample
+//! sinogram weights `m` (room for the fan-beam cosine weighting the
+//! analytic method hard-codes), and a learnable gain `g`. Training is
+//! supervised — L2 against the rasterized phantom — with deterministic
+//! Adam on exact matched-adjoint gradients, so every run of this example
+//! produces bit-identical parameters and the asserted margin is stable.
+//!
+//! Asserted: within the fixed iteration budget the trained
+//! reconstruction beats `recon::fbp_fan` (Hann window, the crate's
+//! hand-rolled analytic baseline) by **≥ 5 % RMSE** on the training
+//! scan — the tape's "trainable reconstruction" claim, end to end.
+
+use leap::api::ScanBuilder;
+use leap::geometry::{FanBeam, Geometry, VolumeGeometry};
+use leap::metrics;
+use leap::ops::LinearOp;
+use leap::phantom::shepp;
+use leap::projector::Model;
+use leap::recon::{self, Window};
+use leap::tape::{learned_fbp, FitCfg, Optimizer};
+use leap::{Sino, Vol3};
+
+fn main() {
+    let smoke = std::env::var("LEAP_TRAIN_SMOKE").map(|v| v == "1").unwrap_or(false);
+    // problem size and budget: fixed per mode, so the assertion below is
+    // a deterministic gate, not a tuning suggestion
+    let (n, nviews, ncols, iters) = if smoke { (32, 40, 48, 150) } else { (64, 60, 96, 400) };
+
+    // 1. fan-beam Shepp-Logan scan
+    let vg = VolumeGeometry::slice2d(n, n, 1.0);
+    let geom = Geometry::Fan(FanBeam::standard(nviews, ncols, 1.0, 150.0, 300.0));
+    let scan = ScanBuilder::new()
+        .geometry(geom.clone())
+        .volume(vg.clone())
+        .model(Model::SF)
+        .build()
+        .expect("valid scan");
+    let truth = shepp::shepp_logan_2d(n as f64 * 0.42, 0.02).rasterize(&vg, 2);
+    let sino = scan.forward(&truth.data).expect("forward projection");
+
+    // 2. the hand-designed baseline: analytic fan-beam FBP (Hann)
+    let t0 = std::time::Instant::now();
+    let sino_arr = Sino::from_vec(nviews, 1, ncols, sino.clone());
+    let Geometry::Fan(fan) = &geom else { unreachable!() };
+    let fbp: Vol3 = recon::fbp_fan(&vg, fan, &sino_arr, Window::Hann, 0);
+    let fbp_time = t0.elapsed().as_secs_f64();
+    let rmse_fbp = metrics::rmse(&fbp.data, &truth.data);
+
+    // 3. the trainable version, initialized AT the analytic design
+    let a = std::sync::Arc::new(leap::ops::PlanOp::from_plan(scan.plan().clone()))
+        as std::sync::Arc<dyn LinearOp>;
+    let mut pipe = learned_fbp(a, 1.0, Window::Hann).expect("learned fbp pipeline");
+    let inputs: Vec<&[f32]> = vec![&sino, &truth.data];
+    let before = pipe.loss(&inputs).expect("initial loss");
+    let t0 = std::time::Instant::now();
+    let report = scan
+        .fit(
+            &mut pipe,
+            &inputs,
+            &FitCfg { optimizer: Optimizer::adam(0.02), iterations: iters },
+        )
+        .expect("training runs");
+    let train_time = t0.elapsed().as_secs_f64();
+    let learned = pipe.eval(&inputs).expect("trained reconstruction");
+    let rmse_learned = metrics::rmse(&learned, &truth.data);
+
+    println!("fan-beam Shepp-Logan {n}×{n}, {nviews} views × {ncols} cols");
+    println!(
+        "analytic FBP (Hann ramp)     : {fbp_time:6.3}s            RMSE {rmse_fbp:.6}"
+    );
+    println!(
+        "learned FBP  (Adam×{iters:4})   : {train_time:6.3}s train    RMSE {rmse_learned:.6}  \
+         (loss {before:.4e} → {:.4e})",
+        report.final_loss
+    );
+    let ratio = rmse_learned / rmse_fbp;
+    println!(
+        "learned/analytic RMSE ratio: {ratio:.4} (gate: ≤ 0.95 — trainable filter + weights + \
+         gain must beat the hand-designed ramp by ≥ 5%)"
+    );
+    assert!(
+        ratio <= 0.95,
+        "learned FBP must beat analytic FBP RMSE by ≥ 5% within {iters} iterations: \
+         {rmse_learned} vs {rmse_fbp}"
+    );
+    println!("OK — the learned pipeline beats the analytic design it was initialized from.");
+}

@@ -4,12 +4,12 @@
 //!
 //! Run: `cargo bench --bench recon`
 //!
-//! Every measurement is appended as a JSON line to `BENCH_PR4.json` at
+//! Every measurement is appended as a JSON line to `BENCH_PR5.json` at
 //! the repo root (the perf trajectory file; earlier PRs' history lives
-//! in `BENCH_PR2.json`/`BENCH_PR3.json`) in addition to
+//! in `BENCH_PR2.json`–`BENCH_PR4.json`) in addition to
 //! `target/bench_results.jsonl`. Set `LEAP_BENCH_SMOKE=1` to run one
 //! iteration of everything (the CI smoke step — including the
-//! batched-coordinator and wire-protocol cases).
+//! batched-coordinator, wire-protocol and tape-gradient cases).
 
 use std::sync::Arc;
 use std::time::Duration;
@@ -23,15 +23,17 @@ use leap::geometry::config::ScanConfig;
 use leap::geometry::{
     ConeBeam, DetectorShape, FanBeam, Geometry, ModularBeam, ParallelBeam, VolumeGeometry,
 };
+use leap::ops::{LinearOp, Objective, PlanOp, ProjectionLoss};
 use leap::phantom::shepp;
 use leap::projector::{Model, Projector};
 use leap::recon;
+use leap::tape::UnrollCfg;
 use leap::util::pool::chunk_ranges;
-use leap::{Sino, Vol3};
+use leap::{ScanBuilder, Sino, Vol3};
 
 /// Where the perf trajectory lives: the repo root, independent of the
 /// working directory cargo gives the bench binary.
-const TRAJECTORY: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_PR4.json");
+const TRAJECTORY: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_PR5.json");
 
 /// The pre-`ProjectionPlan` SIRT loop: every `A`/`Aᵀ` application goes
 /// through the direct path, re-deriving per-view geometry (trig, SF
@@ -508,6 +510,95 @@ fn main() {
     all.push(m_v1);
     all.push(m_v2);
     drop(server);
+
+    // ── tape gradients: fwd-only vs fwd+bwd, in-process vs served ──
+    // (a) the price of the exact gradient: ProjectionLoss::value runs
+    //     one forward projection, value_and_grad adds the matched
+    //     backprojection — the ratio should sit near 2×, which is the
+    //     paper's "gradients at the cost of one extra projection" claim
+    //     made measurable.
+    let loss_op = PlanOp::new(&ps);
+    let loss = ProjectionLoss::new(&loss_op, &reference, Objective::LeastSquares);
+    let nvox_s = vgs.num_voxels();
+    let mut grad_buf = vec![0.0f32; nvox_s];
+    let mut m_fwd = bench.run("tape loss fwd-only (value)", || {
+        leap::bench_harness::black_box(loss.value(&vol_in))
+    });
+    m_fwd.print();
+    let mut m_grad = bench.run("tape loss fwd+bwd (value_and_grad)", || {
+        leap::bench_harness::black_box(loss.value_and_grad(&vol_in, &mut grad_buf))
+    });
+    let bwd_ratio = m_grad.mean_s / m_fwd.mean_s;
+    m_grad.notes.push(("fwd_plus_bwd_over_fwd".into(), bwd_ratio));
+    m_grad.print();
+    println!("    → exact gradient costs {bwd_ratio:.2}× the forward-only loss");
+    all.push(m_fwd);
+    all.push(m_grad);
+
+    // (b) a K=2 unrolled pipeline's loss+gradients: in-process tape vs
+    //     Op::SessionPipelineGrad over the real TCP stack (registered
+    //     once, then one packed request per evaluation). Bit-identity is
+    //     asserted on every served reply, so the row isolates pure
+    //     serving overhead on a training-loop-shaped workload.
+    let cfg = ScanConfig { geometry: Geometry::Parallel(gs.clone()), volume: vgs.clone() };
+    let grad_scan = ScanBuilder::from_config(&cfg).model(Model::SF).build().expect("scan");
+    let grad_op: Arc<dyn LinearOp> = Arc::new(PlanOp::from_plan(grad_scan.plan().clone()));
+    let pipe = leap::tape::unrolled_gd(
+        grad_op,
+        &UnrollCfg { iterations: 2, step_init: 0.005, nonneg: true },
+    )
+    .expect("unrolled pipeline");
+    let params: Vec<Vec<f32>> = pipe.params().iter().map(|p| p.value.clone()).collect();
+    let pr: Vec<&[f32]> = params.iter().map(|v| v.as_slice()).collect();
+    let grad_inputs: Vec<&[f32]> = vec![&reference, &vol_in]; // [sino, truth]
+    let (l_local, g_local) = pipe.loss_and_grads_with(&pr, &grad_inputs).expect("local grads");
+    let mut m_tape_local = bench.run("tape pipeline_grad K=2 in-process", || {
+        let (l, g) = pipe.loss_and_grads_with(&pr, &grad_inputs).expect("local grads");
+        assert_eq!(l.to_bits(), l_local.to_bits());
+        leap::bench_harness::black_box(g)
+    });
+    m_tape_local.print();
+
+    let grad_backends: Vec<Arc<dyn Executor>> = vec![
+        Arc::new(NativeExecutor::new(ps.clone())),
+        Arc::new(SessionExecutor::new()),
+    ];
+    let grad_coord = Arc::new(Coordinator::new(
+        Arc::new(Router::new(grad_backends)),
+        BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(2) },
+        1 << 30,
+        1,
+    ));
+    let grad_server = Server::start("127.0.0.1:0", grad_coord).expect("bench server");
+    let mut grad_client = BinaryClient::connect(&grad_server.addr).expect("v2 client");
+    let session = grad_client
+        .open_session(&cfg, Model::SF, None)
+        .expect("session handshake");
+    let pid = grad_client.register_pipeline(session, &pipe).expect("register pipeline");
+    let run_served = |client: &mut BinaryClient| {
+        let (l, g) = client
+            .pipeline_grad(session, pid, &pipe, &pr, &grad_inputs)
+            .expect("served grads");
+        assert_eq!(l.to_bits(), l_local.to_bits(), "served loss must be bit-identical");
+        assert_eq!(g, g_local, "served gradients must be bit-identical");
+    };
+    run_served(&mut grad_client); // warm (plan + registration already done)
+    let mut m_tape_served = bench.run("tape pipeline_grad K=2 served (v2 session)", || {
+        run_served(&mut grad_client)
+    });
+    let served_overhead = m_tape_served.mean_s / m_tape_local.mean_s;
+    m_tape_served
+        .notes
+        .push(("served_over_in_process".into(), served_overhead));
+    m_tape_served.print();
+    println!(
+        "    → served pipeline gradients cost {served_overhead:.2}× the in-process tape \
+         (bit-identical replies asserted)"
+    );
+    grad_client.close_session(session).expect("close session");
+    drop(grad_server);
+    all.push(m_tape_local);
+    all.push(m_tape_served);
 
     append_results(&all);
     append_results_to(TRAJECTORY, &all);

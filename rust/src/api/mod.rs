@@ -445,6 +445,65 @@ impl Scan {
         Ok(vol.data)
     }
 
+    /// Start a [`crate::tape::PipelineBuilder`] with this scan's plan
+    /// registered as the `"scan"` operator — the entry point for
+    /// building trainable reconstruction pipelines (see
+    /// [`crate::tape`]). Returns the builder and the operator handle:
+    ///
+    /// ```no_run
+    /// # use leap::api::ScanBuilder;
+    /// # use leap::geometry::{Geometry, ParallelBeam, VolumeGeometry};
+    /// use leap::ops::LinearOp; // domain_shape()/range_shape() on Scan
+    /// # let scan = ScanBuilder::new()
+    /// #     .geometry(Geometry::Parallel(ParallelBeam::standard_2d(8, 16, 1.0)))
+    /// #     .volume(VolumeGeometry::slice2d(16, 16, 1.0))
+    /// #     .build()?;
+    /// let (mut pb, a) = scan.pipeline();
+    /// let b = pb.input(scan.range_shape())?;
+    /// let truth = pb.input(scan.domain_shape())?;
+    /// let x0 = pb.fill(scan.domain_shape(), 0.0)?;
+    /// let ax = pb.apply(a, x0)?;
+    /// # Ok::<(), leap::api::LeapError>(())
+    /// ```
+    ///
+    /// The `"scan"` name is what the serving side rebinds when the same
+    /// pipeline is registered on a protocol-v2 session, so a pipeline
+    /// built here trains identically in-process and over the wire.
+    pub fn pipeline(&self) -> (crate::tape::PipelineBuilder, crate::tape::OpRef) {
+        let mut pb = crate::tape::PipelineBuilder::new();
+        let op = pb
+            .op("scan", Arc::new(PlanOp::from_plan(self.plan.clone())))
+            .expect("first op registration cannot collide");
+        (pb, op)
+    }
+
+    /// Train a tape pipeline's parameters against `inputs` (typed
+    /// validation, deterministic optimization — see
+    /// [`crate::tape::optim::fit`]). The pipeline must have been built
+    /// for **this** scan (its `"scan"` operator shapes are checked, so a
+    /// pipeline from a different geometry is a typed error instead of a
+    /// silent wrong-scan fit).
+    pub fn fit(
+        &self,
+        pipe: &mut crate::tape::Pipeline,
+        inputs: &[&[f32]],
+        cfg: &crate::tape::FitCfg,
+    ) -> Result<crate::tape::FitReport, LeapError> {
+        let dom = self.plan.domain_shape();
+        let rng = self.plan.range_shape();
+        for entry in pipe.op_shapes() {
+            let (name, pdom, prng) = entry;
+            if name == "scan" && (pdom != dom || prng != rng) {
+                return Err(LeapError::InvalidArgument(format!(
+                    "pipeline was built for a different scan \
+                     (its \"scan\" op is {:?}→{:?}, this scan is {:?}→{:?})",
+                    pdom.0, prng.0, dom.0, rng.0
+                )));
+            }
+        }
+        crate::tape::optim::fit(pipe, inputs, cfg)
+    }
+
     /// Evaluate a data-fit objective `L(x)` against measurements `data`
     /// and write its exact gradient (through the matched adjoint) into
     /// `grad`. Returns the loss value.
@@ -643,6 +702,73 @@ mod tests {
         assert_eq!(op.domain_shape().numel(), scan.volume_len());
         let x = vec![0.5f32; scan.volume_len()];
         assert_eq!(op.apply(&x), scan.forward(&x).unwrap());
+    }
+
+    #[test]
+    fn scan_pipeline_builds_and_fit_trains_and_validates() {
+        use crate::tape::{FitCfg, Optimizer};
+        let scan = builder().build().unwrap();
+        // one unrolled GD step with a learnable step size, built through
+        // the front door
+        let (mut pb, a) = scan.pipeline();
+        let b_in = pb.input(scan.range_shape()).unwrap();
+        let truth_in = pb.input(scan.domain_shape()).unwrap();
+        let x0 = pb.fill(scan.domain_shape(), 0.0).unwrap();
+        let ax = pb.apply(a, x0).unwrap();
+        let r = pb.sub(ax, b_in).unwrap();
+        let g = pb.adjoint(a, r).unwrap();
+        let s = pb.scalar_param("step", 0.01).unwrap();
+        let sg = pb.scale(g, s).unwrap();
+        let x1 = pb.sub(x0, sg).unwrap();
+        pb.set_output(x1).unwrap();
+        let l = pb.l2_loss(x1, truth_in).unwrap();
+        pb.set_loss(l).unwrap();
+        let mut pipe = pb.build().unwrap();
+
+        let mut truth = vec![0.0f32; scan.volume_len()];
+        crate::util::rng::Rng::new(13).fill_uniform(&mut truth, 0.1, 1.0);
+        let y = scan.forward(&truth).unwrap();
+        let report = scan
+            .fit(
+                &mut pipe,
+                &[&y, &truth],
+                &FitCfg { optimizer: Optimizer::adam(0.02), iterations: 20 },
+            )
+            .unwrap();
+        assert!(
+            report.final_loss < report.initial_loss,
+            "training must reduce the loss: {} → {}",
+            report.initial_loss,
+            report.final_loss
+        );
+
+        // a pipeline built for a different scan is a typed error
+        let other = ScanBuilder::new()
+            .geometry(Geometry::Parallel(crate::geometry::ParallelBeam::standard_2d(
+                6, 10, 1.0,
+            )))
+            .volume(VolumeGeometry::slice2d(8, 8, 1.0))
+            .threads(1)
+            .build()
+            .unwrap();
+        let e = other
+            .fit(
+                &mut pipe,
+                &[&y, &truth],
+                &FitCfg { optimizer: Optimizer::adam(0.02), iterations: 1 },
+            )
+            .unwrap_err();
+        assert!(matches!(e, LeapError::InvalidArgument(_)), "{e:?}");
+
+        // wrong input lengths surface as typed errors from fit, too
+        let e = scan
+            .fit(
+                &mut pipe,
+                &[&y],
+                &FitCfg { optimizer: Optimizer::adam(0.02), iterations: 1 },
+            )
+            .unwrap_err();
+        assert!(matches!(e, LeapError::InvalidArgument(_)), "{e:?}");
     }
 
     #[test]

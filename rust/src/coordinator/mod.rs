@@ -150,6 +150,13 @@ impl NativeExecutor {
         self.plan.get_or_init(|| plan_cache::global().get_or_plan(&self.projector))
     }
 
+    /// The executor's (lazily built, cached) plan, shared — the session
+    /// layer binds tape pipelines to exactly this plan so served
+    /// gradients match the in-process tape bit for bit.
+    pub fn shared_plan(&self) -> Arc<crate::projector::ProjectionPlan> {
+        self.plan().clone()
+    }
+
     fn vol_from(&self, buf: &[f32]) -> Result<crate::array::Vol3, LeapError> {
         let vg = &self.projector.vg;
         if buf.len() != vg.num_voxels() {

@@ -29,6 +29,14 @@ pub enum Op {
     SessionBp(u64),
     /// FBP/FDK reconstruction on an open protocol-v2 session.
     SessionFbp(u64),
+    /// Loss + parameter gradients of a pipeline registered on an open
+    /// protocol-v2 session (`RegisterPipeline` frame): the request
+    /// payload packs current parameters + inputs
+    /// ([`crate::tape::Pipeline::pack`]), the reply packs the f64 loss
+    /// (two f32 bit-halves) + per-parameter gradients. Batch identity
+    /// includes the pipeline id, so repeated gradient requests on one
+    /// registered pipeline batch together and never mix with another's.
+    SessionPipelineGrad { session: u64, pipeline: u64 },
     /// A named artifact entry point (PJRT backend) or any other
     /// backend-defined operation.
     Artifact(String),
@@ -49,16 +57,28 @@ impl Op {
     }
 
     /// Build an op from protocol-v2 request meta: the short op name plus
-    /// an optional session id.
-    pub fn from_wire(op: &str, session: Option<u64>) -> Result<Op, LeapError> {
-        match session {
-            Some(id) => match op {
+    /// optional session and pipeline ids.
+    pub fn from_wire(op: &str, session: Option<u64>, pipeline: Option<u64>) -> Result<Op, LeapError> {
+        match (session, pipeline) {
+            (Some(id), None) => match op {
                 "fp" | "native_fp" => Ok(Op::SessionFp(id)),
                 "bp" | "native_bp" => Ok(Op::SessionBp(id)),
                 "fbp" | "native_fbp" => Ok(Op::SessionFbp(id)),
+                "pipeline_grad" => Err(LeapError::Protocol(
+                    "pipeline_grad requires a pipeline id in the request meta".into(),
+                )),
                 other => Err(LeapError::UnknownOp(format!("{other} (on session {id})"))),
             },
-            None => Ok(Op::parse_wire(op)),
+            (Some(session), Some(pipeline)) => match op {
+                "pipeline_grad" => Ok(Op::SessionPipelineGrad { session, pipeline }),
+                other => Err(LeapError::UnknownOp(format!(
+                    "{other} (pipeline ops must be pipeline_grad, on session {session})"
+                ))),
+            },
+            (None, Some(_)) => Err(LeapError::Protocol(
+                "a pipeline id without a session id is meaningless".into(),
+            )),
+            (None, None) => Ok(Op::parse_wire(op)),
         }
     }
 
@@ -72,31 +92,50 @@ impl Op {
             Op::SessionFp(_) => "session_fp".into(),
             Op::SessionBp(_) => "session_bp".into(),
             Op::SessionFbp(_) => "session_fbp".into(),
+            Op::SessionPipelineGrad { .. } => "session_pipeline_grad".into(),
             Op::Artifact(name) => name.clone(),
         }
     }
 
-    /// The protocol-v2 wire fields: short op name + session id.
-    /// Round-trips through [`Op::from_wire`] for every variant.
-    pub fn wire_fields(&self) -> (&str, Option<u64>) {
+    /// The protocol-v2 wire fields: short op name + session id +
+    /// pipeline id. Round-trips through [`Op::from_wire`] for every
+    /// variant.
+    pub fn wire_fields(&self) -> (&str, Option<u64>, Option<u64>) {
         match self {
-            Op::NativeFp => ("native_fp", None),
-            Op::NativeBp => ("native_bp", None),
-            Op::NativeFbp => ("native_fbp", None),
-            Op::SessionFp(id) => ("fp", Some(*id)),
-            Op::SessionBp(id) => ("bp", Some(*id)),
-            Op::SessionFbp(id) => ("fbp", Some(*id)),
-            Op::Artifact(name) => (name, None),
+            Op::NativeFp => ("native_fp", None, None),
+            Op::NativeBp => ("native_bp", None, None),
+            Op::NativeFbp => ("native_fbp", None, None),
+            Op::SessionFp(id) => ("fp", Some(*id), None),
+            Op::SessionBp(id) => ("bp", Some(*id), None),
+            Op::SessionFbp(id) => ("fbp", Some(*id), None),
+            Op::SessionPipelineGrad { session, pipeline } => {
+                ("pipeline_grad", Some(*session), Some(*pipeline))
+            }
+            Op::Artifact(name) => (name, None, None),
         }
     }
 
-    /// For a session op: the session id and the equivalent native op it
-    /// executes as on the session's scan.
+    /// For a projection session op: the session id and the equivalent
+    /// native op it executes as on the session's scan. Pipeline-grad ops
+    /// have no native equivalent and return `None` (use
+    /// [`Op::session_id`] for scoping).
     pub fn session_parts(&self) -> Option<(u64, Op)> {
         match self {
             Op::SessionFp(id) => Some((*id, Op::NativeFp)),
             Op::SessionBp(id) => Some((*id, Op::NativeBp)),
             Op::SessionFbp(id) => Some((*id, Op::NativeFbp)),
+            _ => None,
+        }
+    }
+
+    /// The session this op is scoped to, for **every** session variant
+    /// (projection ops and pipeline-grad). Connection-scoping in the
+    /// server must use this, not [`Op::session_parts`] — otherwise a new
+    /// session-op variant would silently bypass the not-yours check.
+    pub fn session_id(&self) -> Option<u64> {
+        match self {
+            Op::SessionFp(id) | Op::SessionBp(id) | Op::SessionFbp(id) => Some(*id),
+            Op::SessionPipelineGrad { session, .. } => Some(*session),
             _ => None,
         }
     }
@@ -128,6 +167,7 @@ mod tests {
             Op::SessionFp(1),
             Op::SessionBp(u64::MAX),
             Op::SessionFbp(42),
+            Op::SessionPipelineGrad { session: 7, pipeline: u64::MAX },
             Op::Artifact("fp_sf".into()),
         ]
     }
@@ -135,8 +175,8 @@ mod tests {
     #[test]
     fn wire_fields_roundtrip_every_variant() {
         for op in every_variant() {
-            let (name, session) = op.wire_fields();
-            assert_eq!(Op::from_wire(name, session).unwrap(), op);
+            let (name, session, pipeline) = op.wire_fields();
+            assert_eq!(Op::from_wire(name, session, pipeline).unwrap(), op);
         }
     }
 
@@ -151,7 +191,15 @@ mod tests {
 
     #[test]
     fn unknown_session_op_is_typed() {
-        let e = Op::from_wire("warp", Some(3)).unwrap_err();
+        let e = Op::from_wire("warp", Some(3), None).unwrap_err();
+        assert!(matches!(e, LeapError::UnknownOp(_)));
+        // pipeline_grad without a pipeline id, or a pipeline id without a
+        // session, are protocol errors, not routing misses
+        let e = Op::from_wire("pipeline_grad", Some(3), None).unwrap_err();
+        assert!(matches!(e, LeapError::Protocol(_)));
+        let e = Op::from_wire("fp", None, Some(1)).unwrap_err();
+        assert!(matches!(e, LeapError::Protocol(_)));
+        let e = Op::from_wire("fp", Some(3), Some(1)).unwrap_err();
         assert!(matches!(e, LeapError::UnknownOp(_)));
     }
 
@@ -159,5 +207,31 @@ mod tests {
     fn sessions_do_not_share_batch_identity() {
         assert_ne!(Op::SessionFp(1), Op::SessionFp(2));
         assert_eq!(Op::SessionFp(1), Op::SessionFp(1));
+        // pipeline identity includes the pipeline id
+        assert_ne!(
+            Op::SessionPipelineGrad { session: 1, pipeline: 1 },
+            Op::SessionPipelineGrad { session: 1, pipeline: 2 }
+        );
+    }
+
+    #[test]
+    fn session_id_covers_every_session_variant() {
+        for op in every_variant() {
+            let scoped = op.session_id().is_some();
+            let is_session = matches!(
+                op,
+                Op::SessionFp(_)
+                    | Op::SessionBp(_)
+                    | Op::SessionFbp(_)
+                    | Op::SessionPipelineGrad { .. }
+            );
+            assert_eq!(scoped, is_session, "{op:?}");
+        }
+        assert_eq!(
+            Op::SessionPipelineGrad { session: 9, pipeline: 1 }.session_id(),
+            Some(9)
+        );
+        // …but it has no native projection equivalent
+        assert!(Op::SessionPipelineGrad { session: 9, pipeline: 1 }.session_parts().is_none());
     }
 }

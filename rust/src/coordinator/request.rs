@@ -121,14 +121,17 @@ pub fn response_to_json(r: &Response) -> Json {
 // protocol v2 (binary frames)
 // ---------------------------------------------------------------------------
 
-/// The v2 Request meta for `op`. Session ids are encoded as decimal
-/// strings — JSON numbers are f64 on this wire and would silently lose
-/// precision above 2^53.
+/// The v2 Request meta for `op`. Session and pipeline ids are encoded
+/// as decimal strings — JSON numbers are f64 on this wire and would
+/// silently lose precision above 2^53.
 pub fn request_meta(op: &Op) -> Json {
-    let (name, session) = op.wire_fields();
+    let (name, session, pipeline) = op.wire_fields();
     let mut meta = vec![("op", Json::Str(name.to_string()))];
     if let Some(s) = session {
         meta.push(("session", Json::Str(s.to_string())));
+    }
+    if let Some(p) = pipeline {
+        meta.push(("pipeline", Json::Str(p.to_string())));
     }
     Json::obj(meta)
 }
@@ -141,19 +144,19 @@ pub fn request_to_frame(id: u64, op: &Op, input: Vec<f32>) -> Frame {
     Frame::new(FrameKind::Request, id, request_meta(op), input)
 }
 
-/// Parse a session id from frame meta: canonically a decimal string
-/// (lossless u64); a JSON number is tolerated for hand-rolled clients
-/// but only exact below 2^53.
-fn session_from_meta(meta: &Json) -> Result<Option<u64>, LeapError> {
-    match meta.get("session") {
+/// Parse a session/pipeline id from frame meta: canonically a decimal
+/// string (lossless u64); a JSON number is tolerated for hand-rolled
+/// clients but only exact below 2^53.
+fn id_from_meta(meta: &Json, key: &str) -> Result<Option<u64>, LeapError> {
+    match meta.get(key) {
         None => Ok(None),
         Some(Json::Str(s)) => s
             .parse::<u64>()
             .map(Some)
-            .map_err(|_| LeapError::Protocol(format!("bad session id {s:?}"))),
+            .map_err(|_| LeapError::Protocol(format!("bad {key} id {s:?}"))),
         Some(Json::Num(n)) => Ok(Some(*n as u64)),
         Some(other) => Err(LeapError::Protocol(format!(
-            "session must be a decimal string or number, got {other}"
+            "{key} must be a decimal string or number, got {other}"
         ))),
     }
 }
@@ -169,8 +172,9 @@ pub fn request_from_frame(f: Frame) -> Result<Request, LeapError> {
         .meta
         .get_str("op")
         .ok_or_else(|| LeapError::Protocol("request meta missing op".into()))?;
-    let session = session_from_meta(&f.meta)?;
-    let op = Op::from_wire(name, session)?;
+    let session = id_from_meta(&f.meta, "session")?;
+    let pipeline = id_from_meta(&f.meta, "pipeline")?;
+    let op = Op::from_wire(name, session, pipeline)?;
     Ok(Request::new(f.id, op, vec![f.payload]))
 }
 
@@ -205,7 +209,7 @@ pub fn response_to_frame(mut r: Response) -> Frame {
             f
         }
         None => {
-            let (name, session) = r.op.wire_fields();
+            let (name, session, pipeline) = r.op.wire_fields();
             let mut meta = vec![
                 ("op", Json::Str(name.to_string())),
                 ("latency_us", Json::Num(r.latency_us as f64)),
@@ -214,6 +218,9 @@ pub fn response_to_frame(mut r: Response) -> Frame {
             ];
             if let Some(s) = session {
                 meta.push(("session", Json::Str(s.to_string())));
+            }
+            if let Some(p) = pipeline {
+                meta.push(("pipeline", Json::Str(p.to_string())));
             }
             let meta = Json::obj(meta);
             let payload =
@@ -291,6 +298,7 @@ mod tests {
             Op::SessionFp(3),
             Op::SessionBp(u64::MAX),
             Op::SessionFbp(0),
+            Op::SessionPipelineGrad { session: 5, pipeline: (1u64 << 53) + 1 },
             Op::Artifact("fp_sf".into()),
         ];
         for (i, op) in variants.into_iter().enumerate() {

@@ -30,10 +30,12 @@ use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
+use std::time::Duration;
 
 use crate::api::LeapError;
 use crate::geometry::config::{geometry_to_json, volume_to_json, ScanConfig};
 use crate::projector::Model;
+use crate::tape;
 use crate::util::json::{parse, Json};
 
 use super::op::Op;
@@ -41,6 +43,18 @@ use super::request::{request_from_frame, request_from_json, response_to_frame};
 use super::session::SessionRegistry;
 use super::wire::{self, Frame, FrameKind};
 use super::Coordinator;
+
+/// Per-read **inactivity** timeout applied to a connection until its
+/// first complete frame (v2) or line (v1). Without it, a peer that
+/// connects and sends zero or one bytes then stalls would pin a server
+/// thread (and its connection state) forever — the reads are blocking.
+/// Note this bounds the gap between bytes, not the whole exchange: a
+/// deliberate slow-drip sender (one byte per 9 s) can stretch its first
+/// frame out indefinitely — total-stall protection, not an absolute
+/// deadline. Once the first exchange completes the timeout is lifted:
+/// idle-but-honest clients (a training loop thinking between gradient
+/// requests) are never dropped.
+pub const HANDSHAKE_TIMEOUT: Duration = Duration::from_secs(10);
 
 /// A running server; dropping stops accepting (existing connections finish).
 pub struct Server {
@@ -51,8 +65,18 @@ pub struct Server {
 
 impl Server {
     /// Bind `addr` (e.g. "127.0.0.1:0") and serve `coordinator` until
-    /// dropped.
+    /// dropped (first-exchange deadline = [`HANDSHAKE_TIMEOUT`]).
     pub fn start(addr: &str, coordinator: Arc<Coordinator>) -> Result<Server, LeapError> {
+        Server::start_with_handshake_timeout(addr, coordinator, HANDSHAKE_TIMEOUT)
+    }
+
+    /// [`Server::start`] with an explicit first-exchange deadline
+    /// (tests use short deadlines to exercise the stall paths).
+    pub fn start_with_handshake_timeout(
+        addr: &str,
+        coordinator: Arc<Coordinator>,
+        handshake: Duration,
+    ) -> Result<Server, LeapError> {
         let listener = TcpListener::bind(addr)?;
         let local = listener.local_addr()?;
         listener.set_nonblocking(true)?;
@@ -67,7 +91,7 @@ impl Server {
                     Ok((stream, _)) => {
                         let coord = coordinator.clone();
                         std::thread::spawn(move || {
-                            let _ = handle_conn(stream, coord);
+                            let _ = handle_conn(stream, coord, handshake);
                         });
                     }
                     Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
@@ -90,22 +114,55 @@ impl Drop for Server {
     }
 }
 
-fn handle_conn(stream: TcpStream, coord: Arc<Coordinator>) -> Result<(), LeapError> {
-    let writer = stream.try_clone()?;
+/// Whether an I/O error is the read-deadline expiring (unix reports
+/// `WouldBlock`, windows `TimedOut`).
+fn is_timeout(e: &std::io::Error) -> bool {
+    matches!(e.kind(), std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut)
+}
+
+fn handle_conn(
+    stream: TcpStream,
+    coord: Arc<Coordinator>,
+    handshake: Duration,
+) -> Result<(), LeapError> {
+    // first-exchange deadline (cleared by the per-protocol loops after
+    // the first complete frame/line — see HANDSHAKE_TIMEOUT)
+    stream.set_read_timeout(Some(handshake))?;
+    let mut writer = stream.try_clone()?;
     let mut reader = BufReader::new(stream);
     // sniff the protocol from the first byte without consuming it:
-    // JSON documents open with '{', v2 frames with the "LEAP" magic
-    let first = {
-        let buf = reader.fill_buf()?;
-        match buf.first() {
-            None => return Ok(()), // closed before sending anything
+    // JSON documents open with '{' (or whitespace), v2 frames with the
+    // "LEAP" magic; anything else is not a protocol we speak
+    let first = match reader.fill_buf() {
+        Ok(buf) => match buf.first() {
+            None => return Ok(()), // closed before sending anything: clean
             Some(&b) => b,
+        },
+        Err(e) if is_timeout(&e) => {
+            // connected, sent nothing, stalled: nothing sniffed, so no
+            // reply format is owed — just release the thread
+            return Err(LeapError::Io("handshake timed out before any byte arrived".into()));
         }
+        Err(e) => return Err(e.into()),
     };
     if first == wire::MAGIC[0] {
         serve_v2(reader, writer, coord)
-    } else {
+    } else if first == b'{' || first.is_ascii_whitespace() {
         serve_v1(reader, writer, coord)
+    } else {
+        // unrecognized protocol: say so once, in the (text) format any
+        // probing client can read, then close — never fall into the v1
+        // loop to re-reject every subsequent line of noise
+        let e = LeapError::Protocol(format!(
+            "unrecognized protocol (first byte 0x{first:02x}; expected '{{' for JSON lines \
+             or 'L' for LEAP v2 frames)"
+        ));
+        let reply = Json::obj(vec![
+            ("error", Json::Str(e.to_string())),
+            ("code", Json::Num(e.code() as f64)),
+        ]);
+        let _ = writeln!(writer, "{reply}");
+        Err(e)
     }
 }
 
@@ -114,12 +171,35 @@ fn handle_conn(stream: TcpStream, coord: Arc<Coordinator>) -> Result<(), LeapErr
 // ---------------------------------------------------------------------------
 
 fn serve_v1(
-    reader: BufReader<TcpStream>,
+    mut reader: BufReader<TcpStream>,
     mut writer: TcpStream,
     coord: Arc<Coordinator>,
 ) -> Result<(), LeapError> {
-    for line in reader.lines() {
-        let line = line?;
+    let mut first_exchange = true;
+    loop {
+        let mut line = String::new();
+        match reader.read_line(&mut line) {
+            Ok(0) => return Ok(()), // clean disconnect
+            Ok(_) => {}
+            Err(e) if is_timeout(&e) => {
+                // stalled before completing the first line: reply with
+                // the typed code in the v1 format, then close
+                let err = LeapError::Io("handshake timed out mid-line".into());
+                let reply = Json::obj(vec![
+                    ("error", Json::Str(err.to_string())),
+                    ("code", Json::Num(err.code() as f64)),
+                ]);
+                let _ = writeln!(writer, "{reply}");
+                return Err(err);
+            }
+            Err(e) => return Err(e.into()),
+        }
+        if first_exchange {
+            first_exchange = false;
+            // a real v1 speaker: lift the first-exchange deadline so
+            // idle-but-connected clients are not dropped
+            writer.set_read_timeout(None)?;
+        }
         if line.trim().is_empty() {
             continue;
         }
@@ -173,7 +253,6 @@ fn serve_v1(
         };
         writeln!(writer, "{reply}")?;
     }
-    Ok(())
 }
 
 // ---------------------------------------------------------------------------
@@ -202,17 +281,25 @@ fn serve_v2_loop(
     registry: &'static SessionRegistry,
     opened: &mut Vec<u64>,
 ) -> Result<(), LeapError> {
+    let mut first_exchange = true;
     loop {
         let frame = match wire::read_frame(reader) {
             Ok(Some(f)) => f,
             Ok(None) => return Ok(()), // clean disconnect
             Err(e) => {
-                // typed reject (version mismatch, malformed frame), then
+                // typed reject (version mismatch, malformed frame, or the
+                // first-exchange deadline expiring mid-frame), then
                 // close: framing cannot be trusted after a bad header
                 let _ = wire::write_frame(writer, &Frame::error(0, &e));
                 return Err(e);
             }
         };
+        if first_exchange {
+            first_exchange = false;
+            // a real v2 speaker: lift the first-exchange deadline (see
+            // HANDSHAKE_TIMEOUT)
+            writer.set_read_timeout(None)?;
+        }
         match frame.kind {
             FrameKind::Hello => {
                 let reply = Frame::new(
@@ -258,17 +345,52 @@ fn serve_v2_loop(
                     wire::write_frame(writer, &Frame::error(frame.id, &e))?;
                 }
             }
+            FrameKind::RegisterPipeline => {
+                // connection-scoped like CloseSession: registering on a
+                // session you did not open answers exactly like a
+                // session that never existed
+                if !opened.contains(&frame.id) {
+                    let e = LeapError::UnknownSession(frame.id);
+                    wire::write_frame(writer, &Frame::error(frame.id, &e))?;
+                    continue;
+                }
+                let result = frame
+                    .meta
+                    .get("pipeline")
+                    .ok_or_else(|| {
+                        LeapError::Protocol("register-pipeline meta missing pipeline spec".into())
+                    })
+                    .and_then(|spec| registry.register_pipeline(frame.id, spec));
+                match result {
+                    Ok(pid) => {
+                        // reply id = pipeline id; meta repeats both ids as
+                        // decimal strings (lossless above 2^53)
+                        let reply = Frame::new(
+                            FrameKind::RegisterPipeline,
+                            pid,
+                            Json::obj(vec![
+                                ("session", Json::Str(frame.id.to_string())),
+                                ("pipeline", Json::Str(pid.to_string())),
+                            ]),
+                            Vec::new(),
+                        );
+                        wire::write_frame(writer, &reply)?;
+                    }
+                    Err(e) => wire::write_frame(writer, &Frame::error(frame.id, &e))?,
+                }
+            }
             FrameKind::Request => {
                 let id = frame.id;
                 match request_from_frame(frame) {
                     Err(e) => wire::write_frame(writer, &Frame::error(id, &e))?,
                     Ok(req) => {
-                        // session ops are scoped to the connection that
-                        // opened the session (ids are sequential and
-                        // guessable; answering not-yours identically to
+                        // session ops — projections AND pipeline-grad —
+                        // are scoped to the connection that opened the
+                        // session (ids are sequential and guessable;
+                        // answering not-yours identically to
                         // never-existed leaks neither liveness nor the
                         // victim scan's shape)
-                        if let Some((sid, _)) = req.op.session_parts() {
+                        if let Some(sid) = req.op.session_id() {
                             if !opened.contains(&sid) {
                                 let e = LeapError::UnknownSession(sid);
                                 wire::write_frame(writer, &Frame::error(id, &e))?;
@@ -501,6 +623,45 @@ impl BinaryClient {
     pub fn fbp(&mut self, session: u64, sino: &[f32]) -> Result<Vec<f32>, LeapError> {
         Ok(self.call(&Op::SessionFbp(session), sino)?.payload)
     }
+
+    /// Register a tape pipeline (its structure, not its parameter
+    /// values) on an open session; returns the pipeline id for
+    /// [`BinaryClient::pipeline_grad`]. The server rebinds the spec's
+    /// `"scan"` operator to the session's pinned plan.
+    pub fn register_pipeline(
+        &mut self,
+        session: u64,
+        pipe: &tape::Pipeline,
+    ) -> Result<u64, LeapError> {
+        let meta = Json::obj(vec![("pipeline", tape::pipeline_to_json(pipe))]);
+        let reply =
+            self.roundtrip(&Frame::new(FrameKind::RegisterPipeline, session, meta, Vec::new()))?;
+        match reply.kind {
+            FrameKind::RegisterPipeline => Ok(reply.id),
+            FrameKind::Error => Err(reply.to_error()),
+            k => Err(LeapError::Protocol(format!("unexpected {k:?} register-pipeline reply"))),
+        }
+    }
+
+    /// Evaluate a registered pipeline's loss + parameter gradients on
+    /// the server: params + inputs are packed into one tensor
+    /// ([`tape::Pipeline::pack`]), the reply unpacks to the exact f64
+    /// loss and per-parameter gradients — bit-identical to calling
+    /// [`tape::Pipeline::loss_and_grads_with`] locally on the same plan.
+    /// `pipe` is the local copy of the registered pipeline (it defines
+    /// the packing layout).
+    pub fn pipeline_grad(
+        &mut self,
+        session: u64,
+        pipeline: u64,
+        pipe: &tape::Pipeline,
+        params: &[&[f32]],
+        inputs: &[&[f32]],
+    ) -> Result<(f64, Vec<Vec<f32>>), LeapError> {
+        let packed = pipe.pack(params, inputs)?;
+        let reply = self.call(&Op::SessionPipelineGrad { session, pipeline }, &packed)?;
+        pipe.unpack_grad_reply(&reply.payload)
+    }
 }
 
 #[cfg(test)]
@@ -708,6 +869,156 @@ mod tests {
         let reply = wire::read_frame(&mut reader).unwrap().expect("error frame");
         assert_eq!(reply.kind, FrameKind::Error);
         assert_eq!(reply.to_error().code(), crate::api::codes::PROTOCOL);
+    }
+
+    #[test]
+    fn v2_pipeline_grad_over_tcp_is_bit_identical_to_the_in_process_tape() {
+        let (server, _coord) = start_native();
+        let cfg = scan_config();
+        let scan = crate::api::ScanBuilder::from_config(&cfg)
+            .model(Model::SF)
+            .threads(2)
+            .build()
+            .unwrap();
+        let local: std::sync::Arc<dyn crate::ops::LinearOp> =
+            std::sync::Arc::new(crate::ops::PlanOp::from_plan(scan.plan().clone()));
+        let pipe = tape::unrolled_gd(
+            local,
+            &tape::UnrollCfg { iterations: 2, step_init: 0.01, nonneg: true },
+        )
+        .unwrap();
+
+        let mut client = BinaryClient::connect(&server.addr).unwrap();
+        let session = client.open_session(&cfg, Model::SF, Some(2)).unwrap();
+        let pid = client.register_pipeline(session, &pipe).unwrap();
+
+        let mut rng = crate::util::rng::Rng::new(29);
+        let params: Vec<Vec<f32>> = pipe
+            .params()
+            .iter()
+            .map(|p| {
+                let mut v = vec![0.0f32; p.shape.numel()];
+                rng.fill_uniform(&mut v, 0.005, 0.02);
+                v
+            })
+            .collect();
+        let inputs: Vec<Vec<f32>> = pipe
+            .input_shapes()
+            .iter()
+            .map(|s| {
+                let mut v = vec![0.0f32; s.numel()];
+                rng.fill_uniform(&mut v, 0.0, 1.0);
+                v
+            })
+            .collect();
+        let pr: Vec<&[f32]> = params.iter().map(|v| v.as_slice()).collect();
+        let ir: Vec<&[f32]> = inputs.iter().map(|v| v.as_slice()).collect();
+        let (served_loss, served_grads) =
+            client.pipeline_grad(session, pid, &pipe, &pr, &ir).unwrap();
+        let (local_loss, local_grads) = pipe.loss_and_grads_with(&pr, &ir).unwrap();
+        assert_eq!(
+            served_loss.to_bits(),
+            local_loss.to_bits(),
+            "served loss must be bit-identical to the in-process tape"
+        );
+        assert_eq!(served_grads, local_grads, "served gradients must be bit-identical");
+
+        // a second connection cannot register on (or grad against) a
+        // session it did not open — identical to a nonexistent session
+        let mut intruder = BinaryClient::connect(&server.addr).unwrap();
+        let e = intruder.register_pipeline(session, &pipe).unwrap_err();
+        assert_eq!(e.code(), crate::api::codes::UNKNOWN_SESSION, "{e:?}");
+        let e = intruder.pipeline_grad(session, pid, &pipe, &pr, &ir).unwrap_err();
+        assert_eq!(e.code(), crate::api::codes::UNKNOWN_SESSION, "{e:?}");
+
+        client.close_session(session).unwrap();
+        // the pipeline died with its session
+        let e = client.pipeline_grad(session, pid, &pipe, &pr, &ir).unwrap_err();
+        assert_eq!(e.code(), crate::api::codes::UNKNOWN_SESSION, "{e:?}");
+    }
+
+    // ── protocol-sniffing robustness (first-exchange hardening) ────────
+
+    #[test]
+    fn zero_byte_connection_closes_cleanly_and_server_survives() {
+        let (server, _coord) = start_mock();
+        {
+            let stream = TcpStream::connect(server.addr).unwrap();
+            stream.shutdown(std::net::Shutdown::Write).unwrap();
+            // server should see EOF and close without writing anything
+            let mut reader = BufReader::new(stream);
+            let mut buf = String::new();
+            let n = reader.read_line(&mut buf).unwrap();
+            assert_eq!(n, 0, "no reply owed on a 0-byte connection, got {buf:?}");
+        }
+        // the accept loop is unharmed: a real client still works
+        let mut client = Client::connect(&server.addr).unwrap();
+        assert!(client.call("echo", &[&[1.0]]).unwrap().get("outputs").is_some());
+    }
+
+    #[test]
+    fn one_byte_then_close_is_a_typed_protocol_error() {
+        let (server, _coord) = start_mock();
+        let stream = TcpStream::connect(server.addr).unwrap();
+        stream.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        let mut writer = stream.try_clone().unwrap();
+        writer.write_all(b"L").unwrap(); // sniffs as v2 …
+        writer.flush().unwrap();
+        stream.shutdown(std::net::Shutdown::Write).unwrap(); // … then EOF mid-header
+        let mut reader = BufReader::new(stream);
+        let reply = wire::read_frame(&mut reader).unwrap().expect("typed error frame");
+        assert_eq!(reply.kind, FrameKind::Error);
+        assert_eq!(reply.to_error().code(), crate::api::codes::PROTOCOL, "{:?}", reply.to_error());
+        // and the connection closes cleanly afterwards
+        assert!(matches!(wire::read_frame(&mut reader), Ok(None) | Err(_)));
+    }
+
+    #[test]
+    fn one_byte_then_stall_times_out_with_a_typed_error_never_hangs() {
+        let coord = Arc::new(Coordinator::new(
+            Arc::new(MockExecutor),
+            BatchPolicy::default(),
+            1 << 20,
+            1,
+        ));
+        let server = Server::start_with_handshake_timeout(
+            "127.0.0.1:0",
+            coord,
+            Duration::from_millis(100),
+        )
+        .unwrap();
+        let stream = TcpStream::connect(server.addr).unwrap();
+        stream.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        let mut writer = stream.try_clone().unwrap();
+        writer.write_all(b"L").unwrap(); // sniffs as v2 …
+        writer.flush().unwrap();
+        // … then stall (write half stays open). The handshake deadline
+        // must fire: a typed error frame, then the connection closes.
+        let mut reader = BufReader::new(stream);
+        let reply = wire::read_frame(&mut reader).unwrap().expect("typed error frame");
+        assert_eq!(reply.kind, FrameKind::Error);
+        assert_eq!(reply.to_error().code(), crate::api::codes::IO, "{:?}", reply.to_error());
+        assert!(matches!(wire::read_frame(&mut reader), Ok(None) | Err(_)));
+    }
+
+    #[test]
+    fn unrecognized_first_byte_is_rejected_with_a_typed_error_line() {
+        let (server, _coord) = start_mock();
+        let stream = TcpStream::connect(server.addr).unwrap();
+        stream.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        let mut writer = stream.try_clone().unwrap();
+        // neither '{' (v1) nor 'L' (v2): a protocol we don't speak
+        writer.write_all(b"GET / HTTP/1.1\r\n").unwrap();
+        writer.flush().unwrap();
+        let mut reader = BufReader::new(stream);
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        let reply = parse(&line).expect("one JSON error line");
+        assert!(reply.get_str("error").unwrap().contains("unrecognized protocol"), "{line}");
+        assert_eq!(reply.get_f64("code"), Some(crate::api::codes::PROTOCOL as f64));
+        // then the server closes instead of re-rejecting every line
+        let mut rest = String::new();
+        assert_eq!(reader.read_line(&mut rest).unwrap(), 0, "connection must close: {rest:?}");
     }
 
     #[test]

@@ -26,7 +26,9 @@ use std::sync::{Arc, Mutex, OnceLock};
 
 use crate::api::{LeapError, ScanBuilder};
 use crate::geometry::config::{geometry_from_json, volume_from_json, ScanConfig};
+use crate::ops::{LinearOp, PlanOp};
 use crate::projector::Model;
+use crate::tape;
 use crate::util::json::Json;
 
 use super::op::Op;
@@ -48,10 +50,26 @@ pub const SESSION_MAX_BYTES: usize = 8 << 30;
 /// Refusals are typed [`LeapError::BudgetExceeded`] (resource code 6).
 pub const MAX_OPEN_SESSIONS: usize = 64;
 
-/// The open sessions of a process: id → the executor serving that scan.
+/// Upper bound on tape pipelines registered per session — a registered
+/// pipeline pins its node graph (and the `"scan"` op's scratch) for the
+/// session lifetime, so registration is capped like sessions are.
+pub const MAX_PIPELINES_PER_SESSION: usize = 16;
+
+/// One open session: the executor serving its projection ops, plus the
+/// tape pipelines registered against its pinned plan
+/// ([`Op::SessionPipelineGrad`]). Pipelines are evaluation-stateless
+/// (parameters travel per request), so sharing them behind an `Arc`
+/// needs no further locking.
+pub struct Session {
+    exec: Arc<NativeExecutor>,
+    pipelines: Mutex<HashMap<u64, Arc<tape::Pipeline>>>,
+    next_pipeline: AtomicU64,
+}
+
+/// The open sessions of a process: id → that scan's [`Session`].
 pub struct SessionRegistry {
     next: AtomicU64,
-    sessions: Mutex<HashMap<u64, Arc<NativeExecutor>>>,
+    sessions: Mutex<HashMap<u64, Arc<Session>>>,
 }
 
 impl Default for SessionRegistry {
@@ -126,6 +144,11 @@ impl SessionRegistry {
         }
         let scan = builder.build()?;
         let exec = NativeExecutor::with_plan(scan.projector().clone(), scan.plan().clone());
+        let session = Session {
+            exec: Arc::new(exec),
+            pipelines: Mutex::new(HashMap::new()),
+            next_pipeline: AtomicU64::new(1),
+        };
         let id = self.next.fetch_add(1, Ordering::Relaxed);
         {
             let mut sessions = self.sessions.lock().unwrap();
@@ -137,7 +160,7 @@ impl SessionRegistry {
                     cap: MAX_OPEN_SESSIONS,
                 });
             }
-            sessions.insert(id, Arc::new(exec));
+            sessions.insert(id, Arc::new(session));
         }
         Ok(id)
     }
@@ -170,15 +193,98 @@ impl SessionRegistry {
         self.open(&ScanConfig { geometry, volume }, model, threads)
     }
 
-    /// Drop a session (its plan stays cached only if the plan cache
-    /// still holds it). Returns whether the id was open.
+    /// Drop a session — its registered pipelines go with it (their plan
+    /// stays cached only if the plan cache still holds it). Returns
+    /// whether the id was open.
     pub fn close(&self, id: u64) -> bool {
         self.sessions.lock().unwrap().remove(&id).is_some()
     }
 
     /// The executor serving session `id`.
     pub fn executor(&self, id: u64) -> Option<Arc<NativeExecutor>> {
-        self.sessions.lock().unwrap().get(&id).cloned()
+        self.sessions.lock().unwrap().get(&id).map(|s| s.exec.clone())
+    }
+
+    /// Validate a tape spec against session `id`'s pinned plan and
+    /// register the pipeline; returns the pipeline id
+    /// ([`Op::SessionPipelineGrad`] names it). The spec's `"scan"`
+    /// operator is rebound to the session's own plan, so every
+    /// evaluation uses exactly the floats the in-process tape would.
+    /// Oversized pipelines — a packed request or gradient reply that
+    /// could not travel in one v2 frame — are refused at registration,
+    /// not on their first request.
+    pub fn register_pipeline(&self, id: u64, spec: &Json) -> Result<u64, LeapError> {
+        let session = self
+            .sessions
+            .lock()
+            .unwrap()
+            .get(&id)
+            .cloned()
+            .ok_or(LeapError::UnknownSession(id))?;
+        let scan: Arc<dyn LinearOp> =
+            Arc::new(PlanOp::from_plan(session.exec.shared_plan()));
+        let pipe = tape::pipeline_from_json(spec, &[("scan", scan)])?;
+        if pipe.loss_node().is_none() {
+            return Err(LeapError::InvalidArgument(
+                "a served pipeline needs a loss node (pipeline_grad evaluates it)".into(),
+            ));
+        }
+        let frame_cap = super::wire::MAX_PAYLOAD_BYTES / 4;
+        let worst = pipe.packed_len().max(pipe.grad_reply_len());
+        if worst > frame_cap {
+            return Err(LeapError::BudgetExceeded {
+                needed: worst * 4,
+                cap: super::wire::MAX_PAYLOAD_BYTES,
+            });
+        }
+        // the frame caps only bound params + inputs; a hostile spec can
+        // still declare huge *intermediate* nodes (every node's forward
+        // value stays alive for the backward sweep), so gate the whole
+        // evaluation footprint like session registration gates plans
+        let eval_bytes = pipe.eval_bytes_estimate();
+        if eval_bytes > SESSION_MAX_BYTES {
+            return Err(LeapError::BudgetExceeded {
+                needed: eval_bytes,
+                cap: SESSION_MAX_BYTES,
+            });
+        }
+        let mut pipelines = session.pipelines.lock().unwrap();
+        if pipelines.len() >= MAX_PIPELINES_PER_SESSION {
+            return Err(LeapError::BudgetExceeded {
+                needed: MAX_PIPELINES_PER_SESSION + 1,
+                cap: MAX_PIPELINES_PER_SESSION,
+            });
+        }
+        let pid = session.next_pipeline.fetch_add(1, Ordering::Relaxed);
+        pipelines.insert(pid, Arc::new(pipe));
+        Ok(pid)
+    }
+
+    /// One-lookup typed resolve: a missing session is
+    /// [`LeapError::UnknownSession`], a live session without that
+    /// pipeline id is [`LeapError::InvalidArgument`]. Takes the global
+    /// sessions lock exactly once (the fetched [`Session`] already
+    /// distinguishes the two failure modes) — this sits on the
+    /// `pipeline_grad` hot path, where a training loop hits it per
+    /// request.
+    pub fn resolve_pipeline(
+        &self,
+        session: u64,
+        pipeline: u64,
+    ) -> Result<Arc<tape::Pipeline>, LeapError> {
+        let s = self
+            .sessions
+            .lock()
+            .unwrap()
+            .get(&session)
+            .cloned()
+            .ok_or(LeapError::UnknownSession(session))?;
+        let p = s.pipelines.lock().unwrap().get(&pipeline).cloned();
+        p.ok_or_else(|| {
+            LeapError::InvalidArgument(format!(
+                "session {session} has no registered pipeline {pipeline}"
+            ))
+        })
     }
 
     /// Number of open sessions.
@@ -222,10 +328,35 @@ impl SessionExecutor {
         let exec = self.registry.executor(id).ok_or(LeapError::UnknownSession(id))?;
         Ok((exec, native_op))
     }
+
+    fn resolve_pipeline(&self, op: &Op) -> Result<Arc<tape::Pipeline>, LeapError> {
+        let Op::SessionPipelineGrad { session, pipeline } = op else {
+            return Err(LeapError::UnknownOp(op.label()));
+        };
+        self.registry.resolve_pipeline(*session, *pipeline)
+    }
+
+    /// Evaluate one packed pipeline-grad request (see
+    /// [`Op::SessionPipelineGrad`] for the payload layout).
+    fn pipeline_grad(
+        pipe: &tape::Pipeline,
+        inputs: &[&[f32]],
+    ) -> Result<Vec<Vec<f32>>, LeapError> {
+        let packed = inputs
+            .first()
+            .ok_or_else(|| LeapError::Protocol("pipeline_grad: missing input tensor".into()))?;
+        let (params, ins) = pipe.split_packed(packed)?;
+        let (loss, grads) = pipe.loss_and_grads_with(&params, &ins)?;
+        Ok(vec![pipe.pack_grad_reply(loss, &grads)])
+    }
 }
 
 impl Executor for SessionExecutor {
     fn execute(&self, op: &Op, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>, LeapError> {
+        if matches!(op, Op::SessionPipelineGrad { .. }) {
+            let pipe = self.resolve_pipeline(op)?;
+            return Self::pipeline_grad(&pipe, inputs);
+        }
         let (exec, native_op) = self.resolve(op)?;
         exec.execute(&native_op, inputs)
     }
@@ -235,6 +366,17 @@ impl Executor for SessionExecutor {
         op: &Op,
         items: &[Vec<&[f32]>],
     ) -> Vec<Result<Vec<Vec<f32>>, LeapError>> {
+        if matches!(op, Op::SessionPipelineGrad { .. }) {
+            // one pipeline resolve for the whole batch; items evaluate
+            // sequentially (each carries its own params, and the tape's
+            // projections already use the full worker pool internally)
+            return match self.resolve_pipeline(op) {
+                Ok(pipe) => {
+                    items.iter().map(|inputs| Self::pipeline_grad(&pipe, inputs)).collect()
+                }
+                Err(e) => items.iter().map(|_| Err(e.clone())).collect(),
+            };
+        }
         match self.resolve(op) {
             // one resolve for the whole batch; the session's native
             // executor runs it as one stacked batched projection
@@ -244,6 +386,12 @@ impl Executor for SessionExecutor {
     }
 
     fn output_bytes_hint(&self, op: &Op, input_bytes: usize) -> usize {
+        if matches!(op, Op::SessionPipelineGrad { .. }) {
+            return match self.resolve_pipeline(op) {
+                Ok(pipe) => pipe.grad_reply_len() * 4,
+                Err(_) => 0,
+            };
+        }
         match self.resolve(op) {
             Ok((exec, native_op)) => exec.output_bytes_hint(&native_op, input_bytes),
             Err(_) => 0,
@@ -251,7 +399,7 @@ impl Executor for SessionExecutor {
     }
 
     fn accepts(&self, op: &Op) -> bool {
-        op.session_parts().is_some()
+        op.session_id().is_some()
     }
 
     /// Sessions are dynamic; the static op list is empty (routing goes
@@ -361,6 +509,127 @@ mod tests {
         )
         .unwrap();
         assert!(matches!(reg.open_from_meta(&bad_model), Err(LeapError::InvalidArgument(_))));
+    }
+
+    #[test]
+    fn pipeline_grad_matches_the_in_process_tape_bit_for_bit() {
+        let exec = SessionExecutor { registry: Box::leak(Box::new(SessionRegistry::new())) };
+        let id = exec.registry().open(&config(6), Model::SF, Some(2)).unwrap();
+        // the same scan through the front door shares the cached plan
+        let scan = ScanBuilder::from_config(&config(6))
+            .model(Model::SF)
+            .threads(2)
+            .build()
+            .unwrap();
+        let local: Arc<dyn LinearOp> = Arc::new(PlanOp::from_plan(scan.plan().clone()));
+        let pipe = tape::unrolled_gd(
+            local,
+            &tape::UnrollCfg { iterations: 2, step_init: 0.01, nonneg: true },
+        )
+        .unwrap();
+        let pid = exec
+            .registry()
+            .register_pipeline(id, &tape::pipeline_to_json(&pipe))
+            .unwrap();
+
+        let mut rng = crate::util::rng::Rng::new(19);
+        let params: Vec<Vec<f32>> = pipe
+            .params()
+            .iter()
+            .map(|p| {
+                let mut v = vec![0.0f32; p.shape.numel()];
+                rng.fill_uniform(&mut v, 0.005, 0.02);
+                v
+            })
+            .collect();
+        let inputs: Vec<Vec<f32>> = pipe
+            .input_shapes()
+            .iter()
+            .map(|s| {
+                let mut v = vec![0.0f32; s.numel()];
+                rng.fill_uniform(&mut v, 0.0, 1.0);
+                v
+            })
+            .collect();
+        let pr: Vec<&[f32]> = params.iter().map(|v| v.as_slice()).collect();
+        let ir: Vec<&[f32]> = inputs.iter().map(|v| v.as_slice()).collect();
+        let packed = pipe.pack(&pr, &ir).unwrap();
+        let op = Op::SessionPipelineGrad { session: id, pipeline: pid };
+        let out = exec.execute(&op, &[&packed]).unwrap();
+        let (loss_served, grads_served) = pipe.unpack_grad_reply(&out[0]).unwrap();
+        let (loss_local, grads_local) = pipe.loss_and_grads_with(&pr, &ir).unwrap();
+        assert_eq!(loss_served.to_bits(), loss_local.to_bits(), "served loss must be exact");
+        assert_eq!(grads_served, grads_local, "served gradients must be exact");
+
+        // wrong packed length is a typed shape error, not a panic
+        let e = exec.execute(&op, &[&packed[..3]]).unwrap_err();
+        assert!(matches!(e, LeapError::ShapeMismatch { .. }), "{e:?}");
+        // unknown pipeline vs closed session give distinct typed errors
+        let e = exec
+            .execute(&Op::SessionPipelineGrad { session: id, pipeline: 999 }, &[&packed])
+            .unwrap_err();
+        assert!(matches!(e, LeapError::InvalidArgument(_)), "{e:?}");
+        assert!(exec.registry().close(id));
+        let e = exec.execute(&op, &[&packed]).unwrap_err();
+        assert_eq!(e, LeapError::UnknownSession(id));
+    }
+
+    #[test]
+    fn pipelines_per_session_are_capped_and_validated() {
+        let reg = SessionRegistry::new();
+        let id = reg.open(&config(5), Model::SF, Some(1)).unwrap();
+        let scan = ScanBuilder::from_config(&config(5))
+            .model(Model::SF)
+            .threads(1)
+            .build()
+            .unwrap();
+        let local: Arc<dyn LinearOp> = Arc::new(PlanOp::from_plan(scan.plan().clone()));
+        let spec = tape::pipeline_to_json(
+            &tape::unrolled_gd(
+                local,
+                &tape::UnrollCfg { iterations: 1, step_init: 0.01, nonneg: false },
+            )
+            .unwrap(),
+        );
+        for _ in 0..MAX_PIPELINES_PER_SESSION {
+            reg.register_pipeline(id, &spec).unwrap();
+        }
+        let e = reg.register_pipeline(id, &spec).unwrap_err();
+        assert!(matches!(e, LeapError::BudgetExceeded { .. }), "{e:?}");
+        // malformed spec → typed protocol error; unknown session → typed
+        let e = reg.register_pipeline(id, &Json::Null).unwrap_err();
+        assert!(matches!(e, LeapError::Protocol(_)), "{e:?}");
+        let e = reg.register_pipeline(9999, &spec).unwrap_err();
+        assert_eq!(e, LeapError::UnknownSession(9999));
+    }
+
+    #[test]
+    fn pipeline_with_huge_intermediates_is_refused_at_registration() {
+        // the packed request/reply are tiny (one scalar param, two small
+        // inputs) but the spec declares giant dead fill nodes: the
+        // evaluation-footprint gate must refuse it BEFORE any
+        // pipeline_grad request can try to materialize them
+        let reg = SessionRegistry::new();
+        let id = reg.open(&config(5), Model::SF, Some(1)).unwrap();
+        let mut nodes = vec![
+            r#"{"k": "input", "slot": 0}"#.to_string(),
+            r#"{"k": "param", "p": 0}"#.to_string(),
+        ];
+        // 64 × 2^28-element fills ≈ 64 GiB of forward values
+        for _ in 0..64 {
+            nodes.push(r#"{"k": "fill", "shape": [268435456, 1, 1], "v": 0.0}"#.to_string());
+        }
+        nodes.push(r#"{"k": "l2", "pred": 1, "target": 0}"#.to_string());
+        let text = format!(
+            r#"{{"tape_spec": 1, "inputs": [[1,1,1]],
+                "params": [{{"name": "p", "shape": [1,1,1]}}],
+                "nodes": [{}], "loss": {}}}"#,
+            nodes.join(","),
+            nodes.len() - 1
+        );
+        let spec = parse(&text).unwrap();
+        let e = reg.register_pipeline(id, &spec).unwrap_err();
+        assert!(matches!(e, LeapError::BudgetExceeded { .. }), "{e:?}");
     }
 
     #[test]

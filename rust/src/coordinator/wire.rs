@@ -61,6 +61,13 @@ pub enum FrameKind {
     Error = 4,
     /// Release a session (`id` = session id).
     CloseSession = 5,
+    /// Register a tape pipeline on an open session (`id` = session id,
+    /// meta: `{"pipeline": <tape spec>}`, see `docs/AUTODIFF.md`). The
+    /// reply's `id` is the new pipeline id, scoped to the session.
+    /// Added after the v2 launch: kinds are append-only, and a pre-tape
+    /// peer rejects an unknown kind with a typed protocol error rather
+    /// than misparsing the stream.
+    RegisterPipeline = 6,
 }
 
 impl FrameKind {
@@ -72,6 +79,7 @@ impl FrameKind {
             3 => Some(FrameKind::Response),
             4 => Some(FrameKind::Error),
             5 => Some(FrameKind::CloseSession),
+            6 => Some(FrameKind::RegisterPipeline),
             _ => None,
         }
     }

@@ -31,6 +31,14 @@
 //!   filter; [`ops::ProjectionLoss`] returns data-fit losses with exact
 //!   gradients through the matched adjoint. Every iterative solver is
 //!   generic over `&dyn LinearOp`.
+//! * [`tape`] — reverse-mode autodiff over operator pipelines:
+//!   compose projectors/filters/solver iterations into a
+//!   [`tape::Pipeline`] with trainable parameters (learnable step sizes,
+//!   filter spectra, per-sample weights), get exact loss gradients
+//!   through the matched adjoints, train with deterministic
+//!   [`tape::optim`] (SGD/Adam) — unrolled GD and learned FBP ship as
+//!   [`tape::unroll`] builders, servable over protocol v2
+//!   ([`coordinator::Op::SessionPipelineGrad`]).
 //! * [`sysmatrix`] — the precomputed sparse system-matrix baseline the paper
 //!   argues against (Lahiri et al. 2023 style), used by the Table-1 bench.
 //! * [`recon`] — analytic (FBP/FDK) and iterative (SIRT, OS-SART, CGLS,
@@ -91,6 +99,7 @@ pub mod array;
 pub mod api;
 pub mod projector;
 pub mod ops;
+pub mod tape;
 pub mod sysmatrix;
 pub mod recon;
 pub mod phantom;

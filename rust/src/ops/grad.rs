@@ -23,7 +23,38 @@ use super::LinearOp;
 
 /// Clamp on `Ax` inside the Poisson terms — matches the MLEM solver's
 /// ratio clamp so loss and solver agree on the singular set.
-const POISSON_EPS: f32 = 1e-9;
+pub const POISSON_EPS: f32 = 1e-9;
+
+/// Turn predictions `ax` into the least-squares residual `ax − b` in
+/// place and return `½‖ax − b‖²` (f64 accumulation). This is the single
+/// definition of the L2 data-fit term, shared by [`ProjectionLoss`] and
+/// the tape's L2 loss node ([`crate::tape`]) so the two layers can never
+/// disagree on the objective.
+pub fn l2_residual_in_place(ax: &mut [f32], b: &[f32]) -> f64 {
+    debug_assert_eq!(ax.len(), b.len());
+    let mut loss = 0.0f64;
+    for (a, &b) in ax.iter_mut().zip(b.iter()) {
+        let r = *a - b;
+        loss += 0.5 * (r as f64) * (r as f64);
+        *a = r;
+    }
+    loss
+}
+
+/// Turn predictions `ax` into the Poisson NLL residual `1 − b/max(ax,ε)`
+/// in place and return `Σ max(ax,ε) − b·ln max(ax,ε)` (f64
+/// accumulation). Shared by [`ProjectionLoss`] and the tape's Poisson
+/// loss node, with the same [`POISSON_EPS`] clamp MLEM uses.
+pub fn poisson_residual_in_place(ax: &mut [f32], b: &[f32]) -> f64 {
+    debug_assert_eq!(ax.len(), b.len());
+    let mut loss = 0.0f64;
+    for (a, &b) in ax.iter_mut().zip(b.iter()) {
+        let m = a.max(POISSON_EPS);
+        loss += m as f64 - (b as f64) * (m as f64).ln();
+        *a = 1.0 - b / m;
+    }
+    loss
+}
 
 /// Which data-fit objective [`ProjectionLoss`] evaluates.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -73,24 +104,10 @@ impl<'a> ProjectionLoss<'a> {
     /// Turn `Ax` into the range-space residual `∂L/∂(Ax)` in place and
     /// return the loss value.
     fn residual_in_place(&self, ax: &mut [f32]) -> f64 {
-        let mut loss = 0.0f64;
         match self.objective {
-            Objective::LeastSquares => {
-                for (a, &b) in ax.iter_mut().zip(self.data.iter()) {
-                    let r = *a - b;
-                    loss += 0.5 * (r as f64) * (r as f64);
-                    *a = r;
-                }
-            }
-            Objective::PoissonNll => {
-                for (a, &b) in ax.iter_mut().zip(self.data.iter()) {
-                    let m = a.max(POISSON_EPS);
-                    loss += m as f64 - (b as f64) * (m as f64).ln();
-                    *a = 1.0 - b / m;
-                }
-            }
+            Objective::LeastSquares => l2_residual_in_place(ax, self.data),
+            Objective::PoissonNll => poisson_residual_in_place(ax, self.data),
         }
-        loss
     }
 }
 

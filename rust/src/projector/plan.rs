@@ -850,6 +850,71 @@ mod tests {
     }
 
     #[test]
+    fn two_d_y_slab_replay_uses_the_span_table_and_stays_thread_invariant() {
+        // Regression for the PR 2 accepted tradeoff: 2-D fan/modular
+        // ray-driven backprojection used to replay every ray per y-slab
+        // with only the full 3-axis clip test (≈serial wall-clock). The
+        // per-ray span table must (a) exist for single-slice plans of
+        // BOTH geometries — so the replay rejects with two integer
+        // compares — (b) actually reject (not degenerate to full-axis
+        // spans), and (c) keep backprojection bit-identical across
+        // thread counts.
+        let single_row_cone = ConeBeam::standard(6, 1, 14, 1.3, 1.3, 50.0, 100.0);
+        let geoms = vec![
+            Geometry::Fan(FanBeam::standard(6, 14, 1.3, 50.0, 100.0)),
+            Geometry::Modular(ModularBeam::from_cone(&single_row_cone)),
+        ];
+        let vg = VolumeGeometry::slice2d(9, 9, 1.0);
+        let mut rng = Rng::new(31);
+        for geom in geoms {
+            for model in [Model::Siddon, Model::Joseph] {
+                let p = Projector::new(geom.clone(), vg.clone(), model).with_threads(4);
+                let plan = p.plan();
+                let PlanKind::Ray { views, .. } = &plan.kind else {
+                    panic!("ray model must build a ray plan")
+                };
+                let units = geom.nviews() * geom.nrows() * geom.ncols();
+                assert_eq!(
+                    views.slab_span.len(),
+                    units,
+                    "{}/{}: 2-D plan must carry a full span table",
+                    model.name(),
+                    p.geom.kind()
+                );
+                // real rejection: some ray must span strictly less than
+                // the whole y axis (an all-[0, ny-1] table would mean the
+                // replay degenerates back to walking every ray per slab)
+                let ny = vg.ny as u16;
+                assert!(
+                    views
+                        .slab_span
+                        .iter()
+                        .any(|&(lo, hi)| lo > hi || (hi - lo + 1) < ny),
+                    "{}/{}: span table rejects nothing",
+                    model.name(),
+                    p.geom.kind()
+                );
+                // thread-count invariance of the y-slab replay itself
+                let mut y = p.new_sino();
+                rng.fill_uniform(&mut y.data, 0.0, 1.0);
+                let p1 = Projector::new(geom.clone(), vg.clone(), model).with_threads(1);
+                let reference = p1.plan().back(&y);
+                for threads in [2usize, 4, 7] {
+                    let pn = Projector::new(geom.clone(), vg.clone(), model)
+                        .with_threads(threads);
+                    assert_eq!(
+                        reference.data,
+                        pn.plan().back(&y).data,
+                        "{}/{} back, {threads} threads",
+                        model.name(),
+                        pn.geom.kind()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
     fn sf_parallel_estimate_matches_actual_layout() {
         // pure 2-D: the size_of-derived shared estimate is exact
         let vg = VolumeGeometry::slice2d(12, 12, 1.0);

@@ -95,6 +95,21 @@ pub fn ramp_response(n: usize, pitch: f64, window: Window) -> Vec<f64> {
     resp
 }
 
+/// The apodized ramp as a **half-spectrum** of `nfft/2 + 1` f32 samples
+/// (`nfft = next_pow2(2·ncols)`), the trainable-filter parameterization
+/// the tape's `FilterRows` node uses ([`crate::tape`]): the full response
+/// is reconstructed by even symmetry `resp[k] = half[min(k, nfft−k)]`,
+/// which holds exactly for [`ramp_response`] (the DFT of a real even
+/// kernel, apodized by a window that is itself even in frequency).
+/// Initializing a learnable filter from this makes iteration 0 of
+/// learned FBP match the analytic ramp up to f64→f32 rounding of the
+/// response samples.
+pub fn ramp_half_spectrum(ncols: usize, pitch: f64, window: Window) -> Vec<f32> {
+    let resp = ramp_response(ncols, pitch, window);
+    let nfft = resp.len();
+    (0..=nfft / 2).map(|k| resp[k] as f32).collect()
+}
+
 /// Filter every row of a sinogram view in place: `rows` of length `ncols`,
 /// response from [`ramp_response`].
 pub fn filter_rows(rows: &mut [f32], ncols: usize, resp: &[f64]) {

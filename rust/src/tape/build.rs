@@ -1,0 +1,440 @@
+//! [`PipelineBuilder`] — construct a validated [`Pipeline`].
+//!
+//! Every edge is checked as it is added (operator chaining, elementwise
+//! shape agreement, scalar-ness of scale factors and losses, filter
+//! half-spectrum lengths), so a built [`Pipeline`] can never fail a
+//! shape check at evaluation time. All failures are typed
+//! [`LeapError`]s — this is the tape's half of the front-door contract
+//! ([`crate::api`]): panicking kernels below, `Result`s at every surface
+//! a user (or the wire) can reach.
+
+use std::sync::Arc;
+
+use crate::api::LeapError;
+use crate::ops::{LinearOp, Shape};
+use crate::util::fft::next_pow2;
+
+use super::{Node, NodeId, NodeKind, OpEntry, OpRef, ParamDef, Pipeline};
+
+/// Hard cap on a single node's element count (matches the wire payload
+/// cap in f32s): wire-registered graphs cannot demand absurd buffers.
+/// Public so [`super::spec`] can validate untrusted shapes *before*
+/// allocating anything from them.
+pub const MAX_NODE_ELEMENTS: usize = 1 << 28;
+
+/// Hard cap on graph size — far above any real unrolled pipeline, low
+/// enough that a hostile wire spec cannot DoS the registry.
+pub const MAX_NODES: usize = 4096;
+
+/// Builder for a [`Pipeline`]; see the module docs.
+#[derive(Default)]
+pub struct PipelineBuilder {
+    nodes: Vec<Node>,
+    ops: Vec<OpEntry>,
+    input_shapes: Vec<Shape>,
+    params: Vec<ParamDef>,
+    output: Option<NodeId>,
+    loss: Option<NodeId>,
+}
+
+impl PipelineBuilder {
+    pub fn new() -> PipelineBuilder {
+        PipelineBuilder::default()
+    }
+
+    fn push(&mut self, kind: NodeKind, shape: Shape) -> Result<NodeId, LeapError> {
+        if self.nodes.len() >= MAX_NODES {
+            return Err(LeapError::InvalidArgument(format!(
+                "pipeline exceeds {MAX_NODES} nodes"
+            )));
+        }
+        if shape.numel() == 0 || shape.numel() > MAX_NODE_ELEMENTS {
+            return Err(LeapError::InvalidArgument(format!(
+                "node shape {:?} is empty or above {MAX_NODE_ELEMENTS} elements",
+                shape.0
+            )));
+        }
+        self.nodes.push(Node { kind, shape });
+        Ok(NodeId(self.nodes.len() - 1))
+    }
+
+    fn node(&self, id: NodeId) -> Result<&Node, LeapError> {
+        self.nodes.get(id.0).ok_or_else(|| {
+            LeapError::InvalidArgument(format!("node id {} is not in this pipeline", id.0))
+        })
+    }
+
+    fn same_numel(&self, a: NodeId, b: NodeId) -> Result<Shape, LeapError> {
+        let (sa, sb) = (self.node(a)?.shape, self.node(b)?.shape);
+        if sa.numel() != sb.numel() {
+            return Err(LeapError::ShapeMismatch {
+                what: "elementwise operands",
+                expected: sa.numel(),
+                got: sb.numel(),
+            });
+        }
+        Ok(sa)
+    }
+
+    /// Register a named operator (the name is the wire identity — the
+    /// serving side rebinds `"scan"` to the session's pinned plan).
+    /// Duplicate names are rejected.
+    pub fn op(&mut self, name: &str, op: Arc<dyn LinearOp>) -> Result<OpRef, LeapError> {
+        if self.ops.iter().any(|e| e.name == name) {
+            return Err(LeapError::InvalidArgument(format!(
+                "operator {name:?} is already registered"
+            )));
+        }
+        self.ops.push(OpEntry { name: name.to_string(), op });
+        Ok(OpRef(self.ops.len() - 1))
+    }
+
+    /// Declare an input slot (bound per evaluation, in declaration
+    /// order).
+    pub fn input(&mut self, shape: Shape) -> Result<NodeId, LeapError> {
+        let slot = self.input_shapes.len();
+        let id = self.push(NodeKind::Input { slot }, shape)?;
+        self.input_shapes.push(shape);
+        Ok(id)
+    }
+
+    /// Declare a trainable parameter with its initial value.
+    pub fn param(
+        &mut self,
+        name: &str,
+        shape: Shape,
+        init: Vec<f32>,
+    ) -> Result<NodeId, LeapError> {
+        if init.len() != shape.numel() {
+            return Err(LeapError::ShapeMismatch {
+                what: "parameter init",
+                expected: shape.numel(),
+                got: init.len(),
+            });
+        }
+        if self.params.iter().any(|p| p.name == name) {
+            return Err(LeapError::InvalidArgument(format!(
+                "parameter {name:?} is already declared"
+            )));
+        }
+        let pid = self.params.len();
+        self.params.push(ParamDef { name: name.to_string(), shape, value: init });
+        self.push(NodeKind::Param { pid }, shape)
+    }
+
+    /// Declare a scalar (numel-1) trainable parameter — step sizes,
+    /// gains.
+    pub fn scalar_param(&mut self, name: &str, init: f32) -> Result<NodeId, LeapError> {
+        self.param(name, Shape([1, 1, 1]), vec![init])
+    }
+
+    /// Declare a trainable parameter **without** a stored value (the
+    /// wire-registration path: parameter values travel per request, so
+    /// storing a zero placeholder would pin up to a frame's worth of
+    /// memory per registered pipeline for nothing). Pipelines holding
+    /// such parameters must be evaluated through the explicit-parameter
+    /// `*_with` entry points (the stored-value entry points return a
+    /// typed error) or be given values via
+    /// [`Pipeline::set_params`] first.
+    pub fn param_uninit(&mut self, name: &str, shape: Shape) -> Result<NodeId, LeapError> {
+        if self.params.iter().any(|p| p.name == name) {
+            return Err(LeapError::InvalidArgument(format!(
+                "parameter {name:?} is already declared"
+            )));
+        }
+        let pid = self.params.len();
+        self.params.push(ParamDef { name: name.to_string(), shape, value: Vec::new() });
+        self.push(NodeKind::Param { pid }, shape)
+    }
+
+    /// A constant tensor filled with `v`.
+    pub fn fill(&mut self, shape: Shape, v: f32) -> Result<NodeId, LeapError> {
+        if !v.is_finite() {
+            return Err(LeapError::InvalidArgument(format!("fill value must be finite, got {v}")));
+        }
+        self.push(NodeKind::Fill { v }, shape)
+    }
+
+    /// `y = A·x` through a registered operator.
+    pub fn apply(&mut self, op: OpRef, x: NodeId) -> Result<NodeId, LeapError> {
+        let entry = self.ops.get(op.0).ok_or_else(|| {
+            LeapError::InvalidArgument(format!("operator ref {} is not registered", op.0))
+        })?;
+        let (dn, rs) = (entry.op.domain_shape(), entry.op.range_shape());
+        let xs = self.node(x)?.shape;
+        if xs.numel() != dn.numel() {
+            return Err(LeapError::ShapeMismatch {
+                what: "operator domain",
+                expected: dn.numel(),
+                got: xs.numel(),
+            });
+        }
+        self.push(NodeKind::Apply { op: op.0, x }, rs)
+    }
+
+    /// `x = Aᵀ·y` through a registered operator.
+    pub fn adjoint(&mut self, op: OpRef, y: NodeId) -> Result<NodeId, LeapError> {
+        let entry = self.ops.get(op.0).ok_or_else(|| {
+            LeapError::InvalidArgument(format!("operator ref {} is not registered", op.0))
+        })?;
+        let (dn, rs) = (entry.op.domain_shape(), entry.op.range_shape());
+        let ys = self.node(y)?.shape;
+        if ys.numel() != rs.numel() {
+            return Err(LeapError::ShapeMismatch {
+                what: "operator range",
+                expected: rs.numel(),
+                got: ys.numel(),
+            });
+        }
+        self.push(NodeKind::Adjoint { op: op.0, y }, dn)
+    }
+
+    /// `a + b` (same numel).
+    pub fn add(&mut self, a: NodeId, b: NodeId) -> Result<NodeId, LeapError> {
+        let s = self.same_numel(a, b)?;
+        self.push(NodeKind::Add { a, b }, s)
+    }
+
+    /// `a − b` (same numel).
+    pub fn sub(&mut self, a: NodeId, b: NodeId) -> Result<NodeId, LeapError> {
+        let s = self.same_numel(a, b)?;
+        self.push(NodeKind::Sub { a, b }, s)
+    }
+
+    /// `a ⊙ b` elementwise (same numel) — learned per-element weights.
+    pub fn mul(&mut self, a: NodeId, b: NodeId) -> Result<NodeId, LeapError> {
+        let s = self.same_numel(a, b)?;
+        self.push(NodeKind::Mul { a, b }, s)
+    }
+
+    /// `s·x` with `s` scalar (numel 1).
+    pub fn scale(&mut self, x: NodeId, s: NodeId) -> Result<NodeId, LeapError> {
+        let ss = self.node(s)?.shape;
+        if ss.numel() != 1 {
+            return Err(LeapError::ShapeMismatch {
+                what: "scale factor",
+                expected: 1,
+                got: ss.numel(),
+            });
+        }
+        let xs = self.node(x)?.shape;
+        self.push(NodeKind::Scale { x, s }, xs)
+    }
+
+    /// `max(x, 0)`.
+    pub fn relu(&mut self, x: NodeId) -> Result<NodeId, LeapError> {
+        let s = self.node(x)?.shape;
+        self.push(NodeKind::Relu { x }, s)
+    }
+
+    /// `clamp(x, lo, hi)` with finite `lo ≤ hi`.
+    pub fn clamp(&mut self, x: NodeId, lo: f32, hi: f32) -> Result<NodeId, LeapError> {
+        if !(lo.is_finite() && hi.is_finite() && lo <= hi) {
+            return Err(LeapError::InvalidArgument(format!(
+                "clamp needs finite lo ≤ hi (got {lo}, {hi})"
+            )));
+        }
+        let s = self.node(x)?.shape;
+        self.push(NodeKind::Clamp { x, lo, hi }, s)
+    }
+
+    /// Filter every trailing-dimension row of `x` with the learnable
+    /// half-spectrum `w` (see [`NodeKind::FilterRows`]). `x`'s shape is
+    /// read as `[.., .., ncols]`; `w` must have exactly
+    /// `next_pow2(2·ncols)/2 + 1` elements — initialize it from
+    /// [`crate::recon::filters::ramp_half_spectrum`] for a ramp start.
+    pub fn filter_rows(&mut self, x: NodeId, w: NodeId) -> Result<NodeId, LeapError> {
+        let xs = self.node(x)?.shape;
+        let ncols = xs.0[2];
+        if ncols < 2 {
+            return Err(LeapError::InvalidArgument(format!(
+                "filter_rows needs rows of ≥ 2 samples (shape {:?})",
+                xs.0
+            )));
+        }
+        let nfft = next_pow2(2 * ncols);
+        let want = nfft / 2 + 1;
+        let wsh = self.node(w)?.shape;
+        if wsh.numel() != want {
+            return Err(LeapError::ShapeMismatch {
+                what: "filter half-spectrum",
+                expected: want,
+                got: wsh.numel(),
+            });
+        }
+        self.push(NodeKind::FilterRows { x, w, ncols, nfft }, xs)
+    }
+
+    /// Scalar node `½‖pred − target‖²`.
+    pub fn l2_loss(&mut self, pred: NodeId, target: NodeId) -> Result<NodeId, LeapError> {
+        self.same_numel(pred, target)?;
+        self.push(NodeKind::L2Loss { pred, target }, Shape([1, 1, 1]))
+    }
+
+    /// Scalar node `Σ max(pred,ε) − target·ln max(pred,ε)` (Poisson
+    /// NLL; callers must feed `target ≥ 0`, as MLEM does).
+    pub fn poisson_loss(&mut self, pred: NodeId, target: NodeId) -> Result<NodeId, LeapError> {
+        self.same_numel(pred, target)?;
+        self.push(NodeKind::PoissonLoss { pred, target }, Shape([1, 1, 1]))
+    }
+
+    /// Designate the pipeline's output tensor (what [`Pipeline::eval`]
+    /// returns — e.g. the reconstruction).
+    pub fn set_output(&mut self, n: NodeId) -> Result<(), LeapError> {
+        self.node(n)?;
+        self.output = Some(n);
+        Ok(())
+    }
+
+    /// Designate the scalar loss node [`Pipeline::loss_and_grads`]
+    /// differentiates. Must be an [`NodeKind::L2Loss`] or
+    /// [`NodeKind::PoissonLoss`] node — only those record the f64 loss
+    /// value the evaluation reports (a derived scalar like
+    /// `scale(l2, λ)` would differentiate fine but *report* a fabricated
+    /// 0.0 loss, so it is refused rather than silently miscounted).
+    pub fn set_loss(&mut self, n: NodeId) -> Result<(), LeapError> {
+        let node = self.node(n)?;
+        if node.shape.numel() != 1 {
+            return Err(LeapError::ShapeMismatch {
+                what: "loss node",
+                expected: 1,
+                got: node.shape.numel(),
+            });
+        }
+        if !matches!(node.kind, NodeKind::L2Loss { .. } | NodeKind::PoissonLoss { .. }) {
+            return Err(LeapError::InvalidArgument(
+                "the loss must be an l2/poisson loss node (derived scalars cannot report \
+                 their f64 value)"
+                    .into(),
+            ));
+        }
+        self.loss = Some(n);
+        Ok(())
+    }
+
+    /// Finalize: compute the needs-gradient marking and return the
+    /// immutable [`Pipeline`]. A pipeline without a loss node is legal
+    /// (inference-only) — `loss_and_grads` on it is a typed error.
+    pub fn build(self) -> Result<Pipeline, LeapError> {
+        if self.nodes.is_empty() {
+            return Err(LeapError::InvalidArgument("pipeline has no nodes".into()));
+        }
+        // needs_grad: forward sweep works because ids are topological —
+        // a node needs grad iff it is a Param or reads one that does
+        let mut needs = vec![false; self.nodes.len()];
+        for (id, node) in self.nodes.iter().enumerate() {
+            needs[id] = match &node.kind {
+                NodeKind::Param { .. } => true,
+                NodeKind::Input { .. } | NodeKind::Fill { .. } => false,
+                NodeKind::Apply { x, .. } => needs[x.0],
+                NodeKind::Adjoint { y, .. } => needs[y.0],
+                NodeKind::Add { a, b }
+                | NodeKind::Sub { a, b }
+                | NodeKind::Mul { a, b } => needs[a.0] || needs[b.0],
+                NodeKind::Scale { x, s } => needs[x.0] || needs[s.0],
+                NodeKind::Relu { x } | NodeKind::Clamp { x, .. } => needs[x.0],
+                NodeKind::FilterRows { x, w, .. } => needs[x.0] || needs[w.0],
+                NodeKind::L2Loss { pred, target } | NodeKind::PoissonLoss { pred, target } => {
+                    needs[pred.0] || needs[target.0]
+                }
+            };
+        }
+        if let Some(l) = self.loss {
+            if !needs[l.0] {
+                return Err(LeapError::InvalidArgument(
+                    "loss node does not depend on any parameter".into(),
+                ));
+            }
+        }
+        Ok(Pipeline {
+            nodes: self.nodes,
+            ops: self.ops,
+            input_shapes: self.input_shapes,
+            params: self.params,
+            output: self.output,
+            loss: self.loss,
+            needs_grad: needs,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::geometry::{Geometry, ParallelBeam, VolumeGeometry};
+    use crate::ops::PlanOp;
+    use crate::projector::{Model, Projector};
+
+    fn scan_op() -> Arc<dyn LinearOp> {
+        let vg = VolumeGeometry::slice2d(8, 8, 1.0);
+        let g = Geometry::Parallel(ParallelBeam::standard_2d(5, 12, 1.0));
+        Arc::new(PlanOp::new(&Projector::new(g, vg, Model::SF).with_threads(1)))
+    }
+
+    #[test]
+    fn shape_mismatches_are_typed_at_build_time() {
+        let op = scan_op();
+        let mut pb = PipelineBuilder::new();
+        let a = pb.op("scan", op.clone()).unwrap();
+        let wrong = pb.fill(Shape([3, 1, 1]), 0.0).unwrap();
+        let e = pb.apply(a, wrong).unwrap_err();
+        assert!(matches!(e, LeapError::ShapeMismatch { what: "operator domain", .. }), "{e:?}");
+        let x = pb.fill(op.domain_shape(), 0.0).unwrap();
+        let e = pb.adjoint(a, x).unwrap_err();
+        assert!(matches!(e, LeapError::ShapeMismatch { what: "operator range", .. }));
+        let y = pb.fill(op.range_shape(), 0.0).unwrap();
+        let e = pb.add(x, y).unwrap_err();
+        assert!(matches!(e, LeapError::ShapeMismatch { what: "elementwise operands", .. }));
+        let e = pb.scale(x, y).unwrap_err();
+        assert!(matches!(e, LeapError::ShapeMismatch { what: "scale factor", .. }));
+        let e = pb.set_loss(x).unwrap_err();
+        assert!(matches!(e, LeapError::ShapeMismatch { what: "loss node", .. }));
+        // a scalar that is not a loss node cannot report an f64 loss
+        let scalar = pb.fill(Shape([1, 1, 1]), 0.5).unwrap();
+        let e = pb.set_loss(scalar).unwrap_err();
+        assert!(matches!(e, LeapError::InvalidArgument(_)), "{e:?}");
+        let e = pb.clamp(x, 1.0, 0.0).unwrap_err();
+        assert!(matches!(e, LeapError::InvalidArgument(_)));
+    }
+
+    #[test]
+    fn filter_rows_validates_half_spectrum_length() {
+        let op = scan_op();
+        let mut pb = PipelineBuilder::new();
+        let sino = pb.input(op.range_shape()).unwrap(); // ncols = 12 → nfft = 32
+        let short = pb.param("w", Shape([5, 1, 1]), vec![1.0; 5]).unwrap();
+        let e = pb.filter_rows(sino, short).unwrap_err();
+        assert_eq!(
+            e,
+            LeapError::ShapeMismatch { what: "filter half-spectrum", expected: 17, got: 5 }
+        );
+        let w = pb.param("w2", Shape([17, 1, 1]), vec![1.0; 17]).unwrap();
+        let f = pb.filter_rows(sino, w).unwrap();
+        pb.set_output(f).unwrap();
+        let pipe = pb.build().unwrap();
+        assert_eq!(pipe.output_shape().unwrap(), op.range_shape());
+    }
+
+    #[test]
+    fn loss_must_reach_a_param() {
+        let op = scan_op();
+        let mut pb = PipelineBuilder::new();
+        let _unused = pb.param("p", Shape([2, 1, 1]), vec![0.0; 2]).unwrap();
+        let x = pb.input(op.domain_shape()).unwrap();
+        let y = pb.input(op.domain_shape()).unwrap();
+        let l = pb.l2_loss(x, y).unwrap();
+        pb.set_loss(l).unwrap();
+        let e = pb.build().unwrap_err();
+        assert!(matches!(e, LeapError::InvalidArgument(_)), "{e:?}");
+    }
+
+    #[test]
+    fn duplicate_names_are_rejected() {
+        let op = scan_op();
+        let mut pb = PipelineBuilder::new();
+        pb.op("scan", op.clone()).unwrap();
+        assert!(pb.op("scan", op.clone()).is_err());
+        pb.param("w", Shape([1, 1, 1]), vec![0.0]).unwrap();
+        assert!(pb.param("w", Shape([1, 1, 1]), vec![0.0]).is_err());
+    }
+}

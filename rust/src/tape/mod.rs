@@ -1,0 +1,888 @@
+//! `leap::tape` — reverse-mode autodiff over operator pipelines.
+//!
+//! [`crate::ops::grad::ProjectionLoss`] differentiates one fixed scalar
+//! objective through one operator. Training pipelines need more: compose
+//! projectors, filters and solver iterations into a graph, mark some
+//! tensors *trainable*, and differentiate the whole thing — the layer
+//! TorchRadon and PYRO-NN bolt onto PyTorch, rebuilt here natively so
+//! learned/unrolled reconstruction runs on the same matched pairs the
+//! rest of the crate serves. The design is a **define-then-run tape**:
+//!
+//! * A [`Pipeline`] is a static DAG of [`NodeKind`]s over flat `f32`
+//!   tensors (shapes carried by [`crate::ops::Shape`]), built through
+//!   [`build::PipelineBuilder`] with typed [`LeapError`] validation at
+//!   every edge (shape mismatches can never reach evaluation).
+//! * The primitive differentiable node is a [`crate::ops::LinearOp`]
+//!   application: forward is `apply_into`, and its vector-Jacobian
+//!   product is **exactly** `adjoint_into` (and vice versa for adjoint
+//!   nodes) — the paper's matched-adjoint property (§2.1) means tape
+//!   gradients through projectors are analytic, not approximate, no
+//!   matter how many nodes are stacked.
+//! * Elementwise glue (`add`/`sub`/`mul`/`scale`, `relu`/`clamp`, and a
+//!   parameterized frequency-domain row filter) plus scalar loss nodes
+//!   (`l2`, `poisson` — same residual math as `ProjectionLoss`, see
+//!   [`crate::ops::grad::l2_residual_in_place`]) cover real
+//!   reconstruction pipelines: unrolled gradient descent with learnable
+//!   per-iteration steps, learned-FBP with a trainable ramp replacement
+//!   ([`unroll`]).
+//! * [`Param`](NodeKind::Param) leaves accumulate gradients;
+//!   [`optim`] provides deterministic SGD and Adam, and
+//!   [`crate::api::Scan::fit`] runs the whole loop behind the typed
+//!   front door.
+//!
+//! Everything is sequential and allocation-order-deterministic: two
+//! identical [`Pipeline::loss_and_grads`] calls (or two identical `fit`
+//! runs) produce bit-identical floats, and because the underlying
+//! projector is thread-count-invariant, so does the same pipeline run at
+//! any worker count. That is what lets the serving layer offer
+//! [`crate::coordinator::Op::SessionPipelineGrad`]: a pipeline
+//! registered over the wire ([`spec`]) against a session's pinned plan
+//! returns loss + gradients bit-identical to the in-process tape.
+//!
+//! ## Shapes and packing
+//!
+//! Tensors are contiguous `f32` slices; only `numel` matters to the
+//! algebra, the `[a, b, c]` dimensions matter to structured nodes
+//! (`filter_rows` needs the trailing `ncols`). For the wire, a
+//! pipeline's variable data travels as **one packed tensor**:
+//! parameters in declaration order, then input slots in order
+//! ([`Pipeline::pack`] / [`Pipeline::split_packed`]); gradient replies
+//! pack the f64 loss as two f32 bit-halves followed by the per-param
+//! gradients ([`Pipeline::pack_grad_reply`]) — bit-exact both ways.
+
+pub mod build;
+pub mod optim;
+pub mod spec;
+pub mod unroll;
+
+pub use build::PipelineBuilder;
+pub use optim::{fit, FitCfg, FitReport, Optimizer};
+pub use spec::{pipeline_from_json, pipeline_to_json};
+pub use unroll::{learned_fbp, unrolled_gd, UnrollCfg};
+
+use std::sync::Arc;
+
+use crate::api::LeapError;
+use crate::ops::grad::{l2_residual_in_place, poisson_residual_in_place, POISSON_EPS};
+use crate::ops::{LinearOp, Shape};
+use crate::recon::filters;
+use crate::util::fft::fft_inplace;
+
+/// Handle to a node in a [`Pipeline`] (issued by the builder; ids are
+/// topological — a node only ever references smaller ids).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct NodeId(pub(crate) usize);
+
+/// Handle to a registered [`LinearOp`] inside a pipeline.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct OpRef(pub(crate) usize);
+
+/// One tape node. Forward semantics and the exact reverse-mode rule of
+/// each kind are documented on the variant.
+#[derive(Clone, Debug)]
+pub enum NodeKind {
+    /// External tensor, bound per evaluation (`slot` indexes the
+    /// `inputs` argument). Never receives gradient flow.
+    Input { slot: usize },
+    /// Trainable leaf (`pid` indexes the pipeline's parameters). Its
+    /// reverse-mode adjoint *is* the loss gradient for that parameter.
+    Param { pid: usize },
+    /// Constant tensor filled with `v` (e.g. the zero initial iterate of
+    /// an unrolled solver).
+    Fill { v: f32 },
+    /// `y = A·x`. VJP: `dx += Aᵀ·dy` — exact because the pair is
+    /// matched.
+    Apply { op: usize, x: NodeId },
+    /// `x = Aᵀ·y`. VJP: `dy += A·dx`.
+    Adjoint { op: usize, y: NodeId },
+    /// `y = a + b` (same numel). VJP: `da += dy`, `db += dy`.
+    Add { a: NodeId, b: NodeId },
+    /// `y = a − b`. VJP: `da += dy`, `db −= dy`.
+    Sub { a: NodeId, b: NodeId },
+    /// Elementwise `y = a ⊙ b` (per-element learned view/filter
+    /// weights). VJP: `da += dy ⊙ b`, `db += dy ⊙ a`.
+    Mul { a: NodeId, b: NodeId },
+    /// `y = s·x` with `s` a scalar node (numel 1) — learnable step
+    /// sizes/gains. VJP: `dx += s·dy`, `ds += Σ dy ⊙ x` (f64
+    /// accumulation, cast once).
+    Scale { x: NodeId, s: NodeId },
+    /// `y = max(x, 0)`. VJP passes where `x > 0` (subgradient 0 at 0).
+    Relu { x: NodeId },
+    /// `y = clamp(x, lo, hi)`. VJP passes strictly inside `(lo, hi)`.
+    Clamp { x: NodeId, lo: f32, hi: f32 },
+    /// Frequency-domain filtering of every length-`ncols` row of `x` by
+    /// a **learnable half-spectrum** `w` (numel `nfft/2 + 1`,
+    /// `nfft = next_pow2(2·ncols)`): the full response is the even
+    /// extension `resp[k] = w[min(k, nfft−k)]`, exactly the
+    /// [`crate::ops::RampFilterOp`] shape — initialize `w` from
+    /// [`crate::recon::filters::ramp_half_spectrum`] and iteration 0 is
+    /// analytic FBP's filter. Linear and self-adjoint in `x` (real even
+    /// response ⇒ symmetric kernel), so `dx` is the same filter applied
+    /// to `dy`; `dw[j] = Σ_rows Σ_{k: min(k,nfft−k)=j}
+    /// Re(X_k · conj(D_k))/nfft` with `X`/`D` the FFTs of the
+    /// zero-padded row and its adjoint.
+    FilterRows { x: NodeId, w: NodeId, ncols: usize, nfft: usize },
+    /// Scalar node `L = ½‖pred − target‖²` (same residual math as
+    /// [`crate::ops::grad::ProjectionLoss`]). VJP: `dpred += a·(pred −
+    /// target)`, `dtarget −= a·(pred − target)` for upstream scalar `a`.
+    L2Loss { pred: NodeId, target: NodeId },
+    /// Scalar node `L = Σ max(pred,ε) − target·ln max(pred,ε)` (Poisson
+    /// NLL, ε = [`crate::ops::grad::POISSON_EPS`], matching MLEM). VJP:
+    /// `dpred += a·(1 − target/max(pred,ε))`,
+    /// `dtarget −= a·ln max(pred,ε)`.
+    PoissonLoss { pred: NodeId, target: NodeId },
+}
+
+/// A node plus its output shape (fixed at build time).
+#[derive(Clone, Debug)]
+pub struct Node {
+    pub kind: NodeKind,
+    pub shape: Shape,
+}
+
+/// A trainable parameter: name, shape and current value (updated in
+/// place by [`optim`]).
+#[derive(Clone, Debug)]
+pub struct ParamDef {
+    pub name: String,
+    pub shape: Shape,
+    pub value: Vec<f32>,
+}
+
+/// A named operator registered with a pipeline. The name is the wire
+/// identity ([`spec`]): the serving side rebinds `"scan"` to the
+/// session's pinned plan.
+pub(crate) struct OpEntry {
+    pub(crate) name: String,
+    pub(crate) op: Arc<dyn LinearOp>,
+}
+
+/// A built, validated operator pipeline: evaluate it forward
+/// ([`Pipeline::eval`], [`Pipeline::loss`]) or differentiate the
+/// designated scalar loss with respect to every parameter
+/// ([`Pipeline::loss_and_grads`]). See the module docs for semantics.
+pub struct Pipeline {
+    pub(crate) nodes: Vec<Node>,
+    pub(crate) ops: Vec<OpEntry>,
+    pub(crate) input_shapes: Vec<Shape>,
+    pub(crate) params: Vec<ParamDef>,
+    pub(crate) output: Option<NodeId>,
+    pub(crate) loss: Option<NodeId>,
+    /// Whether each node transitively depends on a parameter — the
+    /// backward pass only propagates adjoints along these edges (so no
+    /// projection is ever spent on a gradient nobody needs).
+    pub(crate) needs_grad: Vec<bool>,
+}
+
+/// Forward-pass results: every node's value plus the f64 value of each
+/// scalar loss node (f32 storage would truncate the objective the
+/// optimizer and the finite-difference tests watch).
+struct Evaluated {
+    values: Vec<Vec<f32>>,
+    losses: Vec<f64>,
+}
+
+impl Pipeline {
+    /// Declared input-slot shapes (evaluation order).
+    pub fn input_shapes(&self) -> &[Shape] {
+        &self.input_shapes
+    }
+
+    /// The trainable parameters (current values).
+    pub fn params(&self) -> &[ParamDef] {
+        &self.params
+    }
+
+    /// Mutable access to the parameter values (the optimizer's hook;
+    /// lengths must not change).
+    pub fn params_mut(&mut self) -> &mut [ParamDef] {
+        &mut self.params
+    }
+
+    /// Replace every parameter value (lengths validated).
+    pub fn set_params(&mut self, values: &[&[f32]]) -> Result<(), LeapError> {
+        if values.len() != self.params.len() {
+            return Err(LeapError::InvalidArgument(format!(
+                "pipeline has {} params, got {} values",
+                self.params.len(),
+                values.len()
+            )));
+        }
+        for (p, v) in self.params.iter_mut().zip(values.iter()) {
+            if v.len() != p.shape.numel() {
+                return Err(LeapError::ShapeMismatch {
+                    what: "parameter",
+                    expected: p.shape.numel(),
+                    got: v.len(),
+                });
+            }
+            // not copy_from_slice: wire-rebuilt pipelines start with NO
+            // stored value (empty vec), and set_params is what gives
+            // them one
+            p.value.clear();
+            p.value.extend_from_slice(v);
+        }
+        Ok(())
+    }
+
+    /// The stored parameter values as slices, or a typed error if any
+    /// parameter has no stored value (pipelines rebuilt from a wire
+    /// spec carry shapes only — evaluate those through the `*_with`
+    /// entry points, or [`Pipeline::set_params`] first).
+    fn stored_params(&self) -> Result<Vec<&[f32]>, LeapError> {
+        let mut out = Vec::with_capacity(self.params.len());
+        for p in &self.params {
+            if p.value.len() != p.shape.numel() {
+                return Err(LeapError::InvalidArgument(format!(
+                    "parameter {:?} has no stored value; pass parameters explicitly \
+                     (loss_and_grads_with / loss_with) or call set_params first",
+                    p.name
+                )));
+            }
+            out.push(p.value.as_slice());
+        }
+        Ok(out)
+    }
+
+    /// `(name, domain, range)` of every registered operator — lets
+    /// callers ([`crate::api::Scan::fit`]) verify a pipeline was built
+    /// for their scan.
+    pub fn op_shapes(&self) -> Vec<(&str, Shape, Shape)> {
+        self.ops
+            .iter()
+            .map(|e| (e.name.as_str(), e.op.domain_shape(), e.op.range_shape()))
+            .collect()
+    }
+
+    /// The designated output node, if any.
+    pub fn output_node(&self) -> Option<NodeId> {
+        self.output
+    }
+
+    /// The designated scalar loss node, if any.
+    pub fn loss_node(&self) -> Option<NodeId> {
+        self.loss
+    }
+
+    /// Shape of the designated output.
+    pub fn output_shape(&self) -> Option<Shape> {
+        self.output.map(|n| self.nodes[n.0].shape)
+    }
+
+    fn check_inputs(&self, inputs: &[&[f32]]) -> Result<(), LeapError> {
+        if inputs.len() != self.input_shapes.len() {
+            return Err(LeapError::InvalidArgument(format!(
+                "pipeline declares {} input slots, got {}",
+                self.input_shapes.len(),
+                inputs.len()
+            )));
+        }
+        for (s, b) in self.input_shapes.iter().zip(inputs.iter()) {
+            if b.len() != s.numel() {
+                return Err(LeapError::ShapeMismatch {
+                    what: "pipeline input",
+                    expected: s.numel(),
+                    got: b.len(),
+                });
+            }
+        }
+        Ok(())
+    }
+
+    fn check_params(&self, params: &[&[f32]]) -> Result<(), LeapError> {
+        if params.len() != self.params.len() {
+            return Err(LeapError::InvalidArgument(format!(
+                "pipeline has {} params, got {}",
+                self.params.len(),
+                params.len()
+            )));
+        }
+        for (p, b) in self.params.iter().zip(params.iter()) {
+            if b.len() != p.shape.numel() {
+                return Err(LeapError::ShapeMismatch {
+                    what: "parameter",
+                    expected: p.shape.numel(),
+                    got: b.len(),
+                });
+            }
+        }
+        Ok(())
+    }
+
+    /// Run the forward pass with explicit parameter values.
+    fn forward(&self, params: &[&[f32]], inputs: &[&[f32]]) -> Evaluated {
+        let mut values: Vec<Vec<f32>> = Vec::with_capacity(self.nodes.len());
+        let mut losses = vec![0.0f64; self.nodes.len()];
+        for (id, node) in self.nodes.iter().enumerate() {
+            let n = node.shape.numel();
+            let v = match &node.kind {
+                NodeKind::Input { slot } => inputs[*slot].to_vec(),
+                NodeKind::Param { pid } => params[*pid].to_vec(),
+                NodeKind::Fill { v } => vec![*v; n],
+                NodeKind::Apply { op, x } => {
+                    let mut y = vec![0.0f32; n];
+                    self.ops[*op].op.apply_into(&values[x.0], &mut y);
+                    y
+                }
+                NodeKind::Adjoint { op, y } => {
+                    let mut x = vec![0.0f32; n];
+                    self.ops[*op].op.adjoint_into(&values[y.0], &mut x);
+                    x
+                }
+                NodeKind::Add { a, b } => {
+                    let (a, b) = (&values[a.0], &values[b.0]);
+                    a.iter().zip(b.iter()).map(|(&x, &y)| x + y).collect()
+                }
+                NodeKind::Sub { a, b } => {
+                    let (a, b) = (&values[a.0], &values[b.0]);
+                    a.iter().zip(b.iter()).map(|(&x, &y)| x - y).collect()
+                }
+                NodeKind::Mul { a, b } => {
+                    let (a, b) = (&values[a.0], &values[b.0]);
+                    a.iter().zip(b.iter()).map(|(&x, &y)| x * y).collect()
+                }
+                NodeKind::Scale { x, s } => {
+                    let s = values[s.0][0];
+                    values[x.0].iter().map(|&v| s * v).collect()
+                }
+                NodeKind::Relu { x } => values[x.0].iter().map(|&v| v.max(0.0)).collect(),
+                NodeKind::Clamp { x, lo, hi } => {
+                    values[x.0].iter().map(|&v| v.clamp(*lo, *hi)).collect()
+                }
+                NodeKind::FilterRows { x, w, ncols, nfft } => {
+                    let resp = response_from_half(&values[w.0], *nfft);
+                    let mut out = values[x.0].clone();
+                    filters::filter_rows(&mut out, *ncols, &resp);
+                    out
+                }
+                NodeKind::L2Loss { pred, target } => {
+                    let mut r = values[pred.0].clone();
+                    let l = l2_residual_in_place(&mut r, &values[target.0]);
+                    losses[id] = l;
+                    vec![l as f32]
+                }
+                NodeKind::PoissonLoss { pred, target } => {
+                    let mut r = values[pred.0].clone();
+                    let l = poisson_residual_in_place(&mut r, &values[target.0]);
+                    losses[id] = l;
+                    vec![l as f32]
+                }
+            };
+            debug_assert_eq!(v.len(), n, "node {id} value length");
+            values.push(v);
+        }
+        Evaluated { values, losses }
+    }
+
+    /// Evaluate the designated output node (e.g. the reconstruction an
+    /// unrolled pipeline produces) with the stored parameter values.
+    pub fn eval(&self, inputs: &[&[f32]]) -> Result<Vec<f32>, LeapError> {
+        let out = self
+            .output
+            .ok_or_else(|| LeapError::InvalidArgument("pipeline has no output node".into()))?;
+        self.check_inputs(inputs)?;
+        let params = self.stored_params()?;
+        let mut ev = self.forward(&params, inputs);
+        Ok(std::mem::take(&mut ev.values[out.0]))
+    }
+
+    /// Evaluate the designated scalar loss (f64) with the stored
+    /// parameter values.
+    pub fn loss(&self, inputs: &[&[f32]]) -> Result<f64, LeapError> {
+        let params = self.stored_params()?;
+        self.loss_with(&params, inputs)
+    }
+
+    /// Evaluate the loss with explicit parameter values.
+    pub fn loss_with(&self, params: &[&[f32]], inputs: &[&[f32]]) -> Result<f64, LeapError> {
+        let l = self
+            .loss
+            .ok_or_else(|| LeapError::InvalidArgument("pipeline has no loss node".into()))?;
+        self.check_params(params)?;
+        self.check_inputs(inputs)?;
+        let ev = self.forward(params, inputs);
+        Ok(ev.losses[l.0])
+    }
+
+    /// Evaluate the loss and the gradient with respect to **every**
+    /// parameter (one buffer per parameter, declaration order) using the
+    /// stored parameter values.
+    pub fn loss_and_grads(&self, inputs: &[&[f32]]) -> Result<(f64, Vec<Vec<f32>>), LeapError> {
+        let params = self.stored_params()?;
+        self.loss_and_grads_with(&params, inputs)
+    }
+
+    /// Loss + parameter gradients with explicit parameter values — the
+    /// stateless evaluation the serving path uses (the registered
+    /// pipeline is shared; each request carries its own parameters).
+    pub fn loss_and_grads_with(
+        &self,
+        params: &[&[f32]],
+        inputs: &[&[f32]],
+    ) -> Result<(f64, Vec<Vec<f32>>), LeapError> {
+        let loss_id = self
+            .loss
+            .ok_or_else(|| LeapError::InvalidArgument("pipeline has no loss node".into()))?;
+        self.check_params(params)?;
+        self.check_inputs(inputs)?;
+        let ev = self.forward(params, inputs);
+        let mut adj: Vec<Option<Vec<f32>>> = (0..self.nodes.len()).map(|_| None).collect();
+        adj[loss_id.0] = Some(vec![1.0f32]);
+        // Reverse topological sweep: node ids only reference smaller ids,
+        // so at id every consumer has already deposited its contribution
+        // and adj[id] is final. The visit order (and every accumulation
+        // order inside it) is fixed by construction — gradients are
+        // bit-deterministic run to run.
+        for id in (0..self.nodes.len()).rev() {
+            if !self.needs_grad[id] {
+                continue;
+            }
+            let Some(d) = adj[id].take() else { continue };
+            self.backprop_node(id, &d, &ev, &mut adj);
+            if let NodeKind::Param { .. } = self.nodes[id].kind {
+                adj[id] = Some(d); // the param's adjoint IS its gradient
+            }
+        }
+        let mut grads = Vec::with_capacity(self.params.len());
+        for (pid, p) in self.params.iter().enumerate() {
+            let node = self
+                .nodes
+                .iter()
+                .position(|n| matches!(n.kind, NodeKind::Param { pid: q } if q == pid))
+                .expect("every param has a node");
+            grads.push(match adj[node].take() {
+                Some(g) => g,
+                None => vec![0.0f32; p.shape.numel()], // loss does not depend on it
+            });
+        }
+        Ok((ev.losses[loss_id.0], grads))
+    }
+
+    /// Deposit `d` (the final adjoint of node `id`) into the adjoints of
+    /// the nodes it reads, skipping children that cannot reach a
+    /// parameter.
+    fn backprop_node(&self, id: usize, d: &[f32], ev: &Evaluated, adj: &mut [Option<Vec<f32>>]) {
+        let values = &ev.values;
+        match &self.nodes[id].kind {
+            NodeKind::Input { .. } | NodeKind::Param { .. } | NodeKind::Fill { .. } => {}
+            NodeKind::Apply { op, x } => {
+                if self.needs_grad[x.0] {
+                    let t = self.ops[*op].op.adjoint(d);
+                    axpy(self.accum(adj, *x), &t);
+                }
+            }
+            NodeKind::Adjoint { op, y } => {
+                if self.needs_grad[y.0] {
+                    let t = self.ops[*op].op.apply(d);
+                    axpy(self.accum(adj, *y), &t);
+                }
+            }
+            NodeKind::Add { a, b } => {
+                if self.needs_grad[a.0] {
+                    axpy(self.accum(adj, *a), d);
+                }
+                if self.needs_grad[b.0] {
+                    axpy(self.accum(adj, *b), d);
+                }
+            }
+            NodeKind::Sub { a, b } => {
+                if self.needs_grad[a.0] {
+                    axpy(self.accum(adj, *a), d);
+                }
+                if self.needs_grad[b.0] {
+                    let acc = self.accum(adj, *b);
+                    for (g, &v) in acc.iter_mut().zip(d.iter()) {
+                        *g -= v;
+                    }
+                }
+            }
+            NodeKind::Mul { a, b } => {
+                if self.needs_grad[a.0] {
+                    let bv = &values[b.0];
+                    let acc = self.accum(adj, *a);
+                    for i in 0..acc.len() {
+                        acc[i] += d[i] * bv[i];
+                    }
+                }
+                if self.needs_grad[b.0] {
+                    let av = &values[a.0];
+                    let acc = self.accum(adj, *b);
+                    for i in 0..acc.len() {
+                        acc[i] += d[i] * av[i];
+                    }
+                }
+            }
+            NodeKind::Scale { x, s } => {
+                let sv = values[s.0][0];
+                if self.needs_grad[x.0] {
+                    let acc = self.accum(adj, *x);
+                    for (g, &v) in acc.iter_mut().zip(d.iter()) {
+                        *g += sv * v;
+                    }
+                }
+                if self.needs_grad[s.0] {
+                    let xv = &values[x.0];
+                    let mut ds = 0.0f64;
+                    for (dv, &x) in d.iter().zip(xv.iter()) {
+                        ds += *dv as f64 * x as f64;
+                    }
+                    self.accum(adj, *s)[0] += ds as f32;
+                }
+            }
+            NodeKind::Relu { x } => {
+                if self.needs_grad[x.0] {
+                    let xv = &values[x.0];
+                    let acc = self.accum(adj, *x);
+                    for i in 0..acc.len() {
+                        if xv[i] > 0.0 {
+                            acc[i] += d[i];
+                        }
+                    }
+                }
+            }
+            NodeKind::Clamp { x, lo, hi } => {
+                if self.needs_grad[x.0] {
+                    let xv = &values[x.0];
+                    let acc = self.accum(adj, *x);
+                    for i in 0..acc.len() {
+                        if xv[i] > *lo && xv[i] < *hi {
+                            acc[i] += d[i];
+                        }
+                    }
+                }
+            }
+            NodeKind::FilterRows { x, w, ncols, nfft } => {
+                if self.needs_grad[x.0] {
+                    // self-adjoint in x: filter the adjoint with the same
+                    // response (see the variant docs)
+                    let resp = response_from_half(&values[w.0], *nfft);
+                    let mut t = d.to_vec();
+                    filters::filter_rows(&mut t, *ncols, &resp);
+                    axpy(self.accum(adj, *x), &t);
+                }
+                if self.needs_grad[w.0] {
+                    let mut acc64 = vec![0.0f64; *nfft / 2 + 1];
+                    filter_rows_weight_grad(&values[x.0], d, *ncols, *nfft, &mut acc64);
+                    let acc = self.accum(adj, *w);
+                    for (g, &a) in acc.iter_mut().zip(acc64.iter()) {
+                        *g += a as f32;
+                    }
+                }
+            }
+            NodeKind::L2Loss { pred, target } => {
+                let a = d[0];
+                let (p, t) = (&values[pred.0], &values[target.0]);
+                if self.needs_grad[pred.0] {
+                    let acc = self.accum(adj, *pred);
+                    for i in 0..acc.len() {
+                        acc[i] += a * (p[i] - t[i]);
+                    }
+                }
+                if self.needs_grad[target.0] {
+                    let acc = self.accum(adj, *target);
+                    for i in 0..acc.len() {
+                        acc[i] -= a * (p[i] - t[i]);
+                    }
+                }
+            }
+            NodeKind::PoissonLoss { pred, target } => {
+                let a = d[0];
+                let (p, t) = (&values[pred.0], &values[target.0]);
+                if self.needs_grad[pred.0] {
+                    let acc = self.accum(adj, *pred);
+                    for i in 0..acc.len() {
+                        let m = p[i].max(POISSON_EPS);
+                        acc[i] += a * (1.0 - t[i] / m);
+                    }
+                }
+                if self.needs_grad[target.0] {
+                    let acc = self.accum(adj, *target);
+                    for i in 0..acc.len() {
+                        let m = p[i].max(POISSON_EPS) as f64;
+                        acc[i] -= a * m.ln() as f32;
+                    }
+                }
+            }
+        }
+    }
+
+    /// The (lazily zero-initialized) adjoint buffer of `child`.
+    fn accum<'a>(&self, adj: &'a mut [Option<Vec<f32>>], child: NodeId) -> &'a mut [f32] {
+        let n = self.nodes[child.0].shape.numel();
+        adj[child.0].get_or_insert_with(|| vec![0.0f32; n]).as_mut_slice()
+    }
+
+    // ── wire packing ───────────────────────────────────────────────────
+
+    /// Total f32 count of the packed request tensor: every parameter
+    /// (declaration order), then every input slot (order).
+    pub fn packed_len(&self) -> usize {
+        self.params.iter().map(|p| p.shape.numel()).sum::<usize>()
+            + self.input_shapes.iter().map(|s| s.numel()).sum::<usize>()
+    }
+
+    /// Pack explicit parameter values and inputs into the single wire
+    /// tensor [`crate::coordinator::Op::SessionPipelineGrad`] carries.
+    pub fn pack(&self, params: &[&[f32]], inputs: &[&[f32]]) -> Result<Vec<f32>, LeapError> {
+        self.check_params(params)?;
+        self.check_inputs(inputs)?;
+        let mut out = Vec::with_capacity(self.packed_len());
+        for p in params {
+            out.extend_from_slice(p);
+        }
+        for i in inputs {
+            out.extend_from_slice(i);
+        }
+        Ok(out)
+    }
+
+    /// Split a packed request tensor back into (params, inputs) slices —
+    /// the exact inverse of [`Pipeline::pack`], used by the serving
+    /// executor so both ends agree on the layout by construction.
+    pub fn split_packed<'a>(
+        &self,
+        buf: &'a [f32],
+    ) -> Result<(Vec<&'a [f32]>, Vec<&'a [f32]>), LeapError> {
+        if buf.len() != self.packed_len() {
+            return Err(LeapError::ShapeMismatch {
+                what: "packed pipeline tensor",
+                expected: self.packed_len(),
+                got: buf.len(),
+            });
+        }
+        let mut off = 0usize;
+        let mut params = Vec::with_capacity(self.params.len());
+        for p in &self.params {
+            let n = p.shape.numel();
+            params.push(&buf[off..off + n]);
+            off += n;
+        }
+        let mut inputs = Vec::with_capacity(self.input_shapes.len());
+        for s in &self.input_shapes {
+            let n = s.numel();
+            inputs.push(&buf[off..off + n]);
+            off += n;
+        }
+        Ok((params, inputs))
+    }
+
+    /// Expected f32 count of a gradient reply: 2 (the f64 loss as two
+    /// f32 bit-halves, hi then lo) + every parameter gradient.
+    pub fn grad_reply_len(&self) -> usize {
+        2 + self.params.iter().map(|p| p.shape.numel()).sum::<usize>()
+    }
+
+    /// Upper bound on the transient bytes one `loss_and_grads`
+    /// evaluation materializes: every node's forward value plus (worst
+    /// case) an adjoint buffer of the same size — the forward pass keeps
+    /// all node values alive for the backward sweep. Saturating; the
+    /// serving registry gates wire-registered pipelines on this so a
+    /// hostile spec full of huge intermediate nodes cannot OOM the
+    /// server at evaluation time (the packed request/reply caps only
+    /// bound params + inputs, not intermediates).
+    pub fn eval_bytes_estimate(&self) -> usize {
+        self.nodes
+            .iter()
+            .fold(0usize, |acc, n| acc.saturating_add(n.shape.numel().saturating_mul(8)))
+    }
+
+    /// Pack `(loss, grads)` into the reply tensor. The f64 loss travels
+    /// as raw bits split across two f32 slots — the payload is bit-exact
+    /// on the wire, so the loss round-trips *exactly* (JSON f64 text
+    /// would too, but this keeps the reply a single tensor).
+    pub fn pack_grad_reply(&self, loss: f64, grads: &[Vec<f32>]) -> Vec<f32> {
+        let bits = loss.to_bits();
+        let mut out = Vec::with_capacity(self.grad_reply_len());
+        out.push(f32::from_bits((bits >> 32) as u32));
+        out.push(f32::from_bits(bits as u32));
+        for g in grads {
+            out.extend_from_slice(g);
+        }
+        out
+    }
+
+    /// Unpack a gradient reply into `(loss, per-param gradients)`.
+    pub fn unpack_grad_reply(&self, buf: &[f32]) -> Result<(f64, Vec<Vec<f32>>), LeapError> {
+        if buf.len() != self.grad_reply_len() {
+            return Err(LeapError::ShapeMismatch {
+                what: "pipeline gradient reply",
+                expected: self.grad_reply_len(),
+                got: buf.len(),
+            });
+        }
+        let bits = ((buf[0].to_bits() as u64) << 32) | buf[1].to_bits() as u64;
+        let loss = f64::from_bits(bits);
+        let mut off = 2usize;
+        let mut grads = Vec::with_capacity(self.params.len());
+        for p in &self.params {
+            let n = p.shape.numel();
+            grads.push(buf[off..off + n].to_vec());
+            off += n;
+        }
+        Ok((loss, grads))
+    }
+}
+
+/// `acc += v`, elementwise.
+fn axpy(acc: &mut [f32], v: &[f32]) {
+    debug_assert_eq!(acc.len(), v.len());
+    for (a, &b) in acc.iter_mut().zip(v.iter()) {
+        *a += b;
+    }
+}
+
+/// Even extension of a half-spectrum to the full `nfft` response:
+/// `resp[k] = w[min(k, nfft−k)]` (f64, what
+/// [`crate::recon::filters::filter_rows`] consumes).
+pub(crate) fn response_from_half(w: &[f32], nfft: usize) -> Vec<f64> {
+    debug_assert_eq!(w.len(), nfft / 2 + 1);
+    (0..nfft).map(|k| w[k.min(nfft - k)] as f64).collect()
+}
+
+/// Accumulate `dL/dw` for one `FilterRows` node (see the variant docs
+/// for the derivation): per row, `dL/dresp_k = Re(X_k·conj(D_k))/nfft`
+/// with `X = FFT(x̃)`, `D = FFT(d̃)` (zero-padded rows; the forward FFT
+/// here is unnormalized, the inverse carries `1/nfft` — matching
+/// [`crate::util::fft::fft_inplace`]), folded onto half-spectrum index
+/// `min(k, nfft−k)`. All accumulation is sequential f64 — deterministic.
+fn filter_rows_weight_grad(x: &[f32], d: &[f32], ncols: usize, nfft: usize, acc: &mut [f64]) {
+    debug_assert_eq!(x.len(), d.len());
+    debug_assert_eq!(x.len() % ncols, 0);
+    debug_assert_eq!(acc.len(), nfft / 2 + 1);
+    let mut xr = vec![0.0f64; nfft];
+    let mut xi = vec![0.0f64; nfft];
+    let mut dr = vec![0.0f64; nfft];
+    let mut di = vec![0.0f64; nfft];
+    for (xrow, drow) in x.chunks_exact(ncols).zip(d.chunks_exact(ncols)) {
+        xr.fill(0.0);
+        xi.fill(0.0);
+        dr.fill(0.0);
+        di.fill(0.0);
+        for (i, &v) in xrow.iter().enumerate() {
+            xr[i] = v as f64;
+        }
+        for (i, &v) in drow.iter().enumerate() {
+            dr[i] = v as f64;
+        }
+        fft_inplace(&mut xr, &mut xi, false);
+        fft_inplace(&mut dr, &mut di, false);
+        for k in 0..nfft {
+            let g = (xr[k] * dr[k] + xi[k] * di[k]) / nfft as f64;
+            acc[k.min(nfft - k)] += g;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::geometry::{Geometry, ParallelBeam, VolumeGeometry};
+    use crate::ops::PlanOp;
+    use crate::projector::{Model, Projector};
+    use crate::recon::Window;
+    use crate::util::rng::Rng;
+
+    fn scan_op() -> Arc<dyn LinearOp> {
+        let vg = VolumeGeometry::slice2d(10, 10, 1.0);
+        let g = Geometry::Parallel(ParallelBeam::standard_2d(7, 14, 1.0));
+        Arc::new(PlanOp::new(&Projector::new(g, vg, Model::SF).with_threads(2)))
+    }
+
+    #[test]
+    fn response_extension_matches_ramp() {
+        // half-spectrum init + even extension reproduce the full ramp
+        // response up to the f32 cast of each sample
+        let half = filters::ramp_half_spectrum(14, 1.0, Window::Hann);
+        let nfft = (half.len() - 1) * 2;
+        let full = filters::ramp_response(14, 1.0, Window::Hann);
+        assert_eq!(full.len(), nfft);
+        let ext = response_from_half(&half, nfft);
+        for k in 0..nfft {
+            assert_eq!(ext[k], full[k] as f32 as f64, "bin {k}");
+        }
+    }
+
+    #[test]
+    fn tape_l2_matches_projection_loss_bits() {
+        // a tape of Apply → L2Loss must reproduce ProjectionLoss exactly:
+        // same residual math, same adjoint — bit-identical loss and grad
+        let op = scan_op();
+        let dn = op.domain_shape().numel();
+        let rn = op.range_shape().numel();
+        let mut rng = Rng::new(3);
+        let mut x0 = vec![0.0f32; dn];
+        rng.fill_uniform(&mut x0, 0.2, 1.0);
+        let mut b = vec![0.0f32; rn];
+        rng.fill_uniform(&mut b, 0.2, 1.0);
+
+        let mut pb = PipelineBuilder::new();
+        let a = pb.op("scan", op.clone()).unwrap();
+        let x = pb.param("x", op.domain_shape(), x0.clone()).unwrap();
+        let meas = pb.input(op.range_shape()).unwrap();
+        let ax = pb.apply(a, x).unwrap();
+        let l = pb.l2_loss(ax, meas).unwrap();
+        pb.set_loss(l).unwrap();
+        let pipe = pb.build().unwrap();
+        let (loss, grads) = pipe.loss_and_grads(&[&b]).unwrap();
+
+        let reference = crate::ops::ProjectionLoss::new(
+            &*op,
+            &b,
+            crate::ops::Objective::LeastSquares,
+        );
+        let mut gref = vec![0.0f32; dn];
+        let lref = reference.value_and_grad(&x0, &mut gref);
+        assert_eq!(loss, lref, "loss must be bit-identical");
+        assert_eq!(grads[0], gref, "gradient must be bit-identical");
+    }
+
+    #[test]
+    fn grad_reply_roundtrip_is_bit_exact() {
+        let op = scan_op();
+        let mut pb = PipelineBuilder::new();
+        let a = pb.op("scan", op.clone()).unwrap();
+        let x = pb.param("x", op.domain_shape(), vec![0.5; op.domain_shape().numel()]).unwrap();
+        let meas = pb.input(op.range_shape()).unwrap();
+        let ax = pb.apply(a, x).unwrap();
+        let l = pb.l2_loss(ax, meas).unwrap();
+        pb.set_loss(l).unwrap();
+        let pipe = pb.build().unwrap();
+        for loss in [0.0f64, 1.5e-300, -7.25, f64::MAX, 1.0 / 3.0] {
+            // a gradient with awkward bit patterns (NaN, -0, denormal)
+            let mut g = vec![0.25f32; pipe.params()[0].shape.numel()];
+            g[0] = f32::NAN;
+            g[1] = -0.0;
+            g[2] = f32::MIN_POSITIVE;
+            let packed = pipe.pack_grad_reply(loss, &[g.clone()]);
+            let (l2, g2) = pipe.unpack_grad_reply(&packed).unwrap();
+            assert_eq!(l2.to_bits(), loss.to_bits());
+            let a: Vec<u32> = g.iter().map(|v| v.to_bits()).collect();
+            let b: Vec<u32> = g2[0].iter().map(|v| v.to_bits()).collect();
+            assert_eq!(a, b);
+        }
+    }
+
+    #[test]
+    fn gradients_are_deterministic() {
+        let op = scan_op();
+        let mut make = || {
+            let mut pb = PipelineBuilder::new();
+            let a = pb.op("scan", op.clone()).unwrap();
+            let x = pb
+                .param("x", op.domain_shape(), vec![0.3; op.domain_shape().numel()])
+                .unwrap();
+            let s = pb.scalar_param("s", 0.7).unwrap();
+            let meas = pb.input(op.range_shape()).unwrap();
+            let ax = pb.apply(a, x).unwrap();
+            let sax = pb.scale(ax, s).unwrap();
+            let l = pb.l2_loss(sax, meas).unwrap();
+            pb.set_loss(l).unwrap();
+            pb.build().unwrap()
+        };
+        let b = vec![0.4f32; op.range_shape().numel()];
+        let (l1, g1) = make().loss_and_grads(&[&b]).unwrap();
+        let (l2, g2) = make().loss_and_grads(&[&b]).unwrap();
+        assert_eq!(l1.to_bits(), l2.to_bits());
+        assert_eq!(g1, g2);
+    }
+}

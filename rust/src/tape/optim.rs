@@ -1,0 +1,242 @@
+//! Deterministic first-order optimizers for tape parameters.
+//!
+//! Minimal on purpose: the tape returns exact gradients, so plain SGD
+//! and Adam cover the unrolled/learned-reconstruction training loops
+//! this crate targets. Every update is elementwise, sequential f32
+//! arithmetic with no randomness and no data-dependent branching —
+//! two identical [`fit`] runs produce **bit-identical** parameters,
+//! which the test suite asserts (and which makes server-side and
+//! client-side training trivially comparable).
+
+use crate::api::LeapError;
+
+use super::Pipeline;
+
+/// Optimizer selector for [`fit`] / [`crate::api::Scan::fit`].
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Optimizer {
+    /// `p ← p − lr·g`.
+    Sgd { lr: f32 },
+    /// Adam (Kingma & Ba 2015) with bias correction.
+    Adam { lr: f32, beta1: f32, beta2: f32, eps: f32 },
+}
+
+impl Optimizer {
+    /// Adam with the customary defaults (β₁ 0.9, β₂ 0.999, ε 1e-8).
+    pub fn adam(lr: f32) -> Optimizer {
+        Optimizer::Adam { lr, beta1: 0.9, beta2: 0.999, eps: 1e-8 }
+    }
+
+    fn validate(&self) -> Result<(), LeapError> {
+        let bad = |m: String| Err(LeapError::InvalidArgument(m));
+        match *self {
+            Optimizer::Sgd { lr } => {
+                if !(lr.is_finite() && lr > 0.0) {
+                    return bad(format!("sgd lr must be positive and finite (got {lr})"));
+                }
+            }
+            Optimizer::Adam { lr, beta1, beta2, eps } => {
+                if !(lr.is_finite() && lr > 0.0) {
+                    return bad(format!("adam lr must be positive and finite (got {lr})"));
+                }
+                for (name, b) in [("beta1", beta1), ("beta2", beta2)] {
+                    if !(b.is_finite() && (0.0..1.0).contains(&b)) {
+                        return bad(format!("adam {name} must be in [0, 1) (got {b})"));
+                    }
+                }
+                if !(eps.is_finite() && eps > 0.0) {
+                    return bad(format!("adam eps must be positive and finite (got {eps})"));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Per-parameter optimizer state (Adam moments; empty for SGD).
+struct OptState {
+    m: Vec<Vec<f32>>,
+    v: Vec<Vec<f32>>,
+    t: u32,
+}
+
+impl OptState {
+    fn new(pipe: &Pipeline) -> OptState {
+        let zeros: Vec<Vec<f32>> =
+            pipe.params().iter().map(|p| vec![0.0f32; p.shape.numel()]).collect();
+        OptState { m: zeros.clone(), v: zeros, t: 0 }
+    }
+
+    fn step(&mut self, opt: &Optimizer, pipe: &mut Pipeline, grads: &[Vec<f32>]) {
+        self.t += 1;
+        match *opt {
+            Optimizer::Sgd { lr } => {
+                for (p, g) in pipe.params_mut().iter_mut().zip(grads.iter()) {
+                    for (pv, &gv) in p.value.iter_mut().zip(g.iter()) {
+                        *pv -= lr * gv;
+                    }
+                }
+            }
+            Optimizer::Adam { lr, beta1, beta2, eps } => {
+                // bias-corrected step size, computed once per step
+                let t = self.t as f64;
+                let bc1 = 1.0 - (beta1 as f64).powf(t);
+                let bc2 = 1.0 - (beta2 as f64).powf(t);
+                let alpha = (lr as f64 * bc2.sqrt() / bc1) as f32;
+                for ((p, g), (m, v)) in pipe
+                    .params_mut()
+                    .iter_mut()
+                    .zip(grads.iter())
+                    .zip(self.m.iter_mut().zip(self.v.iter_mut()))
+                {
+                    for i in 0..p.value.len() {
+                        m[i] = beta1 * m[i] + (1.0 - beta1) * g[i];
+                        v[i] = beta2 * v[i] + (1.0 - beta2) * g[i] * g[i];
+                        p.value[i] -= alpha * m[i] / (v[i].sqrt() + eps);
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Configuration for [`fit`].
+#[derive(Clone, Copy, Debug)]
+pub struct FitCfg {
+    pub optimizer: Optimizer,
+    /// Number of optimizer steps (each = one loss + gradient
+    /// evaluation).
+    pub iterations: usize,
+}
+
+/// What a [`fit`] run did.
+#[derive(Clone, Debug)]
+pub struct FitReport {
+    /// Loss before the first update.
+    pub initial_loss: f64,
+    /// Loss at the last evaluation (before the final update is applied).
+    pub final_loss: f64,
+    /// Every evaluated loss, in order (`iterations` entries).
+    pub losses: Vec<f64>,
+}
+
+/// Train `pipe`'s parameters in place: `iterations` rounds of
+/// loss + exact gradients + one optimizer step. Deterministic — see the
+/// module docs. Inputs are borrowed once and reused every round (full-
+/// batch training; callers wanting stochasticity re-slice between
+/// calls).
+pub fn fit(pipe: &mut Pipeline, inputs: &[&[f32]], cfg: &FitCfg) -> Result<FitReport, LeapError> {
+    cfg.optimizer.validate()?;
+    if cfg.iterations == 0 {
+        return Err(LeapError::InvalidArgument("fit needs at least one iteration".into()));
+    }
+    let mut state = OptState::new(pipe);
+    let mut losses = Vec::with_capacity(cfg.iterations);
+    for _ in 0..cfg.iterations {
+        let (loss, grads) = pipe.loss_and_grads(inputs)?;
+        losses.push(loss);
+        state.step(&cfg.optimizer, pipe, &grads);
+    }
+    Ok(FitReport {
+        initial_loss: losses[0],
+        final_loss: *losses.last().expect("at least one iteration"),
+        losses,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ops::Shape;
+    use crate::tape::PipelineBuilder;
+
+    /// Tiny quadratic: L = ½‖p − b‖² with b an input — the optimizer
+    /// must walk p toward b.
+    fn quadratic(init: &[f32]) -> Pipeline {
+        let mut pb = PipelineBuilder::new();
+        let p = pb.param("p", Shape([init.len(), 1, 1]), init.to_vec()).unwrap();
+        let b = pb.input(Shape([init.len(), 1, 1])).unwrap();
+        let l = pb.l2_loss(p, b).unwrap();
+        pb.set_loss(l).unwrap();
+        pb.build().unwrap()
+    }
+
+    #[test]
+    fn sgd_descends_a_quadratic() {
+        let mut pipe = quadratic(&[0.0, 0.0, 0.0]);
+        let target = [1.0f32, -2.0, 3.0];
+        let report = fit(
+            &mut pipe,
+            &[&target],
+            &FitCfg { optimizer: Optimizer::Sgd { lr: 0.5 }, iterations: 40 },
+        )
+        .unwrap();
+        assert!(report.final_loss < 1e-6 * report.initial_loss.max(1.0));
+        for (p, t) in pipe.params()[0].value.iter().zip(target.iter()) {
+            assert!((p - t).abs() < 1e-3, "{p} vs {t}");
+        }
+    }
+
+    #[test]
+    fn adam_descends_a_quadratic() {
+        let mut pipe = quadratic(&[5.0, -5.0]);
+        let target = [0.5f32, 0.25];
+        let report = fit(
+            &mut pipe,
+            &[&target],
+            &FitCfg { optimizer: Optimizer::adam(0.5), iterations: 200 },
+        )
+        .unwrap();
+        assert!(
+            report.final_loss < 1e-4,
+            "adam should converge: {} → {}",
+            report.initial_loss,
+            report.final_loss
+        );
+    }
+
+    #[test]
+    fn fit_is_bit_deterministic() {
+        let run = || {
+            let mut pipe = quadratic(&[2.0, -1.0, 0.5, 4.0]);
+            let target = [0.1f32, 0.2, 0.3, 0.4];
+            let report = fit(
+                &mut pipe,
+                &[&target],
+                &FitCfg { optimizer: Optimizer::adam(0.1), iterations: 25 },
+            )
+            .unwrap();
+            (pipe.params()[0].value.clone(), report.losses)
+        };
+        let (p1, l1) = run();
+        let (p2, l2) = run();
+        let b1: Vec<u32> = p1.iter().map(|v| v.to_bits()).collect();
+        let b2: Vec<u32> = p2.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(b1, b2, "two identical fits must produce bit-identical params");
+        let lb1: Vec<u64> = l1.iter().map(|v| v.to_bits()).collect();
+        let lb2: Vec<u64> = l2.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(lb1, lb2);
+    }
+
+    #[test]
+    fn bad_optimizer_args_are_typed() {
+        let mut pipe = quadratic(&[0.0]);
+        let t = [1.0f32];
+        for opt in [
+            Optimizer::Sgd { lr: -1.0 },
+            Optimizer::Sgd { lr: f32::NAN },
+            Optimizer::Adam { lr: 0.1, beta1: 1.5, beta2: 0.999, eps: 1e-8 },
+            Optimizer::Adam { lr: 0.1, beta1: 0.9, beta2: 0.999, eps: 0.0 },
+        ] {
+            let e = fit(&mut pipe, &[&t], &FitCfg { optimizer: opt, iterations: 1 }).unwrap_err();
+            assert!(matches!(e, LeapError::InvalidArgument(_)), "{opt:?}: {e:?}");
+        }
+        let e = fit(
+            &mut pipe,
+            &[&t],
+            &FitCfg { optimizer: Optimizer::Sgd { lr: 0.1 }, iterations: 0 },
+        )
+        .unwrap_err();
+        assert!(matches!(e, LeapError::InvalidArgument(_)));
+    }
+}

@@ -1,0 +1,569 @@
+//! JSON wire form of a [`Pipeline`] — how a client registers a graph on
+//! a protocol-v2 session (`RegisterPipeline` frame, see
+//! `docs/PROTOCOL.md`).
+//!
+//! The spec carries the *structure* only: node list (topological, ids =
+//! positions), input-slot shapes, parameter names/shapes, the output
+//! and loss designations. Parameter **values** never travel in the
+//! spec — every `SessionPipelineGrad` request carries its current
+//! parameters in the packed payload ([`Pipeline::pack`]), keeping the
+//! server stateless about training progress. Operators are referenced
+//! by name; the serving side resolves `"scan"` to the session's pinned
+//! plan, so a registered pipeline is evaluated against exactly the
+//! floats the in-process tape would use — bit-identical results.
+//!
+//! Every field is validated with typed [`LeapError`]s (malformed spec →
+//! [`LeapError::Protocol`], unknown op name → [`LeapError::Unsupported`],
+//! shape violations → the builder's own errors). The node/element caps
+//! in [`super::build`] bound individual nodes; the serving registry
+//! additionally gates the **cumulative** evaluation footprint
+//! ([`Pipeline::eval_bytes_estimate`] vs
+//! `coordinator::session::SESSION_MAX_BYTES`) so a hostile spec cannot
+//! stack many maximal nodes into an OOM at evaluation time.
+
+use std::sync::Arc;
+
+use crate::api::LeapError;
+use crate::ops::{LinearOp, Shape};
+use crate::util::json::Json;
+
+use super::{NodeKind, Pipeline, PipelineBuilder};
+
+/// Spec format version (append-only evolution, like the wire codes).
+pub const SPEC_VERSION: usize = 1;
+
+/// Cap on the total element count of a spec's **leaves** (params +
+/// inputs), enforced while parsing — i.e. before any placeholder is
+/// allocated from untrusted shapes. Equals the wire payload cap in
+/// f32s: a pipeline over this limit could never receive its packed
+/// request in one frame anyway, so nothing legitimate is lost.
+pub const MAX_PACKED_ELEMENTS: usize = 1 << 28;
+
+fn shape_to_json(s: Shape) -> Json {
+    Json::Arr(s.0.iter().map(|&d| Json::Num(d as f64)).collect())
+}
+
+/// Parse and *bound* a shape from untrusted JSON: dimensions must be
+/// numbers whose product neither overflows (`checked_mul`) nor exceeds
+/// [`super::build::MAX_NODE_ELEMENTS`]. This runs before anything is
+/// allocated from the shape — a spec declaring a petabyte tensor is a
+/// typed error, not an allocation abort.
+fn shape_from_json(v: &Json) -> Result<Shape, LeapError> {
+    let arr = v
+        .as_arr()
+        .ok_or_else(|| LeapError::Protocol("shape must be an array".into()))?;
+    if arr.len() != 3 {
+        return Err(LeapError::Protocol(format!(
+            "shape must have 3 dimensions, got {}",
+            arr.len()
+        )));
+    }
+    let mut dims = [0usize; 3];
+    for (i, d) in arr.iter().enumerate() {
+        dims[i] = d
+            .as_usize()
+            .ok_or_else(|| LeapError::Protocol(format!("shape dimension {i} must be a number")))?;
+    }
+    dims[0]
+        .checked_mul(dims[1])
+        .and_then(|p| p.checked_mul(dims[2]))
+        .filter(|&n| n <= super::build::MAX_NODE_ELEMENTS)
+        .ok_or_else(|| {
+            LeapError::InvalidArgument(format!(
+                "shape {dims:?} overflows or exceeds {} elements",
+                super::build::MAX_NODE_ELEMENTS
+            ))
+        })?;
+    Ok(Shape(dims))
+}
+
+fn get_node_id(v: &Json, key: &str) -> Result<usize, LeapError> {
+    v.get_usize(key)
+        .ok_or_else(|| LeapError::Protocol(format!("node missing {key:?} id")))
+}
+
+fn get_f32(v: &Json, key: &str) -> Result<f32, LeapError> {
+    v.get_f64(key)
+        .map(|f| f as f32)
+        .ok_or_else(|| LeapError::Protocol(format!("node missing {key:?} value")))
+}
+
+/// Serialize a pipeline's structure (see the module docs). The inverse
+/// of [`pipeline_from_json`] up to operator rebinding.
+pub fn pipeline_to_json(p: &Pipeline) -> Json {
+    let inputs = Json::Arr(p.input_shapes.iter().map(|&s| shape_to_json(s)).collect());
+    let params = Json::Arr(
+        p.params
+            .iter()
+            .map(|pd| {
+                Json::obj(vec![
+                    ("name", Json::Str(pd.name.clone())),
+                    ("shape", shape_to_json(pd.shape)),
+                ])
+            })
+            .collect(),
+    );
+    let nodes = Json::Arr(
+        p.nodes
+            .iter()
+            .map(|n| {
+                let mut f: Vec<(&str, Json)> = Vec::new();
+                match &n.kind {
+                    NodeKind::Input { slot } => {
+                        f.push(("k", Json::Str("input".into())));
+                        f.push(("slot", Json::Num(*slot as f64)));
+                    }
+                    NodeKind::Param { pid } => {
+                        f.push(("k", Json::Str("param".into())));
+                        f.push(("p", Json::Num(*pid as f64)));
+                    }
+                    NodeKind::Fill { v } => {
+                        f.push(("k", Json::Str("fill".into())));
+                        f.push(("shape", shape_to_json(n.shape)));
+                        f.push(("v", Json::Num(*v as f64)));
+                    }
+                    NodeKind::Apply { op, x } => {
+                        f.push(("k", Json::Str("apply".into())));
+                        f.push(("op", Json::Str(p.ops[*op].name.clone())));
+                        f.push(("x", Json::Num(x.0 as f64)));
+                    }
+                    NodeKind::Adjoint { op, y } => {
+                        f.push(("k", Json::Str("adjoint".into())));
+                        f.push(("op", Json::Str(p.ops[*op].name.clone())));
+                        f.push(("y", Json::Num(y.0 as f64)));
+                    }
+                    NodeKind::Add { a, b } => {
+                        f.push(("k", Json::Str("add".into())));
+                        f.push(("a", Json::Num(a.0 as f64)));
+                        f.push(("b", Json::Num(b.0 as f64)));
+                    }
+                    NodeKind::Sub { a, b } => {
+                        f.push(("k", Json::Str("sub".into())));
+                        f.push(("a", Json::Num(a.0 as f64)));
+                        f.push(("b", Json::Num(b.0 as f64)));
+                    }
+                    NodeKind::Mul { a, b } => {
+                        f.push(("k", Json::Str("mul".into())));
+                        f.push(("a", Json::Num(a.0 as f64)));
+                        f.push(("b", Json::Num(b.0 as f64)));
+                    }
+                    NodeKind::Scale { x, s } => {
+                        f.push(("k", Json::Str("scale".into())));
+                        f.push(("x", Json::Num(x.0 as f64)));
+                        f.push(("s", Json::Num(s.0 as f64)));
+                    }
+                    NodeKind::Relu { x } => {
+                        f.push(("k", Json::Str("relu".into())));
+                        f.push(("x", Json::Num(x.0 as f64)));
+                    }
+                    NodeKind::Clamp { x, lo, hi } => {
+                        f.push(("k", Json::Str("clamp".into())));
+                        f.push(("x", Json::Num(x.0 as f64)));
+                        f.push(("lo", Json::Num(*lo as f64)));
+                        f.push(("hi", Json::Num(*hi as f64)));
+                    }
+                    NodeKind::FilterRows { x, w, .. } => {
+                        f.push(("k", Json::Str("filter_rows".into())));
+                        f.push(("x", Json::Num(x.0 as f64)));
+                        f.push(("w", Json::Num(w.0 as f64)));
+                    }
+                    NodeKind::L2Loss { pred, target } => {
+                        f.push(("k", Json::Str("l2".into())));
+                        f.push(("pred", Json::Num(pred.0 as f64)));
+                        f.push(("target", Json::Num(target.0 as f64)));
+                    }
+                    NodeKind::PoissonLoss { pred, target } => {
+                        f.push(("k", Json::Str("poisson".into())));
+                        f.push(("pred", Json::Num(pred.0 as f64)));
+                        f.push(("target", Json::Num(target.0 as f64)));
+                    }
+                }
+                Json::obj(f)
+            })
+            .collect(),
+    );
+    let mut fields = vec![
+        ("tape_spec", Json::Num(SPEC_VERSION as f64)),
+        ("inputs", inputs),
+        ("params", params),
+        ("nodes", nodes),
+    ];
+    if let Some(o) = p.output {
+        fields.push(("output", Json::Num(o.0 as f64)));
+    }
+    if let Some(l) = p.loss {
+        fields.push(("loss", Json::Num(l.0 as f64)));
+    }
+    Json::obj(fields)
+}
+
+/// Rebuild a pipeline from its wire spec, resolving operator names
+/// against `ops` (the serving side passes `[("scan", session plan)]`).
+/// Runs the full [`PipelineBuilder`] validation, so a spec that parses
+/// is exactly as safe as a locally-built pipeline.
+pub fn pipeline_from_json(
+    spec: &Json,
+    ops: &[(&str, Arc<dyn LinearOp>)],
+) -> Result<Pipeline, LeapError> {
+    let version = spec
+        .get_usize("tape_spec")
+        .ok_or_else(|| LeapError::Protocol("pipeline spec missing tape_spec version".into()))?;
+    if version != SPEC_VERSION {
+        return Err(LeapError::Unsupported(format!(
+            "pipeline spec version {version} (this build speaks {SPEC_VERSION})"
+        )));
+    }
+    let input_shapes: Vec<Shape> = spec
+        .get("inputs")
+        .and_then(|v| v.as_arr())
+        .ok_or_else(|| LeapError::Protocol("pipeline spec missing inputs".into()))?
+        .iter()
+        .map(shape_from_json)
+        .collect::<Result<_, _>>()?;
+    let param_decls: Vec<(String, Shape)> = spec
+        .get("params")
+        .and_then(|v| v.as_arr())
+        .ok_or_else(|| LeapError::Protocol("pipeline spec missing params".into()))?
+        .iter()
+        .map(|p| {
+            let name = p
+                .get_str("name")
+                .ok_or_else(|| LeapError::Protocol("param missing name".into()))?
+                .to_string();
+            let shape = shape_from_json(
+                p.get("shape")
+                    .ok_or_else(|| LeapError::Protocol("param missing shape".into()))?,
+            )?;
+            Ok((name, shape))
+        })
+        .collect::<Result<_, LeapError>>()?;
+    let nodes = spec
+        .get("nodes")
+        .and_then(|v| v.as_arr())
+        .ok_or_else(|| LeapError::Protocol("pipeline spec missing nodes".into()))?;
+
+    let mut pb = PipelineBuilder::new();
+    let mut op_refs = Vec::with_capacity(ops.len());
+    for (name, op) in ops {
+        op_refs.push((name.to_string(), pb.op(name, op.clone())?));
+    }
+    let resolve_op = |name: &str,
+                      refs: &[(String, super::OpRef)]|
+     -> Result<super::OpRef, LeapError> {
+        refs.iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, r)| *r)
+            .ok_or_else(|| {
+                LeapError::Unsupported(format!(
+                    "pipeline spec references unknown operator {name:?}"
+                ))
+            })
+    };
+
+    let mut next_input = 0usize;
+    let mut next_param = 0usize;
+    // cumulative leaf elements, gated BEFORE each param placeholder is
+    // allocated: individual shapes are already bounded (shape_from_json),
+    // this stops a spec from stacking thousands of maximal leaves
+    let mut packed_elems = 0usize;
+    let mut take_packed = |n: usize| -> Result<(), LeapError> {
+        packed_elems = packed_elems.saturating_add(n);
+        if packed_elems > MAX_PACKED_ELEMENTS {
+            return Err(LeapError::BudgetExceeded {
+                needed: packed_elems.saturating_mul(4),
+                cap: MAX_PACKED_ELEMENTS * 4,
+            });
+        }
+        Ok(())
+    };
+    let mut ids: Vec<super::NodeId> = Vec::with_capacity(nodes.len());
+    let child = |ids: &[super::NodeId], idx: usize| -> Result<super::NodeId, LeapError> {
+        ids.get(idx).copied().ok_or_else(|| {
+            LeapError::Protocol(format!("node references forward/unknown id {idx}"))
+        })
+    };
+    for (pos, n) in nodes.iter().enumerate() {
+        let kind = n
+            .get_str("k")
+            .ok_or_else(|| LeapError::Protocol(format!("node {pos} missing kind")))?;
+        let id = match kind {
+            "input" => {
+                let slot = get_node_id(n, "slot")?;
+                if slot != next_input {
+                    return Err(LeapError::Protocol(format!(
+                        "input nodes must appear in slot order (expected {next_input}, got {slot})"
+                    )));
+                }
+                let shape = *input_shapes.get(slot).ok_or_else(|| {
+                    LeapError::Protocol(format!("input slot {slot} has no declared shape"))
+                })?;
+                take_packed(shape.numel())?;
+                next_input += 1;
+                pb.input(shape)?
+            }
+            "param" => {
+                let pid = get_node_id(n, "p")?;
+                if pid != next_param {
+                    return Err(LeapError::Protocol(format!(
+                        "param nodes must appear in order (expected {next_param}, got {pid})"
+                    )));
+                }
+                let (name, shape) = param_decls.get(pid).cloned().ok_or_else(|| {
+                    LeapError::Protocol(format!("param {pid} is not declared"))
+                })?;
+                take_packed(shape.numel())?;
+                next_param += 1;
+                // values travel per-request: declare the parameter with
+                // NO stored value, so a registered pipeline pins only
+                // its graph — never a frame-sized zero placeholder
+                pb.param_uninit(&name, shape)?
+            }
+            "fill" => {
+                let shape = shape_from_json(
+                    n.get("shape")
+                        .ok_or_else(|| LeapError::Protocol("fill node missing shape".into()))?,
+                )?;
+                pb.fill(shape, get_f32(n, "v")?)?
+            }
+            "apply" => {
+                let name = n
+                    .get_str("op")
+                    .ok_or_else(|| LeapError::Protocol("apply node missing op".into()))?;
+                let op = resolve_op(name, &op_refs)?;
+                pb.apply(op, child(&ids, get_node_id(n, "x")?)?)?
+            }
+            "adjoint" => {
+                let name = n
+                    .get_str("op")
+                    .ok_or_else(|| LeapError::Protocol("adjoint node missing op".into()))?;
+                let op = resolve_op(name, &op_refs)?;
+                pb.adjoint(op, child(&ids, get_node_id(n, "y")?)?)?
+            }
+            "add" => pb.add(
+                child(&ids, get_node_id(n, "a")?)?,
+                child(&ids, get_node_id(n, "b")?)?,
+            )?,
+            "sub" => pb.sub(
+                child(&ids, get_node_id(n, "a")?)?,
+                child(&ids, get_node_id(n, "b")?)?,
+            )?,
+            "mul" => pb.mul(
+                child(&ids, get_node_id(n, "a")?)?,
+                child(&ids, get_node_id(n, "b")?)?,
+            )?,
+            "scale" => pb.scale(
+                child(&ids, get_node_id(n, "x")?)?,
+                child(&ids, get_node_id(n, "s")?)?,
+            )?,
+            "relu" => pb.relu(child(&ids, get_node_id(n, "x")?)?)?,
+            "clamp" => pb.clamp(
+                child(&ids, get_node_id(n, "x")?)?,
+                get_f32(n, "lo")?,
+                get_f32(n, "hi")?,
+            )?,
+            "filter_rows" => pb.filter_rows(
+                child(&ids, get_node_id(n, "x")?)?,
+                child(&ids, get_node_id(n, "w")?)?,
+            )?,
+            "l2" => pb.l2_loss(
+                child(&ids, get_node_id(n, "pred")?)?,
+                child(&ids, get_node_id(n, "target")?)?,
+            )?,
+            "poisson" => pb.poisson_loss(
+                child(&ids, get_node_id(n, "pred")?)?,
+                child(&ids, get_node_id(n, "target")?)?,
+            )?,
+            other => {
+                return Err(LeapError::Unsupported(format!(
+                    "pipeline spec node kind {other:?}"
+                )))
+            }
+        };
+        ids.push(id);
+    }
+    if next_input != input_shapes.len() {
+        return Err(LeapError::Protocol(format!(
+            "spec declares {} input shapes but has {next_input} input nodes",
+            input_shapes.len()
+        )));
+    }
+    if next_param != param_decls.len() {
+        return Err(LeapError::Protocol(format!(
+            "spec declares {} params but has {next_param} param nodes",
+            param_decls.len()
+        )));
+    }
+    if let Some(o) = spec.get_usize("output") {
+        pb.set_output(child(&ids, o)?)?;
+    }
+    if let Some(l) = spec.get_usize("loss") {
+        pb.set_loss(child(&ids, l)?)?;
+    }
+    pb.build()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::geometry::{FanBeam, Geometry, VolumeGeometry};
+    use crate::ops::PlanOp;
+    use crate::projector::{Model, Projector};
+    use crate::recon::Window;
+    use crate::tape::{learned_fbp, unrolled_gd, UnrollCfg};
+    use crate::util::rng::Rng;
+
+    fn fan_op() -> Arc<dyn LinearOp> {
+        let vg = VolumeGeometry::slice2d(10, 10, 1.0);
+        let g = Geometry::Fan(FanBeam::standard(8, 14, 1.0, 60.0, 120.0));
+        Arc::new(PlanOp::new(&Projector::new(g, vg, Model::SF).with_threads(2)))
+    }
+
+    #[test]
+    fn roundtrip_preserves_gradients_bit_for_bit() {
+        let a = fan_op();
+        for pipe in [
+            unrolled_gd(a.clone(), &UnrollCfg { iterations: 2, step_init: 0.02, nonneg: true })
+                .unwrap(),
+            learned_fbp(a.clone(), 1.0, Window::Hann).unwrap(),
+        ] {
+            let spec = pipeline_to_json(&pipe);
+            let back = pipeline_from_json(&spec, &[("scan", a.clone())]).unwrap();
+            // the rebuilt pipeline must agree on every length…
+            assert_eq!(back.packed_len(), pipe.packed_len());
+            assert_eq!(back.grad_reply_len(), pipe.grad_reply_len());
+            // …and on every float of a loss+grad evaluation
+            let mut rng = Rng::new(41);
+            let params: Vec<Vec<f32>> = pipe
+                .params()
+                .iter()
+                .map(|p| {
+                    let mut v = vec![0.0f32; p.shape.numel()];
+                    rng.fill_uniform(&mut v, 0.01, 0.1);
+                    v
+                })
+                .collect();
+            let inputs: Vec<Vec<f32>> = pipe
+                .input_shapes()
+                .iter()
+                .map(|s| {
+                    let mut v = vec![0.0f32; s.numel()];
+                    rng.fill_uniform(&mut v, 0.0, 1.0);
+                    v
+                })
+                .collect();
+            let pr: Vec<&[f32]> = params.iter().map(|v| v.as_slice()).collect();
+            let ir: Vec<&[f32]> = inputs.iter().map(|v| v.as_slice()).collect();
+            let (l1, g1) = pipe.loss_and_grads_with(&pr, &ir).unwrap();
+            let (l2, g2) = back.loss_and_grads_with(&pr, &ir).unwrap();
+            assert_eq!(l1.to_bits(), l2.to_bits(), "loss must survive the spec");
+            assert_eq!(g1, g2, "gradients must survive the spec");
+            // a rebuilt pipeline stores NO parameter values (they travel
+            // per request): the stored-value entry points are typed
+            // errors, not panics — and set_params restores them
+            let e = back.loss_and_grads(&ir).unwrap_err();
+            assert!(matches!(e, LeapError::InvalidArgument(_)), "{e:?}");
+            let mut back = back;
+            back.set_params(&pr).unwrap();
+            let (l3, _) = back.loss_and_grads(&ir).unwrap();
+            assert_eq!(l3.to_bits(), l1.to_bits());
+        }
+    }
+
+    #[test]
+    fn spec_roundtrips_through_text() {
+        // the registration path parses the meta from wire text
+        let a = fan_op();
+        let pipe = unrolled_gd(a.clone(), &UnrollCfg {
+            iterations: 1,
+            step_init: 0.05,
+            nonneg: false,
+        })
+        .unwrap();
+        let text = pipeline_to_json(&pipe).to_string();
+        let parsed = crate::util::json::parse(&text).unwrap();
+        let back = pipeline_from_json(&parsed, &[("scan", a)]).unwrap();
+        assert_eq!(back.params().len(), 1);
+        assert_eq!(back.input_shapes().len(), 2);
+    }
+
+    #[test]
+    fn malformed_specs_are_typed_errors() {
+        let a = fan_op();
+        let ops: Vec<(&str, Arc<dyn LinearOp>)> = vec![("scan", a.clone())];
+        for (text, expect_protocol) in [
+            (r#"{}"#, true),
+            (r#"{"tape_spec": 99, "inputs": [], "params": [], "nodes": []}"#, false),
+            (
+                r#"{"tape_spec": 1, "inputs": [], "params": [],
+                    "nodes": [{"k": "warp"}]}"#,
+                false,
+            ),
+            (
+                r#"{"tape_spec": 1, "inputs": [], "params": [],
+                    "nodes": [{"k": "apply", "op": "other", "x": 0}]}"#,
+                false,
+            ),
+            (
+                r#"{"tape_spec": 1, "inputs": [[4,1,1]], "params": [],
+                    "nodes": [{"k": "input", "slot": 0},
+                              {"k": "add", "a": 0, "b": 7}]}"#,
+                true,
+            ),
+        ] {
+            let spec = crate::util::json::parse(text).unwrap();
+            let e = pipeline_from_json(&spec, &ops).unwrap_err();
+            if expect_protocol {
+                assert!(matches!(e, LeapError::Protocol(_)), "{text}: {e:?}");
+            } else {
+                assert!(
+                    matches!(e, LeapError::Unsupported(_) | LeapError::Protocol(_)),
+                    "{text}: {e:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn absurd_shapes_are_typed_errors_before_any_allocation() {
+        let a = fan_op();
+        let ops: Vec<(&str, Arc<dyn LinearOp>)> = vec![("scan", a)];
+        // a petabyte-scale param (2^52 elements): must be refused while
+        // parsing the shape, never reaching the placeholder allocation
+        let text = r#"{"tape_spec": 1, "inputs": [],
+            "params": [{"name": "p", "shape": [4503599627370496, 1, 1]}],
+            "nodes": [{"k": "param", "p": 0}]}"#;
+        let e = pipeline_from_json(&crate::util::json::parse(text).unwrap(), &ops).unwrap_err();
+        assert!(matches!(e, LeapError::InvalidArgument(_)), "{e:?}");
+        // a product that overflows usize entirely
+        let text = r#"{"tape_spec": 1,
+            "inputs": [[4503599627370496, 4503599627370496, 2]],
+            "params": [], "nodes": [{"k": "input", "slot": 0}]}"#;
+        let e = pipeline_from_json(&crate::util::json::parse(text).unwrap(), &ops).unwrap_err();
+        assert!(matches!(e, LeapError::InvalidArgument(_)), "{e:?}");
+        // many individually-legal leaves still trip the cumulative cap
+        // (input nodes, so the test itself allocates nothing: the gate
+        // fires on the second maximal leaf, before any placeholder)
+        let text = r#"{"tape_spec": 1,
+            "inputs": [[268435456, 1, 1], [268435456, 1, 1]],
+            "params": [],
+            "nodes": [{"k": "input", "slot": 0}, {"k": "input", "slot": 1}]}"#;
+        let e = pipeline_from_json(&crate::util::json::parse(text).unwrap(), &ops).unwrap_err();
+        assert!(matches!(e, LeapError::BudgetExceeded { .. }), "{e:?}");
+    }
+
+    #[test]
+    fn unknown_op_is_unsupported_but_same_named_op_rebinds() {
+        // the point of name-based ops: the server rebinds "scan" to its
+        // own session plan, so the spec must not carry operator state
+        let a = fan_op();
+        let pipe = unrolled_gd(a.clone(), &UnrollCfg {
+            iterations: 1,
+            step_init: 0.05,
+            nonneg: false,
+        })
+        .unwrap();
+        let spec = pipeline_to_json(&pipe);
+        let e = pipeline_from_json(&spec, &[]).unwrap_err();
+        assert!(matches!(e, LeapError::Unsupported(_)), "{e:?}");
+    }
+}

@@ -52,6 +52,7 @@ fn frame_roundtrip_every_op_variant_and_odd_sizes() {
         Op::SessionFp(1),
         Op::SessionBp(u64::MAX),
         Op::SessionFbp(7),
+        Op::SessionPipelineGrad { session: (1u64 << 53) + 1, pipeline: u64::MAX },
         Op::Artifact("fp_sf".into()),
     ];
     let mut rng = Rng::new(42);
@@ -191,6 +192,93 @@ fn session_fbp_and_batched_sessions_agree_with_local() {
     for h in handles {
         h.join().unwrap();
     }
+}
+
+#[test]
+fn registered_pipeline_grads_are_bit_identical_over_the_wire() {
+    // the acceptance path: register an unrolled pipeline on a session,
+    // request loss+gradients over protocol v2, and compare every bit
+    // against the in-process tape on the same (cached) plan
+    let (server, _coord) = start_server();
+    let cfg = scan_config();
+    let scan = ScanBuilder::from_config(&cfg).model(Model::SF).threads(2).build().unwrap();
+    let local: Arc<dyn leap::ops::LinearOp> =
+        Arc::new(leap::ops::PlanOp::from_plan(scan.plan().clone()));
+    let pipe = leap::tape::unrolled_gd(
+        local,
+        &leap::tape::UnrollCfg { iterations: 3, step_init: 0.005, nonneg: true },
+    )
+    .unwrap();
+
+    let mut client = BinaryClient::connect(&server.addr).unwrap();
+    let session = client.open_session(&cfg, Model::SF, Some(2)).unwrap();
+    let pid = client.register_pipeline(session, &pipe).unwrap();
+
+    let mut rng = Rng::new(77);
+    let mut truth = vec![0.0f32; scan.volume_len()];
+    rng.fill_uniform(&mut truth, 0.1, 1.0);
+    let sino = scan.forward(&truth).unwrap();
+    let params: Vec<Vec<f32>> = pipe
+        .params()
+        .iter()
+        .map(|p| {
+            let mut v = vec![0.0f32; p.shape.numel()];
+            rng.fill_uniform(&mut v, 0.002, 0.01);
+            v
+        })
+        .collect();
+    let pr: Vec<&[f32]> = params.iter().map(|v| v.as_slice()).collect();
+    let inputs: Vec<&[f32]> = vec![&sino, &truth];
+    let (served_loss, served_grads) =
+        client.pipeline_grad(session, pid, &pipe, &pr, &inputs).unwrap();
+    let (local_loss, local_grads) = pipe.loss_and_grads_with(&pr, &inputs).unwrap();
+    assert_eq!(served_loss.to_bits(), local_loss.to_bits(), "loss bits over the wire");
+    assert_eq!(served_grads, local_grads, "gradient bits over the wire");
+
+    // Malformed registrations are typed and the OWNING connection
+    // survives. BinaryClient does not expose raw frames, so hand-roll a
+    // connection that opens its own session first (connection scoping
+    // would otherwise reject the bad spec as UnknownSession before spec
+    // validation ever runs).
+    {
+        use leap::geometry::config::{geometry_to_json, volume_to_json};
+        let stream = TcpStream::connect(server.addr).unwrap();
+        let mut writer = stream.try_clone().unwrap();
+        let mut reader = std::io::BufReader::new(stream);
+        let open = Frame::new(
+            FrameKind::OpenSession,
+            0,
+            Json::obj(vec![(
+                "config",
+                Json::obj(vec![
+                    ("geometry", geometry_to_json(&cfg.geometry)),
+                    ("volume", volume_to_json(&cfg.volume)),
+                ]),
+            )]),
+            Vec::new(),
+        );
+        writer.write_all(&wire::encode_frame(&open).unwrap()).unwrap();
+        writer.flush().unwrap();
+        let reply = wire::read_frame(&mut reader).unwrap().expect("open reply");
+        assert_eq!(reply.kind, FrameKind::OpenSession);
+        let own_session = reply.id;
+        // a bad spec on the session's own connection: spec validation
+        // must answer (Protocol), NOT the not-yours path
+        let bad_meta = Json::obj(vec![("pipeline", Json::Str("nonsense".into()))]);
+        let bad = Frame::new(FrameKind::RegisterPipeline, own_session, bad_meta, Vec::new());
+        writer.write_all(&wire::encode_frame(&bad).unwrap()).unwrap();
+        writer.flush().unwrap();
+        let e = wire::read_frame(&mut reader).unwrap().expect("error reply").to_error();
+        assert_eq!(e.code(), codes::PROTOCOL, "spec validation must run: {e:?}");
+        // and the connection is still usable afterwards
+        let close = Frame::new(FrameKind::CloseSession, own_session, Json::Null, Vec::new());
+        writer.write_all(&wire::encode_frame(&close).unwrap()).unwrap();
+        writer.flush().unwrap();
+        let reply = wire::read_frame(&mut reader).unwrap().expect("close reply");
+        assert_eq!(reply.kind, FrameKind::CloseSession, "connection must survive the bad spec");
+    }
+
+    client.close_session(session).unwrap();
 }
 
 #[test]

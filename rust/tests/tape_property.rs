@@ -1,0 +1,363 @@
+//! Tape-layer properties: central finite-difference gradient checks for
+//! **every node type** (rel err ≤ 1e-3), for a full K=3 unrolled
+//! pipeline over all of its parameters, and bit-determinism of `fit()`.
+//!
+//! Methodology: for a pipeline with parameters `p` and a random
+//! direction `d` (one block per parameter), compare the analytic
+//! directional derivative `Σ ⟨∇_p L, d_p⟩` against the central
+//! difference `(L(p + h·d) − L(p − h·d)) / 2h`. Loss values are f64 at
+//! the loss node, so FD noise sits well below the 1e-3 gate as long as
+//! the pipeline is smooth at `p` — tests place values away from
+//! relu/clamp kinks by a margin ≫ h.
+
+use std::sync::Arc;
+
+use leap::api::ScanBuilder;
+use leap::geometry::{FanBeam, Geometry, ParallelBeam, VolumeGeometry};
+use leap::ops::{LinearOp, PlanOp, Shape};
+use leap::projector::{Model, Projector};
+use leap::recon::filters::ramp_half_spectrum;
+use leap::recon::Window;
+use leap::tape::{
+    fit, learned_fbp, unrolled_gd, FitCfg, Optimizer, Pipeline, PipelineBuilder, UnrollCfg,
+};
+use leap::util::rng::Rng;
+
+const FD_TOL: f64 = 1e-3;
+const H: f32 = 1e-2;
+
+fn fan_op() -> Arc<dyn LinearOp> {
+    let vg = VolumeGeometry::slice2d(10, 10, 1.0);
+    let g = Geometry::Fan(FanBeam::standard(8, 14, 1.0, 60.0, 120.0));
+    Arc::new(PlanOp::new(&Projector::new(g, vg, Model::SF).with_threads(2)))
+}
+
+fn parallel_op() -> Arc<dyn LinearOp> {
+    let vg = VolumeGeometry::slice2d(10, 10, 1.0);
+    let g = Geometry::Parallel(ParallelBeam::standard_2d(7, 16, 1.0));
+    Arc::new(PlanOp::new(&Projector::new(g, vg, Model::SF).with_threads(2)))
+}
+
+fn rand_vec(n: usize, lo: f64, hi: f64, rng: &mut Rng) -> Vec<f32> {
+    let mut v = vec![0.0f32; n];
+    rng.fill_uniform(&mut v, lo, hi);
+    v
+}
+
+/// Central FD check of `Σ ⟨∇_p L, d_p⟩` over every parameter at once.
+/// Returns the relative gap.
+fn fd_gap(pipe: &Pipeline, inputs: &[&[f32]], seed: u64) -> f64 {
+    let mut rng = Rng::new(seed);
+    let params: Vec<Vec<f32>> = pipe.params().iter().map(|p| p.value.clone()).collect();
+    let dirs: Vec<Vec<f32>> = pipe
+        .params()
+        .iter()
+        .map(|p| rand_vec(p.shape.numel(), -1.0, 1.0, &mut rng))
+        .collect();
+    let pr: Vec<&[f32]> = params.iter().map(|v| v.as_slice()).collect();
+    let (_, grads) = pipe.loss_and_grads_with(&pr, inputs).unwrap();
+    let analytic: f64 = grads
+        .iter()
+        .zip(dirs.iter())
+        .flat_map(|(g, d)| g.iter().zip(d.iter()))
+        .map(|(&g, &d)| g as f64 * d as f64)
+        .sum();
+    let shifted = |sign: f32| -> f64 {
+        let moved: Vec<Vec<f32>> = params
+            .iter()
+            .zip(dirs.iter())
+            .map(|(p, d)| p.iter().zip(d.iter()).map(|(&a, &b)| a + sign * H * b).collect())
+            .collect();
+        let mr: Vec<&[f32]> = moved.iter().map(|v| v.as_slice()).collect();
+        pipe.loss_with(&mr, inputs).unwrap()
+    };
+    let fd = (shifted(1.0) - shifted(-1.0)) / (2.0 * H as f64);
+    (analytic - fd).abs() / analytic.abs().max(fd.abs()).max(1e-9)
+}
+
+fn assert_fd(pipe: &Pipeline, inputs: &[&[f32]], seed: u64, what: &str) {
+    let gap = fd_gap(pipe, inputs, seed);
+    assert!(gap <= FD_TOL, "{what}: fd gap {gap} > {FD_TOL}");
+}
+
+// ── per-node finite-difference checks ────────────────────────────────────
+
+#[test]
+fn fd_apply_node() {
+    // L = ½‖A·p − b‖² : exercises Apply forward + its Aᵀ VJP
+    let a = fan_op();
+    let mut rng = Rng::new(1);
+    let mut pb = PipelineBuilder::new();
+    let op = pb.op("scan", a.clone()).unwrap();
+    let init = rand_vec(a.domain_shape().numel(), 0.2, 1.0, &mut rng);
+    let p = pb.param("x", a.domain_shape(), init).unwrap();
+    let b = pb.input(a.range_shape()).unwrap();
+    let ax = pb.apply(op, p).unwrap();
+    let l = pb.l2_loss(ax, b).unwrap();
+    pb.set_loss(l).unwrap();
+    let pipe = pb.build().unwrap();
+    let data = rand_vec(a.range_shape().numel(), 0.2, 1.0, &mut rng);
+    assert_fd(&pipe, &[&data], 100, "apply");
+}
+
+#[test]
+fn fd_adjoint_node() {
+    // L = ½‖Aᵀ·q − t‖² : exercises Adjoint forward + its A VJP
+    let a = fan_op();
+    let mut rng = Rng::new(2);
+    let mut pb = PipelineBuilder::new();
+    let op = pb.op("scan", a.clone()).unwrap();
+    let init = rand_vec(a.range_shape().numel(), 0.2, 1.0, &mut rng);
+    let q = pb.param("q", a.range_shape(), init).unwrap();
+    let t = pb.input(a.domain_shape()).unwrap();
+    let bp = pb.adjoint(op, q).unwrap();
+    let l = pb.l2_loss(bp, t).unwrap();
+    pb.set_loss(l).unwrap();
+    let pipe = pb.build().unwrap();
+    let data = rand_vec(a.domain_shape().numel(), 0.2, 1.0, &mut rng);
+    assert_fd(&pipe, &[&data], 101, "adjoint");
+}
+
+#[test]
+fn fd_add_sub_mul_scale_nodes() {
+    // L = ½‖(p ⊙ q + p − q)·s − b‖² : Add, Sub, Mul and both Scale VJPs
+    let mut rng = Rng::new(3);
+    let n = 40;
+    let shape = Shape([n, 1, 1]);
+    let mut pb = PipelineBuilder::new();
+    let p = pb.param("p", shape, rand_vec(n, 0.2, 1.0, &mut rng)).unwrap();
+    let q = pb.param("q", shape, rand_vec(n, 0.2, 1.0, &mut rng)).unwrap();
+    let s = pb.scalar_param("s", 0.7).unwrap();
+    let b = pb.input(shape).unwrap();
+    let pq = pb.mul(p, q).unwrap();
+    let sum = pb.add(pq, p).unwrap();
+    let diff = pb.sub(sum, q).unwrap();
+    let scaled = pb.scale(diff, s).unwrap();
+    let l = pb.l2_loss(scaled, b).unwrap();
+    pb.set_loss(l).unwrap();
+    let pipe = pb.build().unwrap();
+    let data = rand_vec(n, 0.0, 1.0, &mut rng);
+    assert_fd(&pipe, &[&data], 102, "add/sub/mul/scale");
+}
+
+#[test]
+fn fd_relu_node() {
+    // relu(p − b) with b ∈ {0, 1} and p ∈ [0.4, 0.6]: every element is
+    // ≥ 0.4 away from the kink, far beyond the FD step
+    let mut rng = Rng::new(4);
+    let n = 30;
+    let shape = Shape([n, 1, 1]);
+    let mut pb = PipelineBuilder::new();
+    let p = pb.param("p", shape, rand_vec(n, 0.4, 0.6, &mut rng)).unwrap();
+    let b = pb.input(shape).unwrap();
+    let t = pb.input(shape).unwrap();
+    let pre = pb.sub(p, b).unwrap();
+    let act = pb.relu(pre).unwrap();
+    let l = pb.l2_loss(act, t).unwrap();
+    pb.set_loss(l).unwrap();
+    let pipe = pb.build().unwrap();
+    let offsets: Vec<f32> = (0..n).map(|i| if i % 2 == 0 { 0.0 } else { 1.0 }).collect();
+    let target = rand_vec(n, 0.0, 1.0, &mut rng);
+    assert_fd(&pipe, &[&offsets, &target], 103, "relu");
+    // and the masked half really is masked: gradient there must be zero
+    let params: Vec<&[f32]> = pipe.params().iter().map(|p| p.value.as_slice()).collect();
+    let (_, grads) = pipe
+        .loss_and_grads_with(&params, &[&offsets, &target])
+        .unwrap();
+    for (i, &g) in grads[0].iter().enumerate() {
+        if i % 2 == 1 {
+            assert_eq!(g, 0.0, "element {i} is clamped negative; gradient must not flow");
+        }
+    }
+}
+
+#[test]
+fn fd_clamp_node() {
+    // clamp(p, 0.25, 0.75) with p ∈ {0.1, 0.5, 0.9}: every element sits
+    // 0.15 from the nearest edge
+    let n = 30;
+    let shape = Shape([n, 1, 1]);
+    let mut rng = Rng::new(5);
+    let init: Vec<f32> = (0..n).map(|i| [0.1f32, 0.5, 0.9][i % 3]).collect();
+    let mut pb = PipelineBuilder::new();
+    let p = pb.param("p", shape, init).unwrap();
+    let t = pb.input(shape).unwrap();
+    let c = pb.clamp(p, 0.25, 0.75).unwrap();
+    let l = pb.l2_loss(c, t).unwrap();
+    pb.set_loss(l).unwrap();
+    let pipe = pb.build().unwrap();
+    let target = rand_vec(n, 0.0, 1.0, &mut rng);
+    assert_fd(&pipe, &[&target], 104, "clamp");
+    let params: Vec<&[f32]> = pipe.params().iter().map(|p| p.value.as_slice()).collect();
+    let (_, grads) = pipe.loss_and_grads_with(&params, &[&target]).unwrap();
+    for (i, &g) in grads[0].iter().enumerate() {
+        if i % 3 != 1 {
+            assert_eq!(g, 0.0, "element {i} is clamped; gradient must not flow");
+        }
+    }
+}
+
+#[test]
+fn fd_filter_rows_node_both_paths() {
+    // L = ½‖filter_w(p) − t‖² with BOTH the rows (p) and the
+    // half-spectrum (w) trainable: the self-adjoint dx path and the
+    // FFT-domain dw path in one check
+    let nviews = 6;
+    let ncols = 16;
+    let shape = Shape([nviews, 1, ncols]);
+    let mut rng = Rng::new(6);
+    let mut pb = PipelineBuilder::new();
+    let p = pb
+        .param("rows", shape, rand_vec(shape.numel(), -1.0, 1.0, &mut rng))
+        .unwrap();
+    let half = ramp_half_spectrum(ncols, 1.0, Window::Hann);
+    let w = pb.param("w", Shape([half.len(), 1, 1]), half).unwrap();
+    let t = pb.input(shape).unwrap();
+    let f = pb.filter_rows(p, w).unwrap();
+    let l = pb.l2_loss(f, t).unwrap();
+    pb.set_loss(l).unwrap();
+    let pipe = pb.build().unwrap();
+    let target = rand_vec(shape.numel(), -1.0, 1.0, &mut rng);
+    assert_fd(&pipe, &[&target], 105, "filter_rows");
+}
+
+#[test]
+fn fd_l2_loss_target_path() {
+    // the target side of L2Loss is differentiable too (−residual)
+    let n = 25;
+    let shape = Shape([n, 1, 1]);
+    let mut rng = Rng::new(7);
+    let mut pb = PipelineBuilder::new();
+    let t = pb.param("t", shape, rand_vec(n, 0.2, 1.0, &mut rng)).unwrap();
+    let pred = pb.input(shape).unwrap();
+    let l = pb.l2_loss(pred, t).unwrap();
+    pb.set_loss(l).unwrap();
+    let pipe = pb.build().unwrap();
+    let data = rand_vec(n, 0.2, 1.0, &mut rng);
+    assert_fd(&pipe, &[&data], 106, "l2 target");
+}
+
+#[test]
+fn fd_poisson_loss_both_paths() {
+    // pred strictly positive (≥ 0.2, far above the ε clamp) so the NLL
+    // is smooth; check pred-as-param and target-as-param separately
+    let n = 25;
+    let shape = Shape([n, 1, 1]);
+    let mut rng = Rng::new(8);
+
+    let mut pb = PipelineBuilder::new();
+    let p = pb.param("pred", shape, rand_vec(n, 0.2, 1.0, &mut rng)).unwrap();
+    let b = pb.input(shape).unwrap();
+    let l = pb.poisson_loss(p, b).unwrap();
+    pb.set_loss(l).unwrap();
+    let pipe = pb.build().unwrap();
+    let counts = rand_vec(n, 0.0, 2.0, &mut rng);
+    assert_fd(&pipe, &[&counts], 107, "poisson pred");
+
+    let mut pb = PipelineBuilder::new();
+    let t = pb.param("t", shape, rand_vec(n, 0.1, 2.0, &mut rng)).unwrap();
+    let pred = pb.input(shape).unwrap();
+    let l = pb.poisson_loss(pred, t).unwrap();
+    pb.set_loss(l).unwrap();
+    let pipe = pb.build().unwrap();
+    let preds = rand_vec(n, 0.2, 1.0, &mut rng);
+    assert_fd(&pipe, &[&preds], 108, "poisson target");
+}
+
+// ── whole-pipeline checks ────────────────────────────────────────────────
+
+#[test]
+fn fd_k3_unrolled_pipeline_all_params() {
+    // the acceptance pipeline: K=3 unrolled GD, FD over all three
+    // learnable steps at once (smooth variant — relu off — so the FD
+    // probe cannot cross activation kinks)
+    let a = fan_op();
+    let pipe =
+        unrolled_gd(a.clone(), &UnrollCfg { iterations: 3, step_init: 0.01, nonneg: false })
+            .unwrap();
+    let mut rng = Rng::new(9);
+    let truth = rand_vec(a.domain_shape().numel(), 0.1, 1.0, &mut rng);
+    let sino = a.apply(&truth);
+    assert_fd(&pipe, &[&sino, &truth], 109, "K=3 unrolled gd");
+}
+
+#[test]
+fn fd_learned_fbp_all_params() {
+    // filter + per-sample weights + gain, through Aᵀ, in one directional
+    // check
+    let a = parallel_op();
+    let pipe = learned_fbp(a.clone(), 1.0, Window::Hann).unwrap();
+    let mut rng = Rng::new(10);
+    let truth = rand_vec(a.domain_shape().numel(), 0.1, 1.0, &mut rng);
+    let sino = a.apply(&truth);
+    assert_fd(&pipe, &[&sino, &truth], 110, "learned fbp");
+}
+
+#[test]
+fn two_identical_fits_produce_bit_identical_params() {
+    // the determinism acceptance: same pipeline, same data, same
+    // optimizer → every trained parameter bit-identical, run to run
+    let run = || {
+        let a = fan_op();
+        let mut pipe =
+            unrolled_gd(a.clone(), &UnrollCfg { iterations: 3, step_init: 0.01, nonneg: true })
+                .unwrap();
+        let mut rng = Rng::new(11);
+        let mut truth = vec![0.0f32; a.domain_shape().numel()];
+        rng.fill_uniform(&mut truth, 0.1, 1.0);
+        let sino = a.apply(&truth);
+        let report = fit(
+            &mut pipe,
+            &[&sino, &truth],
+            &FitCfg { optimizer: Optimizer::adam(0.005), iterations: 15 },
+        )
+        .unwrap();
+        let params: Vec<Vec<u32>> = pipe
+            .params()
+            .iter()
+            .map(|p| p.value.iter().map(|v| v.to_bits()).collect())
+            .collect();
+        let losses: Vec<u64> = report.losses.iter().map(|l| l.to_bits()).collect();
+        (params, losses)
+    };
+    let (p1, l1) = run();
+    let (p2, l2) = run();
+    assert_eq!(p1, p2, "trained params must be bit-identical");
+    assert_eq!(l1, l2, "loss trajectories must be bit-identical");
+}
+
+#[test]
+fn trained_unroll_beats_its_untrained_initialization() {
+    // end-to-end sanity on the api::Scan front door: fitting the K=3
+    // unrolled pipeline must reduce the supervised loss it trains on
+    let scan = ScanBuilder::new()
+        .geometry(Geometry::Fan(FanBeam::standard(8, 14, 1.0, 60.0, 120.0)))
+        .volume(VolumeGeometry::slice2d(10, 10, 1.0))
+        .model(Model::SF)
+        .threads(2)
+        .build()
+        .unwrap();
+    let a: Arc<dyn LinearOp> = Arc::new(PlanOp::from_plan(scan.plan().clone()));
+    let mut pipe =
+        unrolled_gd(a, &UnrollCfg { iterations: 3, step_init: 0.005, nonneg: true }).unwrap();
+    let mut rng = Rng::new(12);
+    let mut truth = vec![0.0f32; scan.volume_len()];
+    rng.fill_uniform(&mut truth, 0.1, 1.0);
+    let sino = scan.forward(&truth).unwrap();
+    let before = pipe.loss(&[&sino, &truth]).unwrap();
+    let report = scan
+        .fit(
+            &mut pipe,
+            &[&sino, &truth],
+            &FitCfg { optimizer: Optimizer::adam(0.01), iterations: 30 },
+        )
+        .unwrap();
+    assert!(
+        report.final_loss < before,
+        "training must improve on the initialization: {before} → {}",
+        report.final_loss
+    );
+    // and the trained pipeline still evaluates (inference path)
+    let recon = pipe.eval(&[&sino, &vec![0.0f32; scan.volume_len()]]).unwrap();
+    assert_eq!(recon.len(), scan.volume_len());
+}
