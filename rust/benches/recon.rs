@@ -4,12 +4,14 @@
 //!
 //! Run: `cargo bench --bench recon`
 //!
-//! Every measurement is appended as a JSON line to `BENCH_PR5.json` at
+//! Every measurement is appended as a JSON line to `BENCH_PR6.json` at
 //! the repo root (the perf trajectory file; earlier PRs' history lives
-//! in `BENCH_PR2.json`–`BENCH_PR4.json`) in addition to
+//! in `BENCH_PR2.json`–`BENCH_PR5.json`) in addition to
 //! `target/bench_results.jsonl`. Set `LEAP_BENCH_SMOKE=1` to run one
 //! iteration of everything (the CI smoke step — including the
-//! batched-coordinator, wire-protocol and tape-gradient cases).
+//! batched-coordinator, wire-protocol, tape-gradient and
+//! scalar-vs-SIMD backend cases; the backend sweep shrinks to one
+//! scalar row + one SIMD row in smoke mode).
 
 use std::sync::Arc;
 use std::time::Duration;
@@ -33,7 +35,7 @@ use leap::{ScanBuilder, Sino, Vol3};
 
 /// Where the perf trajectory lives: the repo root, independent of the
 /// working directory cargo gives the bench binary.
-const TRAJECTORY: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_PR5.json");
+const TRAJECTORY: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_PR6.json");
 
 /// The pre-`ProjectionPlan` SIRT loop: every `A`/`Aᵀ` application goes
 /// through the direct path, re-deriving per-view geometry (trig, SF
@@ -144,8 +146,9 @@ fn sirt_pr1_scatter(p: &Projector, y: &Sino, opts: &recon::SirtOpts) -> Vol3 {
 }
 
 /// 1-thread vs N-thread outputs must be bit-identical for every model ×
-/// geometry — forward *and* slab-owned back (part of the PR acceptance,
-/// asserted on every bench run).
+/// geometry **per backend** — forward *and* slab-owned back (the PR-2
+/// acceptance invariant, extended to both kernel tiers; asserted on
+/// every bench run).
 fn assert_thread_count_invariance() {
     let cone = ConeBeam::standard(6, 10, 14, 1.6, 1.6, 60.0, 120.0);
     let mut curved = cone.clone();
@@ -165,29 +168,37 @@ fn assert_thread_count_invariance() {
             VolumeGeometry::cube(10, 1.0)
         };
         for model in [Model::Siddon, Model::Joseph, Model::SF] {
-            let p1 = Projector::new(geom.clone(), vg.clone(), model).with_threads(1);
-            let pn = Projector::new(geom.clone(), vg.clone(), model).with_threads(4);
-            let mut x = p1.new_vol();
-            let mut y = p1.new_sino();
-            rng.fill_uniform(&mut x.data, 0.0, 1.0);
-            rng.fill_uniform(&mut y.data, 0.0, 1.0);
-            assert_eq!(
-                p1.forward(&x).data,
-                pn.forward(&x).data,
-                "{}/{} forward threads",
-                model.name(),
-                p1.geom.kind()
-            );
-            assert_eq!(
-                p1.back(&y).data,
-                pn.back(&y).data,
-                "{}/{} back threads",
-                model.name(),
-                p1.geom.kind()
-            );
+            for kind in [leap::backend::BackendKind::Scalar, leap::backend::BackendKind::Simd] {
+                let p1 =
+                    Projector::new(geom.clone(), vg.clone(), model).with_threads(1).with_backend(kind);
+                let pn =
+                    Projector::new(geom.clone(), vg.clone(), model).with_threads(4).with_backend(kind);
+                let mut x = p1.new_vol();
+                let mut y = p1.new_sino();
+                rng.fill_uniform(&mut x.data, 0.0, 1.0);
+                rng.fill_uniform(&mut y.data, 0.0, 1.0);
+                assert_eq!(
+                    p1.forward(&x).data,
+                    pn.forward(&x).data,
+                    "{}/{}/{} forward threads",
+                    kind.name(),
+                    model.name(),
+                    p1.geom.kind()
+                );
+                assert_eq!(
+                    p1.back(&y).data,
+                    pn.back(&y).data,
+                    "{}/{}/{} back threads",
+                    kind.name(),
+                    model.name(),
+                    p1.geom.kind()
+                );
+            }
         }
     }
-    println!("thread-count invariance: 3 models × 5 geometries bit-identical (1 vs 4 threads)");
+    println!(
+        "thread-count invariance: 3 models × 5 geometries × 2 backends bit-identical (1 vs 4 threads)"
+    );
 }
 
 fn main() {
@@ -196,6 +207,73 @@ fn main() {
     let mut all = Vec::new();
 
     assert_thread_count_invariance();
+
+    // ── backend tiers: scalar vs simd kernels on the same coefficients ──
+    // Forward+back per iteration through the planned path, per model ×
+    // geometry × backend. Mvox/s counts voxels swept (A and Aᵀ each
+    // sweep the volume once per application). The SIMD row carries
+    // `speedup_simd_vs_scalar` against the scalar row measured just
+    // before it; smoke mode keeps exactly one scalar + one SIMD row
+    // (SF/parallel) so the CI step stays fast.
+    {
+        use leap::backend::BackendKind;
+        let backend_cases: Vec<(&str, Geometry, VolumeGeometry)> = vec![
+            (
+                "parallel 48³/60",
+                Geometry::Parallel(ParallelBeam::standard_3d(60, 48, 64, 1.0, 1.0)),
+                VolumeGeometry::cube(48, 1.0),
+            ),
+            (
+                "fan 128²/180",
+                Geometry::Fan(FanBeam::standard(180, 192, 1.0, 256.0, 512.0)),
+                VolumeGeometry::slice2d(128, 128, 1.0),
+            ),
+            (
+                "cone 48³/48",
+                Geometry::Cone(ConeBeam::standard(48, 48, 64, 1.0, 1.0, 96.0, 192.0)),
+                VolumeGeometry::cube(48, 1.0),
+            ),
+        ];
+        let backend_models: &[Model] =
+            if smoke { &[Model::SF] } else { &[Model::Siddon, Model::Joseph, Model::SF] };
+        let backend_cases = if smoke { &backend_cases[..1] } else { &backend_cases[..] };
+        for (gname, geom, vgb) in backend_cases {
+            for &model in backend_models {
+                let nvox_b = vgb.num_voxels();
+                let mut scalar_mean = f64::NAN;
+                for kind in [BackendKind::Scalar, BackendKind::Simd] {
+                    let p = Projector::new(geom.clone(), vgb.clone(), model).with_backend(kind);
+                    let plan = p.plan();
+                    let mut x = p.new_vol();
+                    leap::util::rng::Rng::new(88).fill_uniform(&mut x.data, 0.0, 1.0);
+                    let mut y = p.new_sino();
+                    let mut back = p.new_vol();
+                    let mut m = bench.run(
+                        &format!("proj fp+bp {} {gname} [{}]", model.name(), kind.name()),
+                        || {
+                            p.forward_with_plan(&plan, &x, &mut y);
+                            p.back_with_plan(&plan, &y, &mut back);
+                        },
+                    );
+                    let mvox_b = nvox_b as f64 * 2.0 / m.mean_s / 1e6;
+                    m.notes.push(("mvox_per_s".into(), mvox_b));
+                    m.notes.push(("threads".into(), p.threads as f64));
+                    if kind == BackendKind::Scalar {
+                        scalar_mean = m.mean_s;
+                    } else {
+                        let speedup = scalar_mean / m.mean_s;
+                        m.notes.push(("speedup_simd_vs_scalar".into(), speedup));
+                        println!(
+                            "    → simd vs scalar: {speedup:.2}× on {} {gname} ({mvox_b:.1} Mvox/s)",
+                            model.name()
+                        );
+                    }
+                    m.print();
+                    all.push(m);
+                }
+            }
+        }
+    }
 
     // 2-D parallel 128²/180
     let vg = VolumeGeometry::slice2d(128, 128, 1.0);

@@ -10,10 +10,11 @@
 //! PyTorch and the one the wire protocol (see
 //! [`crate::coordinator::wire`]) speaks natively:
 //!
-//! * [`ScanBuilder`] — collect geometry + volume + model (+ threads),
-//!   then [`ScanBuilder::build`] validates the whole description
-//!   (non-zero grids, positive pitches, finite values, consistent
-//!   distances) and plans it once, returning a [`Scan`].
+//! * [`ScanBuilder`] — collect geometry + volume + model (+ threads,
+//!   + compute backend), then [`ScanBuilder::build`] validates the whole
+//!   description (non-zero grids, positive pitches, finite values,
+//!   consistent distances, an executable backend) and plans it once,
+//!   returning a [`Scan`].
 //! * [`Scan`] — a validated scan owning an `Arc<`[`ProjectionPlan`]`>`
 //!   (shared through the process-wide plan cache, so repeated builds of
 //!   the same scan never re-plan). `forward`/`back` run the matched
@@ -53,6 +54,7 @@ pub use error::{codes, LeapError};
 use std::sync::{Arc, Mutex};
 
 use crate::array::{Sino, Vol3};
+use crate::backend::{self, BackendKind};
 use crate::coordinator::plan_cache;
 use crate::geometry::config::{scan_from_str, ScanConfig};
 use crate::geometry::{Geometry, VolumeGeometry};
@@ -164,6 +166,8 @@ pub struct ScanBuilder {
     volume: Option<VolumeGeometry>,
     model: Option<Model>,
     threads: Option<usize>,
+    backend: Option<BackendKind>,
+    backend_str: Option<String>,
 }
 
 impl ScanBuilder {
@@ -206,6 +210,25 @@ impl ScanBuilder {
         self
     }
 
+    /// Compute backend the kernels execute on (defaults to the process
+    /// default: `LEAP_BACKEND`, else runtime detection — see
+    /// [`crate::backend::default_kind`]). [`Self::build`] rejects
+    /// backends that cannot execute projection (the feature-gated PJRT
+    /// slot) with a typed [`LeapError::Unsupported`].
+    pub fn backend(mut self, kind: BackendKind) -> ScanBuilder {
+        self.backend = Some(kind);
+        self
+    }
+
+    /// [`Self::backend`] from a backend name (`"scalar"`, `"simd"`,
+    /// `"pjrt"`), for config- and wire-driven callers. Unknown names are
+    /// a typed [`LeapError::InvalidArgument`] at [`Self::build`] time; a
+    /// typed [`Self::backend`] call takes precedence when both are set.
+    pub fn backend_str(mut self, name: &str) -> ScanBuilder {
+        self.backend_str = Some(name.to_string());
+        self
+    }
+
     /// Validate the description and plan the scan. The plan is fetched
     /// from (or inserted into) the process-wide plan cache, so repeated
     /// builds of the same scan share one [`ProjectionPlan`].
@@ -220,6 +243,25 @@ impl ScanBuilder {
         let mut projector = Projector::new(geometry, volume, self.model.unwrap_or(Model::SF));
         if let Some(t) = self.threads {
             projector = projector.with_threads(t);
+        }
+        let kind = match (self.backend, &self.backend_str) {
+            (Some(k), _) => Some(k),
+            (None, Some(s)) => Some(BackendKind::parse(s.trim()).ok_or_else(|| {
+                LeapError::InvalidArgument(format!(
+                    "unknown backend {s:?} (expected scalar|simd|pjrt)"
+                ))
+            })?),
+            (None, None) => None, // Projector::new took the process default
+        };
+        if let Some(kind) = kind {
+            if !backend::get(kind).caps().projection {
+                return Err(LeapError::Unsupported(format!(
+                    "backend {:?} cannot execute projection (registered slot only; \
+                     enable and wire its engine to use it)",
+                    kind.name()
+                )));
+            }
+            projector = projector.with_backend(kind);
         }
         let plan = plan_cache::global().get_or_plan(&projector);
         let scratch = Mutex::new((plan.new_vol(), plan.new_sino()));
@@ -280,6 +322,12 @@ impl Scan {
 
     pub fn model(&self) -> Model {
         self.projector.model
+    }
+
+    /// Compute backend this scan's kernels execute on (always an
+    /// executable tier — [`ScanBuilder::build`] gates the rest).
+    pub fn backend(&self) -> BackendKind {
+        self.projector.backend
     }
 
     /// The scan config this scan was built from (round-trips through
@@ -776,6 +824,51 @@ mod tests {
         let a = builder().build().unwrap();
         let b = builder().build().unwrap();
         assert!(Arc::ptr_eq(a.plan(), b.plan()));
+    }
+
+    #[test]
+    fn backend_knob_selects_and_validates() {
+        // typed knob: both executable tiers build and report themselves
+        for kind in [BackendKind::Scalar, BackendKind::Simd] {
+            let scan = builder().backend(kind).build().unwrap();
+            assert_eq!(scan.backend(), kind);
+            assert_eq!(scan.plan().backend(), kind);
+            assert!(scan.plan().matches(scan.projector()));
+        }
+        // string knob parses (trimmed, case-insensitive via parse)
+        let scan = builder().backend_str(" simd ").build().unwrap();
+        assert_eq!(scan.backend(), BackendKind::Simd);
+        // typed beats string when both are set
+        let scan = builder().backend_str("simd").backend(BackendKind::Scalar).build().unwrap();
+        assert_eq!(scan.backend(), BackendKind::Scalar);
+        // unknown names are a typed InvalidArgument, not a panic
+        let e = builder().backend_str("warp").build().unwrap_err();
+        assert!(matches!(e, LeapError::InvalidArgument(_)), "{e:?}");
+        // the registered-but-non-executing pjrt slot is a typed
+        // Unsupported naming the backend
+        let e = builder().backend(BackendKind::Pjrt).build().unwrap_err();
+        match e {
+            LeapError::Unsupported(m) => assert!(m.contains("pjrt"), "{m}"),
+            other => panic!("expected Unsupported, got {other:?}"),
+        }
+        let e = builder().backend_str("pjrt").build().unwrap_err();
+        assert!(matches!(e, LeapError::Unsupported(_)), "{e:?}");
+    }
+
+    #[test]
+    fn backends_share_nothing_but_agree_on_results() {
+        let scalar = builder().backend(BackendKind::Scalar).build().unwrap();
+        let simd = builder().backend(BackendKind::Simd).build().unwrap();
+        // distinct plan-cache entries (the backend keys the cache)
+        assert!(!Arc::ptr_eq(scalar.plan(), simd.plan()));
+        let mut rng = crate::util::rng::Rng::new(17);
+        let mut x = vec![0.0f32; scalar.volume_len()];
+        rng.fill_uniform(&mut x, 0.0, 1.0);
+        // SF parallel is a staged path: bit-identical across tiers
+        assert_eq!(scalar.forward(&x).unwrap(), simd.forward(&x).unwrap());
+        let mut y = vec![0.0f32; scalar.sino_len()];
+        rng.fill_uniform(&mut y, 0.0, 1.0);
+        assert_eq!(scalar.back(&y).unwrap(), simd.back(&y).unwrap());
     }
 
     #[test]

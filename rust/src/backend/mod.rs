@@ -1,0 +1,238 @@
+//! `leap::backend` — pluggable compute backends for the projection
+//! kernels.
+//!
+//! The projector models (Siddon/Joseph/SF) describe *which* coefficients
+//! a scan enumerates; a **backend** describes *how* the inner accumulation
+//! loops execute them. Three slots are registered:
+//!
+//! * [`ScalarBackend`] — the reference tier: the original straight-line
+//!   scalar loops in [`crate::projector::sf`] and
+//!   [`crate::projector::plan`]. Every numerical contract in the repo is
+//!   stated against this backend.
+//! * [`SimdBackend`] — the throughput tier: cache-blocked, staged,
+//!   lane-unrolled drivers in [`simd`] that reuse the *same* coefficient
+//!   enumerators as the scalar tier (one definition of the math) but
+//!   restructure the accumulation for autovectorization. See
+//!   `docs/BACKENDS.md` for which paths are bit-identical to scalar and
+//!   which are toleranced.
+//! * [`PjrtBackend`] — a registered but non-executing slot for the
+//!   AOT-compiled XLA artifacts behind the `pjrt` cargo feature
+//!   ([`crate::runtime`]). Its [`Caps::projection`] is `false`, so every
+//!   layer that validates backends (the [`crate::api::ScanBuilder`] knob,
+//!   [`crate::projector::ProjectionPlan::lower`], the protocol-v2 session
+//!   handshake) rejects it with a typed error instead of silently running
+//!   scalar code — the slot proves the dispatch seam is real without
+//!   pretending the engine is wired in.
+//!
+//! Selection is threaded through every layer: `Projector` carries a
+//! [`BackendKind`] (snapshot into its plan and the plan-cache key),
+//! `ScanBuilder::backend(...)`/`backend_str(...)` set it explicitly, the
+//! `LEAP_BACKEND` env var sets the process default, and [`detect`] picks
+//! the best executable tier for the host when neither is given. Served
+//! sessions report their backend in the protocol-v2 OpenSession reply and
+//! in `__stats`, so results are attributable end to end.
+//!
+//! **Invariants.** Within a backend, forward and back projection are
+//! bit-identical across thread counts (the PR 2 slab-ownership invariant,
+//! extended per backend — see [`Caps::thread_invariant`]). Across
+//! backends, outputs agree to a small relative tolerance
+//! (`rust/tests/backend_property.rs` sweeps all models × geometries), and
+//! the matched-pair adjoint identity holds *within* each backend because
+//! both directions of a backend enumerate identical coefficients.
+
+pub mod pjrt;
+pub mod scalar;
+pub mod simd;
+
+pub use pjrt::PjrtBackend;
+pub use scalar::ScalarBackend;
+pub use simd::SimdBackend;
+
+use std::sync::OnceLock;
+
+/// Identity of a compute backend — the value threaded from
+/// [`crate::api::ScanBuilder`] through [`crate::projector::Projector`]
+/// and its plans down to the kernel dispatch (and over the wire in the
+/// protocol-v2 session meta).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum BackendKind {
+    Scalar,
+    Simd,
+    Pjrt,
+}
+
+impl BackendKind {
+    pub fn parse(s: &str) -> Option<BackendKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "scalar" => Some(BackendKind::Scalar),
+            "simd" => Some(BackendKind::Simd),
+            "pjrt" => Some(BackendKind::Pjrt),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            BackendKind::Scalar => "scalar",
+            BackendKind::Simd => "simd",
+            BackendKind::Pjrt => "pjrt",
+        }
+    }
+}
+
+/// Capability flags a backend advertises to the validation layers.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Caps {
+    /// Can this backend execute forward/back projection natively? When
+    /// `false` the backend is a registered slot only: `ScanBuilder`,
+    /// `ProjectionPlan::lower` and the session handshake reject it with
+    /// a typed [`crate::api::LeapError::Unsupported`].
+    pub projection: bool,
+    /// Are projection outputs bit-identical across thread counts? Both
+    /// executable CPU tiers guarantee this (slab-owned accumulation
+    /// keeps per-voxel/per-bin summation order fixed for any worker
+    /// count).
+    pub thread_invariant: bool,
+}
+
+/// A compute backend: identity, lane shape and capabilities. The actual
+/// kernel drivers are free functions in the per-backend modules (the
+/// dispatch sites match on [`BackendKind`] directly — no virtual calls
+/// inside hot loops); this trait is the *registry* surface the
+/// validation, telemetry and docs layers talk to.
+pub trait Backend: Send + Sync {
+    fn kind(&self) -> BackendKind;
+
+    fn name(&self) -> &'static str {
+        self.kind().name()
+    }
+
+    /// SIMD lane width the backend's inner loops are shaped for
+    /// (1 = scalar).
+    fn lanes(&self) -> usize;
+
+    fn caps(&self) -> Caps;
+}
+
+static SCALAR: ScalarBackend = ScalarBackend;
+static SIMD: SimdBackend = SimdBackend;
+static PJRT: PjrtBackend = PjrtBackend;
+
+/// The registered backend instance for `kind`.
+pub fn get(kind: BackendKind) -> &'static dyn Backend {
+    match kind {
+        BackendKind::Scalar => &SCALAR,
+        BackendKind::Simd => &SIMD,
+        BackendKind::Pjrt => &PJRT,
+    }
+}
+
+/// All registered backend slots, executable or not (for telemetry and
+/// docs enumeration).
+pub fn all() -> [&'static dyn Backend; 3] {
+    [&SCALAR, &SIMD, &PJRT]
+}
+
+/// Parse a `LEAP_BACKEND`-style override into an *executable* backend
+/// kind. Lenient like `LEAP_THREADS`: unset, empty, unknown names and
+/// non-executing slots (`pjrt` — which must be requested explicitly
+/// through the typed [`crate::api::ScanBuilder::backend`] knob to get
+/// its typed error) all return `None`, falling through to [`detect`],
+/// so a stray env var can never panic process startup.
+pub(crate) fn kind_from_env(raw: Option<&str>) -> Option<BackendKind> {
+    let kind = BackendKind::parse(raw?.trim())?;
+    if get(kind).caps().projection {
+        Some(kind)
+    } else {
+        None
+    }
+}
+
+/// Runtime detection fallback: the widest executable tier the host
+/// supports. x86-64 with AVX2 and aarch64 (NEON is baseline) get the
+/// SIMD tier; anything else gets the scalar reference.
+pub fn detect() -> BackendKind {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if is_x86_feature_detected!("avx2") {
+            return BackendKind::Simd;
+        }
+        BackendKind::Scalar
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        BackendKind::Simd
+    }
+    #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+    {
+        BackendKind::Scalar
+    }
+}
+
+/// The process-wide default backend: `LEAP_BACKEND` when it names an
+/// executable backend, else [`detect`]. Resolved once (like the worker
+/// pool's `LEAP_THREADS`) so every layer — direct projectors, the plan
+/// cache, served sessions — agrees on one default. Never returns the
+/// PJRT slot, so constructing a [`crate::projector::Projector`] with the
+/// default can never produce an unexecutable scan.
+pub fn default_kind() -> BackendKind {
+    static DEFAULT: OnceLock<BackendKind> = OnceLock::new();
+    *DEFAULT.get_or_init(|| {
+        kind_from_env(std::env::var("LEAP_BACKEND").ok().as_deref()).unwrap_or_else(detect)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrips_names() {
+        for kind in [BackendKind::Scalar, BackendKind::Simd, BackendKind::Pjrt] {
+            assert_eq!(BackendKind::parse(kind.name()), Some(kind));
+            assert_eq!(get(kind).kind(), kind);
+            assert_eq!(get(kind).name(), kind.name());
+        }
+        assert_eq!(BackendKind::parse("SIMD"), Some(BackendKind::Simd));
+        assert_eq!(BackendKind::parse("warp"), None);
+        assert_eq!(BackendKind::parse(""), None);
+    }
+
+    #[test]
+    fn env_override_is_lenient_and_never_yields_pjrt() {
+        // mirrors pool::threads_from_env: the pure helper is what we can
+        // test race-free (the process env + OnceLock are global state)
+        assert_eq!(kind_from_env(None), None);
+        assert_eq!(kind_from_env(Some("")), None);
+        assert_eq!(kind_from_env(Some("warp")), None);
+        assert_eq!(kind_from_env(Some("scalar")), Some(BackendKind::Scalar));
+        assert_eq!(kind_from_env(Some(" Simd ")), Some(BackendKind::Simd));
+        // pjrt is a registered slot but not executable: env selection
+        // falls back to detection instead of wedging every projector
+        assert_eq!(kind_from_env(Some("pjrt")), None);
+    }
+
+    #[test]
+    fn caps_gate_the_pjrt_slot_only() {
+        assert!(get(BackendKind::Scalar).caps().projection);
+        assert!(get(BackendKind::Simd).caps().projection);
+        assert!(!get(BackendKind::Pjrt).caps().projection);
+        // both CPU tiers keep the PR 2 thread-count invariant
+        assert!(get(BackendKind::Scalar).caps().thread_invariant);
+        assert!(get(BackendKind::Simd).caps().thread_invariant);
+    }
+
+    #[test]
+    fn lane_widths_describe_the_tiers() {
+        assert_eq!(get(BackendKind::Scalar).lanes(), 1);
+        assert_eq!(get(BackendKind::Simd).lanes(), 8);
+    }
+
+    #[test]
+    fn detection_and_default_are_always_executable() {
+        assert!(get(detect()).caps().projection);
+        assert!(get(default_kind()).caps().projection);
+        // and stable across calls (OnceLock)
+        assert_eq!(default_kind(), default_kind());
+    }
+}

@@ -1,0 +1,41 @@
+//! The PJRT backend slot — registered, capability-gated, non-executing.
+//!
+//! [`crate::runtime`] holds the PJRT engine for the AOT-compiled
+//! JAX/Pallas artifacts, gated behind the `pjrt` cargo feature (without
+//! it, a clear-error stub with the same API). This module registers that
+//! engine as a *backend slot* so the dispatch seam introduced by
+//! [`crate::backend`] demonstrably extends past the two CPU tiers:
+//! [`Caps::projection`] is `false`, so every validated entry point —
+//! [`crate::api::ScanBuilder::backend`],
+//! [`crate::projector::ProjectionPlan::lower`], the protocol-v2 session
+//! handshake — turns a PJRT selection into a typed
+//! [`crate::api::LeapError::Unsupported`] naming the missing feature,
+//! and the kernel-layer dispatch treats it as unreachable (the gates run
+//! first on every path that can construct a projector).
+//!
+//! Wiring the engine in for real means flipping `projection` to `true`
+//! and adding drivers that stage volumes through
+//! [`crate::runtime::Engine`] — the registry, selection plumbing, wire
+//! reporting and tests are already backend-agnostic (see
+//! `docs/BACKENDS.md` §"Adding a backend").
+
+use super::{Backend, BackendKind, Caps};
+
+/// The feature-gated PJRT slot: selectable by name everywhere, executable
+/// nowhere (yet).
+pub struct PjrtBackend;
+
+impl Backend for PjrtBackend {
+    fn kind(&self) -> BackendKind {
+        BackendKind::Pjrt
+    }
+
+    /// Device-dependent; the slot advertises no CPU lane shape.
+    fn lanes(&self) -> usize {
+        1
+    }
+
+    fn caps(&self) -> Caps {
+        Caps { projection: false, thread_invariant: false }
+    }
+}

@@ -1,0 +1,31 @@
+//! The scalar reference backend — today's kernels, registered as a tier.
+//!
+//! This backend has no drivers of its own: selecting it dispatches to the
+//! original straight-line loops in [`crate::projector::sf`] (SF parallel/
+//! fan/cone scatter and slab-owned gather) and
+//! [`crate::projector::plan`] (`ray_forward_exec`/`ray_back_exec` for
+//! Siddon/Joseph and the modular-beam fallback). Every numerical contract
+//! in the repo — matched-pair adjoint identity, planned ≡ direct
+//! bit-identity, thread-count invariance, the analytic-phantom accuracy
+//! sweeps — is stated against these loops, which is why they stay the
+//! *reference* implementation the SIMD tier is checked against
+//! (`rust/tests/backend_property.rs`).
+
+use super::{Backend, BackendKind, Caps};
+
+/// The reference CPU tier (lane width 1).
+pub struct ScalarBackend;
+
+impl Backend for ScalarBackend {
+    fn kind(&self) -> BackendKind {
+        BackendKind::Scalar
+    }
+
+    fn lanes(&self) -> usize {
+        1
+    }
+
+    fn caps(&self) -> Caps {
+        Caps { projection: true, thread_invariant: true }
+    }
+}

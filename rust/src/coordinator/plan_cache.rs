@@ -73,10 +73,19 @@ impl PlanCache {
         }
     }
 
-    /// Canonical cache key for a projector's scan config.
+    /// Canonical cache key for a projector's scan config. The backend is
+    /// part of the key: plans snapshot the kernel tier they dispatch
+    /// through ([`ProjectionPlan::backend`]), so a scalar and a SIMD
+    /// session over the same geometry must not share one plan entry.
     pub fn key_for(p: &Projector) -> String {
         let cfg = ScanConfig { geometry: p.geom.clone(), volume: p.vg.clone() };
-        format!("{}|t{}|{}", p.model.name(), p.threads, scan_to_string(&cfg))
+        format!(
+            "{}|t{}|b:{}|{}",
+            p.model.name(),
+            p.threads,
+            p.backend.name(),
+            scan_to_string(&cfg)
+        )
     }
 
     /// Fetch the plan for `p`'s scan config, planning it on a miss.
@@ -206,6 +215,18 @@ mod tests {
         let a = cache.get_or_plan(&projector(6));
         let b = cache.get_or_plan(&projector(7));
         assert!(!Arc::ptr_eq(&a, &b));
+        assert_eq!(cache.len(), 2);
+    }
+
+    #[test]
+    fn different_backends_get_distinct_plans() {
+        use crate::backend::BackendKind;
+        let cache = PlanCache::new(4);
+        let scalar = cache.get_or_plan(&projector(6).with_backend(BackendKind::Scalar));
+        let simd = cache.get_or_plan(&projector(6).with_backend(BackendKind::Simd));
+        assert!(!Arc::ptr_eq(&scalar, &simd));
+        assert_eq!(scalar.backend(), BackendKind::Scalar);
+        assert_eq!(simd.backend(), BackendKind::Simd);
         assert_eq!(cache.len(), 2);
     }
 

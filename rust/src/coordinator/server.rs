@@ -4,8 +4,9 @@
 //! little-endian f32 payloads ([`super::wire`], spec in
 //! `docs/PROTOCOL.md`): Hello version negotiation, an OpenSession
 //! handshake that registers a scan config once (validated, planned,
-//! pinned — [`super::session`]), then per-request 24-byte headers +
-//! tensors. Drive it with [`BinaryClient`].
+//! pinned — [`super::session`]) and reports the compute backend the
+//! session resolved to, then per-request 24-byte headers + tensors.
+//! Drive it with [`BinaryClient`].
 //!
 //! **v1 (legacy)** — one JSON document per line:
 //!   → {"id": 1, "op": "fp_sf", "inputs": [[...f32...], ...]}
@@ -114,9 +115,12 @@ impl Drop for Server {
     }
 }
 
-/// Whether an I/O error is the read-deadline expiring (unix reports
-/// `WouldBlock`, windows `TimedOut`).
-fn is_timeout(e: &std::io::Error) -> bool {
+/// Whether an I/O error is the read-deadline expiring. Both kinds mean
+/// the same condition and MUST both be accepted: unix sockets surface
+/// an expired `SO_RCVTIMEO` as `WouldBlock`, windows as `TimedOut`.
+/// `pub(crate)` so tests and other connection-handling code classify
+/// deadlines through this one predicate instead of re-matching kinds.
+pub(crate) fn is_timeout(e: &std::io::Error) -> bool {
     matches!(e.kind(), std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut)
 }
 
@@ -217,6 +221,17 @@ fn serve_v1(
                         // size and dispatch count next to the queue depth so
                         // operators can see compute saturation per snapshot
                         let (pool_workers, pool_regions) = crate::util::pool::pool_stats();
+                        // the backend a sessionless scan would get, plus
+                        // the tier actually serving each open session —
+                        // operators correlating throughput need to know
+                        // which kernel tier produced it
+                        let session_backends = Json::Obj(
+                            SessionRegistry::global()
+                                .session_backends()
+                                .into_iter()
+                                .map(|(id, b)| (id.to_string(), Json::Str(b.to_string())))
+                                .collect(),
+                        );
                         Json::obj(vec![
                             ("id", Json::Num(doc.get_f64("id").unwrap_or(0.0))),
                             ("stats", coord.telemetry().to_json()),
@@ -225,6 +240,11 @@ fn serve_v1(
                             ("open_sessions", Json::Num(SessionRegistry::global().len() as f64)),
                             ("pool_workers", Json::Num(pool_workers as f64)),
                             ("pool_regions", Json::Num(pool_regions as f64)),
+                            (
+                                "default_backend",
+                                Json::Str(crate::backend::default_kind().name().to_string()),
+                            ),
+                            ("session_backends", session_backends),
                         ])
                     }
                     "__ops" => Json::obj(vec![
@@ -318,11 +338,17 @@ fn serve_v2_loop(
                     opened.push(id);
                     // the authoritative id is the frame's native u64 id
                     // field; the meta copy is a decimal string (f64 JSON
-                    // numbers round above 2^53)
+                    // numbers round above 2^53). The reply also names the
+                    // compute backend the session resolved to, so clients
+                    // that left the knob unset learn what will serve them.
+                    let backend = registry.backend_of(id).unwrap_or("unknown");
                     let reply = Frame::new(
                         FrameKind::OpenSession,
                         id,
-                        Json::obj(vec![("session", Json::Str(id.to_string()))]),
+                        Json::obj(vec![
+                            ("session", Json::Str(id.to_string())),
+                            ("backend", Json::Str(backend.to_string())),
+                        ]),
                         Vec::new(),
                     );
                     wire::write_frame(writer, &reply)?;
@@ -542,13 +568,31 @@ impl BinaryClient {
 
     /// Register a scan config; returns the session id to project
     /// against. The config travels exactly once — every subsequent
-    /// request is a 24-byte header plus the tensor.
+    /// request is a 24-byte header plus the tensor. The session runs on
+    /// the server's default compute backend; use
+    /// [`BinaryClient::open_session_with`] to pick one (and learn which
+    /// tier an unset knob resolved to).
     pub fn open_session(
         &mut self,
         cfg: &ScanConfig,
         model: Model,
         threads: Option<usize>,
     ) -> Result<u64, LeapError> {
+        self.open_session_with(cfg, model, threads, None).map(|(id, _)| id)
+    }
+
+    /// [`BinaryClient::open_session`] with an explicit compute-backend
+    /// request (`"scalar"`/`"simd"`; the non-executing `"pjrt"` slot and
+    /// unknown names are typed server-side errors). Returns the session
+    /// id plus the backend name the server actually resolved — when
+    /// `backend` is `None` that is the server process's default tier.
+    pub fn open_session_with(
+        &mut self,
+        cfg: &ScanConfig,
+        model: Model,
+        threads: Option<usize>,
+        backend: Option<&str>,
+    ) -> Result<(u64, String), LeapError> {
         let mut meta = vec![
             (
                 "config",
@@ -562,10 +606,16 @@ impl BinaryClient {
         if let Some(t) = threads {
             meta.push(("threads", Json::Num(t as f64)));
         }
+        if let Some(b) = backend {
+            meta.push(("backend", Json::Str(b.to_string())));
+        }
         let reply =
             self.roundtrip(&Frame::new(FrameKind::OpenSession, 0, Json::obj(meta), Vec::new()))?;
         match reply.kind {
-            FrameKind::OpenSession => Ok(reply.id),
+            FrameKind::OpenSession => {
+                let backend = reply.meta.get_str("backend").unwrap_or("unknown").to_string();
+                Ok((reply.id, backend))
+            }
             FrameKind::Error => Err(reply.to_error()),
             k => Err(LeapError::Protocol(format!("unexpected {k:?} open-session reply"))),
         }
@@ -937,7 +987,71 @@ mod tests {
         assert_eq!(e.code(), crate::api::codes::UNKNOWN_SESSION, "{e:?}");
     }
 
+    #[test]
+    fn v2_sessions_negotiate_and_report_their_backend() {
+        let (server, _coord) = start_native();
+        let cfg = scan_config();
+        let mut client = BinaryClient::connect(&server.addr).unwrap();
+        let (scalar_id, scalar_name) =
+            client.open_session_with(&cfg, Model::SF, Some(2), Some("scalar")).unwrap();
+        assert_eq!(scalar_name, "scalar");
+        let (simd_id, simd_name) =
+            client.open_session_with(&cfg, Model::SF, Some(2), Some("simd")).unwrap();
+        assert_eq!(simd_name, "simd");
+        // SF-parallel staging is in the bit-identical equivalence class
+        // (docs/BACKENDS.md), so the two tiers agree exactly on the wire
+        let mut vol = vec![0.0f32; 256];
+        crate::util::rng::Rng::new(31).fill_uniform(&mut vol, 0.0, 1.0);
+        assert_eq!(
+            client.forward(scalar_id, &vol).unwrap(),
+            client.forward(simd_id, &vol).unwrap(),
+        );
+        // an unset knob resolves to the process default — and the reply
+        // says which tier that was
+        let (_dflt_id, dflt_name) =
+            client.open_session_with(&cfg, Model::SF, None, None).unwrap();
+        assert!(dflt_name == "scalar" || dflt_name == "simd", "{dflt_name}");
+        // v1 telemetry exposes the default and the per-session tiers
+        let mut v1 = Client::connect(&server.addr).unwrap();
+        let stats = v1.stats().unwrap();
+        assert_eq!(stats.get_str("default_backend"), Some(dflt_name.as_str()));
+        let per_session = stats.get("session_backends").expect("per-session backend map");
+        assert_eq!(per_session.get_str(&scalar_id.to_string()), Some("scalar"));
+        assert_eq!(per_session.get_str(&simd_id.to_string()), Some("simd"));
+        // the non-executing pjrt slot and unknown names are typed
+        // errors on the wire, never a silent fallback
+        let e = client.open_session_with(&cfg, Model::SF, None, Some("pjrt")).unwrap_err();
+        assert_eq!(e.code(), crate::api::codes::UNSUPPORTED, "{e:?}");
+        let e = client.open_session_with(&cfg, Model::SF, None, Some("warp")).unwrap_err();
+        assert_eq!(e.code(), crate::api::codes::INVALID_ARGUMENT, "{e:?}");
+    }
+
     // ── protocol-sniffing robustness (first-exchange hardening) ────────
+
+    /// Read the single reply frame a hardening test expects. A slow
+    /// machine can instead trip the client's guard deadline, which
+    /// surfaces platform-dependently (`WouldBlock` on unix, `TimedOut`
+    /// on windows) — fail with one uniform diagnostic for both rather
+    /// than a platform-specific unwrap panic.
+    fn expect_reply_frame(reader: &mut BufReader<TcpStream>) -> Frame {
+        match wire::read_frame(reader) {
+            Ok(Some(f)) => f,
+            Ok(None) => panic!("server closed before sending the expected reply frame"),
+            Err(e) => panic!("no reply before the client guard deadline: {e}"),
+        }
+    }
+
+    #[test]
+    fn timeout_classification_accepts_both_platform_kinds() {
+        use std::io::{Error, ErrorKind};
+        // unix surfaces an expired read deadline as WouldBlock, windows
+        // as TimedOut; both must classify as the deadline firing
+        assert!(is_timeout(&Error::from(ErrorKind::WouldBlock)));
+        assert!(is_timeout(&Error::from(ErrorKind::TimedOut)));
+        // and real I/O failures must not
+        assert!(!is_timeout(&Error::from(ErrorKind::BrokenPipe)));
+        assert!(!is_timeout(&Error::from(ErrorKind::UnexpectedEof)));
+    }
 
     #[test]
     fn zero_byte_connection_closes_cleanly_and_server_survives() {
@@ -966,7 +1080,7 @@ mod tests {
         writer.flush().unwrap();
         stream.shutdown(std::net::Shutdown::Write).unwrap(); // … then EOF mid-header
         let mut reader = BufReader::new(stream);
-        let reply = wire::read_frame(&mut reader).unwrap().expect("typed error frame");
+        let reply = expect_reply_frame(&mut reader);
         assert_eq!(reply.kind, FrameKind::Error);
         assert_eq!(reply.to_error().code(), crate::api::codes::PROTOCOL, "{:?}", reply.to_error());
         // and the connection closes cleanly afterwards
@@ -995,7 +1109,7 @@ mod tests {
         // … then stall (write half stays open). The handshake deadline
         // must fire: a typed error frame, then the connection closes.
         let mut reader = BufReader::new(stream);
-        let reply = wire::read_frame(&mut reader).unwrap().expect("typed error frame");
+        let reply = expect_reply_frame(&mut reader);
         assert_eq!(reply.kind, FrameKind::Error);
         assert_eq!(reply.to_error().code(), crate::api::codes::IO, "{:?}", reply.to_error());
         assert!(matches!(wire::read_frame(&mut reader), Ok(None) | Err(_)));

@@ -25,6 +25,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, OnceLock};
 
 use crate::api::{LeapError, ScanBuilder};
+use crate::backend::BackendKind;
 use crate::geometry::config::{geometry_from_json, volume_from_json, ScanConfig};
 use crate::ops::{LinearOp, PlanOp};
 use crate::projector::Model;
@@ -62,6 +63,10 @@ pub const MAX_PIPELINES_PER_SESSION: usize = 16;
 /// needs no further locking.
 pub struct Session {
     exec: Arc<NativeExecutor>,
+    /// Name of the compute backend the session's pinned plan dispatches
+    /// through — reported in the OpenSession reply meta and `__stats`,
+    /// so served results are attributable to a kernel tier.
+    backend: &'static str,
     pipelines: Mutex<HashMap<u64, Arc<tape::Pipeline>>>,
     next_pipeline: AtomicU64,
 }
@@ -90,14 +95,29 @@ impl SessionRegistry {
         REGISTRY.get_or_init(SessionRegistry::new)
     }
 
-    /// Validate `cfg` and open a session for it. The scan is planned
-    /// through the process-wide plan cache; the session pins the
-    /// resulting plan until [`SessionRegistry::close`].
+    /// Validate `cfg` and open a session for it on the process-default
+    /// compute backend (see [`Self::open_with`]).
     pub fn open(
         &self,
         cfg: &ScanConfig,
         model: Model,
         threads: Option<usize>,
+    ) -> Result<u64, LeapError> {
+        self.open_with(cfg, model, threads, None)
+    }
+
+    /// Validate `cfg` and open a session for it. The scan is planned
+    /// through the process-wide plan cache; the session pins the
+    /// resulting plan until [`SessionRegistry::close`]. `backend`
+    /// selects the compute backend (`None` = process default); the
+    /// non-executing PJRT slot is a typed [`LeapError::Unsupported`]
+    /// from the builder's capability gate.
+    pub fn open_with(
+        &self,
+        cfg: &ScanConfig,
+        model: Model,
+        threads: Option<usize>,
+        backend: Option<BackendKind>,
     ) -> Result<u64, LeapError> {
         // Count gate BEFORE the expensive planning below (approximate —
         // concurrent opens may overshoot by the number in flight; the
@@ -142,10 +162,15 @@ impl SessionRegistry {
         if let Some(t) = threads {
             builder = builder.threads(t);
         }
+        if let Some(k) = backend {
+            builder = builder.backend(k);
+        }
         let scan = builder.build()?;
+        let backend_name = scan.backend().name();
         let exec = NativeExecutor::with_plan(scan.projector().clone(), scan.plan().clone());
         let session = Session {
             exec: Arc::new(exec),
+            backend: backend_name,
             pipelines: Mutex::new(HashMap::new()),
             next_pipeline: AtomicU64::new(1),
         };
@@ -167,7 +192,8 @@ impl SessionRegistry {
 
     /// Open a session from OpenSession frame meta:
     /// `{"config": {"geometry": …, "volume": …}, "model": "sf",
-    ///   "threads": n}` (model and threads optional).
+    ///   "threads": n, "backend": "simd"}` (model, threads and backend
+    /// optional; an absent backend takes the process default).
     pub fn open_from_meta(&self, meta: &Json) -> Result<u64, LeapError> {
         let cfg_json = meta
             .get("config")
@@ -190,7 +216,15 @@ impl SessionRegistry {
                 .ok_or_else(|| LeapError::InvalidArgument(format!("unknown model {name}")))?,
         };
         let threads = meta.get_usize("threads");
-        self.open(&ScanConfig { geometry, volume }, model, threads)
+        let backend = match meta.get_str("backend") {
+            None => None,
+            Some(name) => Some(BackendKind::parse(name).ok_or_else(|| {
+                LeapError::InvalidArgument(format!(
+                    "unknown backend {name:?} (expected scalar|simd|pjrt)"
+                ))
+            })?),
+        };
+        self.open_with(&ScanConfig { geometry, volume }, model, threads, backend)
     }
 
     /// Drop a session — its registered pipelines go with it (their plan
@@ -203,6 +237,21 @@ impl SessionRegistry {
     /// The executor serving session `id`.
     pub fn executor(&self, id: u64) -> Option<Arc<NativeExecutor>> {
         self.sessions.lock().unwrap().get(&id).map(|s| s.exec.clone())
+    }
+
+    /// Name of the compute backend serving session `id` (for the
+    /// OpenSession reply meta and `__stats` telemetry).
+    pub fn backend_of(&self, id: u64) -> Option<&'static str> {
+        self.sessions.lock().unwrap().get(&id).map(|s| s.backend)
+    }
+
+    /// Snapshot of `(session id, backend name)` for every open session,
+    /// id-ordered — `__stats` reports which kernel tier serves each one.
+    pub fn session_backends(&self) -> Vec<(u64, &'static str)> {
+        let mut v: Vec<(u64, &'static str)> =
+            self.sessions.lock().unwrap().iter().map(|(&id, s)| (id, s.backend)).collect();
+        v.sort_unstable_by_key(|&(id, _)| id);
+        v
     }
 
     /// Validate a tape spec against session `id`'s pinned plan and
@@ -509,6 +558,50 @@ mod tests {
         )
         .unwrap();
         assert!(matches!(reg.open_from_meta(&bad_model), Err(LeapError::InvalidArgument(_))));
+    }
+
+    #[test]
+    fn sessions_carry_their_backend() {
+        use crate::backend::BackendKind;
+        let reg = SessionRegistry::new();
+        let scalar = reg
+            .open_with(&config(6), Model::SF, Some(2), Some(BackendKind::Scalar))
+            .unwrap();
+        let simd = reg
+            .open_with(&config(6), Model::SF, Some(2), Some(BackendKind::Simd))
+            .unwrap();
+        assert_eq!(reg.backend_of(scalar), Some("scalar"));
+        assert_eq!(reg.backend_of(simd), Some("simd"));
+        // default-backend sessions report whatever the process resolved to
+        let dflt = reg.open(&config(7), Model::SF, Some(1)).unwrap();
+        let name = reg.backend_of(dflt).unwrap();
+        assert!(name == "scalar" || name == "simd", "{name}");
+        assert_eq!(reg.backend_of(u64::MAX), None);
+        // the PJRT slot is capability-gated before any plan is built
+        let e = reg
+            .open_with(&config(6), Model::SF, None, Some(BackendKind::Pjrt))
+            .unwrap_err();
+        assert!(matches!(e, LeapError::Unsupported(ref m) if m.contains("pjrt")), "{e:?}");
+    }
+
+    #[test]
+    fn open_from_meta_parses_the_backend_knob() {
+        let reg = SessionRegistry::new();
+        let meta = parse(
+            r#"{"config": {"geometry": {"type": "parallel", "ncols": 18, "nviews": 6},
+                           "volume": {"nx": 12}},
+                "model": "sf", "threads": 2, "backend": "simd"}"#,
+        )
+        .unwrap();
+        let id = reg.open_from_meta(&meta).unwrap();
+        assert_eq!(reg.backend_of(id), Some("simd"));
+
+        let bad = parse(
+            r#"{"config": {"geometry": {"type": "parallel", "ncols": 8, "nviews": 4},
+                           "volume": {"nx": 8}}, "backend": "warp"}"#,
+        )
+        .unwrap();
+        assert!(matches!(reg.open_from_meta(&bad), Err(LeapError::InvalidArgument(_))));
     }
 
     #[test]

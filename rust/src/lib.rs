@@ -24,6 +24,13 @@
 //!   planned [`api::Scan`] with fallible `forward`/`back`/`solve`/
 //!   `loss_grad`; the layers below are the panicking kernel layer that
 //!   `Scan` dispatches to after validation.
+//! * [`backend`] — pluggable compute backends for the projection
+//!   kernels: the scalar reference tier, the SIMD throughput tier
+//!   (staged, lane-unrolled accumulation over the same coefficient
+//!   enumerators — see `docs/BACKENDS.md`), and the capability-gated
+//!   PJRT slot. Selected per scan via [`api::ScanBuilder::backend`],
+//!   process-wide via `LEAP_BACKEND`, or by runtime detection; served
+//!   sessions report their backend over the wire.
 //! * [`ops`] — the differentiable operator layer: [`ops::LinearOp`]
 //!   exposes `A`/`Aᵀ` as composable, batched, gradient-ready objects
 //!   (scale, compose, mask views, form `AᵀA`), implemented by the
@@ -97,6 +104,7 @@ pub mod util;
 pub mod geometry;
 pub mod array;
 pub mod api;
+pub mod backend;
 pub mod projector;
 pub mod ops;
 pub mod tape;

@@ -21,7 +21,11 @@
 //!   batched entry points dispatch **one** pool region across the whole
 //!   stack, splitting the workers between items (outputs are
 //!   bit-identical for every thread split, so batching never changes
-//!   results). [`crate::sysmatrix::SystemMatrix`] implements the same
+//!   results). The plan snapshots its compute backend
+//!   ([`crate::backend`]) at build time, so `apply`/`adjoint` — direct
+//!   and batched — dispatch to the selected kernel tier with no code in
+//!   this layer: an operator built from a SIMD-lowered plan *is* a SIMD
+//!   operator, and every solver above inherits the tier for free. [`crate::sysmatrix::SystemMatrix`] implements the same
 //!   trait, so every consumer — all five iterative solvers, the
 //!   data-consistency pipeline, the serving coordinator — runs
 //!   unchanged against the stored-matrix baseline.

@@ -61,7 +61,17 @@
 //! applications dispatch parked workers instead of spawning OS threads,
 //! and irregular work (cone-SF views) is dynamically scheduled. Results
 //! are bit-identical across thread counts for both forward and back
-//! projection.
+//! projection — on every backend.
+//!
+//! **Backends.** Each projector carries a [`crate::backend::BackendKind`]
+//! selecting how the inner accumulation loops execute: the scalar
+//! reference tier (this module's original loops) or the SIMD throughput
+//! tier ([`crate::backend::simd`], staged/lane-unrolled drivers over the
+//! *same* coefficient enumerators). The default comes from
+//! `LEAP_BACKEND` or runtime detection ([`crate::backend::default_kind`]);
+//! [`crate::api::ScanBuilder::backend`] sets it per scan. See
+//! `docs/BACKENDS.md` for the identity-vs-tolerance contract between
+//! tiers.
 
 pub mod siddon;
 pub mod joseph;
@@ -72,6 +82,7 @@ pub mod plan;
 pub use plan::ProjectionPlan;
 
 use crate::array::{Sino, Vol3};
+use crate::backend::{self, BackendKind};
 use crate::geometry::{Geometry, VolumeGeometry};
 use crate::util::pool;
 
@@ -109,16 +120,46 @@ pub struct Projector {
     pub vg: VolumeGeometry,
     pub model: Model,
     pub threads: usize,
+    /// Compute backend the kernels execute on (snapshot into plans and
+    /// the serving plan-cache key).
+    pub backend: BackendKind,
 }
 
 impl Projector {
     pub fn new(geom: Geometry, vg: VolumeGeometry, model: Model) -> Projector {
-        Projector { geom, vg, model, threads: pool::default_threads() }
+        Projector {
+            geom,
+            vg,
+            model,
+            threads: pool::default_threads(),
+            backend: backend::default_kind(),
+        }
     }
 
     pub fn with_threads(mut self, threads: usize) -> Projector {
         self.threads = threads.max(1);
         self
+    }
+
+    /// Select the compute backend. The kernel layer panics on the
+    /// non-executing PJRT slot (validated entry points —
+    /// [`crate::api::ScanBuilder`], plan lowering, the session handshake —
+    /// reject it with a typed error before a projector can be built).
+    pub fn with_backend(mut self, kind: BackendKind) -> Projector {
+        self.backend = kind;
+        self
+    }
+
+    /// `true` when the SIMD tier should drive the kernels for this scan.
+    fn kernel_simd(&self) -> bool {
+        match self.backend {
+            BackendKind::Scalar => false,
+            BackendKind::Simd => true,
+            BackendKind::Pjrt => panic!(
+                "pjrt backend is a registered slot, not an executable tier \
+                 (validated entry points reject it before kernel dispatch)"
+            ),
+        }
     }
 
     /// Allocate a correctly-shaped sinogram for this scan.
@@ -141,22 +182,46 @@ impl Projector {
     /// view on the fly; use [`Self::forward_with_plan`] in loops.
     pub fn forward_into(&self, vol: &Vol3, sino: &mut Sino) {
         plan::check_shapes(&self.geom, &self.vg, vol, sino);
+        let simd = self.kernel_simd();
         match (self.model, &self.geom) {
+            (Model::SF, Geometry::Parallel(g)) if simd => {
+                backend::simd::forward_parallel_simd(&self.vg, g, None, vol, sino, self.threads)
+            }
             (Model::SF, Geometry::Parallel(g)) => {
                 sf::forward_parallel(&self.vg, g, vol, sino, self.threads)
             }
+            (Model::SF, Geometry::Fan(g)) if simd => {
+                backend::simd::forward_fan_simd(&self.vg, g, None, vol, sino, self.threads)
+            }
             (Model::SF, Geometry::Fan(g)) => sf::forward_fan(&self.vg, g, vol, sino, self.threads),
+            (Model::SF, Geometry::Cone(g)) if simd => {
+                backend::simd::forward_cone_simd(&self.vg, g, None, vol, sino, self.threads)
+            }
             (Model::SF, Geometry::Cone(g)) => {
                 sf::forward_cone(&self.vg, g, vol, sino, self.threads)
             }
             // SF is not defined for arbitrary modular poses; Joseph is the
             // documented fallback (DESIGN.md §3).
-            (Model::SF, Geometry::Modular(_)) | (Model::Joseph, _) => {
-                plan::ray_forward_exec(&self.vg, &self.geom, None, false, vol, sino, self.threads)
-            }
-            (Model::Siddon, _) => {
-                plan::ray_forward_exec(&self.vg, &self.geom, None, true, vol, sino, self.threads)
-            }
+            (Model::SF, Geometry::Modular(_)) | (Model::Joseph, _) => plan::ray_forward_exec(
+                &self.vg,
+                &self.geom,
+                None,
+                false,
+                simd,
+                vol,
+                sino,
+                self.threads,
+            ),
+            (Model::Siddon, _) => plan::ray_forward_exec(
+                &self.vg,
+                &self.geom,
+                None,
+                true,
+                simd,
+                vol,
+                sino,
+                self.threads,
+            ),
         }
     }
 
@@ -173,12 +238,24 @@ impl Projector {
         // symmetric to forward_into: a mismatched sinogram would index out
         // of bounds (or silently truncate) inside the per-view kernels
         plan::check_shapes(&self.geom, &self.vg, vol, sino);
+        let simd = self.kernel_simd();
         match (self.model, &self.geom) {
+            (Model::SF, Geometry::Parallel(g)) if simd => {
+                backend::simd::back_parallel_simd(&self.vg, g, None, sino, vol, self.threads)
+            }
             (Model::SF, Geometry::Parallel(g)) => {
                 sf::back_parallel(&self.vg, g, sino, vol, self.threads)
             }
+            (Model::SF, Geometry::Fan(g)) if simd => {
+                backend::simd::back_fan_simd(&self.vg, g, None, sino, vol, self.threads)
+            }
             (Model::SF, Geometry::Fan(g)) => sf::back_fan(&self.vg, g, sino, vol, self.threads),
+            (Model::SF, Geometry::Cone(g)) if simd => {
+                backend::simd::back_cone_simd(&self.vg, g, None, sino, vol, self.threads)
+            }
             (Model::SF, Geometry::Cone(g)) => sf::back_cone(&self.vg, g, sino, vol, self.threads),
+            // ray backprojection has no safely vectorizable inner loop
+            // (guarded indirect scatter): both CPU tiers share this path
             (Model::SF, Geometry::Modular(_)) | (Model::Joseph, _) => {
                 plan::ray_back_exec(&self.vg, &self.geom, None, false, sino, vol, self.threads)
             }

@@ -50,7 +50,9 @@
 //! 1 GiB) the plan transparently keeps per-view on-the-fly planning so
 //! paper-scale scans never trade the one-copy memory claim for speed.
 
+use crate::api::LeapError;
 use crate::array::{Sino, Vol3};
+use crate::backend::{self, BackendKind};
 use crate::geometry::{Geometry, Ray, VolumeGeometry};
 use crate::util::pool::{self, chunk_ranges, parallel_items, run_region, ParWriter};
 
@@ -58,14 +60,22 @@ use super::{joseph, sf, siddon, Model, Projector};
 
 /// Precomputed per-view invariants for one `(geometry, volume, model)`
 /// triple. Build once with [`Projector::plan`], apply many times.
+///
+/// The plan also snapshots the projector's [`BackendKind`]: cached
+/// invariants describe the *scan* (they are backend-independent), but the
+/// execute step dispatches through the snapshot, and [`Self::lower`]
+/// rebinds a plan to another backend without re-planning.
+#[derive(Clone)]
 pub struct ProjectionPlan {
     geom: Geometry,
     vg: VolumeGeometry,
     model: Model,
     threads: usize,
+    backend: BackendKind,
     kind: PlanKind,
 }
 
+#[derive(Clone)]
 enum PlanKind {
     Ray { use_siddon: bool, views: RayViews },
     SfParallel(sf::ParallelPlanSet),
@@ -103,6 +113,7 @@ pub(crate) fn check_shapes(geom: &Geometry, vg: &VolumeGeometry, vol: &Vol3, sin
 }
 
 /// Cached per-view ray-construction invariants.
+#[derive(Clone)]
 pub(crate) struct RayViews {
     /// `(sin φ, cos φ)` per view; empty for modular beams (their poses
     /// are already explicit per view).
@@ -251,19 +262,47 @@ impl ProjectionPlan {
                 views: RayViews::build(geom, model, &p.vg, threads),
             },
         };
-        ProjectionPlan { geom: p.geom.clone(), vg: p.vg.clone(), model: p.model, threads, kind }
+        ProjectionPlan {
+            geom: p.geom.clone(),
+            vg: p.vg.clone(),
+            model: p.model,
+            threads,
+            backend: p.backend,
+            kind,
+        }
     }
 
     /// Does this plan describe the same scan as `p` — geometry, volume
-    /// grid, model **and** thread count? Slab-owned backprojection made
-    /// the floats thread-count-invariant, but the thread count still
-    /// fixes the execution schedule and keys the coordinator's plan
-    /// cache, so it stays part of the plan identity.
+    /// grid, model, thread count **and** backend? Slab-owned
+    /// backprojection made the floats thread-count-invariant, but the
+    /// thread count still fixes the execution schedule and keys the
+    /// coordinator's plan cache, so it stays part of the plan identity —
+    /// and the backend selects the kernel tier, so it must too.
     pub fn matches(&self, p: &Projector) -> bool {
         self.model == p.model
             && self.threads == p.threads
+            && self.backend == p.backend
             && self.vg == p.vg
             && self.geom == p.geom
+    }
+
+    /// Rebind this plan to another backend without re-planning (the
+    /// lowering step): the cached per-view invariants describe the scan,
+    /// not the execution tier, so lowering is a snapshot-and-rebind.
+    /// Non-executing slots (the feature-gated PJRT engine) are rejected
+    /// with a typed error — the same capability gate
+    /// [`crate::api::ScanBuilder`] applies before a projector is built.
+    pub fn lower(&self, kind: BackendKind) -> Result<ProjectionPlan, LeapError> {
+        if !backend::get(kind).caps().projection {
+            return Err(LeapError::Unsupported(format!(
+                "backend {:?} cannot execute projection (registered slot only; \
+                 enable and wire its engine to use it)",
+                kind.name()
+            )));
+        }
+        let mut lowered = self.clone();
+        lowered.backend = kind;
+        Ok(lowered)
     }
 
     pub fn geom(&self) -> &Geometry {
@@ -282,6 +321,26 @@ impl ProjectionPlan {
     /// the plan identity; see [`Self::matches`]).
     pub fn threads(&self) -> usize {
         self.threads
+    }
+
+    /// Compute backend the execute step dispatches through (part of the
+    /// plan identity; see [`Self::matches`] and [`Self::lower`]).
+    pub fn backend(&self) -> BackendKind {
+        self.backend
+    }
+
+    /// `true` when the SIMD tier should drive this plan's kernels (same
+    /// contract as `Projector::kernel_simd`: the PJRT slot cannot reach
+    /// execute — [`Self::lower`] and the builder gates reject it first).
+    fn kernel_simd(&self) -> bool {
+        match self.backend {
+            BackendKind::Scalar => false,
+            BackendKind::Simd => true,
+            BackendKind::Pjrt => panic!(
+                "pjrt backend is a registered slot, not an executable tier \
+                 (validated entry points reject it before kernel dispatch)"
+            ),
+        }
     }
 
     /// Pre-build estimate (bytes) of what [`Self::new`] would cache for
@@ -351,26 +410,50 @@ impl ProjectionPlan {
     pub fn forward_into_with_threads(&self, vol: &Vol3, sino: &mut Sino, threads: usize) {
         check_shapes(&self.geom, &self.vg, vol, sino);
         let threads = threads.max(1);
+        let simd = self.kernel_simd();
         match &self.kind {
+            PlanKind::SfParallel(set) if simd => {
+                let Geometry::Parallel(g) = &self.geom else { unreachable!() };
+                backend::simd::forward_parallel_simd(&self.vg, g, Some(set), vol, sino, threads)
+            }
             PlanKind::SfParallel(set) => {
                 let Geometry::Parallel(g) = &self.geom else { unreachable!() };
                 sf::forward_parallel_opt(&self.vg, g, Some(set), vol, sino, threads)
+            }
+            PlanKind::SfFan(vs) if simd => {
+                let Geometry::Fan(g) = &self.geom else { unreachable!() };
+                backend::simd::forward_fan_simd(&self.vg, g, Some(vs.as_slice()), vol, sino, threads)
             }
             PlanKind::SfFan(vs) => {
                 let Geometry::Fan(g) = &self.geom else { unreachable!() };
                 sf::forward_fan_opt(&self.vg, g, Some(vs.as_slice()), vol, sino, threads)
             }
+            PlanKind::SfCone(vs) if simd => {
+                let Geometry::Cone(g) = &self.geom else { unreachable!() };
+                backend::simd::forward_cone_simd(&self.vg, g, Some(vs.as_slice()), vol, sino, threads)
+            }
             PlanKind::SfCone(vs) => {
                 let Geometry::Cone(g) = &self.geom else { unreachable!() };
                 sf::forward_cone_opt(&self.vg, g, Some(vs.as_slice()), vol, sino, threads)
+            }
+            PlanKind::SfConeUncached if simd => {
+                let Geometry::Cone(g) = &self.geom else { unreachable!() };
+                backend::simd::forward_cone_simd(&self.vg, g, None, vol, sino, threads)
             }
             PlanKind::SfConeUncached => {
                 let Geometry::Cone(g) = &self.geom else { unreachable!() };
                 sf::forward_cone_opt(&self.vg, g, None, vol, sino, threads)
             }
-            PlanKind::Ray { use_siddon, views } => {
-                ray_forward_exec(&self.vg, &self.geom, Some(views), *use_siddon, vol, sino, threads)
-            }
+            PlanKind::Ray { use_siddon, views } => ray_forward_exec(
+                &self.vg,
+                &self.geom,
+                Some(views),
+                *use_siddon,
+                simd,
+                vol,
+                sino,
+                threads,
+            ),
         }
     }
 
@@ -385,23 +468,42 @@ impl ProjectionPlan {
     pub fn back_into_with_threads(&self, sino: &Sino, vol: &mut Vol3, threads: usize) {
         check_shapes(&self.geom, &self.vg, vol, sino);
         let threads = threads.max(1);
+        let simd = self.kernel_simd();
         match &self.kind {
+            PlanKind::SfParallel(set) if simd => {
+                let Geometry::Parallel(g) = &self.geom else { unreachable!() };
+                backend::simd::back_parallel_simd(&self.vg, g, Some(set), sino, vol, threads)
+            }
             PlanKind::SfParallel(set) => {
                 let Geometry::Parallel(g) = &self.geom else { unreachable!() };
                 sf::back_parallel_opt(&self.vg, g, Some(set), sino, vol, threads)
+            }
+            PlanKind::SfFan(vs) if simd => {
+                let Geometry::Fan(g) = &self.geom else { unreachable!() };
+                backend::simd::back_fan_simd(&self.vg, g, Some(vs.as_slice()), sino, vol, threads)
             }
             PlanKind::SfFan(vs) => {
                 let Geometry::Fan(g) = &self.geom else { unreachable!() };
                 sf::back_fan_opt(&self.vg, g, Some(vs.as_slice()), sino, vol, threads)
             }
+            PlanKind::SfCone(vs) if simd => {
+                let Geometry::Cone(g) = &self.geom else { unreachable!() };
+                backend::simd::back_cone_simd(&self.vg, g, Some(vs.as_slice()), sino, vol, threads)
+            }
             PlanKind::SfCone(vs) => {
                 let Geometry::Cone(g) = &self.geom else { unreachable!() };
                 sf::back_cone_opt(&self.vg, g, Some(vs.as_slice()), sino, vol, threads)
+            }
+            PlanKind::SfConeUncached if simd => {
+                let Geometry::Cone(g) = &self.geom else { unreachable!() };
+                backend::simd::back_cone_simd(&self.vg, g, None, sino, vol, threads)
             }
             PlanKind::SfConeUncached => {
                 let Geometry::Cone(g) = &self.geom else { unreachable!() };
                 sf::back_cone_opt(&self.vg, g, None, sino, vol, threads)
             }
+            // ray backprojection has no safely vectorizable inner loop
+            // (guarded indirect scatter): both CPU tiers share this path
             PlanKind::Ray { use_siddon, views } => {
                 ray_back_exec(&self.vg, &self.geom, Some(views), *use_siddon, sino, vol, threads)
             }
@@ -496,15 +598,46 @@ fn ray_for(geom: &Geometry, trig: Option<(f64, f64)>, view: usize, row: usize, c
     }
 }
 
+/// Walk one ray with the model's coefficient walker (Siddon exact
+/// traversal, or Joseph with/without the cached view-constant axis) —
+/// the single definition both accumulation shapes of
+/// [`ray_forward_exec`] replay.
+#[inline]
+fn walk_one<F: FnMut(usize, f32)>(
+    vg: &VolumeGeometry,
+    ray: &Ray,
+    use_siddon: bool,
+    axis: Option<usize>,
+    visit: F,
+) {
+    if use_siddon {
+        siddon::walk_ray(vg, ray, visit);
+    } else if let Some(a) = axis {
+        joseph::walk_ray_with_axis(vg, ray, a, visit);
+    } else {
+        joseph::walk_ray(vg, ray, visit);
+    }
+}
+
 /// Ray-driven forward projection over `(view, row)` units — each unit's
 /// detector row is written by exactly one worker, so any schedule is
 /// safe; units are handed out dynamically for load balance. Shared by
 /// the direct path (`views = None`) and the planned path.
+///
+/// `simd` selects the marching accumulation shape: `false` keeps the
+/// scalar running sum (the reference), `true` cycles each ray's terms
+/// through 4 partial sums combined pairwise at the end — the
+/// dependence-breaking shape the SIMD tier uses so the compiler can
+/// vectorize the reduction. The summation tree differs, so the two
+/// shapes agree to floating-point tolerance (not bit-identically); the
+/// term order per ray is fixed either way, so each shape is
+/// deterministic and thread-count-invariant.
 pub(crate) fn ray_forward_exec(
     vg: &VolumeGeometry,
     geom: &Geometry,
     views: Option<&RayViews>,
     use_siddon: bool,
+    simd: bool,
     vol: &Vol3,
     sino: &mut Sino,
     threads: usize,
@@ -523,15 +656,20 @@ pub(crate) fn ray_forward_exec(
         let base = u * ncols;
         for col in 0..ncols {
             let ray = ray_for(geom, trig, view, row, col);
-            let mut acc = 0.0f32;
-            if use_siddon {
-                siddon::walk_ray(vg, &ray, |idx, w| acc += w * vol.data[idx]);
-            } else if let Some(a) = axis {
-                joseph::walk_ray_with_axis(vg, &ray, a, |idx, w| acc += w * vol.data[idx]);
+            let val = if simd {
+                let mut acc = [0.0f32; 4];
+                let mut lane = 0usize;
+                walk_one(vg, &ray, use_siddon, axis, |idx, w| {
+                    acc[lane & 3] += w * vol.data[idx];
+                    lane += 1;
+                });
+                (acc[0] + acc[2]) + (acc[1] + acc[3])
             } else {
-                joseph::walk_ray(vg, &ray, |idx, w| acc += w * vol.data[idx]);
-            }
-            out.set(base + col, acc);
+                let mut acc = 0.0f32;
+                walk_one(vg, &ray, use_siddon, axis, |idx, w| acc += w * vol.data[idx]);
+                acc
+            };
+            out.set(base + col, val);
         }
     });
 }

@@ -351,7 +351,7 @@ pub(crate) fn plan_parallel_set(vg: &VolumeGeometry, g: &ParallelBeam) -> Parall
 /// the range yields exactly the floats of the full enumeration: the basis
 /// of both the forward path (full range per view) and the slab-owned
 /// backprojection (each worker gathers its own row range over all views).
-fn parallel_rows_coeffs<F: FnMut(usize, usize, usize, f64)>(
+pub(crate) fn parallel_rows_coeffs<F: FnMut(usize, usize, usize, f64)>(
     vg: &VolumeGeometry,
     g: &ParallelBeam,
     vp: &ParallelViewPlan,
@@ -439,7 +439,7 @@ fn parallel_rows_coeffs<F: FnMut(usize, usize, usize, f64)>(
 
 /// Enumerate SF coefficients of every voxel for one parallel-beam view
 /// from its plan (full row range).
-fn parallel_view_coeffs_planned<F: FnMut(usize, usize, usize, f64)>(
+pub(crate) fn parallel_view_coeffs_planned<F: FnMut(usize, usize, usize, f64)>(
     vg: &VolumeGeometry,
     g: &ParallelBeam,
     vp: &ParallelViewPlan,
@@ -629,7 +629,7 @@ pub fn plan_fan_view(g: &FanBeam, view: usize) -> FanViewPlan {
 /// restricted to the voxel-row range `j0..j1` (rows decouple — every
 /// voxel's footprint derives from its own corners — so the restriction is
 /// float-identical to the full enumeration).
-fn fan_rows_coeffs<F: FnMut(usize, usize, f64)>(
+pub(crate) fn fan_rows_coeffs<F: FnMut(usize, usize, f64)>(
     vg: &VolumeGeometry,
     g: &FanBeam,
     vp: &FanViewPlan,
@@ -765,7 +765,7 @@ pub(crate) fn back_fan_opt(
 /// scalars the axial (z) loop needs, plus the index range of the
 /// transaxial detector-column weights in the plan's `bins` arena.
 #[derive(Clone, Copy, Debug)]
-struct ConeVoxelFoot {
+pub(crate) struct ConeVoxelFoot {
     /// Source→voxel-center distance along the detector normal; `≤ 0`
     /// marks a column behind the source (no coefficients).
     t_c: f64,
@@ -775,8 +775,8 @@ struct ConeVoxelFoot {
     m_v: f64,
     /// `V · m_u · m_v` — the amplitude numerator (`cos ψ` varies per z).
     amp_uv: f64,
-    bin0: u32,
-    bin1: u32,
+    pub(crate) bin0: u32,
+    pub(crate) bin1: u32,
 }
 
 /// Per-view invariants of the cone-beam SF footprint — the plan step.
@@ -788,10 +788,10 @@ struct ConeVoxelFoot {
 /// argues against.
 #[derive(Clone, Debug)]
 pub struct ConeViewPlan {
-    foot: Vec<ConeVoxelFoot>,
+    pub(crate) foot: Vec<ConeVoxelFoot>,
     /// Arena of (detector column, transaxial weight) runs indexed by
     /// `foot[·].bin0..bin1`.
-    bins: Vec<(u32, f64)>,
+    pub(crate) bins: Vec<(u32, f64)>,
 }
 
 impl ConeViewPlan {
@@ -906,7 +906,7 @@ pub(crate) fn plan_cone_rows_into(
 /// gather and the public enumeration, so every path emits the identical
 /// coefficient stream for a column.
 #[inline]
-fn cone_column_coeffs<F: FnMut(usize, usize, usize, f64)>(
+pub(crate) fn cone_column_coeffs<F: FnMut(usize, usize, usize, f64)>(
     vg: &VolumeGeometry,
     g: &ConeBeam,
     f: &ConeVoxelFoot,
@@ -964,7 +964,7 @@ fn cone_column_coeffs<F: FnMut(usize, usize, usize, f64)>(
 
 /// Enumerate SF coefficients for one cone-beam view from its (full-view)
 /// plan — the execute step.
-fn cone_view_coeffs_planned<F: FnMut(usize, usize, usize, f64)>(
+pub(crate) fn cone_view_coeffs_planned<F: FnMut(usize, usize, usize, f64)>(
     vg: &VolumeGeometry,
     g: &ConeBeam,
     vp: &ConeViewPlan,

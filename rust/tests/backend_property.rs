@@ -1,0 +1,271 @@
+//! Property tests for the pluggable compute backends (`leap::backend`).
+//!
+//! The backend contract has two tiers of agreement (docs/BACKENDS.md):
+//!
+//! * **Within** a backend, results are bit-identical across thread
+//!   counts — the PR 2 slab-ownership invariant, extended per tier.
+//! * **Across** backends, forward and back projections agree to a
+//!   relative-l2 tolerance: the SIMD tier re-associates some multi-lane
+//!   accumulations (cone backprojection, Joseph/Siddon ray marching),
+//!   which is float-sum reordering, not a different discretization.
+//!
+//! Both properties are swept over every model × every geometry family,
+//! plus the adjoint identity per backend and the validation story for
+//! the non-executing PJRT slot.
+
+use leap::backend::BackendKind;
+use leap::geometry::config::ScanConfig;
+use leap::geometry::{
+    ConeBeam, DetectorShape, FanBeam, Geometry, ModularBeam, ParallelBeam, VolumeGeometry,
+};
+use leap::projector::{Model, Projector};
+use leap::util::{dot_f64, rng::Rng};
+use leap::{LeapError, ScanBuilder};
+
+/// One geometry per family (flat and curved cone detectors both count:
+/// they take different footprint/ray code paths).
+fn all_geometries() -> Vec<Geometry> {
+    let cone = ConeBeam::standard(6, 10, 14, 1.6, 1.6, 60.0, 120.0);
+    let mut curved = cone.clone();
+    curved.shape = DetectorShape::Curved;
+    vec![
+        Geometry::Parallel(ParallelBeam::standard_3d(7, 10, 14, 1.3, 1.3)),
+        Geometry::Fan(FanBeam::standard(6, 18, 1.4, 60.0, 120.0)),
+        Geometry::Cone(cone.clone()),
+        Geometry::Cone(curved),
+        Geometry::Modular(ModularBeam::from_cone(&cone)),
+    ]
+}
+
+fn vg_for(geom: &Geometry) -> VolumeGeometry {
+    if matches!(geom, Geometry::Fan(_)) {
+        VolumeGeometry::slice2d(12, 12, 1.0)
+    } else {
+        VolumeGeometry::cube(10, 1.0)
+    }
+}
+
+fn rel_l2(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let mut num = 0.0f64;
+    let mut den = 0.0f64;
+    for (&x, &y) in a.iter().zip(b) {
+        num += (x as f64 - y as f64).powi(2);
+        den += (y as f64).powi(2);
+    }
+    (num / den.max(1e-30)).sqrt()
+}
+
+const EXECUTABLE: [BackendKind; 2] = [BackendKind::Scalar, BackendKind::Simd];
+
+/// Re-associating lane partials perturbs sums by a few ulps per term;
+/// 1e-5 relative l2 is ~100× looser than observed and ~100× tighter
+/// than any discretization difference would produce.
+const CROSS_BACKEND_TOL: f64 = 1e-5;
+
+#[test]
+fn backends_agree_within_tolerance_all_models_all_geometries() {
+    let mut rng = Rng::new(701);
+    for geom in all_geometries() {
+        let vg = vg_for(&geom);
+        for model in [Model::Siddon, Model::Joseph, Model::SF] {
+            let scalar = Projector::new(geom.clone(), vg.clone(), model)
+                .with_threads(3)
+                .with_backend(BackendKind::Scalar);
+            let simd = Projector::new(geom.clone(), vg.clone(), model)
+                .with_threads(3)
+                .with_backend(BackendKind::Simd);
+            let mut x = scalar.new_vol();
+            rng.fill_uniform(&mut x.data, 0.0, 1.0);
+            let fwd_gap = rel_l2(&simd.forward(&x).data, &scalar.forward(&x).data);
+            assert!(
+                fwd_gap <= CROSS_BACKEND_TOL,
+                "{}/{}: forward cross-backend gap {fwd_gap}",
+                model.name(),
+                scalar.geom.kind()
+            );
+            let mut y = scalar.new_sino();
+            rng.fill_uniform(&mut y.data, -1.0, 1.0);
+            let back_gap = rel_l2(&simd.back(&y).data, &scalar.back(&y).data);
+            assert!(
+                back_gap <= CROSS_BACKEND_TOL,
+                "{}/{}: back cross-backend gap {back_gap}",
+                model.name(),
+                scalar.geom.kind()
+            );
+        }
+    }
+}
+
+#[test]
+fn each_backend_is_bit_identical_across_thread_counts() {
+    let mut rng = Rng::new(702);
+    for geom in all_geometries() {
+        let vg = vg_for(&geom);
+        for model in [Model::Siddon, Model::Joseph, Model::SF] {
+            for kind in EXECUTABLE {
+                let single = Projector::new(geom.clone(), vg.clone(), model)
+                    .with_threads(1)
+                    .with_backend(kind);
+                let multi = Projector::new(geom.clone(), vg.clone(), model)
+                    .with_threads(3)
+                    .with_backend(kind);
+                let mut x = single.new_vol();
+                rng.fill_uniform(&mut x.data, 0.0, 1.0);
+                assert_eq!(
+                    single.forward(&x).data,
+                    multi.forward(&x).data,
+                    "{}/{}/{}: forward depends on thread count",
+                    kind.name(),
+                    model.name(),
+                    single.geom.kind()
+                );
+                let mut y = single.new_sino();
+                rng.fill_uniform(&mut y.data, -1.0, 1.0);
+                assert_eq!(
+                    single.back(&y).data,
+                    multi.back(&y).data,
+                    "{}/{}/{}: back depends on thread count",
+                    kind.name(),
+                    model.name(),
+                    single.geom.kind()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn adjoint_identity_holds_per_backend() {
+    let mut rng = Rng::new(703);
+    for geom in all_geometries() {
+        let vg = vg_for(&geom);
+        for model in [Model::Siddon, Model::Joseph, Model::SF] {
+            for kind in EXECUTABLE {
+                let p = Projector::new(geom.clone(), vg.clone(), model)
+                    .with_threads(2)
+                    .with_backend(kind);
+                let mut x = p.new_vol();
+                let mut y = p.new_sino();
+                rng.fill_uniform(&mut x.data, -1.0, 1.0);
+                rng.fill_uniform(&mut y.data, -1.0, 1.0);
+                let ax = p.forward(&x);
+                let aty = p.back(&y);
+                let lhs = dot_f64(&ax.data, &y.data);
+                let rhs = dot_f64(&x.data, &aty.data);
+                let gap = (lhs - rhs).abs() / lhs.abs().max(rhs.abs()).max(1e-12);
+                assert!(
+                    gap < 5e-5,
+                    "{}/{}/{}: adjoint gap {gap}",
+                    kind.name(),
+                    model.name(),
+                    p.geom.kind()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn planned_and_direct_paths_agree_per_backend() {
+    // the plan/execute-split invariant (PR 1) must survive backend
+    // selection: a lowered plan and a direct projector on the same tier
+    // produce the same bits
+    let mut rng = Rng::new(704);
+    for geom in all_geometries() {
+        let vg = vg_for(&geom);
+        for kind in EXECUTABLE {
+            let p = Projector::new(geom.clone(), vg.clone(), Model::SF)
+                .with_threads(3)
+                .with_backend(kind);
+            let plan = p.plan();
+            assert_eq!(plan.backend(), kind, "plan must snapshot its projector's backend");
+            let mut x = p.new_vol();
+            rng.fill_uniform(&mut x.data, 0.0, 1.0);
+            let direct = p.forward(&x);
+            let mut planned = p.new_sino();
+            p.forward_with_plan(&plan, &x, &mut planned);
+            assert_eq!(
+                direct.data,
+                planned.data,
+                "{}/{}: planned forward differs from direct",
+                kind.name(),
+                p.geom.kind()
+            );
+        }
+    }
+}
+
+#[test]
+fn lowering_rebinds_a_plan_without_replanning_semantics() {
+    let vg = VolumeGeometry::cube(8, 1.0);
+    let g = Geometry::Cone(ConeBeam::standard(5, 6, 10, 1.5, 1.5, 50.0, 100.0));
+    let p = Projector::new(g.clone(), vg.clone(), Model::SF)
+        .with_threads(2)
+        .with_backend(BackendKind::Scalar);
+    let plan = p.plan();
+    let lowered = plan.lower(BackendKind::Simd).unwrap();
+    assert_eq!(lowered.backend(), BackendKind::Simd);
+    assert_eq!(plan.backend(), BackendKind::Scalar, "lowering must not mutate the source plan");
+    // a lowered plan equals a plan built natively on the target tier
+    let native = Projector::new(g, vg, Model::SF)
+        .with_threads(2)
+        .with_backend(BackendKind::Simd)
+        .plan();
+    let mut x = p.new_vol();
+    Rng::new(705).fill_uniform(&mut x.data, 0.0, 1.0);
+    assert_eq!(lowered.forward(&x).data, native.forward(&x).data);
+    // the non-executing slot cannot be lowered to
+    let e = plan.lower(BackendKind::Pjrt).unwrap_err();
+    assert!(matches!(e, LeapError::Unsupported(ref m) if m.contains("pjrt")), "{e:?}");
+}
+
+#[test]
+fn builder_validates_backend_selection_end_to_end() {
+    let cfg = ScanConfig {
+        geometry: Geometry::Parallel(ParallelBeam::standard_2d(8, 16, 1.0)),
+        volume: VolumeGeometry::slice2d(12, 12, 1.0),
+    };
+    for kind in EXECUTABLE {
+        let scan =
+            ScanBuilder::from_config(&cfg).model(Model::SF).threads(2).backend(kind).build().unwrap();
+        assert_eq!(scan.backend(), kind);
+    }
+    // unknown names are a typed InvalidArgument at build time
+    let e = ScanBuilder::from_config(&cfg).backend_str("warp").build().unwrap_err();
+    assert!(matches!(e, LeapError::InvalidArgument(ref m) if m.contains("warp")), "{e:?}");
+    // the pjrt slot is registered but capability-gated
+    for attempt in [
+        ScanBuilder::from_config(&cfg).backend(BackendKind::Pjrt).build(),
+        ScanBuilder::from_config(&cfg).backend_str("pjrt").build(),
+    ] {
+        let e = attempt.unwrap_err();
+        assert!(matches!(e, LeapError::Unsupported(ref m) if m.contains("pjrt")), "{e:?}");
+    }
+}
+
+#[test]
+fn solvers_agree_across_backends_within_tolerance() {
+    // end-to-end: an iterative reconstruction run entirely on the SIMD
+    // tier lands within tolerance of the scalar tier (errors do not
+    // amplify across iterations — the operators stay matched per tier)
+    let cfg = ScanConfig {
+        geometry: Geometry::Parallel(ParallelBeam::standard_2d(16, 36, 1.0)),
+        volume: VolumeGeometry::slice2d(24, 24, 1.0),
+    };
+    let truth = leap::phantom::shepp::shepp_logan_2d(10.0, 0.02).rasterize(&cfg.volume, 2);
+    let mut recon = Vec::new();
+    for kind in EXECUTABLE {
+        let scan = ScanBuilder::from_config(&cfg)
+            .model(Model::SF)
+            .threads(2)
+            .backend(kind)
+            .build()
+            .unwrap();
+        let sino = scan.forward(&truth.data).unwrap();
+        let solver = leap::Solver::Sirt { iterations: 8, lambda: 1.0, nonneg: true };
+        recon.push(scan.solve(solver, &sino).unwrap());
+    }
+    let gap = rel_l2(&recon[1], &recon[0]);
+    assert!(gap <= CROSS_BACKEND_TOL, "SIRT cross-backend gap {gap}");
+}
