@@ -9,7 +9,14 @@
 //!
 //! ```bash
 //! cargo run --release --example serve_client -- --clients 4 --requests 8
+//! # 8 simultaneous v2 sessions multiplexed on the one event loop:
+//! cargo run --release --example serve_client -- --clients 2 --requests 2 --sessions 8
 //! ```
+//!
+//! `--sessions N` (default `--clients`) sets how many concurrent
+//! protocol-v2 sessions run at once, each on its own TCP connection —
+//! all multiplexed by the server's single event-loop thread onto the
+//! shared worker pool.
 
 use std::sync::Arc;
 
@@ -28,6 +35,7 @@ fn main() {
     let n = args.usize_or("n", 64);
     let clients = args.usize_or("clients", 4);
     let requests = args.usize_or("requests", 8);
+    let sessions = args.usize_or("sessions", clients);
 
     // backends: artifacts (if built) + native (v1 ops) + sessions (v2)
     let mut backends: Vec<Arc<dyn Executor>> = Vec::new();
@@ -68,11 +76,13 @@ fn main() {
     let reference = Arc::new(scan.forward(&payload).unwrap());
 
     // ── protocol v2: one session handshake, then raw tensor frames ──
+    // `sessions` concurrent sessions, each on its own connection, all
+    // in flight against the one event loop at the same time
     let t0 = std::time::Instant::now();
     let addr = server.addr;
     let cfg = scan.config();
     let mut handles = Vec::new();
-    for c in 0..clients {
+    for c in 0..sessions {
         let payload = payload.clone();
         let reference = reference.clone();
         let cfg = cfg.clone();
@@ -120,12 +130,12 @@ fn main() {
     let mut v1: Vec<f64> = handles.into_iter().flat_map(|h| h.join().unwrap()).collect();
     let v1_wall = t0.elapsed().as_secs_f64();
 
-    let report = |name: &str, all: &mut Vec<f64>, wall: f64| {
+    let report = |name: &str, conns: usize, all: &mut Vec<f64>, wall: f64| {
         all.sort_by(|a, b| a.partial_cmp(b).unwrap());
         let total = all.len();
         let q = |p: f64| all[((total as f64 - 1.0) * p) as usize];
         println!(
-            "{name}: {total} requests over {clients} clients in {wall:.2}s → {:.1} req/s \
+            "{name}: {total} requests over {conns} connections in {wall:.2}s → {:.1} req/s \
              (p50 {:.1} ms  p90 {:.1} ms  p99 {:.1} ms)",
             total as f64 / wall,
             q(0.5) * 1e3,
@@ -133,8 +143,8 @@ fn main() {
             q(0.99) * 1e3
         );
     };
-    report("v2 binary sessions ", &mut v2, v2_wall);
-    report("v1 json per-request", &mut v1, v1_wall);
+    report("v2 binary sessions ", sessions, &mut v2, v2_wall);
+    report("v1 json per-request", clients, &mut v1, v1_wall);
     println!("both protocols bit-identical to the in-process plan path ✓");
     println!("v2 speedup over v1: {:.2}×", v1_wall / v2_wall);
 

@@ -4,14 +4,15 @@
 //!
 //! Run: `cargo bench --bench recon`
 //!
-//! Every measurement is appended as a JSON line to `BENCH_PR6.json` at
+//! Every measurement is appended as a JSON line to `BENCH_PR7.json` at
 //! the repo root (the perf trajectory file; earlier PRs' history lives
-//! in `BENCH_PR2.json`–`BENCH_PR5.json`) in addition to
+//! in `BENCH_PR2.json`–`BENCH_PR6.json`) in addition to
 //! `target/bench_results.jsonl`. Set `LEAP_BENCH_SMOKE=1` to run one
 //! iteration of everything (the CI smoke step — including the
-//! batched-coordinator, wire-protocol, tape-gradient and
-//! scalar-vs-SIMD backend cases; the backend sweep shrinks to one
-//! scalar row + one SIMD row in smoke mode).
+//! batched-coordinator, wire-protocol, tape-gradient,
+//! scalar-vs-SIMD backend, view-sharded operator and concurrent-session
+//! serving cases; the backend sweep shrinks to one scalar row + one
+//! SIMD row, and the session sweep to 1/8 sessions, in smoke mode).
 
 use std::sync::Arc;
 use std::time::Duration;
@@ -35,7 +36,7 @@ use leap::{ScanBuilder, Sino, Vol3};
 
 /// Where the perf trajectory lives: the repo root, independent of the
 /// working directory cargo gives the bench binary.
-const TRAJECTORY: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_PR6.json");
+const TRAJECTORY: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_PR7.json");
 
 /// The pre-`ProjectionPlan` SIRT loop: every `A`/`Aᵀ` application goes
 /// through the direct path, re-deriving per-view geometry (trig, SF
@@ -677,6 +678,156 @@ fn main() {
     drop(grad_server);
     all.push(m_tape_local);
     all.push(m_tape_served);
+
+    // ── view-sharded operator execution ──
+    // One LinearOp application split into S sequential pool regions —
+    // by view-subsets (forward) / volume-slab-subsets (back). Identical
+    // bits at every shard count (asserted per application below and
+    // property-tested in ops::tests); the finer regions interleave
+    // fairly in the pool FIFO, which is what buys the serving plane its
+    // tail-latency win when many sessions share the workers. This row
+    // measures what the finer granularity costs on a solo application.
+    {
+        use leap::ops::ViewSharded;
+        let plan = Arc::new(ps.plan());
+        let mut xin = vec![0.0f32; vgs.num_voxels()];
+        leap::util::rng::Rng::new(91).fill_uniform(&mut xin, 0.0, 1.0);
+        let base = ViewSharded::new(plan.clone(), 1);
+        let ref_fwd = base.apply(&xin);
+        let ref_back = base.adjoint(&ref_fwd);
+        let mut unsharded_mean = f64::NAN;
+        for shards in [1usize, 4] {
+            let op = ViewSharded::new(plan.clone(), shards);
+            assert_eq!(op.apply(&xin), ref_fwd, "sharded forward must be bit-identical");
+            assert_eq!(op.adjoint(&ref_fwd), ref_back, "sharded back must be bit-identical");
+            let mut m = bench.run(&format!("op fp+bp 96²/120 sf view-sharded ×{shards}"), || {
+                let y = op.apply(&xin);
+                leap::bench_harness::black_box(op.adjoint(&y))
+            });
+            if shards == 1 {
+                unsharded_mean = m.mean_s;
+            } else {
+                let overhead = m.mean_s / unsharded_mean;
+                m.notes.push(("sharded_over_unsharded".into(), overhead));
+                println!(
+                    "    → {shards}-way sharding costs {overhead:.2}× a solo application \
+                     (the price of interleavable regions)"
+                );
+            }
+            m.notes.push(("shards".into(), shards as f64));
+            m.print();
+            all.push(m);
+        }
+    }
+
+    // ── async serving plane: concurrent v2 sessions on one event loop ──
+    // S concurrent sessions (each its own TCP connection) fire R forward
+    // requests each at one server. The event loop multiplexes every
+    // connection on a single poll thread and the requests share the
+    // worker pool, so OS threads stay O(workers + 1) even at 512
+    // sessions. Every reply is asserted bit-identical to the in-process
+    // plan path. Headline mean_s is the batch wall time; the quantile
+    // columns (and the p50/p99 notes) are client-observed per-request
+    // latencies across all sessions.
+    {
+        let conc_vg = VolumeGeometry::slice2d(48, 48, 1.0);
+        let conc_g = ParallelBeam::standard_2d(48, 72, 1.0);
+        let conc_p =
+            Projector::new(Geometry::Parallel(conc_g.clone()), conc_vg.clone(), Model::SF);
+        let conc_cfg =
+            ScanConfig { geometry: Geometry::Parallel(conc_g.clone()), volume: conc_vg.clone() };
+        let conc_vol = vec![0.02f32; conc_vg.num_voxels()];
+        let conc_ref = {
+            let plan = conc_p.plan();
+            let mut vol = conc_p.new_vol();
+            vol.data.copy_from_slice(&conc_vol);
+            plan.forward(&vol).data
+        };
+        let conc_backends: Vec<Arc<dyn Executor>> = vec![
+            Arc::new(NativeExecutor::new(conc_p.clone())),
+            Arc::new(SessionExecutor::new()),
+        ];
+        let conc_coord = Arc::new(
+            Coordinator::new(
+                Arc::new(Router::new(conc_backends)),
+                BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(1) },
+                1 << 30,
+                4,
+            )
+            // roomy queue: this sweep measures multiplexing throughput,
+            // not shedding (the shed path has its own server tests)
+            .with_max_pending(4096),
+        );
+        let conc_server = Server::start("127.0.0.1:0", conc_coord).expect("bench server");
+        let session_counts: &[usize] = if smoke { &[1, 8] } else { &[1, 8, 64, 512] };
+        let reqs_per_session = if smoke { 2 } else { 4 };
+        for &sessions in session_counts {
+            let threads = sessions.min(32);
+            let t0 = std::time::Instant::now();
+            let mut handles = Vec::new();
+            for t in 0..threads {
+                let addr = conc_server.addr;
+                let cfg = conc_cfg.clone();
+                let vol = conc_vol.clone();
+                let reference = conc_ref.clone();
+                // distribute sessions across client threads; each
+                // thread runs its share of sessions back-to-back
+                let own = sessions / threads + usize::from(t < sessions % threads);
+                handles.push(std::thread::spawn(move || {
+                    let mut lat = Vec::with_capacity(own * reqs_per_session);
+                    for _ in 0..own {
+                        let mut client = BinaryClient::connect(&addr).expect("conc client");
+                        let session =
+                            client.open_session(&cfg, Model::SF, None).expect("conc session");
+                        for _ in 0..reqs_per_session {
+                            let r0 = std::time::Instant::now();
+                            let served = client.forward(session, &vol).expect("conc reply");
+                            lat.push(r0.elapsed().as_secs_f64());
+                            assert_eq!(
+                                served, reference,
+                                "concurrent sessions must stay bit-identical"
+                            );
+                        }
+                        client.close_session(session).expect("conc close");
+                    }
+                    lat
+                }));
+            }
+            let mut lat: Vec<f64> = handles
+                .into_iter()
+                .flat_map(|h| h.join().expect("conc client thread"))
+                .collect();
+            let wall = t0.elapsed().as_secs_f64();
+            lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let n = lat.len();
+            assert_eq!(n, sessions * reqs_per_session);
+            let q = |p: f64| lat[((n as f64 - 1.0) * p).round() as usize];
+            let total_reqs = n as f64;
+            let mut m = leap::bench_harness::Measurement {
+                name: format!("serve v2 ×{sessions} sessions ({reqs_per_session} fp each)"),
+                iters: n,
+                mean_s: wall,
+                median_s: q(0.5),
+                p10_s: q(0.1),
+                p90_s: q(0.9),
+                notes: vec![],
+            };
+            m.notes.push(("req_per_s".into(), total_reqs / wall));
+            m.notes.push(("p50_latency_s".into(), q(0.5)));
+            m.notes.push(("p99_latency_s".into(), q(0.99)));
+            m.notes.push(("sessions".into(), sessions as f64));
+            m.notes.push(("client_threads".into(), threads as f64));
+            m.print();
+            println!(
+                "    → {sessions} concurrent sessions: {:.0} req/s, p50 {:.2} ms, p99 {:.2} ms",
+                total_reqs / wall,
+                q(0.5) * 1e3,
+                q(0.99) * 1e3
+            );
+            all.push(m);
+        }
+        drop(conc_server);
+    }
 
     append_results(&all);
     append_results_to(TRAJECTORY, &all);

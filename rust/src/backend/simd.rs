@@ -105,11 +105,28 @@ pub(crate) fn forward_parallel_simd(
     sino: &mut Sino,
     threads: usize,
 ) {
+    forward_parallel_simd_range(vg, g, plans, vol, sino, threads, 0, g.angles.len())
+}
+
+/// [`forward_parallel_simd`] restricted to the view range `v0..v1` — the
+/// same stitching contract as `sf::forward_parallel_range` (views own
+/// disjoint slabs; staging does not change the per-cell addition order).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn forward_parallel_simd_range(
+    vg: &VolumeGeometry,
+    g: &ParallelBeam,
+    plans: Option<&sf::ParallelPlanSet>,
+    vol: &Vol3,
+    sino: &mut Sino,
+    threads: usize,
+    v0: usize,
+    v1: usize,
+) {
     assert_eq!(sino.nviews, g.angles.len());
+    assert!(v0 <= v1 && v1 <= g.angles.len(), "view range {v0}..{v1}");
     let nrows = sino.nrows;
     let ncols = sino.ncols;
-    sino.fill(0.0);
-    let nviews = g.angles.len();
+    sino.data[v0 * nrows * ncols..v1 * nrows * ncols].fill(0.0);
     let local_rows;
     let rows: &sf::ParallelRowWeights = match plans {
         Some(set) => &set.rows,
@@ -120,7 +137,8 @@ pub(crate) fn forward_parallel_simd(
     };
     let slab = nrows * ncols;
     let out = ParWriter::new(&mut sino.data);
-    parallel_items_with(nviews, threads, Vec::new, |stage: &mut Vec<f32>, view| {
+    parallel_items_with(v1 - v0, threads, Vec::new, |stage: &mut Vec<f32>, r| {
+        let view = v0 + r;
         stage.clear();
         stage.resize(slab, 0.0);
         let local;
@@ -150,9 +168,27 @@ pub(crate) fn back_parallel_simd(
     vol: &mut Vol3,
     threads: usize,
 ) {
+    back_parallel_simd_range(vg, g, plans, sino, vol, threads, 0, vg.nz * vg.ny)
+}
+
+/// [`back_parallel_simd`] restricted to the voxel-row range `u0..u1` —
+/// the same stitching contract as `sf::back_parallel_range` (every owned
+/// voxel replays all views in global order).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn back_parallel_simd_range(
+    vg: &VolumeGeometry,
+    g: &ParallelBeam,
+    plans: Option<&sf::ParallelPlanSet>,
+    sino: &Sino,
+    vol: &mut Vol3,
+    threads: usize,
+    u0: usize,
+    u1: usize,
+) {
     let nunits = vg.nz * vg.ny;
+    assert!(u0 <= u1 && u1 <= nunits, "unit range {u0}..{u1}");
     let ncols = sino.ncols;
-    vol.fill(0.0);
+    vol.data[u0 * vg.nx..u1 * vg.nx].fill(0.0);
     let local_set;
     let set: &sf::ParallelPlanSet = match plans {
         Some(s) => s,
@@ -163,7 +199,8 @@ pub(crate) fn back_parallel_simd(
     };
     let nx = vg.nx;
     let out = ParWriter::new(&mut vol.data);
-    parallel_chunks(nunits, threads, |m0, m1| {
+    parallel_chunks(u1 - u0, threads, |a, b| {
+        let (m0, m1) = (u0 + a, u0 + b);
         let base = m0 * nx;
         let mut stage = vec![0.0f32; (m1 - m0) * nx];
         for (view, vp) in set.views.iter().enumerate() {
@@ -186,12 +223,28 @@ pub(crate) fn forward_fan_simd(
     sino: &mut Sino,
     threads: usize,
 ) {
+    forward_fan_simd_range(vg, g, plans, vol, sino, threads, 0, g.angles.len())
+}
+
+/// [`forward_fan_simd`] restricted to the view range `v0..v1`.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn forward_fan_simd_range(
+    vg: &VolumeGeometry,
+    g: &FanBeam,
+    plans: Option<&[sf::FanViewPlan]>,
+    vol: &Vol3,
+    sino: &mut Sino,
+    threads: usize,
+    v0: usize,
+    v1: usize,
+) {
     assert_eq!(vg.nz, 1, "fan-beam SF requires a 2-D volume");
+    assert!(v0 <= v1 && v1 <= g.angles.len(), "view range {v0}..{v1}");
     let ncols = sino.ncols;
-    sino.fill(0.0);
-    let nviews = g.angles.len();
+    sino.data[v0 * ncols..v1 * ncols].fill(0.0);
     let out = ParWriter::new(&mut sino.data);
-    parallel_items_with(nviews, threads, Vec::new, |stage: &mut Vec<f32>, view| {
+    parallel_items_with(v1 - v0, threads, Vec::new, |stage: &mut Vec<f32>, r| {
+        let view = v0 + r;
         stage.clear();
         stage.resize(ncols, 0.0);
         let vp = match plans {
@@ -215,9 +268,25 @@ pub(crate) fn back_fan_simd(
     vol: &mut Vol3,
     threads: usize,
 ) {
+    back_fan_simd_range(vg, g, plans, sino, vol, threads, 0, vg.ny)
+}
+
+/// [`back_fan_simd`] restricted to the voxel-row range `u0..u1`.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn back_fan_simd_range(
+    vg: &VolumeGeometry,
+    g: &FanBeam,
+    plans: Option<&[sf::FanViewPlan]>,
+    sino: &Sino,
+    vol: &mut Vol3,
+    threads: usize,
+    u0: usize,
+    u1: usize,
+) {
     assert_eq!(vg.nz, 1);
+    assert!(u0 <= u1 && u1 <= vg.ny, "unit range {u0}..{u1}");
     let nviews = g.angles.len();
-    vol.fill(0.0);
+    vol.data[u0 * vg.nx..u1 * vg.nx].fill(0.0);
     let local;
     let views: &[sf::FanViewPlan] = match plans {
         Some(ps) => ps,
@@ -228,7 +297,8 @@ pub(crate) fn back_fan_simd(
     };
     let nx = vg.nx;
     let out = ParWriter::new(&mut vol.data);
-    parallel_chunks(vg.ny, threads, |j0, j1| {
+    parallel_chunks(u1 - u0, threads, |a, b| {
+        let (j0, j1) = (u0 + a, u0 + b);
         let base = j0 * nx;
         let mut stage = vec![0.0f32; (j1 - j0) * nx];
         for (view, vp) in views.iter().enumerate() {
@@ -253,17 +323,33 @@ pub(crate) fn forward_cone_simd(
     sino: &mut Sino,
     threads: usize,
 ) {
+    forward_cone_simd_range(vg, g, plans, vol, sino, threads, 0, g.angles.len())
+}
+
+/// [`forward_cone_simd`] restricted to the view range `v0..v1`.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn forward_cone_simd_range(
+    vg: &VolumeGeometry,
+    g: &ConeBeam,
+    plans: Option<&[sf::ConeViewPlan]>,
+    vol: &Vol3,
+    sino: &mut Sino,
+    threads: usize,
+    v0: usize,
+    v1: usize,
+) {
+    assert!(v0 <= v1 && v1 <= g.angles.len(), "view range {v0}..{v1}");
     let nrows = sino.nrows;
     let ncols = sino.ncols;
-    sino.fill(0.0);
-    let nviews = g.angles.len();
+    sino.data[v0 * nrows * ncols..v1 * nrows * ncols].fill(0.0);
     let slab = nrows * ncols;
     let out = ParWriter::new(&mut sino.data);
     parallel_items_with(
-        nviews,
+        v1 - v0,
         threads,
         || (sf::ConeViewPlan::empty(), Vec::new()),
-        |scratch: &mut (sf::ConeViewPlan, Vec<f32>), view| {
+        |scratch: &mut (sf::ConeViewPlan, Vec<f32>), r| {
+            let view = v0 + r;
             let (plan_scratch, stage) = scratch;
             stage.clear();
             stage.resize(slab, 0.0);
@@ -297,15 +383,36 @@ pub(crate) fn back_cone_simd(
     vol: &mut Vol3,
     threads: usize,
 ) {
+    back_cone_simd_range(vg, g, plans, sino, vol, threads, 0, vg.ny)
+}
+
+/// [`back_cone_simd`] restricted to the voxel-row range `u0..u1` (same
+/// per-(k, j) x-row ownership as `sf::back_cone_range`).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn back_cone_simd_range(
+    vg: &VolumeGeometry,
+    g: &ConeBeam,
+    plans: Option<&[sf::ConeViewPlan]>,
+    sino: &Sino,
+    vol: &mut Vol3,
+    threads: usize,
+    u0: usize,
+    u1: usize,
+) {
     let nviews = g.angles.len();
     let ncols = sino.ncols;
     let ny = vg.ny;
-    vol.fill(0.0);
+    assert!(u0 <= u1 && u1 <= ny, "unit range {u0}..{u1}");
+    let plane = ny * vg.nx;
+    for k in 0..vg.nz {
+        vol.data[k * plane + u0 * vg.nx..k * plane + u1 * vg.nx].fill(0.0);
+    }
     if nviews == 0 {
         return;
     }
     let out = ParWriter::new(&mut vol.data);
-    parallel_items_with(ny, threads, sf::ConeViewPlan::empty, |scratch, j| {
+    parallel_items_with(u1 - u0, threads, sf::ConeViewPlan::empty, |scratch, r| {
+        let j = u0 + r;
         for view in 0..nviews {
             let (vp, j_off): (&sf::ConeViewPlan, usize) = match plans {
                 Some(ps) => (&ps[view], 0),

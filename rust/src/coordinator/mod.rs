@@ -37,7 +37,7 @@ pub mod telemetry;
 pub mod wire;
 
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
@@ -401,6 +401,10 @@ struct Inner {
     pending: Mutex<HashMap<u64, Job>>,
     shutdown: AtomicBool,
     next_ticket: AtomicU64,
+    /// Admission cap on the pending queue: [`Coordinator::try_submit`]
+    /// sheds (typed `BudgetExceeded`) once this many requests are
+    /// already queued. `usize::MAX` = unbounded (the `submit` default).
+    max_pending: AtomicUsize,
 }
 
 /// The coordinator: owns the queue and `workers` executor threads.
@@ -420,6 +424,7 @@ impl Coordinator {
             pending: Mutex::new(HashMap::new()),
             shutdown: AtomicBool::new(false),
             next_ticket: AtomicU64::new(1),
+            max_pending: AtomicUsize::new(usize::MAX),
         });
         let handles = (0..workers.max(1))
             .map(|_| {
@@ -428,6 +433,40 @@ impl Coordinator {
             })
             .collect();
         Coordinator { inner, handles }
+    }
+
+    /// Bound the pending queue: [`Self::try_submit`] sheds once `n`
+    /// requests are already queued. `submit`/`call` stay unbounded
+    /// (in-process callers that prefer backpressure-by-blocking).
+    pub fn with_max_pending(self, n: usize) -> Coordinator {
+        self.inner.max_pending.store(n.max(1), Ordering::Relaxed);
+        self
+    }
+
+    /// The configured pending-queue admission cap (`usize::MAX` when
+    /// unbounded).
+    pub fn max_pending(&self) -> usize {
+        self.inner.max_pending.load(Ordering::Relaxed)
+    }
+
+    /// Admission-controlled submit: sheds with a typed
+    /// [`LeapError::BudgetExceeded`] when the pending queue is at
+    /// [`Self::max_pending`], instead of queueing unboundedly. This is
+    /// the serving plane's entry point — a shed request never reaches a
+    /// worker, costs O(1), and is counted per-op in telemetry so
+    /// `__stats` exposes shed rates next to p99 latency. The depth check
+    /// and the enqueue are not atomic across callers; a burst may
+    /// overshoot the cap by the number of concurrent submitters, which
+    /// admission control tolerates (the bound is a scheduling target,
+    /// not a safety invariant — memory safety comes from `budget.rs`).
+    pub fn try_submit(&self, req: Request) -> Result<Receiver<Response>, LeapError> {
+        let cap = self.inner.max_pending.load(Ordering::Relaxed);
+        let depth = self.inner.batcher.lock().unwrap().len();
+        if depth >= cap {
+            self.inner.telemetry.record_shed(&req.op.label());
+            return Err(LeapError::BudgetExceeded { needed: depth + 1, cap });
+        }
+        Ok(self.submit(req))
     }
 
     /// Submit a request; the response arrives on the returned channel.
@@ -832,7 +871,7 @@ mod tests {
         use crate::geometry::{Geometry, ParallelBeam, VolumeGeometry};
         use crate::geometry::config::ScanConfig;
         let session_exec = Arc::new(SessionExecutor::new());
-        let registry = session_exec.registry();
+        let registry = session_exec.registry_arc();
         let router = Router::new(vec![Arc::new(MockExecutor) as Arc<dyn Executor>, session_exec]);
         let cfg = ScanConfig {
             geometry: Geometry::Parallel(ParallelBeam::standard_2d(6, 10, 1.0)),
@@ -849,6 +888,39 @@ mod tests {
         let e = router.execute(&Op::Artifact("warp".into()), &[&vol]).unwrap_err();
         assert!(matches!(e, LeapError::UnknownOp(_)));
         registry.close(id);
+    }
+
+    #[test]
+    fn try_submit_sheds_at_the_pending_cap_and_recovers() {
+        let c = Coordinator::new(Arc::new(MockExecutor), BatchPolicy::default(), 1 << 20, 1)
+            .with_max_pending(2);
+        assert_eq!(c.max_pending(), 2);
+        // saturate: one slow request occupies the worker, then fill the
+        // pending queue past the cap — later try_submits must shed with
+        // the typed admission error, not block or queue
+        let mut live = Vec::new();
+        let mut shed = 0usize;
+        for i in 0..50u64 {
+            match c.try_submit(Request::new(i, "slow", vec![vec![i as f32]])) {
+                Ok(rx) => live.push((i, rx)),
+                Err(e) => {
+                    assert!(matches!(e, LeapError::BudgetExceeded { .. }), "{e:?}");
+                    shed += 1;
+                }
+            }
+        }
+        assert!(shed > 0, "cap 2 with 50 fast submits must shed some");
+        // every admitted request still completes normally
+        for (i, rx) in live {
+            let r = rx.recv_timeout(Duration::from_secs(30)).expect("admitted response");
+            assert_eq!(r.id, i);
+            assert!(r.ok(), "{i}: {:?}", r.error);
+        }
+        // drained: admission reopens
+        let rx = c.try_submit(Request::new(99, "echo", vec![vec![1.0]])).expect("recovered");
+        assert!(rx.recv().unwrap().ok());
+        // and the sheds were counted per-op
+        assert_eq!(c.telemetry().snapshot()["slow"].shed as usize, shed);
     }
 
     #[test]

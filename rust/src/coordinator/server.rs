@@ -1,4 +1,5 @@
-//! TCP server speaking both wire protocols on one port.
+//! Async multiplexed TCP serving plane speaking both wire protocols on
+//! one port.
 //!
 //! **v2 (preferred)** — length-prefixed binary frames with raw
 //! little-endian f32 payloads ([`super::wire`], spec in
@@ -23,52 +24,119 @@
 //! opens a v2 binary session. Sessions opened over a v2 connection are
 //! closed when that connection drops.
 //!
-//! Built on std::net + threads (the vendored crate set has no tokio; the
-//! architecture is identical: accept loop → per-connection reader →
-//! shared coordinator → responses written back on the same socket).
+//! ## Architecture: one event loop, no thread per connection
+//!
+//! All connections are **nonblocking** sockets multiplexed on a single
+//! readiness-polling thread ([`crate::util::netpoll`] — `poll(2)`
+//! without a dependency, mirroring how [`crate::util::pool`] hand-rolls
+//! its workers instead of pulling in tokio). Each connection is a small
+//! state machine: a read buffer reassembled incrementally (v2 frames
+//! via [`wire::decode_frame_bytes`], v1 lines by newline scan), a write
+//! buffer, and a FIFO of reply *tickets*. Every inbound request pushes
+//! exactly one ticket — either `Ready` bytes (control replies, typed
+//! shed errors) or `Waiting` on the coordinator's response channel — and
+//! the write side drains tickets strictly front-first, so replies never
+//! reorder within a connection even though many requests from many
+//! connections are in flight in the shared worker pool simultaneously.
+//! OS thread count is O(pool workers + 1), independent of connection
+//! count: hundreds of concurrent sessions cost buffers, not threads.
+//!
+//! ## Admission control and load shedding
+//!
+//! Two gates refuse work *before* it queues, each with a typed
+//! [`LeapError::BudgetExceeded`] reply (code 6) on the requester's own
+//! connection, in order, with the stream left fully in sync:
+//! * per-connection in-flight cap ([`ServerOptions::max_inflight_per_conn`])
+//!   — one greedy pipeliner cannot monopolize the pool;
+//! * coordinator pending-queue cap ([`super::Coordinator::try_submit`])
+//!   — global overload sheds instead of queueing unboundedly.
+//! Shed counts and p99 latency ride the `__stats` telemetry snapshot.
 
-use std::io::{BufRead, BufReader, Write};
+use std::collections::VecDeque;
+use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{Receiver, TryRecvError};
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use crate::api::LeapError;
 use crate::geometry::config::{geometry_to_json, volume_to_json, ScanConfig};
 use crate::projector::Model;
 use crate::tape;
 use crate::util::json::{parse, Json};
+use crate::util::netpoll::{poll_fds, raw_fd, PollFd, POLLIN, POLLOUT};
 
 use super::op::Op;
-use super::request::{request_from_frame, request_from_json, response_to_frame};
+use super::request::{
+    request_from_frame, request_from_json, response_to_frame, response_to_json, Request, Response,
+};
 use super::session::SessionRegistry;
 use super::wire::{self, Frame, FrameKind};
 use super::Coordinator;
 
-/// Per-read **inactivity** timeout applied to a connection until its
-/// first complete frame (v2) or line (v1). Without it, a peer that
-/// connects and sends zero or one bytes then stalls would pin a server
-/// thread (and its connection state) forever — the reads are blocking.
-/// Note this bounds the gap between bytes, not the whole exchange: a
-/// deliberate slow-drip sender (one byte per 9 s) can stretch its first
-/// frame out indefinitely — total-stall protection, not an absolute
-/// deadline. Once the first exchange completes the timeout is lifted:
-/// idle-but-honest clients (a training loop thinking between gradient
-/// requests) are never dropped.
+/// Deadline for a connection's **first** complete frame (v2) or line
+/// (v1), measured from accept. Without it, a peer that connects and
+/// sends zero or one bytes then stalls would pin its connection state
+/// (and an open fd) forever. Once the first exchange completes the
+/// deadline is lifted: idle-but-honest clients (a training loop
+/// thinking between gradient requests) are never dropped.
 pub const HANDSHAKE_TIMEOUT: Duration = Duration::from_secs(10);
 
-/// A running server; dropping stops accepting (existing connections finish).
+/// Default per-connection cap on requests awaiting responses (the
+/// `Waiting` tickets of one connection). Past it, further requests on
+/// that connection shed with a typed [`LeapError::BudgetExceeded`]
+/// reply delivered in order — the stream stays in sync and the client
+/// can retry after draining replies.
+pub const DEFAULT_MAX_INFLIGHT_PER_CONN: usize = 64;
+
+/// Poll timeout while any request is awaiting a worker response —
+/// short, so finished responses reach their sockets promptly.
+const BUSY_TICK: Duration = Duration::from_millis(1);
+/// Poll timeout when fully idle. Readiness still wakes the loop
+/// immediately (poll returns on the first ready fd); this only bounds
+/// how long a stop request or a handshake deadline waits.
+const IDLE_TICK: Duration = Duration::from_millis(25);
+
+/// Server tuning knobs ([`Server::start_with`]).
+#[derive(Clone)]
+pub struct ServerOptions {
+    /// First-exchange deadline (see [`HANDSHAKE_TIMEOUT`]).
+    pub handshake_timeout: Duration,
+    /// Per-connection in-flight request cap (see
+    /// [`DEFAULT_MAX_INFLIGHT_PER_CONN`]); minimum 1.
+    pub max_inflight_per_conn: usize,
+    /// Session registry this server opens sessions in. `None` = the
+    /// process-wide [`SessionRegistry::global`]. Inject a dedicated
+    /// registry (paired with a [`super::SessionExecutor::with_registry`]
+    /// backend on the same `Arc`) to isolate concurrent servers in one
+    /// process — tests especially — from each other's sessions.
+    pub registry: Option<Arc<SessionRegistry>>,
+}
+
+impl Default for ServerOptions {
+    fn default() -> ServerOptions {
+        ServerOptions {
+            handshake_timeout: HANDSHAKE_TIMEOUT,
+            max_inflight_per_conn: DEFAULT_MAX_INFLIGHT_PER_CONN,
+            registry: None,
+        }
+    }
+}
+
+/// A running server; dropping stops the event loop (in-flight replies
+/// are abandoned, open sessions of live connections unpin).
 pub struct Server {
     pub addr: std::net::SocketAddr,
     stop: Arc<AtomicBool>,
-    accept_handle: Option<std::thread::JoinHandle<()>>,
+    loop_handle: Option<std::thread::JoinHandle<()>>,
 }
 
 impl Server {
     /// Bind `addr` (e.g. "127.0.0.1:0") and serve `coordinator` until
-    /// dropped (first-exchange deadline = [`HANDSHAKE_TIMEOUT`]).
+    /// dropped, with default [`ServerOptions`].
     pub fn start(addr: &str, coordinator: Arc<Coordinator>) -> Result<Server, LeapError> {
-        Server::start_with_handshake_timeout(addr, coordinator, HANDSHAKE_TIMEOUT)
+        Server::start_with(addr, coordinator, ServerOptions::default())
     }
 
     /// [`Server::start`] with an explicit first-exchange deadline
@@ -78,248 +146,414 @@ impl Server {
         coordinator: Arc<Coordinator>,
         handshake: Duration,
     ) -> Result<Server, LeapError> {
+        Server::start_with(
+            addr,
+            coordinator,
+            ServerOptions { handshake_timeout: handshake, ..ServerOptions::default() },
+        )
+    }
+
+    /// Bind `addr` and serve `coordinator` on one event-loop thread
+    /// until dropped.
+    pub fn start_with(
+        addr: &str,
+        coordinator: Arc<Coordinator>,
+        opts: ServerOptions,
+    ) -> Result<Server, LeapError> {
         let listener = TcpListener::bind(addr)?;
         let local = listener.local_addr()?;
         listener.set_nonblocking(true)?;
+        let registry = opts.registry.clone().unwrap_or_else(SessionRegistry::global_arc);
         let stop = Arc::new(AtomicBool::new(false));
         let stop2 = stop.clone();
         let handle = std::thread::spawn(move || {
-            loop {
-                if stop2.load(Ordering::SeqCst) {
-                    return;
-                }
-                match listener.accept() {
-                    Ok((stream, _)) => {
-                        let coord = coordinator.clone();
-                        std::thread::spawn(move || {
-                            let _ = handle_conn(stream, coord, handshake);
-                        });
-                    }
-                    Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                        std::thread::sleep(std::time::Duration::from_millis(5));
-                    }
-                    Err(_) => return,
-                }
-            }
+            event_loop(listener, coordinator, registry, opts, stop2);
         });
-        Ok(Server { addr: local, stop, accept_handle: Some(handle) })
+        Ok(Server { addr: local, stop, loop_handle: Some(handle) })
     }
 }
 
 impl Drop for Server {
     fn drop(&mut self) {
         self.stop.store(true, Ordering::SeqCst);
-        if let Some(h) = self.accept_handle.take() {
+        if let Some(h) = self.loop_handle.take() {
             let _ = h.join();
         }
     }
 }
 
-/// Whether an I/O error is the read-deadline expiring. Both kinds mean
-/// the same condition and MUST both be accepted: unix sockets surface
-/// an expired `SO_RCVTIMEO` as `WouldBlock`, windows as `TimedOut`.
+/// Whether an I/O error is "not ready yet" on a nonblocking socket or
+/// an expired read deadline. Both kinds MUST be accepted: unix surfaces
+/// these as `WouldBlock`, windows read deadlines as `TimedOut`.
 /// `pub(crate)` so tests and other connection-handling code classify
-/// deadlines through this one predicate instead of re-matching kinds.
+/// them through this one predicate instead of re-matching kinds.
 pub(crate) fn is_timeout(e: &std::io::Error) -> bool {
     matches!(e.kind(), std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut)
 }
 
-fn handle_conn(
-    stream: TcpStream,
+// ---------------------------------------------------------------------------
+// the event loop
+// ---------------------------------------------------------------------------
+
+fn event_loop(
+    listener: TcpListener,
     coord: Arc<Coordinator>,
-    handshake: Duration,
-) -> Result<(), LeapError> {
-    // first-exchange deadline (cleared by the per-protocol loops after
-    // the first complete frame/line — see HANDSHAKE_TIMEOUT)
-    stream.set_read_timeout(Some(handshake))?;
-    let mut writer = stream.try_clone()?;
-    let mut reader = BufReader::new(stream);
-    // sniff the protocol from the first byte without consuming it:
-    // JSON documents open with '{' (or whitespace), v2 frames with the
-    // "LEAP" magic; anything else is not a protocol we speak
-    let first = match reader.fill_buf() {
-        Ok(buf) => match buf.first() {
-            None => return Ok(()), // closed before sending anything: clean
-            Some(&b) => b,
-        },
-        Err(e) if is_timeout(&e) => {
-            // connected, sent nothing, stalled: nothing sniffed, so no
-            // reply format is owed — just release the thread
-            return Err(LeapError::Io("handshake timed out before any byte arrived".into()));
+    registry: Arc<SessionRegistry>,
+    opts: ServerOptions,
+    stop: Arc<AtomicBool>,
+) {
+    let mut conns: Vec<Conn> = Vec::new();
+    let mut fds: Vec<PollFd> = Vec::new();
+    while !stop.load(Ordering::SeqCst) {
+        // poll set: listener first, then every connection in order
+        fds.clear();
+        fds.push(PollFd::new(raw_fd(&listener), POLLIN));
+        for c in &conns {
+            let mut ev = 0i16;
+            if !c.done_reading {
+                ev |= POLLIN;
+            }
+            if c.woff < c.wbuf.len() {
+                ev |= POLLOUT;
+            }
+            fds.push(PollFd::new(raw_fd(&c.stream), ev));
         }
-        Err(e) => return Err(e.into()),
-    };
-    if first == wire::MAGIC[0] {
-        serve_v2(reader, writer, coord)
-    } else if first == b'{' || first.is_ascii_whitespace() {
-        serve_v1(reader, writer, coord)
-    } else {
-        // unrecognized protocol: say so once, in the (text) format any
-        // probing client can read, then close — never fall into the v1
-        // loop to re-reject every subsequent line of noise
-        let e = LeapError::Protocol(format!(
-            "unrecognized protocol (first byte 0x{first:02x}; expected '{{' for JSON lines \
-             or 'L' for LEAP v2 frames)"
-        ));
-        let reply = Json::obj(vec![
-            ("error", Json::Str(e.to_string())),
-            ("code", Json::Num(e.code() as f64)),
-        ]);
-        let _ = writeln!(writer, "{reply}");
-        Err(e)
+        let busy = conns.iter().any(|c| c.waiting > 0);
+        poll_fds(&mut fds, if busy { BUSY_TICK } else { IDLE_TICK });
+
+        let polled = conns.len(); // fds[1..=polled] pairs with conns[..polled]
+
+        // accept every pending connection (new ones join the poll set —
+        // and get an immediate first service pass — below)
+        if fds[0].readable() {
+            loop {
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        if stream.set_nonblocking(true).is_err() {
+                            continue;
+                        }
+                        // small frames back-to-back: don't let Nagle
+                        // hold a reply hostage to the next one
+                        let _ = stream.set_nodelay(true);
+                        conns.push(Conn::new(stream, Instant::now() + opts.handshake_timeout));
+                    }
+                    Err(ref e) if is_timeout(e) => break,
+                    Err(_) => break,
+                }
+            }
+        }
+
+        let now = Instant::now();
+        for (i, c) in conns.iter_mut().enumerate() {
+            // freshly accepted connections (i >= polled) were not in the
+            // poll set; their sockets are nonblocking, so an optimistic
+            // read costs at most one EWOULDBLOCK
+            if i >= polled || fds[i + 1].readable() {
+                c.fill_rbuf();
+            }
+            c.process_input(&coord, &registry, &opts);
+            c.check_deadline(now);
+            c.drain_tickets();
+            c.flush();
+        }
+        conns.retain_mut(|c| {
+            if c.finished() {
+                // sessions opened over this connection close with it
+                for id in c.opened.drain(..) {
+                    registry.close(id);
+                }
+                false
+            } else {
+                true
+            }
+        });
+    }
+    // server dropped: unpin sessions of still-live connections
+    for c in &mut conns {
+        for id in c.opened.drain(..) {
+            registry.close(id);
+        }
     }
 }
 
 // ---------------------------------------------------------------------------
-// protocol v1: line-delimited JSON
+// per-connection state machine
 // ---------------------------------------------------------------------------
 
-fn serve_v1(
-    mut reader: BufReader<TcpStream>,
-    mut writer: TcpStream,
-    coord: Arc<Coordinator>,
-) -> Result<(), LeapError> {
-    let mut first_exchange = true;
-    loop {
-        let mut line = String::new();
-        match reader.read_line(&mut line) {
-            Ok(0) => return Ok(()), // clean disconnect
-            Ok(_) => {}
-            Err(e) if is_timeout(&e) => {
-                // stalled before completing the first line: reply with
-                // the typed code in the v1 format, then close
-                let err = LeapError::Io("handshake timed out mid-line".into());
-                let reply = Json::obj(vec![
-                    ("error", Json::Str(err.to_string())),
-                    ("code", Json::Num(err.code() as f64)),
-                ]);
-                let _ = writeln!(writer, "{reply}");
-                return Err(err);
+/// Wire protocol of a connection, sniffed from its first byte.
+enum Mode {
+    Sniffing,
+    V1,
+    V2,
+}
+
+/// One reply owed on a connection, in request order. The write side
+/// drains the FIFO strictly front-first: a resolved-later reply never
+/// overtakes an earlier in-flight one, and shed errors (pushed as
+/// `Ready`) hold their slot in the same order.
+enum Ticket {
+    /// Encoded reply bytes, ready to write.
+    Ready(Vec<u8>),
+    /// A request in the worker pool; `rx` resolves to its response.
+    Waiting { id: u64, rx: Receiver<Response>, v1: bool },
+}
+
+struct Conn {
+    stream: TcpStream,
+    mode: Mode,
+    /// Unconsumed inbound bytes (partial frames / lines reassemble here).
+    rbuf: Vec<u8>,
+    /// Outbound bytes not yet accepted by the kernel; `woff` marks the
+    /// written prefix.
+    wbuf: Vec<u8>,
+    woff: usize,
+    tickets: VecDeque<Ticket>,
+    /// Count of `Waiting` tickets (the per-connection in-flight gauge).
+    waiting: usize,
+    /// Sessions opened over this connection (closed when it drops).
+    opened: Vec<u64>,
+    /// First-exchange deadline; `None` once a complete frame/line arrived.
+    deadline: Option<Instant>,
+    /// Stop consuming input (peer EOF or protocol fault): flush
+    /// remaining tickets, then close.
+    done_reading: bool,
+    /// Fatal socket error: discard immediately.
+    dead: bool,
+}
+
+impl Conn {
+    fn new(stream: TcpStream, deadline: Instant) -> Conn {
+        Conn {
+            stream,
+            mode: Mode::Sniffing,
+            rbuf: Vec::new(),
+            wbuf: Vec::new(),
+            woff: 0,
+            tickets: VecDeque::new(),
+            waiting: 0,
+            opened: Vec::new(),
+            deadline: Some(deadline),
+            done_reading: false,
+            dead: false,
+        }
+    }
+
+    fn finished(&self) -> bool {
+        self.dead
+            || (self.done_reading && self.tickets.is_empty() && self.woff >= self.wbuf.len())
+    }
+
+    /// Protocol fault: whatever remains in `rbuf` is untrusted; reply
+    /// tickets already queued still flush, then the connection closes.
+    fn fail(&mut self) {
+        self.rbuf.clear();
+        self.done_reading = true;
+        self.deadline = None;
+    }
+
+    /// Nonblocking read burst: drain the kernel buffer into `rbuf`.
+    fn fill_rbuf(&mut self) {
+        if self.done_reading || self.dead {
+            return;
+        }
+        let mut chunk = [0u8; 16 << 10];
+        loop {
+            match self.stream.read(&mut chunk) {
+                Ok(0) => {
+                    self.done_reading = true; // peer EOF; leftovers handled in process_input
+                    return;
+                }
+                Ok(n) => self.rbuf.extend_from_slice(&chunk[..n]),
+                Err(ref e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(ref e) if is_timeout(e) => return,
+                Err(_) => {
+                    self.dead = true;
+                    return;
+                }
             }
-            Err(e) => return Err(e.into()),
         }
-        if first_exchange {
-            first_exchange = false;
-            // a real v1 speaker: lift the first-exchange deadline so
-            // idle-but-connected clients are not dropped
-            writer.set_read_timeout(None)?;
+    }
+
+    fn process_input(
+        &mut self,
+        coord: &Coordinator,
+        registry: &SessionRegistry,
+        opts: &ServerOptions,
+    ) {
+        if self.dead {
+            return;
         }
-        if line.trim().is_empty() {
-            continue;
+        if matches!(self.mode, Mode::Sniffing) && !self.rbuf.is_empty() {
+            // sniff the protocol from the first byte: JSON documents
+            // open with '{' (or whitespace), v2 frames with the "LEAP"
+            // magic; anything else is not a protocol we speak
+            let first = self.rbuf[0];
+            if first == wire::MAGIC[0] {
+                self.mode = Mode::V2;
+            } else if first == b'{' || first.is_ascii_whitespace() {
+                self.mode = Mode::V1;
+            } else {
+                // unrecognized protocol: say so once, in the (text)
+                // format any probing client can read, then close —
+                // never fall into the v1 loop to re-reject every
+                // subsequent line of noise
+                let e = LeapError::Protocol(format!(
+                    "unrecognized protocol (first byte 0x{first:02x}; expected '{{' for JSON \
+                     lines or 'L' for LEAP v2 frames)"
+                ));
+                self.push_line(&error_json(&e));
+                self.fail();
+                return;
+            }
         }
-        let reply = match parse(&line) {
-            Err(e) => Json::obj(vec![
+        match self.mode {
+            Mode::Sniffing => {}
+            Mode::V1 => self.process_v1(coord, registry, opts),
+            Mode::V2 => self.process_v2(coord, registry, opts),
+        }
+        if self.done_reading && !self.rbuf.is_empty() {
+            // peer EOF with a partial frame/line still buffered
+            match self.mode {
+                Mode::V2 => {
+                    let e = LeapError::Protocol("connection closed mid-frame".into());
+                    self.push_frame(&Frame::error(0, &e));
+                    self.rbuf.clear();
+                }
+                Mode::V1 => {
+                    // an unterminated final line still gets its reply
+                    let line = String::from_utf8_lossy(&self.rbuf).into_owned();
+                    self.rbuf.clear();
+                    self.deadline = None;
+                    self.handle_v1_line(&line, coord, registry, opts);
+                }
+                Mode::Sniffing => self.rbuf.clear(),
+            }
+        }
+    }
+
+    /// First-exchange deadline: expired with nothing sniffed → silent
+    /// close (no reply format is owed); expired mid-frame/mid-line →
+    /// typed code-10 reply in the sniffed format, then close.
+    fn check_deadline(&mut self, now: Instant) {
+        let Some(d) = self.deadline else { return };
+        if now < d || self.done_reading || self.dead {
+            return;
+        }
+        match self.mode {
+            Mode::Sniffing => {}
+            Mode::V1 => {
+                let e = LeapError::Io("handshake timed out mid-line".into());
+                self.push_line(&error_json(&e));
+            }
+            Mode::V2 => {
+                let e = LeapError::Io("handshake timed out mid-frame".into());
+                self.push_frame(&Frame::error(0, &e));
+            }
+        }
+        self.fail();
+    }
+
+    // ── v1: line-delimited JSON ────────────────────────────────────────
+
+    fn process_v1(
+        &mut self,
+        coord: &Coordinator,
+        registry: &SessionRegistry,
+        opts: &ServerOptions,
+    ) {
+        while let Some(pos) = self.rbuf.iter().position(|&b| b == b'\n') {
+            let line_bytes: Vec<u8> = self.rbuf.drain(..=pos).collect();
+            // a complete line from a real v1 speaker: lift the deadline
+            self.deadline = None;
+            let line = String::from_utf8_lossy(&line_bytes).into_owned();
+            if line.trim().is_empty() {
+                continue;
+            }
+            self.handle_v1_line(&line, coord, registry, opts);
+        }
+    }
+
+    fn handle_v1_line(
+        &mut self,
+        line: &str,
+        coord: &Coordinator,
+        registry: &SessionRegistry,
+        opts: &ServerOptions,
+    ) {
+        match parse(line) {
+            Err(e) => self.push_line(&Json::obj(vec![
                 ("error", Json::Str(format!("bad json: {e}"))),
                 ("code", Json::Num(crate::api::codes::PROTOCOL as f64)),
-            ]),
+            ])),
             Ok(doc) => {
                 let op = doc.get_str("op").unwrap_or("");
                 match op {
                     "__stats" => {
-                        // the projector worker pool is process-wide and thus
-                        // shared by every connection and request: expose its
-                        // size and dispatch count next to the queue depth so
-                        // operators can see compute saturation per snapshot
-                        let (pool_workers, pool_regions) = crate::util::pool::pool_stats();
-                        // the backend a sessionless scan would get, plus
-                        // the tier actually serving each open session —
-                        // operators correlating throughput need to know
-                        // which kernel tier produced it
-                        let session_backends = Json::Obj(
-                            SessionRegistry::global()
-                                .session_backends()
-                                .into_iter()
-                                .map(|(id, b)| (id.to_string(), Json::Str(b.to_string())))
-                                .collect(),
-                        );
-                        Json::obj(vec![
-                            ("id", Json::Num(doc.get_f64("id").unwrap_or(0.0))),
-                            ("stats", coord.telemetry().to_json()),
-                            ("queue_depth", Json::Num(coord.queue_depth() as f64)),
-                            ("budget_in_flight", Json::Num(coord.budget().in_flight() as f64)),
-                            ("open_sessions", Json::Num(SessionRegistry::global().len() as f64)),
-                            ("pool_workers", Json::Num(pool_workers as f64)),
-                            ("pool_regions", Json::Num(pool_regions as f64)),
-                            (
-                                "default_backend",
-                                Json::Str(crate::backend::default_kind().name().to_string()),
-                            ),
-                            ("session_backends", session_backends),
-                        ])
+                        let reply = stats_json(&doc, coord, registry);
+                        self.push_line(&reply);
                     }
-                    "__ops" => Json::obj(vec![
-                        ("id", Json::Num(doc.get_f64("id").unwrap_or(0.0))),
-                        (
-                            "ops",
-                            Json::Arr(
-                                coord
-                                    .executor()
-                                    .ops()
-                                    .into_iter()
-                                    .map(|o| Json::Str(o.label()))
-                                    .collect(),
+                    "__ops" => {
+                        let reply = Json::obj(vec![
+                            ("id", Json::Num(doc.get_f64("id").unwrap_or(0.0))),
+                            (
+                                "ops",
+                                Json::Arr(
+                                    coord
+                                        .executor()
+                                        .ops()
+                                        .into_iter()
+                                        .map(|o| Json::Str(o.label()))
+                                        .collect(),
+                                ),
                             ),
-                        ),
-                    ]),
+                        ]);
+                        self.push_line(&reply);
+                    }
                     _ => match request_from_json(&doc) {
-                        Err(e) => Json::obj(vec![
-                            ("error", Json::Str(e.to_string())),
-                            ("code", Json::Num(e.code() as f64)),
-                        ]),
-                        Ok(req) => super::request::response_to_json(&coord.call(req)),
+                        Err(e) => self.push_line(&error_json(&e)),
+                        Ok(req) => self.submit_request(req, coord, true, opts),
                     },
                 }
             }
-        };
-        writeln!(writer, "{reply}")?;
-    }
-}
-
-// ---------------------------------------------------------------------------
-// protocol v2: binary frames + sessions
-// ---------------------------------------------------------------------------
-
-fn serve_v2(
-    mut reader: BufReader<TcpStream>,
-    mut writer: TcpStream,
-    coord: Arc<Coordinator>,
-) -> Result<(), LeapError> {
-    let registry = SessionRegistry::global();
-    // sessions opened over this connection close with it (plans unpin)
-    let mut opened: Vec<u64> = Vec::new();
-    let result = serve_v2_loop(&mut reader, &mut writer, &coord, registry, &mut opened);
-    for id in opened {
-        registry.close(id);
-    }
-    result
-}
-
-fn serve_v2_loop(
-    reader: &mut BufReader<TcpStream>,
-    writer: &mut TcpStream,
-    coord: &Arc<Coordinator>,
-    registry: &'static SessionRegistry,
-    opened: &mut Vec<u64>,
-) -> Result<(), LeapError> {
-    let mut first_exchange = true;
-    loop {
-        let frame = match wire::read_frame(reader) {
-            Ok(Some(f)) => f,
-            Ok(None) => return Ok(()), // clean disconnect
-            Err(e) => {
-                // typed reject (version mismatch, malformed frame, or the
-                // first-exchange deadline expiring mid-frame), then
-                // close: framing cannot be trusted after a bad header
-                let _ = wire::write_frame(writer, &Frame::error(0, &e));
-                return Err(e);
-            }
-        };
-        if first_exchange {
-            first_exchange = false;
-            // a real v2 speaker: lift the first-exchange deadline (see
-            // HANDSHAKE_TIMEOUT)
-            writer.set_read_timeout(None)?;
         }
+    }
+
+    // ── v2: binary frames + sessions ───────────────────────────────────
+
+    fn process_v2(
+        &mut self,
+        coord: &Coordinator,
+        registry: &SessionRegistry,
+        opts: &ServerOptions,
+    ) {
+        loop {
+            match wire::decode_frame_bytes(&self.rbuf) {
+                Ok(None) => return, // incomplete: wait for more bytes
+                Ok(Some((frame, consumed))) => {
+                    self.rbuf.drain(..consumed);
+                    // a complete frame from a real v2 speaker
+                    self.deadline = None;
+                    self.handle_v2_frame(frame, coord, registry, opts);
+                }
+                Err(e) => {
+                    // typed reject (version mismatch, malformed frame),
+                    // then close: framing cannot be trusted after a bad
+                    // header
+                    self.push_frame(&Frame::error(0, &e));
+                    self.fail();
+                    return;
+                }
+            }
+        }
+    }
+
+    fn handle_v2_frame(
+        &mut self,
+        frame: Frame,
+        coord: &Coordinator,
+        registry: &SessionRegistry,
+        opts: &ServerOptions,
+    ) {
         match frame.kind {
             FrameKind::Hello => {
                 let reply = Frame::new(
@@ -331,16 +565,17 @@ fn serve_v2_loop(
                     ]),
                     Vec::new(),
                 );
-                wire::write_frame(writer, &reply)?;
+                self.push_frame(&reply);
             }
             FrameKind::OpenSession => match registry.open_from_meta(&frame.meta) {
                 Ok(id) => {
-                    opened.push(id);
+                    self.opened.push(id);
                     // the authoritative id is the frame's native u64 id
                     // field; the meta copy is a decimal string (f64 JSON
-                    // numbers round above 2^53). The reply also names the
-                    // compute backend the session resolved to, so clients
-                    // that left the knob unset learn what will serve them.
+                    // numbers round above 2^53). The reply also names
+                    // the compute backend the session resolved to, so
+                    // clients that left the knob unset learn what will
+                    // serve them.
                     let backend = registry.backend_of(id).unwrap_or("unknown");
                     let reply = Frame::new(
                         FrameKind::OpenSession,
@@ -351,34 +586,34 @@ fn serve_v2_loop(
                         ]),
                         Vec::new(),
                     );
-                    wire::write_frame(writer, &reply)?;
+                    self.push_frame(&reply);
                 }
-                Err(e) => wire::write_frame(writer, &Frame::error(frame.id, &e))?,
+                Err(e) => self.push_frame(&Frame::error(frame.id, &e)),
             },
             FrameKind::CloseSession => {
-                // only the connection that opened a session may close it:
-                // ids are sequential, so without this check any client
-                // could tear down another connection's session by
-                // guessing (the same UnknownSession reply for
-                // not-yours and never-existed avoids leaking liveness)
-                if opened.contains(&frame.id) && registry.close(frame.id) {
-                    opened.retain(|&i| i != frame.id);
+                // only the connection that opened a session may close
+                // it: ids are sequential, so without this check any
+                // client could tear down another connection's session by
+                // guessing (the same UnknownSession reply for not-yours
+                // and never-existed avoids leaking liveness)
+                if self.opened.contains(&frame.id) && registry.close(frame.id) {
+                    self.opened.retain(|&i| i != frame.id);
                     let reply =
                         Frame::new(FrameKind::CloseSession, frame.id, Json::Null, Vec::new());
-                    wire::write_frame(writer, &reply)?;
+                    self.push_frame(&reply);
                 } else {
                     let e = LeapError::UnknownSession(frame.id);
-                    wire::write_frame(writer, &Frame::error(frame.id, &e))?;
+                    self.push_frame(&Frame::error(frame.id, &e));
                 }
             }
             FrameKind::RegisterPipeline => {
                 // connection-scoped like CloseSession: registering on a
                 // session you did not open answers exactly like a
                 // session that never existed
-                if !opened.contains(&frame.id) {
+                if !self.opened.contains(&frame.id) {
                     let e = LeapError::UnknownSession(frame.id);
-                    wire::write_frame(writer, &Frame::error(frame.id, &e))?;
-                    continue;
+                    self.push_frame(&Frame::error(frame.id, &e));
+                    return;
                 }
                 let result = frame
                     .meta
@@ -389,8 +624,8 @@ fn serve_v2_loop(
                     .and_then(|spec| registry.register_pipeline(frame.id, spec));
                 match result {
                     Ok(pid) => {
-                        // reply id = pipeline id; meta repeats both ids as
-                        // decimal strings (lossless above 2^53)
+                        // reply id = pipeline id; meta repeats both ids
+                        // as decimal strings (lossless above 2^53)
                         let reply = Frame::new(
                             FrameKind::RegisterPipeline,
                             pid,
@@ -400,15 +635,15 @@ fn serve_v2_loop(
                             ]),
                             Vec::new(),
                         );
-                        wire::write_frame(writer, &reply)?;
+                        self.push_frame(&reply);
                     }
-                    Err(e) => wire::write_frame(writer, &Frame::error(frame.id, &e))?,
+                    Err(e) => self.push_frame(&Frame::error(frame.id, &e)),
                 }
             }
             FrameKind::Request => {
                 let id = frame.id;
                 match request_from_frame(frame) {
-                    Err(e) => wire::write_frame(writer, &Frame::error(id, &e))?,
+                    Err(e) => self.push_frame(&Frame::error(id, &e)),
                     Ok(req) => {
                         // session ops — projections AND pipeline-grad —
                         // are scoped to the connection that opened the
@@ -417,25 +652,13 @@ fn serve_v2_loop(
                         // never-existed leaks neither liveness nor the
                         // victim scan's shape)
                         if let Some(sid) = req.op.session_id() {
-                            if !opened.contains(&sid) {
+                            if !self.opened.contains(&sid) {
                                 let e = LeapError::UnknownSession(sid);
-                                wire::write_frame(writer, &Frame::error(id, &e))?;
-                                continue;
+                                self.push_frame(&Frame::error(id, &e));
+                                return;
                             }
                         }
-                        let resp = coord.call(req);
-                        let reply = response_to_frame(resp);
-                        match wire::write_frame(writer, &reply) {
-                            Ok(()) => {}
-                            // an unframeable reply (tensor over the wire
-                            // cap) fails in encode_frame BEFORE any byte
-                            // is written, so the stream is still in sync
-                            // and a typed error reply is safe
-                            Err(e @ LeapError::Protocol(_)) => {
-                                wire::write_frame(writer, &Frame::error(id, &e))?;
-                            }
-                            Err(e) => return Err(e),
-                        }
+                        self.submit_request(req, coord, false, opts);
                     }
                 }
             }
@@ -444,10 +667,186 @@ fn serve_v2_loop(
                     "unexpected {:?} frame from a client",
                     frame.kind
                 ));
-                wire::write_frame(writer, &Frame::error(frame.id, &e))?;
+                self.push_frame(&Frame::error(frame.id, &e));
             }
         }
     }
+
+    // ── admission + reply plumbing ─────────────────────────────────────
+
+    /// Admit one request into the shared worker pool, or shed it with a
+    /// typed error reply **in its FIFO slot**. Gates fire in order:
+    /// per-connection in-flight cap first, then the coordinator's
+    /// pending-queue cap ([`Coordinator::try_submit`]).
+    fn submit_request(
+        &mut self,
+        req: Request,
+        coord: &Coordinator,
+        v1: bool,
+        opts: &ServerOptions,
+    ) {
+        let id = req.id;
+        let cap = opts.max_inflight_per_conn.max(1);
+        if self.waiting >= cap {
+            let e = LeapError::BudgetExceeded { needed: self.waiting + 1, cap };
+            coord.telemetry().record_shed(&req.op.label());
+            self.push_bytes(encode_error(id, v1, &e));
+            return;
+        }
+        match coord.try_submit(req) {
+            Ok(rx) => {
+                self.tickets.push_back(Ticket::Waiting { id, rx, v1 });
+                self.waiting += 1;
+            }
+            Err(e) => self.push_bytes(encode_error(id, v1, &e)),
+        }
+    }
+
+    /// Move resolved tickets into the write buffer, strictly in FIFO
+    /// order: stop at the first still-waiting ticket so a later reply
+    /// never overtakes an earlier one.
+    fn drain_tickets(&mut self) {
+        while let Some(front) = self.tickets.front_mut() {
+            let bytes = match front {
+                Ticket::Ready(_) => {
+                    let Some(Ticket::Ready(b)) = self.tickets.pop_front() else {
+                        unreachable!()
+                    };
+                    b
+                }
+                Ticket::Waiting { id, rx, v1 } => match rx.try_recv() {
+                    Err(TryRecvError::Empty) => return,
+                    Ok(resp) => {
+                        let b = encode_response(*id, *v1, resp);
+                        self.waiting -= 1;
+                        self.tickets.pop_front();
+                        b
+                    }
+                    Err(TryRecvError::Disconnected) => {
+                        // workers always send before dropping their end;
+                        // this arm only fires on coordinator shutdown
+                        let e = LeapError::Io("coordinator dropped the request".into());
+                        let b = encode_error(*id, *v1, &e);
+                        self.waiting -= 1;
+                        self.tickets.pop_front();
+                        b
+                    }
+                },
+            };
+            self.wbuf.extend_from_slice(&bytes);
+        }
+    }
+
+    /// Nonblocking write burst: hand as much of `wbuf` to the kernel as
+    /// it will take now; POLLOUT readiness resumes the rest.
+    fn flush(&mut self) {
+        if self.dead {
+            return;
+        }
+        while self.woff < self.wbuf.len() {
+            match self.stream.write(&self.wbuf[self.woff..]) {
+                Ok(0) => {
+                    self.dead = true;
+                    return;
+                }
+                Ok(n) => self.woff += n,
+                Err(ref e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(ref e) if is_timeout(e) => return,
+                Err(_) => {
+                    self.dead = true;
+                    return;
+                }
+            }
+        }
+        self.wbuf.clear();
+        self.woff = 0;
+    }
+
+    fn push_frame(&mut self, f: &Frame) {
+        let bytes = match wire::encode_frame(f) {
+            Ok(b) => b,
+            // an unframeable reply (tensor over the wire cap) never
+            // started writing, so a typed error in its place keeps the
+            // stream in sync
+            Err(e) => wire::encode_frame(&Frame::error(f.id, &e))
+                .expect("error frames always encode"),
+        };
+        self.push_bytes(bytes);
+    }
+
+    fn push_line(&mut self, doc: &Json) {
+        let mut s = doc.to_string();
+        s.push('\n');
+        self.push_bytes(s.into_bytes());
+    }
+
+    fn push_bytes(&mut self, bytes: Vec<u8>) {
+        self.tickets.push_back(Ticket::Ready(bytes));
+    }
+}
+
+/// Encode a coordinator response in the connection's protocol.
+fn encode_response(id: u64, v1: bool, resp: Response) -> Vec<u8> {
+    if v1 {
+        let mut s = response_to_json(&resp).to_string();
+        s.push('\n');
+        s.into_bytes()
+    } else {
+        let reply = response_to_frame(resp);
+        match wire::encode_frame(&reply) {
+            Ok(b) => b,
+            Err(e) => wire::encode_frame(&Frame::error(id, &e))
+                .expect("error frames always encode"),
+        }
+    }
+}
+
+/// Encode a typed error reply in the connection's protocol.
+fn encode_error(id: u64, v1: bool, e: &LeapError) -> Vec<u8> {
+    if v1 {
+        let mut s = error_json(e).to_string();
+        s.push('\n');
+        s.into_bytes()
+    } else {
+        wire::encode_frame(&Frame::error(id, e)).expect("error frames always encode")
+    }
+}
+
+fn error_json(e: &LeapError) -> Json {
+    Json::obj(vec![
+        ("error", Json::Str(e.to_string())),
+        ("code", Json::Num(e.code() as f64)),
+    ])
+}
+
+/// The v1 `__stats` reply: telemetry (including per-op shed counts and
+/// p99 latency), queue depth, budget, sessions, and the shared
+/// projector pool — the projector worker pool is process-wide and thus
+/// shared by every connection and request, so its size and dispatch
+/// count sit next to the queue depth for saturation diagnosis.
+fn stats_json(doc: &Json, coord: &Coordinator, registry: &SessionRegistry) -> Json {
+    let (pool_workers, pool_regions) = crate::util::pool::pool_stats();
+    // the backend a sessionless scan would get, plus the tier actually
+    // serving each open session — operators correlating throughput need
+    // to know which kernel tier produced it
+    let session_backends = Json::Obj(
+        registry
+            .session_backends()
+            .into_iter()
+            .map(|(id, b)| (id.to_string(), Json::Str(b.to_string())))
+            .collect(),
+    );
+    Json::obj(vec![
+        ("id", Json::Num(doc.get_f64("id").unwrap_or(0.0))),
+        ("stats", coord.telemetry().to_json()),
+        ("queue_depth", Json::Num(coord.queue_depth() as f64)),
+        ("budget_in_flight", Json::Num(coord.budget().in_flight() as f64)),
+        ("open_sessions", Json::Num(registry.len() as f64)),
+        ("pool_workers", Json::Num(pool_workers as f64)),
+        ("pool_regions", Json::Num(pool_regions as f64)),
+        ("default_backend", Json::Str(crate::backend::default_kind().name().to_string())),
+        ("session_backends", session_backends),
+    ])
 }
 
 // ---------------------------------------------------------------------------
@@ -716,6 +1115,7 @@ impl BinaryClient {
 
 #[cfg(test)]
 mod tests {
+    use super::super::request::request_meta;
     use super::super::test_support::MockExecutor;
     use super::super::{BatchPolicy, Coordinator, Executor, NativeExecutor, Router, SessionExecutor};
     use super::*;
@@ -1157,5 +1557,214 @@ mod tests {
             SessionRegistry::global().executor(session).is_none(),
             "disconnect must release the session"
         );
+    }
+
+    // ── multiplexing, admission control, load shedding ─────────────────
+
+    #[test]
+    fn overload_sheds_with_typed_errors_and_the_stream_stays_in_sync() {
+        // 1 worker and a pending queue of 1: a burst of slow requests
+        // must overflow the queue and shed
+        let coord = Arc::new(
+            Coordinator::new(Arc::new(MockExecutor), BatchPolicy::default(), 1 << 20, 1)
+                .with_max_pending(1),
+        );
+        let server = Server::start("127.0.0.1:0", coord.clone()).unwrap();
+        let stream = TcpStream::connect(server.addr).unwrap();
+        stream.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+        let mut writer = stream.try_clone().unwrap();
+        let mut reader = BufReader::new(stream);
+
+        // v2 handshake
+        let hello = Frame::new(
+            FrameKind::Hello,
+            0,
+            Json::obj(vec![("version", Json::Num(wire::VERSION as f64))]),
+            Vec::new(),
+        );
+        wire::write_frame(&mut writer, &hello).unwrap();
+        let reply = wire::read_frame(&mut reader).unwrap().expect("hello reply");
+        assert_eq!(reply.kind, FrameKind::Hello);
+
+        // pipeline a burst of slow requests without reading a single
+        // reply — far faster than one worker can drain them
+        const BURST: u64 = 40;
+        let meta = request_meta(&Op::Artifact("slow".into()));
+        for id in 1..=BURST {
+            wire::write_frame_parts(&mut writer, FrameKind::Request, id, &meta, &[id as f32])
+                .unwrap();
+        }
+        writer.flush().unwrap();
+
+        // every request gets exactly one reply, in request order:
+        // Response for the admitted ones, a typed BudgetExceeded error
+        // for the shed ones — never a skipped or reordered id
+        let (mut served, mut shed) = (0u64, 0u64);
+        for id in 1..=BURST {
+            let f = wire::read_frame(&mut reader).unwrap().expect("one reply per request");
+            assert_eq!(f.id, id, "replies must arrive in request order");
+            match f.kind {
+                FrameKind::Response => {
+                    assert_eq!(f.payload, vec![id as f32]);
+                    served += 1;
+                }
+                FrameKind::Error => {
+                    let e = f.to_error();
+                    assert_eq!(e.code(), crate::api::codes::BUDGET_EXCEEDED, "{e:?}");
+                    shed += 1;
+                }
+                k => panic!("unexpected {k:?} reply"),
+            }
+        }
+        assert!(served > 0, "some of the burst must be admitted");
+        assert!(shed > 0, "a 40-deep burst into a 1-deep queue must shed");
+
+        // the connection recovered: a fresh request after the burst is
+        // served normally
+        let meta = request_meta(&Op::Artifact("echo".into()));
+        wire::write_frame_parts(&mut writer, FrameKind::Request, 99, &meta, &[21.0]).unwrap();
+        writer.flush().unwrap();
+        let f = wire::read_frame(&mut reader).unwrap().expect("post-burst reply");
+        assert_eq!(f.kind, FrameKind::Response);
+        assert_eq!(f.id, 99);
+        assert_eq!(f.payload, vec![42.0]);
+        // telemetry counted the sheds
+        assert_eq!(coord.telemetry().snapshot()["slow"].shed, shed);
+    }
+
+    #[test]
+    fn per_connection_inflight_cap_sheds_before_the_queue() {
+        // roomy queue, tiny per-connection cap: the connection gate
+        // must shed on its own
+        let coord = Arc::new(Coordinator::new(
+            Arc::new(MockExecutor),
+            BatchPolicy::default(),
+            1 << 20,
+            1,
+        ));
+        let server = Server::start_with(
+            "127.0.0.1:0",
+            coord,
+            ServerOptions { max_inflight_per_conn: 4, ..ServerOptions::default() },
+        )
+        .unwrap();
+        let stream = TcpStream::connect(server.addr).unwrap();
+        stream.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+        let mut writer = stream.try_clone().unwrap();
+        let mut reader = BufReader::new(stream);
+
+        // one TCP segment of pipelined v1 lines, so they reach the
+        // server together and pile past the in-flight cap
+        const BURST: usize = 20;
+        let mut batch = String::new();
+        for id in 1..=BURST {
+            batch.push_str(&format!(r#"{{"id": {id}, "op": "slow", "inputs": [[1.0]]}}"#));
+            batch.push('\n');
+        }
+        writer.write_all(batch.as_bytes()).unwrap();
+        writer.flush().unwrap();
+
+        let (mut served, mut shed) = (0usize, 0usize);
+        for id in 1..=BURST {
+            let mut line = String::new();
+            reader.read_line(&mut line).unwrap();
+            let reply = parse(&line).expect("json reply line");
+            assert_eq!(reply.get_f64("id"), Some(id as f64), "in order: {line}");
+            if reply.get("outputs").is_some() {
+                served += 1;
+            } else {
+                assert_eq!(
+                    reply.get_f64("code"),
+                    Some(crate::api::codes::BUDGET_EXCEEDED as f64),
+                    "{line}"
+                );
+                shed += 1;
+            }
+        }
+        assert_eq!(served + shed, BURST);
+        assert!(served >= 4, "at least one full in-flight window is admitted");
+        assert!(shed > 0, "a 20-deep burst must overflow a 4-deep in-flight cap");
+    }
+
+    #[test]
+    fn many_concurrent_v2_sessions_multiplex_on_one_server_bit_identically() {
+        let (server, _coord) = start_native();
+        let cfg = scan_config();
+        let scan = crate::api::ScanBuilder::from_config(&cfg)
+            .model(Model::SF)
+            .threads(2)
+            .build()
+            .unwrap();
+        let mut vol = vec![0.0f32; scan.volume_len()];
+        crate::util::rng::Rng::new(77).fill_uniform(&mut vol, 0.0, 1.0);
+        let reference = scan.forward(&vol).unwrap();
+
+        let addr = server.addr;
+        let mut handles = Vec::new();
+        for _ in 0..8 {
+            let cfg = cfg.clone();
+            let vol = vol.clone();
+            let reference = reference.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut client = BinaryClient::connect(&addr).unwrap();
+                let session = client.open_session(&cfg, Model::SF, Some(2)).unwrap();
+                for _ in 0..3 {
+                    let served = client.forward(session, &vol).unwrap();
+                    assert_eq!(served, reference, "every session, every repeat: same bits");
+                }
+                client.close_session(session).unwrap();
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn injected_registries_isolate_concurrent_servers() {
+        fn start_isolated() -> (Server, Arc<SessionRegistry>) {
+            let registry = Arc::new(SessionRegistry::new());
+            let cfg = scan_config();
+            let native = NativeExecutor::new(
+                Projector::new(cfg.geometry.clone(), cfg.volume.clone(), Model::SF)
+                    .with_threads(2),
+            );
+            let router: Arc<dyn Executor> = Arc::new(Router::new(vec![
+                Arc::new(native),
+                Arc::new(SessionExecutor::with_registry(registry.clone())),
+            ]));
+            let coord = Arc::new(Coordinator::new(router, BatchPolicy::default(), 1 << 28, 2));
+            let server = Server::start_with(
+                "127.0.0.1:0",
+                coord,
+                ServerOptions { registry: Some(registry.clone()), ..ServerOptions::default() },
+            )
+            .unwrap();
+            (server, registry)
+        }
+        let (s1, r1) = start_isolated();
+        let (s2, r2) = start_isolated();
+
+        let mut c1 = BinaryClient::connect(&s1.addr).unwrap();
+        let session = c1.open_session(&scan_config(), Model::SF, Some(2)).unwrap();
+        // the session lives in server 1's registry and nowhere else —
+        // not in server 2's, not in the process-global one
+        assert!(r1.executor(session).is_some());
+        assert!(r2.executor(session).is_none(), "registries must not cross-contaminate");
+        assert_eq!(r1.len(), 1);
+        assert_eq!(r2.len(), 0);
+        // and it serves requests end-to-end through its own executor
+        let vol = vec![0.05f32; 256];
+        assert!(c1.forward(session, &vol).is_ok());
+
+        drop(c1); // connection drops: the session must release from r1
+        for _ in 0..100 {
+            if r1.is_empty() {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        assert!(r1.is_empty(), "disconnect must release the session from its own registry");
+        drop(s2);
     }
 }

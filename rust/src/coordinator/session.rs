@@ -88,11 +88,21 @@ impl SessionRegistry {
         SessionRegistry { next: AtomicU64::new(1), sessions: Mutex::new(HashMap::new()) }
     }
 
-    /// The process-wide registry (shared by the TCP server and the
-    /// [`SessionExecutor`] backend).
+    fn global_cell() -> &'static Arc<SessionRegistry> {
+        static REGISTRY: OnceLock<Arc<SessionRegistry>> = OnceLock::new();
+        REGISTRY.get_or_init(|| Arc::new(SessionRegistry::new()))
+    }
+
+    /// The process-wide registry (shared by the default TCP server and
+    /// the default [`SessionExecutor`] backend).
     pub fn global() -> &'static SessionRegistry {
-        static REGISTRY: OnceLock<SessionRegistry> = OnceLock::new();
-        REGISTRY.get_or_init(SessionRegistry::new)
+        Self::global_cell()
+    }
+
+    /// The process-wide registry as a shareable handle — servers and
+    /// executors that take an injected registry default to this one.
+    pub fn global_arc() -> Arc<SessionRegistry> {
+        Self::global_cell().clone()
     }
 
     /// Validate `cfg` and open a session for it on the process-default
@@ -351,7 +361,7 @@ impl SessionRegistry {
 /// time, so the stacked batched projection path survives the
 /// indirection.
 pub struct SessionExecutor {
-    registry: &'static SessionRegistry,
+    registry: Arc<SessionRegistry>,
 }
 
 impl Default for SessionExecutor {
@@ -363,11 +373,26 @@ impl Default for SessionExecutor {
 impl SessionExecutor {
     /// Backend over the process-wide registry.
     pub fn new() -> SessionExecutor {
-        SessionExecutor { registry: SessionRegistry::global() }
+        SessionExecutor::with_registry(SessionRegistry::global_arc())
     }
 
-    pub fn registry(&self) -> &'static SessionRegistry {
-        self.registry
+    /// Backend over an explicit registry. A server that injects its own
+    /// registry (see `ServerOptions`) pairs it with an executor built
+    /// through this constructor, so two servers in one process — tests
+    /// especially — cannot cross-contaminate sessions through the
+    /// process-wide map.
+    pub fn with_registry(registry: Arc<SessionRegistry>) -> SessionExecutor {
+        SessionExecutor { registry }
+    }
+
+    pub fn registry(&self) -> &SessionRegistry {
+        &self.registry
+    }
+
+    /// Shareable handle to the registry this executor serves (for wiring
+    /// the same registry into a server).
+    pub fn registry_arc(&self) -> Arc<SessionRegistry> {
+        self.registry.clone()
     }
 
     fn resolve(&self, op: &Op) -> Result<(Arc<NativeExecutor>, Op), LeapError> {
@@ -473,7 +498,7 @@ mod tests {
 
     #[test]
     fn open_execute_close() {
-        let exec = SessionExecutor { registry: Box::leak(Box::new(SessionRegistry::new())) };
+        let exec = SessionExecutor::with_registry(Arc::new(SessionRegistry::new()));
         let id = exec.registry().open(&config(8), Model::SF, Some(2)).unwrap();
         let vol = vec![0.01f32; 144];
         let out = exec.execute(&Op::SessionFp(id), &[&vol]).unwrap();
@@ -606,7 +631,7 @@ mod tests {
 
     #[test]
     fn pipeline_grad_matches_the_in_process_tape_bit_for_bit() {
-        let exec = SessionExecutor { registry: Box::leak(Box::new(SessionRegistry::new())) };
+        let exec = SessionExecutor::with_registry(Arc::new(SessionRegistry::new()));
         let id = exec.registry().open(&config(6), Model::SF, Some(2)).unwrap();
         // the same scan through the front door shares the cached plan
         let scan = ScanBuilder::from_config(&config(6))
@@ -736,7 +761,7 @@ mod tests {
 
     #[test]
     fn batch_against_one_session_stays_whole() {
-        let exec = SessionExecutor { registry: Box::leak(Box::new(SessionRegistry::new())) };
+        let exec = SessionExecutor::with_registry(Arc::new(SessionRegistry::new()));
         let id = exec.registry().open(&config(6), Model::SF, Some(2)).unwrap();
         let vols: Vec<Vec<f32>> = (0..3).map(|i| vec![0.01f32 * (i + 1) as f32; 144]).collect();
         let items: Vec<Vec<&[f32]>> = vols.iter().map(|v| vec![v.as_slice()]).collect();

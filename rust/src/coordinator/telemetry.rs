@@ -6,15 +6,27 @@ use std::sync::Mutex;
 
 use crate::util::json::Json;
 
+/// Latency histogram resolution: power-of-two buckets, bucket `b`
+/// holding samples in `[2^(b-1), 2^b)` µs (bucket 0 = sub-µs). 32
+/// buckets span past half an hour — far beyond any served request.
+pub const HIST_BUCKETS: usize = 32;
+
 #[derive(Clone, Debug, Default)]
 pub struct OpStats {
     pub count: u64,
     pub errors: u64,
+    /// Requests refused at admission (bounded pending queue / in-flight
+    /// caps) with a typed `BudgetExceeded` — they never reach a worker,
+    /// so they are *not* in `count` or the latency aggregates.
+    pub shed: u64,
     pub total_latency_us: u64,
     pub total_exec_us: u64,
     pub max_latency_us: u64,
     pub batches: u64,
     pub batched_requests: u64,
+    /// Log-bucketed latency histogram (see [`HIST_BUCKETS`]); feeds the
+    /// percentile estimates without storing per-request samples.
+    pub lat_hist: [u64; HIST_BUCKETS],
 }
 
 impl OpStats {
@@ -32,6 +44,35 @@ impl OpStats {
         } else {
             self.batched_requests as f64 / self.batches as f64
         }
+    }
+
+    fn bucket(latency_us: u64) -> usize {
+        ((u64::BITS - latency_us.leading_zeros()) as usize).min(HIST_BUCKETS - 1)
+    }
+
+    /// Latency at quantile `q` (e.g. `0.99`), as the upper edge of the
+    /// power-of-two bucket the quantile falls in — an upper bound within
+    /// 2× of the true sample, which is the resolution tail-latency
+    /// dashboards need without per-request sample storage.
+    pub fn percentile_latency_us(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let rank = ((q * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut seen = 0u64;
+        for (b, &n) in self.lat_hist.iter().enumerate() {
+            seen += n;
+            if seen >= rank {
+                let edge = if b == 0 { 0 } else { (1u64 << b) - 1 };
+                return edge.min(self.max_latency_us);
+            }
+        }
+        self.max_latency_us
+    }
+
+    /// The p99 latency row served by `__stats` and the concurrency bench.
+    pub fn p99_latency_us(&self) -> u64 {
+        self.percentile_latency_us(0.99)
     }
 }
 
@@ -56,6 +97,13 @@ impl Telemetry {
         s.total_latency_us += latency_us;
         s.total_exec_us += exec_us;
         s.max_latency_us = s.max_latency_us.max(latency_us);
+        s.lat_hist[OpStats::bucket(latency_us)] += 1;
+    }
+
+    /// Count one admission refusal (request shed before any execution).
+    pub fn record_shed(&self, op: &str) {
+        let mut map = self.inner.lock().unwrap();
+        map.entry(op.to_string()).or_default().shed += 1;
     }
 
     pub fn record_batch(&self, op: &str, size: usize) {
@@ -79,7 +127,9 @@ impl Telemetry {
                         Json::obj(vec![
                             ("count", Json::Num(s.count as f64)),
                             ("errors", Json::Num(s.errors as f64)),
+                            ("shed", Json::Num(s.shed as f64)),
                             ("mean_latency_us", Json::Num(s.mean_latency_us())),
+                            ("p99_latency_us", Json::Num(s.p99_latency_us() as f64)),
                             ("max_latency_us", Json::Num(s.max_latency_us as f64)),
                             ("mean_exec_us", Json::Num(if s.count > 0 { s.total_exec_us as f64 / s.count as f64 } else { 0.0 })),
                             ("mean_batch", Json::Num(s.mean_batch())),
@@ -115,9 +165,37 @@ mod tests {
     fn json_snapshot_parses() {
         let t = Telemetry::new();
         t.record("bp", 10, 5, true);
+        t.record_shed("bp");
         let j = t.to_json().to_string();
         let back = crate::util::json::parse(&j).unwrap();
         assert_eq!(back.get("bp").unwrap().get_f64("count"), Some(1.0));
+        assert_eq!(back.get("bp").unwrap().get_f64("shed"), Some(1.0));
+        assert!(back.get("bp").unwrap().get_f64("p99_latency_us").is_some());
+    }
+
+    #[test]
+    fn percentiles_come_from_the_log_histogram() {
+        let t = Telemetry::new();
+        // 99 fast requests in [2^6, 2^7), one slow outlier in [2^13, 2^14)
+        for _ in 0..99 {
+            t.record("fp", 100, 80, true);
+        }
+        t.record("fp", 9000, 8000, true);
+        let s = &t.snapshot()["fp"];
+        // p50 lands in the fast bucket, p99 too (rank 99 of 100); p100
+        // must surface the outlier's bucket
+        assert_eq!(s.percentile_latency_us(0.5), 127);
+        assert_eq!(s.p99_latency_us(), 127);
+        let p100 = s.percentile_latency_us(1.0);
+        assert!(
+            (9000..=16383).contains(&p100),
+            "outlier bucket upper edge, capped by max: {p100}"
+        );
+        // shed counts stay out of the latency aggregates
+        t.record_shed("fp");
+        let s = &t.snapshot()["fp"];
+        assert_eq!(s.shed, 1);
+        assert_eq!(s.count, 100);
     }
 
     #[test]

@@ -201,27 +201,12 @@ fn read_exact_or(
         .map_err(|e| LeapError::Protocol(format!("truncated frame ({what}): {e}")))
 }
 
-/// Read one frame from a stream. Returns `Ok(None)` on a clean
-/// end-of-stream (no bytes at all); a stream that ends mid-frame is a
-/// typed [`LeapError::Protocol`]; a frame with the wrong version byte is
-/// [`LeapError::VersionMismatch`].
-pub fn read_frame(r: &mut impl Read) -> Result<Option<Frame>, LeapError> {
-    let mut header = [0u8; HEADER_BYTES];
-    // distinguish clean EOF (no frame) from truncation (partial header)
-    let mut got = 0usize;
-    while got < HEADER_BYTES {
-        match r.read(&mut header[got..]) {
-            Ok(0) if got == 0 => return Ok(None),
-            Ok(0) => {
-                return Err(LeapError::Protocol(format!(
-                    "truncated frame (header: {got}/{HEADER_BYTES} bytes)"
-                )))
-            }
-            Ok(n) => got += n,
-            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
-            Err(e) => return Err(LeapError::Io(e.to_string())),
-        }
-    }
+/// Validate a complete fixed header and extract its fields as
+/// `(kind, id, meta_len, payload_len)` — the single definition of
+/// header trust shared by the blocking reader ([`read_frame`]) and the
+/// incremental decoder ([`decode_frame_bytes`]), so the two paths can
+/// never diverge on what they reject.
+fn validate_header(header: &[u8; HEADER_BYTES]) -> Result<(FrameKind, u64, usize, usize), LeapError> {
     if header[0..4] != MAGIC {
         return Err(LeapError::Protocol(format!(
             "bad frame magic {:02x}{:02x}{:02x}{:02x} (expected \"LEAP\")",
@@ -255,21 +240,86 @@ pub fn read_frame(r: &mut impl Read) -> Result<Option<Frame>, LeapError> {
             "payload length {payload_len} is not a multiple of 4 (f32 tensor)"
         )));
     }
-    let mut meta_bytes = vec![0u8; meta_len];
-    read_exact_or(r, &mut meta_bytes, "meta")?;
-    let meta = if meta_bytes.is_empty() {
-        Json::Null
-    } else {
-        let text = std::str::from_utf8(&meta_bytes)
-            .map_err(|e| LeapError::Protocol(format!("meta is not utf-8: {e}")))?;
-        parse(text).map_err(|e| LeapError::Protocol(format!("bad meta json: {e}")))?
-    };
-    let mut payload_bytes = vec![0u8; payload_len];
-    read_exact_or(r, &mut payload_bytes, "payload")?;
-    let payload = payload_bytes
+    Ok((kind, id, meta_len, payload_len))
+}
+
+fn parse_meta(meta_bytes: &[u8]) -> Result<Json, LeapError> {
+    if meta_bytes.is_empty() {
+        return Ok(Json::Null);
+    }
+    let text = std::str::from_utf8(meta_bytes)
+        .map_err(|e| LeapError::Protocol(format!("meta is not utf-8: {e}")))?;
+    parse(text).map_err(|e| LeapError::Protocol(format!("bad meta json: {e}")))
+}
+
+fn parse_payload(payload_bytes: &[u8]) -> Vec<f32> {
+    payload_bytes
         .chunks_exact(4)
         .map(|c| f32::from_le_bytes(c.try_into().expect("4-byte chunk")))
-        .collect();
+        .collect()
+}
+
+/// Incremental (non-blocking) frame decoder for reassembly buffers:
+/// given however many bytes have arrived so far, returns
+/// `Ok(Some((frame, consumed)))` when a complete frame is at the front
+/// (the caller drains `consumed` bytes), `Ok(None)` when more bytes are
+/// needed, and a typed error as soon as the prefix can *never* become a
+/// valid frame — bad magic fails on the first wrong byte and a bad
+/// version/kind/length fails from the header alone, so a desynced or
+/// malicious stream is rejected without waiting for (or allocating) the
+/// lengths it claims. This is the event-loop counterpart of
+/// [`read_frame`]; both trust headers through the same validation.
+pub fn decode_frame_bytes(buf: &[u8]) -> Result<Option<(Frame, usize)>, LeapError> {
+    let n = buf.len().min(MAGIC.len());
+    if buf[..n] != MAGIC[..n] {
+        return Err(LeapError::Protocol(format!(
+            "bad frame magic prefix {:02x?} (expected \"LEAP\")",
+            &buf[..n]
+        )));
+    }
+    if buf.len() < HEADER_BYTES {
+        return Ok(None);
+    }
+    let header: &[u8; HEADER_BYTES] =
+        buf[..HEADER_BYTES].try_into().expect("sliced to HEADER_BYTES");
+    let (kind, id, meta_len, payload_len) = validate_header(header)?;
+    let total = HEADER_BYTES + meta_len + payload_len;
+    if buf.len() < total {
+        return Ok(None);
+    }
+    let meta = parse_meta(&buf[HEADER_BYTES..HEADER_BYTES + meta_len])?;
+    let payload = parse_payload(&buf[HEADER_BYTES + meta_len..total]);
+    Ok(Some((Frame { kind, id, meta, payload }, total)))
+}
+
+/// Read one frame from a stream. Returns `Ok(None)` on a clean
+/// end-of-stream (no bytes at all); a stream that ends mid-frame is a
+/// typed [`LeapError::Protocol`]; a frame with the wrong version byte is
+/// [`LeapError::VersionMismatch`].
+pub fn read_frame(r: &mut impl Read) -> Result<Option<Frame>, LeapError> {
+    let mut header = [0u8; HEADER_BYTES];
+    // distinguish clean EOF (no frame) from truncation (partial header)
+    let mut got = 0usize;
+    while got < HEADER_BYTES {
+        match r.read(&mut header[got..]) {
+            Ok(0) if got == 0 => return Ok(None),
+            Ok(0) => {
+                return Err(LeapError::Protocol(format!(
+                    "truncated frame (header: {got}/{HEADER_BYTES} bytes)"
+                )))
+            }
+            Ok(n) => got += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(LeapError::Io(e.to_string())),
+        }
+    }
+    let (kind, id, meta_len, payload_len) = validate_header(&header)?;
+    let mut meta_bytes = vec![0u8; meta_len];
+    read_exact_or(r, &mut meta_bytes, "meta")?;
+    let meta = parse_meta(&meta_bytes)?;
+    let mut payload_bytes = vec![0u8; payload_len];
+    read_exact_or(r, &mut payload_bytes, "payload")?;
+    let payload = parse_payload(&payload_bytes);
     Ok(Some(Frame { kind, id, meta, payload }))
 }
 
@@ -413,6 +463,58 @@ mod tests {
         let typed = back.to_error();
         assert_eq!(typed.code(), crate::api::codes::SHAPE_MISMATCH);
         assert!(typed.to_string().contains("volume"));
+    }
+
+    #[test]
+    fn incremental_decode_over_byte_dribble_matches_blocking_reader() {
+        let f = sample_frame(17, 13);
+        let bytes = encode_frame_ok(&f);
+        // feed one byte at a time: every proper prefix is Ok(None), the
+        // full buffer yields the frame with the exact consumed count
+        for cut in 0..bytes.len() {
+            let r = decode_frame_bytes(&bytes[..cut]).unwrap();
+            assert!(r.is_none(), "prefix of {cut} bytes must ask for more");
+        }
+        let (back, consumed) = decode_frame_bytes(&bytes).unwrap().unwrap();
+        assert_eq!(consumed, bytes.len());
+        assert_eq!(back, f);
+    }
+
+    #[test]
+    fn incremental_decode_consumes_one_frame_and_reports_its_length() {
+        let a = sample_frame(4, 14);
+        let b = sample_frame(9, 15);
+        let mut bytes = encode_frame_ok(&a);
+        let a_len = bytes.len();
+        bytes.extend_from_slice(&encode_frame_ok(&b));
+        let (first, consumed) = decode_frame_bytes(&bytes).unwrap().unwrap();
+        assert_eq!(first, a);
+        assert_eq!(consumed, a_len);
+        let (second, consumed2) = decode_frame_bytes(&bytes[consumed..]).unwrap().unwrap();
+        assert_eq!(second, b);
+        assert_eq!(consumed + consumed2, bytes.len());
+    }
+
+    #[test]
+    fn incremental_decode_fails_fast_on_bad_prefixes() {
+        // wrong very first byte: rejected without waiting for a header
+        assert!(matches!(decode_frame_bytes(b"X"), Err(LeapError::Protocol(_))));
+        // JSON on a binary reassembly path: same
+        assert!(matches!(decode_frame_bytes(b"{\"op\""), Err(LeapError::Protocol(_))));
+        // bad version: rejected from the complete header alone, typed
+        let mut bytes = encode_frame_ok(&sample_frame(2, 16));
+        bytes[4] = 9;
+        let e = decode_frame_bytes(&bytes[..HEADER_BYTES]).unwrap_err();
+        assert_eq!(e, LeapError::VersionMismatch { got: 9, want: VERSION });
+        // oversized payload length: rejected before any allocation
+        let mut bytes = encode_frame_ok(&sample_frame(0, 17));
+        bytes[20..24].copy_from_slice(&(u32::MAX / 4 * 4).to_le_bytes());
+        assert!(matches!(
+            decode_frame_bytes(&bytes[..HEADER_BYTES]),
+            Err(LeapError::Protocol(_))
+        ));
+        // empty buffer just wants more bytes
+        assert!(decode_frame_bytes(&[]).unwrap().is_none());
     }
 
     #[test]

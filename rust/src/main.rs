@@ -16,7 +16,7 @@ use std::sync::Arc;
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use leap::coordinator::server::Server;
+use leap::coordinator::server::{Server, ServerOptions, DEFAULT_MAX_INFLIGHT_PER_CONN};
 use leap::coordinator::{
     BatchPolicy, Coordinator, Executor, NativeExecutor, Router, SessionExecutor,
 };
@@ -401,7 +401,7 @@ fn build_router(args: &Args) -> Result<(Arc<Router>, String)> {
 fn cmd_serve(args: &Args) -> Result<()> {
     let (router, desc) = build_router(args)?;
     println!("{desc}");
-    let coord = Arc::new(Coordinator::new(
+    let mut coord = Coordinator::new(
         router,
         BatchPolicy {
             max_batch: args.usize_or("max-batch", 8),
@@ -409,10 +409,27 @@ fn cmd_serve(args: &Args) -> Result<()> {
         },
         args.usize_or("budget-mb", 2048) * (1 << 20),
         args.usize_or("workers", leap::util::pool::default_threads()),
-    ));
+    );
+    // admission control: sheds with typed BudgetExceeded replies once
+    // the pending queue reaches --max-pending, instead of queueing
+    // unboundedly under overload (0 = unbounded)
+    let max_pending = args.usize_or("max-pending", 256);
+    if max_pending > 0 {
+        coord = coord.with_max_pending(max_pending);
+    }
+    let coord = Arc::new(coord);
     let addr = args.str_or("addr", "127.0.0.1:7462");
-    let server = Server::start(&addr, coord.clone())?;
+    let opts = ServerOptions {
+        max_inflight_per_conn: args.usize_or("max-inflight", DEFAULT_MAX_INFLIGHT_PER_CONN),
+        ..ServerOptions::default()
+    };
+    let server = Server::start_with(&addr, coord.clone(), opts)?;
     println!("leap server listening on {} (protocol v2 binary + legacy v1 json)", server.addr);
+    println!(
+        "admission: max-pending {} / max-inflight-per-conn {}",
+        if max_pending > 0 { max_pending.to_string() } else { "unbounded".into() },
+        args.usize_or("max-inflight", DEFAULT_MAX_INFLIGHT_PER_CONN),
+    );
     println!("ops: {:?}", coord.executor().ops());
     loop {
         std::thread::sleep(std::time::Duration::from_secs(10));

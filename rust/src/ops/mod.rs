@@ -605,6 +605,89 @@ impl<O: LinearOp> LinearOp for Normal<O> {
     }
 }
 
+/// The planned projector pair applied as `S` *sequential shards* — each
+/// shard one contiguous range of the plan's shard units (views for `A`,
+/// output-ownership units for `Aᵀ`;
+/// [`ProjectionPlan::forward_shard_units`] /
+/// [`ProjectionPlan::back_shard_units`]) dispatched as its own pool
+/// region.
+///
+/// Outputs are **bit-identical** to the unsharded plan: forwards stitch
+/// disjoint view slabs, and each backprojection shard replays every view
+/// for the voxels it owns in the same global order the full executor
+/// uses — the same decomposition [`RowMasked`] and the OS-SART subset
+/// sweeps already rely on, restricted to contiguous ranges so no
+/// reduction step is needed. Sharding therefore never changes results;
+/// what it changes is *scheduling*: one monolithic application holds the
+/// worker pool's FIFO region queue for its whole duration, while `S`
+/// shards yield the queue `S − 1` times, letting a multiplexed serving
+/// plane interleave other requests between shards and cutting tail
+/// latency under concurrency (see `coordinator`).
+pub struct ViewSharded {
+    plan: Arc<ProjectionPlan>,
+    shards: usize,
+}
+
+impl ViewSharded {
+    /// Shard `plan`'s applications into (at most) `shards` sequential
+    /// pool regions. `shards = 1` is exactly the unsharded operator.
+    pub fn new(plan: Arc<ProjectionPlan>, shards: usize) -> ViewSharded {
+        ViewSharded { plan, shards: shards.max(1) }
+    }
+
+    /// The shared plan.
+    pub fn plan(&self) -> &Arc<ProjectionPlan> {
+        &self.plan
+    }
+
+    /// Effective shard count for an application with `units` total shard
+    /// units: capped so every shard keeps at least two units (below
+    /// that, region-dispatch overhead outweighs any interleaving win).
+    fn shards_for(&self, units: usize) -> usize {
+        self.shards.min(units / 2).max(1)
+    }
+}
+
+impl LinearOp for ViewSharded {
+    fn domain_shape(&self) -> Shape {
+        Shape::vol(self.plan.vg())
+    }
+
+    fn range_shape(&self) -> Shape {
+        Shape::sino(self.plan.geom())
+    }
+
+    fn apply_into(&self, x: &[f32], y: &mut [f32]) {
+        assert_eq!(x.len(), self.domain_shape().numel(), "operator domain length");
+        assert_eq!(y.len(), self.range_shape().numel(), "operator range length");
+        let d = self.domain_shape().0;
+        let r = self.range_shape().0;
+        let vol = Vol3::from_vec(d[0], d[1], d[2], x.to_vec());
+        let mut sino = Sino::zeros(r[0], r[1], r[2]);
+        let units = self.plan.forward_shard_units();
+        let threads = self.plan.threads().max(1);
+        for (v0, v1) in pool::chunk_ranges(units, self.shards_for(units)) {
+            self.plan.forward_range_into_with_threads(&vol, &mut sino, threads, v0, v1);
+        }
+        y.copy_from_slice(&sino.data);
+    }
+
+    fn adjoint_into(&self, y: &[f32], x: &mut [f32]) {
+        assert_eq!(y.len(), self.range_shape().numel(), "operator range length");
+        assert_eq!(x.len(), self.domain_shape().numel(), "operator domain length");
+        let d = self.domain_shape().0;
+        let r = self.range_shape().0;
+        let sino = Sino::from_vec(r[0], r[1], r[2], y.to_vec());
+        let mut vol = Vol3::zeros(d[0], d[1], d[2]);
+        let units = self.plan.back_shard_units();
+        let threads = self.plan.threads().max(1);
+        for (u0, u1) in pool::chunk_ranges(units, self.shards_for(units)) {
+            self.plan.back_range_into_with_threads(&sino, &mut vol, threads, u0, u1);
+        }
+        x.copy_from_slice(&vol.data);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -714,6 +797,47 @@ mod tests {
         let g = Geometry::Parallel(ParallelBeam::standard_2d(6, 15, 1.0));
         let other = PlanOp::new(&Projector::new(g, vg, Model::SF)); // range 6×1×15
         let _ = Composed::new(&op, &other); // 144 ≠ 90: must panic
+    }
+
+    #[test]
+    fn view_sharded_is_bit_identical_to_unsharded_for_all_models_and_geometries() {
+        use crate::geometry::{ConeBeam, FanBeam, ModularBeam};
+        let cone = ConeBeam::standard(5, 6, 10, 1.5, 1.5, 50.0, 100.0);
+        let geoms = vec![
+            Geometry::Parallel(crate::geometry::ParallelBeam::standard_3d(6, 6, 10, 1.2, 1.2)),
+            Geometry::Fan(FanBeam::standard(5, 14, 1.3, 50.0, 100.0)),
+            Geometry::Cone(cone.clone()),
+            Geometry::Modular(ModularBeam::from_cone(&cone)),
+        ];
+        for geom in geoms {
+            let vg = if matches!(geom, Geometry::Fan(_)) {
+                VolumeGeometry::slice2d(9, 9, 1.0)
+            } else {
+                VolumeGeometry::cube(8, 1.0)
+            };
+            for model in [Model::Siddon, Model::Joseph, Model::SF] {
+                let plan = Arc::new(
+                    Projector::new(geom.clone(), vg.clone(), model).with_threads(3).plan(),
+                );
+                let x = rand_vec(Shape::vol(plan.vg()).numel(), 21);
+                let y = rand_vec(Shape::sino(plan.geom()).numel(), 22);
+                let full_fwd = plan.as_ref().apply(&x);
+                let full_back = plan.as_ref().adjoint(&y);
+                for shards in [1usize, 2, 3, 5] {
+                    let op = ViewSharded::new(plan.clone(), shards);
+                    assert_eq!(
+                        op.apply(&x),
+                        full_fwd,
+                        "forward {model:?}/{geom:?} at {shards} shards"
+                    );
+                    assert_eq!(
+                        op.adjoint(&y),
+                        full_back,
+                        "back {model:?}/{geom:?} at {shards} shards"
+                    );
+                }
+            }
+        }
     }
 
     #[test]

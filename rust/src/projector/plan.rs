@@ -408,43 +408,119 @@ impl ProjectionPlan {
     /// batched operator layer ([`crate::ops`]) uses this to split the
     /// pool between the items of one stacked batch.
     pub fn forward_into_with_threads(&self, vol: &Vol3, sino: &mut Sino, threads: usize) {
+        self.forward_range_into_with_threads(vol, sino, threads, 0, self.forward_shard_units())
+    }
+
+    /// Number of independent shard units one forward application divides
+    /// into: **views**, for every plan kind — each view owns a disjoint
+    /// sinogram slab, so any partition of `0..forward_shard_units()` into
+    /// contiguous ranges executed via
+    /// [`Self::forward_range_into_with_threads`] stitches to the
+    /// unsharded output bit for bit.
+    pub fn forward_shard_units(&self) -> usize {
+        self.geom.nviews()
+    }
+
+    /// Number of independent shard units one backprojection divides into
+    /// — the output-ownership granularity of each kind's gather/replay:
+    /// `(z, y)` voxel rows for parallel-beam SF, `y` rows for fan/cone
+    /// SF, and slab-axis slices (z; y when `nz == 1`) for the ray
+    /// models. Every owned voxel replays all views in global order, so
+    /// sharding by unit ranges preserves each voxel's accumulation chain
+    /// exactly (see [`Self::back_range_into_with_threads`]).
+    pub fn back_shard_units(&self) -> usize {
+        match &self.kind {
+            PlanKind::SfParallel(_) => self.vg.nz * self.vg.ny,
+            PlanKind::SfFan(_) | PlanKind::SfCone(_) | PlanKind::SfConeUncached => self.vg.ny,
+            PlanKind::Ray { .. } => {
+                if self.vg.nz > 1 {
+                    self.vg.nz
+                } else {
+                    self.vg.ny
+                }
+            }
+        }
+    }
+
+    /// Forward projection restricted to the view range `v0..v1`: zeroes
+    /// and writes only those views' sinogram slabs. Executing any
+    /// partition of `0..forward_shard_units()` into one buffer
+    /// reproduces [`Self::forward_into_with_threads`] bit for bit — the
+    /// kernel each shard runs is the *same* range-restricted executor
+    /// the full path runs over the full range, so there is one code
+    /// path, not a sharded re-implementation.
+    pub fn forward_range_into_with_threads(
+        &self,
+        vol: &Vol3,
+        sino: &mut Sino,
+        threads: usize,
+        v0: usize,
+        v1: usize,
+    ) {
         check_shapes(&self.geom, &self.vg, vol, sino);
         let threads = threads.max(1);
         let simd = self.kernel_simd();
         match &self.kind {
             PlanKind::SfParallel(set) if simd => {
                 let Geometry::Parallel(g) = &self.geom else { unreachable!() };
-                backend::simd::forward_parallel_simd(&self.vg, g, Some(set), vol, sino, threads)
+                backend::simd::forward_parallel_simd_range(
+                    &self.vg,
+                    g,
+                    Some(set),
+                    vol,
+                    sino,
+                    threads,
+                    v0,
+                    v1,
+                )
             }
             PlanKind::SfParallel(set) => {
                 let Geometry::Parallel(g) = &self.geom else { unreachable!() };
-                sf::forward_parallel_opt(&self.vg, g, Some(set), vol, sino, threads)
+                sf::forward_parallel_range(&self.vg, g, Some(set), vol, sino, threads, v0, v1)
             }
             PlanKind::SfFan(vs) if simd => {
                 let Geometry::Fan(g) = &self.geom else { unreachable!() };
-                backend::simd::forward_fan_simd(&self.vg, g, Some(vs.as_slice()), vol, sino, threads)
+                backend::simd::forward_fan_simd_range(
+                    &self.vg,
+                    g,
+                    Some(vs.as_slice()),
+                    vol,
+                    sino,
+                    threads,
+                    v0,
+                    v1,
+                )
             }
             PlanKind::SfFan(vs) => {
                 let Geometry::Fan(g) = &self.geom else { unreachable!() };
-                sf::forward_fan_opt(&self.vg, g, Some(vs.as_slice()), vol, sino, threads)
+                sf::forward_fan_range(&self.vg, g, Some(vs.as_slice()), vol, sino, threads, v0, v1)
             }
             PlanKind::SfCone(vs) if simd => {
                 let Geometry::Cone(g) = &self.geom else { unreachable!() };
-                backend::simd::forward_cone_simd(&self.vg, g, Some(vs.as_slice()), vol, sino, threads)
+                backend::simd::forward_cone_simd_range(
+                    &self.vg,
+                    g,
+                    Some(vs.as_slice()),
+                    vol,
+                    sino,
+                    threads,
+                    v0,
+                    v1,
+                )
             }
             PlanKind::SfCone(vs) => {
                 let Geometry::Cone(g) = &self.geom else { unreachable!() };
-                sf::forward_cone_opt(&self.vg, g, Some(vs.as_slice()), vol, sino, threads)
+                sf::forward_cone_range(&self.vg, g, Some(vs.as_slice()), vol, sino, threads, v0, v1)
             }
             PlanKind::SfConeUncached if simd => {
                 let Geometry::Cone(g) = &self.geom else { unreachable!() };
-                backend::simd::forward_cone_simd(&self.vg, g, None, vol, sino, threads)
+                backend::simd::forward_cone_simd_range(&self.vg, g, None, vol, sino, threads, v0, v1)
             }
             PlanKind::SfConeUncached => {
                 let Geometry::Cone(g) = &self.geom else { unreachable!() };
-                sf::forward_cone_opt(&self.vg, g, None, vol, sino, threads)
+                sf::forward_cone_range(&self.vg, g, None, vol, sino, threads, v0, v1)
             }
-            PlanKind::Ray { use_siddon, views } => ray_forward_exec(
+            PlanKind::Ray { use_siddon, views } => ray_forward_exec_range(
                 &self.vg,
                 &self.geom,
                 Some(views),
@@ -453,6 +529,8 @@ impl ProjectionPlan {
                 vol,
                 sino,
                 threads,
+                v0,
+                v1,
             ),
         }
     }
@@ -466,47 +544,101 @@ impl ProjectionPlan {
     /// [`Self::back_into`] with an explicit worker count for this one
     /// application (see [`Self::forward_into_with_threads`]).
     pub fn back_into_with_threads(&self, sino: &Sino, vol: &mut Vol3, threads: usize) {
+        self.back_range_into_with_threads(sino, vol, threads, 0, self.back_shard_units())
+    }
+
+    /// Matched backprojection restricted to the output-unit range
+    /// `u0..u1` of [`Self::back_shard_units`]: zeroes and writes only the
+    /// voxels those units own, but replays *every* view for them in the
+    /// same global order as the full executor — so executing any
+    /// partition of `0..back_shard_units()` into one buffer reproduces
+    /// [`Self::back_into_with_threads`] bit for bit. Units are `(z, y)`
+    /// voxel rows (parallel SF), `y` rows (fan/cone SF: each unit owns
+    /// one x-row in every z-plane), or slab-axis slices (ray models).
+    pub fn back_range_into_with_threads(
+        &self,
+        sino: &Sino,
+        vol: &mut Vol3,
+        threads: usize,
+        u0: usize,
+        u1: usize,
+    ) {
         check_shapes(&self.geom, &self.vg, vol, sino);
         let threads = threads.max(1);
         let simd = self.kernel_simd();
         match &self.kind {
             PlanKind::SfParallel(set) if simd => {
                 let Geometry::Parallel(g) = &self.geom else { unreachable!() };
-                backend::simd::back_parallel_simd(&self.vg, g, Some(set), sino, vol, threads)
+                backend::simd::back_parallel_simd_range(
+                    &self.vg,
+                    g,
+                    Some(set),
+                    sino,
+                    vol,
+                    threads,
+                    u0,
+                    u1,
+                )
             }
             PlanKind::SfParallel(set) => {
                 let Geometry::Parallel(g) = &self.geom else { unreachable!() };
-                sf::back_parallel_opt(&self.vg, g, Some(set), sino, vol, threads)
+                sf::back_parallel_range(&self.vg, g, Some(set), sino, vol, threads, u0, u1)
             }
             PlanKind::SfFan(vs) if simd => {
                 let Geometry::Fan(g) = &self.geom else { unreachable!() };
-                backend::simd::back_fan_simd(&self.vg, g, Some(vs.as_slice()), sino, vol, threads)
+                backend::simd::back_fan_simd_range(
+                    &self.vg,
+                    g,
+                    Some(vs.as_slice()),
+                    sino,
+                    vol,
+                    threads,
+                    u0,
+                    u1,
+                )
             }
             PlanKind::SfFan(vs) => {
                 let Geometry::Fan(g) = &self.geom else { unreachable!() };
-                sf::back_fan_opt(&self.vg, g, Some(vs.as_slice()), sino, vol, threads)
+                sf::back_fan_range(&self.vg, g, Some(vs.as_slice()), sino, vol, threads, u0, u1)
             }
             PlanKind::SfCone(vs) if simd => {
                 let Geometry::Cone(g) = &self.geom else { unreachable!() };
-                backend::simd::back_cone_simd(&self.vg, g, Some(vs.as_slice()), sino, vol, threads)
+                backend::simd::back_cone_simd_range(
+                    &self.vg,
+                    g,
+                    Some(vs.as_slice()),
+                    sino,
+                    vol,
+                    threads,
+                    u0,
+                    u1,
+                )
             }
             PlanKind::SfCone(vs) => {
                 let Geometry::Cone(g) = &self.geom else { unreachable!() };
-                sf::back_cone_opt(&self.vg, g, Some(vs.as_slice()), sino, vol, threads)
+                sf::back_cone_range(&self.vg, g, Some(vs.as_slice()), sino, vol, threads, u0, u1)
             }
             PlanKind::SfConeUncached if simd => {
                 let Geometry::Cone(g) = &self.geom else { unreachable!() };
-                backend::simd::back_cone_simd(&self.vg, g, None, sino, vol, threads)
+                backend::simd::back_cone_simd_range(&self.vg, g, None, sino, vol, threads, u0, u1)
             }
             PlanKind::SfConeUncached => {
                 let Geometry::Cone(g) = &self.geom else { unreachable!() };
-                sf::back_cone_opt(&self.vg, g, None, sino, vol, threads)
+                sf::back_cone_range(&self.vg, g, None, sino, vol, threads, u0, u1)
             }
             // ray backprojection has no safely vectorizable inner loop
             // (guarded indirect scatter): both CPU tiers share this path
-            PlanKind::Ray { use_siddon, views } => {
-                ray_back_exec(&self.vg, &self.geom, Some(views), *use_siddon, sino, vol, threads)
-            }
+            PlanKind::Ray { use_siddon, views } => ray_back_exec_range(
+                &self.vg,
+                &self.geom,
+                Some(views),
+                *use_siddon,
+                sino,
+                vol,
+                threads,
+                u0,
+                u1,
+            ),
         }
     }
 
@@ -642,13 +774,34 @@ pub(crate) fn ray_forward_exec(
     sino: &mut Sino,
     threads: usize,
 ) {
+    let nviews = sino.nviews;
+    ray_forward_exec_range(vg, geom, views, use_siddon, simd, vol, sino, threads, 0, nviews)
+}
+
+/// [`ray_forward_exec`] restricted to the view range `v0..v1`: zeroes
+/// and writes only those views' sinogram slabs, walking the identical
+/// per-`(view, row)` units the full executor would hand out for them.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn ray_forward_exec_range(
+    vg: &VolumeGeometry,
+    geom: &Geometry,
+    views: Option<&RayViews>,
+    use_siddon: bool,
+    simd: bool,
+    vol: &Vol3,
+    sino: &mut Sino,
+    threads: usize,
+    v0: usize,
+    v1: usize,
+) {
     let nrows = sino.nrows;
     let ncols = sino.ncols;
-    let units = sino.nviews * nrows;
-    sino.fill(0.0);
+    assert!(v0 <= v1 && v1 <= sino.nviews, "view range {v0}..{v1} out of 0..{}", sino.nviews);
+    sino.data[v0 * nrows * ncols..v1 * nrows * ncols].fill(0.0);
     let out = ParWriter::new(&mut sino.data);
-    parallel_items(units, threads, |u| {
+    parallel_items((v1 - v0) * nrows, threads, |r| {
         // each (view, row) unit owns its detector row of the sinogram
+        let u = v0 * nrows + r;
         let view = u / nrows;
         let row = u % nrows;
         let trig = view_trig(geom, views, view);
@@ -780,17 +933,45 @@ pub(crate) fn ray_back_exec(
     vol: &mut Vol3,
     threads: usize,
 ) {
+    let n_ax = if vg.nz > 1 { vg.nz } else { vg.ny };
+    ray_back_exec_range(vg, geom, views, use_siddon, sino, vol, threads, 0, n_ax)
+}
+
+/// [`ray_back_exec`] restricted to the slab-axis unit range `u0..u1`
+/// (z-slices; y-rows when `nz == 1`): zeroes and writes only that
+/// contiguous volume slab. Each owned voxel still replays *all* views in
+/// global order — exactly the accumulation chain the full executor runs
+/// for it — so stitching any partition of `0..n_ax` reproduces the
+/// unsharded volume bit for bit. The absolute slab bounds feed the same
+/// span-rejection compares and the same `flat_lo..flat_hi` ownership
+/// guard as the full path.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn ray_back_exec_range(
+    vg: &VolumeGeometry,
+    geom: &Geometry,
+    views: Option<&RayViews>,
+    use_siddon: bool,
+    sino: &Sino,
+    vol: &mut Vol3,
+    threads: usize,
+    u0: usize,
+    u1: usize,
+) {
     let nrows = sino.nrows;
     let ncols = sino.ncols;
     let units = sino.nviews * nrows;
-    vol.fill(0.0);
-    if units == 0 {
-        return;
-    }
     // slab axis: z when the volume has depth, else y (single-slice scans)
     let slab_ax = if vg.nz > 1 { 2usize } else { 1 };
     let (n_ax, plane) = if slab_ax == 2 { (vg.nz, vg.nx * vg.ny) } else { (vg.ny, vg.nx) };
-    let slabs = chunk_ranges(n_ax, threads);
+    assert!(u0 <= u1 && u1 <= n_ax, "slab range {u0}..{u1} out of 0..{n_ax}");
+    vol.data[u0 * plane..u1 * plane].fill(0.0);
+    if units == 0 || u0 == u1 {
+        return;
+    }
+    let slabs: Vec<(usize, usize)> = chunk_ranges(u1 - u0, threads)
+        .into_iter()
+        .map(|(a, b)| (u0 + a, u0 + b))
+        .collect();
     let (lo, hi) = vg.bounds();
     let pitch = [vg.vx, vg.vy, vg.vz];
     // planned path: the per-ray slab spans were precomputed at plan time

@@ -522,11 +522,31 @@ pub(crate) fn forward_parallel_opt(
     sino: &mut Sino,
     threads: usize,
 ) {
+    forward_parallel_range(vg, g, plans, vol, sino, threads, 0, g.angles.len())
+}
+
+/// [`forward_parallel_opt`] restricted to the view range `v0..v1`: zeroes
+/// and writes only those views' sinogram slabs, leaving the rest of the
+/// buffer untouched. Views own disjoint output slabs, so stitching the
+/// full view range out of any partition of sub-ranges reproduces the
+/// unrestricted output bit for bit — the basis of view-sharded operator
+/// execution ([`crate::ops::ViewSharded`]).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn forward_parallel_range(
+    vg: &VolumeGeometry,
+    g: &ParallelBeam,
+    plans: Option<&ParallelPlanSet>,
+    vol: &Vol3,
+    sino: &mut Sino,
+    threads: usize,
+    v0: usize,
+    v1: usize,
+) {
     assert_eq!(sino.nviews, g.angles.len());
+    assert!(v0 <= v1 && v1 <= g.angles.len(), "view range {v0}..{v1}");
     let nrows = sino.nrows;
     let ncols = sino.ncols;
-    sino.fill(0.0);
-    let nviews = g.angles.len();
+    sino.data[v0 * nrows * ncols..v1 * nrows * ncols].fill(0.0);
     // the row weights are view-invariant: compute once per call when no
     // plan is supplied instead of once per view
     let local_rows;
@@ -538,8 +558,9 @@ pub(crate) fn forward_parallel_opt(
         }
     };
     let out = ParWriter::new(&mut sino.data);
-    parallel_items(nviews, threads, |view| {
+    parallel_items(v1 - v0, threads, |r| {
         // each view's sinogram slab is written by exactly one worker
+        let view = v0 + r;
         let base = view * nrows * ncols;
         let local;
         let vp = match plans {
@@ -578,9 +599,30 @@ pub(crate) fn back_parallel_opt(
     vol: &mut Vol3,
     threads: usize,
 ) {
+    back_parallel_range(vg, g, plans, sino, vol, threads, 0, vg.nz * vg.ny)
+}
+
+/// [`back_parallel_opt`] restricted to the voxel-row range `u0..u1`
+/// (units are `(z, y)` rows, `m = k·ny + j`): zeroes and writes only the
+/// flat range `u0·nx..u1·nx`. Every owned voxel still replays **all**
+/// views in global order, so each voxel's accumulation chain — and hence
+/// its bits — is identical to the unrestricted gather; stitching any
+/// partition of unit ranges reproduces [`back_parallel`] exactly.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn back_parallel_range(
+    vg: &VolumeGeometry,
+    g: &ParallelBeam,
+    plans: Option<&ParallelPlanSet>,
+    sino: &Sino,
+    vol: &mut Vol3,
+    threads: usize,
+    u0: usize,
+    u1: usize,
+) {
     let nunits = vg.nz * vg.ny;
+    assert!(u0 <= u1 && u1 <= nunits, "unit range {u0}..{u1}");
     let ncols = sino.ncols;
-    vol.fill(0.0);
+    vol.data[u0 * vg.nx..u1 * vg.nx].fill(0.0);
     // the slim per-view invariants are O(nviews) scalars: the direct path
     // builds them per call (the plan step caches them across calls)
     let local_set;
@@ -592,9 +634,9 @@ pub(crate) fn back_parallel_opt(
         }
     };
     let out = ParWriter::new(&mut vol.data);
-    parallel_chunks(nunits, threads, |m0, m1| {
-        // this worker owns voxel rows m0..m1 (flat range m0·nx..m1·nx)
-        // exclusively
+    parallel_chunks(u1 - u0, threads, |a, b| {
+        // this worker owns voxel rows u0+a..u0+b (flat ·nx) exclusively
+        let (m0, m1) = (u0 + a, u0 + b);
         for (view, vp) in set.views.iter().enumerate() {
             let vdata = sino.view(view);
             parallel_rows_coeffs(vg, g, vp, &set.rows, m0, m1, |flat, row, col, coeff| {
@@ -701,13 +743,30 @@ pub(crate) fn forward_fan_opt(
     sino: &mut Sino,
     threads: usize,
 ) {
+    forward_fan_range(vg, g, plans, vol, sino, threads, 0, g.angles.len())
+}
+
+/// [`forward_fan_opt`] restricted to the view range `v0..v1` (see
+/// [`forward_parallel_range`] for the stitching contract).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn forward_fan_range(
+    vg: &VolumeGeometry,
+    g: &FanBeam,
+    plans: Option<&[FanViewPlan]>,
+    vol: &Vol3,
+    sino: &mut Sino,
+    threads: usize,
+    v0: usize,
+    v1: usize,
+) {
     assert_eq!(vg.nz, 1, "fan-beam SF requires a 2-D volume");
+    assert!(v0 <= v1 && v1 <= g.angles.len(), "view range {v0}..{v1}");
     let ncols = sino.ncols;
-    sino.fill(0.0);
-    let nviews = g.angles.len();
+    sino.data[v0 * ncols..v1 * ncols].fill(0.0);
     let out = ParWriter::new(&mut sino.data);
-    parallel_items(nviews, threads, |view| {
+    parallel_items(v1 - v0, threads, |r| {
         // each view's sinogram slab is written by exactly one worker
+        let view = v0 + r;
         let base = view * ncols;
         let vp = match plans {
             Some(ps) => ps[view],
@@ -734,9 +793,26 @@ pub(crate) fn back_fan_opt(
     vol: &mut Vol3,
     threads: usize,
 ) {
+    back_fan_range(vg, g, plans, sino, vol, threads, 0, vg.ny)
+}
+
+/// [`back_fan_opt`] restricted to the voxel-row range `u0..u1` (units are
+/// `y`-rows; see [`back_parallel_range`] for the stitching contract).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn back_fan_range(
+    vg: &VolumeGeometry,
+    g: &FanBeam,
+    plans: Option<&[FanViewPlan]>,
+    sino: &Sino,
+    vol: &mut Vol3,
+    threads: usize,
+    u0: usize,
+    u1: usize,
+) {
     assert_eq!(vg.nz, 1);
+    assert!(u0 <= u1 && u1 <= vg.ny, "unit range {u0}..{u1}");
     let nviews = g.angles.len();
-    vol.fill(0.0);
+    vol.data[u0 * vg.nx..u1 * vg.nx].fill(0.0);
     let local;
     let views: &[FanViewPlan] = match plans {
         Some(ps) => ps,
@@ -746,8 +822,9 @@ pub(crate) fn back_fan_opt(
         }
     };
     let out = ParWriter::new(&mut vol.data);
-    parallel_chunks(vg.ny, threads, |j0, j1| {
-        // this worker owns voxel rows j0..j1 exclusively
+    parallel_chunks(u1 - u0, threads, |a, b| {
+        // this worker owns voxel rows u0+a..u0+b exclusively
+        let (j0, j1) = (u0 + a, u0 + b);
         for (view, vp) in views.iter().enumerate() {
             let vdata = sino.view(view);
             fan_rows_coeffs(vg, g, vp, j0, j1, |flat, col, coeff| {
@@ -1009,15 +1086,32 @@ pub(crate) fn forward_cone_opt(
     sino: &mut Sino,
     threads: usize,
 ) {
+    forward_cone_range(vg, g, plans, vol, sino, threads, 0, g.angles.len())
+}
+
+/// [`forward_cone_opt`] restricted to the view range `v0..v1` (see
+/// [`forward_parallel_range`] for the stitching contract).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn forward_cone_range(
+    vg: &VolumeGeometry,
+    g: &ConeBeam,
+    plans: Option<&[ConeViewPlan]>,
+    vol: &Vol3,
+    sino: &mut Sino,
+    threads: usize,
+    v0: usize,
+    v1: usize,
+) {
+    assert!(v0 <= v1 && v1 <= g.angles.len(), "view range {v0}..{v1}");
     let nrows = sino.nrows;
     let ncols = sino.ncols;
-    sino.fill(0.0);
-    let nviews = g.angles.len();
+    sino.data[v0 * nrows * ncols..v1 * nrows * ncols].fill(0.0);
     let out = ParWriter::new(&mut sino.data);
     // per-worker scratch: the direct path refills it per view instead of
     // churning an O(nx·ny) allocation per view
-    parallel_items_with(nviews, threads, ConeViewPlan::empty, |scratch, view| {
+    parallel_items_with(v1 - v0, threads, ConeViewPlan::empty, |scratch, r| {
         // each view's sinogram slab is written by exactly one worker
+        let view = v0 + r;
         let base = view * nrows * ncols;
         let vp: &ConeViewPlan = match plans {
             Some(ps) => &ps[view],
@@ -1052,17 +1146,41 @@ pub(crate) fn back_cone_opt(
     vol: &mut Vol3,
     threads: usize,
 ) {
+    back_cone_range(vg, g, plans, sino, vol, threads, 0, vg.ny)
+}
+
+/// [`back_cone_opt`] restricted to the voxel-row range `u0..u1` (units
+/// are `y`-rows owning their full `x × z` column blocks). A row `j` owns
+/// the non-contiguous flat runs `k·ny·nx + j·nx .. +nx` for every slice
+/// `k`, so zeroing walks per-(k, j) x-rows; the stitching contract is
+/// that of [`back_parallel_range`].
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn back_cone_range(
+    vg: &VolumeGeometry,
+    g: &ConeBeam,
+    plans: Option<&[ConeViewPlan]>,
+    sino: &Sino,
+    vol: &mut Vol3,
+    threads: usize,
+    u0: usize,
+    u1: usize,
+) {
     let nviews = g.angles.len();
     let ncols = sino.ncols;
     let ny = vg.ny;
-    vol.fill(0.0);
+    assert!(u0 <= u1 && u1 <= ny, "unit range {u0}..{u1}");
+    let plane = ny * vg.nx;
+    for k in 0..vg.nz {
+        vol.data[k * plane + u0 * vg.nx..k * plane + u1 * vg.nx].fill(0.0);
+    }
     if nviews == 0 {
         return;
     }
     let out = ParWriter::new(&mut vol.data);
     // each voxel row j (flat indices k·ny·nx + j·nx + i over all k, i) is
     // claimed and written by exactly one worker
-    parallel_items_with(ny, threads, ConeViewPlan::empty, |scratch, j| {
+    parallel_items_with(u1 - u0, threads, ConeViewPlan::empty, |scratch, r| {
+        let j = u0 + r;
         for view in 0..nviews {
             let (vp, j_off): (&ConeViewPlan, usize) = match plans {
                 Some(ps) => (&ps[view], 0),
@@ -1390,6 +1508,98 @@ mod tests {
                     "cone threads {threads} idx {idx}"
                 );
             }
+        }
+    }
+
+    /// Split `0..n` into `parts` contiguous ranges covering every index.
+    fn split(n: usize, parts: usize) -> Vec<(usize, usize)> {
+        let parts = parts.clamp(1, n.max(1));
+        (0..parts)
+            .map(|s| (s * n / parts, (s + 1) * n / parts))
+            .collect()
+    }
+
+    #[test]
+    fn range_executors_stitch_to_the_full_output_bit_for_bit() {
+        // the view-sharded serving plane relies on this: executing any
+        // partition of view ranges (forward) or unit ranges (back) into
+        // one buffer must reproduce the unrestricted executor exactly.
+        // Buffers start poisoned so each range's own zeroing is proven.
+        let mut rng = crate::util::rng::Rng::new(33);
+
+        let vg = VolumeGeometry { nx: 9, ny: 7, nz: 3, vx: 1.0, vy: 1.1, vz: 0.9, cx: 0.2, cy: -0.1, cz: 0.0 };
+        let par = ParallelBeam::standard_3d(7, 4, 13, 1.2, 1.1);
+        let mut vol = Vol3::zeros(vg.nx, vg.ny, vg.nz);
+        rng.fill_uniform(&mut vol.data, 0.0, 1.0);
+        let mut full = Sino::zeros(7, 4, 13);
+        forward_parallel(&vg, &par, &vol, &mut full, 2);
+        let mut sino = Sino::zeros(7, 4, 13);
+        let mut back_full = Vol3::zeros(vg.nx, vg.ny, vg.nz);
+        rng.fill_uniform(&mut sino.data, -1.0, 1.0);
+        back_parallel(&vg, &par, &sino, &mut back_full, 2);
+        for shards in [1usize, 2, 3, 5] {
+            let mut stitched = Sino::zeros(7, 4, 13);
+            stitched.fill(7.0);
+            for (v0, v1) in split(7, shards) {
+                forward_parallel_range(&vg, &par, None, &vol, &mut stitched, 2, v0, v1);
+            }
+            assert_eq!(full.data, stitched.data, "parallel fwd {shards} shards");
+            let mut bvol = Vol3::zeros(vg.nx, vg.ny, vg.nz);
+            bvol.fill(7.0);
+            for (u0, u1) in split(vg.nz * vg.ny, shards) {
+                back_parallel_range(&vg, &par, None, &sino, &mut bvol, 2, u0, u1);
+            }
+            assert_eq!(back_full.data, bvol.data, "parallel back {shards} shards");
+        }
+
+        let vg2 = VolumeGeometry::slice2d(11, 8, 0.8);
+        let fan = FanBeam::standard(6, 16, 1.1, 45.0, 95.0);
+        let mut vol2 = Vol3::zeros2d(11, 8);
+        rng.fill_uniform(&mut vol2.data, 0.0, 1.0);
+        let mut full2 = Sino::zeros2d(6, 16);
+        forward_fan(&vg2, &fan, &vol2, &mut full2, 2);
+        let mut sino2 = Sino::zeros2d(6, 16);
+        rng.fill_uniform(&mut sino2.data, -1.0, 1.0);
+        let mut back_full2 = Vol3::zeros2d(11, 8);
+        back_fan(&vg2, &fan, &sino2, &mut back_full2, 2);
+        for shards in [2usize, 3] {
+            let mut stitched = Sino::zeros2d(6, 16);
+            stitched.fill(7.0);
+            for (v0, v1) in split(6, shards) {
+                forward_fan_range(&vg2, &fan, None, &vol2, &mut stitched, 2, v0, v1);
+            }
+            assert_eq!(full2.data, stitched.data, "fan fwd {shards} shards");
+            let mut bvol = Vol3::zeros2d(11, 8);
+            bvol.fill(7.0);
+            for (u0, u1) in split(vg2.ny, shards) {
+                back_fan_range(&vg2, &fan, None, &sino2, &mut bvol, 2, u0, u1);
+            }
+            assert_eq!(back_full2.data, bvol.data, "fan back {shards} shards");
+        }
+
+        let vg3 = VolumeGeometry::cube(8, 1.0);
+        let cone = ConeBeam::standard(5, 6, 10, 1.5, 1.5, 50.0, 100.0);
+        let mut vol3 = Vol3::zeros(8, 8, 8);
+        rng.fill_uniform(&mut vol3.data, 0.0, 1.0);
+        let mut full3 = Sino::zeros(5, 6, 10);
+        forward_cone(&vg3, &cone, &vol3, &mut full3, 2);
+        let mut sino3 = Sino::zeros(5, 6, 10);
+        rng.fill_uniform(&mut sino3.data, -1.0, 1.0);
+        let mut back_full3 = Vol3::zeros(8, 8, 8);
+        back_cone(&vg3, &cone, &sino3, &mut back_full3, 2);
+        for shards in [2usize, 3] {
+            let mut stitched = Sino::zeros(5, 6, 10);
+            stitched.fill(7.0);
+            for (v0, v1) in split(5, shards) {
+                forward_cone_range(&vg3, &cone, None, &vol3, &mut stitched, 2, v0, v1);
+            }
+            assert_eq!(full3.data, stitched.data, "cone fwd {shards} shards");
+            let mut bvol = Vol3::zeros(8, 8, 8);
+            bvol.fill(7.0);
+            for (u0, u1) in split(vg3.ny, shards) {
+                back_cone_range(&vg3, &cone, None, &sino3, &mut bvol, 2, u0, u1);
+            }
+            assert_eq!(back_full3.data, bvol.data, "cone back {shards} shards");
         }
     }
 }

@@ -6,6 +6,7 @@
 
 pub mod rng;
 pub mod json;
+pub mod netpoll;
 pub mod pool;
 pub mod cli;
 pub mod fft;

@@ -1,0 +1,236 @@
+//! Readiness polling for the async serving plane — `poll(2)` without a
+//! dependency.
+//!
+//! The event-loop server ([`crate::coordinator::server`]) multiplexes
+//! hundreds of nonblocking sockets on one OS thread, which needs exactly
+//! one kernel facility: "which of these fds are readable/writable?".
+//! `std` does not expose `poll`/`epoll`, and the crate policy is to stay
+//! dependency-light (no `tokio`, no `libc` — mirroring how
+//! [`crate::util::pool`] hand-rolls its worker pool), so this module
+//! makes the one syscall directly via inline assembly on the platforms
+//! we serve from (Linux x86_64 / aarch64), with a portable fallback
+//! everywhere else.
+//!
+//! ## Fallback and self-healing semantics
+//!
+//! On non-Linux targets — and whenever the syscall reports an error —
+//! [`poll_fds`] sleeps a few milliseconds and then marks **every** fd
+//! ready for whatever events it asked for. That is safe, not just
+//! convenient, because the serving loop's contract is that all sockets
+//! are nonblocking and every readiness signal is treated as a *hint*: a
+//! spurious "readable" costs one `EWOULDBLOCK` read and the connection
+//! state machine is untouched. The fallback degrades the event loop to a
+//! small-sleep busy poll (higher idle CPU, same behavior); it can never
+//! hang it or desync a stream.
+
+use std::time::Duration;
+
+/// Readable-data event bit (POSIX `POLLIN`).
+pub const POLLIN: i16 = 0x001;
+/// Writable-space event bit (POSIX `POLLOUT`).
+pub const POLLOUT: i16 = 0x004;
+/// Error condition (POSIX `POLLERR`; output-only, always polled).
+pub const POLLERR: i16 = 0x008;
+/// Peer hangup (POSIX `POLLHUP`; output-only, always polled).
+pub const POLLHUP: i16 = 0x010;
+
+/// One entry of a `poll(2)` set — layout-compatible with the kernel's
+/// `struct pollfd` (fd, requested events, returned events).
+#[repr(C)]
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PollFd {
+    pub fd: i32,
+    pub events: i16,
+    pub revents: i16,
+}
+
+impl PollFd {
+    pub fn new(fd: i32, events: i16) -> PollFd {
+        PollFd { fd, events, revents: 0 }
+    }
+
+    /// The fd has data to read (or a hangup/error to observe via read).
+    pub fn readable(&self) -> bool {
+        self.revents & (POLLIN | POLLERR | POLLHUP) != 0
+    }
+
+    /// The fd has buffer space to write into.
+    pub fn writable(&self) -> bool {
+        self.revents & (POLLOUT | POLLERR) != 0
+    }
+
+    /// The peer hung up or the fd errored.
+    pub fn hangup(&self) -> bool {
+        self.revents & (POLLERR | POLLHUP) != 0
+    }
+}
+
+/// Wait up to `timeout` for readiness on `fds`, filling each entry's
+/// `revents`. Returns the number of ready entries (0 on timeout). Never
+/// fails: syscall errors and unsupported platforms degrade to the
+/// sleep-and-mark-all-ready fallback described in the module docs.
+pub fn poll_fds(fds: &mut [PollFd], timeout: Duration) -> usize {
+    for f in fds.iter_mut() {
+        f.revents = 0;
+    }
+    if fds.is_empty() {
+        std::thread::sleep(timeout);
+        return 0;
+    }
+    let timeout_ms = timeout.as_millis().min(i32::MAX as u128) as i32;
+    match sys_poll(fds, timeout_ms) {
+        Some(n) => n,
+        None => {
+            // degraded mode: brief sleep, then optimistically report every
+            // requested event — safe against nonblocking fds (see module
+            // docs), and self-healing: the next tick retries the syscall
+            std::thread::sleep(timeout.min(Duration::from_millis(5)));
+            for f in fds.iter_mut() {
+                f.revents = f.events;
+            }
+            fds.len()
+        }
+    }
+}
+
+/// `poll(2)` on Linux x86_64: syscall 7, args (fds ptr, nfds, timeout_ms).
+#[cfg(all(target_os = "linux", target_arch = "x86_64"))]
+fn sys_poll(fds: &mut [PollFd], timeout_ms: i32) -> Option<usize> {
+    let ret: isize;
+    unsafe {
+        std::arch::asm!(
+            "syscall",
+            inlateout("rax") 7isize => ret,
+            in("rdi") fds.as_mut_ptr(),
+            in("rsi") fds.len(),
+            in("rdx") timeout_ms as isize,
+            lateout("rcx") _,
+            lateout("r11") _,
+            options(nostack),
+        );
+    }
+    // EINTR is a normal wakeup (signal during sleep): report "nothing
+    // ready" and let the caller's next tick poll again
+    if ret == -4 {
+        return Some(0);
+    }
+    if ret < 0 {
+        return None;
+    }
+    Some(ret as usize)
+}
+
+/// `ppoll(2)` on Linux aarch64 (which has no plain `poll` syscall):
+/// syscall 73, args (fds ptr, nfds, timespec, sigmask = null, size).
+#[cfg(all(target_os = "linux", target_arch = "aarch64"))]
+fn sys_poll(fds: &mut [PollFd], timeout_ms: i32) -> Option<usize> {
+    #[repr(C)]
+    struct Timespec {
+        sec: i64,
+        nsec: i64,
+    }
+    let ts = Timespec {
+        sec: (timeout_ms / 1000) as i64,
+        nsec: (timeout_ms % 1000) as i64 * 1_000_000,
+    };
+    let ret: isize;
+    unsafe {
+        std::arch::asm!(
+            "svc #0",
+            in("x8") 73isize,
+            inlateout("x0") fds.as_mut_ptr() as isize => ret,
+            in("x1") fds.len(),
+            in("x2") &ts as *const Timespec,
+            in("x3") 0usize, // no signal mask (x4 sigsetsize then unused)
+            in("x4") 0usize,
+            options(nostack),
+        );
+    }
+    if ret == -4 {
+        return Some(0); // EINTR
+    }
+    if ret < 0 {
+        return None;
+    }
+    Some(ret as usize)
+}
+
+/// Unsupported platform: always take the fallback path.
+#[cfg(not(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64"))))]
+fn sys_poll(_fds: &mut [PollFd], _timeout_ms: i32) -> Option<usize> {
+    None
+}
+
+/// Raw fd of a socket-like object, for [`poll_fds`] registration. On
+/// non-unix targets there is no fd to extract; -1 keeps the entry inert
+/// (the kernel ignores negative fds in a poll set, and the fallback path
+/// marks it ready, which nonblocking I/O tolerates).
+#[cfg(unix)]
+pub fn raw_fd<T: std::os::unix::io::AsRawFd>(t: &T) -> i32 {
+    t.as_raw_fd()
+}
+
+#[cfg(not(unix))]
+pub fn raw_fd<T>(_t: &T) -> i32 {
+    -1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+    use std::net::{TcpListener, TcpStream};
+
+    #[test]
+    fn empty_set_times_out_without_spinning() {
+        let t0 = std::time::Instant::now();
+        let n = poll_fds(&mut [], Duration::from_millis(20));
+        assert_eq!(n, 0);
+        assert!(t0.elapsed() >= Duration::from_millis(10), "timeout honored");
+    }
+
+    #[test]
+    fn listener_becomes_readable_on_pending_accept() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let mut fds = [PollFd::new(raw_fd(&listener), POLLIN)];
+        // nothing pending: not readable within a short timeout (on real
+        // poll; the fallback may spuriously report ready, which the
+        // contract allows — so only assert the positive direction below)
+        let _ = poll_fds(&mut fds, Duration::from_millis(1));
+        let _client = TcpStream::connect(addr).unwrap();
+        // pending connection: must become readable promptly
+        let mut ready = false;
+        for _ in 0..100 {
+            if poll_fds(&mut fds, Duration::from_millis(20)) > 0 && fds[0].readable() {
+                ready = true;
+                break;
+            }
+        }
+        assert!(ready, "listener with a pending accept must poll readable");
+    }
+
+    #[test]
+    fn stream_readability_follows_data() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let mut client = TcpStream::connect(addr).unwrap();
+        let (server_side, _) = listener.accept().unwrap();
+        let mut fds = [PollFd::new(raw_fd(&server_side), POLLIN | POLLOUT)];
+        client.write_all(b"ping").unwrap();
+        client.flush().unwrap();
+        let mut readable = false;
+        for _ in 0..100 {
+            if poll_fds(&mut fds, Duration::from_millis(20)) > 0 && fds[0].readable() {
+                readable = true;
+                break;
+            }
+        }
+        assert!(readable, "bytes in flight must poll readable");
+        // a fresh connected socket has send-buffer space
+        assert!(fds[0].writable() || {
+            poll_fds(&mut fds, Duration::from_millis(20));
+            fds[0].writable()
+        });
+    }
+}
