@@ -4,15 +4,25 @@
 //!
 //! Run: `cargo bench --bench recon`
 //!
-//! Every measurement is appended as a JSON line to `BENCH_PR7.json` at
+//! Every measurement is appended as a JSON line to `BENCH_PR8.json` at
 //! the repo root (the perf trajectory file; earlier PRs' history lives
-//! in `BENCH_PR2.json`–`BENCH_PR6.json`) in addition to
+//! in `BENCH_PR2.json`–`BENCH_PR7.json`) in addition to
 //! `target/bench_results.jsonl`. Set `LEAP_BENCH_SMOKE=1` to run one
 //! iteration of everything (the CI smoke step — including the
 //! batched-coordinator, wire-protocol, tape-gradient,
-//! scalar-vs-SIMD backend, view-sharded operator and concurrent-session
-//! serving cases; the backend sweep shrinks to one scalar row + one
-//! SIMD row, and the session sweep to 1/8 sessions, in smoke mode).
+//! scalar-vs-SIMD backend, storage-tier, out-of-core tiled-execution,
+//! view-sharded operator and concurrent-session serving cases; the
+//! backend sweep shrinks to one scalar row + one SIMD row, the storage
+//! sweep to f32+f16, and the session sweep to 1/8 sessions, in smoke
+//! mode).
+//!
+//! The storage-tier rows carry `rel_l2_*_vs_f32` accuracy deltas and
+//! per-tier sinogram/table storage bytes; the tiled rows carry eviction
+//! counts and residency budgets. Peak RSS is sampled from
+//! `/proc/self/status` (`VmHWM`/`VmRSS`, kB) at measurement time — the
+//! high-water mark is process-monotone, so size attribution comes from
+//! the analytic `*_bytes` columns, not from subtracting rows (see
+//! docs/MEMORY.md for the methodology).
 
 use std::sync::Arc;
 use std::time::Duration;
@@ -36,7 +46,35 @@ use leap::{ScanBuilder, Sino, Vol3};
 
 /// Where the perf trajectory lives: the repo root, independent of the
 /// working directory cargo gives the bench binary.
-const TRAJECTORY: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_PR7.json");
+const TRAJECTORY: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_PR8.json");
+
+/// One field of `/proc/self/status` in kB (`VmHWM` = peak RSS,
+/// `VmRSS` = current) — `None` off Linux, keeping the bench portable.
+fn vm_kb(field: &str) -> Option<f64> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    let line = status.lines().find(|l| l.starts_with(field))?;
+    line.split_whitespace().nth(1)?.parse().ok()
+}
+
+/// Attach the RSS sample to a measurement row.
+fn push_rss(m: &mut leap::bench_harness::Measurement) {
+    if let Some(hwm) = vm_kb("VmHWM") {
+        m.notes.push(("vm_hwm_kb".into(), hwm));
+    }
+    if let Some(rss) = vm_kb("VmRSS") {
+        m.notes.push(("vm_rss_kb".into(), rss));
+    }
+}
+
+fn rel_l2(a: &[f32], b: &[f32]) -> f64 {
+    let mut num = 0.0f64;
+    let mut den = 0.0f64;
+    for (&x, &y) in a.iter().zip(b) {
+        num += (x as f64 - y as f64).powi(2);
+        den += (y as f64).powi(2);
+    }
+    (num / den.max(1e-30)).sqrt()
+}
 
 /// The pre-`ProjectionPlan` SIRT loop: every `A`/`Aᵀ` application goes
 /// through the direct path, re-deriving per-view geometry (trig, SF
@@ -273,6 +311,151 @@ fn main() {
                     all.push(m);
                 }
             }
+        }
+    }
+
+    // ── storage tiers: f32 vs f16 vs bf16 data-at-rest ──
+    // The same planned fp+bp per tier. The cone case is where the tier
+    // has teeth (the cached SF coefficient arena packs to 16-bit weight
+    // bits, halving the dominant plan allocation) and where forward
+    // accuracy is "quantized tables"; backprojection additionally
+    // quantizes its sinogram input on every tier ≠ f32. Each row carries
+    // Mvox/s, the rel-l2 delta against the f32 tier measured on the same
+    // inputs, per-tier sinogram storage bytes, and the VmHWM/VmRSS
+    // sample (methodology: module docs).
+    {
+        use leap::precision::TieredSino;
+        use leap::StorageTier;
+        let tier_cases: Vec<(&str, Geometry, VolumeGeometry)> = vec![
+            (
+                "cone 48³/48",
+                Geometry::Cone(ConeBeam::standard(48, 48, 64, 1.0, 1.0, 96.0, 192.0)),
+                VolumeGeometry::cube(48, 1.0),
+            ),
+            (
+                "parallel 48³/60",
+                Geometry::Parallel(ParallelBeam::standard_3d(60, 48, 64, 1.0, 1.0)),
+                VolumeGeometry::cube(48, 1.0),
+            ),
+        ];
+        let tiers: &[StorageTier] = if smoke {
+            &[StorageTier::F32, StorageTier::F16]
+        } else {
+            &[StorageTier::F32, StorageTier::F16, StorageTier::Bf16]
+        };
+        let tier_cases = if smoke { &tier_cases[..1] } else { &tier_cases[..] };
+        for (gname, geom, vgt) in tier_cases {
+            let nvox_t = vgt.num_voxels();
+            let mut x = Vol3::zeros(vgt.nx, vgt.ny, vgt.nz);
+            leap::util::rng::Rng::new(89).fill_uniform(&mut x.data, 0.0, 1.0);
+            // per-tier accuracy is measured against the f32 tier's
+            // outputs on identical inputs (the first loop iteration)
+            let mut fwd_ref: Vec<f32> = Vec::new();
+            let mut back_ref: Vec<f32> = Vec::new();
+            let mut f32_mean = f64::NAN;
+            for &tier in tiers {
+                let p = Projector::new(geom.clone(), vgt.clone(), Model::SF)
+                    .with_storage_tier(tier);
+                let plan = p.plan();
+                let mut y = p.new_sino();
+                let mut back = p.new_vol();
+                let mut m = bench.run(
+                    &format!("proj fp+bp sf {gname} [storage {}]", tier.name()),
+                    || {
+                        p.forward_with_plan(&plan, &x, &mut y);
+                        p.back_with_plan(&plan, &y, &mut back);
+                    },
+                );
+                let mvox_t = nvox_t as f64 * 2.0 / m.mean_s / 1e6;
+                m.notes.push(("mvox_per_s".into(), mvox_t));
+                m.notes.push(("threads".into(), p.threads as f64));
+                m.notes.push((
+                    "sino_storage_bytes".into(),
+                    TieredSino::from_sino(tier, &y).storage_bytes() as f64,
+                ));
+                push_rss(&mut m);
+                if tier == StorageTier::F32 {
+                    f32_mean = m.mean_s;
+                    fwd_ref = y.data.clone();
+                    back_ref = back.data.clone();
+                } else {
+                    let d_fwd = rel_l2(&y.data, &fwd_ref);
+                    let d_back = rel_l2(&back.data, &back_ref);
+                    assert!(
+                        d_fwd <= 1e-3 && d_back <= 1e-3,
+                        "{} {gname}: tier accuracy out of class (fwd {d_fwd}, back {d_back})",
+                        tier.name()
+                    );
+                    m.notes.push(("rel_l2_fwd_vs_f32".into(), d_fwd));
+                    m.notes.push(("rel_l2_back_vs_f32".into(), d_back));
+                    m.notes.push(("speedup_vs_f32_tier".into(), f32_mean / m.mean_s));
+                    println!(
+                        "    → {} vs f32 on {gname}: rel-l2 fwd {d_fwd:.2e} back {d_back:.2e} \
+                         ({mvox_t:.1} Mvox/s)",
+                        tier.name()
+                    );
+                }
+                m.print();
+                all.push(m);
+            }
+        }
+    }
+
+    // ── out-of-core tiled execution: peak RSS vs volume size ──
+    // The same scalar-SF cone forward, resident vs tiled under a
+    // residency budget of 1/8 of the volume (which forces repeated
+    // evictions — asserted). Tiled output is bit-identical to resident
+    // output (also asserted, every run). The row pairs volume bytes with
+    // the budget that bounded tile residency and the VmHWM sample, which
+    // is the peak-RSS-vs-volume-size trajectory; `evictions` says how
+    // hard the budget squeezed.
+    {
+        let tiled_cases: Vec<(&str, usize, usize)> = if smoke {
+            vec![("cone 32³/24 tiled", 32, 24)]
+        } else {
+            vec![("cone 48³/48 tiled", 48, 48), ("cone 96³/48 tiled", 96, 48)]
+        };
+        for (tname, n, nviews) in tiled_cases {
+            let vgo = VolumeGeometry::cube(n, 1.0);
+            let go = ConeBeam::standard(nviews, n, (n * 4).div_ceil(3), 1.0, 1.0, 2.0 * n as f64, 4.0 * n as f64);
+            let po = Projector::new(Geometry::Cone(go), vgo.clone(), Model::SF)
+                .with_backend(leap::backend::BackendKind::Scalar);
+            let plan = po.plan();
+            let mut x = po.new_vol();
+            leap::util::rng::Rng::new(90).fill_uniform(&mut x.data, 0.0, 1.0);
+            let volume_bytes = vgo.num_voxels() * 4;
+            let budget = (volume_bytes / 8).max(plan.window_planes() * vgo.nx * 4);
+            let mut resident = po.new_sino();
+            let mut m_res = bench.run(&format!("{tname} resident forward"), || {
+                plan.forward_into(&x, &mut resident)
+            });
+            m_res.notes.push(("volume_bytes".into(), volume_bytes as f64));
+            push_rss(&mut m_res);
+            m_res.print();
+            let mut tiled = po.new_sino();
+            let evictions =
+                leap::vol::tiled_forward_into(&plan, &x, &mut tiled, budget).expect("tiled forward");
+            assert_eq!(
+                tiled.data, resident.data,
+                "{tname}: tiled forward must be bit-identical to resident"
+            );
+            assert!(evictions >= 2, "{tname}: budget {budget} should evict (got {evictions})");
+            let mut m_tiled = bench.run(&format!("{tname} forward (budget {budget} B)"), || {
+                leap::vol::tiled_forward_into(&plan, &x, &mut tiled, budget).expect("tiled forward")
+            });
+            let overhead = m_tiled.mean_s / m_res.mean_s;
+            m_tiled.notes.push(("volume_bytes".into(), volume_bytes as f64));
+            m_tiled.notes.push(("budget_bytes".into(), budget as f64));
+            m_tiled.notes.push(("evictions".into(), evictions as f64));
+            m_tiled.notes.push(("tiled_over_resident".into(), overhead));
+            push_rss(&mut m_tiled);
+            m_tiled.print();
+            println!(
+                "    → tiled vs resident on {tname}: {overhead:.2}× at a {budget} B budget \
+                 ({evictions} evictions, bit-identical)"
+            );
+            all.push(m_res);
+            all.push(m_tiled);
         }
     }
 

@@ -59,6 +59,7 @@ use crate::coordinator::plan_cache;
 use crate::geometry::config::{scan_from_str, ScanConfig};
 use crate::geometry::{Geometry, VolumeGeometry};
 use crate::ops::{LinearOp, Objective, PlanOp, ProjectionLoss, Shape};
+use crate::precision::StorageTier;
 use crate::projector::{Model, ProjectionPlan, Projector};
 use crate::recon;
 use crate::recon::Window;
@@ -168,6 +169,8 @@ pub struct ScanBuilder {
     threads: Option<usize>,
     backend: Option<BackendKind>,
     backend_str: Option<String>,
+    storage: Option<StorageTier>,
+    storage_str: Option<String>,
 }
 
 impl ScanBuilder {
@@ -229,6 +232,26 @@ impl ScanBuilder {
         self
     }
 
+    /// Storage precision tier for data at rest — cached plan coefficient
+    /// tables and backprojection input sinograms (defaults to the process
+    /// default: `LEAP_STORAGE`, else f32 — see
+    /// [`crate::precision::default_tier`]). Accumulation always stays
+    /// f32; see `docs/MEMORY.md` for the per-tier accuracy classes.
+    pub fn storage_tier(mut self, tier: StorageTier) -> ScanBuilder {
+        self.storage = Some(tier);
+        self
+    }
+
+    /// [`Self::storage_tier`] from a tier name (`"f32"`, `"f16"`,
+    /// `"bf16"`), for config- and wire-driven callers. Unknown names are
+    /// a typed [`LeapError::InvalidArgument`] at [`Self::build`] time; a
+    /// typed [`Self::storage_tier`] call takes precedence when both are
+    /// set.
+    pub fn storage_tier_str(mut self, name: &str) -> ScanBuilder {
+        self.storage_str = Some(name.to_string());
+        self
+    }
+
     /// Validate the description and plan the scan. The plan is fetched
     /// from (or inserted into) the process-wide plan cache, so repeated
     /// builds of the same scan share one [`ProjectionPlan`].
@@ -262,6 +285,18 @@ impl ScanBuilder {
                 )));
             }
             projector = projector.with_backend(kind);
+        }
+        let tier = match (self.storage, &self.storage_str) {
+            (Some(t), _) => Some(t),
+            (None, Some(s)) => Some(StorageTier::parse(s.trim()).ok_or_else(|| {
+                LeapError::InvalidArgument(format!(
+                    "unknown storage tier {s:?} (expected f32|f16|bf16)"
+                ))
+            })?),
+            (None, None) => None, // Projector::new took the process default
+        };
+        if let Some(tier) = tier {
+            projector = projector.with_storage_tier(tier);
         }
         let plan = plan_cache::global().get_or_plan(&projector);
         let scratch = Mutex::new((plan.new_vol(), plan.new_sino()));
@@ -328,6 +363,12 @@ impl Scan {
     /// executable tier — [`ScanBuilder::build`] gates the rest).
     pub fn backend(&self) -> BackendKind {
         self.projector.backend
+    }
+
+    /// Storage precision tier this scan's data at rest is held in
+    /// (coefficient tables and backprojection input sinograms).
+    pub fn storage_tier(&self) -> StorageTier {
+        self.projector.storage
     }
 
     /// The scan config this scan was built from (round-trips through

@@ -39,6 +39,7 @@
 
 use crate::array::{Sino, Vol3};
 use crate::geometry::{ConeBeam, FanBeam, ParallelBeam, VolumeGeometry};
+use crate::precision::StorageTier;
 use crate::projector::sf;
 use crate::util::pool::{parallel_chunks, parallel_items_with, ParWriter};
 
@@ -323,15 +324,19 @@ pub(crate) fn forward_cone_simd(
     sino: &mut Sino,
     threads: usize,
 ) {
-    forward_cone_simd_range(vg, g, plans, vol, sino, threads, 0, g.angles.len())
+    forward_cone_simd_range(vg, g, plans, StorageTier::F32, vol, sino, threads, 0, g.angles.len())
 }
 
-/// [`forward_cone_simd`] restricted to the view range `v0..v1`.
+/// [`forward_cone_simd`] restricted to the view range `v0..v1`. `tier`
+/// round-trips on-the-fly scratch plans through the storage tier exactly
+/// like the scalar executor, so the SIMD decode path replays the same
+/// quantized weights a packed cached plan stores.
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn forward_cone_simd_range(
     vg: &VolumeGeometry,
     g: &ConeBeam,
     plans: Option<&[sf::ConeViewPlan]>,
+    tier: StorageTier,
     vol: &Vol3,
     sino: &mut Sino,
     threads: usize,
@@ -357,6 +362,7 @@ pub(crate) fn forward_cone_simd_range(
                 Some(ps) => &ps[view],
                 None => {
                     sf::plan_cone_rows_into(vg, g, view, 0, vg.ny, plan_scratch);
+                    plan_scratch.quantize_in_place(tier);
                     plan_scratch
                 }
             };
@@ -383,16 +389,18 @@ pub(crate) fn back_cone_simd(
     vol: &mut Vol3,
     threads: usize,
 ) {
-    back_cone_simd_range(vg, g, plans, sino, vol, threads, 0, vg.ny)
+    back_cone_simd_range(vg, g, plans, StorageTier::F32, sino, vol, threads, 0, vg.ny)
 }
 
 /// [`back_cone_simd`] restricted to the voxel-row range `u0..u1` (same
-/// per-(k, j) x-row ownership as `sf::back_cone_range`).
+/// per-(k, j) x-row ownership as `sf::back_cone_range`; `tier` as in
+/// [`forward_cone_simd_range`]).
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn back_cone_simd_range(
     vg: &VolumeGeometry,
     g: &ConeBeam,
     plans: Option<&[sf::ConeViewPlan]>,
+    tier: StorageTier,
     sino: &Sino,
     vol: &mut Vol3,
     threads: usize,
@@ -418,20 +426,21 @@ pub(crate) fn back_cone_simd_range(
                 Some(ps) => (&ps[view], 0),
                 None => {
                     sf::plan_cone_rows_into(vg, g, view, j, j + 1, scratch);
+                    scratch.quantize_in_place(tier);
                     (scratch, j)
                 }
             };
             let vdata = sino.view(view);
             for i in 0..vg.nx {
                 let f = vp.foot[(j - j_off) * vg.nx + i];
-                let u_bins = &vp.bins[f.bin0 as usize..f.bin1 as usize];
+                let u_bins = vp.u_bins(&f);
                 // one accumulator block per target voxel: the enumeration
                 // emits a column's coefficients grouped by flat index
                 // (z-slice outer loop), so a flat change is a voxel change
                 let mut cur = usize::MAX;
                 let mut acc = [0.0f32; 4];
                 let mut lane = 0usize;
-                sf::cone_column_coeffs(vg, g, &f, u_bins, j * vg.nx + i, |flat, row, col, coeff| {
+                sf::cone_column_coeffs(vg, g, &f, u_bins, plane, j * vg.nx + i, |flat, row, col, coeff| {
                     if flat != cur {
                         if cur != usize::MAX {
                             out.add(cur, (acc[0] + acc[2]) + (acc[1] + acc[3]));

@@ -39,7 +39,7 @@ pub mod wire;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, Weak};
 use std::time::{Duration, Instant};
 
 use crate::api::LeapError;
@@ -405,6 +405,13 @@ struct Inner {
     /// sheds (typed `BudgetExceeded`) once this many requests are
     /// already queued. `usize::MAX` = unbounded (the `submit` default).
     max_pending: AtomicUsize,
+    /// Observers invoked after every delivered response
+    /// ([`Coordinator::add_completion_hook`]): the serving plane's event
+    /// loop registers its poll waker here so worker completions
+    /// interrupt the poll instead of being discovered by a busy tick.
+    /// Held weakly — a dropped server unregisters by dropping the only
+    /// strong reference, and dead entries prune on the next completion.
+    completion_hooks: Mutex<Vec<Weak<dyn Fn() + Send + Sync>>>,
 }
 
 /// The coordinator: owns the queue and `workers` executor threads.
@@ -425,6 +432,7 @@ impl Coordinator {
             shutdown: AtomicBool::new(false),
             next_ticket: AtomicU64::new(1),
             max_pending: AtomicUsize::new(usize::MAX),
+            completion_hooks: Mutex::new(Vec::new()),
         });
         let handles = (0..workers.max(1))
             .map(|_| {
@@ -504,6 +512,17 @@ impl Coordinator {
 
     pub fn executor(&self) -> &Arc<dyn Executor> {
         &self.inner.exec
+    }
+
+    /// Register a completion observer, invoked (from the completing
+    /// worker's thread) after each response is delivered to its
+    /// channel. The registration is weak: keep the returned hook's only
+    /// strong `Arc` alive for as long as notifications are wanted —
+    /// dropping it unregisters, and the dead entry prunes on the next
+    /// completion. Hooks must be cheap and non-blocking (the serving
+    /// plane registers a [`crate::util::netpoll::Waker`] send).
+    pub fn add_completion_hook(&self, hook: Weak<dyn Fn() + Send + Sync>) {
+        self.inner.completion_hooks.lock().unwrap().push(hook);
     }
 
     /// Drain the queue and stop the workers.
@@ -648,6 +667,21 @@ fn respond(
     };
     inner.telemetry.record(&req.op.label(), latency_us, exec_us, response.ok());
     let _ = job.tx.send(response);
+    // notify completion observers AFTER the send: an event loop woken by
+    // its hook is guaranteed to find the response already in the channel
+    // (its try_recv cannot race ahead of the result). Dead weak entries
+    // prune here, so an abandoned hook costs one failed upgrade.
+    inner
+        .completion_hooks
+        .lock()
+        .unwrap()
+        .retain(|h| match h.upgrade() {
+            Some(f) => {
+                f();
+                true
+            }
+            None => false,
+        });
 }
 
 #[cfg(test)]
@@ -748,6 +782,48 @@ mod tests {
         let mut firsts = vec![r1.outputs[0][0], r2.outputs[0][0]];
         firsts.sort_by(|a, b| a.partial_cmp(b).unwrap());
         assert_eq!(firsts, vec![2.0, 4.0]);
+    }
+
+    #[test]
+    fn completion_hooks_fire_after_delivery_and_prune_when_dropped() {
+        use std::sync::atomic::AtomicUsize;
+        let c = coord(2);
+        let fired = Arc::new(AtomicUsize::new(0));
+        let f2 = fired.clone();
+        let hook: Arc<dyn Fn() + Send + Sync> = Arc::new(move || {
+            f2.fetch_add(1, Ordering::SeqCst);
+        });
+        c.add_completion_hook(Arc::downgrade(&hook));
+        let rx = c.submit(Request::new(1, "echo", vec![vec![1.0]]));
+        rx.recv().unwrap();
+        // the hook runs after the response send, from the worker thread;
+        // the recv above synchronizes with the send but not the hook
+        // call, so poll briefly
+        let mut n = fired.load(Ordering::SeqCst);
+        for _ in 0..200 {
+            if n >= 1 {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(1));
+            n = fired.load(Ordering::SeqCst);
+        }
+        assert_eq!(n, 1, "one completion, one notification");
+        // errors are completions too
+        c.call(Request::new(2, "fail", vec![vec![1.0]]));
+        let mut n = fired.load(Ordering::SeqCst);
+        for _ in 0..200 {
+            if n >= 2 {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(1));
+            n = fired.load(Ordering::SeqCst);
+        }
+        assert_eq!(n, 2, "failed requests still notify");
+        // dropping the strong Arc unregisters: no further notifications
+        drop(hook);
+        c.call(Request::new(3, "echo", vec![vec![1.0]]));
+        std::thread::sleep(Duration::from_millis(20));
+        assert_eq!(fired.load(Ordering::SeqCst), 2, "dropped hooks must not fire");
     }
 
     #[test]

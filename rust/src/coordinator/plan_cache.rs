@@ -76,14 +76,18 @@ impl PlanCache {
     /// Canonical cache key for a projector's scan config. The backend is
     /// part of the key: plans snapshot the kernel tier they dispatch
     /// through ([`ProjectionPlan::backend`]), so a scalar and a SIMD
-    /// session over the same geometry must not share one plan entry.
+    /// session over the same geometry must not share one plan entry. The
+    /// storage tier keys too — a reduced-precision plan packs its
+    /// coefficient tables ([`ProjectionPlan::storage`]), so an f32 and an
+    /// f16 session must not share one either.
     pub fn key_for(p: &Projector) -> String {
         let cfg = ScanConfig { geometry: p.geom.clone(), volume: p.vg.clone() };
         format!(
-            "{}|t{}|b:{}|{}",
+            "{}|t{}|b:{}|s:{}|{}",
             p.model.name(),
             p.threads,
             p.backend.name(),
+            p.storage.name(),
             scan_to_string(&cfg)
         )
     }
@@ -227,6 +231,18 @@ mod tests {
         assert!(!Arc::ptr_eq(&scalar, &simd));
         assert_eq!(scalar.backend(), BackendKind::Scalar);
         assert_eq!(simd.backend(), BackendKind::Simd);
+        assert_eq!(cache.len(), 2);
+    }
+
+    #[test]
+    fn different_storage_tiers_get_distinct_plans() {
+        use crate::precision::StorageTier;
+        let cache = PlanCache::new(4);
+        let f32p = cache.get_or_plan(&projector(6).with_storage_tier(StorageTier::F32));
+        let f16p = cache.get_or_plan(&projector(6).with_storage_tier(StorageTier::F16));
+        assert!(!Arc::ptr_eq(&f32p, &f16p));
+        assert_eq!(f32p.storage(), StorageTier::F32);
+        assert_eq!(f16p.storage(), StorageTier::F16);
         assert_eq!(cache.len(), 2);
     }
 

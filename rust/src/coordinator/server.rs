@@ -40,6 +40,11 @@
 //! connections are in flight in the shared worker pool simultaneously.
 //! OS thread count is O(pool workers + 1), independent of connection
 //! count: hundreds of concurrent sessions cost buffers, not threads.
+//! Worker completions reach the loop through a wakeup fd in the poll
+//! set (a [`crate::util::netpoll::Waker`] registered as a coordinator
+//! completion hook): a finishing worker writes one byte, the poll
+//! returns, the response flushes — no busy tick while requests are in
+//! flight, and the 25 ms idle timeout remains only as a safety net.
 //!
 //! ## Admission control and load shedding
 //!
@@ -65,7 +70,7 @@ use crate::geometry::config::{geometry_to_json, volume_to_json, ScanConfig};
 use crate::projector::Model;
 use crate::tape;
 use crate::util::json::{parse, Json};
-use crate::util::netpoll::{poll_fds, raw_fd, PollFd, POLLIN, POLLOUT};
+use crate::util::netpoll::{poll_fds, raw_fd, PollFd, Waker, POLLIN, POLLOUT};
 
 use super::op::Op;
 use super::request::{
@@ -90,12 +95,15 @@ pub const HANDSHAKE_TIMEOUT: Duration = Duration::from_secs(10);
 /// can retry after draining replies.
 pub const DEFAULT_MAX_INFLIGHT_PER_CONN: usize = 64;
 
-/// Poll timeout while any request is awaiting a worker response —
-/// short, so finished responses reach their sockets promptly.
+/// Fallback poll timeout while requests await worker responses and the
+/// completion waker could not be created (degraded environments without
+/// a loopback): short, so finished responses still reach their sockets
+/// promptly. With a live [`Waker`] the loop never busy-ticks — worker
+/// completions write the wakeup fd and interrupt the poll directly.
 const BUSY_TICK: Duration = Duration::from_millis(1);
-/// Poll timeout when fully idle. Readiness still wakes the loop
-/// immediately (poll returns on the first ready fd); this only bounds
-/// how long a stop request or a handshake deadline waits.
+/// Poll timeout safety net. Readiness (sockets AND the wakeup fd) wakes
+/// the loop immediately; this only bounds how long a stop request, a
+/// handshake deadline, or a lost wakeup waits.
 const IDLE_TICK: Duration = Duration::from_millis(25);
 
 /// Server tuning knobs ([`Server::start_with`]).
@@ -204,10 +212,30 @@ fn event_loop(
 ) {
     let mut conns: Vec<Conn> = Vec::new();
     let mut fds: Vec<PollFd> = Vec::new();
+    // Completion wakeup fd: each worker that finishes a job writes one
+    // byte here (via the coordinator's completion hook), interrupting
+    // the poll immediately — in-flight responses no longer wait on a
+    // 1 ms busy tick. The hook Arc is the registration: dropping it
+    // when the loop exits unregisters from the coordinator. Waker
+    // creation can fail in loopback-less environments; the loop then
+    // degrades to the busy-tick schedule it replaced.
+    let waker = Waker::new().ok().map(Arc::new);
+    let _hook: Option<Arc<dyn Fn() + Send + Sync>> = waker.as_ref().map(|w| {
+        let w = w.clone();
+        let hook: Arc<dyn Fn() + Send + Sync> = Arc::new(move || w.wake());
+        coord.add_completion_hook(Arc::downgrade(&hook));
+        hook
+    });
+    // conns[i] pairs with fds[i + base]
+    let base = 1 + usize::from(waker.is_some());
     while !stop.load(Ordering::SeqCst) {
-        // poll set: listener first, then every connection in order
+        // poll set: listener first, then the waker, then every
+        // connection in order
         fds.clear();
         fds.push(PollFd::new(raw_fd(&listener), POLLIN));
+        if let Some(w) = &waker {
+            fds.push(PollFd::new(w.fd(), POLLIN));
+        }
         for c in &conns {
             let mut ev = 0i16;
             if !c.done_reading {
@@ -218,10 +246,21 @@ fn event_loop(
             }
             fds.push(PollFd::new(raw_fd(&c.stream), ev));
         }
-        let busy = conns.iter().any(|c| c.waiting > 0);
-        poll_fds(&mut fds, if busy { BUSY_TICK } else { IDLE_TICK });
+        let tick = if waker.is_some() {
+            IDLE_TICK // worker completions interrupt the poll directly
+        } else if conns.iter().any(|c| c.waiting > 0) {
+            BUSY_TICK // degraded: no waker, rediscover responses by tick
+        } else {
+            IDLE_TICK
+        };
+        poll_fds(&mut fds, tick);
+        if let Some(w) = &waker {
+            if fds[1].readable() {
+                w.drain();
+            }
+        }
 
-        let polled = conns.len(); // fds[1..=polled] pairs with conns[..polled]
+        let polled = conns.len(); // fds[base..base+polled] pairs with conns[..polled]
 
         // accept every pending connection (new ones join the poll set —
         // and get an immediate first service pass — below)
@@ -248,7 +287,7 @@ fn event_loop(
             // freshly accepted connections (i >= polled) were not in the
             // poll set; their sockets are nonblocking, so an optimistic
             // read costs at most one EWOULDBLOCK
-            if i >= polled || fds[i + 1].readable() {
+            if i >= polled || fds[i + base].readable() {
                 c.fill_rbuf();
             }
             c.process_input(&coord, &registry, &opts);
@@ -573,16 +612,19 @@ impl Conn {
                     // the authoritative id is the frame's native u64 id
                     // field; the meta copy is a decimal string (f64 JSON
                     // numbers round above 2^53). The reply also names
-                    // the compute backend the session resolved to, so
-                    // clients that left the knob unset learn what will
-                    // serve them.
+                    // the compute backend and storage tier the session
+                    // resolved to, so clients that left the knobs unset
+                    // learn what will serve them (and at which accuracy
+                    // class).
                     let backend = registry.backend_of(id).unwrap_or("unknown");
+                    let storage = registry.storage_of(id).unwrap_or("unknown");
                     let reply = Frame::new(
                         FrameKind::OpenSession,
                         id,
                         Json::obj(vec![
                             ("session", Json::Str(id.to_string())),
                             ("backend", Json::Str(backend.to_string())),
+                            ("storage", Json::Str(storage.to_string())),
                         ]),
                         Vec::new(),
                     );
@@ -836,6 +878,17 @@ fn stats_json(doc: &Json, coord: &Coordinator, registry: &SessionRegistry) -> Js
             .map(|(id, b)| (id.to_string(), Json::Str(b.to_string())))
             .collect(),
     );
+    // same shape for storage tiers: the tier a sessionless scan would
+    // get, the tier pinned by each open session, and the bytes of
+    // out-of-core volume tiles currently faulted in process-wide (the
+    // [`crate::vol`] residency gauge)
+    let session_storages = Json::Obj(
+        registry
+            .session_storages()
+            .into_iter()
+            .map(|(id, s)| (id.to_string(), Json::Str(s.to_string())))
+            .collect(),
+    );
     Json::obj(vec![
         ("id", Json::Num(doc.get_f64("id").unwrap_or(0.0))),
         ("stats", coord.telemetry().to_json()),
@@ -846,6 +899,9 @@ fn stats_json(doc: &Json, coord: &Coordinator, registry: &SessionRegistry) -> Js
         ("pool_regions", Json::Num(pool_regions as f64)),
         ("default_backend", Json::Str(crate::backend::default_kind().name().to_string())),
         ("session_backends", session_backends),
+        ("default_storage", Json::Str(crate::precision::default_tier().name().to_string())),
+        ("session_storages", session_storages),
+        ("resident_tile_bytes", Json::Num(crate::vol::resident_tile_bytes() as f64)),
     ])
 }
 
@@ -992,6 +1048,24 @@ impl BinaryClient {
         threads: Option<usize>,
         backend: Option<&str>,
     ) -> Result<(u64, String), LeapError> {
+        self.open_session_tiered(cfg, model, threads, backend, None)
+            .map(|(id, backend, _storage)| (id, backend))
+    }
+
+    /// [`BinaryClient::open_session_with`] plus an explicit storage-tier
+    /// request (`"f32"`/`"f16"`/`"bf16"`; unknown names are typed
+    /// server-side errors). Returns the session id with the backend and
+    /// storage names the server actually resolved — unset knobs report
+    /// the server process's defaults, so clients always learn which
+    /// kernel tier and accuracy class will serve them.
+    pub fn open_session_tiered(
+        &mut self,
+        cfg: &ScanConfig,
+        model: Model,
+        threads: Option<usize>,
+        backend: Option<&str>,
+        storage: Option<&str>,
+    ) -> Result<(u64, String, String), LeapError> {
         let mut meta = vec![
             (
                 "config",
@@ -1008,12 +1082,16 @@ impl BinaryClient {
         if let Some(b) = backend {
             meta.push(("backend", Json::Str(b.to_string())));
         }
+        if let Some(s) = storage {
+            meta.push(("storage", Json::Str(s.to_string())));
+        }
         let reply =
             self.roundtrip(&Frame::new(FrameKind::OpenSession, 0, Json::obj(meta), Vec::new()))?;
         match reply.kind {
             FrameKind::OpenSession => {
                 let backend = reply.meta.get_str("backend").unwrap_or("unknown").to_string();
-                Ok((reply.id, backend))
+                let storage = reply.meta.get_str("storage").unwrap_or("unknown").to_string();
+                Ok((reply.id, backend, storage))
             }
             FrameKind::Error => Err(reply.to_error()),
             k => Err(LeapError::Protocol(format!("unexpected {k:?} open-session reply"))),
@@ -1423,6 +1501,48 @@ mod tests {
         let e = client.open_session_with(&cfg, Model::SF, None, Some("pjrt")).unwrap_err();
         assert_eq!(e.code(), crate::api::codes::UNSUPPORTED, "{e:?}");
         let e = client.open_session_with(&cfg, Model::SF, None, Some("warp")).unwrap_err();
+        assert_eq!(e.code(), crate::api::codes::INVALID_ARGUMENT, "{e:?}");
+    }
+
+    #[test]
+    fn v2_sessions_negotiate_and_report_their_storage_tier() {
+        let (server, _coord) = start_native();
+        let cfg = scan_config();
+        let mut client = BinaryClient::connect(&server.addr).unwrap();
+        let (f32_id, _, f32_tier) =
+            client.open_session_tiered(&cfg, Model::SF, Some(2), None, Some("f32")).unwrap();
+        assert_eq!(f32_tier, "f32");
+        let (f16_id, _, f16_tier) =
+            client.open_session_tiered(&cfg, Model::SF, Some(2), None, Some("f16")).unwrap();
+        assert_eq!(f16_tier, "f16");
+        // parallel-beam SF forward stores no coefficient table, so the
+        // two tiers agree bit-for-bit on the wire (docs/MEMORY.md
+        // accuracy classes)
+        let mut vol = vec![0.0f32; 256];
+        crate::util::rng::Rng::new(33).fill_uniform(&mut vol, 0.0, 1.0);
+        assert_eq!(
+            client.forward(f32_id, &vol).unwrap(),
+            client.forward(f16_id, &vol).unwrap(),
+        );
+        // an unset knob resolves to the process default — and the reply
+        // says which tier that was
+        let (_dflt_id, _, dflt_tier) =
+            client.open_session_tiered(&cfg, Model::SF, None, None, None).unwrap();
+        assert!(["f32", "f16", "bf16"].contains(&dflt_tier.as_str()), "{dflt_tier}");
+        // v1 telemetry exposes the default, the per-session tiers and
+        // the out-of-core residency gauge
+        let mut v1 = Client::connect(&server.addr).unwrap();
+        let stats = v1.stats().unwrap();
+        assert_eq!(stats.get_str("default_storage"), Some(dflt_tier.as_str()));
+        let per_session = stats.get("session_storages").expect("per-session storage map");
+        assert_eq!(per_session.get_str(&f32_id.to_string()), Some("f32"));
+        assert_eq!(per_session.get_str(&f16_id.to_string()), Some("f16"));
+        assert!(stats.get_f64("resident_tile_bytes").is_some());
+        // unknown tier names are typed errors on the wire, never a
+        // silent fallback
+        let e = client
+            .open_session_tiered(&cfg, Model::SF, None, None, Some("f8"))
+            .unwrap_err();
         assert_eq!(e.code(), crate::api::codes::INVALID_ARGUMENT, "{e:?}");
     }
 

@@ -28,6 +28,7 @@ use crate::api::{LeapError, ScanBuilder};
 use crate::backend::BackendKind;
 use crate::geometry::config::{geometry_from_json, volume_from_json, ScanConfig};
 use crate::ops::{LinearOp, PlanOp};
+use crate::precision::StorageTier;
 use crate::projector::Model;
 use crate::tape;
 use crate::util::json::Json;
@@ -67,6 +68,11 @@ pub struct Session {
     /// through — reported in the OpenSession reply meta and `__stats`,
     /// so served results are attributable to a kernel tier.
     backend: &'static str,
+    /// Name of the storage tier the session's pinned plan holds its
+    /// data at rest in (coefficient tables, backprojection sinogram
+    /// input) — reported in the OpenSession reply meta and `__stats`,
+    /// so served results are attributable to an accuracy class.
+    storage: &'static str,
     pipelines: Mutex<HashMap<u64, Arc<tape::Pipeline>>>,
     next_pipeline: AtomicU64,
 }
@@ -106,14 +112,14 @@ impl SessionRegistry {
     }
 
     /// Validate `cfg` and open a session for it on the process-default
-    /// compute backend (see [`Self::open_with`]).
+    /// compute backend and storage tier (see [`Self::open_with`]).
     pub fn open(
         &self,
         cfg: &ScanConfig,
         model: Model,
         threads: Option<usize>,
     ) -> Result<u64, LeapError> {
-        self.open_with(cfg, model, threads, None)
+        self.open_with(cfg, model, threads, None, None)
     }
 
     /// Validate `cfg` and open a session for it. The scan is planned
@@ -121,13 +127,17 @@ impl SessionRegistry {
     /// resulting plan until [`SessionRegistry::close`]. `backend`
     /// selects the compute backend (`None` = process default); the
     /// non-executing PJRT slot is a typed [`LeapError::Unsupported`]
-    /// from the builder's capability gate.
+    /// from the builder's capability gate. `storage` selects the
+    /// data-at-rest storage tier (`None` = process default, see
+    /// `LEAP_STORAGE`); reduced tiers pack the plan's coefficient
+    /// tables, so two sessions on different tiers never share a plan.
     pub fn open_with(
         &self,
         cfg: &ScanConfig,
         model: Model,
         threads: Option<usize>,
         backend: Option<BackendKind>,
+        storage: Option<StorageTier>,
     ) -> Result<u64, LeapError> {
         // Count gate BEFORE the expensive planning below (approximate —
         // concurrent opens may overshoot by the number in flight; the
@@ -175,12 +185,17 @@ impl SessionRegistry {
         if let Some(k) = backend {
             builder = builder.backend(k);
         }
+        if let Some(t) = storage {
+            builder = builder.storage_tier(t);
+        }
         let scan = builder.build()?;
         let backend_name = scan.backend().name();
+        let storage_name = scan.storage_tier().name();
         let exec = NativeExecutor::with_plan(scan.projector().clone(), scan.plan().clone());
         let session = Session {
             exec: Arc::new(exec),
             backend: backend_name,
+            storage: storage_name,
             pipelines: Mutex::new(HashMap::new()),
             next_pipeline: AtomicU64::new(1),
         };
@@ -202,8 +217,9 @@ impl SessionRegistry {
 
     /// Open a session from OpenSession frame meta:
     /// `{"config": {"geometry": …, "volume": …}, "model": "sf",
-    ///   "threads": n, "backend": "simd"}` (model, threads and backend
-    /// optional; an absent backend takes the process default).
+    ///   "threads": n, "backend": "simd", "storage": "f16"}` (model,
+    /// threads, backend and storage optional; absent knobs take the
+    /// process defaults).
     pub fn open_from_meta(&self, meta: &Json) -> Result<u64, LeapError> {
         let cfg_json = meta
             .get("config")
@@ -234,7 +250,15 @@ impl SessionRegistry {
                 ))
             })?),
         };
-        self.open_with(&ScanConfig { geometry, volume }, model, threads, backend)
+        let storage = match meta.get_str("storage") {
+            None => None,
+            Some(name) => Some(StorageTier::parse(name).ok_or_else(|| {
+                LeapError::InvalidArgument(format!(
+                    "unknown storage tier {name:?} (expected f32|f16|bf16)"
+                ))
+            })?),
+        };
+        self.open_with(&ScanConfig { geometry, volume }, model, threads, backend, storage)
     }
 
     /// Drop a session — its registered pipelines go with it (their plan
@@ -260,6 +284,22 @@ impl SessionRegistry {
     pub fn session_backends(&self) -> Vec<(u64, &'static str)> {
         let mut v: Vec<(u64, &'static str)> =
             self.sessions.lock().unwrap().iter().map(|(&id, s)| (id, s.backend)).collect();
+        v.sort_unstable_by_key(|&(id, _)| id);
+        v
+    }
+
+    /// Name of the storage tier serving session `id` (for the
+    /// OpenSession reply meta and `__stats` telemetry).
+    pub fn storage_of(&self, id: u64) -> Option<&'static str> {
+        self.sessions.lock().unwrap().get(&id).map(|s| s.storage)
+    }
+
+    /// Snapshot of `(session id, storage tier name)` for every open
+    /// session, id-ordered — `__stats` reports which accuracy class
+    /// serves each one.
+    pub fn session_storages(&self) -> Vec<(u64, &'static str)> {
+        let mut v: Vec<(u64, &'static str)> =
+            self.sessions.lock().unwrap().iter().map(|(&id, s)| (id, s.storage)).collect();
         v.sort_unstable_by_key(|&(id, _)| id);
         v
     }
@@ -590,10 +630,10 @@ mod tests {
         use crate::backend::BackendKind;
         let reg = SessionRegistry::new();
         let scalar = reg
-            .open_with(&config(6), Model::SF, Some(2), Some(BackendKind::Scalar))
+            .open_with(&config(6), Model::SF, Some(2), Some(BackendKind::Scalar), None)
             .unwrap();
         let simd = reg
-            .open_with(&config(6), Model::SF, Some(2), Some(BackendKind::Simd))
+            .open_with(&config(6), Model::SF, Some(2), Some(BackendKind::Simd), None)
             .unwrap();
         assert_eq!(reg.backend_of(scalar), Some("scalar"));
         assert_eq!(reg.backend_of(simd), Some("simd"));
@@ -604,9 +644,56 @@ mod tests {
         assert_eq!(reg.backend_of(u64::MAX), None);
         // the PJRT slot is capability-gated before any plan is built
         let e = reg
-            .open_with(&config(6), Model::SF, None, Some(BackendKind::Pjrt))
+            .open_with(&config(6), Model::SF, None, Some(BackendKind::Pjrt), None)
             .unwrap_err();
         assert!(matches!(e, LeapError::Unsupported(ref m) if m.contains("pjrt")), "{e:?}");
+    }
+
+    #[test]
+    fn sessions_carry_their_storage_tier() {
+        let reg = SessionRegistry::new();
+        let f32s = reg
+            .open_with(&config(6), Model::SF, Some(1), None, Some(StorageTier::F32))
+            .unwrap();
+        let f16s = reg
+            .open_with(&config(6), Model::SF, Some(1), None, Some(StorageTier::F16))
+            .unwrap();
+        let bf16s = reg
+            .open_with(&config(6), Model::SF, Some(1), None, Some(StorageTier::Bf16))
+            .unwrap();
+        assert_eq!(reg.storage_of(f32s), Some("f32"));
+        assert_eq!(reg.storage_of(f16s), Some("f16"));
+        assert_eq!(reg.storage_of(bf16s), Some("bf16"));
+        assert_eq!(reg.storage_of(u64::MAX), None);
+        // default-tier sessions report whatever the process resolved to
+        let dflt = reg.open(&config(7), Model::SF, Some(1)).unwrap();
+        let name = reg.storage_of(dflt).unwrap();
+        assert!(["f32", "f16", "bf16"].contains(&name), "{name}");
+        // id-ordered snapshot covers every open session
+        let snap = reg.session_storages();
+        assert_eq!(snap.len(), 4);
+        assert!(snap.windows(2).all(|w| w[0].0 < w[1].0));
+        assert!(snap.iter().any(|&(id, s)| id == f16s && s == "f16"));
+    }
+
+    #[test]
+    fn open_from_meta_parses_the_storage_knob() {
+        let reg = SessionRegistry::new();
+        let meta = parse(
+            r#"{"config": {"geometry": {"type": "parallel", "ncols": 18, "nviews": 6},
+                           "volume": {"nx": 12}},
+                "model": "sf", "threads": 2, "storage": "f16"}"#,
+        )
+        .unwrap();
+        let id = reg.open_from_meta(&meta).unwrap();
+        assert_eq!(reg.storage_of(id), Some("f16"));
+
+        let bad = parse(
+            r#"{"config": {"geometry": {"type": "parallel", "ncols": 8, "nviews": 4},
+                           "volume": {"nx": 8}}, "storage": "f8"}"#,
+        )
+        .unwrap();
+        assert!(matches!(reg.open_from_meta(&bad), Err(LeapError::InvalidArgument(_))));
     }
 
     #[test]

@@ -24,6 +24,18 @@
 //!   planned [`api::Scan`] with fallible `forward`/`back`/`solve`/
 //!   `loss_grad`; the layers below are the panicking kernel layer that
 //!   `Scan` dispatches to after validation.
+//! * [`precision`] — reduced-precision **storage tiers**
+//!   ([`precision::StorageTier`]: f32 / f16 / bf16, software-converted,
+//!   no new deps): data at rest — cached plan coefficient tables and
+//!   backprojection input sinograms — is held at the tier while every
+//!   accumulation stays f32, keeping results bit-identical across
+//!   thread counts within a tier. Selected per scan via
+//!   [`api::ScanBuilder::storage_tier`] or process-wide via
+//!   `LEAP_STORAGE`; see `docs/MEMORY.md`.
+//! * [`vol`] — out-of-core volumes: [`vol::TiledVol3`] keeps
+//!   slab-granular tiles on a file-backed store under a configurable
+//!   residency budget and schedules the projector's range executors
+//!   tile by tile — bit-identical to resident execution.
 //! * [`backend`] — pluggable compute backends for the projection
 //!   kernels: the scalar reference tier, the SIMD throughput tier
 //!   (staged, lane-unrolled accumulation over the same coefficient
@@ -103,9 +115,11 @@
 pub mod util;
 pub mod geometry;
 pub mod array;
+pub mod precision;
 pub mod api;
 pub mod backend;
 pub mod projector;
+pub mod vol;
 pub mod ops;
 pub mod tape;
 pub mod sysmatrix;
@@ -120,3 +134,4 @@ pub mod bench_harness;
 pub use api::{LeapError, Scan, ScanBuilder, Solver};
 pub use array::{Sino, Vol3};
 pub use geometry::{ConeBeam, FanBeam, Geometry, ModularBeam, ParallelBeam, VolumeGeometry};
+pub use precision::StorageTier;

@@ -1,0 +1,540 @@
+//! Reduced-precision storage tiers: software f16 / bf16 conversion and
+//! tier-quantized buffers — no external crates, no hardware intrinsics.
+//!
+//! The paper's stated edge over peer libraries is a minimal memory
+//! footprint; peers make the same trade explicitly (TorchRadon ships
+//! half-precision projection kernels, CTorch benchmarks fp16 *storage*
+//! with fp32 *accumulation* as the practical operating point). This
+//! module supplies that seam for the projector core:
+//!
+//! * [`StorageTier`] names the at-rest precision of bulk data —
+//!   sinograms fed to backprojection and the cone-beam SF plan's
+//!   detector-column weight arena. `F32` is the exact tier and a strict
+//!   no-op on every code path.
+//! * Conversions are **round-to-nearest-even** encodes plus exact
+//!   decodes, bit-exact against the IEEE 754 binary16 / bfloat16
+//!   layouts (exhaustively round-trip-tested over all 2^16 patterns).
+//! * **Accumulation always stays f32.** Tiered values are decoded to
+//!   f32 registers inside the kernels; only storage narrows. Within a
+//!   tier results are bit-identical across thread counts (the PR 2/6
+//!   determinism story), and toleranced against the f32 tier.
+//!
+//! Selection threads end-to-end like PR 6's backends: typed
+//! [`crate::ScanBuilder::storage_tier`] knob, `LEAP_STORAGE` env
+//! default, `"storage"` session meta on the v2 wire, and a plan-cache
+//! key component.
+
+use std::sync::OnceLock;
+
+/// At-rest precision of bulk projector data (sinograms, plan weight
+/// tables). Compute and accumulation are always f32 regardless of tier.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, Default)]
+pub enum StorageTier {
+    /// Exact storage — the reference tier; every path is unchanged.
+    #[default]
+    F32,
+    /// IEEE 754 binary16: 10 mantissa bits (~3 significant decimal
+    /// digits, max ±65504). Accuracy class ~1e-4..1e-3 relative l2.
+    F16,
+    /// bfloat16: 7 mantissa bits, full f32 exponent range. Accuracy
+    /// class ~1e-3..1e-2 relative l2; immune to overflow at f16's edge.
+    Bf16,
+}
+
+impl StorageTier {
+    /// Stable lowercase name — used in plan-cache keys, wire meta, env
+    /// parsing and telemetry.
+    pub fn name(&self) -> &'static str {
+        match self {
+            StorageTier::F32 => "f32",
+            StorageTier::F16 => "f16",
+            StorageTier::Bf16 => "bf16",
+        }
+    }
+
+    /// Parse a tier name (the inverse of [`StorageTier::name`]).
+    pub fn parse(s: &str) -> Option<StorageTier> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "f32" | "fp32" | "float32" | "single" => Some(StorageTier::F32),
+            "f16" | "fp16" | "float16" | "half" => Some(StorageTier::F16),
+            "bf16" | "bfloat16" => Some(StorageTier::Bf16),
+            _ => None,
+        }
+    }
+
+    /// Every tier, reference first.
+    pub fn all() -> [StorageTier; 3] {
+        [StorageTier::F32, StorageTier::F16, StorageTier::Bf16]
+    }
+
+    /// Bytes per stored sample.
+    pub fn bytes_per_sample(&self) -> usize {
+        match self {
+            StorageTier::F32 => 4,
+            StorageTier::F16 | StorageTier::Bf16 => 2,
+        }
+    }
+
+    /// Encode one f32 into this tier's 16-bit pattern (RNE). Panics in
+    /// debug builds if called on the `F32` tier, which has no 16-bit form.
+    #[inline]
+    pub fn encode_bits(&self, x: f32) -> u16 {
+        match self {
+            StorageTier::F32 => {
+                debug_assert!(false, "F32 tier has no 16-bit encoding");
+                0
+            }
+            StorageTier::F16 => f32_to_f16_bits(x),
+            StorageTier::Bf16 => f32_to_bf16_bits(x),
+        }
+    }
+
+    /// Decode one 16-bit pattern of this tier to f32 (exact).
+    #[inline]
+    pub fn decode_bits(&self, bits: u16) -> f32 {
+        match self {
+            StorageTier::F32 => {
+                debug_assert!(false, "F32 tier has no 16-bit encoding");
+                0.0
+            }
+            StorageTier::F16 => f16_bits_to_f32(bits),
+            StorageTier::Bf16 => f32::from_bits((bits as u32) << 16),
+        }
+    }
+
+    /// Round-trip one value through this tier's storage format: the
+    /// value a kernel's f32 register holds after decoding tiered data.
+    /// Identity on the `F32` tier.
+    #[inline]
+    pub fn quantize(&self, x: f32) -> f32 {
+        match self {
+            StorageTier::F32 => x,
+            _ => self.decode_bits(self.encode_bits(x)),
+        }
+    }
+
+    /// Round-trip every element of `data` in place. No-op on `F32`.
+    pub fn quantize_slice(&self, data: &mut [f32]) {
+        if *self == StorageTier::F32 {
+            return;
+        }
+        for v in data.iter_mut() {
+            *v = self.decode_bits(self.encode_bits(*v));
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// software binary16 (f16)
+// ---------------------------------------------------------------------------
+
+/// f32 → IEEE 754 binary16 bit pattern, round-to-nearest-even.
+/// Handles normals, subnormals, ±0, ±inf and NaN (NaN stays NaN).
+#[inline]
+pub fn f32_to_f16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xff) as i32;
+    let man = bits & 0x007f_ffff;
+    if exp == 0xff {
+        // inf / NaN: keep NaN quiet by forcing a mantissa bit
+        return if man == 0 { sign | 0x7c00 } else { sign | 0x7e00 };
+    }
+    // re-bias: f32 bias 127 → f16 bias 15
+    let e = exp - 112;
+    if e >= 0x1f {
+        return sign | 0x7c00; // overflow → inf
+    }
+    if e <= 0 {
+        if e < -10 {
+            return sign; // underflows past half the smallest subnormal
+        }
+        // subnormal: shift the 24-bit significand (implicit bit set)
+        // right so the result scales by 2^-24 per unit
+        let full = man | 0x0080_0000;
+        let shift = (14 - e) as u32;
+        let half = full >> shift;
+        let round_bit = 1u32 << (shift - 1);
+        let rem = full & ((1u32 << shift) - 1);
+        let mut h = half as u16;
+        if rem > round_bit || (rem == round_bit && (h & 1) != 0) {
+            h += 1; // may carry into the exponent — that is correct RNE
+        }
+        return sign | h;
+    }
+    // normal: drop 13 mantissa bits with RNE; a carry out of the
+    // mantissa rolls into the exponent (up to inf), which is correct
+    let mut h = ((e as u32) << 10 | (man >> 13)) as u16;
+    let rem = man & 0x1fff;
+    if rem > 0x1000 || (rem == 0x1000 && (h & 1) != 0) {
+        h = h.wrapping_add(1);
+    }
+    sign | h
+}
+
+/// IEEE 754 binary16 bit pattern → f32 (exact: every f16 value is
+/// representable in f32).
+#[inline]
+pub fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1f) as u32;
+    let man = (h & 0x3ff) as u32;
+    let bits = if exp == 0 {
+        if man == 0 {
+            sign // ±0
+        } else {
+            // subnormal: value = man · 2^-24; normalize into f32
+            let n = 31 - man.leading_zeros(); // MSB position, 0..=9
+            sign | ((n + 103) << 23) | ((man << (23 - n)) & 0x007f_ffff)
+        }
+    } else if exp == 0x1f {
+        sign | 0x7f80_0000 | (man << 13) // inf / NaN
+    } else {
+        sign | ((exp + 112) << 23) | (man << 13)
+    };
+    f32::from_bits(bits)
+}
+
+// ---------------------------------------------------------------------------
+// software bfloat16
+// ---------------------------------------------------------------------------
+
+/// f32 → bfloat16 bit pattern, round-to-nearest-even (truncation of the
+/// low 16 bits with carry). NaN stays a quiet NaN.
+#[inline]
+pub fn f32_to_bf16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    if x.is_nan() {
+        return ((bits >> 16) as u16) | 0x0040;
+    }
+    let rem = bits & 0xffff;
+    let mut h = (bits >> 16) as u16;
+    if rem > 0x8000 || (rem == 0x8000 && (h & 1) != 0) {
+        h = h.wrapping_add(1); // carry may roll a large finite into inf — correct RNE
+    }
+    h
+}
+
+/// bfloat16 bit pattern → f32 (exact by construction).
+#[inline]
+pub fn bf16_bits_to_f32(h: u16) -> f32 {
+    f32::from_bits((h as u32) << 16)
+}
+
+// ---------------------------------------------------------------------------
+// tiered buffers
+// ---------------------------------------------------------------------------
+
+/// A buffer of samples held at a storage tier's precision. `F32` keeps
+/// the data exact; the 16-bit tiers store encoded patterns and decode
+/// to f32 on read.
+#[derive(Clone, Debug)]
+pub enum TieredBuf {
+    F32(Vec<f32>),
+    Half { tier: StorageTier, bits: Vec<u16> },
+}
+
+impl TieredBuf {
+    /// Encode an f32 slice into tier storage.
+    pub fn encode(tier: StorageTier, data: &[f32]) -> TieredBuf {
+        match tier {
+            StorageTier::F32 => TieredBuf::F32(data.to_vec()),
+            t => TieredBuf::Half { tier: t, bits: data.iter().map(|&x| t.encode_bits(x)).collect() },
+        }
+    }
+
+    pub fn tier(&self) -> StorageTier {
+        match self {
+            TieredBuf::F32(_) => StorageTier::F32,
+            TieredBuf::Half { tier, .. } => *tier,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            TieredBuf::F32(d) => d.len(),
+            TieredBuf::Half { bits, .. } => bits.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Bytes of sample storage (excluding the enum header).
+    pub fn storage_bytes(&self) -> usize {
+        self.len() * self.tier().bytes_per_sample()
+    }
+
+    /// Decode one sample to f32.
+    #[inline]
+    pub fn get(&self, i: usize) -> f32 {
+        match self {
+            TieredBuf::F32(d) => d[i],
+            TieredBuf::Half { tier, bits } => tier.decode_bits(bits[i]),
+        }
+    }
+
+    /// Decode `range` into `out` (which must have the range's length).
+    pub fn decode_range_into(&self, start: usize, out: &mut [f32]) {
+        match self {
+            TieredBuf::F32(d) => out.copy_from_slice(&d[start..start + out.len()]),
+            TieredBuf::Half { tier, bits } => {
+                for (o, &b) in out.iter_mut().zip(&bits[start..start + out.len()]) {
+                    *o = tier.decode_bits(b);
+                }
+            }
+        }
+    }
+
+    /// Decode the whole buffer to a fresh f32 vector.
+    pub fn decode(&self) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.len()];
+        self.decode_range_into(0, &mut out);
+        out
+    }
+}
+
+/// A sinogram held at a storage tier's precision — the "tiered storage
+/// variant" of [`crate::array::Sino`]. Layout matches `Sino`
+/// (view-major, then row, then column); decode is exact, so
+/// `from_sino → to_sino` equals quantizing every sample through the
+/// tier.
+#[derive(Clone, Debug)]
+pub struct TieredSino {
+    pub nviews: usize,
+    pub nrows: usize,
+    pub ncols: usize,
+    pub data: TieredBuf,
+}
+
+impl TieredSino {
+    /// Encode a sinogram into tier storage.
+    pub fn from_sino(tier: StorageTier, sino: &crate::array::Sino) -> TieredSino {
+        TieredSino {
+            nviews: sino.nviews,
+            nrows: sino.nrows,
+            ncols: sino.ncols,
+            data: TieredBuf::encode(tier, &sino.data),
+        }
+    }
+
+    pub fn tier(&self) -> StorageTier {
+        self.data.tier()
+    }
+
+    /// Bytes of sample storage.
+    pub fn storage_bytes(&self) -> usize {
+        self.data.storage_bytes()
+    }
+
+    /// Decode the full sinogram back to f32.
+    pub fn to_sino(&self) -> crate::array::Sino {
+        let mut s = crate::array::Sino::zeros(self.nviews, self.nrows, self.ncols);
+        self.data.decode_range_into(0, &mut s.data);
+        s
+    }
+
+    /// Decode one view's slab into `out` (`nrows · ncols` samples).
+    pub fn view_into(&self, view: usize, out: &mut [f32]) {
+        let slab = self.nrows * self.ncols;
+        assert_eq!(out.len(), slab);
+        self.data.decode_range_into(view * slab, out);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// process default (env-resolved, like backend::default_kind)
+// ---------------------------------------------------------------------------
+
+/// Parse `LEAP_STORAGE` leniently: unset or unrecognized → `None`
+/// (callers fall back to [`StorageTier::F32`]). Mirrors
+/// `backend::kind_from_env`.
+pub fn tier_from_env() -> Option<StorageTier> {
+    std::env::var("LEAP_STORAGE").ok().and_then(|s| StorageTier::parse(&s))
+}
+
+/// The process-default storage tier: `LEAP_STORAGE` if set and valid,
+/// else `F32`. Resolved once.
+pub fn default_tier() -> StorageTier {
+    static DEFAULT: OnceLock<StorageTier> = OnceLock::new();
+    *DEFAULT.get_or_init(|| tier_from_env().unwrap_or(StorageTier::F32))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f16_round_trip_is_bit_exact_for_all_patterns() {
+        // every binary16 value decodes to an exactly-representable f32;
+        // re-encoding must return the identical bits (NaNs: stay NaN)
+        for h in 0..=u16::MAX {
+            let x = f16_bits_to_f32(h);
+            if x.is_nan() {
+                assert!(f16_bits_to_f32(f32_to_f16_bits(x)).is_nan(), "{h:#06x}");
+                continue;
+            }
+            assert_eq!(f32_to_f16_bits(x), h, "pattern {h:#06x} decoded to {x}");
+        }
+    }
+
+    #[test]
+    fn bf16_round_trip_is_bit_exact_for_all_patterns() {
+        for h in 0..=u16::MAX {
+            let x = bf16_bits_to_f32(h);
+            if x.is_nan() {
+                assert!(bf16_bits_to_f32(f32_to_bf16_bits(x)).is_nan(), "{h:#06x}");
+                continue;
+            }
+            assert_eq!(f32_to_bf16_bits(x), h, "pattern {h:#06x} decoded to {x}");
+        }
+    }
+
+    #[test]
+    fn f16_known_values() {
+        assert_eq!(f32_to_f16_bits(0.0), 0x0000);
+        assert_eq!(f32_to_f16_bits(-0.0), 0x8000);
+        assert_eq!(f32_to_f16_bits(1.0), 0x3c00);
+        assert_eq!(f32_to_f16_bits(-2.0), 0xc000);
+        assert_eq!(f32_to_f16_bits(65504.0), 0x7bff); // f16 max
+        assert_eq!(f32_to_f16_bits(65536.0), 0x7c00); // overflow → inf
+        assert_eq!(f32_to_f16_bits(f32::INFINITY), 0x7c00);
+        assert_eq!(f32_to_f16_bits(f32::NEG_INFINITY), 0xfc00);
+        assert_eq!(f16_bits_to_f32(0x0001), 5.960_464_5e-8); // smallest subnormal
+        assert_eq!(f16_bits_to_f32(0x0400), 6.103_515_6e-5); // smallest normal
+        assert_eq!(f32_to_f16_bits(5.960_464_5e-8), 0x0001);
+        // below half the smallest subnormal → 0
+        assert_eq!(f32_to_f16_bits(1.0e-8), 0x0000);
+        assert!(f16_bits_to_f32(f32_to_f16_bits(f32::NAN)).is_nan());
+    }
+
+    #[test]
+    fn f16_rounds_to_nearest_even() {
+        // 1 + 2^-11 is exactly halfway between 1.0 and the next f16
+        // (1 + 2^-10): ties go to the even mantissa (1.0)
+        let halfway = 1.0 + 2.0f32.powi(-11);
+        assert_eq!(f32_to_f16_bits(halfway), 0x3c00);
+        // just above the tie rounds up
+        assert_eq!(f32_to_f16_bits(1.0 + 2.0f32.powi(-11) + 2.0f32.powi(-20)), 0x3c01);
+        // (1 + 2^-10) + 2^-11 is halfway between odd 0x3c01 and even 0x3c02
+        let tie_up = 1.0 + 2.0f32.powi(-10) + 2.0f32.powi(-11);
+        assert_eq!(f32_to_f16_bits(tie_up), 0x3c02);
+    }
+
+    #[test]
+    fn bf16_known_values_and_rne() {
+        assert_eq!(f32_to_bf16_bits(0.0), 0x0000);
+        assert_eq!(f32_to_bf16_bits(1.0), 0x3f80);
+        assert_eq!(f32_to_bf16_bits(-1.0), 0xbf80);
+        assert_eq!(f32_to_bf16_bits(f32::INFINITY), 0x7f80);
+        // f32::MAX rounds up past bf16 max → inf (RNE carry)
+        assert_eq!(f32_to_bf16_bits(f32::MAX), 0x7f80);
+        // 1 + 2^-8 is halfway between 1.0 and 1 + 2^-7: tie to even
+        assert_eq!(f32_to_bf16_bits(1.0 + 2.0f32.powi(-8)), 0x3f80);
+        assert_eq!(f32_to_bf16_bits(1.0 + 2.0f32.powi(-8) + 2.0f32.powi(-16)), 0x3f81);
+        assert!(bf16_bits_to_f32(f32_to_bf16_bits(f32::NAN)).is_nan());
+    }
+
+    #[test]
+    fn quantize_error_is_bounded_per_tier() {
+        // RNE quantization error ≤ half a ULP: relative ≤ 2^-11 (f16)
+        // and ≤ 2^-8 (bf16) for normal-range values
+        let mut rng = crate::util::rng::Rng::new(612);
+        let mut xs = vec![0.0f32; 4096];
+        rng.fill_uniform(&mut xs, -100.0, 100.0);
+        for (tier, bound) in [(StorageTier::F16, 2.0f64.powi(-11)), (StorageTier::Bf16, 2.0f64.powi(-8))]
+        {
+            for &x in &xs {
+                let q = tier.quantize(x);
+                let rel = ((q as f64 - x as f64) / (x as f64).abs().max(1e-12)).abs();
+                assert!(rel <= bound, "{}: {x} → {q} rel {rel}", tier.name());
+            }
+        }
+        // F32 is the identity, bit for bit
+        for &x in &xs {
+            assert_eq!(StorageTier::F32.quantize(x).to_bits(), x.to_bits());
+        }
+    }
+
+    #[test]
+    fn quantize_is_idempotent() {
+        // storing already-tiered data must not drift: decode(encode(x))
+        // is a fixed point of the round-trip
+        let mut rng = crate::util::rng::Rng::new(613);
+        let mut xs = vec![0.0f32; 1024];
+        rng.fill_uniform(&mut xs, -10.0, 10.0);
+        for tier in [StorageTier::F16, StorageTier::Bf16] {
+            for &x in &xs {
+                let q = tier.quantize(x);
+                assert_eq!(tier.quantize(q).to_bits(), q.to_bits(), "{}: {x}", tier.name());
+            }
+        }
+    }
+
+    #[test]
+    fn tier_names_parse_and_round_trip() {
+        for tier in StorageTier::all() {
+            assert_eq!(StorageTier::parse(tier.name()), Some(tier));
+        }
+        assert_eq!(StorageTier::parse("FP16"), Some(StorageTier::F16));
+        assert_eq!(StorageTier::parse("half"), Some(StorageTier::F16));
+        assert_eq!(StorageTier::parse("bfloat16"), Some(StorageTier::Bf16));
+        assert_eq!(StorageTier::parse(" single "), Some(StorageTier::F32));
+        assert_eq!(StorageTier::parse("fp8"), None);
+        assert_eq!(StorageTier::default(), StorageTier::F32);
+    }
+
+    #[test]
+    fn tiered_buf_encodes_decodes_and_reports_bytes() {
+        let mut rng = crate::util::rng::Rng::new(614);
+        let mut xs = vec![0.0f32; 257];
+        rng.fill_uniform(&mut xs, -1.0, 1.0);
+        for tier in StorageTier::all() {
+            let buf = TieredBuf::encode(tier, &xs);
+            assert_eq!(buf.tier(), tier);
+            assert_eq!(buf.len(), xs.len());
+            assert_eq!(buf.storage_bytes(), xs.len() * tier.bytes_per_sample());
+            let decoded = buf.decode();
+            for (i, (&x, &d)) in xs.iter().zip(&decoded).enumerate() {
+                assert_eq!(d.to_bits(), tier.quantize(x).to_bits(), "{} idx {i}", tier.name());
+                assert_eq!(buf.get(i).to_bits(), d.to_bits());
+            }
+            // ranged decode matches the full decode
+            let mut mid = vec![0.0f32; 100];
+            buf.decode_range_into(57, &mut mid);
+            assert_eq!(&decoded[57..157], &mid[..]);
+        }
+    }
+
+    #[test]
+    fn tiered_sino_round_trips_and_halves_storage() {
+        let mut s = crate::array::Sino::zeros(3, 4, 5);
+        let mut rng = crate::util::rng::Rng::new(615);
+        rng.fill_uniform(&mut s.data, -2.0, 2.0);
+        for tier in [StorageTier::F16, StorageTier::Bf16] {
+            let t = TieredSino::from_sino(tier, &s);
+            assert_eq!(t.storage_bytes() * 2, s.data.len() * 4);
+            let back = t.to_sino();
+            let mut want = s.clone();
+            tier.quantize_slice(&mut want.data);
+            assert_eq!(back.data, want.data, "{}", tier.name());
+            // per-view decode matches the full decode
+            let mut view = vec![0.0f32; 20];
+            t.view_into(1, &mut view);
+            assert_eq!(&back.data[20..40], &view[..]);
+        }
+        let exact = TieredSino::from_sino(StorageTier::F32, &s);
+        assert_eq!(exact.to_sino().data, s.data);
+    }
+
+    #[test]
+    fn env_parsing_is_lenient() {
+        assert_eq!(StorageTier::parse("nonsense"), None);
+        // tier_from_env with garbage set is exercised in integration
+        // tests (env is process-global); here we only pin the contract
+        // that default_tier() always yields a valid tier
+        let t = default_tier();
+        assert!(StorageTier::all().contains(&t));
+    }
+}

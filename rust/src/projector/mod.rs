@@ -84,6 +84,7 @@ pub use plan::ProjectionPlan;
 use crate::array::{Sino, Vol3};
 use crate::backend::{self, BackendKind};
 use crate::geometry::{Geometry, VolumeGeometry};
+use crate::precision::{self, StorageTier};
 use crate::util::pool;
 
 /// Projection coefficient model.
@@ -123,6 +124,10 @@ pub struct Projector {
     /// Compute backend the kernels execute on (snapshot into plans and
     /// the serving plan-cache key).
     pub backend: BackendKind,
+    /// Storage precision tier for data at rest — cached plan coefficient
+    /// tables and backprojection input sinograms ([`StorageTier`]).
+    /// Accumulation always stays f32; see `docs/MEMORY.md`.
+    pub storage: StorageTier,
 }
 
 impl Projector {
@@ -133,6 +138,7 @@ impl Projector {
             model,
             threads: pool::default_threads(),
             backend: backend::default_kind(),
+            storage: precision::default_tier(),
         }
     }
 
@@ -147,6 +153,15 @@ impl Projector {
     /// reject it with a typed error before a projector can be built).
     pub fn with_backend(mut self, kind: BackendKind) -> Projector {
         self.backend = kind;
+        self
+    }
+
+    /// Select the storage precision tier for data at rest (plan
+    /// coefficient tables and backprojection input sinograms). The
+    /// default comes from `LEAP_STORAGE` ([`precision::default_tier`]);
+    /// [`crate::api::ScanBuilder::storage_tier`] sets it per scan.
+    pub fn with_storage_tier(mut self, tier: StorageTier) -> Projector {
+        self.storage = tier;
         self
     }
 
@@ -182,6 +197,13 @@ impl Projector {
     /// view on the fly; use [`Self::forward_with_plan`] in loops.
     pub fn forward_into(&self, vol: &Vol3, sino: &mut Sino) {
         plan::check_shapes(&self.geom, &self.vg, vol, sino);
+        // Reduced-precision tiers execute through the planned path: a
+        // transient plan packs/quantizes exactly the tables the cached
+        // plan would, so direct and planned outputs stay bit-identical
+        // per tier (the f32 invariant, generalized).
+        if self.storage != StorageTier::F32 {
+            return ProjectionPlan::new(self).forward_into_with_threads(vol, sino, self.threads);
+        }
         let simd = self.kernel_simd();
         match (self.model, &self.geom) {
             (Model::SF, Geometry::Parallel(g)) if simd => {
@@ -238,6 +260,9 @@ impl Projector {
         // symmetric to forward_into: a mismatched sinogram would index out
         // of bounds (or silently truncate) inside the per-view kernels
         plan::check_shapes(&self.geom, &self.vg, vol, sino);
+        if self.storage != StorageTier::F32 {
+            return ProjectionPlan::new(self).back_into_with_threads(sino, vol, self.threads);
+        }
         let simd = self.kernel_simd();
         match (self.model, &self.geom) {
             (Model::SF, Geometry::Parallel(g)) if simd => {

@@ -54,6 +54,7 @@ use crate::api::LeapError;
 use crate::array::{Sino, Vol3};
 use crate::backend::{self, BackendKind};
 use crate::geometry::{Geometry, Ray, VolumeGeometry};
+use crate::precision::{StorageTier, TieredSino};
 use crate::util::pool::{self, chunk_ranges, parallel_items, run_region, ParWriter};
 
 use super::{joseph, sf, siddon, Model, Projector};
@@ -72,6 +73,7 @@ pub struct ProjectionPlan {
     model: Model,
     threads: usize,
     backend: BackendKind,
+    storage: StorageTier,
     kind: PlanKind,
 }
 
@@ -262,12 +264,26 @@ impl ProjectionPlan {
                 views: RayViews::build(geom, model, &p.vg, threads),
             },
         };
+        let mut kind = kind;
+        // Reduced-precision tiers store the cone footprint cache packed
+        // (u32 column + u16 coefficient bits). The packed arena decodes to
+        // exactly `tier.quantize(coeff)` — the same value the uncached /
+        // direct path produces by quantizing its transient per-view scratch
+        // — so planned and direct execution stay bit-identical per tier.
+        if p.storage != StorageTier::F32 {
+            if let PlanKind::SfCone(vs) = &mut kind {
+                for vp in vs.iter_mut() {
+                    vp.pack(p.storage);
+                }
+            }
+        }
         ProjectionPlan {
             geom: p.geom.clone(),
             vg: p.vg.clone(),
             model: p.model,
             threads,
             backend: p.backend,
+            storage: p.storage,
             kind,
         }
     }
@@ -282,6 +298,7 @@ impl ProjectionPlan {
         self.model == p.model
             && self.threads == p.threads
             && self.backend == p.backend
+            && self.storage == p.storage
             && self.vg == p.vg
             && self.geom == p.geom
     }
@@ -327,6 +344,13 @@ impl ProjectionPlan {
     /// plan identity; see [`Self::matches`] and [`Self::lower`]).
     pub fn backend(&self) -> BackendKind {
         self.backend
+    }
+
+    /// Storage tier the plan's coefficient tables were packed for and the
+    /// execute step quantizes through (part of the plan identity; see
+    /// [`Self::matches`] and [`crate::precision::StorageTier`]).
+    pub fn storage(&self) -> StorageTier {
+        self.storage
     }
 
     /// `true` when the SIMD tier should drive this plan's kernels (same
@@ -501,6 +525,7 @@ impl ProjectionPlan {
                     &self.vg,
                     g,
                     Some(vs.as_slice()),
+                    self.storage,
                     vol,
                     sino,
                     threads,
@@ -510,15 +535,45 @@ impl ProjectionPlan {
             }
             PlanKind::SfCone(vs) => {
                 let Geometry::Cone(g) = &self.geom else { unreachable!() };
-                sf::forward_cone_range(&self.vg, g, Some(vs.as_slice()), vol, sino, threads, v0, v1)
+                sf::forward_cone_range(
+                    &self.vg,
+                    g,
+                    Some(vs.as_slice()),
+                    self.storage,
+                    vol,
+                    sino,
+                    threads,
+                    v0,
+                    v1,
+                )
             }
             PlanKind::SfConeUncached if simd => {
                 let Geometry::Cone(g) = &self.geom else { unreachable!() };
-                backend::simd::forward_cone_simd_range(&self.vg, g, None, vol, sino, threads, v0, v1)
+                backend::simd::forward_cone_simd_range(
+                    &self.vg,
+                    g,
+                    None,
+                    self.storage,
+                    vol,
+                    sino,
+                    threads,
+                    v0,
+                    v1,
+                )
             }
             PlanKind::SfConeUncached => {
                 let Geometry::Cone(g) = &self.geom else { unreachable!() };
-                sf::forward_cone_range(&self.vg, g, None, vol, sino, threads, v0, v1)
+                sf::forward_cone_range(
+                    &self.vg,
+                    g,
+                    None,
+                    self.storage,
+                    vol,
+                    sino,
+                    threads,
+                    v0,
+                    v1,
+                )
             }
             PlanKind::Ray { use_siddon, views } => ray_forward_exec_range(
                 &self.vg,
@@ -566,6 +621,19 @@ impl ProjectionPlan {
         check_shapes(&self.geom, &self.vg, vol, sino);
         let threads = threads.max(1);
         let simd = self.kernel_simd();
+        // Reduced-precision tiers model the sinogram held at rest in
+        // tiered storage: quantize the input through one encode/decode
+        // round-trip before the gather kernels read it. Deterministic and
+        // schedule-independent (pure per-element map), so per-tier
+        // thread-count invariance and range-stitching identities hold
+        // unchanged; the f32 tier takes the borrow as-is.
+        let quantized;
+        let sino = if self.storage == StorageTier::F32 {
+            sino
+        } else {
+            quantized = TieredSino::from_sino(self.storage, sino).to_sino();
+            &quantized
+        };
         match &self.kind {
             PlanKind::SfParallel(set) if simd => {
                 let Geometry::Parallel(g) = &self.geom else { unreachable!() };
@@ -607,6 +675,7 @@ impl ProjectionPlan {
                     &self.vg,
                     g,
                     Some(vs.as_slice()),
+                    self.storage,
                     sino,
                     vol,
                     threads,
@@ -616,15 +685,35 @@ impl ProjectionPlan {
             }
             PlanKind::SfCone(vs) => {
                 let Geometry::Cone(g) = &self.geom else { unreachable!() };
-                sf::back_cone_range(&self.vg, g, Some(vs.as_slice()), sino, vol, threads, u0, u1)
+                sf::back_cone_range(
+                    &self.vg,
+                    g,
+                    Some(vs.as_slice()),
+                    self.storage,
+                    sino,
+                    vol,
+                    threads,
+                    u0,
+                    u1,
+                )
             }
             PlanKind::SfConeUncached if simd => {
                 let Geometry::Cone(g) = &self.geom else { unreachable!() };
-                backend::simd::back_cone_simd_range(&self.vg, g, None, sino, vol, threads, u0, u1)
+                backend::simd::back_cone_simd_range(
+                    &self.vg,
+                    g,
+                    None,
+                    self.storage,
+                    sino,
+                    vol,
+                    threads,
+                    u0,
+                    u1,
+                )
             }
             PlanKind::SfConeUncached => {
                 let Geometry::Cone(g) = &self.geom else { unreachable!() };
-                sf::back_cone_range(&self.vg, g, None, sino, vol, threads, u0, u1)
+                sf::back_cone_range(&self.vg, g, None, self.storage, sino, vol, threads, u0, u1)
             }
             // ray backprojection has no safely vectorizable inner loop
             // (guarded indirect scatter): both CPU tiers share this path
@@ -639,6 +728,177 @@ impl ProjectionPlan {
                 u0,
                 u1,
             ),
+        }
+    }
+
+    // -----------------------------------------------------------------
+    // windowed (out-of-core) execution — the per-tile kernels behind
+    // `crate::vol::TiledVol3`
+    // -----------------------------------------------------------------
+
+    /// `true` when this plan supports windowed (tile-buffer) execution:
+    /// the scalar SF kernels, whose output-ownership units map to
+    /// contiguous x-rows that a tile window can alias. Ray models would
+    /// need slab-axis windows and the SIMD tier stages lane flushes
+    /// through absolute indices; both fall back to resident execution at
+    /// the [`crate::vol`] layer.
+    pub(crate) fn supports_windows(&self) -> bool {
+        !matches!(self.kind, PlanKind::Ray { .. }) && self.backend == BackendKind::Scalar
+    }
+
+    /// Number of z-planes a window of this plan's shard units spans: the
+    /// unit range `u0..u1` owns a window buffer of
+    /// `window_planes() · (u1 − u0) · nx` floats. Cone/fan SF units are
+    /// y-rows owning one x-row in **every** z-plane (`nz` planes — 1 for
+    /// the 2-D fan grid); parallel SF units are single `(z, y)` rows.
+    pub(crate) fn window_planes(&self) -> usize {
+        match &self.kind {
+            PlanKind::SfParallel(_) | PlanKind::SfFan(_) => 1,
+            PlanKind::SfCone(_) | PlanKind::SfConeUncached => self.vg.nz,
+            PlanKind::Ray { .. } => panic!("ray plans do not execute through windows"),
+        }
+    }
+
+    /// The nx-length rows a window over units `u0..u1` holds, as
+    /// `(global_start, window_start)` flat-index pairs — the copy map
+    /// between a window buffer and the full resident volume. Row interiors
+    /// are contiguous in both layouts, so each pair describes one
+    /// `copy_from_slice` of `nx` floats.
+    pub(crate) fn window_runs(&self, u0: usize, u1: usize) -> Vec<(usize, usize)> {
+        let nx = self.vg.nx;
+        match &self.kind {
+            PlanKind::SfParallel(_) | PlanKind::SfFan(_) => {
+                (u0..u1).map(|m| (m * nx, (m - u0) * nx)).collect()
+            }
+            PlanKind::SfCone(_) | PlanKind::SfConeUncached => {
+                let (ny, w) = (self.vg.ny, u1 - u0);
+                let mut runs = Vec::with_capacity(self.vg.nz * w);
+                for k in 0..self.vg.nz {
+                    for j in u0..u1 {
+                        runs.push((k * ny * nx + j * nx, k * w * nx + (j - u0) * nx));
+                    }
+                }
+                runs
+            }
+            PlanKind::Ray { .. } => panic!("ray plans do not execute through windows"),
+        }
+    }
+
+    /// Matched backprojection of units `u0..u1` into the window buffer
+    /// `out` (layout per [`Self::window_planes`] /
+    /// [`Self::window_runs`]): the same gather kernels as
+    /// [`Self::back_range_into_with_threads`] with the write indices
+    /// rebased into the window — index arithmetic only, so the window's
+    /// floats are bit-identical to the corresponding rows of a resident
+    /// backprojection.
+    pub(crate) fn back_window_into(&self, sino: &Sino, out: &mut [f32], u0: usize, u1: usize) {
+        assert!(self.supports_windows(), "plan does not support windowed execution");
+        assert_eq!(
+            (sino.nviews, sino.nrows, sino.ncols),
+            (self.geom.nviews(), self.geom.nrows(), self.geom.ncols()),
+            "sinogram shape mismatch"
+        );
+        let threads = self.threads.max(1);
+        // same data-at-rest quantization as back_range_into_with_threads
+        let quantized;
+        let sino = if self.storage == StorageTier::F32 {
+            sino
+        } else {
+            quantized = TieredSino::from_sino(self.storage, sino).to_sino();
+            &quantized
+        };
+        match &self.kind {
+            PlanKind::SfParallel(set) => {
+                let Geometry::Parallel(g) = &self.geom else { unreachable!() };
+                sf::back_parallel_window(&self.vg, g, Some(set), sino, out, threads, u0, u1)
+            }
+            PlanKind::SfFan(vs) => {
+                let Geometry::Fan(g) = &self.geom else { unreachable!() };
+                sf::back_fan_window(&self.vg, g, Some(vs.as_slice()), sino, out, threads, u0, u1)
+            }
+            PlanKind::SfCone(vs) => {
+                let Geometry::Cone(g) = &self.geom else { unreachable!() };
+                sf::back_cone_window(
+                    &self.vg,
+                    g,
+                    Some(vs.as_slice()),
+                    self.storage,
+                    sino,
+                    out,
+                    threads,
+                    u0,
+                    u1,
+                )
+            }
+            PlanKind::SfConeUncached => {
+                let Geometry::Cone(g) = &self.geom else { unreachable!() };
+                sf::back_cone_window(&self.vg, g, None, self.storage, sino, out, threads, u0, u1)
+            }
+            PlanKind::Ray { .. } => unreachable!("supports_windows() rejected ray plans"),
+        }
+    }
+
+    /// Forward-project the window buffer `win` (units `u0..u1`),
+    /// **accumulating** into `sino` without zeroing it: the caller zeroes
+    /// once and replays the tiles in ascending unit order, which appends
+    /// each detector bin's contributions in exactly the per-bin `+=`
+    /// order of the resident kernels — tiled forward output is
+    /// bit-identical to resident output.
+    pub(crate) fn forward_accum_window(&self, win: &[f32], u0: usize, u1: usize, sino: &mut Sino) {
+        assert!(self.supports_windows(), "plan does not support windowed execution");
+        assert_eq!(
+            (sino.nviews, sino.nrows, sino.ncols),
+            (self.geom.nviews(), self.geom.nrows(), self.geom.ncols()),
+            "sinogram shape mismatch"
+        );
+        let threads = self.threads.max(1);
+        match &self.kind {
+            PlanKind::SfParallel(set) => {
+                let Geometry::Parallel(g) = &self.geom else { unreachable!() };
+                sf::forward_parallel_accum_window(&self.vg, g, Some(set), win, sino, threads, u0, u1)
+            }
+            PlanKind::SfFan(vs) => {
+                let Geometry::Fan(g) = &self.geom else { unreachable!() };
+                sf::forward_fan_accum_window(
+                    &self.vg,
+                    g,
+                    Some(vs.as_slice()),
+                    win,
+                    sino,
+                    threads,
+                    u0,
+                    u1,
+                )
+            }
+            PlanKind::SfCone(vs) => {
+                let Geometry::Cone(g) = &self.geom else { unreachable!() };
+                sf::forward_cone_accum_window(
+                    &self.vg,
+                    g,
+                    Some(vs.as_slice()),
+                    self.storage,
+                    win,
+                    sino,
+                    threads,
+                    u0,
+                    u1,
+                )
+            }
+            PlanKind::SfConeUncached => {
+                let Geometry::Cone(g) = &self.geom else { unreachable!() };
+                sf::forward_cone_accum_window(
+                    &self.vg,
+                    g,
+                    None,
+                    self.storage,
+                    win,
+                    sino,
+                    threads,
+                    u0,
+                    u1,
+                )
+            }
+            PlanKind::Ray { .. } => unreachable!("supports_windows() rejected ray plans"),
         }
     }
 

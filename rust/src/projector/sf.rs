@@ -54,6 +54,7 @@
 
 use crate::array::{Sino, Vol3};
 use crate::geometry::{ConeBeam, DetectorShape, FanBeam, ParallelBeam, VolumeGeometry};
+use crate::precision::StorageTier;
 use crate::util::pool::{parallel_chunks, parallel_items, parallel_items_with, ParWriter};
 
 /// A trapezoid bump with unit area, described by four sorted breakpoints:
@@ -856,30 +857,126 @@ pub(crate) struct ConeVoxelFoot {
     pub(crate) bin1: u32,
 }
 
+/// Reduced-precision form of a cone plan's bins arena: detector columns
+/// and tier-encoded transaxial weights in parallel arrays (same order and
+/// `bin0..bin1` indexing as the exact arena it replaced). 6 B/entry vs
+/// the exact arena's 16 B/entry — the storage-tier win for cached plans.
+#[derive(Clone, Debug)]
+pub(crate) struct PackedBins {
+    pub(crate) tier: StorageTier,
+    pub(crate) cols: Vec<u32>,
+    pub(crate) w: Vec<u16>,
+}
+
+/// Borrowed view of one voxel column's transaxial weights, decoding
+/// tier-encoded entries to f64 on the fly. The decoded value equals the
+/// round-tripped value `quantize_in_place` writes into an exact arena, so
+/// the packed (cached-plan) and quantized-exact (scratch/direct) paths
+/// emit identical coefficient streams.
+#[derive(Clone, Copy)]
+pub(crate) enum BinsView<'a> {
+    Exact(&'a [(u32, f64)]),
+    Packed { tier: StorageTier, cols: &'a [u32], w: &'a [u16] },
+}
+
+impl<'a> BinsView<'a> {
+    #[inline]
+    pub(crate) fn is_empty(&self) -> bool {
+        match self {
+            BinsView::Exact(s) => s.is_empty(),
+            BinsView::Packed { cols, .. } => cols.is_empty(),
+        }
+    }
+
+    /// Invoke `f(detector_col, transaxial_weight)` for every entry.
+    #[inline]
+    pub(crate) fn for_each<F: FnMut(usize, f64)>(&self, mut f: F) {
+        match self {
+            BinsView::Exact(s) => {
+                for &(col, a_u) in *s {
+                    f(col as usize, a_u);
+                }
+            }
+            BinsView::Packed { tier, cols, w } => {
+                for (col, bits) in cols.iter().zip(w.iter()) {
+                    f(*col as usize, tier.decode_bits(*bits) as f64);
+                }
+            }
+        }
+    }
+}
+
 /// Per-view invariants of the cone-beam SF footprint — the plan step.
 /// Caches, for every transaxial voxel column `(i, j)`, the projected
 /// footprint's detector-column weights and the magnification/amplitude
 /// scalars; the execute step only runs the axial overlap loop. Memory is
 /// `O(nx·ny)` per view — the transaxial footprint only, a factor of
 /// `nz × nrows` smaller than the stored system matrix the paper's Table 1
-/// argues against.
+/// argues against. With a reduced-precision [`StorageTier`] the arena is
+/// re-packed to u16 weights ([`ConeViewPlan::pack`]), decoded back to
+/// f32/f64 registers inside the kernels.
 #[derive(Clone, Debug)]
 pub struct ConeViewPlan {
     pub(crate) foot: Vec<ConeVoxelFoot>,
     /// Arena of (detector column, transaxial weight) runs indexed by
-    /// `foot[·].bin0..bin1`.
+    /// `foot[·].bin0..bin1`. Empty when `packed` carries the arena.
     pub(crate) bins: Vec<(u32, f64)>,
+    /// Tier-encoded arena replacing `bins` on reduced-precision plans.
+    pub(crate) packed: Option<PackedBins>,
 }
 
 impl ConeViewPlan {
     pub(crate) fn empty() -> ConeViewPlan {
-        ConeViewPlan { foot: Vec::new(), bins: Vec::new() }
+        ConeViewPlan { foot: Vec::new(), bins: Vec::new(), packed: None }
     }
 
     /// Approximate heap footprint of this view's cache in bytes.
     pub(crate) fn approx_bytes(&self) -> usize {
         self.foot.len() * std::mem::size_of::<ConeVoxelFoot>()
             + self.bins.len() * std::mem::size_of::<(u32, f64)>()
+            + self.packed.as_ref().map_or(0, |p| {
+                p.cols.len() * std::mem::size_of::<u32>()
+                    + p.w.len() * std::mem::size_of::<u16>()
+            })
+    }
+
+    /// Borrow one voxel column's transaxial weights (exact or packed).
+    #[inline]
+    pub(crate) fn u_bins(&self, f: &ConeVoxelFoot) -> BinsView<'_> {
+        let (b0, b1) = (f.bin0 as usize, f.bin1 as usize);
+        match &self.packed {
+            Some(p) => BinsView::Packed { tier: p.tier, cols: &p.cols[b0..b1], w: &p.w[b0..b1] },
+            None => BinsView::Exact(&self.bins[b0..b1]),
+        }
+    }
+
+    /// Re-encode the exact arena through `tier` into the packed form
+    /// (cached reduced-precision plans). No-op on the f32 tier.
+    pub(crate) fn pack(&mut self, tier: StorageTier) {
+        if tier == StorageTier::F32 || self.packed.is_some() {
+            return;
+        }
+        let mut cols = Vec::with_capacity(self.bins.len());
+        let mut w = Vec::with_capacity(self.bins.len());
+        for &(col, a_u) in &self.bins {
+            cols.push(col);
+            w.push(tier.encode_bits(a_u as f32));
+        }
+        self.bins = Vec::new();
+        self.packed = Some(PackedBins { tier, cols, w });
+    }
+
+    /// Round-trip the exact arena's weights through `tier` in place,
+    /// keeping the exact layout (per-worker scratch plans on the direct /
+    /// uncached paths — no long-lived storage to shrink, but the decoded
+    /// values must match the packed arena bit for bit).
+    pub(crate) fn quantize_in_place(&mut self, tier: StorageTier) {
+        if tier == StorageTier::F32 {
+            return;
+        }
+        for e in &mut self.bins {
+            e.1 = tier.quantize(e.1 as f32) as f64;
+        }
     }
 }
 
@@ -924,6 +1021,7 @@ pub(crate) fn plan_cone_rows_into(
     out.foot.clear();
     out.foot.reserve((j1 - j0) * vg.nx);
     out.bins.clear();
+    out.packed = None;
     let foot = &mut out.foot;
     let bins = &mut out.bins;
 
@@ -982,12 +1080,20 @@ pub(crate) fn plan_cone_rows_into(
 /// weights. One definition shared by the forward scatter, the back
 /// gather and the public enumeration, so every path emits the identical
 /// coefficient stream for a column.
+///
+/// `plane` is the stride between consecutive z-slices of the *output
+/// indexing*: `vg.ny·vg.nx` for a full resident volume, or the window's
+/// row-span ×`nx` when executing against a tiled y-slab window (the
+/// emitted flat indices are then window-local). The stride only shifts
+/// indices — never the float math — so windowed execution is
+/// bit-identical to resident execution per voxel.
 #[inline]
 pub(crate) fn cone_column_coeffs<F: FnMut(usize, usize, usize, f64)>(
     vg: &VolumeGeometry,
     g: &ConeBeam,
     f: &ConeVoxelFoot,
-    u_bins: &[(u32, f64)],
+    u_bins: BinsView<'_>,
+    plane: usize,
     flat_idx_base: usize,
     mut emit: F,
 ) {
@@ -1014,7 +1120,7 @@ pub(crate) fn cone_column_coeffs<F: FnMut(usize, usize, usize, f64)>(
         let dist = (f.d_inplane * f.d_inplane + z * z).sqrt();
         let cos_psi = if curved { f.d_inplane / dist } else { f.t_c / dist };
         let amp = f.amp_uv / cos_psi;
-        let flat = k * vg.ny * vg.nx + flat_idx_base;
+        let flat = k * plane + flat_idx_base;
 
         let r_first_f = ((v0 - v_lo_0) * inv_dv).floor();
         let r_last_f = ((v1 - v_lo_0) * inv_dv).floor();
@@ -1032,9 +1138,7 @@ pub(crate) fn cone_column_coeffs<F: FnMut(usize, usize, usize, f64)>(
             }
             // a_v = (1/dv)·∫ rect = overlap / (width·dv)
             let a_v = overlap * inv_width_dv * amp;
-            for &(col, a_u) in u_bins {
-                emit(flat, row, col as usize, a_u * a_v);
-            }
+            u_bins.for_each(|col, a_u| emit(flat, row, col, a_u * a_v));
         }
     }
 }
@@ -1047,12 +1151,12 @@ pub(crate) fn cone_view_coeffs_planned<F: FnMut(usize, usize, usize, f64)>(
     vp: &ConeViewPlan,
     mut emit: F,
 ) {
+    let plane = vg.ny * vg.nx;
     for j in 0..vg.ny {
         for i in 0..vg.nx {
             let flat_idx_base = j * vg.nx + i;
             let f = vp.foot[flat_idx_base];
-            let u_bins = &vp.bins[f.bin0 as usize..f.bin1 as usize];
-            cone_column_coeffs(vg, g, &f, u_bins, flat_idx_base, &mut emit);
+            cone_column_coeffs(vg, g, &f, vp.u_bins(&f), plane, flat_idx_base, &mut emit);
         }
     }
 }
@@ -1086,16 +1190,20 @@ pub(crate) fn forward_cone_opt(
     sino: &mut Sino,
     threads: usize,
 ) {
-    forward_cone_range(vg, g, plans, vol, sino, threads, 0, g.angles.len())
+    forward_cone_range(vg, g, plans, StorageTier::F32, vol, sino, threads, 0, g.angles.len())
 }
 
 /// [`forward_cone_opt`] restricted to the view range `v0..v1` (see
-/// [`forward_parallel_range`] for the stitching contract).
+/// [`forward_parallel_range`] for the stitching contract). `tier`
+/// round-trips on-the-fly scratch plans through the storage tier so the
+/// uncached path emits the same quantized weights a packed cached plan
+/// decodes (cached plans carry their tier in the arena itself).
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn forward_cone_range(
     vg: &VolumeGeometry,
     g: &ConeBeam,
     plans: Option<&[ConeViewPlan]>,
+    tier: StorageTier,
     vol: &Vol3,
     sino: &mut Sino,
     threads: usize,
@@ -1117,6 +1225,7 @@ pub(crate) fn forward_cone_range(
             Some(ps) => &ps[view],
             None => {
                 plan_cone_rows_into(vg, g, view, 0, vg.ny, scratch);
+                scratch.quantize_in_place(tier);
                 scratch
             }
         };
@@ -1146,7 +1255,7 @@ pub(crate) fn back_cone_opt(
     vol: &mut Vol3,
     threads: usize,
 ) {
-    back_cone_range(vg, g, plans, sino, vol, threads, 0, vg.ny)
+    back_cone_range(vg, g, plans, StorageTier::F32, sino, vol, threads, 0, vg.ny)
 }
 
 /// [`back_cone_opt`] restricted to the voxel-row range `u0..u1` (units
@@ -1159,26 +1268,49 @@ pub(crate) fn back_cone_range(
     vg: &VolumeGeometry,
     g: &ConeBeam,
     plans: Option<&[ConeViewPlan]>,
+    tier: StorageTier,
     sino: &Sino,
     vol: &mut Vol3,
     threads: usize,
     u0: usize,
     u1: usize,
 ) {
-    let nviews = g.angles.len();
-    let ncols = sino.ncols;
     let ny = vg.ny;
     assert!(u0 <= u1 && u1 <= ny, "unit range {u0}..{u1}");
     let plane = ny * vg.nx;
     for k in 0..vg.nz {
         vol.data[k * plane + u0 * vg.nx..k * plane + u1 * vg.nx].fill(0.0);
     }
-    if nviews == 0 {
+    if g.angles.is_empty() {
         return;
     }
-    let out = ParWriter::new(&mut vol.data);
-    // each voxel row j (flat indices k·ny·nx + j·nx + i over all k, i) is
-    // claimed and written by exactly one worker
+    back_cone_gather(vg, g, plans, tier, sino, &mut vol.data, plane, 0, threads, u0, u1);
+}
+
+/// The cone gather core shared by the resident range executor and the
+/// tiled window executor: accumulates rows `u0..u1` over all views into
+/// `out`, where a voxel `(k, j, i)` lands at
+/// `k·plane + (j − j_base)·nx + i`. Identical float chains for any
+/// `(plane, j_base)` — only the output indexing moves.
+#[allow(clippy::too_many_arguments)]
+fn back_cone_gather(
+    vg: &VolumeGeometry,
+    g: &ConeBeam,
+    plans: Option<&[ConeViewPlan]>,
+    tier: StorageTier,
+    sino: &Sino,
+    out: &mut [f32],
+    plane: usize,
+    j_base: usize,
+    threads: usize,
+    u0: usize,
+    u1: usize,
+) {
+    let nviews = g.angles.len();
+    let ncols = sino.ncols;
+    let out = ParWriter::new(out);
+    // each voxel row j (flat indices k·plane + (j−j_base)·nx + i over all
+    // k, i) is claimed and written by exactly one worker
     parallel_items_with(u1 - u0, threads, ConeViewPlan::empty, |scratch, r| {
         let j = u0 + r;
         for view in 0..nviews {
@@ -1186,15 +1318,246 @@ pub(crate) fn back_cone_range(
                 Some(ps) => (&ps[view], 0),
                 None => {
                     plan_cone_rows_into(vg, g, view, j, j + 1, scratch);
+                    scratch.quantize_in_place(tier);
                     (scratch, j)
                 }
             };
             let vdata = sino.view(view);
             for i in 0..vg.nx {
                 let f = vp.foot[(j - j_off) * vg.nx + i];
-                let u_bins = &vp.bins[f.bin0 as usize..f.bin1 as usize];
-                cone_column_coeffs(vg, g, &f, u_bins, j * vg.nx + i, |flat, row, col, coeff| {
+                let base = (j - j_base) * vg.nx + i;
+                cone_column_coeffs(vg, g, &f, vp.u_bins(&f), plane, base, |flat, row, col, coeff| {
                     out.add(flat, (coeff as f32) * vdata[row * ncols + col]);
+                });
+            }
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// windowed executors — the per-tile kernels of out-of-core execution
+// ---------------------------------------------------------------------------
+//
+// Each windowed form is the matching range executor with the output (back)
+// or input (forward) volume replaced by a *window slice* holding only the
+// unit range `u0..u1`: parallel/fan windows are the contiguous flat run
+// `[u0·nx, u1·nx)`, cone windows are the y-slab `nz × (u1−u0) × nx` in
+// k-major order. Only index arithmetic changes — every float chain is the
+// one the resident executor runs — so gathering tiles in ascending unit
+// order reproduces resident execution bit for bit (the forward
+// accumulators ADD into the sinogram, whose per-bin `+=` chain then
+// concatenates across tiles exactly as the resident enumeration does; the
+// caller zeroes the sinogram once before the first tile).
+
+/// [`back_parallel_range`] writing into a window slice of rows `u0..u1`.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn back_parallel_window(
+    vg: &VolumeGeometry,
+    g: &ParallelBeam,
+    plans: Option<&ParallelPlanSet>,
+    sino: &Sino,
+    out: &mut [f32],
+    threads: usize,
+    u0: usize,
+    u1: usize,
+) {
+    assert!(u0 <= u1 && u1 <= vg.nz * vg.ny, "unit range {u0}..{u1}");
+    assert_eq!(out.len(), (u1 - u0) * vg.nx, "window length");
+    out.fill(0.0);
+    let local_set;
+    let set: &ParallelPlanSet = match plans {
+        Some(s) => s,
+        None => {
+            local_set = plan_parallel_set(vg, g);
+            &local_set
+        }
+    };
+    let base_flat = u0 * vg.nx;
+    let ncols = sino.ncols;
+    let out = ParWriter::new(out);
+    parallel_chunks(u1 - u0, threads, |a, b| {
+        let (m0, m1) = (u0 + a, u0 + b);
+        for (view, vp) in set.views.iter().enumerate() {
+            let vdata = sino.view(view);
+            parallel_rows_coeffs(vg, g, vp, &set.rows, m0, m1, |flat, row, col, coeff| {
+                out.add(flat - base_flat, (coeff as f32) * vdata[row * ncols + col]);
+            });
+        }
+    });
+}
+
+/// [`back_fan_range`] writing into a window slice of rows `u0..u1`.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn back_fan_window(
+    vg: &VolumeGeometry,
+    g: &FanBeam,
+    plans: Option<&[FanViewPlan]>,
+    sino: &Sino,
+    out: &mut [f32],
+    threads: usize,
+    u0: usize,
+    u1: usize,
+) {
+    assert_eq!(vg.nz, 1);
+    assert!(u0 <= u1 && u1 <= vg.ny, "unit range {u0}..{u1}");
+    assert_eq!(out.len(), (u1 - u0) * vg.nx, "window length");
+    out.fill(0.0);
+    let local;
+    let views: &[FanViewPlan] = match plans {
+        Some(ps) => ps,
+        None => {
+            local = (0..g.angles.len()).map(|v| plan_fan_view(g, v)).collect::<Vec<_>>();
+            &local
+        }
+    };
+    let base_flat = u0 * vg.nx;
+    let out = ParWriter::new(out);
+    parallel_chunks(u1 - u0, threads, |a, b| {
+        let (j0, j1) = (u0 + a, u0 + b);
+        for (view, vp) in views.iter().enumerate() {
+            let vdata = sino.view(view);
+            fan_rows_coeffs(vg, g, vp, j0, j1, |flat, col, coeff| {
+                out.add(flat - base_flat, (coeff as f32) * vdata[col]);
+            });
+        }
+    });
+}
+
+/// [`back_cone_range`] writing into a y-slab window (`nz × (u1−u0) × nx`,
+/// k-major) instead of the full volume.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn back_cone_window(
+    vg: &VolumeGeometry,
+    g: &ConeBeam,
+    plans: Option<&[ConeViewPlan]>,
+    tier: StorageTier,
+    sino: &Sino,
+    out: &mut [f32],
+    threads: usize,
+    u0: usize,
+    u1: usize,
+) {
+    assert!(u0 <= u1 && u1 <= vg.ny, "unit range {u0}..{u1}");
+    assert_eq!(out.len(), vg.nz * (u1 - u0) * vg.nx, "window length");
+    out.fill(0.0);
+    if g.angles.is_empty() {
+        return;
+    }
+    back_cone_gather(vg, g, plans, tier, sino, out, (u1 - u0) * vg.nx, u0, threads, u0, u1);
+}
+
+/// Add rows `u0..u1`'s forward contribution (read from a window slice)
+/// into `sino` — no zeroing; the tiled driver zeroes once, then streams
+/// tiles in ascending unit order.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn forward_parallel_accum_window(
+    vg: &VolumeGeometry,
+    g: &ParallelBeam,
+    plans: Option<&ParallelPlanSet>,
+    win: &[f32],
+    sino: &mut Sino,
+    threads: usize,
+    u0: usize,
+    u1: usize,
+) {
+    assert!(u0 <= u1 && u1 <= vg.nz * vg.ny, "unit range {u0}..{u1}");
+    assert_eq!(win.len(), (u1 - u0) * vg.nx, "window length");
+    let nrows = sino.nrows;
+    let ncols = sino.ncols;
+    let local_rows;
+    let rows: &ParallelRowWeights = match plans {
+        Some(set) => &set.rows,
+        None => {
+            local_rows = plan_parallel_rows(vg, g);
+            &local_rows
+        }
+    };
+    let base_flat = u0 * vg.nx;
+    let out = ParWriter::new(&mut sino.data);
+    parallel_items(g.angles.len(), threads, |view| {
+        let base = view * nrows * ncols;
+        let local;
+        let vp = match plans {
+            Some(set) => &set.views[view],
+            None => {
+                local = plan_parallel_view(vg, g, view);
+                &local
+            }
+        };
+        parallel_rows_coeffs(vg, g, vp, rows, u0, u1, |flat, row, col, coeff| {
+            out.add(base + row * ncols + col, (coeff as f32) * win[flat - base_flat]);
+        });
+    });
+}
+
+/// Fan-beam forward tile accumulator (see
+/// [`forward_parallel_accum_window`]).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn forward_fan_accum_window(
+    vg: &VolumeGeometry,
+    g: &FanBeam,
+    plans: Option<&[FanViewPlan]>,
+    win: &[f32],
+    sino: &mut Sino,
+    threads: usize,
+    u0: usize,
+    u1: usize,
+) {
+    assert_eq!(vg.nz, 1, "fan-beam SF requires a 2-D volume");
+    assert!(u0 <= u1 && u1 <= vg.ny, "unit range {u0}..{u1}");
+    assert_eq!(win.len(), (u1 - u0) * vg.nx, "window length");
+    let ncols = sino.ncols;
+    let base_flat = u0 * vg.nx;
+    let out = ParWriter::new(&mut sino.data);
+    parallel_items(g.angles.len(), threads, |view| {
+        let base = view * ncols;
+        let vp = match plans {
+            Some(ps) => ps[view],
+            None => plan_fan_view(g, view),
+        };
+        fan_rows_coeffs(vg, g, &vp, u0, u1, |flat, col, coeff| {
+            out.add(base + col, (coeff as f32) * win[flat - base_flat]);
+        });
+    });
+}
+
+/// Cone-beam forward tile accumulator over the y-slab window `u0..u1`
+/// (see [`forward_parallel_accum_window`]; window layout as in
+/// [`back_cone_window`]).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn forward_cone_accum_window(
+    vg: &VolumeGeometry,
+    g: &ConeBeam,
+    plans: Option<&[ConeViewPlan]>,
+    tier: StorageTier,
+    win: &[f32],
+    sino: &mut Sino,
+    threads: usize,
+    u0: usize,
+    u1: usize,
+) {
+    assert!(u0 <= u1 && u1 <= vg.ny, "unit range {u0}..{u1}");
+    assert_eq!(win.len(), vg.nz * (u1 - u0) * vg.nx, "window length");
+    let nrows = sino.nrows;
+    let ncols = sino.ncols;
+    let wplane = (u1 - u0) * vg.nx;
+    let out = ParWriter::new(&mut sino.data);
+    parallel_items_with(g.angles.len(), threads, ConeViewPlan::empty, |scratch, view| {
+        let base = view * nrows * ncols;
+        let (vp, j_off): (&ConeViewPlan, usize) = match plans {
+            Some(ps) => (&ps[view], 0),
+            None => {
+                plan_cone_rows_into(vg, g, view, u0, u1, scratch);
+                scratch.quantize_in_place(tier);
+                (scratch, u0)
+            }
+        };
+        for j in u0..u1 {
+            for i in 0..vg.nx {
+                let f = vp.foot[(j - j_off) * vg.nx + i];
+                let wbase = (j - u0) * vg.nx + i;
+                cone_column_coeffs(vg, g, &f, vp.u_bins(&f), wplane, wbase, |flat, row, col, coeff| {
+                    out.add(base + row * ncols + col, (coeff as f32) * win[flat]);
                 });
             }
         }
@@ -1591,13 +1954,13 @@ mod tests {
             let mut stitched = Sino::zeros(5, 6, 10);
             stitched.fill(7.0);
             for (v0, v1) in split(5, shards) {
-                forward_cone_range(&vg3, &cone, None, &vol3, &mut stitched, 2, v0, v1);
+                forward_cone_range(&vg3, &cone, None, StorageTier::F32, &vol3, &mut stitched, 2, v0, v1);
             }
             assert_eq!(full3.data, stitched.data, "cone fwd {shards} shards");
             let mut bvol = Vol3::zeros(8, 8, 8);
             bvol.fill(7.0);
             for (u0, u1) in split(vg3.ny, shards) {
-                back_cone_range(&vg3, &cone, None, &sino3, &mut bvol, 2, u0, u1);
+                back_cone_range(&vg3, &cone, None, StorageTier::F32, &sino3, &mut bvol, 2, u0, u1);
             }
             assert_eq!(back_full3.data, bvol.data, "cone back {shards} shards");
         }

@@ -1,0 +1,544 @@
+//! Out-of-core volumes: slab-granular tiles under a residency budget.
+//!
+//! The paper's memory claim — one copy of the volume plus one copy of
+//! the projections — still assumes the volume itself fits in RAM. A
+//! [`TiledVol3`] removes that assumption: the volume lives as
+//! **slab-granular tiles** on a file-backed store (an unlinked temp
+//! file; a plain in-memory store when no scratch file can be created),
+//! and at most `residency budget` bytes of tiles are held resident at
+//! once under LRU eviction.
+//!
+//! **Execution model.** Tiles are aligned to the projector plan's
+//! output-ownership units ([`ProjectionPlan::back_shard_units`]): a tile
+//! is a contiguous unit range `u0..u1`, and its buffer is exactly the
+//! *window* the plan's windowed kernels operate on
+//! (`window_planes() · (u1 − u0) · nx` floats — see
+//! `ProjectionPlan::window_runs` for the copy map to the resident
+//! layout). Backprojection visits each tile once and runs the slab-owned
+//! gather kernels with write indices rebased into the window — index
+//! arithmetic only, so every float matches resident execution bit for
+//! bit. Forward projection zeroes the sinogram once and replays tiles in
+//! ascending unit order, each **accumulating** into the sinogram; per
+//! detector bin that appends contributions in exactly the per-bin `+=`
+//! order of the resident kernels, so tiled forward output is also
+//! bit-identical (asserted by the property tests below at every budget,
+//! including budgets that force repeated evictions).
+//!
+//! Windowed execution covers the scalar-backend SF plans (parallel, fan,
+//! cone — cached or uncached); ray models and the SIMD tier are rejected
+//! with a typed [`LeapError::Unsupported`] and should execute resident.
+//!
+//! The serving layer's `__stats` exposes the process-wide
+//! [`resident_tile_bytes`] gauge so out-of-core memory behavior is
+//! observable next to the plan-cache and admission-control numbers.
+
+use std::collections::VecDeque;
+#[cfg(unix)]
+use std::fs::File;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use crate::api::LeapError;
+use crate::array::{Sino, Vol3};
+use crate::projector::ProjectionPlan;
+
+/// Process-wide gauge: bytes of [`TiledVol3`] tiles currently resident
+/// across all live instances (reported by the server's `__stats`).
+static RESIDENT_TILE_BYTES: AtomicUsize = AtomicUsize::new(0);
+
+/// Bytes of tile buffers currently resident process-wide.
+pub fn resident_tile_bytes() -> usize {
+    RESIDENT_TILE_BYTES.load(Ordering::Relaxed)
+}
+
+/// Monotonic id source for scratch-file names (pid keeps names unique
+/// across processes sharing a temp dir, the counter across instances).
+static SCRATCH_ID: AtomicUsize = AtomicUsize::new(0);
+
+/// Tile backing store: an unlinked scratch file (bytes live only as long
+/// as the handle), or plain heap vectors when no file can be created
+/// (read-only temp dirs, exotic platforms).
+enum Store {
+    #[cfg(unix)]
+    File(File),
+    Mem(Vec<Vec<f32>>),
+}
+
+#[cfg(unix)]
+fn open_scratch_file() -> Option<File> {
+    let id = SCRATCH_ID.fetch_add(1, Ordering::Relaxed);
+    let path = std::env::temp_dir()
+        .join(format!("leap-tiles-{}-{}.bin", std::process::id(), id));
+    let file = std::fs::OpenOptions::new()
+        .read(true)
+        .write(true)
+        .create_new(true)
+        .open(&path)
+        .ok()?;
+    // unlink immediately: the store lives exactly as long as the handle,
+    // with nothing left behind on any exit path
+    let _ = std::fs::remove_file(&path);
+    Some(file)
+}
+
+#[cfg(unix)]
+fn store_write(file: &File, offset: u64, data: &[f32]) -> std::io::Result<()> {
+    use std::os::unix::fs::FileExt;
+    let mut bytes = vec![0u8; data.len() * 4];
+    for (i, v) in data.iter().enumerate() {
+        bytes[i * 4..i * 4 + 4].copy_from_slice(&v.to_le_bytes());
+    }
+    file.write_all_at(&bytes, offset)
+}
+
+#[cfg(unix)]
+fn store_read(file: &File, offset: u64, out: &mut [f32]) -> std::io::Result<()> {
+    use std::os::unix::fs::FileExt;
+    let mut bytes = vec![0u8; out.len() * 4];
+    file.read_exact_at(&mut bytes, offset)?;
+    for (i, v) in out.iter_mut().enumerate() {
+        *v = f32::from_le_bytes(bytes[i * 4..i * 4 + 4].try_into().unwrap());
+    }
+    Ok(())
+}
+
+/// A volume stored as slab-granular tiles with bounded residency — the
+/// out-of-core backing for volumes larger than RAM (module docs).
+pub struct TiledVol3 {
+    /// Total output-ownership units (`plan.back_shard_units()`).
+    units: usize,
+    /// Floats per unit (`window_planes · nx`).
+    unit_len: usize,
+    /// Units per tile (last tile may be short).
+    units_per_tile: usize,
+    ntiles: usize,
+    budget_bytes: usize,
+    store: Store,
+    /// Resident tile buffers (window layout), `None` when evicted.
+    resident: Vec<Option<Vec<f32>>>,
+    /// Tiles whose resident buffer differs from the store.
+    dirty: Vec<bool>,
+    /// Tiles that have ever been flushed (a fault of an unflushed tile
+    /// materializes zeros instead of reading the store).
+    flushed: Vec<bool>,
+    /// Resident tiles, least-recently-used first.
+    lru: VecDeque<usize>,
+    resident_bytes: usize,
+    evictions: u64,
+}
+
+impl TiledVol3 {
+    /// Build an all-zero tiled volume for `plan`'s scan under
+    /// `budget_bytes` of tile residency. Tiles are sized so at least two
+    /// fit inside the budget (down to single-unit tiles for tiny
+    /// budgets). Typed errors: plans without windowed kernels (ray
+    /// models, SIMD backend) are [`LeapError::Unsupported`]; a zero
+    /// budget is [`LeapError::InvalidArgument`].
+    pub fn for_plan(plan: &ProjectionPlan, budget_bytes: usize) -> Result<TiledVol3, LeapError> {
+        if !plan.supports_windows() {
+            return Err(LeapError::Unsupported(
+                "tiled execution needs a scalar-backend SF plan \
+                 (ray models and the simd tier execute resident)"
+                    .into(),
+            ));
+        }
+        if budget_bytes == 0 {
+            return Err(LeapError::InvalidArgument(
+                "tile residency budget must be non-zero".into(),
+            ));
+        }
+        let units = plan.back_shard_units();
+        let unit_len = plan.window_planes() * plan.vg().nx;
+        let unit_bytes = unit_len * 4;
+        // at least two tiles under budget (double residency lets a copy
+        // loop touch two tiles without thrashing); clamp to one unit
+        let units_per_tile = (budget_bytes / (2 * unit_bytes)).clamp(1, units.max(1));
+        let ntiles = units.div_ceil(units_per_tile);
+        #[cfg(unix)]
+        let store = match open_scratch_file() {
+            Some(f) => Store::File(f),
+            None => Store::Mem(vec![Vec::new(); ntiles]),
+        };
+        #[cfg(not(unix))]
+        let store = Store::Mem(vec![Vec::new(); ntiles]);
+        Ok(TiledVol3 {
+            units,
+            unit_len,
+            units_per_tile,
+            ntiles,
+            budget_bytes,
+            store,
+            resident: (0..ntiles).map(|_| None).collect(),
+            dirty: vec![false; ntiles],
+            flushed: vec![false; ntiles],
+            lru: VecDeque::new(),
+            resident_bytes: 0,
+            evictions: 0,
+        })
+    }
+
+    /// [`Self::for_plan`] initialized from a resident volume.
+    pub fn from_vol3(
+        plan: &ProjectionPlan,
+        vol: &Vol3,
+        budget_bytes: usize,
+    ) -> Result<TiledVol3, LeapError> {
+        let mut tv = TiledVol3::for_plan(plan, budget_bytes)?;
+        if vol.len() != plan.vg().num_voxels() {
+            return Err(LeapError::ShapeMismatch {
+                what: "volume",
+                expected: plan.vg().num_voxels(),
+                got: vol.len(),
+            });
+        }
+        for t in 0..tv.ntiles {
+            let (u0, u1) = tv.tile_range(t);
+            let runs = plan.window_runs(u0, u1);
+            let nx = plan.vg().nx;
+            let buf = tv.fault(t);
+            for (g, w) in runs {
+                buf[w..w + nx].copy_from_slice(&vol.data[g..g + nx]);
+            }
+            tv.dirty[t] = true;
+        }
+        Ok(tv)
+    }
+
+    /// Gather the tiles back into a resident volume (faults every tile).
+    pub fn to_vol3(&mut self, plan: &ProjectionPlan) -> Vol3 {
+        self.check_plan(plan);
+        let vg = plan.vg();
+        let mut vol = Vol3::zeros(vg.nx, vg.ny, vg.nz);
+        for t in 0..self.ntiles {
+            let (u0, u1) = self.tile_range(t);
+            let runs = plan.window_runs(u0, u1);
+            let nx = vg.nx;
+            let buf = self.fault(t);
+            for (g, w) in runs {
+                vol.data[g..g + nx].copy_from_slice(&buf[w..w + nx]);
+            }
+        }
+        vol
+    }
+
+    /// Forward projection `sino = A·vol` tile by tile (overwrites
+    /// `sino`; bit-identical to resident execution — module docs).
+    pub fn forward_into(&mut self, plan: &ProjectionPlan, sino: &mut Sino) {
+        self.check_plan(plan);
+        // (per-window calls assert the sinogram shape)
+        sino.fill(0.0);
+        // ascending unit order: per detector bin, contributions append in
+        // the resident kernels' exact += order
+        for t in 0..self.ntiles {
+            let (u0, u1) = self.tile_range(t);
+            let buf = self.fault(t);
+            // split borrow: fault returns &mut into self.resident; the
+            // plan call only reads the buffer
+            let buf: &[f32] = buf;
+            plan.forward_accum_window(buf, u0, u1, sino);
+        }
+    }
+
+    /// Matched backprojection `vol = Aᵀ·sino` tile by tile (overwrites
+    /// the tiled volume; bit-identical to resident execution).
+    pub fn back_into(&mut self, plan: &ProjectionPlan, sino: &Sino) {
+        self.check_plan(plan);
+        for t in 0..self.ntiles {
+            let (u0, u1) = self.tile_range(t);
+            let buf = self.fault(t);
+            plan.back_window_into(sino, buf, u0, u1);
+            self.dirty[t] = true;
+        }
+    }
+
+    /// Unit range `[u0, u1)` owned by tile `t`.
+    pub fn tile_range(&self, t: usize) -> (usize, usize) {
+        let u0 = t * self.units_per_tile;
+        (u0, (u0 + self.units_per_tile).min(self.units))
+    }
+
+    pub fn ntiles(&self) -> usize {
+        self.ntiles
+    }
+
+    pub fn units(&self) -> usize {
+        self.units
+    }
+
+    /// Tile evictions since construction (each one wrote a dirty tile to
+    /// the store or dropped a clean one).
+    pub fn evictions(&self) -> u64 {
+        self.evictions
+    }
+
+    /// Bytes of this volume's tiles currently resident.
+    pub fn resident_bytes(&self) -> usize {
+        self.resident_bytes
+    }
+
+    pub fn budget_bytes(&self) -> usize {
+        self.budget_bytes
+    }
+
+    fn check_plan(&self, plan: &ProjectionPlan) {
+        assert_eq!(
+            (self.units, self.unit_len),
+            (plan.back_shard_units(), plan.window_planes() * plan.vg().nx),
+            "tiled volume was built for a different plan"
+        );
+    }
+
+    fn tile_len(&self, t: usize) -> usize {
+        let (u0, u1) = self.tile_range(t);
+        (u1 - u0) * self.unit_len
+    }
+
+    /// Fault tile `t` resident (zeros if never flushed, else read from
+    /// the store), refresh its LRU position, evict past the budget.
+    fn fault(&mut self, t: usize) -> &mut Vec<f32> {
+        if self.resident[t].is_none() {
+            let len = self.tile_len(t);
+            let mut buf = vec![0.0f32; len];
+            if self.flushed[t] {
+                match &mut self.store {
+                    #[cfg(unix)]
+                    Store::File(f) => {
+                        let off = (t * self.units_per_tile * self.unit_len * 4) as u64;
+                        store_read(f, off, &mut buf)
+                            .expect("tile store read failed (scratch file truncated?)");
+                    }
+                    Store::Mem(tiles) => buf.copy_from_slice(&tiles[t]),
+                }
+            }
+            self.resident[t] = Some(buf);
+            self.resident_bytes += len * 4;
+            RESIDENT_TILE_BYTES.fetch_add(len * 4, Ordering::Relaxed);
+            self.lru.push_back(t);
+            self.enforce_budget(t);
+        } else {
+            // refresh LRU position
+            if let Some(pos) = self.lru.iter().position(|&x| x == t) {
+                self.lru.remove(pos);
+            }
+            self.lru.push_back(t);
+        }
+        self.resident[t].as_mut().expect("tile just faulted resident")
+    }
+
+    /// Evict least-recently-used tiles (never `keep`) until the resident
+    /// set fits the budget or only `keep` remains.
+    fn enforce_budget(&mut self, keep: usize) {
+        while self.resident_bytes > self.budget_bytes && self.lru.len() > 1 {
+            let victim = if self.lru.front() == Some(&keep) {
+                // keep the working tile: evict the next-oldest
+                self.lru.remove(1)
+            } else {
+                self.lru.pop_front()
+            };
+            let Some(v) = victim else { break };
+            self.evict(v);
+        }
+    }
+
+    fn evict(&mut self, t: usize) {
+        let Some(buf) = self.resident[t].take() else { return };
+        let len_bytes = buf.len() * 4;
+        if self.dirty[t] {
+            match &mut self.store {
+                #[cfg(unix)]
+                Store::File(f) => {
+                    let off = (t * self.units_per_tile * self.unit_len * 4) as u64;
+                    store_write(f, off, &buf)
+                        .expect("tile store write failed (scratch volume full?)");
+                }
+                Store::Mem(tiles) => tiles[t] = buf,
+            }
+            self.dirty[t] = false;
+            self.flushed[t] = true;
+        }
+        self.resident_bytes -= len_bytes;
+        RESIDENT_TILE_BYTES.fetch_sub(len_bytes, Ordering::Relaxed);
+        self.evictions += 1;
+    }
+}
+
+impl Drop for TiledVol3 {
+    fn drop(&mut self) {
+        RESIDENT_TILE_BYTES.fetch_sub(self.resident_bytes, Ordering::Relaxed);
+    }
+}
+
+/// One-shot tiled forward projection: stage `vol` through a
+/// [`TiledVol3`] under `budget_bytes` and run `sino = A·vol` tile by
+/// tile. Returns the eviction count (≥ how hard the budget squeezed).
+/// Bit-identical to `plan.forward_into(vol, sino)` for supported plans;
+/// unsupported plans are a typed error.
+pub fn tiled_forward_into(
+    plan: &ProjectionPlan,
+    vol: &Vol3,
+    sino: &mut Sino,
+    budget_bytes: usize,
+) -> Result<u64, LeapError> {
+    let mut tv = TiledVol3::from_vol3(plan, vol, budget_bytes)?;
+    tv.forward_into(plan, sino);
+    Ok(tv.evictions())
+}
+
+/// One-shot tiled backprojection: run `vol = Aᵀ·sino` tile by tile under
+/// `budget_bytes`, gathering the tiles into the returned resident
+/// volume. Also returns the eviction count. Bit-identical to
+/// `plan.back_into(sino, vol)` for supported plans.
+pub fn tiled_back_into(
+    plan: &ProjectionPlan,
+    sino: &Sino,
+    vol: &mut Vol3,
+    budget_bytes: usize,
+) -> Result<u64, LeapError> {
+    let mut tv = TiledVol3::for_plan(plan, budget_bytes)?;
+    tv.back_into(plan, sino);
+    *vol = tv.to_vol3(plan);
+    Ok(tv.evictions())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::BackendKind;
+    use crate::geometry::{ConeBeam, FanBeam, Geometry, ParallelBeam, VolumeGeometry};
+    use crate::projector::{Model, Projector};
+    use crate::util::rng::Rng;
+
+    /// Tests that create `TiledVol3`s serialize on this lock: the
+    /// process-wide residency gauge is shared, so concurrent instances
+    /// would make its assertions racy.
+    fn gauge_lock() -> std::sync::MutexGuard<'static, ()> {
+        static LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+        LOCK.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    fn sf_cases() -> Vec<(Geometry, VolumeGeometry)> {
+        let cone = ConeBeam::standard(5, 6, 10, 1.5, 1.5, 50.0, 100.0);
+        let mut curved = cone.clone();
+        curved.shape = crate::geometry::DetectorShape::Curved;
+        vec![
+            (
+                Geometry::Parallel(ParallelBeam::standard_3d(6, 6, 10, 1.2, 1.2)),
+                VolumeGeometry::cube(8, 1.0),
+            ),
+            (
+                Geometry::Fan(FanBeam::standard(5, 14, 1.3, 50.0, 100.0)),
+                VolumeGeometry::slice2d(9, 9, 1.0),
+            ),
+            (Geometry::Cone(cone), VolumeGeometry::cube(8, 1.0)),
+            (Geometry::Cone(curved), VolumeGeometry::cube(8, 1.0)),
+        ]
+    }
+
+    #[test]
+    fn tiled_matches_resident_bit_for_bit_at_eviction_forcing_budgets() {
+        let _g = gauge_lock();
+        let mut rng = Rng::new(23);
+        for (geom, vg) in sf_cases() {
+            let p = Projector::new(geom, vg, Model::SF)
+                .with_threads(3)
+                .with_backend(BackendKind::Scalar);
+            let plan = p.plan();
+            let mut x = p.new_vol();
+            let mut y = p.new_sino();
+            rng.fill_uniform(&mut x.data, 0.0, 1.0);
+            rng.fill_uniform(&mut y.data, 0.0, 1.0);
+            let fwd_ref = plan.forward(&x);
+            let back_ref = plan.back(&y);
+            let unit_bytes = plan.window_planes() * plan.vg().nx * 4;
+            // budgets from "one unit per tile, one tile resident" up to
+            // "everything resident": every one must reproduce the
+            // resident floats exactly, and the small ones must evict
+            for (budget, must_evict) in [
+                (unit_bytes, true),                     // single-unit tiles
+                (3 * unit_bytes, true),                 // small tiles
+                (plan.back_shard_units() * unit_bytes * 4, false), // all fit
+            ] {
+                let mut fwd = plan.new_sino();
+                let ev_f = tiled_forward_into(&plan, &x, &mut fwd, budget).unwrap();
+                assert_eq!(
+                    fwd_ref.data, fwd.data,
+                    "{} forward, budget {budget}",
+                    p.geom.kind()
+                );
+                let mut back = plan.new_vol();
+                let ev_b = tiled_back_into(&plan, &y, &mut back, budget).unwrap();
+                assert_eq!(
+                    back_ref.data, back.data,
+                    "{} back, budget {budget}",
+                    p.geom.kind()
+                );
+                if must_evict {
+                    assert!(
+                        ev_f >= 2 && ev_b >= 2,
+                        "{} budget {budget}: expected ≥2 evictions (got fwd {ev_f}, back {ev_b})",
+                        p.geom.kind()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn roundtrip_through_tiles_is_lossless() {
+        let _g = gauge_lock();
+        let (geom, vg) = sf_cases().remove(2); // cone: nz planes per unit
+        let p = Projector::new(geom, vg, Model::SF).with_backend(BackendKind::Scalar);
+        let plan = p.plan();
+        let mut x = p.new_vol();
+        Rng::new(5).fill_uniform(&mut x.data, -1.0, 1.0);
+        let unit_bytes = plan.window_planes() * plan.vg().nx * 4;
+        let mut tv = TiledVol3::from_vol3(&plan, &x, unit_bytes).unwrap();
+        assert!(tv.ntiles() > 1, "tiny budget must produce multiple tiles");
+        assert_eq!(tv.to_vol3(&plan).data, x.data);
+        assert!(tv.evictions() > 0, "faulting all tiles twice under a one-tile budget must evict");
+        // the process-wide gauge tracks this instance's residency
+        assert!(resident_tile_bytes() >= tv.resident_bytes());
+    }
+
+    #[test]
+    fn unsupported_plans_are_typed_errors() {
+        let vg = VolumeGeometry::cube(8, 1.0);
+        let g = Geometry::Parallel(ParallelBeam::standard_3d(6, 6, 10, 1.2, 1.2));
+        // ray model
+        let ray = Projector::new(g.clone(), vg.clone(), Model::Joseph).plan();
+        assert!(matches!(
+            TiledVol3::for_plan(&ray, 1 << 20),
+            Err(LeapError::Unsupported(_))
+        ));
+        // simd backend
+        let simd = Projector::new(g.clone(), vg.clone(), Model::SF)
+            .with_backend(BackendKind::Simd)
+            .plan();
+        assert!(matches!(
+            TiledVol3::for_plan(&simd, 1 << 20),
+            Err(LeapError::Unsupported(_))
+        ));
+        // zero budget
+        let ok = Projector::new(g, vg, Model::SF).with_backend(BackendKind::Scalar).plan();
+        assert!(matches!(
+            TiledVol3::for_plan(&ok, 0),
+            Err(LeapError::InvalidArgument(_))
+        ));
+    }
+
+    #[test]
+    fn resident_gauge_returns_to_baseline_on_drop() {
+        let _g = gauge_lock();
+        let vg = VolumeGeometry::cube(8, 1.0);
+        let g = Geometry::Parallel(ParallelBeam::standard_3d(6, 6, 10, 1.2, 1.2));
+        let p = Projector::new(g, vg, Model::SF).with_backend(BackendKind::Scalar);
+        let plan = p.plan();
+        let before = resident_tile_bytes();
+        {
+            let mut x = p.new_vol();
+            Rng::new(1).fill_uniform(&mut x.data, 0.0, 1.0);
+            let tv = TiledVol3::from_vol3(&plan, &x, 1 << 12).unwrap();
+            assert!(resident_tile_bytes() >= before + tv.resident_bytes());
+        }
+        assert_eq!(resident_tile_bytes(), before);
+    }
+}

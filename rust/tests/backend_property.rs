@@ -138,6 +138,11 @@ fn each_backend_is_bit_identical_across_thread_counts() {
 #[test]
 fn adjoint_identity_holds_per_backend() {
     let mut rng = Rng::new(703);
+    // exact only on the f32 storage tier: a reduced tier's Aᵀ reads a
+    // quantized sinogram, so when the process default (LEAP_STORAGE —
+    // the CI matrix axis) is 16-bit the identity holds to the tier's
+    // accuracy class instead (docs/MEMORY.md)
+    let tol = if leap::precision::default_tier() == leap::StorageTier::F32 { 5e-5 } else { 5e-3 };
     for geom in all_geometries() {
         let vg = vg_for(&geom);
         for model in [Model::Siddon, Model::Joseph, Model::SF] {
@@ -155,7 +160,7 @@ fn adjoint_identity_holds_per_backend() {
                 let rhs = dot_f64(&x.data, &aty.data);
                 let gap = (lhs - rhs).abs() / lhs.abs().max(rhs.abs()).max(1e-12);
                 assert!(
-                    gap < 5e-5,
+                    gap < tol,
                     "{}/{}/{}: adjoint gap {gap}",
                     kind.name(),
                     model.name(),

@@ -65,17 +65,26 @@ fn assert_adjoint(op: &dyn LinearOp, tol: f64, what: &str, rng: &mut Rng) {
     assert!(gap < tol, "{what}: adjoint gap {gap}");
 }
 
+/// Adjoint tolerance for projector-backed operators: exact only on the
+/// f32 storage tier — a reduced tier's Aᵀ reads a quantized sinogram, so
+/// under a 16-bit LEAP_STORAGE default (the CI matrix axis) the identity
+/// holds to the tier's accuracy class instead (docs/MEMORY.md).
+fn projector_adjoint_tol() -> f64 {
+    if leap::precision::default_tier() == leap::StorageTier::F32 { 5e-5 } else { 5e-3 }
+}
+
 #[test]
 fn adjoint_identity_sweeps_every_operator() {
     let mut rng = Rng::new(1234);
+    let tol = projector_adjoint_tol();
     for geom in all_geometries() {
         let vg = vg_for(&geom);
         for model in [Model::Siddon, Model::Joseph, Model::SF] {
             let name = format!("{}/{}", model.name(), geom.kind());
             let p = Projector::new(geom.clone(), vg.clone(), model).with_threads(2);
             let a = PlanOp::new(&p);
-            assert_adjoint(&a, 5e-5, &format!("{name} PlanOp"), &mut rng);
-            assert_adjoint(&Scaled::new(&a, -1.75), 5e-5, &format!("{name} Scaled"), &mut rng);
+            assert_adjoint(&a, tol, &format!("{name} PlanOp"), &mut rng);
+            assert_adjoint(&Scaled::new(&a, -1.75), tol, &format!("{name} Scaled"), &mut rng);
             let nviews = a.range_shape().0[0];
             let mask: Vec<f32> = (0..nviews)
                 .map(|v| match v % 3 {
@@ -86,15 +95,15 @@ fn adjoint_identity_sweeps_every_operator() {
                 .collect();
             assert_adjoint(
                 &RowMasked::new(&a, mask),
-                5e-5,
+                tol,
                 &format!("{name} RowMasked"),
                 &mut rng,
             );
-            assert_adjoint(&Normal::new(&a), 5e-5, &format!("{name} Normal"), &mut rng);
+            assert_adjoint(&Normal::new(&a), tol, &format!("{name} Normal"), &mut rng);
             let filt = RampFilterOp::for_scan(&geom, Window::Hann);
             assert_adjoint(
                 &Composed::new(&filt, &a),
-                5e-4,
+                tol.max(5e-4),
                 &format!("{name} ramp∘A"),
                 &mut rng,
             );

@@ -83,6 +83,10 @@ fn plan_back_bit_identical_all_models_all_geometries() {
 #[test]
 fn adjoint_identity_holds_through_plan() {
     let mut rng = Rng::new(303);
+    // exact only on the f32 storage tier: a reduced tier's Aᵀ reads a
+    // quantized sinogram, so under a 16-bit LEAP_STORAGE default the
+    // identity holds to the tier's accuracy class (docs/MEMORY.md)
+    let tol = if leap::precision::default_tier() == leap::StorageTier::F32 { 5e-5 } else { 5e-3 };
     for geom in all_geometries() {
         let vg = vg_for(&geom);
         for model in [Model::Siddon, Model::Joseph, Model::SF] {
@@ -98,7 +102,7 @@ fn adjoint_identity_holds_through_plan() {
             let rhs = dot_f64(&x.data, &aty.data);
             let gap = (lhs - rhs).abs() / lhs.abs().max(rhs.abs()).max(1e-12);
             assert!(
-                gap < 5e-5,
+                gap < tol,
                 "{}/{}: adjoint gap through plan {gap}",
                 model.name(),
                 p.geom.kind()

@@ -1,0 +1,251 @@
+//! Property tests for the range-restricted executors on
+//! [`leap::projector::plan::ProjectionPlan`] — the per-tile kernels the
+//! out-of-core scheduler (`leap::vol`) is built on.
+//!
+//! The stitching contract (PR 7, re-stated in docs/MEMORY.md): a range
+//! executor zeroes and writes only the output its range owns — sinogram
+//! view slabs for `forward_range_into_with_threads`, backprojection
+//! shard units for `back_range_into_with_threads` — and runs the *same*
+//! kernel the full-range path runs. So executing **any** partition of
+//! the full range into one buffer reproduces the unsharded executor bit
+//! for bit, for every model × geometry × executable backend (the 12
+//! range executors: {forward, back} × {parallel, fan, cone} × {scalar,
+//! simd}, plus the ray fallbacks the model sweep reaches).
+//!
+//! The sweep deliberately includes the degenerate shapes a tile
+//! scheduler produces at the edges: empty ranges (`lo == hi`, at both
+//! ends and mid-partition), single-element ranges, and uneven splits.
+
+use leap::backend::BackendKind;
+use leap::geometry::{
+    ConeBeam, DetectorShape, FanBeam, Geometry, ModularBeam, ParallelBeam, VolumeGeometry,
+};
+use leap::projector::{Model, Projector};
+use leap::util::rng::Rng;
+
+/// One geometry per family (flat and curved cone detectors both count:
+/// they take different footprint/ray code paths).
+fn all_geometries() -> Vec<Geometry> {
+    let cone = ConeBeam::standard(6, 10, 14, 1.6, 1.6, 60.0, 120.0);
+    let mut curved = cone.clone();
+    curved.shape = DetectorShape::Curved;
+    vec![
+        Geometry::Parallel(ParallelBeam::standard_3d(7, 10, 14, 1.3, 1.3)),
+        Geometry::Fan(FanBeam::standard(6, 18, 1.4, 60.0, 120.0)),
+        Geometry::Cone(cone.clone()),
+        Geometry::Cone(curved),
+        Geometry::Modular(ModularBeam::from_cone(&cone)),
+    ]
+}
+
+fn vg_for(geom: &Geometry) -> VolumeGeometry {
+    if matches!(geom, Geometry::Fan(_)) {
+        VolumeGeometry::slice2d(12, 12, 1.0)
+    } else {
+        VolumeGeometry::cube(10, 1.0)
+    }
+}
+
+const EXECUTABLE: [BackendKind; 2] = [BackendKind::Scalar, BackendKind::Simd];
+
+/// Partitions of `0..n` a tile scheduler could plausibly emit: the full
+/// range, a split with empty and single-element ranges at both ends and
+/// in the middle, and uneven interior cuts.
+fn partitions(n: usize) -> Vec<Vec<(usize, usize)>> {
+    let mut out = vec![vec![(0, n)]];
+    if n >= 2 {
+        // empty head, single element, empty middle, bulk, empty tail
+        out.push(vec![(0, 0), (0, 1), (1, 1), (1, n), (n, n)]);
+        // uneven thirds (first cut deliberately small)
+        let a = n / 3;
+        let b = (a + (n - a) / 4 + 1).min(n);
+        out.push(vec![(0, a), (a, b), (b, n)]);
+        // all single-element ranges
+        out.push((0..n).map(|i| (i, i + 1)).collect());
+    }
+    out
+}
+
+#[test]
+fn stitched_forward_ranges_reproduce_the_full_executor_bit_for_bit() {
+    let mut rng = Rng::new(811);
+    for geom in all_geometries() {
+        let vg = vg_for(&geom);
+        for model in [Model::Siddon, Model::Joseph, Model::SF] {
+            for kind in EXECUTABLE {
+                let p = Projector::new(geom.clone(), vg.clone(), model)
+                    .with_threads(3)
+                    .with_backend(kind);
+                let plan = p.plan();
+                let mut x = p.new_vol();
+                rng.fill_uniform(&mut x.data, 0.0, 1.0);
+                let reference = plan.forward(&x);
+                let nviews = plan.forward_shard_units();
+                for parts in partitions(nviews) {
+                    // NaN sentinel: any view slab a range fails to
+                    // write stays NaN and can never equal the reference
+                    let mut stitched = plan.new_sino();
+                    stitched.data.fill(f32::NAN);
+                    for &(v0, v1) in &parts {
+                        plan.forward_range_into_with_threads(&x, &mut stitched, 2, v0, v1);
+                    }
+                    assert_eq!(
+                        stitched.data,
+                        reference.data,
+                        "{}/{}/{}: forward partition {parts:?} does not stitch",
+                        kind.name(),
+                        model.name(),
+                        p.geom.kind()
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn stitched_back_ranges_reproduce_the_full_executor_bit_for_bit() {
+    let mut rng = Rng::new(812);
+    for geom in all_geometries() {
+        let vg = vg_for(&geom);
+        for model in [Model::Siddon, Model::Joseph, Model::SF] {
+            for kind in EXECUTABLE {
+                let p = Projector::new(geom.clone(), vg.clone(), model)
+                    .with_threads(3)
+                    .with_backend(kind);
+                let plan = p.plan();
+                let mut y = p.new_sino();
+                rng.fill_uniform(&mut y.data, 0.0, 1.0);
+                let reference = plan.back(&y);
+                let units = plan.back_shard_units();
+                for parts in partitions(units) {
+                    let mut stitched = plan.new_vol();
+                    stitched.data.fill(f32::NAN);
+                    for &(u0, u1) in &parts {
+                        plan.back_range_into_with_threads(&y, &mut stitched, 2, u0, u1);
+                    }
+                    assert_eq!(
+                        stitched.data,
+                        reference.data,
+                        "{}/{}/{}: back partition {parts:?} does not stitch",
+                        kind.name(),
+                        model.name(),
+                        p.geom.kind()
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn range_order_does_not_matter() {
+    // ranges own disjoint output, so a scheduler may execute tiles in
+    // any order (the LRU-driven order of `vol::TiledVol3` is not
+    // ascending) — reversed stitching must still be bit-exact
+    let mut rng = Rng::new(813);
+    for geom in all_geometries() {
+        let vg = vg_for(&geom);
+        let p = Projector::new(geom.clone(), vg.clone(), Model::SF).with_threads(2);
+        let plan = p.plan();
+        let mut x = p.new_vol();
+        rng.fill_uniform(&mut x.data, 0.0, 1.0);
+        let reference = plan.forward(&x);
+        let n = plan.forward_shard_units();
+        let mut stitched = plan.new_sino();
+        stitched.data.fill(f32::NAN);
+        for v in (0..n).rev() {
+            plan.forward_range_into_with_threads(&x, &mut stitched, 2, v, v + 1);
+        }
+        assert_eq!(stitched.data, reference.data, "{}: reversed forward order", p.geom.kind());
+        let mut y = p.new_sino();
+        rng.fill_uniform(&mut y.data, 0.0, 1.0);
+        let back_ref = plan.back(&y);
+        let units = plan.back_shard_units();
+        let mut vol = plan.new_vol();
+        vol.data.fill(f32::NAN);
+        let mid = units / 2;
+        for &(u0, u1) in &[(mid, units), (0, mid)] {
+            plan.back_range_into_with_threads(&y, &mut vol, 2, u0, u1);
+        }
+        assert_eq!(vol.data, back_ref.data, "{}: reordered back halves", p.geom.kind());
+    }
+}
+
+#[test]
+fn empty_ranges_write_nothing() {
+    // an empty range is a no-op, not "zero everything": the tile
+    // scheduler calls executors for whatever slices the budget produces
+    // and must be able to skip without disturbing neighbours
+    let mut rng = Rng::new(814);
+    for geom in all_geometries() {
+        let vg = vg_for(&geom);
+        for kind in EXECUTABLE {
+            let p = Projector::new(geom.clone(), vg.clone(), Model::SF)
+                .with_threads(2)
+                .with_backend(kind);
+            let plan = p.plan();
+            let mut x = p.new_vol();
+            rng.fill_uniform(&mut x.data, 0.0, 1.0);
+            const SENTINEL: f32 = 7.25;
+            let mut sino = plan.new_sino();
+            sino.data.fill(SENTINEL);
+            let n = plan.forward_shard_units();
+            for v in [0, n / 2, n] {
+                plan.forward_range_into_with_threads(&x, &mut sino, 2, v, v);
+            }
+            assert!(
+                sino.data.iter().all(|&s| s == SENTINEL),
+                "{}/{}: empty forward range wrote output",
+                kind.name(),
+                p.geom.kind()
+            );
+            let mut y = p.new_sino();
+            rng.fill_uniform(&mut y.data, 0.0, 1.0);
+            let mut vol = plan.new_vol();
+            vol.data.fill(SENTINEL);
+            let units = plan.back_shard_units();
+            for u in [0, units / 2, units] {
+                plan.back_range_into_with_threads(&y, &mut vol, 2, u, u);
+            }
+            assert!(
+                vol.data.iter().all(|&v| v == SENTINEL),
+                "{}/{}: empty back range wrote output",
+                kind.name(),
+                p.geom.kind()
+            );
+        }
+    }
+}
+
+#[test]
+fn range_executors_are_thread_count_invariant() {
+    // the per-range kernels inherit the slab/unit-ownership invariant:
+    // the same range with 1 worker and with many workers produces the
+    // same bits (the out-of-core scheduler leans on this to pick tile
+    // parallelism by residency, not by semantics)
+    let mut rng = Rng::new(815);
+    for geom in all_geometries() {
+        let vg = vg_for(&geom);
+        let p = Projector::new(geom.clone(), vg.clone(), Model::SF).with_threads(1);
+        let plan = p.plan();
+        let mut x = p.new_vol();
+        rng.fill_uniform(&mut x.data, 0.0, 1.0);
+        let n = plan.forward_shard_units();
+        let (v0, v1) = (n / 3, n);
+        let mut a = plan.new_sino();
+        let mut b = plan.new_sino();
+        plan.forward_range_into_with_threads(&x, &mut a, 1, v0, v1);
+        plan.forward_range_into_with_threads(&x, &mut b, 4, v0, v1);
+        assert_eq!(a.data, b.data, "{}: forward range thread variance", p.geom.kind());
+        let mut y = plan.new_sino();
+        rng.fill_uniform(&mut y.data, 0.0, 1.0);
+        let units = plan.back_shard_units();
+        let (u0, u1) = (units / 4, units.div_ceil(2));
+        let mut va = plan.new_vol();
+        let mut vb = plan.new_vol();
+        plan.back_range_into_with_threads(&y, &mut va, 1, u0, u1);
+        plan.back_range_into_with_threads(&y, &mut vb, 4, u0, u1);
+        assert_eq!(va.data, vb.data, "{}: back range thread variance", p.geom.kind());
+    }
+}

@@ -1,0 +1,312 @@
+//! Property tests for the reduced-precision storage tiers
+//! (`leap::precision`).
+//!
+//! The tier contract (docs/MEMORY.md) mirrors the backend contract two
+//! doors down:
+//!
+//! * **Within** a tier, results are bit-identical across thread counts
+//!   and across the planned/direct split — quantization is a pure
+//!   per-element map on data at rest (cached cone coefficient tables,
+//!   backprojection sinogram input), never on the accumulation, so the
+//!   slab/unit ownership invariants are untouched.
+//! * **Across** tiers, forward and back projections track the f32 tier
+//!   to a relative-l2 tolerance set by the storage format's mantissa
+//!   (f16: 11 bits, bf16: 8 bits) — and the models/geometries whose
+//!   paths store nothing (parallel/fan SF forward) agree *exactly*.
+//!
+//! Both properties sweep every model × every geometry family, plus the
+//! builder/env selection story end-to-end.
+
+use leap::geometry::config::ScanConfig;
+use leap::geometry::{
+    ConeBeam, DetectorShape, FanBeam, Geometry, ModularBeam, ParallelBeam, VolumeGeometry,
+};
+use leap::projector::{Model, Projector};
+use leap::util::rng::Rng;
+use leap::{LeapError, ScanBuilder, StorageTier};
+
+/// One geometry per family (flat and curved cone detectors both count:
+/// they take different footprint/ray code paths).
+fn all_geometries() -> Vec<Geometry> {
+    let cone = ConeBeam::standard(6, 10, 14, 1.6, 1.6, 60.0, 120.0);
+    let mut curved = cone.clone();
+    curved.shape = DetectorShape::Curved;
+    vec![
+        Geometry::Parallel(ParallelBeam::standard_3d(7, 10, 14, 1.3, 1.3)),
+        Geometry::Fan(FanBeam::standard(6, 18, 1.4, 60.0, 120.0)),
+        Geometry::Cone(cone.clone()),
+        Geometry::Cone(curved),
+        Geometry::Modular(ModularBeam::from_cone(&cone)),
+    ]
+}
+
+fn vg_for(geom: &Geometry) -> VolumeGeometry {
+    if matches!(geom, Geometry::Fan(_)) {
+        VolumeGeometry::slice2d(12, 12, 1.0)
+    } else {
+        VolumeGeometry::cube(10, 1.0)
+    }
+}
+
+fn rel_l2(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let mut num = 0.0f64;
+    let mut den = 0.0f64;
+    for (&x, &y) in a.iter().zip(b) {
+        num += (x as f64 - y as f64).powi(2);
+        den += (y as f64).powi(2);
+    }
+    (num / den.max(1e-30)).sqrt()
+}
+
+const REDUCED: [StorageTier; 2] = [StorageTier::F16, StorageTier::Bf16];
+
+/// The acceptance bound: reduced-tier projections track f32 to 1e-3
+/// relative l2. bf16's unit roundoff is ~3.9e-3 per stored element, but
+/// every projection output sums many independently-rounded terms, so
+/// the output-level error averages well under the per-element bound
+/// (f16, with 3 more mantissa bits, sits ~8× lower still).
+const TIER_TOL: f64 = 1e-3;
+
+#[test]
+fn reduced_tiers_track_f32_within_tolerance_all_models_all_geometries() {
+    let mut rng = Rng::new(801);
+    for geom in all_geometries() {
+        let vg = vg_for(&geom);
+        for model in [Model::Siddon, Model::Joseph, Model::SF] {
+            let f32p = Projector::new(geom.clone(), vg.clone(), model)
+                .with_threads(3)
+                .with_storage_tier(StorageTier::F32);
+            let mut x = f32p.new_vol();
+            rng.fill_uniform(&mut x.data, 0.0, 1.0);
+            let mut y = f32p.new_sino();
+            rng.fill_uniform(&mut y.data, 0.0, 1.0);
+            let fwd_ref = f32p.forward(&x);
+            let back_ref = f32p.back(&y);
+            for tier in REDUCED {
+                let p = Projector::new(geom.clone(), vg.clone(), model)
+                    .with_threads(3)
+                    .with_storage_tier(tier);
+                let fwd_gap = rel_l2(&p.forward(&x).data, &fwd_ref.data);
+                assert!(
+                    fwd_gap <= TIER_TOL,
+                    "{}/{}/{}: forward tier gap {fwd_gap}",
+                    tier.name(),
+                    model.name(),
+                    p.geom.kind()
+                );
+                let back_gap = rel_l2(&p.back(&y).data, &back_ref.data);
+                assert!(
+                    back_gap <= TIER_TOL,
+                    "{}/{}/{}: back tier gap {back_gap}",
+                    tier.name(),
+                    model.name(),
+                    p.geom.kind()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn forward_paths_without_stored_tables_are_exact_across_tiers() {
+    // parallel-beam SF stores no per-view coefficient table and the
+    // forward path quantizes no input, so its "quantized" tiers are the
+    // f32 tier bit for bit — the accuracy-class table of docs/MEMORY.md
+    let mut rng = Rng::new(802);
+    let geom = Geometry::Parallel(ParallelBeam::standard_3d(7, 10, 14, 1.3, 1.3));
+    let vg = vg_for(&geom);
+    let f32p = Projector::new(geom.clone(), vg.clone(), Model::SF)
+        .with_threads(2)
+        .with_storage_tier(StorageTier::F32);
+    let mut x = f32p.new_vol();
+    rng.fill_uniform(&mut x.data, 0.0, 1.0);
+    let reference = f32p.forward(&x);
+    for tier in REDUCED {
+        let p = Projector::new(geom.clone(), vg.clone(), Model::SF)
+            .with_threads(2)
+            .with_storage_tier(tier);
+        assert_eq!(
+            p.forward(&x).data,
+            reference.data,
+            "{}: parallel SF forward must not depend on the storage tier",
+            tier.name()
+        );
+    }
+}
+
+#[test]
+fn each_tier_is_bit_identical_across_thread_counts() {
+    let mut rng = Rng::new(803);
+    for geom in all_geometries() {
+        let vg = vg_for(&geom);
+        for model in [Model::Siddon, Model::Joseph, Model::SF] {
+            for tier in [StorageTier::F32, StorageTier::F16, StorageTier::Bf16] {
+                let single = Projector::new(geom.clone(), vg.clone(), model)
+                    .with_threads(1)
+                    .with_storage_tier(tier);
+                let multi = Projector::new(geom.clone(), vg.clone(), model)
+                    .with_threads(3)
+                    .with_storage_tier(tier);
+                let mut x = single.new_vol();
+                rng.fill_uniform(&mut x.data, 0.0, 1.0);
+                assert_eq!(
+                    single.forward(&x).data,
+                    multi.forward(&x).data,
+                    "{}/{}/{}: forward depends on thread count",
+                    tier.name(),
+                    model.name(),
+                    single.geom.kind()
+                );
+                let mut y = single.new_sino();
+                rng.fill_uniform(&mut y.data, 0.0, 1.0);
+                assert_eq!(
+                    single.back(&y).data,
+                    multi.back(&y).data,
+                    "{}/{}/{}: back depends on thread count",
+                    tier.name(),
+                    model.name(),
+                    single.geom.kind()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn planned_and_direct_paths_agree_per_tier() {
+    // the plan/execute-split invariant must survive tier selection: a
+    // cached plan (packed coefficient arenas) and the direct path
+    // (transient plan, quantized scratch) produce the same bits,
+    // because pack() and quantize_in_place() emit the identical
+    // coefficient stream (decode(encode(x)) == quantize(x))
+    let mut rng = Rng::new(804);
+    for geom in all_geometries() {
+        let vg = vg_for(&geom);
+        for tier in REDUCED {
+            let p = Projector::new(geom.clone(), vg.clone(), Model::SF)
+                .with_threads(3)
+                .with_storage_tier(tier);
+            let plan = p.plan();
+            assert_eq!(plan.storage(), tier, "plan must snapshot its projector's tier");
+            let mut x = p.new_vol();
+            rng.fill_uniform(&mut x.data, 0.0, 1.0);
+            let direct = p.forward(&x);
+            let mut planned = p.new_sino();
+            plan.forward_into(&x, &mut planned);
+            assert_eq!(
+                direct.data,
+                planned.data,
+                "{}/{}: planned forward differs from direct",
+                tier.name(),
+                p.geom.kind()
+            );
+            let mut y = p.new_sino();
+            rng.fill_uniform(&mut y.data, 0.0, 1.0);
+            let direct_back = p.back(&y);
+            let mut planned_back = p.new_vol();
+            plan.back_into(&y, &mut planned_back);
+            assert_eq!(
+                direct_back.data,
+                planned_back.data,
+                "{}/{}: planned back differs from direct",
+                tier.name(),
+                p.geom.kind()
+            );
+        }
+    }
+}
+
+#[test]
+fn builder_validates_storage_selection_end_to_end() {
+    let cfg = ScanConfig {
+        geometry: Geometry::Parallel(ParallelBeam::standard_2d(8, 16, 1.0)),
+        volume: VolumeGeometry::slice2d(12, 12, 1.0),
+    };
+    for tier in [StorageTier::F32, StorageTier::F16, StorageTier::Bf16] {
+        let scan = ScanBuilder::from_config(&cfg)
+            .model(Model::SF)
+            .threads(2)
+            .storage_tier(tier)
+            .build()
+            .unwrap();
+        assert_eq!(scan.storage_tier(), tier);
+    }
+    // the string knob parses leniently (case, surrounding whitespace)
+    for (name, tier) in [
+        ("f16", StorageTier::F16),
+        (" BF16 ", StorageTier::Bf16),
+        ("half", StorageTier::F16),
+        ("float32", StorageTier::F32),
+    ] {
+        let scan = ScanBuilder::from_config(&cfg).storage_tier_str(name).build().unwrap();
+        assert_eq!(scan.storage_tier(), tier, "{name:?}");
+    }
+    // typed knob beats string knob, matching the backend precedence
+    let scan = ScanBuilder::from_config(&cfg)
+        .storage_tier_str("bf16")
+        .storage_tier(StorageTier::F16)
+        .build()
+        .unwrap();
+    assert_eq!(scan.storage_tier(), StorageTier::F16);
+    // unknown names are a typed InvalidArgument at build time
+    let e = ScanBuilder::from_config(&cfg).storage_tier_str("f8").build().unwrap_err();
+    assert!(matches!(e, LeapError::InvalidArgument(ref m) if m.contains("f8")), "{e:?}");
+}
+
+#[test]
+fn reduced_tier_scans_solve_close_to_the_f32_tier() {
+    // end-to-end: an iterative reconstruction run entirely on the f16
+    // tier lands near the f32 tier (per-iteration tier error does not
+    // amplify — the pair stays matched per tier, so SIRT still descends)
+    let cfg = ScanConfig {
+        geometry: Geometry::Parallel(ParallelBeam::standard_2d(16, 36, 1.0)),
+        volume: VolumeGeometry::slice2d(24, 24, 1.0),
+    };
+    let truth = leap::phantom::shepp::shepp_logan_2d(10.0, 0.02).rasterize(&cfg.volume, 2);
+    let mut recon = Vec::new();
+    for tier in [StorageTier::F32, StorageTier::F16] {
+        let scan = ScanBuilder::from_config(&cfg)
+            .model(Model::SF)
+            .threads(2)
+            .storage_tier(tier)
+            .build()
+            .unwrap();
+        let sino = scan.forward(&truth.data).unwrap();
+        let solver = leap::Solver::Sirt { iterations: 8, lambda: 1.0, nonneg: true };
+        recon.push(scan.solve(solver, &sino).unwrap());
+    }
+    let gap = rel_l2(&recon[1], &recon[0]);
+    assert!(gap <= 5e-3, "SIRT cross-tier gap {gap}");
+}
+
+#[test]
+fn tiered_sino_round_trip_preserves_shape_and_tolerance() {
+    use leap::precision::TieredSino;
+    let mut rng = Rng::new(805);
+    let p = Projector::new(
+        Geometry::Parallel(ParallelBeam::standard_3d(5, 6, 9, 1.0, 1.0)),
+        VolumeGeometry::cube(6, 1.0),
+        Model::SF,
+    );
+    let mut y = p.new_sino();
+    rng.fill_uniform(&mut y.data, 0.0, 1.0);
+    for tier in [StorageTier::F32, StorageTier::F16, StorageTier::Bf16] {
+        let t = TieredSino::from_sino(tier, &y);
+        let back = t.to_sino();
+        assert_eq!((back.nviews, back.nrows, back.ncols), (y.nviews, y.nrows, y.ncols));
+        assert_eq!(back.data.len(), y.data.len());
+        let gap = rel_l2(&back.data, &y.data);
+        let bound = match tier {
+            StorageTier::F32 => 0.0,
+            StorageTier::F16 => 5e-4,
+            StorageTier::Bf16 => 4e-3,
+        };
+        assert!(gap <= bound, "{}: round-trip gap {gap}", tier.name());
+        // storage really shrinks: the tiered copy holds tier-width bits
+        assert_eq!(t.storage_bytes(), y.data.len() * tier.bytes_per_sample());
+        // quantization is idempotent: a second trip is the identity
+        let twice = TieredSino::from_sino(&back, tier).to_sino();
+        assert_eq!(twice.data, back.data, "{}: quantize must be idempotent", tier.name());
+    }
+}

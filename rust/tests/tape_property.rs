@@ -22,20 +22,29 @@ use leap::tape::{
     fit, learned_fbp, unrolled_gd, FitCfg, Optimizer, Pipeline, PipelineBuilder, UnrollCfg,
 };
 use leap::util::rng::Rng;
+use leap::StorageTier;
 
 const FD_TOL: f64 = 1e-3;
 const H: f32 = 1e-2;
 
+// The FD ops pin the f32 storage tier: central differences probe the
+// true (smooth) operator, and a reduced tier's Aᵀ reads its input
+// through a quantization staircase whose step is comparable to the FD
+// step H — tier accuracy has its own suite (storage_property.rs).
 fn fan_op() -> Arc<dyn LinearOp> {
     let vg = VolumeGeometry::slice2d(10, 10, 1.0);
     let g = Geometry::Fan(FanBeam::standard(8, 14, 1.0, 60.0, 120.0));
-    Arc::new(PlanOp::new(&Projector::new(g, vg, Model::SF).with_threads(2)))
+    Arc::new(PlanOp::new(
+        &Projector::new(g, vg, Model::SF).with_threads(2).with_storage_tier(StorageTier::F32),
+    ))
 }
 
 fn parallel_op() -> Arc<dyn LinearOp> {
     let vg = VolumeGeometry::slice2d(10, 10, 1.0);
     let g = Geometry::Parallel(ParallelBeam::standard_2d(7, 16, 1.0));
-    Arc::new(PlanOp::new(&Projector::new(g, vg, Model::SF).with_threads(2)))
+    Arc::new(PlanOp::new(
+        &Projector::new(g, vg, Model::SF).with_threads(2).with_storage_tier(StorageTier::F32),
+    ))
 }
 
 fn rand_vec(n: usize, lo: f64, hi: f64, rng: &mut Rng) -> Vec<f32> {
