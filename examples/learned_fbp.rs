@@ -28,7 +28,7 @@ use leap::phantom::shepp;
 use leap::projector::Model;
 use leap::recon::{self, Window};
 use leap::tape::{learned_fbp, FitCfg, Optimizer};
-use leap::{Sino, Vol3};
+use leap::{Sino, StorageTier, Vol3};
 
 fn main() {
     let smoke = std::env::var("LEAP_TRAIN_SMOKE").map(|v| v == "1").unwrap_or(false);
@@ -39,10 +39,14 @@ fn main() {
     // 1. fan-beam Shepp-Logan scan
     let vg = VolumeGeometry::slice2d(n, n, 1.0);
     let geom = Geometry::Fan(FanBeam::standard(nviews, ncols, 1.0, 150.0, 300.0));
+    // pin f32 storage: the asserted RMSE margin is calibrated for exact
+    // plan/sinogram storage, and a LEAP_STORAGE=bf16 environment must
+    // not change what this gate measures
     let scan = ScanBuilder::new()
         .geometry(geom.clone())
         .volume(vg.clone())
         .model(Model::SF)
+        .storage_tier(StorageTier::F32)
         .build()
         .expect("valid scan");
     let truth = shepp::shepp_logan_2d(n as f64 * 0.42, 0.02).rasterize(&vg, 2);

@@ -4,9 +4,9 @@
 //!
 //! Run: `cargo bench --bench recon`
 //!
-//! Every measurement is appended as a JSON line to `BENCH_PR8.json` at
+//! Every measurement is appended as a JSON line to `BENCH_PR9.json` at
 //! the repo root (the perf trajectory file; earlier PRs' history lives
-//! in `BENCH_PR2.json`–`BENCH_PR7.json`) in addition to
+//! in `BENCH_PR2.json`–`BENCH_PR8.json`) in addition to
 //! `target/bench_results.jsonl`. Set `LEAP_BENCH_SMOKE=1` to run one
 //! iteration of everything (the CI smoke step — including the
 //! batched-coordinator, wire-protocol, tape-gradient,
@@ -46,7 +46,7 @@ use leap::{ScanBuilder, Sino, Vol3};
 
 /// Where the perf trajectory lives: the repo root, independent of the
 /// working directory cargo gives the bench binary.
-const TRAJECTORY: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_PR8.json");
+const TRAJECTORY: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_PR9.json");
 
 /// One field of `/proc/self/status` in kB (`VmHWM` = peak RSS,
 /// `VmRSS` = current) — `None` off Linux, keeping the bench portable.
@@ -861,6 +861,104 @@ fn main() {
     drop(grad_server);
     all.push(m_tape_local);
     all.push(m_tape_served);
+
+    // ── neural tape nodes: direct conv kernel throughput ──
+    // The tape's Conv2d/Conv3d nodes dispatch to these direct
+    // (im2col-free) kernels (rust/src/nn/); the rows record forward and
+    // full-backward (input + weight + bias VJPs) throughput in output
+    // Mcell/s so kernel regressions land in the perf trajectory. The
+    // corpus row proves the seeded phantom corpus regenerates
+    // bit-identically — training data is a pure function of
+    // (family, count, seed), which is what makes every training run in
+    // the suite reproducible.
+    {
+        use leap::nn;
+        let (cw, ch, cin, cout, k) = (96usize, 96usize, 8usize, 8usize, 3usize);
+        let mut cx = vec![0.0f32; cw * ch * cin];
+        leap::util::rng::Rng::new(61).fill_uniform(&mut cx, 0.0, 1.0);
+        let cwt = nn::conv_init(7, k * k, cin, cout);
+        let cb = vec![0.05f32; cout];
+        let mut cy = vec![0.0f32; cw * ch * cout];
+        let cells2 = (cw * ch * cout) as f64;
+        let mut m = bench.run(&format!("nn conv2d fwd {cw}×{ch} c{cin}→c{cout} k{k}"), || {
+            nn::conv2d_forward(&cx, &cwt, &cb, cw, ch, cin, cout, k, &mut cy);
+            leap::bench_harness::black_box(cy[0])
+        });
+        m.notes.push(("out_mcells_per_s".into(), cells2 / m.mean_s / 1e6));
+        m.print();
+        all.push(m);
+
+        nn::conv2d_forward(&cx, &cwt, &cb, cw, ch, cin, cout, k, &mut cy);
+        let dy2 = cy.clone();
+        let mut dx2 = vec![0.0f32; cw * ch * cin];
+        let mut dw2 = vec![0.0f32; k * k * cin * cout];
+        let mut db2 = vec![0.0f32; cout];
+        let mut m = bench.run(&format!("nn conv2d bwd {cw}×{ch} c{cin}→c{cout} k{k}"), || {
+            dx2.iter_mut().for_each(|v| *v = 0.0);
+            dw2.iter_mut().for_each(|v| *v = 0.0);
+            db2.iter_mut().for_each(|v| *v = 0.0);
+            nn::conv2d_input_grad(&dy2, &cwt, cw, ch, cin, cout, k, &mut dx2);
+            nn::conv2d_weight_grad(&cx, &dy2, cw, ch, cin, cout, k, &mut dw2);
+            nn::conv2d_bias_grad(&dy2, cw, ch, cout, &mut db2);
+            leap::bench_harness::black_box(dx2[0])
+        });
+        m.notes.push(("out_mcells_per_s".into(), cells2 / m.mean_s / 1e6));
+        m.print();
+        all.push(m);
+
+        let (vw, vh, vz, ci3, co3) = (32usize, 32usize, 16usize, 4usize, 4usize);
+        let mut x3 = vec![0.0f32; vw * vh * vz * ci3];
+        leap::util::rng::Rng::new(62).fill_uniform(&mut x3, 0.0, 1.0);
+        let w3 = nn::conv_init(8, k * k * k, ci3, co3);
+        let b3 = vec![0.05f32; co3];
+        let mut y3 = vec![0.0f32; vw * vh * vz * co3];
+        let cells3 = (vw * vh * vz * co3) as f64;
+        let mut m = bench.run(&format!("nn conv3d fwd {vw}×{vh}×{vz} c{ci3}→c{co3} k{k}"), || {
+            nn::conv3d_forward(&x3, &w3, &b3, vw, vh, vz, ci3, co3, k, &mut y3);
+            leap::bench_harness::black_box(y3[0])
+        });
+        m.notes.push(("out_mcells_per_s".into(), cells3 / m.mean_s / 1e6));
+        m.print();
+        all.push(m);
+
+        nn::conv3d_forward(&x3, &w3, &b3, vw, vh, vz, ci3, co3, k, &mut y3);
+        let dy3 = y3.clone();
+        let mut dx3 = vec![0.0f32; vw * vh * vz * ci3];
+        let mut dw3 = vec![0.0f32; k * k * k * ci3 * co3];
+        let mut db3 = vec![0.0f32; co3];
+        let mut m = bench.run(&format!("nn conv3d bwd {vw}×{vh}×{vz} c{ci3}→c{co3} k{k}"), || {
+            dx3.iter_mut().for_each(|v| *v = 0.0);
+            dw3.iter_mut().for_each(|v| *v = 0.0);
+            db3.iter_mut().for_each(|v| *v = 0.0);
+            nn::conv3d_input_grad(&dy3, &w3, vw, vh, vz, ci3, co3, k, &mut dx3);
+            nn::conv3d_weight_grad(&x3, &dy3, vw, vh, vz, ci3, co3, k, &mut dw3);
+            nn::conv3d_bias_grad(&dy3, vw, vh, vz, co3, &mut db3);
+            leap::bench_harness::black_box(dx3[0])
+        });
+        m.notes.push(("out_mcells_per_s".into(), cells3 / m.mean_s / 1e6));
+        m.print();
+        all.push(m);
+
+        use leap::phantom::corpus::{Corpus, CorpusCfg, Family};
+        let cvg = VolumeGeometry::slice2d(96, 96, 1.0);
+        let ccfg = CorpusCfg { family: Family::SheppJitter, count: 4, ..CorpusCfg::default() };
+        let corpus = Corpus::new(ccfg.clone(), &cvg, 2024).expect("bench corpus");
+        let truth_bits: Vec<Vec<u32>> = (0..4u64)
+            .map(|id| corpus.truth(id).data.iter().map(|v| v.to_bits()).collect())
+            .collect();
+        let mut m = bench.run("phantom corpus 4×96² shepp-jitter (deterministic)", || {
+            let again = Corpus::new(ccfg.clone(), &cvg, 2024).expect("bench corpus");
+            for (id, want) in truth_bits.iter().enumerate() {
+                let got: Vec<u32> =
+                    again.truth(id as u64).data.iter().map(|v| v.to_bits()).collect();
+                assert_eq!(&got, want, "corpus item {id} must regenerate bit-identically");
+            }
+            leap::bench_harness::black_box(truth_bits.len())
+        });
+        m.notes.push(("items".into(), 4.0));
+        m.print();
+        all.push(m);
+    }
 
     // ── view-sharded operator execution ──
     // One LinearOp application split into S sequential pool regions —

@@ -482,11 +482,25 @@ impl Executor for SessionExecutor {
     ) -> Vec<Result<Vec<Vec<f32>>, LeapError>> {
         if matches!(op, Op::SessionPipelineGrad { .. }) {
             // one pipeline resolve for the whole batch; items evaluate
-            // sequentially (each carries its own params, and the tape's
-            // projections already use the full worker pool internally)
+            // concurrently (each carries its own params in its packed
+            // payload). pool regions are caller-participating, so the
+            // per-item tape sweeps nesting their own projections inside
+            // this outer parallel loop cannot deadlock, and each item's
+            // result is independent — the reply order is the slot
+            // order, identical to the sequential collect this replaces.
             return match self.resolve_pipeline(op) {
                 Ok(pipe) => {
-                    items.iter().map(|inputs| Self::pipeline_grad(&pipe, inputs)).collect()
+                    let workers = crate::util::pool::default_threads().min(items.len().max(1));
+                    let slots: Vec<std::sync::Mutex<Option<Result<Vec<Vec<f32>>, LeapError>>>> =
+                        items.iter().map(|_| std::sync::Mutex::new(None)).collect();
+                    crate::util::pool::parallel_items(items.len(), workers, |i| {
+                        let r = Self::pipeline_grad(&pipe, &items[i]);
+                        *slots[i].lock().unwrap() = Some(r);
+                    });
+                    slots
+                        .into_iter()
+                        .map(|s| s.into_inner().unwrap().expect("every slot filled"))
+                        .collect()
                 }
                 Err(e) => items.iter().map(|_| Err(e.clone())).collect(),
             };
@@ -777,6 +791,72 @@ mod tests {
         assert!(exec.registry().close(id));
         let e = exec.execute(&op, &[&packed]).unwrap_err();
         assert_eq!(e, LeapError::UnknownSession(id));
+    }
+
+    #[test]
+    fn batched_pipeline_grads_are_ordered_and_bit_identical_to_per_item() {
+        // the batch path evaluates items concurrently; replies must
+        // land in item order with the exact per-item bytes
+        let exec = SessionExecutor::with_registry(Arc::new(SessionRegistry::new()));
+        let id = exec.registry().open(&config(6), Model::SF, Some(2)).unwrap();
+        let scan = ScanBuilder::from_config(&config(6))
+            .model(Model::SF)
+            .threads(2)
+            .build()
+            .unwrap();
+        let local: Arc<dyn LinearOp> = Arc::new(PlanOp::from_plan(scan.plan().clone()));
+        let pipe = tape::unrolled_gd(
+            local,
+            &tape::UnrollCfg { iterations: 1, step_init: 0.01, nonneg: true },
+        )
+        .unwrap();
+        let pid = exec
+            .registry()
+            .register_pipeline(id, &tape::pipeline_to_json(&pipe))
+            .unwrap();
+        let op = Op::SessionPipelineGrad { session: id, pipeline: pid };
+
+        let mut rng = crate::util::rng::Rng::new(77);
+        let mut packed_items = Vec::new();
+        for _ in 0..5 {
+            let params: Vec<Vec<f32>> = pipe
+                .params()
+                .iter()
+                .map(|p| {
+                    let mut v = vec![0.0f32; p.shape.numel()];
+                    rng.fill_uniform(&mut v, 0.005, 0.02);
+                    v
+                })
+                .collect();
+            let inputs: Vec<Vec<f32>> = pipe
+                .input_shapes()
+                .iter()
+                .map(|s| {
+                    let mut v = vec![0.0f32; s.numel()];
+                    rng.fill_uniform(&mut v, 0.0, 1.0);
+                    v
+                })
+                .collect();
+            let pr: Vec<&[f32]> = params.iter().map(|v| v.as_slice()).collect();
+            let ir: Vec<&[f32]> = inputs.iter().map(|v| v.as_slice()).collect();
+            packed_items.push(pipe.pack(&pr, &ir).unwrap());
+        }
+        let items: Vec<Vec<&[f32]>> =
+            packed_items.iter().map(|p| vec![p.as_slice()]).collect();
+        let batch = exec.execute_batch(&op, &items);
+        assert_eq!(batch.len(), items.len());
+        for (item, got) in items.iter().zip(batch) {
+            let want = exec.execute(&op, item).unwrap();
+            assert_eq!(got.unwrap(), want, "batch reply must match the per-item path");
+        }
+        // a mix of good and bad items fails only the bad slots
+        let mut mixed = items.clone();
+        let short = &packed_items[0][..3];
+        mixed[2] = vec![short];
+        let replies = exec.execute_batch(&op, &mixed);
+        assert!(replies[0].is_ok() && replies[1].is_ok() && replies[3].is_ok());
+        assert!(matches!(replies[2], Err(LeapError::ShapeMismatch { .. })));
+        exec.registry().close(id);
     }
 
     #[test]

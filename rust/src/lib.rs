@@ -53,11 +53,20 @@
 //! * [`tape`] — reverse-mode autodiff over operator pipelines:
 //!   compose projectors/filters/solver iterations into a
 //!   [`tape::Pipeline`] with trainable parameters (learnable step sizes,
-//!   filter spectra, per-sample weights), get exact loss gradients
-//!   through the matched adjoints, train with deterministic
-//!   [`tape::optim`] (SGD/Adam) — unrolled GD and learned FBP ship as
+//!   filter spectra, per-sample weights, convolution kernels), get exact
+//!   loss gradients through the matched adjoints, train with
+//!   deterministic [`tape::optim`] (SGD/Adam, mini-batch
+//!   [`tape::optim::Fitter`] with bit-exact checkpointing) — unrolled
+//!   GD, learned FBP and the unrolled-CNN (ItNet-style) solver ship as
 //!   [`tape::unroll`] builders, servable over protocol v2
 //!   ([`coordinator::Op::SessionPipelineGrad`]).
+//! * [`nn`] — the neural kernel layer beneath the tape's conv nodes:
+//!   direct (im2col-free) stride-1 same-padding Conv2d/Conv3d with
+//!   exact input/weight/bias VJPs, average pooling and
+//!   nearest-neighbour upsampling (exact adjoints of each other), and
+//!   deterministic He-uniform initialization. Image tensors reuse the
+//!   volume layout (`[w, h, c]`, channels on the slab axis), so a
+//!   single-slice volume is a 1-channel image with no reshape.
 //! * [`sysmatrix`] — the precomputed sparse system-matrix baseline the paper
 //!   argues against (Lahiri et al. 2023 style), used by the Table-1 bench.
 //! * [`recon`] — analytic (FBP/FDK) and iterative (SIRT, OS-SART, CGLS,
@@ -121,6 +130,7 @@ pub mod backend;
 pub mod projector;
 pub mod vol;
 pub mod ops;
+pub mod nn;
 pub mod tape;
 pub mod sysmatrix;
 pub mod recon;

@@ -6,6 +6,9 @@
 //! * [`luggage`] — randomized "bag" phantoms standing in for the ALERT
 //!   airport-luggage dataset used in the paper's Figure-3 experiment (see
 //!   DESIGN.md §6 for the substitution argument).
+//! * [`corpus`] — seeded, indexable phantom corpora (jittered Shepp-Logan
+//!   and luggage families) with deterministic train/held-out splits, the
+//!   data source for training learned-reconstruction pipelines.
 //! * Analytic projection of ellipsoid/box primitives: the exact X-ray
 //!   transform of the continuous phantom, used as ground truth in the
 //!   accuracy experiments (no inverse crime).
@@ -13,6 +16,7 @@
 pub mod shepp;
 pub mod luggage;
 pub mod noise;
+pub mod corpus;
 
 use crate::array::{Sino, Vol3};
 use crate::geometry::{Geometry, Ray, VolumeGeometry};

@@ -26,6 +26,25 @@ pub const MAX_NODE_ELEMENTS: usize = 1 << 28;
 /// enough that a hostile wire spec cannot DoS the registry.
 pub const MAX_NODES: usize = 4096;
 
+/// Derive an **odd** kernel size `k` from a weight node's tap count
+/// (`k²` for 2-D, `k³` for 3-D — `dim` is the exponent). Typed error if
+/// the count is not an exact odd power: the kernel size is structural
+/// (same-padding needs `k` odd) and is never carried separately, so the
+/// weight shape is the single source of truth.
+fn odd_kernel_root(taps: usize, dim: u32) -> Result<usize, LeapError> {
+    let k = (taps as f64).powf(1.0 / dim as f64).round() as usize;
+    // float roots can land one off for large counts; scan the neighbours
+    let k = [k.saturating_sub(1), k, k + 1]
+        .into_iter()
+        .find(|&c| c.checked_pow(dim).map(|p| p == taps).unwrap_or(false));
+    match k {
+        Some(k) if k % 2 == 1 => Ok(k),
+        _ => Err(LeapError::InvalidArgument(format!(
+            "conv weight dim 0 must be an odd kernel size to the power {dim} (got {taps} taps)"
+        ))),
+    }
+}
+
 /// Builder for a [`Pipeline`]; see the module docs.
 #[derive(Default)]
 pub struct PipelineBuilder {
@@ -265,6 +284,134 @@ impl PipelineBuilder {
         self.push(NodeKind::FilterRows { x, w, ncols, nfft }, xs)
     }
 
+    /// 2-D same-padding convolution (cross-correlation) of `x` with
+    /// learnable weights `w` and bias `b` (see [`NodeKind::Conv2d`]).
+    /// `x` is read as `[w, h, cin]` (channels on the slab axis); the
+    /// weight node's shape must be **structurally** `[k², cin, cout]`
+    /// with `k` odd (the kernel size is derived from it), and the bias
+    /// must have `cout` elements. Output: `[w, h, cout]`.
+    pub fn conv2d(&mut self, x: NodeId, w: NodeId, b: NodeId) -> Result<NodeId, LeapError> {
+        let xs = self.node(x)?.shape;
+        let (wd, ht, cin) = (xs.0[0], xs.0[1], xs.0[2]);
+        let ws = self.node(w)?.shape;
+        let k = odd_kernel_root(ws.0[0], 2)?;
+        if ws.0[1] != cin {
+            return Err(LeapError::ShapeMismatch {
+                what: "conv weight input channels",
+                expected: cin,
+                got: ws.0[1],
+            });
+        }
+        let cout = ws.0[2];
+        let bs = self.node(b)?.shape;
+        if bs.numel() != cout {
+            return Err(LeapError::ShapeMismatch {
+                what: "conv bias",
+                expected: cout,
+                got: bs.numel(),
+            });
+        }
+        self.push(NodeKind::Conv2d { x, w, b, k }, Shape([wd, ht, cout]))
+    }
+
+    /// 3-D same-padding convolution over the z-slabs of `x` (see
+    /// [`NodeKind::Conv3d`]). `x` is read as `[w, h, cin·nz]` — the
+    /// caller states `cin`, which must divide the slab count (a raw
+    /// volume is `cin = 1`). The weight node's shape must be
+    /// structurally `[k³, cin, cout]` with `k` odd; bias `cout`
+    /// elements. Output: `[w, h, cout·nz]`.
+    pub fn conv3d(
+        &mut self,
+        x: NodeId,
+        w: NodeId,
+        b: NodeId,
+        cin: usize,
+    ) -> Result<NodeId, LeapError> {
+        let xs = self.node(x)?.shape;
+        let (wd, ht, slabs) = (xs.0[0], xs.0[1], xs.0[2]);
+        if cin == 0 || slabs % cin != 0 {
+            return Err(LeapError::InvalidArgument(format!(
+                "conv3d input channels {cin} must divide the {slabs} z-slabs"
+            )));
+        }
+        let nz = slabs / cin;
+        let ws = self.node(w)?.shape;
+        let k = odd_kernel_root(ws.0[0], 3)?;
+        if ws.0[1] != cin {
+            return Err(LeapError::ShapeMismatch {
+                what: "conv weight input channels",
+                expected: cin,
+                got: ws.0[1],
+            });
+        }
+        let cout = ws.0[2];
+        let bs = self.node(b)?.shape;
+        if bs.numel() != cout {
+            return Err(LeapError::ShapeMismatch {
+                what: "conv bias",
+                expected: cout,
+                got: bs.numel(),
+            });
+        }
+        let oslabs = cout.checked_mul(nz).filter(|&n| n <= MAX_NODE_ELEMENTS).ok_or_else(
+            || {
+                LeapError::InvalidArgument(format!(
+                    "conv3d output slab count {cout}·{nz} overflows"
+                ))
+            },
+        )?;
+        self.push(NodeKind::Conv3d { x, w, b, k, cin }, Shape([wd, ht, oslabs]))
+    }
+
+    /// Factor-`f` average pooling per channel slab (`[w, h, c] →
+    /// [w/f, h/f, c]`); `f` must divide both spatial dimensions.
+    pub fn avg_pool(&mut self, x: NodeId, f: usize) -> Result<NodeId, LeapError> {
+        let xs = self.node(x)?.shape;
+        if f == 0 || xs.0[0] % f != 0 || xs.0[1] % f != 0 {
+            return Err(LeapError::InvalidArgument(format!(
+                "pool factor {f} must be ≥ 1 and divide the spatial dims {:?}",
+                [xs.0[0], xs.0[1]]
+            )));
+        }
+        self.push(NodeKind::AvgPool { x, f }, Shape([xs.0[0] / f, xs.0[1] / f, xs.0[2]]))
+    }
+
+    /// Factor-`f` nearest-neighbour upsampling per channel slab
+    /// (`[w, h, c] → [w·f, h·f, c]`).
+    pub fn upsample(&mut self, x: NodeId, f: usize) -> Result<NodeId, LeapError> {
+        let xs = self.node(x)?.shape;
+        if f == 0 {
+            return Err(LeapError::InvalidArgument("upsample factor must be ≥ 1".into()));
+        }
+        // guard the shape arithmetic itself before push() re-checks the
+        // element cap — a hostile spec's factor must not overflow usize
+        let (ow, oh) = (xs.0[0].checked_mul(f), xs.0[1].checked_mul(f));
+        let numel = ow
+            .zip(oh)
+            .and_then(|(ow, oh)| ow.checked_mul(oh))
+            .and_then(|p| p.checked_mul(xs.0[2]));
+        match numel {
+            Some(n) if n <= MAX_NODE_ELEMENTS => {}
+            _ => {
+                return Err(LeapError::InvalidArgument(format!(
+                    "upsample ×{f} of {:?} overflows or exceeds {MAX_NODE_ELEMENTS} elements",
+                    xs.0
+                )))
+            }
+        }
+        self.push(
+            NodeKind::Upsample { x, f },
+            Shape([xs.0[0] * f, xs.0[1] * f, xs.0[2]]),
+        )
+    }
+
+    /// `a + b` as a residual/skip connection (same math as [`Self::add`];
+    /// a distinct node kind — see [`NodeKind::Residual`]).
+    pub fn residual(&mut self, a: NodeId, b: NodeId) -> Result<NodeId, LeapError> {
+        let s = self.same_numel(a, b)?;
+        self.push(NodeKind::Residual { a, b }, s)
+    }
+
     /// Scalar node `½‖pred − target‖²`.
     pub fn l2_loss(&mut self, pred: NodeId, target: NodeId) -> Result<NodeId, LeapError> {
         self.same_numel(pred, target)?;
@@ -334,6 +481,11 @@ impl PipelineBuilder {
                 NodeKind::Scale { x, s } => needs[x.0] || needs[s.0],
                 NodeKind::Relu { x } | NodeKind::Clamp { x, .. } => needs[x.0],
                 NodeKind::FilterRows { x, w, .. } => needs[x.0] || needs[w.0],
+                NodeKind::Conv2d { x, w, b, .. } | NodeKind::Conv3d { x, w, b, .. } => {
+                    needs[x.0] || needs[w.0] || needs[b.0]
+                }
+                NodeKind::AvgPool { x, .. } | NodeKind::Upsample { x, .. } => needs[x.0],
+                NodeKind::Residual { a, b } => needs[a.0] || needs[b.0],
                 NodeKind::L2Loss { pred, target } | NodeKind::PoissonLoss { pred, target } => {
                     needs[pred.0] || needs[target.0]
                 }
@@ -426,6 +578,46 @@ mod tests {
         pb.set_loss(l).unwrap();
         let e = pb.build().unwrap_err();
         assert!(matches!(e, LeapError::InvalidArgument(_)), "{e:?}");
+    }
+
+    #[test]
+    fn conv_and_pool_shapes_are_validated_structurally() {
+        let mut pb = PipelineBuilder::new();
+        let x = pb.input(Shape([8, 6, 2])).unwrap(); // [w, h, cin=2]
+        // an even tap count (4² = 16) is not an odd kernel
+        let w_even = pb.fill(Shape([16, 2, 3]), 0.1).unwrap();
+        let b3 = pb.fill(Shape([3, 1, 1]), 0.0).unwrap();
+        assert!(matches!(pb.conv2d(x, w_even, b3), Err(LeapError::InvalidArgument(_))));
+        // channel mismatch: weight says cin = 4, x has 2
+        let w_badc = pb.fill(Shape([9, 4, 3]), 0.1).unwrap();
+        let e = pb.conv2d(x, w_badc, b3).unwrap_err();
+        assert!(
+            matches!(e, LeapError::ShapeMismatch { what: "conv weight input channels", .. }),
+            "{e:?}"
+        );
+        // bias count must equal cout
+        let w_ok = pb.fill(Shape([9, 2, 3]), 0.1).unwrap();
+        let b_bad = pb.fill(Shape([2, 1, 1]), 0.0).unwrap();
+        let e = pb.conv2d(x, w_ok, b_bad).unwrap_err();
+        assert!(matches!(e, LeapError::ShapeMismatch { what: "conv bias", .. }), "{e:?}");
+        // the good case produces [w, h, cout]
+        let y = pb.conv2d(x, w_ok, b3).unwrap();
+        assert_eq!(pb.node(y).unwrap().shape, Shape([8, 6, 3]));
+        // conv3d: cin must divide the slab count
+        let w3 = pb.fill(Shape([27, 2, 2]), 0.1).unwrap();
+        let b2 = pb.fill(Shape([2, 1, 1]), 0.0).unwrap();
+        assert!(matches!(pb.conv3d(x, w3, b2, 3), Err(LeapError::InvalidArgument(_))));
+        let y3 = pb.conv3d(x, w3, b2, 2).unwrap(); // nz = 1, cout = 2
+        assert_eq!(pb.node(y3).unwrap().shape, Shape([8, 6, 2]));
+        // pooling must divide the spatial dims; upsample scales them
+        assert!(matches!(pb.avg_pool(x, 3), Err(LeapError::InvalidArgument(_))));
+        let p = pb.avg_pool(x, 2).unwrap();
+        assert_eq!(pb.node(p).unwrap().shape, Shape([4, 3, 2]));
+        let u = pb.upsample(p, 2).unwrap();
+        assert_eq!(pb.node(u).unwrap().shape, Shape([8, 6, 2]));
+        // residual needs matching numel
+        assert!(pb.residual(x, p).is_err());
+        assert!(pb.residual(x, u).is_ok());
     }
 
     #[test]

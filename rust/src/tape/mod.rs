@@ -25,6 +25,12 @@
 //!   reconstruction pipelines: unrolled gradient descent with learnable
 //!   per-iteration steps, learned-FBP with a trainable ramp replacement
 //!   ([`unroll`]).
+//! * Neural node kinds (`conv2d`/`conv3d` with learnable kernels +
+//!   bias, `avg_pool`/`upsample`, `residual` skips — kernels in
+//!   [`crate::nn`]) make K-step unrolled solvers with small
+//!   per-iteration CNN regularizers (ItNet-style,
+//!   [`unroll::unrolled_cnn`]) expressible on the same tape, trained
+//!   through the exact projector.
 //! * [`Param`](NodeKind::Param) leaves accumulate gradients;
 //!   [`optim`] provides deterministic SGD and Adam, and
 //!   [`crate::api::Scan::fit`] runs the whole loop behind the typed
@@ -56,13 +62,14 @@ pub mod spec;
 pub mod unroll;
 
 pub use build::PipelineBuilder;
-pub use optim::{fit, FitCfg, FitReport, Optimizer};
+pub use optim::{fit, fit_batched, BatchFitCfg, FitCfg, FitReport, Fitter, Optimizer};
 pub use spec::{pipeline_from_json, pipeline_to_json};
-pub use unroll::{learned_fbp, unrolled_gd, UnrollCfg};
+pub use unroll::{learned_fbp, unrolled_cnn, unrolled_gd, UnrollCfg, UnrollCnnCfg};
 
 use std::sync::Arc;
 
 use crate::api::LeapError;
+use crate::nn;
 use crate::ops::grad::{l2_residual_in_place, poisson_residual_in_place, POISSON_EPS};
 use crate::ops::{LinearOp, Shape};
 use crate::recon::filters;
@@ -122,6 +129,35 @@ pub enum NodeKind {
     /// Re(X_k · conj(D_k))/nfft` with `X`/`D` the FFTs of the
     /// zero-padded row and its adjoint.
     FilterRows { x: NodeId, w: NodeId, ncols: usize, nfft: usize },
+    /// 2-D stride-1 **same-padding cross-correlation** of `x` (`[w, h,
+    /// cin]` — channels on the slab axis, so a single-slice volume is a
+    /// 1-channel image with no reshape) with learnable weights `w`
+    /// (`[k², cin, cout]`, tap-fastest) and bias `b` (`[cout, 1, 1]`);
+    /// output `[w, h, cout]`. Kernels live in [`crate::nn`]. VJPs are
+    /// exact: `dx` gathers the spatially-flipped-kernel correlation of
+    /// `dy` ([`crate::nn::conv2d_input_grad`]), `dw[co,ci,tap] =
+    /// Σ_image dy ⊙ shifted x` (f64-reduced per tap, cast once),
+    /// `db[co] = Σ_image dy[co]`.
+    Conv2d { x: NodeId, w: NodeId, b: NodeId, k: usize },
+    /// 3-D same-padding cross-correlation over the z-slabs of a volume:
+    /// `x` is `[w, h, cin·nz]` (channel axis outside z, so a raw volume
+    /// is the `cin = 1` case), weights `[k³, cin, cout]`, bias
+    /// `[cout, 1, 1]`, output `[w, h, cout·nz]`. Same exact VJP
+    /// structure as [`NodeKind::Conv2d`], one dimension up.
+    Conv3d { x: NodeId, w: NodeId, b: NodeId, k: usize, cin: usize },
+    /// Factor-`f` spatial average pooling per channel slab:
+    /// `[w, h, c] → [w/f, h/f, c]` (block mean). VJP spreads `dy/f²`
+    /// over each block — exactly `upsample(dy)/f²`.
+    AvgPool { x: NodeId, f: usize },
+    /// Factor-`f` nearest-neighbour spatial upsampling per channel slab:
+    /// `[w, h, c] → [w·f, h·f, c]`. VJP is the block **sum** — upsample
+    /// and avg-pool are adjoints up to the `1/f²` mean weight.
+    Upsample { x: NodeId, f: usize },
+    /// `y = a + b`, semantically a **residual/skip connection** (the
+    /// refinement branch `b` added onto the trunk `a`). Same math and
+    /// VJP as [`NodeKind::Add`]; a distinct kind so specs, docs and
+    /// shape validation can treat skip edges as what they are.
+    Residual { a: NodeId, b: NodeId },
     /// Scalar node `L = ½‖pred − target‖²` (same residual math as
     /// [`crate::ops::grad::ProjectionLoss`]). VJP: `dpred += a·(pred −
     /// target)`, `dtarget −= a·(pred − target)` for upstream scalar `a`.
@@ -355,6 +391,60 @@ impl Pipeline {
                     filters::filter_rows(&mut out, *ncols, &resp);
                     out
                 }
+                NodeKind::Conv2d { x, w, b, k } => {
+                    let xs = self.nodes[x.0].shape;
+                    let (wd, ht, cin) = (xs.0[0], xs.0[1], xs.0[2]);
+                    let cout = self.nodes[b.0].shape.numel();
+                    let mut out = vec![0.0f32; n];
+                    nn::conv2d_forward(
+                        &values[x.0],
+                        &values[w.0],
+                        &values[b.0],
+                        wd,
+                        ht,
+                        cin,
+                        cout,
+                        *k,
+                        &mut out,
+                    );
+                    out
+                }
+                NodeKind::Conv3d { x, w, b, k, cin } => {
+                    let xs = self.nodes[x.0].shape;
+                    let (wd, ht) = (xs.0[0], xs.0[1]);
+                    let nz = xs.0[2] / cin;
+                    let cout = self.nodes[b.0].shape.numel();
+                    let mut out = vec![0.0f32; n];
+                    nn::conv3d_forward(
+                        &values[x.0],
+                        &values[w.0],
+                        &values[b.0],
+                        wd,
+                        ht,
+                        nz,
+                        *cin,
+                        cout,
+                        *k,
+                        &mut out,
+                    );
+                    out
+                }
+                NodeKind::AvgPool { x, f } => {
+                    let xs = self.nodes[x.0].shape;
+                    let mut out = vec![0.0f32; n];
+                    nn::avg_pool_forward(&values[x.0], xs.0[0], xs.0[1], xs.0[2], *f, &mut out);
+                    out
+                }
+                NodeKind::Upsample { x, f } => {
+                    let xs = self.nodes[x.0].shape;
+                    let mut out = vec![0.0f32; n];
+                    nn::upsample_forward(&values[x.0], xs.0[0], xs.0[1], xs.0[2], *f, &mut out);
+                    out
+                }
+                NodeKind::Residual { a, b } => {
+                    let (a, b) = (&values[a.0], &values[b.0]);
+                    a.iter().zip(b.iter()).map(|(&x, &y)| x + y).collect()
+                }
                 NodeKind::L2Loss { pred, target } => {
                     let mut r = values[pred.0].clone();
                     let l = l2_residual_in_place(&mut r, &values[target.0]);
@@ -456,6 +546,54 @@ impl Pipeline {
             });
         }
         Ok((ev.losses[loss_id.0], grads))
+    }
+
+    /// Mean loss + mean parameter gradients over a **mini-batch** of
+    /// input items, evaluated data-parallel over the worker pool
+    /// (`threads` workers; 0 = [`crate::util::pool::default_threads`]).
+    ///
+    /// Bit-identical to sequential accumulation at *any* worker count:
+    /// each item's evaluation is thread-count-invariant on its own (the
+    /// projector guarantees that), results land in per-item slots, and
+    /// the reduction walks the slots **in item order** with the exact
+    /// float ops a sequential loop would use — f64 loss sum, f32 `axpy`
+    /// per gradient, one `1/n` f32 scaling at the end. Nested pool use
+    /// is safe: each item's projections claim their own region slots
+    /// (`util::pool` regions are caller-participating).
+    pub fn loss_and_grads_batch(
+        &self,
+        params: &[&[f32]],
+        items: &[Vec<&[f32]>],
+        threads: usize,
+    ) -> Result<(f64, Vec<Vec<f32>>), LeapError> {
+        if items.is_empty() {
+            return Err(LeapError::InvalidArgument(
+                "mini-batch evaluation needs at least one item".into(),
+            ));
+        }
+        let threads = if threads == 0 { crate::util::pool::default_threads() } else { threads };
+        let slots: Vec<std::sync::Mutex<Option<Result<(f64, Vec<Vec<f32>>), LeapError>>>> =
+            (0..items.len()).map(|_| std::sync::Mutex::new(None)).collect();
+        crate::util::pool::parallel_items(items.len(), threads, |i| {
+            *slots[i].lock().unwrap() = Some(self.loss_and_grads_with(params, &items[i]));
+        });
+        let mut loss_sum = 0.0f64;
+        let mut grads: Vec<Vec<f32>> =
+            self.params.iter().map(|p| vec![0.0f32; p.shape.numel()]).collect();
+        for slot in &slots {
+            let (l, g) = slot.lock().unwrap().take().expect("every item evaluated")?;
+            loss_sum += l;
+            for (acc, gi) in grads.iter_mut().zip(g.iter()) {
+                axpy(acc, gi);
+            }
+        }
+        let inv = 1.0f32 / items.len() as f32;
+        for g in &mut grads {
+            for v in g.iter_mut() {
+                *v *= inv;
+            }
+        }
+        Ok((loss_sum / items.len() as f64, grads))
     }
 
     /// Deposit `d` (the final adjoint of node `id`) into the adjoints of
@@ -567,6 +705,67 @@ impl Pipeline {
                     for (g, &a) in acc.iter_mut().zip(acc64.iter()) {
                         *g += a as f32;
                     }
+                }
+            }
+            NodeKind::Conv2d { x, w, b, k } => {
+                let xs = self.nodes[x.0].shape;
+                let (wd, ht, cin) = (xs.0[0], xs.0[1], xs.0[2]);
+                let cout = self.nodes[b.0].shape.numel();
+                if self.needs_grad[x.0] {
+                    let wv = &values[w.0];
+                    let acc = self.accum(adj, *x);
+                    nn::conv2d_input_grad(d, wv, wd, ht, cin, cout, *k, acc);
+                }
+                if self.needs_grad[w.0] {
+                    let xv = &values[x.0];
+                    let acc = self.accum(adj, *w);
+                    nn::conv2d_weight_grad(xv, d, wd, ht, cin, cout, *k, acc);
+                }
+                if self.needs_grad[b.0] {
+                    let acc = self.accum(adj, *b);
+                    nn::conv2d_bias_grad(d, wd, ht, cout, acc);
+                }
+            }
+            NodeKind::Conv3d { x, w, b, k, cin } => {
+                let xs = self.nodes[x.0].shape;
+                let (wd, ht) = (xs.0[0], xs.0[1]);
+                let nz = xs.0[2] / cin;
+                let cout = self.nodes[b.0].shape.numel();
+                if self.needs_grad[x.0] {
+                    let wv = &values[w.0];
+                    let acc = self.accum(adj, *x);
+                    nn::conv3d_input_grad(d, wv, wd, ht, nz, *cin, cout, *k, acc);
+                }
+                if self.needs_grad[w.0] {
+                    let xv = &values[x.0];
+                    let acc = self.accum(adj, *w);
+                    nn::conv3d_weight_grad(xv, d, wd, ht, nz, *cin, cout, *k, acc);
+                }
+                if self.needs_grad[b.0] {
+                    let acc = self.accum(adj, *b);
+                    nn::conv3d_bias_grad(d, wd, ht, nz, cout, acc);
+                }
+            }
+            NodeKind::AvgPool { x, f } => {
+                if self.needs_grad[x.0] {
+                    let xs = self.nodes[x.0].shape;
+                    let acc = self.accum(adj, *x);
+                    nn::avg_pool_input_grad(d, xs.0[0], xs.0[1], xs.0[2], *f, acc);
+                }
+            }
+            NodeKind::Upsample { x, f } => {
+                if self.needs_grad[x.0] {
+                    let xs = self.nodes[x.0].shape;
+                    let acc = self.accum(adj, *x);
+                    nn::upsample_input_grad(d, xs.0[0], xs.0[1], xs.0[2], *f, acc);
+                }
+            }
+            NodeKind::Residual { a, b } => {
+                if self.needs_grad[a.0] {
+                    axpy(self.accum(adj, *a), d);
+                }
+                if self.needs_grad[b.0] {
+                    axpy(self.accum(adj, *b), d);
                 }
             }
             NodeKind::L2Loss { pred, target } => {

@@ -7,6 +7,21 @@
 //! two identical [`fit`] runs produce **bit-identical** parameters,
 //! which the test suite asserts (and which makes server-side and
 //! client-side training trivially comparable).
+//!
+//! Three entry points, in increasing generality:
+//!
+//! * [`fit`] — full-batch: one fixed input set, N optimizer steps.
+//! * [`fit_batched`] — mini-batch over a corpus of items with
+//!   data-parallel gradient evaluation
+//!   ([`Pipeline::loss_and_grads_batch`]); the aggregation is
+//!   bit-identical to evaluating the items sequentially, so the
+//!   trained parameters do not depend on the thread count.
+//! * [`Fitter`] — the stateful core both are built on: the optimizer
+//!   plus its per-parameter state (Adam moments, step counter),
+//!   exposed so callers can drive custom loops and **checkpoint**:
+//!   [`Fitter::save`] serializes parameters + moments + step counter
+//!   to little-endian bytes, and [`Fitter::restore`] resumes training
+//!   bit-for-bit where it left off.
 
 use crate::api::LeapError;
 
@@ -144,6 +159,224 @@ pub fn fit(pipe: &mut Pipeline, inputs: &[&[f32]], cfg: &FitCfg) -> Result<FitRe
     })
 }
 
+/// Checkpoint framing: magic + format version + step counter +
+/// parameter count, then per parameter its element count followed by
+/// the value, first-moment and second-moment planes as little-endian
+/// `f32` bytes. `to_le_bytes`/`from_le_bytes` round-trip every bit
+/// pattern (including NaNs), so save→restore is exact by construction.
+const CKPT_MAGIC: &[u8; 8] = b"LEAPCKPT";
+const CKPT_VERSION: u32 = 1;
+
+fn ckpt_err(what: &str) -> LeapError {
+    LeapError::InvalidArgument(format!("checkpoint: {what}"))
+}
+
+fn ckpt_u32(bytes: &[u8], off: &mut usize) -> Result<u32, LeapError> {
+    let end = off.checked_add(4).filter(|&e| e <= bytes.len()).ok_or_else(|| ckpt_err("truncated"))?;
+    let v = u32::from_le_bytes(bytes[*off..end].try_into().expect("4 bytes"));
+    *off = end;
+    Ok(v)
+}
+
+fn ckpt_f32s(bytes: &[u8], off: &mut usize, out: &mut [f32]) -> Result<(), LeapError> {
+    let need = out.len().checked_mul(4).ok_or_else(|| ckpt_err("length overflow"))?;
+    let end = off.checked_add(need).filter(|&e| e <= bytes.len()).ok_or_else(|| ckpt_err("truncated"))?;
+    for (i, o) in out.iter_mut().enumerate() {
+        let a = *off + 4 * i;
+        *o = f32::from_le_bytes(bytes[a..a + 4].try_into().expect("4 bytes"));
+    }
+    *off = end;
+    Ok(())
+}
+
+/// A stateful trainer: one optimizer plus its per-parameter state.
+///
+/// [`fit`] and [`fit_batched`] drive one internally; construct your own
+/// when you need a custom loop (eval-gated early stopping, learning-
+/// rate schedules between calls) or checkpoint/resume. One update =
+/// compute gradients however you like, then [`Fitter::step`].
+pub struct Fitter {
+    opt: Optimizer,
+    state: OptState,
+}
+
+impl Fitter {
+    /// Fresh state (zero moments, step counter 0) for `pipe`'s current
+    /// parameter list. Fails on invalid optimizer hyper-parameters.
+    pub fn new(pipe: &Pipeline, optimizer: Optimizer) -> Result<Fitter, LeapError> {
+        optimizer.validate()?;
+        Ok(Fitter { opt: optimizer, state: OptState::new(pipe) })
+    }
+
+    /// Number of optimizer steps taken so far (restored by
+    /// [`Fitter::restore`], so Adam bias correction resumes exactly).
+    pub fn steps(&self) -> u32 {
+        self.state.t
+    }
+
+    /// Apply one optimizer update to `pipe`'s parameters from
+    /// already-computed gradients (one buffer per parameter, same
+    /// order as [`Pipeline::params`]).
+    pub fn step(&mut self, pipe: &mut Pipeline, grads: &[Vec<f32>]) -> Result<(), LeapError> {
+        if grads.len() != pipe.params().len() {
+            return Err(LeapError::InvalidArgument(format!(
+                "step got {} gradient buffers for {} parameters",
+                grads.len(),
+                pipe.params().len()
+            )));
+        }
+        for (p, g) in pipe.params().iter().zip(grads.iter()) {
+            if g.len() != p.shape.numel() {
+                return Err(LeapError::InvalidArgument(format!(
+                    "gradient for parameter '{}' has {} elements, expected {}",
+                    p.name,
+                    g.len(),
+                    p.shape.numel()
+                )));
+            }
+        }
+        self.state.step(&self.opt, pipe, grads);
+        Ok(())
+    }
+
+    /// Serialize training state — `pipe`'s parameter values plus this
+    /// fitter's moments and step counter — to bytes. Bit-exact: see
+    /// the framing comment on [`CKPT_MAGIC`].
+    pub fn save(&self, pipe: &Pipeline) -> Vec<u8> {
+        let params = pipe.params();
+        let mut out = Vec::new();
+        out.extend_from_slice(CKPT_MAGIC);
+        out.extend_from_slice(&CKPT_VERSION.to_le_bytes());
+        out.extend_from_slice(&self.state.t.to_le_bytes());
+        out.extend_from_slice(&(params.len() as u32).to_le_bytes());
+        for (i, p) in params.iter().enumerate() {
+            out.extend_from_slice(&(p.shape.numel() as u32).to_le_bytes());
+            for plane in [&p.value, &self.state.m[i], &self.state.v[i]] {
+                for v in plane.iter() {
+                    out.extend_from_slice(&v.to_le_bytes());
+                }
+            }
+        }
+        out
+    }
+
+    /// Restore training state saved by [`Fitter::save`] into `pipe`
+    /// (parameter values) and this fitter (moments, step counter).
+    /// The checkpoint must match `pipe`'s parameter list exactly;
+    /// mismatches and malformed bytes are typed errors and leave a
+    /// half-written state only in `self`/`pipe` values already
+    /// validated (all size checks happen before any write).
+    pub fn restore(&mut self, pipe: &mut Pipeline, bytes: &[u8]) -> Result<(), LeapError> {
+        let mut off = 0usize;
+        if bytes.len() < CKPT_MAGIC.len() || &bytes[..CKPT_MAGIC.len()] != CKPT_MAGIC {
+            return Err(ckpt_err("bad magic"));
+        }
+        off += CKPT_MAGIC.len();
+        let version = ckpt_u32(bytes, &mut off)?;
+        if version != CKPT_VERSION {
+            return Err(ckpt_err(&format!("unsupported version {version}")));
+        }
+        let t = ckpt_u32(bytes, &mut off)?;
+        let nparams = ckpt_u32(bytes, &mut off)? as usize;
+        if nparams != pipe.params().len() {
+            return Err(ckpt_err(&format!(
+                "holds {nparams} parameters, pipeline has {}",
+                pipe.params().len()
+            )));
+        }
+        // parse everything into scratch before touching live state, so
+        // a truncated tail can't leave a torn restore behind
+        let mut values = Vec::with_capacity(nparams);
+        let mut ms = Vec::with_capacity(nparams);
+        let mut vs = Vec::with_capacity(nparams);
+        for i in 0..nparams {
+            let numel = ckpt_u32(bytes, &mut off)? as usize;
+            let want = pipe.params()[i].shape.numel();
+            if numel != want {
+                return Err(ckpt_err(&format!(
+                    "parameter '{}' has {numel} elements, expected {want}",
+                    pipe.params()[i].name
+                )));
+            }
+            let mut value = vec![0.0f32; numel];
+            let mut m = vec![0.0f32; numel];
+            let mut v = vec![0.0f32; numel];
+            ckpt_f32s(bytes, &mut off, &mut value)?;
+            ckpt_f32s(bytes, &mut off, &mut m)?;
+            ckpt_f32s(bytes, &mut off, &mut v)?;
+            values.push(value);
+            ms.push(m);
+            vs.push(v);
+        }
+        if off != bytes.len() {
+            return Err(ckpt_err("trailing bytes"));
+        }
+        for (p, value) in pipe.params_mut().iter_mut().zip(values) {
+            p.value = value;
+        }
+        self.state.m = ms;
+        self.state.v = vs;
+        self.state.t = t;
+        Ok(())
+    }
+}
+
+/// Configuration for [`fit_batched`].
+#[derive(Clone, Copy, Debug)]
+pub struct BatchFitCfg {
+    pub optimizer: Optimizer,
+    /// Full passes over the item list.
+    pub epochs: usize,
+    /// Items per optimizer step; the last batch of an epoch may be
+    /// shorter. Gradients are averaged over the batch.
+    pub batch_size: usize,
+    /// Worker threads for per-item gradient evaluation
+    /// (0 = the default pool width). The result does not depend on
+    /// this — aggregation is bit-identical to a sequential pass.
+    pub threads: usize,
+}
+
+/// Mini-batch training over a corpus: each item is one input set for
+/// the pipeline (one buffer per input slot, in
+/// [`Pipeline::input_shapes`] order). Per step, the batch's items are
+/// evaluated in parallel and their mean loss/gradients drive one
+/// optimizer update. Deterministic for a fixed corpus order — items
+/// are visited in the given order every epoch (shuffle between calls
+/// for stochasticity).
+pub fn fit_batched(
+    pipe: &mut Pipeline,
+    items: &[Vec<Vec<f32>>],
+    cfg: &BatchFitCfg,
+) -> Result<FitReport, LeapError> {
+    if cfg.epochs == 0 {
+        return Err(LeapError::InvalidArgument("fit_batched needs at least one epoch".into()));
+    }
+    if cfg.batch_size == 0 {
+        return Err(LeapError::InvalidArgument("fit_batched batch_size must be ≥ 1".into()));
+    }
+    if items.is_empty() {
+        return Err(LeapError::InvalidArgument("fit_batched needs at least one item".into()));
+    }
+    let mut fitter = Fitter::new(pipe, cfg.optimizer)?;
+    let mut losses = Vec::with_capacity(cfg.epochs * items.len().div_ceil(cfg.batch_size));
+    for _ in 0..cfg.epochs {
+        for chunk in items.chunks(cfg.batch_size) {
+            let pr: Vec<&[f32]> = pipe.params().iter().map(|p| p.value.as_slice()).collect();
+            let ir: Vec<Vec<&[f32]>> =
+                chunk.iter().map(|it| it.iter().map(|b| b.as_slice()).collect()).collect();
+            let (loss, grads) = pipe.loss_and_grads_batch(&pr, &ir, cfg.threads)?;
+            drop(pr);
+            losses.push(loss);
+            fitter.step(pipe, &grads)?;
+        }
+    }
+    Ok(FitReport {
+        initial_loss: losses[0],
+        final_loss: *losses.last().expect("at least one batch"),
+        losses,
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -215,6 +448,100 @@ mod tests {
         assert_eq!(b1, b2, "two identical fits must produce bit-identical params");
         let lb1: Vec<u64> = l1.iter().map(|v| v.to_bits()).collect();
         let lb2: Vec<u64> = l2.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(lb1, lb2);
+    }
+
+    #[test]
+    fn checkpoint_save_restore_resumes_bit_identically() {
+        let target = [0.3f32, -0.7, 1.1];
+        let opt = Optimizer::adam(0.2);
+        // uninterrupted reference: 12 steps
+        let mut pipe_a = quadratic(&[2.0, -1.0, 0.5]);
+        let mut fit_a = Fitter::new(&pipe_a, opt).unwrap();
+        for _ in 0..12 {
+            let (_, g) = pipe_a.loss_and_grads(&[&target]).unwrap();
+            fit_a.step(&mut pipe_a, &g).unwrap();
+        }
+        // interrupted at 5: save, restore into a FRESH pipe+fitter
+        // with junk initialization (restore must overwrite), finish
+        let mut pipe_b = quadratic(&[2.0, -1.0, 0.5]);
+        let mut fit_b = Fitter::new(&pipe_b, opt).unwrap();
+        for _ in 0..5 {
+            let (_, g) = pipe_b.loss_and_grads(&[&target]).unwrap();
+            fit_b.step(&mut pipe_b, &g).unwrap();
+        }
+        let bytes = fit_b.save(&pipe_b);
+        let mut pipe_c = quadratic(&[9.0, 9.0, 9.0]);
+        let mut fit_c = Fitter::new(&pipe_c, opt).unwrap();
+        fit_c.restore(&mut pipe_c, &bytes).unwrap();
+        assert_eq!(fit_c.steps(), 5, "step counter must survive the checkpoint");
+        for _ in 0..7 {
+            let (_, g) = pipe_c.loss_and_grads(&[&target]).unwrap();
+            fit_c.step(&mut pipe_c, &g).unwrap();
+        }
+        let ba: Vec<u32> = pipe_a.params()[0].value.iter().map(|v| v.to_bits()).collect();
+        let bc: Vec<u32> = pipe_c.params()[0].value.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(ba, bc, "resumed run must be bit-identical to the uninterrupted run");
+    }
+
+    #[test]
+    fn corrupt_checkpoints_are_typed_errors() {
+        let pipe = quadratic(&[0.0, 0.0]);
+        let fitter = Fitter::new(&pipe, Optimizer::adam(0.1)).unwrap();
+        let good = fitter.save(&pipe);
+        // restoring the good bytes works
+        let mut pipe2 = quadratic(&[1.0, 1.0]);
+        let mut f2 = Fitter::new(&pipe2, Optimizer::adam(0.1)).unwrap();
+        f2.restore(&mut pipe2, &good).unwrap();
+        assert_eq!(pipe2.params()[0].value, vec![0.0, 0.0]);
+        // truncated / bad magic / short header are typed errors
+        for bad in [&good[..good.len() - 1], &b"NOTACKPT"[..], &good[..4]] {
+            let e = f2.restore(&mut pipe2, bad).unwrap_err();
+            assert!(matches!(e, LeapError::InvalidArgument(_)), "{e:?}");
+        }
+        // trailing garbage is rejected too
+        let mut long = good.clone();
+        long.push(0);
+        assert!(f2.restore(&mut pipe2, &long).is_err());
+        // parameter-shape mismatch: 2-element checkpoint into 3-element pipe
+        let mut pipe3 = quadratic(&[0.0, 0.0, 0.0]);
+        let mut f3 = Fitter::new(&pipe3, Optimizer::adam(0.1)).unwrap();
+        let e = f3.restore(&mut pipe3, &good).unwrap_err();
+        assert!(matches!(e, LeapError::InvalidArgument(_)), "{e:?}");
+    }
+
+    #[test]
+    fn fit_batched_descends_and_is_thread_invariant() {
+        // six items, mean ½‖p−bᵢ‖² — mini-batch training must descend
+        // and must not depend on the worker-thread count
+        let items: Vec<Vec<Vec<f32>>> = (0..6)
+            .map(|i| vec![vec![0.1 * i as f32, 1.0 - 0.1 * i as f32]])
+            .collect();
+        let run = |threads: usize| {
+            let mut pipe = quadratic(&[3.0, -3.0]);
+            let rep = fit_batched(
+                &mut pipe,
+                &items,
+                &BatchFitCfg {
+                    optimizer: Optimizer::adam(0.3),
+                    epochs: 30,
+                    batch_size: 4,
+                    threads,
+                },
+            )
+            .unwrap();
+            (pipe.params()[0].value.clone(), rep)
+        };
+        let (p1, r1) = run(1);
+        let (p2, r2) = run(3);
+        assert!(r1.final_loss < r1.initial_loss, "{} → {}", r1.initial_loss, r1.final_loss);
+        // 30 epochs × ⌈6/4⌉ batches
+        assert_eq!(r1.losses.len(), 60);
+        let b1: Vec<u32> = p1.iter().map(|v| v.to_bits()).collect();
+        let b2: Vec<u32> = p2.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(b1, b2, "batched training must not depend on thread count");
+        let lb1: Vec<u64> = r1.losses.iter().map(|v| v.to_bits()).collect();
+        let lb2: Vec<u64> = r2.losses.iter().map(|v| v.to_bits()).collect();
         assert_eq!(lb1, lb2);
     }
 

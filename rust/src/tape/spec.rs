@@ -30,7 +30,16 @@ use crate::util::json::Json;
 use super::{NodeKind, Pipeline, PipelineBuilder};
 
 /// Spec format version (append-only evolution, like the wire codes).
-pub const SPEC_VERSION: usize = 1;
+/// v1: the elementwise/filter/loss kinds. v2 appends the neural node
+/// kinds (`conv2d`, `conv3d`, `avg_pool`, `upsample`, `residual`).
+/// Emission always uses the current version; parsing accepts
+/// [`MIN_SPEC_VERSION`]`..=`[`SPEC_VERSION`] — a v1 spec is a valid v2
+/// spec that happens to use no neural nodes, so old clients keep
+/// working against new servers.
+pub const SPEC_VERSION: usize = 2;
+
+/// Oldest spec version this build still parses (see [`SPEC_VERSION`]).
+pub const MIN_SPEC_VERSION: usize = 1;
 
 /// Cap on the total element count of a spec's **leaves** (params +
 /// inputs), enforced while parsing — i.e. before any placeholder is
@@ -167,6 +176,36 @@ pub fn pipeline_to_json(p: &Pipeline) -> Json {
                         f.push(("x", Json::Num(x.0 as f64)));
                         f.push(("w", Json::Num(w.0 as f64)));
                     }
+                    NodeKind::Conv2d { x, w, b, .. } => {
+                        // k is structural (derived from the weight
+                        // node's shape on rebuild) — it never travels
+                        f.push(("k", Json::Str("conv2d".into())));
+                        f.push(("x", Json::Num(x.0 as f64)));
+                        f.push(("w", Json::Num(w.0 as f64)));
+                        f.push(("b", Json::Num(b.0 as f64)));
+                    }
+                    NodeKind::Conv3d { x, w, b, cin, .. } => {
+                        f.push(("k", Json::Str("conv3d".into())));
+                        f.push(("x", Json::Num(x.0 as f64)));
+                        f.push(("w", Json::Num(w.0 as f64)));
+                        f.push(("b", Json::Num(b.0 as f64)));
+                        f.push(("cin", Json::Num(*cin as f64)));
+                    }
+                    NodeKind::AvgPool { x, f: factor } => {
+                        f.push(("k", Json::Str("avg_pool".into())));
+                        f.push(("x", Json::Num(x.0 as f64)));
+                        f.push(("f", Json::Num(*factor as f64)));
+                    }
+                    NodeKind::Upsample { x, f: factor } => {
+                        f.push(("k", Json::Str("upsample".into())));
+                        f.push(("x", Json::Num(x.0 as f64)));
+                        f.push(("f", Json::Num(*factor as f64)));
+                    }
+                    NodeKind::Residual { a, b } => {
+                        f.push(("k", Json::Str("residual".into())));
+                        f.push(("a", Json::Num(a.0 as f64)));
+                        f.push(("b", Json::Num(b.0 as f64)));
+                    }
                     NodeKind::L2Loss { pred, target } => {
                         f.push(("k", Json::Str("l2".into())));
                         f.push(("pred", Json::Num(pred.0 as f64)));
@@ -208,9 +247,10 @@ pub fn pipeline_from_json(
     let version = spec
         .get_usize("tape_spec")
         .ok_or_else(|| LeapError::Protocol("pipeline spec missing tape_spec version".into()))?;
-    if version != SPEC_VERSION {
+    if !(MIN_SPEC_VERSION..=SPEC_VERSION).contains(&version) {
         return Err(LeapError::Unsupported(format!(
-            "pipeline spec version {version} (this build speaks {SPEC_VERSION})"
+            "pipeline spec version {version} (this build speaks \
+             {MIN_SPEC_VERSION}..={SPEC_VERSION})"
         )));
     }
     let input_shapes: Vec<Shape> = spec
@@ -365,6 +405,27 @@ pub fn pipeline_from_json(
                 child(&ids, get_node_id(n, "x")?)?,
                 child(&ids, get_node_id(n, "w")?)?,
             )?,
+            "conv2d" => pb.conv2d(
+                child(&ids, get_node_id(n, "x")?)?,
+                child(&ids, get_node_id(n, "w")?)?,
+                child(&ids, get_node_id(n, "b")?)?,
+            )?,
+            "conv3d" => pb.conv3d(
+                child(&ids, get_node_id(n, "x")?)?,
+                child(&ids, get_node_id(n, "w")?)?,
+                child(&ids, get_node_id(n, "b")?)?,
+                get_node_id(n, "cin")?,
+            )?,
+            "avg_pool" => {
+                pb.avg_pool(child(&ids, get_node_id(n, "x")?)?, get_node_id(n, "f")?)?
+            }
+            "upsample" => {
+                pb.upsample(child(&ids, get_node_id(n, "x")?)?, get_node_id(n, "f")?)?
+            }
+            "residual" => pb.residual(
+                child(&ids, get_node_id(n, "a")?)?,
+                child(&ids, get_node_id(n, "b")?)?,
+            )?,
             "l2" => pb.l2_loss(
                 child(&ids, get_node_id(n, "pred")?)?,
                 child(&ids, get_node_id(n, "target")?)?,
@@ -484,6 +545,50 @@ mod tests {
         let back = pipeline_from_json(&parsed, &[("scan", a)]).unwrap();
         assert_eq!(back.params().len(), 1);
         assert_eq!(back.input_shapes().len(), 2);
+    }
+
+    #[test]
+    fn v2_neural_nodes_roundtrip_bit_for_bit() {
+        use crate::tape::{unrolled_cnn, UnrollCnnCfg};
+        let a = fan_op();
+        let pipe = unrolled_cnn(
+            a.clone(),
+            &UnrollCnnCfg { iterations: 2, step_init: 0.02, channels: 3, ksize: 3, seed: 7 },
+        )
+        .unwrap();
+        let spec = pipeline_to_json(&pipe);
+        assert_eq!(spec.get_usize("tape_spec"), Some(SPEC_VERSION));
+        let text = spec.to_string();
+        let back =
+            pipeline_from_json(&crate::util::json::parse(&text).unwrap(), &[("scan", a.clone())])
+                .unwrap();
+        assert_eq!(back.packed_len(), pipe.packed_len());
+        assert_eq!(back.grad_reply_len(), pipe.grad_reply_len());
+        let mut rng = Rng::new(57);
+        let params: Vec<Vec<f32>> = pipe
+            .params()
+            .iter()
+            .map(|p| {
+                let mut v = vec![0.0f32; p.shape.numel()];
+                rng.fill_uniform(&mut v, -0.05, 0.05);
+                v
+            })
+            .collect();
+        let inputs: Vec<Vec<f32>> = pipe
+            .input_shapes()
+            .iter()
+            .map(|s| {
+                let mut v = vec![0.0f32; s.numel()];
+                rng.fill_uniform(&mut v, 0.0, 1.0);
+                v
+            })
+            .collect();
+        let pr: Vec<&[f32]> = params.iter().map(|v| v.as_slice()).collect();
+        let ir: Vec<&[f32]> = inputs.iter().map(|v| v.as_slice()).collect();
+        let (l1, g1) = pipe.loss_and_grads_with(&pr, &ir).unwrap();
+        let (l2, g2) = back.loss_and_grads_with(&pr, &ir).unwrap();
+        assert_eq!(l1.to_bits(), l2.to_bits(), "conv pipeline loss must survive the spec");
+        assert_eq!(g1, g2, "conv pipeline gradients must survive the spec");
     }
 
     #[test]

@@ -1,6 +1,6 @@
 //! Unrolled-solver and learned-FBP pipeline builders.
 //!
-//! These are the two canonical trainable-reconstruction shapes the tape
+//! These are the canonical trainable-reconstruction shapes the tape
 //! exists for (cf. learned primal-dual / LEARN-style unrolling and
 //! learned-filter FBP in the TorchRadon/PYRO-NN ecosystems):
 //!
@@ -9,6 +9,14 @@
 //!   **learnable step size** `s_k` per iteration (this is SIRT-shaped:
 //!   SIRT is exactly this update with fixed preconditioned steps).
 //!   Supervised training loss `½‖x_K − truth‖²`.
+//! * [`unrolled_cnn`] — the ItNet/learned-proximal shape: the same
+//!   data-fit step, then a small per-iteration CNN correction,
+//!   `x_{k+1} = [x̃_k + CNN_k(x̃_k)]₊` with
+//!   `x̃_k = x_k − s_k·Aᵀ(A·x_k − b)` and `CNN_k` a two-layer
+//!   conv→relu→conv residual block (Conv2d on single-slice domains,
+//!   Conv3d otherwise). The second conv is **zero-initialized**, so an
+//!   untrained pipeline is *exactly* projected gradient descent —
+//!   training can only move away from a known-good solver.
 //! * [`learned_fbp`] — FBP with every hand-designed ingredient made
 //!   trainable: `x̂ = g · Aᵀ( m ⊙ filter_w(b) )` with a learnable
 //!   half-spectrum filter `w` (initialized to the analytic apodized
@@ -17,7 +25,7 @@
 //!   fan-beam cosine weighting FBP hard-codes), and a learnable scalar
 //!   gain `g`. Supervised L2 loss against the truth volume.
 //!
-//! Both declare inputs `[measurements, truth]` in that order and mark
+//! All declare inputs `[measurements, truth]` in that order and mark
 //! the reconstruction as the pipeline output, so after training
 //! [`super::Pipeline::eval`] reconstructs new data with the learned
 //! parameters (the truth slot is only read by the loss — feed zeros at
@@ -26,7 +34,8 @@
 use std::sync::Arc;
 
 use crate::api::LeapError;
-use crate::ops::LinearOp;
+use crate::nn;
+use crate::ops::{LinearOp, Shape};
 use crate::recon::filters::ramp_half_spectrum;
 use crate::recon::Window;
 use crate::util::fft::next_pow2;
@@ -75,6 +84,97 @@ pub fn unrolled_gd(a: Arc<dyn LinearOp>, cfg: &UnrollCfg) -> Result<Pipeline, Le
         if cfg.nonneg {
             x = pb.relu(x)?;
         }
+    }
+    pb.set_output(x)?;
+    let l = pb.l2_loss(x, truth)?;
+    pb.set_loss(l)?;
+    pb.build()
+}
+
+/// Configuration for [`unrolled_cnn`].
+#[derive(Clone, Copy, Debug)]
+pub struct UnrollCnnCfg {
+    /// K, the number of unrolled iterations (≥ 1).
+    pub iterations: usize,
+    /// Initial value of every learnable step size (see
+    /// [`UnrollCfg::step_init`]).
+    pub step_init: f32,
+    /// Hidden channels of each per-iteration CNN block (≥ 1).
+    pub channels: usize,
+    /// Convolution kernel size — odd, ≥ 1 (same padding).
+    pub ksize: usize,
+    /// Seed for the deterministic He-uniform initialization of the
+    /// first conv's weights (the second conv starts at zero).
+    pub seed: u64,
+}
+
+/// Build a K-step unrolled CNN-regularized solver over `a` (see the
+/// module docs). Inputs: `[measurements (range), truth (domain)]`;
+/// params per iteration `k`: `step{k}`, `conv{k}a_w`/`conv{k}a_b`
+/// (lift to `channels`), `conv{k}b_w`/`conv{k}b_b` (project back,
+/// zero-initialized); output `x_K`; loss `½‖x_K − truth‖²`.
+pub fn unrolled_cnn(a: Arc<dyn LinearOp>, cfg: &UnrollCnnCfg) -> Result<Pipeline, LeapError> {
+    if cfg.iterations == 0 {
+        return Err(LeapError::InvalidArgument("unroll needs at least one iteration".into()));
+    }
+    if !(cfg.step_init.is_finite() && cfg.step_init > 0.0) {
+        return Err(LeapError::InvalidArgument(format!(
+            "step init must be positive and finite (got {})",
+            cfg.step_init
+        )));
+    }
+    if cfg.channels == 0 {
+        return Err(LeapError::InvalidArgument("cnn needs ≥ 1 hidden channel".into()));
+    }
+    if cfg.ksize == 0 || cfg.ksize % 2 == 0 {
+        return Err(LeapError::InvalidArgument(format!(
+            "kernel size must be odd and ≥ 1 (got {})",
+            cfg.ksize
+        )));
+    }
+    let (dom, rng) = (a.domain_shape(), a.range_shape());
+    let nz = dom.0[2];
+    let (k, c) = (cfg.ksize, cfg.channels);
+    let taps = if nz == 1 { k.checked_mul(k) } else { k.checked_mul(k).and_then(|t| t.checked_mul(k)) }
+        .ok_or_else(|| LeapError::InvalidArgument(format!("kernel size {k} overflows")))?;
+    let wlen = taps.checked_mul(c).ok_or_else(|| {
+        LeapError::InvalidArgument(format!("conv weight count {taps}·{c} overflows"))
+    })?;
+    let mut pb = PipelineBuilder::new();
+    let op = pb.op("scan", a)?;
+    let meas = pb.input(rng)?;
+    let truth = pb.input(dom)?;
+    let mut x = pb.fill(dom, 0.0)?;
+    for it in 0..cfg.iterations {
+        // data-fit gradient step (identical to unrolled_gd)
+        let ax = pb.apply(op, x)?;
+        let r = pb.sub(ax, meas)?;
+        let g = pb.adjoint(op, r)?;
+        let s = pb.scalar_param(&format!("step{it}"), cfg.step_init)?;
+        let sg = pb.scale(g, s)?;
+        let xg = pb.sub(x, sg)?;
+        // CNN correction: lift to c channels → relu → project back.
+        // The projection starts at zero, so before training the block
+        // is the identity residual and x_{k+1} = relu(x̃_k).
+        let w1 = pb.param(
+            &format!("conv{it}a_w"),
+            Shape([taps, 1, c]),
+            nn::conv_init(cfg.seed.wrapping_add(it as u64), taps, 1, c),
+        )?;
+        let b1 = pb.param(&format!("conv{it}a_b"), Shape([c, 1, 1]), vec![0.0f32; c])?;
+        let w2 = pb.param(&format!("conv{it}b_w"), Shape([taps, c, 1]), vec![0.0f32; wlen])?;
+        let b2 = pb.param(&format!("conv{it}b_b"), Shape([1, 1, 1]), vec![0.0f32; 1])?;
+        let corr = if nz == 1 {
+            let h = pb.conv2d(xg, w1, b1)?;
+            let h = pb.relu(h)?;
+            pb.conv2d(h, w2, b2)?
+        } else {
+            let h = pb.conv3d(xg, w1, b1, 1)?;
+            let h = pb.relu(h)?;
+            pb.conv3d(h, w2, b2, c)?
+        };
+        let xr = pb.residual(xg, corr)?;
+        x = pb.relu(xr)?;
     }
     pb.set_output(x)?;
     let l = pb.l2_loss(x, truth)?;
@@ -198,6 +298,63 @@ mod tests {
     }
 
     #[test]
+    fn untrained_unrolled_cnn_is_exactly_projected_gd() {
+        // the second conv of every block is zero-initialized, so an
+        // untrained unrolled_cnn must reproduce unrolled_gd (nonneg)
+        // bit for bit — training starts from a known-good solver
+        let a = fan_op();
+        let cnn = unrolled_cnn(
+            a.clone(),
+            &UnrollCnnCfg { iterations: 2, step_init: 0.01, channels: 4, ksize: 3, seed: 3 },
+        )
+        .unwrap();
+        let gd = unrolled_gd(
+            a.clone(),
+            &UnrollCfg { iterations: 2, step_init: 0.01, nonneg: true },
+        )
+        .unwrap();
+        let mut rng = Rng::new(91);
+        let mut b = vec![0.0f32; a.range_shape().numel()];
+        rng.fill_uniform(&mut b, 0.0, 1.0);
+        let truth = vec![0.0f32; a.domain_shape().numel()];
+        let xc = cnn.eval(&[&b, &truth]).unwrap();
+        let xg = gd.eval(&[&b, &truth]).unwrap();
+        assert_eq!(xc, xg);
+    }
+
+    #[test]
+    fn unrolled_cnn_declares_params_and_handles_3d_domains() {
+        let a = fan_op();
+        let pipe = unrolled_cnn(
+            a,
+            &UnrollCnnCfg { iterations: 1, step_init: 0.01, channels: 2, ksize: 3, seed: 1 },
+        )
+        .unwrap();
+        let names: Vec<&str> = pipe.params().iter().map(|p| p.name.as_str()).collect();
+        assert_eq!(names, ["step0", "conv0a_w", "conv0a_b", "conv0b_w", "conv0b_b"]);
+        // conv2d path: k²·1·2 weights for the lift
+        assert_eq!(pipe.params()[1].shape.numel(), 9 * 2);
+        // a 3-D domain takes the conv3d path (k³ taps) and still builds
+        // and evaluates
+        let vg = crate::geometry::VolumeGeometry::cube(6, 1.0);
+        let cone = crate::geometry::ConeBeam::standard(4, 6, 8, 1.5, 1.5, 50.0, 100.0);
+        let a3: Arc<dyn LinearOp> = Arc::new(PlanOp::new(
+            &Projector::new(crate::geometry::Geometry::Cone(cone), vg, Model::SF).with_threads(2),
+        ));
+        let pipe3 = unrolled_cnn(
+            a3.clone(),
+            &UnrollCnnCfg { iterations: 1, step_init: 0.01, channels: 2, ksize: 3, seed: 1 },
+        )
+        .unwrap();
+        assert_eq!(pipe3.params()[1].shape.numel(), 27 * 2);
+        let b = vec![0.5f32; a3.range_shape().numel()];
+        let t = vec![0.0f32; a3.domain_shape().numel()];
+        let x = pipe3.eval(&[&b, &t]).unwrap();
+        assert_eq!(x.len(), a3.domain_shape().numel());
+        assert!(x.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
     fn degenerate_configs_are_typed() {
         let a = fan_op();
         assert!(matches!(
@@ -209,8 +366,21 @@ mod tests {
             Err(LeapError::InvalidArgument(_))
         ));
         assert!(matches!(
-            learned_fbp(a, -1.0, Window::Hann),
+            learned_fbp(a.clone(), -1.0, Window::Hann),
             Err(LeapError::InvalidArgument(_))
         ));
+        let good = UnrollCnnCfg { iterations: 1, step_init: 0.01, channels: 2, ksize: 3, seed: 0 };
+        for bad in [
+            UnrollCnnCfg { iterations: 0, ..good },
+            UnrollCnnCfg { step_init: -1.0, ..good },
+            UnrollCnnCfg { channels: 0, ..good },
+            UnrollCnnCfg { ksize: 2, ..good }, // even kernels have no center
+            UnrollCnnCfg { ksize: 0, ..good },
+        ] {
+            assert!(
+                matches!(unrolled_cnn(a.clone(), &bad), Err(LeapError::InvalidArgument(_))),
+                "{bad:?}"
+            );
+        }
     }
 }

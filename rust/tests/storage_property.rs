@@ -61,12 +61,16 @@ fn rel_l2(a: &[f32], b: &[f32]) -> f64 {
 
 const REDUCED: [StorageTier; 2] = [StorageTier::F16, StorageTier::Bf16];
 
-/// The acceptance bound: reduced-tier projections track f32 to 1e-3
-/// relative l2. bf16's unit roundoff is ~3.9e-3 per stored element, but
-/// every projection output sums many independently-rounded terms, so
-/// the output-level error averages well under the per-element bound
-/// (f16, with 3 more mantissa bits, sits ~8× lower still).
-const TIER_TOL: f64 = 1e-3;
+/// The acceptance bound: reduced-tier projections track f32 to 2e-3
+/// relative l2. bf16 keeps 8 mantissa bits, so round-to-nearest
+/// quantization of a stored element is bounded by ~2⁻⁹ ≈ 1.95e-3 of
+/// its magnitude (mean ~1.5e-3 over a uniform mantissa). Projection
+/// outputs sum many independently-rounded terms and usually average
+/// well below that, but small projections (few coefficients per ray)
+/// can sit near the per-element bound — so the gate is the bound
+/// itself, not the averaged behaviour (f16, with 3 more mantissa
+/// bits, sits ~8× lower still).
+const TIER_TOL: f64 = 2e-3;
 
 #[test]
 fn reduced_tiers_track_f32_within_tolerance_all_models_all_geometries() {

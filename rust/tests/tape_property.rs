@@ -19,7 +19,8 @@ use leap::projector::{Model, Projector};
 use leap::recon::filters::ramp_half_spectrum;
 use leap::recon::Window;
 use leap::tape::{
-    fit, learned_fbp, unrolled_gd, FitCfg, Optimizer, Pipeline, PipelineBuilder, UnrollCfg,
+    fit, fit_batched, learned_fbp, unrolled_cnn, unrolled_gd, BatchFitCfg, FitCfg, Fitter,
+    Optimizer, Pipeline, PipelineBuilder, UnrollCfg, UnrollCnnCfg,
 };
 use leap::util::rng::Rng;
 use leap::StorageTier;
@@ -271,6 +272,235 @@ fn fd_poisson_loss_both_paths() {
     let pipe = pb.build().unwrap();
     let preds = rand_vec(n, 0.2, 1.0, &mut rng);
     assert_fd(&pipe, &[&preds], 108, "poisson target");
+}
+
+// ── neural nodes ─────────────────────────────────────────────────────────
+
+#[test]
+fn fd_conv2d_node_all_three_paths() {
+    // L = ½‖conv2d(x, w, b) − t‖² with x, w AND b trainable: one FD
+    // check covers the input, weight and bias VJPs of a multi-channel
+    // (cin=2 → cout=3) kernel
+    let (wd, ht, cin, cout, k) = (6, 5, 2, 3, 3);
+    let mut rng = Rng::new(20);
+    let mut pb = PipelineBuilder::new();
+    let x = pb
+        .param("x", Shape([wd, ht, cin]), rand_vec(wd * ht * cin, -1.0, 1.0, &mut rng))
+        .unwrap();
+    let w = pb
+        .param("w", Shape([k * k, cin, cout]), rand_vec(k * k * cin * cout, -0.5, 0.5, &mut rng))
+        .unwrap();
+    let b = pb.param("b", Shape([cout, 1, 1]), rand_vec(cout, -0.5, 0.5, &mut rng)).unwrap();
+    let t = pb.input(Shape([wd, ht, cout])).unwrap();
+    let c = pb.conv2d(x, w, b).unwrap();
+    let l = pb.l2_loss(c, t).unwrap();
+    pb.set_loss(l).unwrap();
+    let pipe = pb.build().unwrap();
+    let target = rand_vec(wd * ht * cout, -1.0, 1.0, &mut rng);
+    assert_fd(&pipe, &[&target], 120, "conv2d x/w/b");
+}
+
+#[test]
+fn fd_conv3d_node_all_three_paths() {
+    // volume [5, 4, cin·nz] with cin=2, nz=3: the z-extent of the
+    // kernel and the channel blocking both exercised
+    let (wd, ht, nz, cin, cout, k) = (5, 4, 3, 2, 2, 3);
+    let slabs = cin * nz;
+    let mut rng = Rng::new(21);
+    let mut pb = PipelineBuilder::new();
+    let x = pb
+        .param("x", Shape([wd, ht, slabs]), rand_vec(wd * ht * slabs, -1.0, 1.0, &mut rng))
+        .unwrap();
+    let w = pb
+        .param(
+            "w",
+            Shape([k * k * k, cin, cout]),
+            rand_vec(k * k * k * cin * cout, -0.3, 0.3, &mut rng),
+        )
+        .unwrap();
+    let b = pb.param("b", Shape([cout, 1, 1]), rand_vec(cout, -0.5, 0.5, &mut rng)).unwrap();
+    let t = pb.input(Shape([wd, ht, cout * nz])).unwrap();
+    let c = pb.conv3d(x, w, b, cin).unwrap();
+    let l = pb.l2_loss(c, t).unwrap();
+    pb.set_loss(l).unwrap();
+    let pipe = pb.build().unwrap();
+    let target = rand_vec(wd * ht * cout * nz, -1.0, 1.0, &mut rng);
+    assert_fd(&pipe, &[&target], 121, "conv3d x/w/b");
+}
+
+#[test]
+fn fd_avg_pool_upsample_and_residual_nodes() {
+    // L = ½‖x + upsample(avg_pool(x)) − t‖²: pool and upsample VJPs
+    // (exact adjoints of each other) plus the Residual add, in one pass
+    let (wd, ht, c, f) = (8, 6, 2, 2);
+    let mut rng = Rng::new(22);
+    let mut pb = PipelineBuilder::new();
+    let x = pb
+        .param("x", Shape([wd, ht, c]), rand_vec(wd * ht * c, -1.0, 1.0, &mut rng))
+        .unwrap();
+    let t = pb.input(Shape([wd, ht, c])).unwrap();
+    let pooled = pb.avg_pool(x, f).unwrap();
+    let up = pb.upsample(pooled, f).unwrap();
+    let r = pb.residual(x, up).unwrap();
+    let l = pb.l2_loss(r, t).unwrap();
+    pb.set_loss(l).unwrap();
+    let pipe = pb.build().unwrap();
+    let target = rand_vec(wd * ht * c, -1.0, 1.0, &mut rng);
+    assert_fd(&pipe, &[&target], 122, "avg_pool/upsample/residual");
+}
+
+#[test]
+fn fd_cnn_block_matches_the_unrolled_cnn_shape() {
+    // the exact conv→relu→conv residual chain unrolled_cnn builds,
+    // placed FD-safely: x ∈ [0.4, 0.6], small weights, bias 0.5 pushes
+    // every hidden activation ≥ ~0.2 from the relu kink (FD moves
+    // activations by ≤ ~0.07)
+    let (wd, ht, c, k) = (8, 6, 3, 3);
+    let mut rng = Rng::new(23);
+    let mut pb = PipelineBuilder::new();
+    let x = pb.param("x", Shape([wd, ht, 1]), rand_vec(wd * ht, 0.4, 0.6, &mut rng)).unwrap();
+    let w1 = pb
+        .param("w1", Shape([k * k, 1, c]), rand_vec(k * k * c, -0.05, 0.05, &mut rng))
+        .unwrap();
+    let b1 = pb.param("b1", Shape([c, 1, 1]), vec![0.5f32; c]).unwrap();
+    let w2 = pb
+        .param("w2", Shape([k * k, c, 1]), rand_vec(k * k * c, -0.05, 0.05, &mut rng))
+        .unwrap();
+    let b2 = pb.param("b2", Shape([1, 1, 1]), vec![0.1f32]).unwrap();
+    let t = pb.input(Shape([wd, ht, 1])).unwrap();
+    let h = pb.conv2d(x, w1, b1).unwrap();
+    let h = pb.relu(h).unwrap();
+    let corr = pb.conv2d(h, w2, b2).unwrap();
+    let r = pb.residual(x, corr).unwrap();
+    let l = pb.l2_loss(r, t).unwrap();
+    pb.set_loss(l).unwrap();
+    let pipe = pb.build().unwrap();
+    let target = rand_vec(wd * ht, 0.0, 1.0, &mut rng);
+    assert_fd(&pipe, &[&target], 123, "cnn block");
+}
+
+// ── mini-batch aggregation and checkpointing ─────────────────────────────
+
+#[test]
+fn batched_grads_are_bit_identical_to_sequential_accumulation() {
+    // loss_and_grads_batch must equal the sequential in-order
+    // reduction (f64 loss sum, f32 axpy, one 1/n scale) bit for bit,
+    // at every thread count
+    let a = fan_op();
+    let pipe =
+        unrolled_gd(a.clone(), &UnrollCfg { iterations: 2, step_init: 0.01, nonneg: true })
+            .unwrap();
+    let mut rng = Rng::new(24);
+    let params: Vec<Vec<f32>> =
+        pipe.params().iter().map(|p| rand_vec(p.shape.numel(), 0.005, 0.02, &mut rng)).collect();
+    let pr: Vec<&[f32]> = params.iter().map(|v| v.as_slice()).collect();
+    let items: Vec<Vec<Vec<f32>>> = (0..5)
+        .map(|_| {
+            pipe.input_shapes()
+                .iter()
+                .map(|s| rand_vec(s.numel(), 0.0, 1.0, &mut rng))
+                .collect()
+        })
+        .collect();
+    let ir: Vec<Vec<&[f32]>> =
+        items.iter().map(|it| it.iter().map(|b| b.as_slice()).collect()).collect();
+
+    // sequential reference: the exact reduction the batch path promises
+    let mut loss_sum = 0.0f64;
+    let mut want: Vec<Vec<f32>> =
+        pipe.params().iter().map(|p| vec![0.0f32; p.shape.numel()]).collect();
+    for it in &ir {
+        let (l, gs) = pipe.loss_and_grads_with(&pr, it).unwrap();
+        loss_sum += l;
+        for (acc, g) in want.iter_mut().zip(gs.iter()) {
+            for (av, &gv) in acc.iter_mut().zip(g.iter()) {
+                *av += gv;
+            }
+        }
+    }
+    let inv = 1.0f32 / ir.len() as f32;
+    for g in &mut want {
+        for v in g.iter_mut() {
+            *v *= inv;
+        }
+    }
+    let want_loss = loss_sum / ir.len() as f64;
+
+    for threads in [1, 2, 3, 8] {
+        let (loss, grads) = pipe.loss_and_grads_batch(&pr, &ir, threads).unwrap();
+        assert_eq!(loss.to_bits(), want_loss.to_bits(), "threads {threads}: loss");
+        for (pi, (g, w)) in grads.iter().zip(want.iter()).enumerate() {
+            let gb: Vec<u32> = g.iter().map(|v| v.to_bits()).collect();
+            let wb: Vec<u32> = w.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(gb, wb, "threads {threads}: param {pi} grads");
+        }
+    }
+}
+
+#[test]
+fn checkpointed_cnn_training_resumes_bit_identically() {
+    // the end-to-end resume property on the REAL pipeline shape: train
+    // the unrolled CNN solver, checkpoint at the midpoint, restore into
+    // a freshly built pipeline, finish — bit-identical to uninterrupted
+    let a = fan_op();
+    let cfg = UnrollCnnCfg { iterations: 1, step_init: 0.01, channels: 2, ksize: 3, seed: 5 };
+    let opt = Optimizer::adam(0.002);
+    let mut rng = Rng::new(25);
+    let mut truth = vec![0.0f32; a.domain_shape().numel()];
+    rng.fill_uniform(&mut truth, 0.1, 1.0);
+    let sino = a.apply(&truth);
+    let items = vec![vec![sino.clone(), truth.clone()]];
+    let bcfg = |epochs: usize| BatchFitCfg { optimizer: opt, epochs, batch_size: 1, threads: 2 };
+
+    // uninterrupted: one fitter, 8 steps
+    let mut pipe_a = unrolled_cnn(a.clone(), &cfg).unwrap();
+    let mut fit_a = Fitter::new(&pipe_a, opt).unwrap();
+    for _ in 0..8 {
+        let pr: Vec<&[f32]> = pipe_a.params().iter().map(|p| p.value.as_slice()).collect();
+        let (_, g) = pipe_a
+            .loss_and_grads_batch(&pr, &[vec![sino.as_slice(), truth.as_slice()]], 2)
+            .unwrap();
+        fit_a.step(&mut pipe_a, &g).unwrap();
+    }
+
+    // interrupted: 4 steps, save, restore into a FRESH pipeline+fitter,
+    // 4 more
+    let mut pipe_b = unrolled_cnn(a.clone(), &cfg).unwrap();
+    let mut fit_b = Fitter::new(&pipe_b, opt).unwrap();
+    for _ in 0..4 {
+        let pr: Vec<&[f32]> = pipe_b.params().iter().map(|p| p.value.as_slice()).collect();
+        let (_, g) = pipe_b
+            .loss_and_grads_batch(&pr, &[vec![sino.as_slice(), truth.as_slice()]], 2)
+            .unwrap();
+        fit_b.step(&mut pipe_b, &g).unwrap();
+    }
+    let ckpt = fit_b.save(&pipe_b);
+    let mut pipe_c = unrolled_cnn(a.clone(), &cfg).unwrap();
+    let mut fit_c = Fitter::new(&pipe_c, opt).unwrap();
+    fit_c.restore(&mut pipe_c, &ckpt).unwrap();
+    for _ in 0..4 {
+        let pr: Vec<&[f32]> = pipe_c.params().iter().map(|p| p.value.as_slice()).collect();
+        let (_, g) = pipe_c
+            .loss_and_grads_batch(&pr, &[vec![sino.as_slice(), truth.as_slice()]], 2)
+            .unwrap();
+        fit_c.step(&mut pipe_c, &g).unwrap();
+    }
+
+    for (pa, pc) in pipe_a.params().iter().zip(pipe_c.params().iter()) {
+        let ba: Vec<u32> = pa.value.iter().map(|v| v.to_bits()).collect();
+        let bc: Vec<u32> = pc.value.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(ba, bc, "param {} must resume bit-identically", pa.name);
+    }
+
+    // and fit_batched over the same items is deterministic run-to-run
+    let run = || {
+        let mut p = unrolled_cnn(a.clone(), &cfg).unwrap();
+        fit_batched(&mut p, &items, &bcfg(6)).unwrap();
+        let bits: Vec<Vec<u32>> =
+            p.params().iter().map(|q| q.value.iter().map(|v| v.to_bits()).collect()).collect();
+        bits
+    };
+    assert_eq!(run(), run(), "fit_batched must be bit-deterministic");
 }
 
 // ── whole-pipeline checks ────────────────────────────────────────────────
