@@ -17,18 +17,47 @@
 //! protocol-v2 sessions run at once, each on its own TCP connection —
 //! all multiplexed by the server's single event-loop thread onto the
 //! shared worker pool.
+//!
+//! `--workers N` (default 0) additionally opens a cluster shard channel
+//! and spawns N `leap worker` **processes** against it (the binary next
+//! to this example, or `$LEAP_BIN`), so every session request executes
+//! multi-process-sharded (`leap::cluster::ShardedOp`). With two or more
+//! workers one of them is killed mid-run — requests must still complete
+//! bit-identically via re-scatter to the survivors, and the `__stats`
+//! snapshot must expose the shard channel's retry/latency telemetry:
+//!
+//! ```bash
+//! cargo build --release   # the worker verb lives in the leap binary
+//! cargo run --release --example serve_client -- --sessions 2 --workers 2
+//! ```
 
+use std::process::{Child, Command, Stdio};
 use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 use leap::api::ScanBuilder;
-use leap::coordinator::server::{BinaryClient, Client, Server};
+use leap::coordinator::server::{BinaryClient, Client, Server, ServerOptions};
 use leap::coordinator::{
-    BatchPolicy, Coordinator, Executor, NativeExecutor, Router, SessionExecutor,
+    BatchPolicy, Coordinator, Executor, NativeExecutor, Router, SessionExecutor, SessionRegistry,
 };
 use leap::geometry::{Geometry, ParallelBeam, VolumeGeometry};
 use leap::phantom::shepp;
 use leap::projector::{Model, Projector};
 use leap::util::cli::Args;
+
+/// The `leap` binary that provides the `worker` verb: `$LEAP_BIN` when
+/// set, else resolved next to this example
+/// (`target/<profile>/examples/serve_client` → `target/<profile>/leap`).
+fn leap_binary() -> std::path::PathBuf {
+    if let Ok(bin) = std::env::var("LEAP_BIN") {
+        return bin.into();
+    }
+    let exe = std::env::current_exe().expect("current_exe");
+    exe.parent()
+        .and_then(|p| p.parent())
+        .expect("example expected under target/<profile>/examples")
+        .join("leap")
+}
 
 fn main() {
     let args = Args::from_env();
@@ -36,6 +65,34 @@ fn main() {
     let clients = args.usize_or("clients", 4);
     let requests = args.usize_or("requests", 8);
     let sessions = args.usize_or("sessions", clients);
+    let workers = args.usize_or("workers", 0);
+
+    // ── optional cluster: shard channel + N worker processes ──
+    let cluster = if workers > 0 {
+        Some(Arc::new(leap::cluster::ShardServer::start("127.0.0.1:0").unwrap()))
+    } else {
+        None
+    };
+    let mut children: Vec<Child> = Vec::new();
+    if let Some(c) = &cluster {
+        let bin = leap_binary();
+        let shard_addr = c.addr.to_string();
+        for _ in 0..workers {
+            children.push(
+                Command::new(&bin)
+                    .args(["worker", "--connect", &shard_addr])
+                    .stdout(Stdio::null())
+                    .spawn()
+                    .expect("spawn `leap worker` (build the leap binary, or set LEAP_BIN)"),
+            );
+        }
+        let t0 = Instant::now();
+        while c.workers() < workers {
+            assert!(t0.elapsed() < Duration::from_secs(10), "workers failed to register");
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        println!("cluster: {workers} worker processes joined on {shard_addr}");
+    }
 
     // backends: artifacts (if built) + native (v1 ops) + sessions (v2)
     let mut backends: Vec<Arc<dyn Executor>> = Vec::new();
@@ -53,14 +110,25 @@ fn main() {
         vg.clone(),
         Model::SF,
     ))));
-    backends.push(Arc::new(SessionExecutor::new()));
+    let session_exec: Arc<dyn Executor> = match &cluster {
+        Some(c) => {
+            Arc::new(SessionExecutor::with_cluster(SessionRegistry::global_arc(), c.clone()))
+        }
+        None => Arc::new(SessionExecutor::new()),
+    };
+    backends.push(session_exec);
     let coord = Arc::new(Coordinator::new(
         Arc::new(Router::new(backends)),
         BatchPolicy { max_batch: 8, max_wait: std::time::Duration::from_millis(4) },
         1 << 30,
         2,
     ));
-    let server = Server::start("127.0.0.1:0", coord.clone()).unwrap();
+    let server = Server::start_with(
+        "127.0.0.1:0",
+        coord.clone(),
+        ServerOptions { cluster: cluster.clone(), ..ServerOptions::default() },
+    )
+    .unwrap();
     println!("server on {} (protocol v2 binary + legacy v1 json)", server.addr);
 
     // the in-process reference every served byte must match exactly
@@ -102,6 +170,16 @@ fn main() {
             client.close_session(session).unwrap();
             latencies
         }));
+    }
+    // with ≥ 2 workers, kill one while the sessions stream: its
+    // in-flight shards must be re-scattered to the survivor and every
+    // reply must still match the in-process bits (asserted above)
+    if workers > 1 {
+        let mut victim = children.remove(0);
+        std::thread::sleep(Duration::from_millis(50));
+        let _ = victim.kill();
+        let _ = victim.wait();
+        println!("cluster: killed one worker mid-run (requests must survive via re-scatter)");
     }
     let mut v2: Vec<f64> = handles.into_iter().flat_map(|h| h.join().unwrap()).collect();
     let v2_wall = t0.elapsed().as_secs_f64();
@@ -151,4 +229,20 @@ fn main() {
     let mut stats_client = Client::connect(&addr).unwrap();
     let stats = stats_client.stats().unwrap();
     println!("server telemetry: {}", stats.get("stats").unwrap());
+
+    if workers > 0 {
+        let s = stats.get("stats").unwrap();
+        let live = s.get_f64("cluster_workers").expect("__stats must report cluster_workers");
+        let shard = s.get("cluster").expect("__stats must report the shard-channel telemetry");
+        println!("cluster telemetry: {live} worker(s) connected, shard channel {shard}");
+        assert!(
+            if workers > 1 { live as usize <= workers - 1 } else { live as usize == workers },
+            "cluster_workers must reflect the killed worker"
+        );
+        for mut child in children {
+            let _ = child.kill();
+            let _ = child.wait();
+        }
+        println!("cluster smoke: sharded replies bit-identical, worker kill survived ✓");
+    }
 }

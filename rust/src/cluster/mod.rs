@@ -1,0 +1,253 @@
+//! `leap::cluster` — the multi-process sharded execution plane.
+//!
+//! One operator application spreads across worker **processes**: the
+//! coordinator runs a [`ShardServer`] (a second listening port — the
+//! shard channel) that `leap worker` processes dial into, and
+//! [`ShardedOp`] scatters each forward/back application across them:
+//!
+//! * **Forward** scatters contiguous *view* ranges; each worker returns
+//!   its view slab and the coordinator concatenates them in plan order.
+//! * **Back** scatters contiguous *output-unit* ranges (the same units
+//!   as [`crate::ops::ViewSharded`]: z·y rows, y rows or z slabs,
+//!   depending on the plan kind); each worker returns a full-size
+//!   partial volume that is zero outside its owned units, and the
+//!   coordinator combines them with [`reduce::tree_reduce`] in a
+//!   **fixed, shard-count-independent order**.
+//!
+//! ## Determinism contract
+//!
+//! The shard plan ([`ShardPlanner`]) depends **only on the unit count**
+//! — never on how many workers are alive — so the same scan always
+//! splits the same way, every shard is executed by the same
+//! bit-identical range kernels as in-process execution
+//! (`forward_range_into_with_threads` / `back_range_into_with_threads`,
+//! property-tested over arbitrary partitions in
+//! `tests/range_property.rs`), and the reduction order is a pure
+//! function of the shard count. Results are therefore bit-identical to
+//! in-process execution at every worker count — 0 (pure in-process
+//! fallback), 1, 2, 4, … — and across worker deaths mid-request (a
+//! retried shard lands in its original plan slot).
+//!
+//! ## Failure handling
+//!
+//! Shards that time out or lose their worker are re-scattered to
+//! survivors with a bounded retry budget (see [`transport`]); a shard
+//! that exhausts it falls back to in-process execution of that range,
+//! so a request completes even if every worker dies mid-solve. Worker
+//! errors surface as typed [`LeapError::Remote`]. Per-shard dispatch /
+//! retry / latency telemetry rides the `cluster` rows of `__stats`.
+//!
+//! See `docs/CLUSTER.md` for topology and operations.
+
+pub mod reduce;
+pub mod transport;
+pub mod worker;
+
+pub use transport::{PendingShard, ShardServer, ShardServerOptions};
+pub use worker::{run_worker, run_worker_with, WorkerOptions};
+
+use std::sync::Arc;
+
+use crate::api::LeapError;
+use crate::array::{Sino, Vol3};
+use crate::geometry::config::{geometry_to_json, volume_to_json};
+use crate::ops::{LinearOp, Shape};
+use crate::projector::ProjectionPlan;
+use crate::util::json::Json;
+use crate::util::pool;
+
+/// Splits a unit range into the shard plan. The split is a pure
+/// function of the unit count — worker count never enters — which is
+/// what keeps sharded results bit-identical at every cluster size.
+pub struct ShardPlanner;
+
+impl ShardPlanner {
+    /// Target shard count: enough slack for a handful of workers to
+    /// load-balance, small enough that per-shard payload overhead
+    /// (forward ships the whole volume per shard) stays bounded.
+    pub const TARGET_SHARDS: usize = 8;
+
+    /// The shard ranges for `units` output units: contiguous, in order,
+    /// sizes differing by at most one (`pool::chunk_ranges`), at most
+    /// [`Self::TARGET_SHARDS`] of them.
+    pub fn shard_ranges(units: usize) -> Vec<(usize, usize)> {
+        pool::chunk_ranges(units, Self::TARGET_SHARDS.min(units.max(1)))
+    }
+}
+
+/// A [`LinearOp`] that scatters each application across the shard
+/// channel's workers — the multi-process sibling of
+/// [`crate::ops::ViewSharded`]. With no workers connected it executes
+/// in-process through the identical range kernels, so it is always
+/// safe to route through.
+pub struct ShardedOp {
+    plan: Arc<ProjectionPlan>,
+    server: Arc<ShardServer>,
+    /// Scan-identity meta every task frame carries (the OpenSession
+    /// keys), cloned and extended with `"shard"`/`"u0"`/`"u1"` per task.
+    base_meta: Json,
+}
+
+impl ShardedOp {
+    pub fn new(plan: Arc<ProjectionPlan>, server: Arc<ShardServer>) -> ShardedOp {
+        let base_meta = Json::obj(vec![
+            (
+                "config",
+                Json::obj(vec![
+                    ("geometry", geometry_to_json(plan.geom())),
+                    ("volume", volume_to_json(plan.vg())),
+                ]),
+            ),
+            ("model", Json::Str(plan.model().name().into())),
+            ("threads", Json::Num(plan.threads() as f64)),
+            ("backend", Json::Str(plan.backend().name().into())),
+            ("storage", Json::Str(plan.storage().name().into())),
+        ]);
+        ShardedOp { plan, server, base_meta }
+    }
+
+    /// The plan this operator shards.
+    pub fn plan(&self) -> &Arc<ProjectionPlan> {
+        &self.plan
+    }
+
+    fn task_meta(&self, kind: &str, u0: usize, u1: usize) -> Json {
+        let mut meta = self.base_meta.clone();
+        if let Json::Obj(m) = &mut meta {
+            m.insert("shard".into(), Json::Str(kind.into()));
+            m.insert("u0".into(), Json::Num(u0 as f64));
+            m.insert("u1".into(), Json::Num(u1 as f64));
+        }
+        meta
+    }
+
+    /// `A·x` into a [`Sino`] (the session serving path's entry point).
+    pub fn forward(&self, vol: &Vol3) -> Sino {
+        let mut out = self.plan.new_sino();
+        self.apply_into(&vol.data, &mut out.data);
+        out
+    }
+
+    /// `Aᵀ·y` into a [`Vol3`].
+    pub fn back(&self, sino: &Sino) -> Vol3 {
+        let mut vol = self.plan.new_vol();
+        self.adjoint_into(&sino.data, &mut vol.data);
+        vol
+    }
+}
+
+impl LinearOp for ShardedOp {
+    fn domain_shape(&self) -> Shape {
+        Shape::vol(self.plan.vg())
+    }
+
+    fn range_shape(&self) -> Shape {
+        Shape::sino(self.plan.geom())
+    }
+
+    /// Forward: scatter view ranges, concatenate slabs in plan order.
+    /// Shards whose retry budget runs out execute in-process — the
+    /// result is bit-identical either way, so fallback is silent except
+    /// in telemetry.
+    fn apply_into(&self, x: &[f32], y: &mut [f32]) {
+        assert_eq!(x.len(), self.domain_shape().numel(), "sharded forward input length");
+        assert_eq!(y.len(), self.range_shape().numel(), "sharded forward output length");
+        let units = self.plan.forward_shard_units();
+        let ranges = ShardPlanner::shard_ranges(units);
+        let per_view = self.plan.geom().nrows() * self.plan.geom().ncols();
+        if self.server.workers() == 0 {
+            // pure in-process fallback: same ranges, same kernels
+            let vol = Vol3::from_vec(self.plan.vg().nx, self.plan.vg().ny, self.plan.vg().nz, x.to_vec());
+            let mut sino = self.plan.new_sino();
+            let threads = self.plan.threads().max(1);
+            for &(u0, u1) in &ranges {
+                self.plan.forward_range_into_with_threads(&vol, &mut sino, threads, u0, u1);
+            }
+            y.copy_from_slice(&sino.data);
+            return;
+        }
+        let payload = Arc::new(x.to_vec());
+        let pending: Vec<(usize, usize, PendingShard)> = ranges
+            .iter()
+            .map(|&(u0, u1)| {
+                let meta = self.task_meta("fp", u0, u1);
+                let expected = (u1 - u0) * per_view;
+                (u0, u1, self.server.submit("shard_fp", meta, payload.clone(), expected))
+            })
+            .collect();
+        let mut local: Option<(Vol3, Sino)> = None;
+        for (u0, u1, shard) in pending {
+            match shard.wait() {
+                Ok(slab) => y[u0 * per_view..u1 * per_view].copy_from_slice(&slab),
+                Err(_) => {
+                    // retry budget exhausted (e.g. every worker died):
+                    // execute this range in-process — bit-identical
+                    let (vol, sino) = local.get_or_insert_with(|| {
+                        let vg = self.plan.vg();
+                        (
+                            Vol3::from_vec(vg.nx, vg.ny, vg.nz, x.to_vec()),
+                            self.plan.new_sino(),
+                        )
+                    });
+                    let threads = self.plan.threads().max(1);
+                    self.plan.forward_range_into_with_threads(vol, sino, threads, u0, u1);
+                    y[u0 * per_view..u1 * per_view]
+                        .copy_from_slice(&sino.data[u0 * per_view..u1 * per_view]);
+                }
+            }
+        }
+    }
+
+    /// Back: scatter output-unit ranges, tree-reduce the full-size
+    /// partial volumes in the fixed order (see [`reduce`]). Failed
+    /// shards produce their partial in-process, landing in the same
+    /// plan slot — the reduction order never changes.
+    fn adjoint_into(&self, y: &[f32], x: &mut [f32]) {
+        assert_eq!(y.len(), self.range_shape().numel(), "sharded back input length");
+        assert_eq!(x.len(), self.domain_shape().numel(), "sharded back output length");
+        let units = self.plan.back_shard_units();
+        let ranges = ShardPlanner::shard_ranges(units);
+        let threads = self.plan.threads().max(1);
+        if self.server.workers() == 0 {
+            let g = self.plan.geom();
+            let sino = Sino::from_vec(g.nviews(), g.nrows(), g.ncols(), y.to_vec());
+            let mut vol = self.plan.new_vol();
+            for &(u0, u1) in &ranges {
+                self.plan.back_range_into_with_threads(&sino, &mut vol, threads, u0, u1);
+            }
+            x.copy_from_slice(&vol.data);
+            return;
+        }
+        let payload = Arc::new(y.to_vec());
+        let numel = self.domain_shape().numel();
+        let pending: Vec<(usize, usize, PendingShard)> = ranges
+            .iter()
+            .map(|&(u0, u1)| {
+                let meta = self.task_meta("bp", u0, u1);
+                (u0, u1, self.server.submit("shard_bp", meta, payload.clone(), numel))
+            })
+            .collect();
+        let mut local_sino: Option<Sino> = None;
+        // collect partials in shard-plan order — the reduction input
+        // order, and therefore the reduction itself, is fixed
+        let partials: Vec<Vec<f32>> = pending
+            .into_iter()
+            .map(|(u0, u1, shard)| match shard.wait() {
+                Ok(partial) => partial,
+                Err(_) => {
+                    let sino = local_sino.get_or_insert_with(|| {
+                        let g = self.plan.geom();
+                        Sino::from_vec(g.nviews(), g.nrows(), g.ncols(), y.to_vec())
+                    });
+                    let mut vol = self.plan.new_vol();
+                    self.plan.back_range_into_with_threads(sino, &mut vol, threads, u0, u1);
+                    vol.data
+                }
+            })
+            .collect();
+        match reduce::tree_reduce(partials) {
+            Some(reduced) => x.copy_from_slice(&reduced),
+            None => x.fill(0.0),
+        }
+    }
+}

@@ -1,0 +1,116 @@
+//! Deterministic tree reduction of partial volumes.
+//!
+//! Sharded backprojection scatters output-unit ranges to workers; each
+//! worker returns a **full-size** partial volume that is zero outside
+//! its owned units (the range executors write only owned outputs — see
+//! `tests/range_property.rs`). The coordinator combines those partials
+//! here in a **fixed, shard-count-independent order**: partials are
+//! indexed by their position in the shard plan (which depends only on
+//! the unit count, never on how many workers happen to be alive), and
+//! [`tree_reduce`] always pairs adjacent partials `(0+1, 2+3, …)` level
+//! by level. Because the pairing is a pure function of the shard count
+//! and each voxel is owned by exactly one shard, the reduced volume is
+//! bit-identical to in-process execution at every worker count —
+//! including the degenerate single-shard plan.
+//!
+//! The reduction itself is plain f32 addition: for disjoint-support
+//! partials every voxel sums one owned value with zeros, so no rounding
+//! is introduced at any tree shape. The fixed order still matters: it
+//! keeps the contract honest if a future sharding ever overlaps
+//! support, and it makes the wire-level replay (retried shards land in
+//! their original plan slot) order-insensitive.
+
+/// Elementwise `dst += src`. Panics if the lengths differ — partial
+/// volumes in one reduction must all come from the same plan.
+pub fn add_into(dst: &mut [f32], src: &[f32]) {
+    assert_eq!(dst.len(), src.len(), "partial volumes must have one shape");
+    for (d, s) in dst.iter_mut().zip(src.iter()) {
+        *d += *s;
+    }
+}
+
+/// Reduce partial volumes in the fixed pairwise order: level by level,
+/// adjacent pairs `(0,1), (2,3), …` combine (left += right) until one
+/// buffer remains. `None` for an empty input. The order depends only on
+/// `parts.len()` — the shard plan's size — never on which worker
+/// produced which partial or when replies arrived.
+pub fn tree_reduce(mut parts: Vec<Vec<f32>>) -> Option<Vec<f32>> {
+    if parts.is_empty() {
+        return None;
+    }
+    while parts.len() > 1 {
+        let mut next = Vec::with_capacity(parts.len().div_ceil(2));
+        let mut it = parts.into_iter();
+        while let Some(mut left) = it.next() {
+            if let Some(right) = it.next() {
+                add_into(&mut left, &right);
+            }
+            next.push(left);
+        }
+        parts = next;
+    }
+    parts.pop()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_input_reduces_to_none() {
+        assert_eq!(tree_reduce(Vec::new()), None);
+    }
+
+    #[test]
+    fn single_partial_passes_through_untouched() {
+        let p = vec![1.0f32, -2.5, 0.0];
+        assert_eq!(tree_reduce(vec![p.clone()]), Some(p));
+    }
+
+    #[test]
+    fn disjoint_support_partials_reassemble_the_full_vector() {
+        // 5 partials over 10 slots, uneven ownership, zeros elsewhere —
+        // the shape the cluster reducer actually sees
+        let full: Vec<f32> = (0..10).map(|i| (i as f32 + 1.0) * 0.5).collect();
+        let cuts = [(0usize, 3usize), (3, 4), (4, 7), (7, 7), (7, 10)];
+        let parts: Vec<Vec<f32>> = cuts
+            .iter()
+            .map(|&(a, b)| {
+                let mut p = vec![0.0f32; full.len()];
+                p[a..b].copy_from_slice(&full[a..b]);
+                p
+            })
+            .collect();
+        assert_eq!(tree_reduce(parts), Some(full));
+    }
+
+    #[test]
+    fn order_is_fixed_by_index_not_associativity_friendly() {
+        // overlapping-support inputs expose the order: with f32 rounding,
+        // ((a+b)+(c+d)) generally differs from ((a+c)+(b+d)). The fixed
+        // pairwise order must equal its own explicit expansion.
+        let a = vec![1.0e7f32, 1.0];
+        let b = vec![1.0f32, 1.0e7];
+        let c = vec![-1.0e7f32, 3.0];
+        let d = vec![7.0f32, -1.0e7];
+        let mut ab = a.clone();
+        add_into(&mut ab, &b);
+        let mut cd = c.clone();
+        add_into(&mut cd, &d);
+        add_into(&mut ab, &cd);
+        assert_eq!(tree_reduce(vec![a, b, c, d]), Some(ab));
+    }
+
+    #[test]
+    fn odd_counts_carry_the_tail_up_a_level() {
+        let parts = vec![vec![1.0f32], vec![2.0], vec![4.0]];
+        // level 0: (1+2), 4 carried; level 1: 3+4
+        assert_eq!(tree_reduce(parts), Some(vec![7.0]));
+    }
+
+    #[test]
+    #[should_panic(expected = "one shape")]
+    fn mismatched_lengths_panic() {
+        add_into(&mut [0.0f32; 2], &[0.0f32; 3]);
+    }
+}

@@ -1,0 +1,523 @@
+//! The coordinator side of the shard channel: a nonblocking,
+//! readiness-polled endpoint worker processes dial into.
+//!
+//! [`ShardServer`] binds its own port (separate from the client-facing
+//! serving port) and runs one event-loop thread over
+//! [`crate::util::netpoll`]: the listener, a [`Waker`] wakeup fd, and
+//! every connected worker socket sit in one poll set, each worker a
+//! nonblocking state machine with incremental protocol-v2 frame
+//! reassembly — the same discipline as the client-facing server in
+//! [`crate::coordinator::server`].
+//!
+//! ## Protocol (v2 frames, append-only meta keys)
+//!
+//! * Worker → coordinator `Hello` with meta `{"role": "worker"}`;
+//!   coordinator replies `Hello` with `{"worker_id": n}`.
+//! * Heartbeats are `Hello` frames with `{"role": "worker", "hb": 1}`,
+//!   sent whenever the worker has been idle for its heartbeat period.
+//!   A worker silent past [`ShardServerOptions::heartbeat_timeout`] is
+//!   dropped and its in-flight shard re-scattered.
+//! * Shard tasks are `Request` frames whose meta carries the full scan
+//!   config (the OpenSession meta keys) **plus** `"shard"` ("fp"|"bp")
+//!   and the unit range `"u0"`/`"u1"` — see `docs/PROTOCOL.md`. Because
+//!   every task is self-describing, a restarted worker re-establishes
+//!   the session's pinned plan from the next task frame alone: there is
+//!   no coordinator-side session state to resynchronize.
+//! * Replies are `Response` (payload = the shard result) or `Error`
+//!   frames; errors surface to the submitter as typed
+//!   [`LeapError::Remote`].
+//!
+//! ## Failure handling
+//!
+//! One shard is in flight per worker at a time. A shard that misses its
+//! deadline, or whose worker disconnects or goes heartbeat-silent, is
+//! requeued with a **fresh frame id** (so a late reply to the old id is
+//! recognized as stale and dropped) and re-scattered to the next idle
+//! worker — up to [`ShardServerOptions::max_retries`] times, after
+//! which the submitter gets the error and decides (the operator layer
+//! falls back to in-process execution, so requests still complete).
+//! Every retry is counted in the server's own [`Telemetry`] and served
+//! as the `cluster` rows of `__stats`.
+
+use std::collections::VecDeque;
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::api::LeapError;
+use crate::coordinator::telemetry::Telemetry;
+use crate::coordinator::wire::{decode_frame_bytes, encode_frame_parts, Frame, FrameKind};
+use crate::util::json::Json;
+use crate::util::netpoll::{poll_fds, raw_fd, PollFd, Waker, POLLIN, POLLOUT};
+
+/// Default silence window after which a worker is presumed dead.
+pub const HEARTBEAT_TIMEOUT: Duration = Duration::from_secs(10);
+/// Default per-shard completion deadline before a re-scatter.
+pub const TASK_DEADLINE: Duration = Duration::from_secs(60);
+/// Default bound on re-scatters per shard (beyond the first dispatch).
+pub const MAX_RETRIES: u32 = 2;
+
+/// Tuning knobs for [`ShardServer::start_with`]. Tests shrink the
+/// timeouts to exercise the failure paths in milliseconds.
+#[derive(Clone, Debug)]
+pub struct ShardServerOptions {
+    /// Drop a worker silent (no frames, no heartbeats) this long.
+    pub heartbeat_timeout: Duration,
+    /// Re-scatter a shard not answered within this deadline.
+    pub task_deadline: Duration,
+    /// Give up on a shard after this many re-scatters and surface the
+    /// error to the submitter.
+    pub max_retries: u32,
+}
+
+impl Default for ShardServerOptions {
+    fn default() -> ShardServerOptions {
+        ShardServerOptions {
+            heartbeat_timeout: HEARTBEAT_TIMEOUT,
+            task_deadline: TASK_DEADLINE,
+            max_retries: MAX_RETRIES,
+        }
+    }
+}
+
+/// One queued or in-flight shard.
+struct Task {
+    /// Telemetry row ("shard_fp" / "shard_bp").
+    label: &'static str,
+    meta: Json,
+    payload: Arc<Vec<f32>>,
+    /// Element count the reply payload must have.
+    expected_len: usize,
+    retries: u32,
+    submitted: Instant,
+    reply: mpsc::Sender<Result<Vec<f32>, LeapError>>,
+}
+
+/// Handle to one submitted shard; [`PendingShard::wait`] blocks for the
+/// result. Dropping it abandons the shard (the reply send is ignored).
+pub struct PendingShard {
+    rx: mpsc::Receiver<Result<Vec<f32>, LeapError>>,
+}
+
+impl PendingShard {
+    /// Block until the shard completes, fails permanently, or the
+    /// server stops.
+    pub fn wait(self) -> Result<Vec<f32>, LeapError> {
+        self.rx
+            .recv()
+            .unwrap_or_else(|_| Err(LeapError::Io("shard server stopped".into())))
+    }
+}
+
+/// State shared between submitters and the event-loop thread.
+struct Shared {
+    queue: Mutex<VecDeque<Task>>,
+    waker: Waker,
+    connected: AtomicUsize,
+    telemetry: Telemetry,
+    stop: AtomicBool,
+    opts: ShardServerOptions,
+}
+
+/// The coordinator-side shard channel; see the module docs. Dropping
+/// stops the event loop: queued shards error out, workers see EOF and
+/// exit cleanly.
+pub struct ShardServer {
+    /// The bound shard-channel address workers dial
+    /// (`leap worker --connect <addr>`).
+    pub addr: std::net::SocketAddr,
+    shared: Arc<Shared>,
+    loop_handle: Mutex<Option<std::thread::JoinHandle<()>>>,
+}
+
+impl ShardServer {
+    /// Bind `addr` (e.g. "127.0.0.1:0") with default options.
+    pub fn start(addr: &str) -> Result<ShardServer, LeapError> {
+        ShardServer::start_with(addr, ShardServerOptions::default())
+    }
+
+    /// Bind `addr` and run the shard channel on one event-loop thread.
+    pub fn start_with(addr: &str, opts: ShardServerOptions) -> Result<ShardServer, LeapError> {
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(VecDeque::new()),
+            waker: Waker::new()?,
+            connected: AtomicUsize::new(0),
+            telemetry: Telemetry::new(),
+            stop: AtomicBool::new(false),
+            opts,
+        });
+        let shared2 = shared.clone();
+        let handle = std::thread::Builder::new()
+            .name("leap-shard-chan".into())
+            .spawn(move || event_loop(listener, shared2))
+            .map_err(|e| LeapError::Io(e.to_string()))?;
+        Ok(ShardServer { addr: local, shared, loop_handle: Mutex::new(Some(handle)) })
+    }
+
+    /// Number of currently connected (registered) workers. The operator
+    /// layer treats 0 as "run in-process".
+    pub fn workers(&self) -> usize {
+        self.shared.connected.load(Ordering::Relaxed)
+    }
+
+    /// The shard channel's own telemetry: `shard_fp`/`shard_bp` rows
+    /// with dispatch counts, latency aggregates and per-shard retry
+    /// counts (served as the `cluster` rows of `__stats`).
+    pub fn telemetry(&self) -> &Telemetry {
+        &self.shared.telemetry
+    }
+
+    /// Queue one shard for dispatch to an idle worker. `meta` must be
+    /// the self-describing task meta (scan config + `"shard"`/`"u0"`/
+    /// `"u1"`), `expected_len` the element count the reply must have.
+    pub fn submit(
+        &self,
+        label: &'static str,
+        meta: Json,
+        payload: Arc<Vec<f32>>,
+        expected_len: usize,
+    ) -> PendingShard {
+        let (tx, rx) = mpsc::channel();
+        self.shared.queue.lock().unwrap().push_back(Task {
+            label,
+            meta,
+            payload,
+            expected_len,
+            retries: 0,
+            submitted: Instant::now(),
+            reply: tx,
+        });
+        self.shared.waker.wake();
+        PendingShard { rx }
+    }
+}
+
+impl Drop for ShardServer {
+    fn drop(&mut self) {
+        self.shared.stop.store(true, Ordering::SeqCst);
+        self.shared.waker.wake();
+        if let Some(h) = self.loop_handle.lock().unwrap().take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// One connected worker: a nonblocking socket with incremental frame
+/// reassembly and a pending-write buffer, plus at most one in-flight
+/// shard.
+struct WorkerConn {
+    sock: TcpStream,
+    id: u64,
+    rbuf: Vec<u8>,
+    wbuf: Vec<u8>,
+    woff: usize,
+    last_seen: Instant,
+    /// Hello exchanged — only registered workers receive shards.
+    registered: bool,
+    /// `(frame id, task, deadline)` of the dispatched shard, if any.
+    inflight: Option<(u64, Task, Instant)>,
+    failed: bool,
+}
+
+fn elapsed_us(t: Instant) -> u64 {
+    t.elapsed().as_micros() as u64
+}
+
+/// Requeue `task` with a fresh dispatch slot, or surface `err` to the
+/// submitter once the retry budget is spent.
+fn retry_or_fail(shared: &Shared, mut task: Task, err: LeapError) {
+    if task.retries < shared.opts.max_retries {
+        task.retries += 1;
+        shared.telemetry.record_retry(task.label);
+        shared.queue.lock().unwrap().push_front(task);
+    } else {
+        shared.telemetry.record(task.label, elapsed_us(task.submitted), 0, false);
+        let _ = task.reply.send(Err(err));
+    }
+}
+
+/// Flush as much of the worker's pending write buffer as the socket
+/// accepts right now.
+fn flush(w: &mut WorkerConn) {
+    while w.woff < w.wbuf.len() {
+        match w.sock.write(&w.wbuf[w.woff..]) {
+            Ok(0) => {
+                w.failed = true;
+                return;
+            }
+            Ok(n) => w.woff += n,
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(_) => {
+                w.failed = true;
+                return;
+            }
+        }
+    }
+    if w.woff == w.wbuf.len() {
+        w.wbuf.clear();
+        w.woff = 0;
+    } else if w.woff > (1 << 20) {
+        w.wbuf.drain(..w.woff);
+        w.woff = 0;
+    }
+}
+
+/// Read everything currently available and decode complete frames.
+fn read_frames(w: &mut WorkerConn) -> Vec<Frame> {
+    let mut frames = Vec::new();
+    let mut chunk = [0u8; 64 * 1024];
+    loop {
+        match w.sock.read(&mut chunk) {
+            Ok(0) => {
+                w.failed = true;
+                break;
+            }
+            Ok(n) => {
+                w.rbuf.extend_from_slice(&chunk[..n]);
+                w.last_seen = Instant::now();
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(_) => {
+                w.failed = true;
+                break;
+            }
+        }
+    }
+    loop {
+        match decode_frame_bytes(&w.rbuf) {
+            Ok(Some((frame, consumed))) => {
+                w.rbuf.drain(..consumed);
+                frames.push(frame);
+            }
+            Ok(None) => break,
+            Err(_) => {
+                w.failed = true;
+                break;
+            }
+        }
+    }
+    frames
+}
+
+/// Handle one decoded frame from `w`.
+fn handle_frame(shared: &Shared, w: &mut WorkerConn, frame: Frame) {
+    match frame.kind {
+        FrameKind::Hello => {
+            // first Hello registers; later ones are heartbeats (the
+            // read itself already refreshed last_seen)
+            if !w.registered {
+                if frame.meta.get_str("role") != Some("worker") {
+                    w.failed = true;
+                    return;
+                }
+                w.registered = true;
+                shared.connected.fetch_add(1, Ordering::Relaxed);
+                let meta = Json::obj(vec![("worker_id", Json::Num(w.id as f64))]);
+                match encode_frame_parts(FrameKind::Hello, w.id, &meta, &[]) {
+                    Ok(bytes) => w.wbuf.extend_from_slice(&bytes),
+                    Err(_) => w.failed = true,
+                }
+            }
+        }
+        FrameKind::Response => {
+            let matches = w.inflight.as_ref().is_some_and(|(id, _, _)| *id == frame.id);
+            if !matches {
+                return; // stale reply to a re-scattered shard: drop
+            }
+            let (_, task, _) = w.inflight.take().expect("matched above");
+            if frame.payload.len() == task.expected_len {
+                let us = elapsed_us(task.submitted);
+                shared.telemetry.record(task.label, us, us, true);
+                let _ = task.reply.send(Ok(frame.payload));
+            } else {
+                let err = LeapError::Remote {
+                    code: crate::api::codes::SHAPE_MISMATCH,
+                    message: format!(
+                        "worker {} shard reply has {} elements, expected {}",
+                        w.id,
+                        frame.payload.len(),
+                        task.expected_len
+                    ),
+                };
+                retry_or_fail(shared, task, err);
+            }
+        }
+        FrameKind::Error => {
+            let matches = w.inflight.as_ref().is_some_and(|(id, _, _)| *id == frame.id);
+            if !matches {
+                return; // stale error for a re-scattered shard: drop
+            }
+            let (_, task, _) = w.inflight.take().expect("matched above");
+            let e = frame.to_error();
+            let remote =
+                LeapError::Remote { code: e.code(), message: format!("worker {}: {e}", w.id) };
+            retry_or_fail(shared, task, remote);
+        }
+        // anything else on the shard channel is a protocol violation
+        _ => w.failed = true,
+    }
+}
+
+fn event_loop(listener: TcpListener, shared: Arc<Shared>) {
+    let mut workers: Vec<WorkerConn> = Vec::new();
+    let mut next_worker_id: u64 = 1;
+    let mut next_task_id: u64 = 1;
+    loop {
+        if shared.stop.load(Ordering::SeqCst) {
+            break;
+        }
+        // poll set: listener, waker, then one slot per worker (POLLOUT
+        // only while a write is actually pending)
+        let nw = workers.len();
+        let mut fds = Vec::with_capacity(2 + nw);
+        fds.push(PollFd::new(raw_fd(&listener), POLLIN));
+        fds.push(PollFd::new(shared.waker.fd(), POLLIN));
+        for w in &workers {
+            let mut ev = POLLIN;
+            if w.woff < w.wbuf.len() {
+                ev |= POLLOUT;
+            }
+            fds.push(PollFd::new(raw_fd(&w.sock), ev));
+        }
+        // timeout: the nearest shard deadline, bounded by a heartbeat
+        // sweep tick
+        let now = Instant::now();
+        let mut timeout = Duration::from_millis(500);
+        for w in &workers {
+            if let Some((_, _, deadline)) = &w.inflight {
+                timeout = timeout.min(deadline.saturating_duration_since(now));
+            }
+        }
+        poll_fds(&mut fds, timeout.max(Duration::from_millis(1)));
+        if fds[1].readable() {
+            shared.waker.drain();
+        }
+        // worker I/O (only the workers the poll set covered)
+        for (i, w) in workers.iter_mut().take(nw).enumerate() {
+            let pf = &fds[2 + i];
+            if pf.hangup() && !pf.readable() {
+                w.failed = true;
+                continue;
+            }
+            if pf.readable() {
+                for frame in read_frames(w) {
+                    handle_frame(&shared, w, frame);
+                }
+            }
+            if pf.writable() {
+                flush(w);
+            }
+        }
+        // new workers
+        if fds[0].readable() {
+            loop {
+                match listener.accept() {
+                    Ok((sock, _)) => {
+                        let _ = sock.set_nonblocking(true);
+                        let _ = sock.set_nodelay(true);
+                        workers.push(WorkerConn {
+                            sock,
+                            id: next_worker_id,
+                            rbuf: Vec::new(),
+                            wbuf: Vec::new(),
+                            woff: 0,
+                            last_seen: Instant::now(),
+                            registered: false,
+                            inflight: None,
+                            failed: false,
+                        });
+                        next_worker_id += 1;
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                    Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                    Err(_) => break,
+                }
+            }
+        }
+        // deadline sweep: a shard past its deadline is re-scattered
+        // with a fresh id; the worker stays connected (its eventual
+        // reply is recognized as stale) but heartbeat silence drops it
+        let now = Instant::now();
+        for w in workers.iter_mut() {
+            let expired = w.inflight.as_ref().is_some_and(|(_, _, d)| now >= *d);
+            if expired {
+                let (_, task, _) = w.inflight.take().expect("expired above");
+                retry_or_fail(
+                    &shared,
+                    task,
+                    LeapError::Remote {
+                        code: crate::api::codes::IO,
+                        message: format!("worker {} missed the shard deadline", w.id),
+                    },
+                );
+            }
+            if w.registered && now.duration_since(w.last_seen) > shared.opts.heartbeat_timeout {
+                w.failed = true;
+            }
+        }
+        // drop failed workers, re-scattering whatever they held
+        workers.retain_mut(|w| {
+            if !w.failed {
+                return true;
+            }
+            if w.registered {
+                shared.connected.fetch_sub(1, Ordering::Relaxed);
+            }
+            if let Some((_, task, _)) = w.inflight.take() {
+                retry_or_fail(
+                    &shared,
+                    task,
+                    LeapError::Remote {
+                        code: crate::api::codes::IO,
+                        message: format!("worker {} connection lost", w.id),
+                    },
+                );
+            }
+            false
+        });
+        // dispatch queued shards to idle registered workers
+        {
+            let mut queue = shared.queue.lock().unwrap();
+            for w in workers.iter_mut() {
+                if !w.registered || w.inflight.is_some() || w.failed {
+                    continue;
+                }
+                let Some(task) = queue.pop_front() else { break };
+                let id = next_task_id;
+                next_task_id += 1;
+                match encode_frame_parts(FrameKind::Request, id, &task.meta, &task.payload) {
+                    Ok(bytes) => {
+                        w.wbuf.extend_from_slice(&bytes);
+                        w.inflight = Some((id, task, Instant::now() + shared.opts.task_deadline));
+                    }
+                    Err(e) => {
+                        let _ = task.reply.send(Err(e));
+                    }
+                }
+            }
+        }
+        // opportunistic flush so small dispatches don't wait a poll tick
+        for w in workers.iter_mut() {
+            if w.woff < w.wbuf.len() {
+                flush(w);
+            }
+        }
+    }
+    // shutting down: error out everything still queued or in flight
+    for task in shared.queue.lock().unwrap().drain(..) {
+        let _ = task.reply.send(Err(LeapError::Io("shard server stopped".into())));
+    }
+    for mut w in workers {
+        if let Some((_, task, _)) = w.inflight.take() {
+            let _ = task.reply.send(Err(LeapError::Io("shard server stopped".into())));
+        }
+    }
+}

@@ -1,0 +1,250 @@
+//! The worker side of the shard channel: `leap worker` runs this.
+//!
+//! A worker process dials the coordinator's shard channel
+//! ([`super::ShardServer`]), registers with a `Hello` frame
+//! (`{"role": "worker"}`), then serves shard tasks until the
+//! coordinator closes the connection. The loop is paced by
+//! [`crate::util::netpoll::poll_fds`] on the single blocking socket:
+//! readable ⇒ read the next task frame; poll timeout ⇒ the worker has
+//! been idle a heartbeat period, so it sends a heartbeat `Hello`
+//! (`{"hb": 1}`) that keeps the coordinator from presuming it dead.
+//!
+//! ## Tasks are self-describing — the shard/replica handshake
+//!
+//! Every task frame's meta is a superset of the protocol-v2
+//! `OpenSession` meta: the full scan config plus `"shard"` ("fp"|"bp")
+//! and the owned unit range `"u0"`/`"u1"`. The worker opens the scan in
+//! its **local** [`SessionRegistry`] on first sight (keyed by the
+//! canonical JSON of the config, so repeated tasks reuse the pinned
+//! plan) and executes the range through the same
+//! `forward_range_into_with_threads` / `back_range_into_with_threads`
+//! kernels as in-process execution — which is what makes sharded
+//! results bit-identical. Because the plan is re-derivable from any
+//! task frame, a worker that crashes and restarts needs no session
+//! resynchronization: it re-registers, receives a re-scattered task,
+//! and rebuilds the plan from that frame alone.
+//!
+//! Forward tasks carry the whole volume and return the owned view slab
+//! (`[u0, u1)` views, contiguous). Back tasks carry the whole sinogram
+//! and return a **full-size** partial volume that is zero outside the
+//! owned units (the coordinator tree-reduces those — see
+//! [`super::reduce`]).
+
+use std::collections::HashMap;
+use std::io::Write as _;
+use std::net::TcpStream;
+use std::time::Duration;
+
+use crate::api::LeapError;
+use crate::array::{Sino, Vol3};
+use crate::coordinator::wire::{read_frame, write_frame, write_frame_parts, Frame, FrameKind};
+use crate::coordinator::SessionRegistry;
+use crate::util::json::Json;
+use crate::util::netpoll::{poll_fds, raw_fd, PollFd, POLLIN};
+
+/// Default idle interval between worker heartbeats. Must be well under
+/// the coordinator's [`super::transport::HEARTBEAT_TIMEOUT`].
+pub const HEARTBEAT_PERIOD: Duration = Duration::from_secs(2);
+
+/// Tuning knobs for [`run_worker_with`].
+#[derive(Clone, Debug)]
+pub struct WorkerOptions {
+    /// Send a heartbeat after this much idle time.
+    pub heartbeat_period: Duration,
+    /// Override the execution thread count (`None` = the plan's own).
+    /// Safe at any value: results are bit-identical across thread
+    /// counts, so this is a per-host throughput knob only.
+    pub threads: Option<usize>,
+    /// Initial-connect attempts (100 ms apart) before giving up —
+    /// workers are routinely launched a beat before the coordinator.
+    pub connect_retries: u32,
+}
+
+impl Default for WorkerOptions {
+    fn default() -> WorkerOptions {
+        WorkerOptions { heartbeat_period: HEARTBEAT_PERIOD, threads: None, connect_retries: 50 }
+    }
+}
+
+/// Serve shards from `connect` (host:port of the coordinator's shard
+/// channel) until the coordinator closes the connection. Returns `Ok`
+/// on a clean close.
+pub fn run_worker(connect: &str) -> Result<(), LeapError> {
+    run_worker_with(connect, WorkerOptions::default())
+}
+
+/// [`run_worker`] with explicit options.
+pub fn run_worker_with(connect: &str, opts: WorkerOptions) -> Result<(), LeapError> {
+    let mut sock = connect_with_retries(connect, opts.connect_retries)?;
+    let _ = sock.set_nodelay(true);
+    // register: Hello out, Hello (with our assigned id) back
+    let hello = Json::obj(vec![("role", Json::Str("worker".into()))]);
+    write_frame_parts(&mut sock, FrameKind::Hello, 0, &hello, &[])?;
+    let reply = read_frame(&mut sock)?
+        .ok_or_else(|| LeapError::Protocol("shard channel closed before hello reply".into()))?;
+    if reply.kind != FrameKind::Hello {
+        return Err(LeapError::Protocol(format!(
+            "expected hello on the shard channel, got {:?}",
+            reply.kind
+        )));
+    }
+    let heartbeat =
+        Json::obj(vec![("role", Json::Str("worker".into())), ("hb", Json::Num(1.0))]);
+
+    // local sessions: one pinned plan per distinct scan config seen in
+    // task frames (the shard/replica handshake — see module docs)
+    let registry = SessionRegistry::new();
+    let mut plans: HashMap<String, u64> = HashMap::new();
+    let mut fds = [PollFd::new(raw_fd(&sock), POLLIN)];
+    loop {
+        fds[0] = PollFd::new(raw_fd(&sock), POLLIN);
+        poll_fds(&mut fds, opts.heartbeat_period);
+        if !fds[0].readable() {
+            // idle a full heartbeat period: prove liveness
+            write_frame_parts(&mut sock, FrameKind::Hello, 0, &heartbeat, &[])?;
+            continue;
+        }
+        let Some(frame) = read_frame(&mut sock)? else {
+            return Ok(()); // coordinator closed the channel: clean exit
+        };
+        match frame.kind {
+            FrameKind::Request => {
+                match serve_task(&registry, &mut plans, &frame, opts.threads) {
+                    Ok(payload) => {
+                        write_frame_parts(
+                            &mut sock,
+                            FrameKind::Response,
+                            frame.id,
+                            &Json::Null,
+                            &payload,
+                        )?;
+                    }
+                    Err(e) => write_frame(&mut sock, &Frame::error(frame.id, &e))?,
+                }
+            }
+            FrameKind::Hello => {} // coordinator-side ping: ignore
+            other => {
+                let e = LeapError::Protocol(format!("unexpected {other:?} on shard channel"));
+                write_frame(&mut sock, &Frame::error(frame.id, &e))?;
+            }
+        }
+        let _ = sock.flush();
+    }
+}
+
+fn connect_with_retries(connect: &str, retries: u32) -> Result<TcpStream, LeapError> {
+    let mut last = None;
+    for _ in 0..retries.max(1) {
+        match TcpStream::connect(connect) {
+            Ok(s) => return Ok(s),
+            Err(e) => {
+                last = Some(e);
+                std::thread::sleep(Duration::from_millis(100));
+            }
+        }
+    }
+    Err(LeapError::Io(format!(
+        "shard channel {connect} unreachable: {}",
+        last.map(|e| e.to_string()).unwrap_or_default()
+    )))
+}
+
+/// Execute one shard task frame. The plan cache key is the canonical
+/// (sorted-key) JSON of the scan-identity meta, so every task with the
+/// same scan reuses one pinned plan.
+fn serve_task(
+    registry: &SessionRegistry,
+    plans: &mut HashMap<String, u64>,
+    frame: &Frame,
+    threads_override: Option<usize>,
+) -> Result<Vec<f32>, LeapError> {
+    let meta = &frame.meta;
+    let kind = meta
+        .get_str("shard")
+        .ok_or_else(|| LeapError::Protocol("shard task missing \"shard\" kind".into()))?
+        .to_string();
+    let u0 = meta
+        .get_usize("u0")
+        .ok_or_else(|| LeapError::Protocol("shard task missing \"u0\"".into()))?;
+    let u1 = meta
+        .get_usize("u1")
+        .ok_or_else(|| LeapError::Protocol("shard task missing \"u1\"".into()))?;
+    let key = format!(
+        "{}|{}|{}|{}|{}",
+        meta.get("config").map(|c| c.to_string()).unwrap_or_default(),
+        meta.get_str("model").unwrap_or(""),
+        meta.get_usize("threads").map(|t| t.to_string()).unwrap_or_default(),
+        meta.get_str("backend").unwrap_or(""),
+        meta.get_str("storage").unwrap_or(""),
+    );
+    let sid = match plans.get(&key) {
+        Some(&id) => id,
+        None => {
+            let id = match registry.open_from_meta(meta) {
+                Ok(id) => id,
+                // session cap: this worker has served many distinct
+                // scans — evict everything and retry once
+                Err(LeapError::BudgetExceeded { .. }) => {
+                    for (_, id) in plans.drain() {
+                        registry.close(id);
+                    }
+                    registry.open_from_meta(meta)?
+                }
+                Err(e) => return Err(e),
+            };
+            plans.insert(key, id);
+            id
+        }
+    };
+    let exec = registry.executor(sid).ok_or(LeapError::UnknownSession(sid))?;
+    let plan = exec.shared_plan();
+    let threads = threads_override.unwrap_or_else(|| plan.threads()).max(1);
+    match kind.as_str() {
+        "fp" => {
+            let units = plan.forward_shard_units();
+            if u0 > u1 || u1 > units {
+                return Err(LeapError::InvalidArgument(format!(
+                    "bad forward shard range {u0}..{u1} of {units} views"
+                )));
+            }
+            let vg = plan.vg();
+            let want = vg.nx * vg.ny * vg.nz;
+            if frame.payload.len() != want {
+                return Err(LeapError::ShapeMismatch {
+                    what: "volume",
+                    expected: want,
+                    got: frame.payload.len(),
+                });
+            }
+            let vol = Vol3::from_vec(vg.nx, vg.ny, vg.nz, frame.payload.clone());
+            let mut sino = plan.new_sino();
+            plan.forward_range_into_with_threads(&vol, &mut sino, threads, u0, u1);
+            let per_view = plan.geom().nrows() * plan.geom().ncols();
+            Ok(sino.data[u0 * per_view..u1 * per_view].to_vec())
+        }
+        "bp" => {
+            let units = plan.back_shard_units();
+            if u0 > u1 || u1 > units {
+                return Err(LeapError::InvalidArgument(format!(
+                    "bad back shard range {u0}..{u1} of {units} units"
+                )));
+            }
+            let g = plan.geom();
+            let want = g.nviews() * g.nrows() * g.ncols();
+            if frame.payload.len() != want {
+                return Err(LeapError::ShapeMismatch {
+                    what: "sinogram",
+                    expected: want,
+                    got: frame.payload.len(),
+                });
+            }
+            let sino = Sino::from_vec(g.nviews(), g.nrows(), g.ncols(), frame.payload.clone());
+            // full-size partial: the range executor writes only owned
+            // units, the rest stays exactly zero for the tree-reduce
+            let mut vol = plan.new_vol();
+            plan.back_range_into_with_threads(&sino, &mut vol, threads, u0, u1);
+            Ok(vol.data)
+        }
+        other => Err(LeapError::Protocol(format!("unknown shard kind {other:?}"))),
+    }
+}

@@ -120,6 +120,12 @@ pub struct ServerOptions {
     /// backend on the same `Arc`) to isolate concurrent servers in one
     /// process — tests especially — from each other's sessions.
     pub registry: Option<Arc<SessionRegistry>>,
+    /// Shard channel this server reports in `__stats` (`cluster` /
+    /// `cluster_workers` rows: per-shard dispatch, retry and latency
+    /// telemetry). Routing through the cluster is the paired
+    /// [`super::SessionExecutor::with_cluster`] backend's job; this
+    /// handle only makes the shard plane observable.
+    pub cluster: Option<Arc<crate::cluster::ShardServer>>,
 }
 
 impl Default for ServerOptions {
@@ -128,6 +134,7 @@ impl Default for ServerOptions {
             handshake_timeout: HANDSHAKE_TIMEOUT,
             max_inflight_per_conn: DEFAULT_MAX_INFLIGHT_PER_CONN,
             registry: None,
+            cluster: None,
         }
     }
 }
@@ -528,7 +535,7 @@ impl Conn {
                 let op = doc.get_str("op").unwrap_or("");
                 match op {
                     "__stats" => {
-                        let reply = stats_json(&doc, coord, registry);
+                        let reply = stats_json(&doc, coord, registry, opts.cluster.as_deref());
                         self.push_line(&reply);
                     }
                     "__ops" => {
@@ -866,7 +873,12 @@ fn error_json(e: &LeapError) -> Json {
 /// projector pool — the projector worker pool is process-wide and thus
 /// shared by every connection and request, so its size and dispatch
 /// count sit next to the queue depth for saturation diagnosis.
-fn stats_json(doc: &Json, coord: &Coordinator, registry: &SessionRegistry) -> Json {
+fn stats_json(
+    doc: &Json,
+    coord: &Coordinator,
+    registry: &SessionRegistry,
+    cluster: Option<&crate::cluster::ShardServer>,
+) -> Json {
     let (pool_workers, pool_regions) = crate::util::pool::pool_stats();
     // the backend a sessionless scan would get, plus the tier actually
     // serving each open session — operators correlating throughput need
@@ -902,6 +914,17 @@ fn stats_json(doc: &Json, coord: &Coordinator, registry: &SessionRegistry) -> Js
         ("default_storage", Json::Str(crate::precision::default_tier().name().to_string())),
         ("session_storages", session_storages),
         ("resident_tile_bytes", Json::Num(crate::vol::resident_tile_bytes() as f64)),
+        // the shard plane, when one is attached: connected worker count
+        // plus the shard channel's own telemetry (shard_fp/shard_bp
+        // rows with per-shard dispatch counts, retries and latency)
+        (
+            "cluster_workers",
+            Json::Num(cluster.map(|c| c.workers()).unwrap_or(0) as f64),
+        ),
+        (
+            "cluster",
+            cluster.map(|c| c.telemetry().to_json()).unwrap_or(Json::Null),
+        ),
     ])
 }
 

@@ -400,8 +400,16 @@ impl SessionRegistry {
 /// delegates to that session's [`NativeExecutor`] — whole batches at a
 /// time, so the stacked batched projection path survives the
 /// indirection.
+///
+/// With a shard channel attached ([`SessionExecutor::with_cluster`])
+/// and workers connected, session forward/back applications scatter
+/// across worker processes through [`crate::cluster::ShardedOp`] —
+/// bit-identical to local execution by the cluster's determinism
+/// contract, so clients cannot observe the difference except in
+/// `__stats`. With no workers (or no channel) everything runs locally.
 pub struct SessionExecutor {
     registry: Arc<SessionRegistry>,
+    cluster: Option<Arc<crate::cluster::ShardServer>>,
 }
 
 impl Default for SessionExecutor {
@@ -422,7 +430,18 @@ impl SessionExecutor {
     /// especially — cannot cross-contaminate sessions through the
     /// process-wide map.
     pub fn with_registry(registry: Arc<SessionRegistry>) -> SessionExecutor {
-        SessionExecutor { registry }
+        SessionExecutor { registry, cluster: None }
+    }
+
+    /// [`SessionExecutor::with_registry`] plus a shard channel: while
+    /// workers are connected to `cluster`, session projections scatter
+    /// across them ([`crate::cluster::ShardedOp`]); with none connected
+    /// the executor behaves exactly like a local one.
+    pub fn with_cluster(
+        registry: Arc<SessionRegistry>,
+        cluster: Arc<crate::cluster::ShardServer>,
+    ) -> SessionExecutor {
+        SessionExecutor { registry, cluster: Some(cluster) }
     }
 
     pub fn registry(&self) -> &SessionRegistry {
@@ -450,6 +469,54 @@ impl SessionExecutor {
         self.registry.resolve_pipeline(*session, *pipeline)
     }
 
+    /// Scatter one session projection across the shard channel's
+    /// workers. `None` when this executor has no cluster, no workers
+    /// are connected, or the op is not a sharded kind (FBP and
+    /// pipeline-grad always run locally) — the caller then takes the
+    /// local path. Results are bit-identical either way.
+    fn execute_clustered(
+        &self,
+        exec: &NativeExecutor,
+        native_op: &Op,
+        inputs: &[&[f32]],
+    ) -> Option<Result<Vec<Vec<f32>>, LeapError>> {
+        let cluster = self.cluster.as_ref()?;
+        if cluster.workers() == 0 || !matches!(native_op, Op::NativeFp | Op::NativeBp) {
+            return None;
+        }
+        let op = crate::cluster::ShardedOp::new(exec.shared_plan(), cluster.clone());
+        Some(Self::run_sharded(&op, native_op, inputs))
+    }
+
+    /// Validate shapes and run one sharded forward/back application.
+    fn run_sharded(
+        op: &crate::cluster::ShardedOp,
+        native_op: &Op,
+        inputs: &[&[f32]],
+    ) -> Result<Vec<Vec<f32>>, LeapError> {
+        let input = *inputs
+            .first()
+            .ok_or_else(|| LeapError::Protocol("projection request missing input tensor".into()))?;
+        let vol_len = op.domain_shape().numel();
+        let sino_len = op.range_shape().numel();
+        let forward = matches!(native_op, Op::NativeFp);
+        let (want, what, out_len) = if forward {
+            (vol_len, "volume", sino_len)
+        } else {
+            (sino_len, "sinogram", vol_len)
+        };
+        if input.len() != want {
+            return Err(LeapError::ShapeMismatch { what, expected: want, got: input.len() });
+        }
+        let mut out = vec![0.0f32; out_len];
+        if forward {
+            op.apply_into(input, &mut out);
+        } else {
+            op.adjoint_into(input, &mut out);
+        }
+        Ok(vec![out])
+    }
+
     /// Evaluate one packed pipeline-grad request (see
     /// [`Op::SessionPipelineGrad`] for the payload layout).
     fn pipeline_grad(
@@ -472,6 +539,9 @@ impl Executor for SessionExecutor {
             return Self::pipeline_grad(&pipe, inputs);
         }
         let (exec, native_op) = self.resolve(op)?;
+        if let Some(result) = self.execute_clustered(&exec, &native_op, inputs) {
+            return result;
+        }
         exec.execute(&native_op, inputs)
     }
 
@@ -506,9 +576,26 @@ impl Executor for SessionExecutor {
             };
         }
         match self.resolve(op) {
-            // one resolve for the whole batch; the session's native
-            // executor runs it as one stacked batched projection
-            Ok((exec, native_op)) => exec.execute_batch(&native_op, items),
+            Ok((exec, native_op)) => {
+                // clustered projections: each item already fans out
+                // across every worker, so the batch runs item by item
+                // (workers going away mid-batch falls back locally
+                // per item — bit-identical either way)
+                let clustered = self.cluster.as_ref().is_some_and(|c| c.workers() > 0)
+                    && matches!(native_op, Op::NativeFp | Op::NativeBp);
+                if clustered {
+                    return items
+                        .iter()
+                        .map(|item| {
+                            self.execute_clustered(&exec, &native_op, item)
+                                .unwrap_or_else(|| exec.execute(&native_op, item))
+                        })
+                        .collect();
+                }
+                // one resolve for the whole batch; the session's native
+                // executor runs it as one stacked batched projection
+                exec.execute_batch(&native_op, items)
+            }
             Err(e) => items.iter().map(|_| Err(e.clone())).collect(),
         }
     }

@@ -19,6 +19,10 @@ pub struct OpStats {
     /// caps) with a typed `BudgetExceeded` — they never reach a worker,
     /// so they are *not* in `count` or the latency aggregates.
     pub shed: u64,
+    /// Re-dispatches of cluster shards (deadline missed, worker lost) —
+    /// each re-scatter counts once; the shard's eventual completion or
+    /// permanent failure lands in `count`/`errors` as usual.
+    pub retries: u64,
     pub total_latency_us: u64,
     pub total_exec_us: u64,
     pub max_latency_us: u64,
@@ -106,6 +110,12 @@ impl Telemetry {
         map.entry(op.to_string()).or_default().shed += 1;
     }
 
+    /// Count one cluster-shard re-dispatch (see [`OpStats::retries`]).
+    pub fn record_retry(&self, op: &str) {
+        let mut map = self.inner.lock().unwrap();
+        map.entry(op.to_string()).or_default().retries += 1;
+    }
+
     pub fn record_batch(&self, op: &str, size: usize) {
         let mut map = self.inner.lock().unwrap();
         let s = map.entry(op.to_string()).or_default();
@@ -128,6 +138,7 @@ impl Telemetry {
                             ("count", Json::Num(s.count as f64)),
                             ("errors", Json::Num(s.errors as f64)),
                             ("shed", Json::Num(s.shed as f64)),
+                            ("retries", Json::Num(s.retries as f64)),
                             ("mean_latency_us", Json::Num(s.mean_latency_us())),
                             ("p99_latency_us", Json::Num(s.p99_latency_us() as f64)),
                             ("max_latency_us", Json::Num(s.max_latency_us as f64)),
@@ -171,6 +182,20 @@ mod tests {
         assert_eq!(back.get("bp").unwrap().get_f64("count"), Some(1.0));
         assert_eq!(back.get("bp").unwrap().get_f64("shed"), Some(1.0));
         assert!(back.get("bp").unwrap().get_f64("p99_latency_us").is_some());
+    }
+
+    #[test]
+    fn shard_retries_count_without_touching_latency_aggregates() {
+        let t = Telemetry::new();
+        t.record_retry("shard_bp");
+        t.record_retry("shard_bp");
+        t.record("shard_bp", 10, 10, true);
+        let s = &t.snapshot()["shard_bp"];
+        assert_eq!(s.retries, 2);
+        assert_eq!(s.count, 1);
+        let j = t.to_json().to_string();
+        let back = crate::util::json::parse(&j).unwrap();
+        assert_eq!(back.get("shard_bp").unwrap().get_f64("retries"), Some(2.0));
     }
 
     #[test]

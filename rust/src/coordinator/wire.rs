@@ -28,6 +28,13 @@
 //! the same port keeps working: the server sniffs the first byte of a
 //! connection (`{` starts JSON, `L` starts a frame) — see
 //! [`super::server`].
+//!
+//! The cluster's shard channel ([`crate::cluster`]) speaks these same
+//! frames with **append-only meta keys** (no new kinds, no layout
+//! change): worker registration/heartbeats are `Hello` frames with
+//! `"role"`/`"hb"` meta, and shard tasks are `Request` frames whose
+//! meta is the `OpenSession` scan meta plus `"shard"`/`"u0"`/`"u1"` —
+//! see `docs/PROTOCOL.md` § "Shard channel".
 
 use std::io::{Read, Write};
 

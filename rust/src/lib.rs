@@ -86,6 +86,14 @@
 //!   request router, dynamic batcher, worker pool, memory-budget
 //!   admission control, protocol-v2 sessions and the dual-protocol TCP
 //!   server (binary frames + legacy JSON; see `docs/PROTOCOL.md`).
+//! * [`cluster`] — the multi-process sharded execution plane: `leap
+//!   worker` processes dial the coordinator's shard channel
+//!   ([`cluster::ShardServer`]) and [`cluster::ShardedOp`] scatters one
+//!   operator application across them (forward: scatter views, concat;
+//!   back: scatter output units, deterministic tree-reduce of partial
+//!   volumes) with heartbeats, per-shard deadlines and bounded
+//!   re-scatter — bit-identical to in-process execution at every
+//!   worker count, including 0 (see `docs/CLUSTER.md`).
 //! * [`util`] — self-contained substrates built for this repo: JSON,
 //!   deterministic PRNG, scoped thread-pool parallel-for, a bench harness
 //!   and a tiny CLI parser (no external deps beyond `xla`/`anyhow`).
@@ -139,6 +147,7 @@ pub mod metrics;
 pub mod io;
 pub mod runtime;
 pub mod coordinator;
+pub mod cluster;
 pub mod bench_harness;
 
 pub use api::{LeapError, Scan, ScanBuilder, Solver};

@@ -8,7 +8,10 @@
 //!   recon        iterative reconstruction (sirt|os-sart|cgls|mlem|fista-tv)
 //!   dc-refine    limited-angle data-consistency pipeline on a luggage bag
 //!   serve        start the batching projection server (PJRT artifacts +
-//!                native fallback)
+//!                native fallback); --cluster-addr opens the shard
+//!                channel worker processes dial into
+//!   worker       join a coordinator's shard channel and serve sharded
+//!                forward/back ranges (leap::cluster)
 //!   selftest     adjoint identities + artifact engine roundtrip
 //!   info         list compiled artifact entries
 
@@ -38,6 +41,7 @@ fn main() {
         "recon" => cmd_recon(&args),
         "dc-refine" => cmd_dc_refine(&args),
         "serve" => cmd_serve(&args),
+        "worker" => cmd_worker(&args),
         "selftest" => cmd_selftest(&args),
         "info" => cmd_info(&args),
         "" | "help" => {
@@ -58,7 +62,7 @@ fn main() {
 fn print_help() {
     println!(
         "leap — differentiable X-ray CT projectors (LEAP reproduction)\n\
-         usage: leap <phantom|project|backproject|fbp|recon|dc-refine|serve|selftest|info> [--opt value ...]"
+         usage: leap <phantom|project|backproject|fbp|recon|dc-refine|serve|worker|selftest|info> [--opt value ...]"
     );
 }
 
@@ -366,7 +370,10 @@ fn cmd_dc_refine(args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn build_router(args: &Args) -> Result<(Arc<Router>, String)> {
+fn build_router(
+    args: &Args,
+    cluster: Option<Arc<leap::cluster::ShardServer>>,
+) -> Result<(Arc<Router>, String)> {
     let mut backends: Vec<Arc<dyn Executor>> = Vec::new();
     let mut desc = String::new();
     let artifacts = args.str_or("artifacts", "artifacts");
@@ -393,13 +400,27 @@ fn build_router(args: &Args) -> Result<(Arc<Router>, String)> {
         cfg.volume,
         model,
     ))));
-    // protocol-v2 sessions: any scan config registered at runtime
-    backends.push(Arc::new(SessionExecutor::new()));
+    // protocol-v2 sessions: any scan config registered at runtime;
+    // with a shard channel attached, session projections scatter
+    // across connected worker processes (bit-identical to local)
+    backends.push(match cluster {
+        Some(c) => Arc::new(SessionExecutor::with_cluster(
+            leap::coordinator::SessionRegistry::global_arc(),
+            c,
+        )),
+        None => Arc::new(SessionExecutor::new()),
+    });
     Ok((Arc::new(Router::new(backends)), desc))
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
-    let (router, desc) = build_router(args)?;
+    // optional shard channel: worker processes (`leap worker --connect
+    // <addr>`) dial in and session projections scatter across them
+    let cluster = match args.str_opt("cluster-addr") {
+        Some(addr) => Some(Arc::new(leap::cluster::ShardServer::start(addr)?)),
+        None => None,
+    };
+    let (router, desc) = build_router(args, cluster.clone())?;
     println!("{desc}");
     let mut coord = Coordinator::new(
         router,
@@ -421,10 +442,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let addr = args.str_or("addr", "127.0.0.1:7462");
     let opts = ServerOptions {
         max_inflight_per_conn: args.usize_or("max-inflight", DEFAULT_MAX_INFLIGHT_PER_CONN),
+        cluster: cluster.clone(),
         ..ServerOptions::default()
     };
     let server = Server::start_with(&addr, coord.clone(), opts)?;
     println!("leap server listening on {} (protocol v2 binary + legacy v1 json)", server.addr);
+    if let Some(c) = &cluster {
+        println!("shard channel on {} — join with: leap worker --connect {}", c.addr, c.addr);
+    }
     println!(
         "admission: max-pending {} / max-inflight-per-conn {}",
         if max_pending > 0 { max_pending.to_string() } else { "unbounded".into() },
@@ -436,6 +461,22 @@ fn cmd_serve(args: &Args) -> Result<()> {
         let snap = coord.telemetry().to_json();
         println!("telemetry: {snap}");
     }
+}
+
+/// Join a coordinator's shard channel and serve sharded projection
+/// ranges until the coordinator closes the channel (clean exit) or the
+/// connection errors.
+fn cmd_worker(args: &Args) -> Result<()> {
+    let connect = args.str_or("connect", "127.0.0.1:7463");
+    let opts = leap::cluster::WorkerOptions {
+        heartbeat_period: std::time::Duration::from_millis(args.u64_or("heartbeat-ms", 2000)),
+        threads: args.str_opt("threads").and_then(|t| t.parse().ok()),
+        connect_retries: args.usize_or("connect-retries", 50) as u32,
+    };
+    println!("leap worker: joining shard channel at {connect}");
+    leap::cluster::run_worker_with(&connect, opts)?;
+    println!("leap worker: shard channel closed, exiting");
+    Ok(())
 }
 
 fn cmd_selftest(args: &Args) -> Result<()> {

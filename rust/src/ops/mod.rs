@@ -623,6 +623,12 @@ impl<O: LinearOp> LinearOp for Normal<O> {
 /// shards yield the queue `S − 1` times, letting a multiplexed serving
 /// plane interleave other requests between shards and cutting tail
 /// latency under concurrency (see `coordinator`).
+///
+/// [`crate::cluster::ShardedOp`] is this operator's multi-process
+/// sibling: the same unit decomposition and range kernels, but shards
+/// scatter to worker *processes* over the shard channel (back shards
+/// tree-reduced in a fixed order) instead of running sequentially in
+/// one address space.
 pub struct ViewSharded {
     plan: Arc<ProjectionPlan>,
     shards: usize,

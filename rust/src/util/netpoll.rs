@@ -322,4 +322,68 @@ mod tests {
         t.join().unwrap();
         waker.drain();
     }
+
+    #[test]
+    fn wake_burst_coalesces_into_one_drain() {
+        // the shard channel wakes the event loop once per submitted task;
+        // a burst of submissions must cost one drain, not one syscall
+        // round-trip per wake, and must not leave a stale readable fd
+        let waker = Waker::new().unwrap();
+        for _ in 0..16 {
+            waker.wake();
+        }
+        let mut fds = [PollFd::new(waker.fd(), POLLIN)];
+        let mut ready = false;
+        for _ in 0..100 {
+            if poll_fds(&mut fds, Duration::from_millis(20)) > 0 && fds[0].readable() {
+                ready = true;
+                break;
+            }
+        }
+        assert!(ready, "a burst-woken waker must poll readable");
+        waker.drain();
+        let mut buf = [0u8; 8];
+        assert!(
+            waker.sock.recv(&mut buf).is_err(),
+            "one drain must consume the whole burst"
+        );
+        // the waker still works after the burst: a fresh wake re-latches
+        waker.wake();
+        let mut ready_again = false;
+        for _ in 0..100 {
+            if poll_fds(&mut fds, Duration::from_millis(20)) > 0 && fds[0].readable() {
+                ready_again = true;
+                break;
+            }
+        }
+        assert!(ready_again, "a drained waker must latch again on the next wake");
+        waker.drain();
+    }
+
+    #[test]
+    fn dead_peer_degrades_to_the_safety_net_tick() {
+        // if the waker's loopback peer somehow dies (the documented
+        // degraded mode), wake() must stay non-blocking and never panic:
+        // the owning loop falls back to its idle-tick timeout. Re-point
+        // the socket at a freshly-freed port to simulate the dead peer.
+        let waker = Waker::new().unwrap();
+        let dead_addr = {
+            let victim = std::net::UdpSocket::bind("127.0.0.1:0").unwrap();
+            victim.local_addr().unwrap()
+        }; // victim dropped: nothing listens there any more
+        waker.sock.connect(dead_addr).unwrap();
+        let t0 = std::time::Instant::now();
+        let mut fds = [PollFd::new(waker.fd(), POLLIN)];
+        for _ in 0..8 {
+            waker.wake(); // may land ICMP-refused errors on the socket; must not panic
+            poll_fds(&mut fds, Duration::from_millis(25));
+            if fds[0].readable() {
+                waker.drain(); // drain must also swallow queued socket errors
+            }
+        }
+        assert!(
+            t0.elapsed() < Duration::from_secs(2),
+            "a degraded waker must cost at most the safety-net tick per iteration"
+        );
+    }
 }

@@ -16,24 +16,29 @@
 use leap::backend::BackendKind;
 use leap::geometry::config::ScanConfig;
 use leap::geometry::{
-    ConeBeam, DetectorShape, FanBeam, Geometry, ModularBeam, ParallelBeam, VolumeGeometry,
+    ConeBeam, DetectorShape, FanBeam, Geometry, HelicalCone, ModularBeam, ParallelBeam,
+    VolumeGeometry,
 };
 use leap::projector::{Model, Projector};
 use leap::util::{dot_f64, rng::Rng};
 use leap::{LeapError, ScanBuilder};
 
 /// One geometry per family (flat and curved cone detectors both count:
-/// they take different footprint/ray code paths).
+/// they take different footprint/ray code paths), plus a helical
+/// trajectory served through its modular-beam export — helical is a
+/// first-class planned geometry and sweeps every backend property.
 fn all_geometries() -> Vec<Geometry> {
     let cone = ConeBeam::standard(6, 10, 14, 1.6, 1.6, 60.0, 120.0);
     let mut curved = cone.clone();
     curved.shape = DetectorShape::Curved;
+    let helix = HelicalCone::standard(1.5, 8, 6, 10, 1.5, 1.5, 50.0, 100.0, 8.0);
     vec![
         Geometry::Parallel(ParallelBeam::standard_3d(7, 10, 14, 1.3, 1.3)),
         Geometry::Fan(FanBeam::standard(6, 18, 1.4, 60.0, 120.0)),
         Geometry::Cone(cone.clone()),
         Geometry::Cone(curved),
         Geometry::Modular(ModularBeam::from_cone(&cone)),
+        Geometry::Modular(helix.to_modular()),
     ]
 }
 

@@ -1,0 +1,265 @@
+//! Integration/property tests for `leap::cluster` — the multi-process
+//! sharded execution plane (docs/CLUSTER.md).
+//!
+//! The headline contract: a [`ShardedOp`] application is
+//! **bit-identical to in-process execution at every worker count**,
+//! including zero (the pure in-process fallback) and across worker
+//! deaths mid-request. Workers here are hosted on threads inside the
+//! test process — `run_worker_with` only needs a socket address, so a
+//! thread is behaviourally the same as the `leap worker` process the
+//! CLI spawns (the process form is exercised by
+//! `examples/serve_client.rs --workers N` in CI) — plus hand-rolled
+//! "fake" workers that speak just enough of the shard protocol to
+//! misbehave deterministically: vanish with a shard in flight, reply
+//! with Error frames, or register and then go silent.
+
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use leap::cluster::{
+    run_worker_with, ShardPlanner, ShardServer, ShardServerOptions, ShardedOp, WorkerOptions,
+};
+use leap::coordinator::wire::{read_frame, write_frame, write_frame_parts, Frame, FrameKind};
+use leap::geometry::{ConeBeam, Geometry, VolumeGeometry};
+use leap::projector::{Model, Projector};
+use leap::util::json::Json;
+use leap::util::rng::Rng;
+use leap::LeapError;
+
+/// Short timeouts so the failure paths run in milliseconds, but with
+/// enough slack that a loaded CI box never trips them spuriously.
+fn fast_opts() -> ShardServerOptions {
+    ShardServerOptions {
+        heartbeat_timeout: Duration::from_millis(800),
+        task_deadline: Duration::from_secs(10),
+        max_retries: 2,
+    }
+}
+
+/// Host `n` real workers on threads, dialing `addr`. They exit cleanly
+/// when the shard server drops (EOF on the channel).
+fn spawn_workers(addr: &str, n: usize) -> Vec<std::thread::JoinHandle<()>> {
+    (0..n)
+        .map(|_| {
+            let addr = addr.to_string();
+            std::thread::spawn(move || {
+                let opts = WorkerOptions {
+                    heartbeat_period: Duration::from_millis(200),
+                    threads: None,
+                    connect_retries: 50,
+                };
+                let _ = run_worker_with(&addr, opts);
+            })
+        })
+        .collect()
+}
+
+fn wait_for_workers(server: &ShardServer, n: usize) {
+    let t0 = Instant::now();
+    while server.workers() < n {
+        assert!(t0.elapsed() < Duration::from_secs(10), "workers failed to register in time");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+}
+
+fn test_plan() -> Arc<leap::projector::ProjectionPlan> {
+    let vg = VolumeGeometry::cube(10, 1.0);
+    let g = Geometry::Cone(ConeBeam::standard(6, 8, 10, 1.5, 1.5, 60.0, 120.0));
+    Arc::new(Projector::new(g, vg, Model::SF).with_threads(2).plan())
+}
+
+#[test]
+fn shard_plan_depends_only_on_the_unit_count() {
+    for units in [0, 1, 2, 7, 8, 9, 100] {
+        let ranges = ShardPlanner::shard_ranges(units);
+        // pure function: calling again gives the same plan
+        assert_eq!(ranges, ShardPlanner::shard_ranges(units));
+        assert!(ranges.len() <= ShardPlanner::TARGET_SHARDS);
+        // contiguous exact cover of 0..units
+        let mut cursor = 0;
+        for &(u0, u1) in &ranges {
+            assert_eq!(u0, cursor);
+            assert!(u1 >= u0);
+            cursor = u1;
+        }
+        assert_eq!(cursor, units);
+    }
+}
+
+#[test]
+fn sharded_forward_and_back_are_bit_identical_at_every_worker_count() {
+    let plan = test_plan();
+    let mut rng = Rng::new(901);
+    let mut x = plan.new_vol();
+    rng.fill_uniform(&mut x.data, 0.0, 1.0);
+    let mut y = plan.new_sino();
+    rng.fill_uniform(&mut y.data, -1.0, 1.0);
+    let fwd_ref = plan.forward(&x);
+    let back_ref = plan.back(&y);
+    for count in [0usize, 1, 2, 4] {
+        let server = Arc::new(ShardServer::start_with("127.0.0.1:0", fast_opts()).unwrap());
+        let handles = spawn_workers(&server.addr.to_string(), count);
+        wait_for_workers(&server, count);
+        let op = ShardedOp::new(plan.clone(), server.clone());
+        let fwd = op.forward(&x);
+        assert_eq!(
+            fwd.data, fwd_ref.data,
+            "{count} workers: sharded forward differs from in-process"
+        );
+        let back = op.back(&y);
+        assert_eq!(
+            back.data, back_ref.data,
+            "{count} workers: sharded back differs from in-process"
+        );
+        drop(op);
+        drop(server); // workers see EOF and exit
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+}
+
+#[test]
+fn worker_death_mid_shard_re_scatters_to_a_survivor() {
+    let plan = test_plan();
+    let mut rng = Rng::new(902);
+    let mut x = plan.new_vol();
+    rng.fill_uniform(&mut x.data, 0.0, 1.0);
+    let reference = plan.forward(&x);
+
+    let server = Arc::new(ShardServer::start_with("127.0.0.1:0", fast_opts()).unwrap());
+    let addr = server.addr.to_string();
+    let survivor = spawn_workers(&addr, 1);
+    wait_for_workers(&server, 1);
+
+    // a saboteur that registers, accepts exactly one shard, and
+    // vanishes with it in flight — the coordinator must notice the lost
+    // connection and re-scatter that shard to the survivor
+    let saboteur = {
+        let addr = addr.clone();
+        std::thread::spawn(move || {
+            let mut sock = TcpStream::connect(&addr).unwrap();
+            let hello = Json::obj(vec![("role", Json::Str("worker".into()))]);
+            write_frame_parts(&mut sock, FrameKind::Hello, 0, &hello, &[]).unwrap();
+            let reply = read_frame(&mut sock).unwrap().expect("hello reply");
+            assert_eq!(reply.kind, FrameKind::Hello);
+            let task = read_frame(&mut sock).unwrap().expect("a dispatched shard");
+            assert_eq!(task.kind, FrameKind::Request);
+            // drop the socket with the shard unanswered
+        })
+    };
+    wait_for_workers(&server, 2);
+
+    let op = ShardedOp::new(plan.clone(), server.clone());
+    let fwd = op.forward(&x);
+    assert_eq!(fwd.data, reference.data, "a mid-shard worker death must not change the bits");
+    saboteur.join().unwrap();
+
+    // the re-scatter is visible in the shard channel's telemetry
+    let stats = server.telemetry().to_json();
+    let retries = stats
+        .get("shard_fp")
+        .and_then(|row| row.get_f64("retries"))
+        .expect("shard_fp telemetry row with a retries column");
+    assert!(retries >= 1.0, "the lost shard must have been re-dispatched (got {retries})");
+
+    drop(op);
+    drop(server);
+    for h in survivor {
+        h.join().unwrap();
+    }
+}
+
+#[test]
+fn exhausted_retry_budget_surfaces_a_typed_remote_error() {
+    // transport-level: a worker that answers every shard with an Error
+    // frame, against a zero-retry budget — the submitter must get the
+    // typed LeapError::Remote back, not a hang or a panic
+    let opts = ShardServerOptions { max_retries: 0, ..fast_opts() };
+    let server = Arc::new(ShardServer::start_with("127.0.0.1:0", opts).unwrap());
+    let addr = server.addr.to_string();
+    let refuser = std::thread::spawn(move || {
+        let mut sock = TcpStream::connect(&addr).unwrap();
+        let hello = Json::obj(vec![("role", Json::Str("worker".into()))]);
+        write_frame_parts(&mut sock, FrameKind::Hello, 0, &hello, &[]).unwrap();
+        let _ = read_frame(&mut sock).unwrap().expect("hello reply");
+        // keep refusing until the server closes the channel
+        while let Ok(Some(task)) = read_frame(&mut sock) {
+            if task.kind != FrameKind::Request {
+                continue;
+            }
+            let e = LeapError::Backend("saboteur declines".into());
+            if write_frame(&mut sock, &Frame::error(task.id, &e)).is_err() {
+                break;
+            }
+        }
+    });
+    wait_for_workers(&server, 1);
+
+    let meta = Json::obj(vec![("shard", Json::Str("fp".into()))]);
+    let pending = server.submit("shard_fp", meta, Arc::new(vec![0.0f32; 4]), 4);
+    let err = pending.wait().expect_err("a refused shard with no retries must fail");
+    match err {
+        LeapError::Remote { code, ref message } => {
+            assert_eq!(code, leap::api::codes::BACKEND, "the worker's error code must survive");
+            assert!(message.contains("saboteur declines"), "unexpected message: {message}");
+        }
+        other => panic!("expected LeapError::Remote, got {other:?}"),
+    }
+    drop(server);
+    refuser.join().unwrap();
+}
+
+#[test]
+fn heartbeats_keep_idle_workers_alive_and_silence_drops_them() {
+    let opts = ShardServerOptions {
+        heartbeat_timeout: Duration::from_millis(600),
+        ..fast_opts()
+    };
+    let server = Arc::new(ShardServer::start_with("127.0.0.1:0", opts).unwrap());
+    let addr = server.addr.to_string();
+
+    // a real worker heartbeating well under the timeout stays connected
+    // across several timeout windows of pure idleness
+    let live = spawn_workers(&addr, 1);
+    wait_for_workers(&server, 1);
+
+    // a mute that registers and then never sends another byte
+    let mute = {
+        let addr = addr.clone();
+        std::thread::spawn(move || {
+            let mut sock = TcpStream::connect(&addr).unwrap();
+            let hello = Json::obj(vec![("role", Json::Str("worker".into()))]);
+            write_frame_parts(&mut sock, FrameKind::Hello, 0, &hello, &[]).unwrap();
+            let _ = read_frame(&mut sock).unwrap();
+            // hold the socket open, silently, until the server drops us
+            let mut buf = [0u8; 64];
+            use std::io::Read as _;
+            while let Ok(n) = sock.read(&mut buf) {
+                if n == 0 {
+                    break;
+                }
+            }
+        })
+    };
+    wait_for_workers(&server, 2);
+
+    // past the silence window: the mute is gone, the heartbeater is not
+    let t0 = Instant::now();
+    while server.workers() != 1 {
+        assert!(
+            t0.elapsed() < Duration::from_secs(10),
+            "a silent worker must be dropped after the heartbeat timeout"
+        );
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    std::thread::sleep(Duration::from_millis(900));
+    assert_eq!(server.workers(), 1, "a heartbeating idle worker must never be dropped");
+
+    drop(server);
+    mute.join().unwrap();
+    for h in live {
+        h.join().unwrap();
+    }
+}

@@ -249,3 +249,48 @@ fn range_executors_are_thread_count_invariant() {
         assert_eq!(va.data, vb.data, "{}: back range thread variance", p.geom.kind());
     }
 }
+
+#[test]
+fn tree_reduced_partial_volumes_reproduce_the_full_back_projection() {
+    // the contract the cluster reducer (`leap::cluster::reduce`) relies
+    // on: each shard backprojects its owned unit range into a fresh
+    // zeroed volume (the shape workers return over the shard channel),
+    // and combining those full-size partials with the fixed-order tree
+    // reduction reproduces the unsharded executor bit for bit — for
+    // arbitrary uneven partitions, including empty and single-unit
+    // ranges. Ownership is disjoint, so every voxel sums one owned
+    // value with exact zeros: no rounding at any tree shape.
+    let mut rng = Rng::new(816);
+    for geom in all_geometries() {
+        let vg = vg_for(&geom);
+        for kind in EXECUTABLE {
+            let p = Projector::new(geom.clone(), vg.clone(), Model::SF)
+                .with_threads(2)
+                .with_backend(kind);
+            let plan = p.plan();
+            let mut y = p.new_sino();
+            rng.fill_uniform(&mut y.data, 0.0, 1.0);
+            let reference = plan.back(&y);
+            let units = plan.back_shard_units();
+            for parts in partitions(units) {
+                let partials: Vec<Vec<f32>> = parts
+                    .iter()
+                    .map(|&(u0, u1)| {
+                        let mut partial = plan.new_vol();
+                        plan.back_range_into_with_threads(&y, &mut partial, 2, u0, u1);
+                        partial.data
+                    })
+                    .collect();
+                let reduced = leap::cluster::reduce::tree_reduce(partials)
+                    .expect("non-empty partition");
+                assert_eq!(
+                    reduced,
+                    reference.data,
+                    "{}/{}: tree-reduced partition {parts:?} differs from full back",
+                    kind.name(),
+                    p.geom.kind()
+                );
+            }
+        }
+    }
+}
