@@ -14,9 +14,14 @@
 //! * Worker → coordinator `Hello` with meta `{"role": "worker"}`;
 //!   coordinator replies `Hello` with `{"worker_id": n}`.
 //! * Heartbeats are `Hello` frames with `{"role": "worker", "hb": 1}`,
-//!   sent whenever the worker has been idle for its heartbeat period.
-//!   A worker silent past [`ShardServerOptions::heartbeat_timeout`] is
-//!   dropped and its in-flight shard re-scattered.
+//!   sent by a dedicated worker-side timer thread every heartbeat
+//!   period — idle or mid-compute alike. A worker silent past
+//!   [`ShardServerOptions::heartbeat_timeout`] is dropped and its
+//!   in-flight shard re-scattered; as a belt-and-braces guard against
+//!   single-threaded workers (heartbeat silence while computing), a
+//!   worker with a shard in flight is exempt from the silence check —
+//!   the per-shard deadline already bounds how long a busy worker can
+//!   hold a shard.
 //! * Shard tasks are `Request` frames whose meta carries the full scan
 //!   config (the OpenSession meta keys) **plus** `"shard"` ("fp"|"bp")
 //!   and the unit range `"u0"`/`"u1"` — see `docs/PROTOCOL.md`. Because
@@ -32,12 +37,18 @@
 //! One shard is in flight per worker at a time. A shard that misses its
 //! deadline, or whose worker disconnects or goes heartbeat-silent, is
 //! requeued with a **fresh frame id** (so a late reply to the old id is
-//! recognized as stale and dropped) and re-scattered to the next idle
-//! worker — up to [`ShardServerOptions::max_retries`] times, after
-//! which the submitter gets the error and decides (the operator layer
-//! falls back to in-process execution, so requests still complete).
-//! Every retry is counted in the server's own [`Telemetry`] and served
-//! as the `cluster` rows of `__stats`.
+//! recognized as stale and dropped) and re-scattered to an idle worker
+//! — preferring one **other than the worker it just failed on** (that
+//! one may still be serially chewing the stale shard) — up to
+//! [`ShardServerOptions::max_retries`] times, after which the submitter
+//! gets the error and decides (the operator layer falls back to
+//! in-process execution, so requests still complete). If the last
+//! registered worker disappears, every queued shard is failed
+//! immediately with [`LeapError::Remote`] rather than left waiting for
+//! a worker that may never come: submitters must never block forever,
+//! and the operator layer's fallback keeps the request completing
+//! in-process. Every retry is counted in the server's own [`Telemetry`]
+//! and served as the `cluster` rows of `__stats`.
 
 use std::collections::VecDeque;
 use std::io::{Read, Write};
@@ -93,6 +104,10 @@ struct Task {
     expected_len: usize,
     retries: u32,
     submitted: Instant,
+    /// Worker id of the last failed dispatch — a retry prefers any
+    /// other idle worker (the failed one may still be serially
+    /// computing the stale shard even though its slot looks free).
+    last_worker: Option<u64>,
     reply: mpsc::Sender<Result<Vec<f32>, LeapError>>,
 }
 
@@ -191,6 +206,7 @@ impl ShardServer {
             expected_len,
             retries: 0,
             submitted: Instant::now(),
+            last_worker: None,
             reply: tx,
         });
         self.shared.waker.wake();
@@ -230,8 +246,11 @@ fn elapsed_us(t: Instant) -> u64 {
 }
 
 /// Requeue `task` with a fresh dispatch slot, or surface `err` to the
-/// submitter once the retry budget is spent.
-fn retry_or_fail(shared: &Shared, mut task: Task, err: LeapError) {
+/// submitter once the retry budget is spent. `from_worker` is the
+/// worker the dispatch just failed on — the retry will prefer a
+/// different idle worker.
+fn retry_or_fail(shared: &Shared, mut task: Task, from_worker: u64, err: LeapError) {
+    task.last_worker = Some(from_worker);
     if task.retries < shared.opts.max_retries {
         task.retries += 1;
         shared.telemetry.record_retry(task.label);
@@ -347,7 +366,7 @@ fn handle_frame(shared: &Shared, w: &mut WorkerConn, frame: Frame) {
                         task.expected_len
                     ),
                 };
-                retry_or_fail(shared, task, err);
+                retry_or_fail(shared, task, w.id, err);
             }
         }
         FrameKind::Error => {
@@ -359,7 +378,7 @@ fn handle_frame(shared: &Shared, w: &mut WorkerConn, frame: Frame) {
             let e = frame.to_error();
             let remote =
                 LeapError::Remote { code: e.code(), message: format!("worker {}: {e}", w.id) };
-            retry_or_fail(shared, task, remote);
+            retry_or_fail(shared, task, w.id, remote);
         }
         // anything else on the shard channel is a protocol violation
         _ => w.failed = true,
@@ -453,13 +472,22 @@ fn event_loop(listener: TcpListener, shared: Arc<Shared>) {
                 retry_or_fail(
                     &shared,
                     task,
+                    w.id,
                     LeapError::Remote {
                         code: crate::api::codes::IO,
                         message: format!("worker {} missed the shard deadline", w.id),
                     },
                 );
             }
-            if w.registered && now.duration_since(w.last_seen) > shared.opts.heartbeat_timeout {
+            // heartbeat silence drops a worker — but never one with a
+            // shard in flight: a single-threaded worker sends nothing
+            // while computing, and the per-shard deadline above already
+            // bounds how long a busy (or dead-while-busy) worker can
+            // hold its shard
+            if w.registered
+                && w.inflight.is_none()
+                && now.duration_since(w.last_seen) > shared.opts.heartbeat_timeout
+            {
                 w.failed = true;
             }
         }
@@ -475,6 +503,7 @@ fn event_loop(listener: TcpListener, shared: Arc<Shared>) {
                 retry_or_fail(
                     &shared,
                     task,
+                    w.id,
                     LeapError::Remote {
                         code: crate::api::codes::IO,
                         message: format!("worker {} connection lost", w.id),
@@ -483,14 +512,39 @@ fn event_loop(listener: TcpListener, shared: Arc<Shared>) {
             }
             false
         });
-        // dispatch queued shards to idle registered workers
+        // with no registered workers left, queued shards can never be
+        // dispatched and their retry budget never advances — fail them
+        // now with a typed Remote error so submitters take the
+        // in-process fallback instead of blocking forever (anything
+        // submitted after a worker registers queues normally)
+        if !workers.iter().any(|w| w.registered) {
+            let drained: Vec<Task> = shared.queue.lock().unwrap().drain(..).collect();
+            for task in drained {
+                shared.telemetry.record(task.label, elapsed_us(task.submitted), 0, false);
+                let _ = task.reply.send(Err(LeapError::Remote {
+                    code: crate::api::codes::IO,
+                    message: "no workers connected to the shard channel".into(),
+                }));
+            }
+        }
+        // dispatch queued shards to idle registered workers; a retried
+        // shard prefers a worker other than the one it just failed on
+        // (that one may still be serially computing the stale shard
+        // even though its in-flight slot was cleared)
         {
             let mut queue = shared.queue.lock().unwrap();
-            for w in workers.iter_mut() {
-                if !w.registered || w.inflight.is_some() || w.failed {
-                    continue;
-                }
+            let mut idle: Vec<usize> = (0..workers.len())
+                .filter(|&i| {
+                    workers[i].registered && workers[i].inflight.is_none() && !workers[i].failed
+                })
+                .collect();
+            while !idle.is_empty() {
                 let Some(task) = queue.pop_front() else { break };
+                let pick = idle
+                    .iter()
+                    .position(|&i| task.last_worker != Some(workers[i].id))
+                    .unwrap_or(0);
+                let w = &mut workers[idle.swap_remove(pick)];
                 let id = next_task_id;
                 next_task_id += 1;
                 match encode_frame_parts(FrameKind::Request, id, &task.meta, &task.payload) {

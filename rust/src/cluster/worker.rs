@@ -3,11 +3,14 @@
 //! A worker process dials the coordinator's shard channel
 //! ([`super::ShardServer`]), registers with a `Hello` frame
 //! (`{"role": "worker"}`), then serves shard tasks until the
-//! coordinator closes the connection. The loop is paced by
-//! [`crate::util::netpoll::poll_fds`] on the single blocking socket:
-//! readable ⇒ read the next task frame; poll timeout ⇒ the worker has
-//! been idle a heartbeat period, so it sends a heartbeat `Hello`
-//! (`{"hb": 1}`) that keeps the coordinator from presuming it dead.
+//! coordinator closes the connection. The serve loop blocks on the
+//! socket reading task frames; liveness is proven by a **dedicated
+//! heartbeat thread** that sends a heartbeat `Hello` (`{"hb": 1}`)
+//! every heartbeat period — idle or mid-compute alike, so a shard
+//! whose compute runs past the coordinator's heartbeat timeout never
+//! gets its (perfectly healthy) worker presumed dead. Replies and
+//! heartbeats go through one mutex-guarded duplicate of the socket so
+//! frames never interleave mid-frame.
 //!
 //! ## Tasks are self-describing — the shard/replica handshake
 //!
@@ -33,6 +36,8 @@
 use std::collections::HashMap;
 use std::io::Write as _;
 use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 use crate::api::LeapError;
@@ -40,16 +45,17 @@ use crate::array::{Sino, Vol3};
 use crate::coordinator::wire::{read_frame, write_frame, write_frame_parts, Frame, FrameKind};
 use crate::coordinator::SessionRegistry;
 use crate::util::json::Json;
-use crate::util::netpoll::{poll_fds, raw_fd, PollFd, POLLIN};
 
-/// Default idle interval between worker heartbeats. Must be well under
-/// the coordinator's [`super::transport::HEARTBEAT_TIMEOUT`].
+/// Default interval between worker heartbeats. Must be well under the
+/// coordinator's [`super::transport::HEARTBEAT_TIMEOUT`].
 pub const HEARTBEAT_PERIOD: Duration = Duration::from_secs(2);
 
 /// Tuning knobs for [`run_worker_with`].
 #[derive(Clone, Debug)]
 pub struct WorkerOptions {
-    /// Send a heartbeat after this much idle time.
+    /// Heartbeat send interval. A dedicated timer thread sends on this
+    /// cadence whether the worker is idle or mid-compute, so long
+    /// shards never get the worker presumed dead.
     pub heartbeat_period: Duration,
     /// Override the execution thread count (`None` = the plan's own).
     /// Safe at any value: results are bit-identical across thread
@@ -88,47 +94,99 @@ pub fn run_worker_with(connect: &str, opts: WorkerOptions) -> Result<(), LeapErr
             reply.kind
         )));
     }
-    let heartbeat =
-        Json::obj(vec![("role", Json::Str("worker".into())), ("hb", Json::Num(1.0))]);
+    // reads stay on `sock`; every write (reply or heartbeat) goes
+    // through one mutex-guarded duplicate so frames never interleave
+    let wsock = Arc::new(Mutex::new(
+        sock.try_clone().map_err(|e| LeapError::Io(e.to_string()))?,
+    ));
+    let stop = Arc::new(AtomicBool::new(false));
+    let hb = spawn_heartbeat(wsock.clone(), stop.clone(), opts.heartbeat_period);
+    let result = serve_loop(&mut sock, &wsock, opts.threads);
+    stop.store(true, Ordering::SeqCst);
+    let _ = hb.join();
+    result
+}
 
+/// The heartbeat timer thread: proves liveness every `period` whether
+/// the serve loop is idle or deep in a shard compute. Exits when `stop`
+/// is set or the channel dies (the serve loop notices the same death on
+/// its next read).
+fn spawn_heartbeat(
+    wsock: Arc<Mutex<TcpStream>>,
+    stop: Arc<AtomicBool>,
+    period: Duration,
+) -> std::thread::JoinHandle<()> {
+    std::thread::spawn(move || {
+        let heartbeat =
+            Json::obj(vec![("role", Json::Str("worker".into())), ("hb", Json::Num(1.0))]);
+        // sleep in short slices so a stop request is noticed promptly
+        let slice = Duration::from_millis(25).min(period.max(Duration::from_millis(1)));
+        let mut slept = Duration::ZERO;
+        loop {
+            if stop.load(Ordering::SeqCst) {
+                return;
+            }
+            std::thread::sleep(slice);
+            slept += slice;
+            if slept < period {
+                continue;
+            }
+            slept = Duration::ZERO;
+            let Ok(mut s) = wsock.lock() else { return };
+            if write_frame_parts(&mut *s, FrameKind::Hello, 0, &heartbeat, &[]).is_err()
+                || s.flush().is_err()
+            {
+                return; // channel gone: nothing left to keep alive
+            }
+        }
+    })
+}
+
+/// Serve task frames from `sock` until the coordinator closes the
+/// channel; replies go through the shared write socket.
+fn serve_loop(
+    sock: &mut TcpStream,
+    wsock: &Mutex<TcpStream>,
+    threads_override: Option<usize>,
+) -> Result<(), LeapError> {
     // local sessions: one pinned plan per distinct scan config seen in
     // task frames (the shard/replica handshake — see module docs)
     let registry = SessionRegistry::new();
     let mut plans: HashMap<String, u64> = HashMap::new();
-    let mut fds = [PollFd::new(raw_fd(&sock), POLLIN)];
     loop {
-        fds[0] = PollFd::new(raw_fd(&sock), POLLIN);
-        poll_fds(&mut fds, opts.heartbeat_period);
-        if !fds[0].readable() {
-            // idle a full heartbeat period: prove liveness
-            write_frame_parts(&mut sock, FrameKind::Hello, 0, &heartbeat, &[])?;
-            continue;
-        }
-        let Some(frame) = read_frame(&mut sock)? else {
+        let Some(frame) = read_frame(sock)? else {
             return Ok(()); // coordinator closed the channel: clean exit
         };
         match frame.kind {
             FrameKind::Request => {
-                match serve_task(&registry, &mut plans, &frame, opts.threads) {
+                let served = serve_task(&registry, &mut plans, &frame, threads_override);
+                let mut w = wsock.lock().map_err(|_| {
+                    LeapError::Io("shard channel write half poisoned".into())
+                })?;
+                match served {
                     Ok(payload) => {
                         write_frame_parts(
-                            &mut sock,
+                            &mut *w,
                             FrameKind::Response,
                             frame.id,
                             &Json::Null,
                             &payload,
                         )?;
                     }
-                    Err(e) => write_frame(&mut sock, &Frame::error(frame.id, &e))?,
+                    Err(e) => write_frame(&mut *w, &Frame::error(frame.id, &e))?,
                 }
+                let _ = w.flush();
             }
             FrameKind::Hello => {} // coordinator-side ping: ignore
             other => {
                 let e = LeapError::Protocol(format!("unexpected {other:?} on shard channel"));
-                write_frame(&mut sock, &Frame::error(frame.id, &e))?;
+                let mut w = wsock
+                    .lock()
+                    .map_err(|_| LeapError::Io("shard channel write half poisoned".into()))?;
+                write_frame(&mut *w, &Frame::error(frame.id, &e))?;
+                let _ = w.flush();
             }
         }
-        let _ = sock.flush();
     }
 }
 

@@ -212,6 +212,182 @@ fn exhausted_retry_budget_surfaces_a_typed_remote_error() {
 }
 
 #[test]
+fn a_submit_with_no_registered_workers_fails_fast_instead_of_hanging() {
+    // transport-level contract: a queued shard must never wait forever
+    // for a worker that may never come — with nothing registered, the
+    // event loop fails it with a typed Remote error so the operator
+    // layer's in-process fallback runs
+    let server = Arc::new(ShardServer::start_with("127.0.0.1:0", fast_opts()).unwrap());
+    let meta = Json::obj(vec![("shard", Json::Str("fp".into()))]);
+    let pending = server.submit("shard_fp", meta, Arc::new(vec![0.0f32; 4]), 4);
+    let (tx, rx) = std::sync::mpsc::channel();
+    std::thread::spawn(move || {
+        let _ = tx.send(pending.wait());
+    });
+    let res = rx
+        .recv_timeout(Duration::from_secs(5))
+        .expect("a workerless submit must fail promptly, not hang");
+    match res {
+        Err(LeapError::Remote { code, ref message }) => {
+            assert_eq!(code, leap::api::codes::IO);
+            assert!(message.contains("no workers"), "unexpected message: {message}");
+        }
+        other => panic!("expected Err(LeapError::Remote), got {other:?}"),
+    }
+}
+
+#[test]
+fn every_worker_dying_mid_request_still_completes_via_in_process_fallback() {
+    // the documented promise: "a request completes even if every worker
+    // dies mid-solve". One saboteur registers, takes a shard, and
+    // vanishes — its in-flight shard is requeued and then, with zero
+    // workers left, the whole queue is failed over to the in-process
+    // path, bit-identically
+    let plan = test_plan();
+    let mut rng = Rng::new(903);
+    let mut x = plan.new_vol();
+    rng.fill_uniform(&mut x.data, 0.0, 1.0);
+    let mut y = plan.new_sino();
+    rng.fill_uniform(&mut y.data, -1.0, 1.0);
+    let fwd_ref = plan.forward(&x);
+    let back_ref = plan.back(&y);
+
+    let server = Arc::new(ShardServer::start_with("127.0.0.1:0", fast_opts()).unwrap());
+    let addr = server.addr.to_string();
+    let saboteur = std::thread::spawn(move || {
+        let mut sock = TcpStream::connect(&addr).unwrap();
+        let hello = Json::obj(vec![("role", Json::Str("worker".into()))]);
+        write_frame_parts(&mut sock, FrameKind::Hello, 0, &hello, &[]).unwrap();
+        let _ = read_frame(&mut sock).unwrap().expect("hello reply");
+        let task = read_frame(&mut sock).unwrap().expect("a dispatched shard");
+        assert_eq!(task.kind, FrameKind::Request);
+        // vanish with the shard in flight and others still queued
+    });
+    wait_for_workers(&server, 1);
+
+    let op = ShardedOp::new(plan.clone(), server.clone());
+    let fwd = op.forward(&x);
+    assert_eq!(fwd.data, fwd_ref.data, "total worker loss must not change the bits");
+    saboteur.join().unwrap();
+    // by now the channel is workerless; back runs the pure fallback
+    let back = op.back(&y);
+    assert_eq!(back.data, back_ref.data, "workerless back must equal in-process");
+}
+
+#[test]
+fn a_busy_worker_computing_past_the_heartbeat_timeout_is_not_dropped() {
+    // a single-threaded worker sends nothing while computing a shard;
+    // the coordinator must not mistake that silence for death while the
+    // shard is in flight (the per-shard deadline bounds it instead).
+    // max_retries=0 makes the failure mode sharp: a wrongly-dropped
+    // worker means an immediate Err instead of the reply
+    let opts = ShardServerOptions {
+        heartbeat_timeout: Duration::from_millis(300),
+        task_deadline: Duration::from_secs(10),
+        max_retries: 0,
+    };
+    let server = Arc::new(ShardServer::start_with("127.0.0.1:0", opts).unwrap());
+    let addr = server.addr.to_string();
+    let slow = std::thread::spawn(move || {
+        let mut sock = TcpStream::connect(&addr).unwrap();
+        let hello = Json::obj(vec![("role", Json::Str("worker".into()))]);
+        write_frame_parts(&mut sock, FrameKind::Hello, 0, &hello, &[]).unwrap();
+        let _ = read_frame(&mut sock).unwrap().expect("hello reply");
+        let task = read_frame(&mut sock).unwrap().expect("a dispatched shard");
+        assert_eq!(task.kind, FrameKind::Request);
+        // "compute" for 3x the heartbeat timeout: no frames, no
+        // heartbeats — a worker deep in a long back projection
+        std::thread::sleep(Duration::from_millis(900));
+        write_frame_parts(
+            &mut sock,
+            FrameKind::Response,
+            task.id,
+            &Json::Null,
+            &[5.0f32, 6.0, 7.0, 8.0],
+        )
+        .unwrap();
+        // stay connected until the server closes the channel
+        while let Ok(Some(_)) = read_frame(&mut sock) {}
+    });
+    wait_for_workers(&server, 1);
+
+    let meta = Json::obj(vec![("shard", Json::Str("fp".into()))]);
+    let pending = server.submit("shard_fp", meta, Arc::new(vec![0.0f32; 4]), 4);
+    let out = pending.wait().expect("a slow-but-healthy worker's reply must be accepted");
+    assert_eq!(out, vec![5.0, 6.0, 7.0, 8.0]);
+    assert_eq!(server.workers(), 1, "the busy worker must not have been heartbeat-dropped");
+    drop(server);
+    slow.join().unwrap();
+}
+
+#[test]
+fn a_retried_shard_prefers_a_different_idle_worker() {
+    // worker A fails a shard; with B also idle, the retry must go to B
+    // — A's slot looks free but a deadline-missing A would still be
+    // serially computing the stale shard
+    let opts = ShardServerOptions {
+        heartbeat_timeout: Duration::from_secs(10),
+        task_deadline: Duration::from_secs(10),
+        max_retries: 2,
+    };
+    let server = Arc::new(ShardServer::start_with("127.0.0.1:0", opts).unwrap());
+    let addr = server.addr.to_string();
+
+    // A registers first, so the first dispatch deterministically picks it
+    let a = {
+        let addr = addr.clone();
+        std::thread::spawn(move || -> usize {
+            let mut sock = TcpStream::connect(&addr).unwrap();
+            let hello = Json::obj(vec![("role", Json::Str("worker".into()))]);
+            write_frame_parts(&mut sock, FrameKind::Hello, 0, &hello, &[]).unwrap();
+            let _ = read_frame(&mut sock).unwrap().expect("hello reply");
+            let task = read_frame(&mut sock).unwrap().expect("the first dispatch");
+            assert_eq!(task.kind, FrameKind::Request);
+            let e = LeapError::Backend("worker A declines".into());
+            write_frame(&mut sock, &Frame::error(task.id, &e)).unwrap();
+            // count anything re-dispatched to us until the channel closes
+            let mut extra = 0;
+            while let Ok(Some(f)) = read_frame(&mut sock) {
+                if f.kind == FrameKind::Request {
+                    extra += 1;
+                }
+            }
+            extra
+        })
+    };
+    wait_for_workers(&server, 1);
+    let b = {
+        let addr = addr.clone();
+        std::thread::spawn(move || {
+            let mut sock = TcpStream::connect(&addr).unwrap();
+            let hello = Json::obj(vec![("role", Json::Str("worker".into()))]);
+            write_frame_parts(&mut sock, FrameKind::Hello, 0, &hello, &[]).unwrap();
+            let _ = read_frame(&mut sock).unwrap().expect("hello reply");
+            let task = read_frame(&mut sock).unwrap().expect("the retried dispatch");
+            assert_eq!(task.kind, FrameKind::Request);
+            write_frame_parts(
+                &mut sock,
+                FrameKind::Response,
+                task.id,
+                &Json::Null,
+                &[1.0f32, 2.0, 3.0, 4.0],
+            )
+            .unwrap();
+            while let Ok(Some(_)) = read_frame(&mut sock) {}
+        })
+    };
+    wait_for_workers(&server, 2);
+
+    let meta = Json::obj(vec![("shard", Json::Str("fp".into()))]);
+    let pending = server.submit("shard_fp", meta, Arc::new(vec![0.0f32; 4]), 4);
+    let out = pending.wait().expect("the retry via worker B must succeed");
+    assert_eq!(out, vec![1.0, 2.0, 3.0, 4.0]);
+    drop(server);
+    assert_eq!(a.join().unwrap(), 0, "the retry must not go back to the worker that failed it");
+    b.join().unwrap();
+}
+
+#[test]
 fn heartbeats_keep_idle_workers_alive_and_silence_drops_them() {
     let opts = ShardServerOptions {
         heartbeat_timeout: Duration::from_millis(600),
